@@ -1,0 +1,26 @@
+//! Figure 10 reproduction: (a) search-space composition ablation on the
+//! fused-dense BERT subgraph; (b) BERT-large with the Use-Tensor-Core
+//! module vs the AutoTVM-style baseline (paper: 48% speedup).
+//!
+//! ```sh
+//! cargo bench --bench fig10_composition -- --trials 48
+//! ```
+
+use metaschedule::exp::{fig10, ExpConfig};
+use metaschedule::util::cli::Args;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let cfg = ExpConfig {
+        trials: args.flag_usize("trials", 48),
+        seed: args.flag_u64("seed", 42),
+    };
+    let a = fig10::run_10a(&cfg);
+    a.print();
+    let _ = a.write("bench_results.jsonl");
+
+    let b = fig10::run_10b(&cfg);
+    b.print();
+    let _ = b.write("bench_results.jsonl");
+    println!("(rows appended to bench_results.jsonl)");
+}

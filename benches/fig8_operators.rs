@@ -1,0 +1,25 @@
+//! Figure 8 reproduction: operator- and subgraph-level performance.
+//! 12 workloads x {PyTorch, TVM, MetaSchedule} on CPU and GPU.
+//!
+//! ```sh
+//! cargo bench --bench fig8_operators            # full, slower
+//! cargo bench --bench fig8_operators -- --trials 32   # quicker
+//! ```
+
+use metaschedule::exp::{fig8, ExpConfig};
+use metaschedule::sim::Target;
+use metaschedule::util::cli::Args;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let cfg = ExpConfig {
+        trials: args.flag_usize("trials", 64),
+        seed: args.flag_u64("seed", 42),
+    };
+    for target in [Target::cpu_avx512(), Target::gpu()] {
+        let report = fig8::run(&target, &cfg, None);
+        report.print();
+        let _ = report.write("bench_results.jsonl");
+    }
+    println!("(rows appended to bench_results.jsonl)");
+}

@@ -1,0 +1,25 @@
+//! Figure 9 reproduction: end-to-end deep learning models.
+//! {BERT-base, ResNet-50, MobileNet-v2} x {PyTorch, TVM, MetaSchedule},
+//! CPU and GPU.
+//!
+//! ```sh
+//! cargo bench --bench fig9_e2e -- --trials 32
+//! ```
+
+use metaschedule::exp::{fig9, ExpConfig};
+use metaschedule::sim::Target;
+use metaschedule::util::cli::Args;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let cfg = ExpConfig {
+        trials: args.flag_usize("trials", 64),
+        seed: args.flag_u64("seed", 42),
+    };
+    for target in [Target::cpu_avx512(), Target::gpu()] {
+        let report = fig9::run(&target, &cfg, None);
+        report.print();
+        let _ = report.write("bench_results.jsonl");
+    }
+    println!("(rows appended to bench_results.jsonl)");
+}

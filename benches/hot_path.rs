@@ -1,0 +1,102 @@
+//! Microbenchmarks of the search hot paths (§Perf in EXPERIMENTS.md):
+//! trace replay, mutation+validation, feature extraction, GBT
+//! train/predict, and simulator evaluation. These are what bound tuning
+//! throughput (Table 1), so the perf pass optimizes against this bench.
+//!
+//! ```sh
+//! cargo bench --bench hot_path
+//! ```
+
+use metaschedule::cost_model::{extract, Gbt};
+use metaschedule::search::mutate;
+use metaschedule::sim::{simulate, Target};
+use metaschedule::space::SpaceComposer;
+use metaschedule::trace::replay::{replay, replay_fresh};
+use metaschedule::util::bench::{bench, print_table};
+use metaschedule::util::rng::Rng;
+use metaschedule::workloads;
+
+fn main() {
+    let target = Target::cpu_avx512();
+    let prog = workloads::fused_dense(128, 3072, 768);
+    let composer = SpaceComposer::generic(target.clone());
+    let designs = composer.generate(&prog, 42);
+    let sch = designs
+        .iter()
+        .max_by_key(|s| s.trace.len())
+        .expect("non-empty design space")
+        .clone();
+    println!(
+        "design space: {} traces; benchmarked trace has {} instructions\n",
+        designs.len(),
+        sch.trace.len()
+    );
+
+    let mut rows = Vec::new();
+
+    let s = bench("space_generate", 20, 20.0, || {
+        let _ = composer.generate(&prog, 42);
+    });
+    rows.push(vec!["space generate (all traces)".into(), fmt(&s)]);
+
+    let s = bench("trace_replay", 30, 20.0, || {
+        let _ = replay(&sch.trace, &prog, 0).unwrap();
+    });
+    let replay_ns = s.median_ns;
+    rows.push(vec!["trace replay (recorded decisions)".into(), fmt(&s)]);
+
+    let s = bench("trace_replay_fresh", 30, 20.0, || {
+        let _ = replay_fresh(&sch.trace, &prog, 1);
+    });
+    rows.push(vec!["trace replay (fresh sampling)".into(), fmt(&s)]);
+
+    let mut rng = Rng::seed_from_u64(3);
+    let s = bench("mutate_validate", 30, 20.0, || {
+        let _ = mutate(&sch.trace, &prog, &mut rng, 7);
+    });
+    rows.push(vec!["mutate + validate".into(), fmt(&s)]);
+
+    let s = bench("feature_extract", 30, 20.0, || {
+        let _ = extract(&sch.prog);
+    });
+    rows.push(vec!["feature extraction".into(), fmt(&s)]);
+
+    let s = bench("simulate", 30, 20.0, || {
+        let _ = simulate(&sch.prog, &target);
+    });
+    rows.push(vec!["simulator f(e)".into(), fmt(&s)]);
+
+    // GBT on a realistic database size.
+    let xs: Vec<Vec<f64>> = (0..512)
+        .map(|i| {
+            let mut rng = Rng::seed_from_u64(i);
+            (0..24).map(|_| rng.gen_f64() * 8.0).collect()
+        })
+        .collect();
+    let ys: Vec<f64> = xs.iter().map(|x| x[0] * 2.0 + x[3] * x[5]).collect();
+    let mut gbt = Gbt::new(50, 5, 0.2);
+    let s = bench("gbt_train", 5, 50.0, || {
+        gbt.fit(&xs, &ys);
+    });
+    rows.push(vec!["GBT train (512 x 24, 50 trees)".into(), fmt(&s)]);
+    let s = bench("gbt_predict", 20, 20.0, || {
+        let _ = gbt.predict(&xs);
+    });
+    rows.push(vec!["GBT predict (512 programs)".into(), fmt(&s)]);
+
+    print_table("hot-path microbenchmarks", &["path", "median"], &rows);
+    println!(
+        "\nreplay throughput: {:.0} traces/s (target: >= 10k on GMM-class programs)",
+        1e9 / replay_ns
+    );
+}
+
+fn fmt(s: &metaschedule::util::bench::BenchStats) -> String {
+    if s.median_ns < 1e3 {
+        format!("{:.0} ns", s.median_ns)
+    } else if s.median_ns < 1e6 {
+        format!("{:.2} us", s.median_ns / 1e3)
+    } else {
+        format!("{:.2} ms", s.median_ns / 1e6)
+    }
+}

@@ -1,0 +1,23 @@
+//! Table 1 reproduction: tuning time for 5 end-to-end models, TVM-Ansor
+//! vs MetaSchedule at equal trial budgets (wall-clock seconds).
+//!
+//! ```sh
+//! cargo bench --bench table1_tuning_time -- --trials 16
+//! ```
+
+use metaschedule::exp::{table1, ExpConfig};
+use metaschedule::sim::Target;
+use metaschedule::util::cli::Args;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let cfg = ExpConfig {
+        trials: args.flag_usize("trials", 16),
+        seed: args.flag_u64("seed", 42),
+    };
+    let report = table1::run(&Target::cpu_avx512(), &cfg, None);
+    // Values are seconds of tuning wall-clock, not operator latency.
+    report.print();
+    let _ = report.write("bench_results.jsonl");
+    println!("(columns are tuning seconds; rows appended to bench_results.jsonl)");
+}

@@ -1,0 +1,73 @@
+//! Quickstart: schedule the paper's Figure 2/3 running example by hand,
+//! then let the learning-driven search find a better one.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use metaschedule::cost_model::GbtCostModel;
+use metaschedule::schedule::Schedule;
+use metaschedule::search::{EvolutionarySearch, SearchConfig, SimMeasurer};
+use metaschedule::sim::{simulate, Target};
+use metaschedule::space::SpaceComposer;
+use metaschedule::tir::{print_program, PrintOptions};
+use metaschedule::trace::serde::trace_to_text;
+use metaschedule::trace::FactorArg;
+use metaschedule::workloads;
+
+fn main() {
+    let target = Target::cpu_avx512();
+
+    // ---- 1. An initial program e_0: Dense + bias + ReLU -------------------
+    let prog = workloads::fused_dense(128, 3072, 768);
+    let naive = simulate(&prog, &target).unwrap().total_s;
+    println!("e_0 (fused-dense 128x768->3072), naive latency {:.1} us\n", naive * 1e6);
+
+    // ---- 2. Hand-write a stochastic schedule (the probabilistic language) --
+    let mut sch = Schedule::new(prog.clone(), /*seed=*/ 7);
+    // Fold bias into relu, then tile the dense block with *sampled* tiles.
+    let bias = sch.get_block("bias_add").unwrap();
+    sch.compute_inline(bias).unwrap();
+    let dense = sch.get_block("dense").unwrap();
+    let loops = sch.get_loops(dense).unwrap();
+    let ti = sch.sample_perfect_tile(loops[0], 2, 64).unwrap(); // θ0, θ1
+    let i = sch
+        .split(loops[0], &[FactorArg::Rv(ti[0].0), FactorArg::Rv(ti[1].0)])
+        .unwrap();
+    let tj = sch.sample_perfect_tile(loops[1], 2, 64).unwrap(); // θ2, θ3
+    let j = sch
+        .split(loops[1], &[FactorArg::Rv(tj[0].0), FactorArg::Rv(tj[1].0)])
+        .unwrap();
+    sch.reorder(&[i[0], j[0], i[1], j[1]]).unwrap();
+    sch.parallel(i[0]).unwrap();
+    sch.vectorize(j[1]).unwrap();
+    // Figure 3 step 2: sample where ReLU computes (a loop of dense).
+    let relu = sch.get_block("relu").unwrap();
+    let loc = sch.sample_compute_location(relu).unwrap();
+    let _ = sch.reverse_compute_at(relu, loc);
+    let hand = simulate(&sch.prog, &target).unwrap().total_s;
+    println!("hand-written stochastic schedule -> {:.1} us", hand * 1e6);
+    println!("its trace (a linearized probabilistic program):");
+    for line in trace_to_text(&sch.trace).lines().take(10) {
+        println!("  {line}");
+    }
+    println!("  ...\n");
+
+    // ---- 3. Learning-driven search over the composed generic space --------
+    let composer = SpaceComposer::generic(target.clone());
+    let search = EvolutionarySearch::new(SearchConfig {
+        num_trials: 96,
+        ..SearchConfig::default()
+    });
+    let mut model = GbtCostModel::new();
+    let mut measurer = SimMeasurer::new(target.clone());
+    let result = search.tune(&prog, &composer, &mut model, &mut measurer, 1);
+    println!(
+        "evolutionary search ({} trials) -> {:.1} us  ({:.1}x over naive, {:.1}x over hand)",
+        result.trials,
+        result.best_latency_s * 1e6,
+        naive / result.best_latency_s,
+        hand / result.best_latency_s,
+    );
+    println!("\nbest program:\n{}", print_program(&result.best_prog, PrintOptions::default()));
+}

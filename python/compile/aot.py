@@ -1,0 +1,107 @@
+"""AOT bridge: lower the L2 model (with its L1 Pallas kernel) to HLO TEXT
+artifacts the Rust runtime loads via `HloModuleProto::from_text_file`.
+
+HLO *text*, NOT `.serialize()`: jax >= 0.5 emits HloModuleProto with
+64-bit instruction ids which xla_extension 0.5.1 (what the published `xla`
+0.1.6 crate links) rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Emits one artifact per (bm, bn, bk) tile variant of the GMM kernel — the
+grid of *schedule points* the Rust search measures for real — plus the
+fused-dense model, plus `manifest.json` with the VMEM-footprint and
+MXU-utilization estimates per variant (real-TPU perf is estimated, not
+measured: interpret-mode Pallas runs CPU numerics only).
+
+Usage: python -m compile.aot --outdir ../artifacts
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+from compile.kernels import matmul as kernels
+
+# GMM workload shape (Appendix A.2).
+GMM_M = GMM_N = GMM_K = 128
+# fused-dense (Figure 10a): 128 x 768 -> 3072, tiled at the kernel default.
+FD_M, FD_N, FD_K = 128, 3072, 768
+
+# Tile-variant grid: the schedule points realized as real executables.
+TILE_BMN = [16, 32, 64, 128]
+TILE_BK = [16, 32, 64, 128]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_gmm(bm: int, bn: int, bk: int) -> str:
+    spec = jax.ShapeDtypeStruct((GMM_M, GMM_K), jnp.float32)
+    spec2 = jax.ShapeDtypeStruct((GMM_K, GMM_N), jnp.float32)
+    return to_hlo_text(model.gmm.lower(spec, spec2, bm=bm, bn=bn, bk=bk))
+
+
+def lower_fused_dense(bm=32, bn=64, bk=32) -> str:
+    x = jax.ShapeDtypeStruct((FD_M, FD_K), jnp.float32)
+    w = jax.ShapeDtypeStruct((FD_N, FD_K), jnp.float32)
+    b = jax.ShapeDtypeStruct((FD_N,), jnp.float32)
+    return to_hlo_text(model.fused_dense.lower(x, w, b, bm=bm, bn=bn, bk=bk))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--quick", action="store_true", help="only one variant")
+    args = ap.parse_args()
+    os.makedirs(args.outdir, exist_ok=True)
+
+    variants = []
+    grid = (
+        [(32, 32, 32)]
+        if args.quick
+        else [(bm, bm_n, bk) for bm in TILE_BMN for bm_n in [bm] for bk in TILE_BK]
+    )
+    # Square (bm = bn) x bk grid: 16 variants.
+    for bm, bn, bk in grid:
+        name = f"gmm_bm{bm}_bn{bn}_bk{bk}"
+        path = os.path.join(args.outdir, f"{name}.hlo.txt")
+        text = lower_gmm(bm, bn, bk)
+        with open(path, "w") as f:
+            f.write(text)
+        est = kernels.variant_estimate(bm, bn, bk)
+        est["artifact"] = f"{name}.hlo.txt"
+        est["m"], est["n"], est["k"] = GMM_M, GMM_N, GMM_K
+        variants.append(est)
+        print(f"wrote {path} ({len(text)} chars, "
+              f"vmem={est['vmem_bytes']}B mxu={est['mxu_utilization']})")
+
+    fd_path = os.path.join(args.outdir, "fused_dense.hlo.txt")
+    with open(fd_path, "w") as f:
+        f.write(lower_fused_dense())
+    print(f"wrote {fd_path}")
+
+    manifest = {
+        "gmm": {"m": GMM_M, "n": GMM_N, "k": GMM_K, "variants": variants},
+        "fused_dense": {
+            "m": FD_M,
+            "n": FD_N,
+            "k": FD_K,
+            "artifact": "fused_dense.hlo.txt",
+        },
+    }
+    with open(os.path.join(args.outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest with {len(variants)} gmm variants")
+
+
+if __name__ == "__main__":
+    main()

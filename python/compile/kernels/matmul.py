@@ -1,0 +1,89 @@
+"""Layer-1 Pallas kernel: tiled matmul.
+
+This is the *realization* of a MetaSchedule schedule point: the (bm, bn,
+bk) block sizes are exactly the innermost tile extents that
+`sample_perfect_tile` draws on the Rust side, and the BlockSpec grid is
+the HBM<->VMEM schedule that `cache_read`/`compute_at` express in TIR
+(DESIGN.md §Hardware-Adaptation: CUDA threadblock tiling -> Pallas
+BlockSpec grid; shared memory -> VMEM).
+
+Kernels run with ``interpret=True``: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, so correctness is validated through the interpret
+path and real-TPU performance is *estimated* from the VMEM footprint and
+MXU utilization numbers computed here (recorded in artifacts/manifest and
+DESIGN.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# TPU hardware constants used by the estimates.
+VMEM_BYTES = 16 * 1024 * 1024  # per-core VMEM
+MXU_DIM = 128                  # 128x128 systolic array
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref):
+    """One (bm, bn) output tile; the k grid axis accumulates in-place."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul(x, y, *, bm=32, bn=32, bk=32):
+    """Tiled matmul ``x @ y`` with a (m/bm, n/bn, k/bk) Pallas grid."""
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (
+        f"tiles ({bm},{bn},{bk}) must divide ({m},{n},{k})"
+    )
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=(m // bm, n // bn, k // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,  # CPU path; real TPU would lower to Mosaic
+    )(x, y)
+
+
+def vmem_footprint_bytes(bm, bn, bk, dtype_bytes=4):
+    """Resident VMEM per grid step: one x tile + one y tile + the
+    accumulating output tile (double-buffered inputs would be 2x the input
+    terms; we report the single-buffered lower bound)."""
+    return (bm * bk + bk * bn + bm * bn) * dtype_bytes
+
+
+def mxu_utilization(bm, bn, bk):
+    """Fraction of the 128x128 MXU the (bm, bn, bk) tile keeps busy:
+    each dimension pads up to the systolic array edge."""
+    def frac(d):
+        pad = -d % MXU_DIM
+        return d / (d + pad) if d < MXU_DIM else 1.0
+
+    return frac(bm) * frac(bn) * frac(bk)
+
+
+def variant_estimate(bm, bn, bk, dtype_bytes=4):
+    """The perf-estimate record stored in the artifact manifest."""
+    vmem = vmem_footprint_bytes(bm, bn, bk, dtype_bytes)
+    return {
+        "bm": bm,
+        "bn": bn,
+        "bk": bk,
+        "vmem_bytes": vmem,
+        "vmem_fits": vmem <= VMEM_BYTES,
+        "mxu_utilization": round(mxu_utilization(bm, bn, bk), 4),
+    }

@@ -1,0 +1,17 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness ground truth).
+
+Every kernel in this package must match its oracle to numerical tolerance
+under pytest + hypothesis sweeps (python/tests/test_kernel.py).
+"""
+
+import jax.numpy as jnp
+
+
+def matmul(x, y):
+    """Reference for kernels.matmul: plain jnp matmul in f32 accumulate."""
+    return jnp.dot(x, y, preferred_element_type=x.dtype)
+
+
+def fused_dense(x, w, b):
+    """Reference for the fused-dense subgraph: relu(x @ w^T + b)."""
+    return jnp.maximum(jnp.dot(x, w.T) + b, 0.0)

@@ -1,0 +1,28 @@
+"""Layer-2 JAX model functions (build-time only, never on the Rust hot
+path). Each function is jit-lowerable to HLO text by aot.py and calls the
+Layer-1 Pallas kernels so the kernel lowers into the same HLO module.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import matmul as kernels
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def gmm(x, y, *, bm=32, bn=32, bk=32):
+    """The GMM workload (A.2: m=n=k=128) on the Pallas kernel. Returned as
+    a 1-tuple because the AOT bridge lowers with return_tuple=True."""
+    return (kernels.matmul(x, y, bm=bm, bn=bn, bk=bk),)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def fused_dense(x, w, b, *, bm=32, bn=32, bk=32):
+    """The fused-dense BERT subgraph of Figure 10a: dense + bias + ReLU.
+    The matmul hot-spot runs on the Pallas kernel; the elementwise epilogue
+    stays in jnp and XLA fuses it — the same producer/consumer fusion the
+    Rust-side `compute_at`/`compute_inline` express in TIR."""
+    y = kernels.matmul(x, w.T, bm=bm, bn=bn, bk=bk)
+    return (jnp.maximum(y + b, 0.0),)

@@ -1,0 +1,131 @@
+"""Kernel correctness: the Pallas matmul vs its pure-jnp oracle, swept over
+shapes / tiles / dtypes with hypothesis, plus the L2 model functions and
+the AOT perf-estimate helpers.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import matmul as kernels
+from compile.kernels import ref
+
+hypothesis.settings.register_profile(
+    "kernel", deadline=None, max_examples=25, derandomize=True
+)
+hypothesis.settings.load_profile("kernel")
+
+
+def rand(shape, dtype=jnp.float32, seed=0):
+    k = jax.random.PRNGKey(seed)
+    return jax.random.normal(k, shape, dtype=dtype)
+
+
+class TestMatmulKernel:
+    def test_basic_128(self):
+        x, y = rand((128, 128), seed=1), rand((128, 128), seed=2)
+        out = kernels.matmul(x, y, bm=32, bn=32, bk=32)
+        np.testing.assert_allclose(out, ref.matmul(x, y), rtol=1e-5, atol=1e-5)
+
+    @pytest.mark.parametrize("bm", [16, 32, 64, 128])
+    @pytest.mark.parametrize("bk", [16, 64, 128])
+    def test_gmm_variant_grid(self, bm, bk):
+        """Every tile variant shipped as an AOT artifact must be correct."""
+        x, y = rand((128, 128), seed=3), rand((128, 128), seed=4)
+        out = kernels.matmul(x, y, bm=bm, bn=bm, bk=bk)
+        np.testing.assert_allclose(out, ref.matmul(x, y), rtol=1e-5, atol=1e-5)
+
+    @hypothesis.given(
+        mi=st.integers(1, 4),
+        ni=st.integers(1, 4),
+        ki=st.integers(1, 4),
+        bm=st.sampled_from([8, 16, 32]),
+        bn=st.sampled_from([8, 16, 32]),
+        bk=st.sampled_from([8, 16, 32]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_shape_tile_sweep(self, mi, ni, ki, bm, bn, bk, seed):
+        """Property: for every (m, n, k) divisible by the tiles, kernel ==
+        oracle."""
+        m, n, k = mi * bm, ni * bn, ki * bk
+        x, y = rand((m, k), seed=seed), rand((k, n), seed=seed + 1)
+        out = kernels.matmul(x, y, bm=bm, bn=bn, bk=bk)
+        np.testing.assert_allclose(out, ref.matmul(x, y), rtol=1e-4, atol=1e-4)
+
+    def test_bf16_inputs_f32_accumulate(self):
+        x = rand((64, 64)).astype(jnp.bfloat16)
+        y = rand((64, 64), seed=9).astype(jnp.bfloat16)
+        out = kernels.matmul(x, y, bm=16, bn=16, bk=16)
+        expect = ref.matmul(x, y)
+        # Per-tile bf16 accumulation rounds differently from the oracle's
+        # single dot; tolerance sized for bf16's ~2^-8 mantissa over k=64.
+        np.testing.assert_allclose(
+            out.astype(jnp.float32), expect.astype(jnp.float32), rtol=5e-2, atol=2.5e-1
+        )
+
+    def test_non_dividing_tiles_rejected(self):
+        x, y = rand((100, 100)), rand((100, 100))
+        with pytest.raises(AssertionError):
+            kernels.matmul(x, y, bm=32, bn=32, bk=32)
+
+    def test_contraction_mismatch_rejected(self):
+        with pytest.raises(AssertionError):
+            kernels.matmul(rand((32, 32)), rand((64, 32)))
+
+
+class TestModel:
+    def test_gmm_model_wraps_kernel(self):
+        x, y = rand((128, 128), seed=5), rand((128, 128), seed=6)
+        (out,) = model.gmm(x, y)
+        np.testing.assert_allclose(out, ref.matmul(x, y), rtol=1e-5, atol=1e-5)
+
+    def test_fused_dense_matches_reference(self):
+        x = rand((128, 768), seed=7)
+        w = rand((3072, 768), seed=8) * 0.02
+        b = rand((3072,), seed=9)
+        (out,) = model.fused_dense(x, w, b)
+        np.testing.assert_allclose(
+            out, ref.fused_dense(x, w, b), rtol=1e-4, atol=1e-4
+        )
+        assert (np.asarray(out) >= 0.0).all(), "ReLU output must be nonneg"
+
+    @hypothesis.given(seed=st.integers(0, 2**16))
+    @hypothesis.settings(max_examples=5, deadline=None)
+    def test_fused_dense_small_sweep(self, seed):
+        x = rand((32, 64), seed=seed)
+        w = rand((64, 64), seed=seed + 1) * 0.05
+        b = rand((64,), seed=seed + 2)
+        (out,) = model.fused_dense(x, w, b, bm=16, bn=16, bk=16)
+        np.testing.assert_allclose(
+            out, ref.fused_dense(x, w, b), rtol=1e-4, atol=1e-4
+        )
+
+
+class TestPerfEstimates:
+    def test_vmem_footprint_formula(self):
+        # (32*32 + 32*32 + 32*32) * 4B = 12 KiB
+        assert kernels.vmem_footprint_bytes(32, 32, 32) == 3 * 32 * 32 * 4
+
+    def test_all_grid_variants_fit_vmem(self):
+        for bm in [16, 32, 64, 128]:
+            for bk in [16, 32, 64, 128]:
+                est = kernels.variant_estimate(bm, bm, bk)
+                assert est["vmem_fits"], est
+
+    def test_mxu_utilization_monotone(self):
+        # Bigger tiles toward 128 use the systolic array better.
+        u16 = kernels.mxu_utilization(16, 16, 16)
+        u64 = kernels.mxu_utilization(64, 64, 64)
+        u128 = kernels.mxu_utilization(128, 128, 128)
+        assert u16 < u64 < u128 == 1.0
+
+    def test_aot_lowering_produces_hlo_text(self):
+        from compile import aot
+
+        text = aot.lower_gmm(32, 32, 32)
+        assert "HloModule" in text
+        assert "f32[128,128]" in text

@@ -1,0 +1,18 @@
+//! Baseline tensor-program optimizers the paper compares against
+//! (DESIGN.md §3 records the substitutions):
+//!
+//! * [`vendor`] — "PyTorch" bars: cuDNN/MKL-class fixed expert kernels,
+//!   modeled as per-op-class roofline efficiency.
+//! * [`autotvm`] — template-guided tuning: rigid grids decided ahead of
+//!   all transformations (§3.3).
+//! * [`ansor`] — auto-scheduling with frozen sketch rules + evolutionary
+//!   fine-tuning (§3.3); performance parity with MetaSchedule's generic
+//!   space, but non-extensible.
+
+pub mod ansor;
+pub mod autotvm;
+pub mod vendor;
+
+pub use ansor::Ansor;
+pub use autotvm::AutoTvm;
+pub use vendor::{classify, efficiency, latency as vendor_latency, OpClass};

@@ -1,0 +1,260 @@
+//! Program feature extraction for the learned cost model.
+//!
+//! A fixed-length vector of structural/arithmetic features in the style of
+//! the feature sets used by prior learned cost models [10, 43]: flop
+//! counts, loop structure (parallel/vector/unroll/thread extents), memory
+//! access volume, working-set footprints at cache-like sweep depths, and
+//! reuse ratios. Per-block features are aggregated flop-weighted so the
+//! dominant block drives the prediction.
+
+use std::collections::HashMap;
+
+use crate::tir::analysis::{iter_env, region_footprint_elems, sweep_env};
+use crate::tir::{ItemId, LoopKind, Program, Scope};
+
+/// Dimensionality of the feature vector.
+pub const FEAT_DIM: usize = 24;
+
+fn ln1p(x: f64) -> f64 {
+    (1.0 + x.max(0.0)).ln()
+}
+
+/// Per-block raw features, before aggregation.
+fn block_features(p: &Program, block: ItemId) -> ([f64; FEAT_DIM], f64) {
+    let bd = p.block_data(block);
+    let loops = p.loops_above(block);
+    let extents: Vec<i64> = loops.iter().map(|&l| p.loop_data(l).extent).collect();
+    let instances: f64 = extents.iter().map(|&e| e as f64).product();
+    let flops = instances * bd.body.flops();
+
+    let mut parallel_extent = 1.0;
+    let mut vector_extent = 1.0;
+    let mut unroll_extent = 1.0;
+    let mut grid_extent = 1.0;
+    let mut thread_extent = 1.0;
+    let mut serial_extent = 1.0;
+    let mut unroll_pragma = 0.0f64;
+    for &l in &loops {
+        let ld = p.loop_data(l);
+        let e = ld.extent as f64;
+        match &ld.kind {
+            LoopKind::Parallel => parallel_extent *= e,
+            LoopKind::Vectorized => vector_extent *= e,
+            LoopKind::Unrolled => unroll_extent *= e,
+            LoopKind::ThreadBinding(t) if t.starts_with("blockIdx") => grid_extent *= e,
+            LoopKind::ThreadBinding(_) => thread_extent *= e,
+            LoopKind::Serial => serial_extent *= e,
+        }
+        if let Some(v) = ld.annotations.get("pragma_auto_unroll_max_step") {
+            unroll_pragma = unroll_pragma.max(v.parse::<f64>().unwrap_or(0.0));
+        }
+    }
+    let innermost_extent = extents.last().copied().unwrap_or(1) as f64;
+
+    // Memory: per-instance access bytes + footprints swept at three depths.
+    let mut access_bytes = 0.0;
+    let mut shared_bytes = 0.0;
+    for r in bd.reads.iter().chain(bd.writes.iter()) {
+        let buf = &p.buffers[r.buffer];
+        let b = r.extent_numel() as f64 * buf.dtype.bytes() as f64;
+        match buf.scope {
+            Scope::Global => access_bytes += b,
+            _ => shared_bytes += b,
+        }
+    }
+    let total_access = instances * access_bytes;
+    let footprint_at = |d: usize| -> f64 {
+        if d > loops.len() {
+            return 0.0;
+        }
+        let sweep = sweep_env(p, &loops[d.min(loops.len())..]);
+        let mut env = iter_env(p, block, &sweep);
+        for (k, v) in &sweep {
+            env.insert(*k, *v);
+        }
+        bd.reads
+            .iter()
+            .chain(bd.writes.iter())
+            .map(|r| {
+                region_footprint_elems(&r.ranges, &env) as f64
+                    * p.buffers[r.buffer].dtype.bytes() as f64
+            })
+            .sum()
+    };
+    let fp_full = footprint_at(0); // whole-nest working set
+    let fp_half = footprint_at(loops.len() / 2);
+    let fp_inner = footprint_at(loops.len().saturating_sub(1));
+
+    let ai = if total_access > 0.0 { flops / total_access } else { 0.0 };
+    let reuse = if fp_full > 0.0 { total_access / fp_full } else { 0.0 };
+
+    let (intrin_flag, intrin_speedup) = match bd.annotations.get("tensor_intrin") {
+        Some(name) => (
+            1.0,
+            crate::schedule::blockize::find_intrin(name)
+                .map(|i| i.speedup)
+                .unwrap_or(1.0),
+        ),
+        None => (0.0, 1.0),
+    };
+
+    // Loop extents start at 1 ("none"), so use ln(max(x,1)): zero means
+    // the structural property is absent.
+    let lnx = |x: f64| x.max(1.0).ln();
+    let mut f = [0.0; FEAT_DIM];
+    f[0] = ln1p(flops);
+    f[1] = ln1p(instances);
+    f[2] = ln1p(ai);
+    f[3] = ln1p(total_access);
+    f[4] = ln1p(fp_full);
+    f[5] = ln1p(fp_half);
+    f[6] = ln1p(fp_inner);
+    f[7] = ln1p(reuse);
+    f[8] = lnx(parallel_extent);
+    f[9] = lnx(vector_extent);
+    f[10] = lnx(unroll_extent);
+    f[11] = lnx(grid_extent);
+    f[12] = lnx(thread_extent);
+    f[13] = lnx(serial_extent);
+    f[14] = lnx(innermost_extent);
+    f[15] = ln1p(unroll_pragma);
+    f[16] = loops.len() as f64;
+    f[17] = if bd.body.is_reduction() { 1.0 } else { 0.0 };
+    f[18] = intrin_flag;
+    f[19] = ln1p(intrin_speedup);
+    f[20] = ln1p(shared_bytes * instances);
+    f[21] = innermost_contiguity(p, block);
+    // f[22], f[23] filled at program level.
+    (f, flops)
+}
+
+/// Fraction of accesses whose *linearized row-major address* moves with
+/// stride <= 1 per step of the innermost loop variable (vectorization
+/// friendliness; stride 0 = broadcast also counts).
+fn innermost_contiguity(p: &Program, block: ItemId) -> f64 {
+    let loops = p.loops_above(block);
+    let Some(&inner) = loops.last() else { return 1.0 };
+    let lvar = p.loop_data(inner).var;
+    let bd = p.block_data(block);
+    let bindings: HashMap<_, _> = bd
+        .iters
+        .iter()
+        .map(|iv| (iv.var, iv.binding.clone()))
+        .collect();
+    let mut total = 0;
+    let mut contig = 0;
+    for r in bd.reads.iter().chain(bd.writes.iter()) {
+        total += 1;
+        if crate::tir::analysis::linear_stride(p, r, &bindings, lvar).abs() <= 1 {
+            contig += 1;
+        }
+    }
+    if total == 0 { 1.0 } else { contig as f64 / total as f64 }
+}
+
+/// Extract the program-level feature vector: flop-weighted mean of block
+/// features plus program-level summary dims.
+pub fn extract(p: &Program) -> Vec<f64> {
+    let blocks = p.blocks();
+    let mut acc = [0.0; FEAT_DIM];
+    let mut wsum = 0.0;
+    for &b in &blocks {
+        let (f, w) = block_features(p, b);
+        let w = w.max(1.0);
+        for (a, x) in acc.iter_mut().zip(f.iter()) {
+            *a += w * x;
+        }
+        wsum += w;
+    }
+    if wsum > 0.0 {
+        for a in acc.iter_mut() {
+            *a /= wsum;
+        }
+    }
+    acc[22] = blocks.len() as f64;
+    acc[23] = p.roots.len() as f64;
+    acc.to_vec()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::Schedule;
+    use crate::trace::FactorArg;
+    use crate::workloads;
+
+    #[test]
+    fn feature_vector_has_fixed_dim() {
+        for w in workloads::suite() {
+            let f = extract(&(w.build)());
+            assert_eq!(f.len(), FEAT_DIM, "{}", w.name);
+            assert!(f.iter().all(|x| x.is_finite()), "{}", w.name);
+        }
+    }
+
+    #[test]
+    fn schedule_changes_move_features() {
+        let prog = workloads::matmul(1, 128, 128, 128);
+        let base = extract(&prog);
+        let mut s = Schedule::new(prog, 0);
+        let b = s.get_block("matmul").unwrap();
+        let loops = s.get_loops(b).unwrap();
+        s.parallel(loops[1]).unwrap();
+        let par = extract(&s.prog);
+        assert!(par[8] > base[8], "parallel extent feature must increase");
+        assert_eq!(base[8], 0.0);
+    }
+
+    #[test]
+    fn vectorize_and_tiling_visible() {
+        let prog = workloads::matmul(1, 128, 128, 128);
+        let mut s = Schedule::new(prog, 0);
+        let b = s.get_block("matmul").unwrap();
+        let loops = s.get_loops(b).unwrap();
+        let j = s
+            .split(loops[2], &[FactorArg::Lit(8), FactorArg::Lit(16)])
+            .unwrap();
+        let tiled = extract(&s.prog);
+        assert_eq!(tiled[16], 5.0); // loop-count feature
+        // Move the inner j tile innermost (below k), then vectorize it.
+        let loops2 = s.get_loops(b).unwrap();
+        s.reorder(&[loops2[4], j[1]]).unwrap();
+        let loops3 = s.get_loops(b).unwrap();
+        s.vectorize(*loops3.last().unwrap()).unwrap();
+        let vec = extract(&s.prog);
+        assert!(vec[9] > 0.0);
+    }
+
+    #[test]
+    fn tensorized_block_flagged() {
+        let prog = workloads::matmul(1, 64, 64, 64);
+        let mut s = Schedule::new(prog, 0);
+        let b = s.get_block("matmul").unwrap();
+        let loops = s.get_loops(b).unwrap();
+        let i = s.split(loops[1], &[FactorArg::Lit(4), FactorArg::Lit(16)]).unwrap();
+        let j = s.split(loops[2], &[FactorArg::Lit(4), FactorArg::Lit(16)]).unwrap();
+        let k = s.split(loops[3], &[FactorArg::Lit(4), FactorArg::Lit(16)]).unwrap();
+        s.reorder(&[i[0], j[0], k[0], i[1], j[1], k[1]]).unwrap();
+        s.tensorize(i[1], "wmma_16x16x16").unwrap();
+        let f = extract(&s.prog);
+        assert!(f[18] > 0.9);
+        assert!(f[19] > 0.0);
+    }
+
+    #[test]
+    fn contiguity_reflects_stride() {
+        // Innermost loop of the e_0 nest is k: A[b,i,k] is stride-1,
+        // C[b,i,j] is stride-0 (broadcast), but B[b,k,j] jumps a whole row
+        // per k step => 2/3 friendly.
+        let prog = workloads::matmul(1, 64, 64, 64);
+        let blk = prog.find_block("matmul").unwrap();
+        let c = innermost_contiguity(&prog, blk);
+        assert!((c - 2.0 / 3.0).abs() < 1e-9, "{c}");
+        // Transpose: innermost s is stride-1 on the write K_t[h,d,s] but
+        // jumps head*dim elements on the read K[s,h,d] => 1/2 friendly.
+        let t = workloads::transpose_batch_matmul(32, 4, 16);
+        let tb = t.find_block("transpose").unwrap();
+        let c = innermost_contiguity(&t, tb);
+        assert!((c - 0.5).abs() < 1e-9, "{c}");
+    }
+}

@@ -1,0 +1,211 @@
+//! Learned cost models (paper §4, "Cost model"): a tree-boosting regressor
+//! over structural program features, updated online from measured
+//! latencies, plus a random baseline. Models predict a *score*
+//! (`-ln(latency)`), so higher is better and ordering matches throughput.
+
+pub mod features;
+pub mod gbt;
+
+pub use features::{extract, FEAT_DIM};
+pub use gbt::Gbt;
+
+use crate::tir::Program;
+use crate::util::rng::Rng;
+
+/// Convert a measured latency to the regression target.
+pub fn latency_to_score(latency_s: f64) -> f64 {
+    -latency_s.max(1e-12).ln()
+}
+
+/// A cost model the search can query and update.
+pub trait CostModel {
+    /// Predicted score for each program (higher = faster).
+    fn predict(&self, progs: &[&Program]) -> Vec<f64>;
+    /// Feed back measured latencies (seconds) for the given programs.
+    fn update(&mut self, progs: &[&Program], latencies_s: &[f64]);
+    fn name(&self) -> &'static str;
+}
+
+/// Tree-boosting cost model (default, as in the paper).
+pub struct GbtCostModel {
+    model: Gbt,
+    xs: Vec<Vec<f64>>,
+    ys: Vec<f64>,
+    /// Retrain after this many new samples accumulate.
+    pub retrain_every: usize,
+    staged: usize,
+}
+
+impl GbtCostModel {
+    pub fn new() -> GbtCostModel {
+        GbtCostModel {
+            model: Gbt::new(50, 5, 0.2),
+            xs: Vec::new(),
+            ys: Vec::new(),
+            retrain_every: 32,
+            staged: 0,
+        }
+    }
+
+    pub fn n_samples(&self) -> usize {
+        self.xs.len()
+    }
+
+    /// Force a retrain on all accumulated data.
+    pub fn retrain(&mut self) {
+        self.model.fit(&self.xs, &self.ys);
+        self.staged = 0;
+    }
+}
+
+impl Default for GbtCostModel {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl CostModel for GbtCostModel {
+    fn predict(&self, progs: &[&Program]) -> Vec<f64> {
+        if !self.model.is_fit() {
+            // Cold model: neutral scores; the search falls back to its
+            // prior (random exploration + measured elites).
+            return vec![0.0; progs.len()];
+        }
+        progs
+            .iter()
+            .map(|p| self.model.predict_one(&extract(p)))
+            .collect()
+    }
+
+    fn update(&mut self, progs: &[&Program], latencies_s: &[f64]) {
+        for (p, &l) in progs.iter().zip(latencies_s) {
+            if !l.is_finite() || l <= 0.0 {
+                continue;
+            }
+            self.xs.push(extract(p));
+            self.ys.push(latency_to_score(l));
+            self.staged += 1;
+        }
+        if self.staged >= self.retrain_every || !self.model.is_fit() {
+            self.retrain();
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "gbt"
+    }
+}
+
+/// Random cost model (ablation baseline).
+pub struct RandomModel {
+    rng: std::cell::RefCell<Rng>,
+}
+
+impl RandomModel {
+    pub fn new(seed: u64) -> RandomModel {
+        RandomModel {
+            rng: std::cell::RefCell::new(Rng::seed_from_u64(seed)),
+        }
+    }
+}
+
+impl CostModel for RandomModel {
+    fn predict(&self, progs: &[&Program]) -> Vec<f64> {
+        let mut rng = self.rng.borrow_mut();
+        progs.iter().map(|_| rng.gen_f64()).collect()
+    }
+
+    fn update(&mut self, _progs: &[&Program], _latencies_s: &[f64]) {}
+
+    fn name(&self) -> &'static str {
+        "random"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::Schedule;
+    use crate::sim::{simulate, Target};
+    use crate::workloads;
+
+    /// Generate schedule variants with different parallelism and collect
+    /// (program, simulated latency) pairs.
+    fn variants() -> Vec<(Program, f64)> {
+        let t = Target::cpu_avx512();
+        let mut out = Vec::new();
+        for par in [false, true] {
+            for vec in [false, true] {
+                let prog = workloads::matmul(1, 256, 256, 256);
+                let mut s = Schedule::new(prog, 0);
+                let b = s.get_block("matmul").unwrap();
+                let loops = s.get_loops(b).unwrap();
+                if par {
+                    s.parallel(loops[1]).unwrap();
+                }
+                if vec {
+                    // Swap j and k so j (spatial, stride-1 on B and C) is
+                    // innermost, then vectorize it.
+                    let l = s.get_loops(b).unwrap();
+                    s.reorder(&[l[3], l[2]]).unwrap();
+                    let l2 = s.get_loops(b).unwrap();
+                    s.vectorize(*l2.last().unwrap()).unwrap();
+                }
+                let lat = simulate(&s.prog, &t).unwrap().total_s;
+                out.push((s.prog, lat));
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn gbt_learns_to_rank_schedules() {
+        let data = variants();
+        let mut m = GbtCostModel::new();
+        m.retrain_every = 1;
+        let progs: Vec<&Program> = data.iter().map(|(p, _)| p).collect();
+        let lats: Vec<f64> = data.iter().map(|(_, l)| *l).collect();
+        // Train on repeated observations (small set, fit should interpolate).
+        for _ in 0..3 {
+            m.update(&progs, &lats);
+        }
+        let pred = m.predict(&progs);
+        // Best-latency program must get the best score.
+        let best_true = lats
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        let best_pred = pred
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        assert_eq!(best_true, best_pred);
+    }
+
+    #[test]
+    fn cold_model_returns_neutral() {
+        let m = GbtCostModel::new();
+        let p = workloads::matmul(1, 64, 64, 64);
+        assert_eq!(m.predict(&[&p]), vec![0.0]);
+    }
+
+    #[test]
+    fn score_monotone_in_latency() {
+        assert!(latency_to_score(1e-6) > latency_to_score(1e-3));
+    }
+
+    #[test]
+    fn random_model_is_stateless_noise() {
+        let mut m = RandomModel::new(7);
+        let p = workloads::matmul(1, 16, 16, 16);
+        let a = m.predict(&[&p, &p, &p]);
+        assert_eq!(a.len(), 3);
+        m.update(&[&p], &[1.0]); // no-op
+        let b = m.predict(&[&p]);
+        assert!(b[0] >= 0.0 && b[0] <= 1.0);
+    }
+}

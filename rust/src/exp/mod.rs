@@ -1,0 +1,225 @@
+//! Experiment harness: one module per paper figure/table (§6). Each
+//! regenerates the paper's rows/series on the simulated testbed and
+//! returns structured results for the report writer.
+//!
+//! | id      | paper artifact                                  |
+//! |---------|--------------------------------------------------|
+//! | fig8    | operator/subgraph perf, 12 workloads x 3 systems |
+//! | fig9    | end-to-end models x 3 systems                    |
+//! | fig10a  | search-space composition ablation (fused-dense)  |
+//! | fig10b  | BERT-large + Use-Tensor-Core vs AutoTVM          |
+//! | table1  | tuning time, 5 models, Ansor vs MetaSchedule     |
+
+pub mod fig10;
+pub mod fig8;
+pub mod fig9;
+pub mod table1;
+
+use crate::cost_model::GbtCostModel;
+use crate::search::{EvolutionarySearch, SearchConfig, SimMeasurer, TuneResult};
+use crate::sim::Target;
+use crate::space::SpaceComposer;
+use crate::tir::Program;
+use crate::util::json::Json;
+
+/// Shared experiment knobs.
+#[derive(Debug, Clone)]
+pub struct ExpConfig {
+    /// Measurement trials per (workload, system).
+    pub trials: usize,
+    pub seed: u64,
+}
+
+impl Default for ExpConfig {
+    fn default() -> Self {
+        ExpConfig { trials: 64, seed: 42 }
+    }
+}
+
+/// Tune one program with MetaSchedule's generic space on the simulator.
+pub fn tune_metaschedule(prog: &Program, target: &Target, cfg: &ExpConfig) -> TuneResult {
+    let composer = SpaceComposer::generic(target.clone());
+    tune_with_composer(prog, target, &composer, cfg)
+}
+
+/// Tune with an explicit composer (used by the fig10 ablations).
+pub fn tune_with_composer(
+    prog: &Program,
+    target: &Target,
+    composer: &SpaceComposer,
+    cfg: &ExpConfig,
+) -> TuneResult {
+    let search = EvolutionarySearch::new(SearchConfig {
+        num_trials: cfg.trials,
+        ..SearchConfig::default()
+    });
+    let mut model = GbtCostModel::new();
+    let mut measurer = SimMeasurer::new(target.clone());
+    search.tune(prog, composer, &mut model, &mut measurer, cfg.seed)
+}
+
+/// The paper's "TVM" bars pick the best of AutoTVM and Ansor per setup.
+pub fn tune_tvm_best(prog: &Program, target: &Target, cfg: &ExpConfig) -> f64 {
+    let mut m1 = SimMeasurer::new(target.clone());
+    let autotvm = crate::baselines::AutoTvm { num_trials: cfg.trials }
+        .tune(prog, target, &mut m1, cfg.seed)
+        .best_latency_s;
+    let mut m2 = SimMeasurer::new(target.clone());
+    let ansor = crate::baselines::Ansor { num_trials: cfg.trials }
+        .tune(prog, target, &mut m2, cfg.seed)
+        .best_latency_s;
+    autotvm.min(ansor)
+}
+
+/// One result row: workload x system -> latency.
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub workload: String,
+    pub system: String,
+    pub latency_s: f64,
+}
+
+/// A complete experiment output.
+#[derive(Debug, Clone)]
+pub struct Report {
+    pub id: String,
+    pub title: String,
+    pub rows: Vec<Row>,
+    /// Free-form notes (e.g. speedup summaries) included in the JSON.
+    pub notes: Vec<String>,
+}
+
+impl Report {
+    pub fn new(id: &str, title: &str) -> Report {
+        Report {
+            id: id.into(),
+            title: title.into(),
+            rows: Vec::new(),
+            notes: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, workload: &str, system: &str, latency_s: f64) {
+        self.rows.push(Row {
+            workload: workload.into(),
+            system: system.into(),
+            latency_s,
+        });
+    }
+
+    pub fn latency(&self, workload: &str, system: &str) -> Option<f64> {
+        self.rows
+            .iter()
+            .find(|r| r.workload == workload && r.system == system)
+            .map(|r| r.latency_s)
+    }
+
+    /// Distinct systems in insertion order.
+    pub fn systems(&self) -> Vec<String> {
+        let mut out: Vec<String> = Vec::new();
+        for r in &self.rows {
+            if !out.contains(&r.system) {
+                out.push(r.system.clone());
+            }
+        }
+        out
+    }
+
+    /// Distinct workloads in insertion order.
+    pub fn workloads(&self) -> Vec<String> {
+        let mut out: Vec<String> = Vec::new();
+        for r in &self.rows {
+            if !out.contains(&r.workload) {
+                out.push(r.workload.clone());
+            }
+        }
+        out
+    }
+
+    /// Print the paper-shaped table: one row per workload, one column per
+    /// system, in µs plus the speedup of the last system over the first.
+    pub fn print(&self) {
+        let systems = self.systems();
+        let mut headers: Vec<String> = vec!["workload".into()];
+        headers.extend(systems.iter().map(|s| format!("{s} (us)")));
+        if systems.len() >= 2 {
+            headers.push(format!("{} vs {}", systems[systems.len() - 1], systems[0]));
+        }
+        let hdr_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+        let mut rows = Vec::new();
+        for w in self.workloads() {
+            let mut row = vec![w.clone()];
+            for s in &systems {
+                match self.latency(&w, s) {
+                    Some(l) => row.push(format!("{:.2}", l * 1e6)),
+                    None => row.push("-".into()),
+                }
+            }
+            if systems.len() >= 2 {
+                if let (Some(a), Some(b)) = (
+                    self.latency(&w, &systems[0]),
+                    self.latency(&w, &systems[systems.len() - 1]),
+                ) {
+                    row.push(format!("{:.2}x", a / b));
+                }
+            }
+            rows.push(row);
+        }
+        crate::util::bench::print_table(&self.title, &hdr_refs, &rows);
+        for n in &self.notes {
+            println!("  note: {n}");
+        }
+    }
+
+    /// JSON for EXPERIMENTS.md / downstream plotting.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", Json::str(self.id.clone())),
+            ("title", Json::str(self.title.clone())),
+            (
+                "rows",
+                Json::arr(self.rows.iter().map(|r| {
+                    Json::obj(vec![
+                        ("workload", Json::str(r.workload.clone())),
+                        ("system", Json::str(r.system.clone())),
+                        ("latency_s", Json::num(r.latency_s)),
+                    ])
+                })),
+            ),
+            (
+                "notes",
+                Json::arr(self.notes.iter().map(|n| Json::str(n.clone()))),
+            ),
+        ])
+    }
+
+    /// Append to the results file consumed by EXPERIMENTS.md.
+    pub fn write(&self, path: &str) -> std::io::Result<()> {
+        use std::io::Write;
+        let mut f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)?;
+        writeln!(f, "{}", self.to_json().to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_table_and_json_roundtrip() {
+        let mut r = Report::new("figX", "test");
+        r.push("GMM", "PyTorch", 10e-6);
+        r.push("GMM", "MetaSchedule", 5e-6);
+        r.push("SFM", "PyTorch", 2e-6);
+        assert_eq!(r.systems(), vec!["PyTorch", "MetaSchedule"]);
+        assert_eq!(r.workloads(), vec!["GMM", "SFM"]);
+        assert_eq!(r.latency("GMM", "MetaSchedule"), Some(5e-6));
+        let j = r.to_json().to_string();
+        assert!(j.contains("\"latency_s\""));
+        assert!(j.contains("figX"));
+        r.print(); // must not panic
+    }
+}

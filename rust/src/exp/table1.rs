@@ -1,0 +1,87 @@
+//! Table 1: tuning time. Ansor's search space was reproduced in the
+//! MetaSchedule language (Appendix A.5), so both systems tune the same
+//! five models. We report wall-clock seconds *normalized to the nominal
+//! trial budget* (time/measurement x budget): the MetaSchedule task
+//! scheduler keeps spending until the budget is exhausted while the
+//! Ansor-style per-task loop can exit early when its candidate pool
+//! dries up, so raw wall-clock would compare different amounts of work.
+//! Shape claim: MetaSchedule tuning time <= Ansor per measurement.
+
+use std::time::Instant;
+
+use crate::baselines::Ansor;
+use crate::exp::{ExpConfig, Report};
+use crate::graph::{self, extract_tasks};
+use crate::search::{Measurer, SearchConfig, SimMeasurer, TaskScheduler};
+use crate::sim::Target;
+use crate::space::SpaceComposer;
+
+pub const TABLE1_MODELS: [&str; 5] = [
+    "resnet50",
+    "bert-base",
+    "mobilenet-v2",
+    "gpt2",
+    "inception-v1",
+];
+
+/// Run Table 1 on one target; "latency" columns are normalized tuning
+/// seconds for `cfg.trials x tasks` measurements.
+pub fn run(target: &Target, cfg: &ExpConfig, models: Option<&[&str]>) -> Report {
+    let models: Vec<&str> = models.map(|m| m.to_vec()).unwrap_or(TABLE1_MODELS.to_vec());
+    let mut report = Report::new(
+        "table1",
+        &format!("Table 1: tuning time (s, budget-normalized) on {}", target.name),
+    );
+    for m in models {
+        let ops = graph::by_name(m).expect("unknown model");
+        let tasks = extract_tasks(&ops);
+        let nominal = (cfg.trials * tasks.len()) as f64;
+
+        // Ansor-style: frozen sketches, one tune per task.
+        let t0 = Instant::now();
+        let mut ansor_measurements = 0usize;
+        for t in &tasks {
+            let mut meas = SimMeasurer::new(target.clone());
+            let _ = Ansor { num_trials: cfg.trials }.tune(&t.prog, target, &mut meas, cfg.seed);
+            ansor_measurements += meas.count();
+        }
+        let ansor_s = t0.elapsed().as_secs_f64() / ansor_measurements.max(1) as f64 * nominal;
+
+        // MetaSchedule: traces + task scheduler over the generic space.
+        let composer = SpaceComposer::generic(target.clone());
+        let t1 = Instant::now();
+        let mut meas = SimMeasurer::new(target.clone());
+        let ts = TaskScheduler::new(SearchConfig::default());
+        let _ = ts.tune_tasks(&tasks, &composer, &mut meas, cfg.trials * tasks.len(), cfg.seed);
+        let ms_s = t1.elapsed().as_secs_f64() / meas.count().max(1) as f64 * nominal;
+
+        report.push(m, "TVM-Ansor", ansor_s);
+        report.push(m, "MetaSchedule", ms_s);
+    }
+    let faster = report
+        .workloads()
+        .iter()
+        .filter(|w| {
+            report.latency(w, "MetaSchedule").unwrap()
+                <= report.latency(w, "TVM-Ansor").unwrap() * 1.05
+        })
+        .count();
+    report.notes.push(format!(
+        "MetaSchedule tuning time <= Ansor (within 5%) on {faster}/{} models",
+        report.workloads().len()
+    ));
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_smoke_single_model() {
+        let cfg = ExpConfig { trials: 8, seed: 1 };
+        let r = run(&Target::cpu_avx512(), &cfg, Some(&["mobilenet-v2"]));
+        assert!(r.latency("mobilenet-v2", "TVM-Ansor").unwrap() > 0.0);
+        assert!(r.latency("mobilenet-v2", "MetaSchedule").unwrap() > 0.0);
+    }
+}

@@ -1,0 +1,94 @@
+//! Graph-level integration: operator lists for whole models, task
+//! extraction with structural deduplication, and end-to-end latency
+//! aggregation (paper §6.2 and Appendix A.6 — frameworks hand us a
+//! computational graph; we extract the unique tensor programs, tune each,
+//! and sum weighted best latencies).
+
+pub mod models;
+
+pub use models::{bert_base, bert_large, by_name, gpt2, inception_v1, mobilenet_v2, resnet50, OpList, MODEL_NAMES};
+
+use std::collections::HashMap;
+
+use crate::search::Task;
+use crate::tir::structural_hash;
+
+/// Deduplicate an operator list into tuning tasks: operators with the same
+/// structural hash share one task whose weight is the summed occurrence
+/// count (the paper's task extraction).
+pub fn extract_tasks(ops: &OpList) -> Vec<Task> {
+    let mut index: HashMap<u64, usize> = HashMap::new();
+    let mut tasks: Vec<Task> = Vec::new();
+    for (prog, count) in ops {
+        let h = structural_hash(prog);
+        match index.get(&h) {
+            Some(&i) => tasks[i].weight += count,
+            None => {
+                index.insert(h, tasks.len());
+                tasks.push(Task {
+                    name: format!("{}_{}", prog.name, tasks.len()),
+                    prog: prog.clone(),
+                    weight: *count,
+                });
+            }
+        }
+    }
+    tasks
+}
+
+/// End-to-end vendor-library latency: every op dispatched to the vendor
+/// kernel model.
+pub fn vendor_e2e(ops: &OpList, target: &crate::sim::Target) -> f64 {
+    ops.iter()
+        .map(|(p, c)| crate::baselines::vendor_latency(p, target) * *c as f64)
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn extraction_dedups_repeated_ops() {
+        let ops = bert_base();
+        let tasks = extract_tasks(&ops);
+        // The QKV dense and output-projection dense entries share one
+        // structural hash, so tasks < distinct op-list entries.
+        assert!(tasks.len() < ops.len());
+        let total_ops: usize = ops.iter().map(|(_, c)| c).sum();
+        let total_weight: usize = tasks.iter().map(|t| t.weight).sum();
+        assert_eq!(total_ops, total_weight);
+        // Q/K/V dense appears 3x per layer x 12 plus the output projection.
+        let dense_task = tasks
+            .iter()
+            .find(|t| t.prog.name == "dense" && t.weight >= 36)
+            .expect("qkv dense task");
+        assert_eq!(dense_task.weight, 48);
+    }
+
+    #[test]
+    fn resnet_tasks_are_manageable() {
+        let tasks = extract_tasks(&resnet50());
+        assert!(tasks.len() < 30, "{} tasks", tasks.len());
+        assert!(tasks.len() > 10);
+    }
+
+    #[test]
+    fn vendor_e2e_positive_for_all_models() {
+        let cpu = crate::sim::Target::cpu_avx512();
+        for name in MODEL_NAMES {
+            let ops = by_name(name).unwrap();
+            let l = vendor_e2e(&ops, &cpu);
+            assert!(l > 0.0 && l.is_finite(), "{name}: {l}");
+        }
+    }
+
+    #[test]
+    fn identical_programs_same_hash_distinct_shapes_differ() {
+        let a = crate::workloads::dense(128, 768, 768);
+        let b = crate::workloads::dense(128, 768, 768);
+        let c = crate::workloads::dense(128, 1024, 768);
+        assert_eq!(structural_hash(&a), structural_hash(&b));
+        assert_ne!(structural_hash(&a), structural_hash(&c));
+    }
+}

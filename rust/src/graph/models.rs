@@ -1,0 +1,225 @@
+//! Model zoo: the end-to-end networks of Figures 9/10b and Table 1, built
+//! from the parameterized operator builders at their standard shapes
+//! (batch = 1, as in the paper's evaluation).
+
+use crate::tir::Program;
+use crate::workloads::{
+    add2d, conv2d, dense, depthwise_conv2d, fused_dense, matmul, norm, softmax,
+    transpose_batch_matmul, Conv2dParams,
+};
+
+/// An operator occurrence in a model: the program plus its repeat count.
+pub type OpList = Vec<(Program, usize)>;
+
+fn c2d(h: i64, ci: i64, co: i64, k: i64, s: i64) -> Program {
+    conv2d(Conv2dParams::new(1, h, h, ci, co, k, s, k / 2))
+}
+
+/// ResNet-50 (He et al.): stem + 4 bottleneck stages [3,4,6,3] + head.
+pub fn resnet50() -> OpList {
+    let mut ops: OpList = Vec::new();
+    ops.push((c2d(224, 3, 64, 7, 2), 1)); // stem
+    let stages: [(i64, usize); 4] = [(64, 3), (128, 4), (256, 6), (512, 3)];
+    let mut h = 56i64;
+    let mut in_c = 64i64;
+    for (si, &(w, blocks)) in stages.iter().enumerate() {
+        let out_c = w * 4;
+        let stride = if si == 0 { 1 } else { 2 };
+        // First block (with projection shortcut + optional stride).
+        ops.push((c2d(h, in_c, w, 1, 1), 1));
+        ops.push((c2d(h, w, w, 3, stride), 1));
+        h /= stride;
+        ops.push((c2d(h, w, out_c, 1, 1), 1));
+        ops.push((c2d(h * stride, in_c, out_c, 1, stride), 1)); // projection
+        ops.push((add2d(out_c, h * h), 1));
+        // Remaining identity blocks.
+        let rest = blocks - 1;
+        if rest > 0 {
+            ops.push((c2d(h, out_c, w, 1, 1), rest));
+            ops.push((c2d(h, w, w, 3, 1), rest));
+            ops.push((c2d(h, w, out_c, 1, 1), rest));
+            ops.push((add2d(out_c, h * h), rest));
+        }
+        in_c = out_c;
+    }
+    ops.push((dense(1, 1000, 2048), 1)); // classifier
+    ops
+}
+
+/// MobileNet-v2 (Sandler et al.): stem + 17 inverted residual blocks + head.
+pub fn mobilenet_v2() -> OpList {
+    let mut ops: OpList = Vec::new();
+    ops.push((c2d(224, 3, 32, 3, 2), 1)); // stem, 112x112x32
+    // (expansion t, out channels c, repeats n, stride s)
+    let cfg: [(i64, i64, usize, i64); 7] = [
+        (1, 16, 1, 1),
+        (6, 24, 2, 2),
+        (6, 32, 3, 2),
+        (6, 64, 4, 2),
+        (6, 96, 3, 1),
+        (6, 160, 3, 2),
+        (6, 320, 1, 1),
+    ];
+    let mut h = 112i64;
+    let mut in_c = 32i64;
+    for &(t, c, n, s) in &cfg {
+        for i in 0..n {
+            let stride = if i == 0 { s } else { 1 };
+            let exp = in_c * t;
+            if t > 1 {
+                ops.push((c2d(h, in_c, exp, 1, 1), 1)); // expand
+            }
+            ops.push((depthwise_conv2d(1, h, h, exp, 3, stride, 1), 1));
+            let oh = h / stride;
+            ops.push((c2d(oh, exp, c, 1, 1), 1)); // project
+            if stride == 1 && in_c == c {
+                ops.push((add2d(c, oh * oh), 1));
+            }
+            h = oh;
+            in_c = c;
+        }
+    }
+    ops.push((c2d(7, 320, 1280, 1, 1), 1));
+    ops.push((dense(1, 1000, 1280), 1));
+    ops
+}
+
+/// One transformer encoder layer's operators.
+fn transformer_layer(seq: i64, hidden: i64, heads: i64, ffn: i64) -> OpList {
+    let dim = hidden / heads;
+    vec![
+        (dense(seq, hidden, hidden), 3),                      // Q, K, V
+        (transpose_batch_matmul(seq, heads, dim), 1),         // scores
+        (softmax(1, heads * seq, seq), 1),                    // attention probs
+        (matmul(heads, seq, dim, seq), 1),                    // probs @ V
+        (dense(seq, hidden, hidden), 1),                      // output proj
+        (add2d(seq, hidden), 2),                              // residuals
+        (norm(1, seq, hidden), 2),                            // layernorms
+        (fused_dense(seq, ffn, hidden), 1),                   // FFN up + act
+        (dense(seq, hidden, ffn), 1),                         // FFN down
+    ]
+}
+
+fn repeat_layers(layer: OpList, n: usize) -> OpList {
+    layer.into_iter().map(|(p, c)| (p, c * n)).collect()
+}
+
+/// BERT-base: 12 layers, hidden 768, 12 heads, FFN 3072, seq 128.
+pub fn bert_base() -> OpList {
+    repeat_layers(transformer_layer(128, 768, 12, 3072), 12)
+}
+
+/// BERT-large: 24 layers, hidden 1024, 16 heads, FFN 4096, seq 128
+/// (the Figure 10b workload).
+pub fn bert_large() -> OpList {
+    repeat_layers(transformer_layer(128, 1024, 16, 4096), 24)
+}
+
+/// GPT-2 (117M): 12 layers, hidden 768, 12 heads, FFN 3072, seq 128.
+/// Structurally the BERT-base decoder twin at this granularity.
+pub fn gpt2() -> OpList {
+    repeat_layers(transformer_layer(128, 768, 12, 3072), 12)
+}
+
+/// Inception-v1 (GoogLeNet): stem plus representative inception-branch
+/// convolutions with their occurrence counts across the 9 modules.
+pub fn inception_v1() -> OpList {
+    vec![
+        (c2d(224, 3, 64, 7, 2), 1),
+        (c2d(56, 64, 64, 1, 1), 1),
+        (c2d(56, 64, 192, 3, 1), 1),
+        // 28x28 modules (3a, 3b)
+        (c2d(28, 192, 64, 1, 1), 2),
+        (c2d(28, 96, 128, 3, 1), 2),
+        (c2d(28, 16, 32, 5, 1), 2),
+        (c2d(28, 192, 96, 1, 1), 2),
+        // 14x14 modules (4a-4e)
+        (c2d(14, 480, 192, 1, 1), 5),
+        (c2d(14, 96, 208, 3, 1), 5),
+        (c2d(14, 16, 48, 5, 1), 5),
+        (c2d(14, 480, 96, 1, 1), 5),
+        // 7x7 modules (5a, 5b)
+        (c2d(7, 832, 256, 1, 1), 2),
+        (c2d(7, 160, 320, 3, 1), 2),
+        (c2d(7, 32, 128, 5, 1), 2),
+        (dense(1, 1000, 1024), 1),
+    ]
+}
+
+/// Look a model up by name.
+pub fn by_name(name: &str) -> Option<OpList> {
+    match name.to_lowercase().as_str() {
+        "resnet50" | "resnet-50" => Some(resnet50()),
+        "mobilenetv2" | "mobilenet-v2" => Some(mobilenet_v2()),
+        "bert-base" | "bert_base" => Some(bert_base()),
+        "bert-large" | "bert_large" => Some(bert_large()),
+        "gpt2" | "gpt-2" => Some(gpt2()),
+        "inception-v1" | "inceptionv1" => Some(inception_v1()),
+        _ => None,
+    }
+}
+
+/// All model names used by the experiments.
+pub const MODEL_NAMES: [&str; 6] = [
+    "resnet50",
+    "mobilenet-v2",
+    "bert-base",
+    "bert-large",
+    "gpt2",
+    "inception-v1",
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tir::analysis::program_flops;
+
+    fn total_flops(ops: &OpList) -> f64 {
+        ops.iter()
+            .map(|(p, c)| program_flops(p) * *c as f64)
+            .sum()
+    }
+
+    #[test]
+    fn resnet50_flops_in_expected_range() {
+        // ResNet-50 is ~3.8 GFLOPs (multiply+add) at 224x224.
+        let f = total_flops(&resnet50());
+        assert!(f > 6e9 && f < 9.5e9, "{f}"); // conv-only approximation
+    }
+
+    #[test]
+    fn mobilenet_flops_much_smaller_than_resnet() {
+        let m = total_flops(&mobilenet_v2());
+        let r = total_flops(&resnet50());
+        assert!(m < r / 8.0, "mobilenet {m} vs resnet {r}");
+        assert!(m > 4e8, "{m}"); // ~0.3 GMACs => ~0.6 GFLOPs
+    }
+
+    #[test]
+    fn bert_base_flops_match_formula() {
+        // ~= 12 layers * (4 * s * h^2 + 2 * s^2 * h + 2 * s * h * ffn) * 2
+        let f = total_flops(&bert_base());
+        let s = 128.0f64;
+        let h = 768.0;
+        let ffn = 3072.0;
+        let expect = 12.0 * 2.0 * (4.0 * s * h * h + 2.0 * s * s * h + 2.0 * s * h * ffn);
+        assert!((f / expect - 1.0).abs() < 0.1, "{f} vs {expect}");
+    }
+
+    #[test]
+    fn bert_large_heavier_than_base() {
+        assert!(total_flops(&bert_large()) > 2.5 * total_flops(&bert_base()));
+    }
+
+    #[test]
+    fn all_models_build_and_verify() {
+        for name in MODEL_NAMES {
+            let ops = by_name(name).unwrap();
+            assert!(!ops.is_empty());
+            for (p, c) in &ops {
+                p.check_integrity().unwrap();
+                assert!(*c >= 1);
+            }
+        }
+    }
+}

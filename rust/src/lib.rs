@@ -1,0 +1,31 @@
+//! # MetaSchedule — tensor program optimization with probabilistic programs
+//!
+//! A from-scratch reproduction of the NeurIPS 2022 paper (Shao et al.) as a
+//! three-layer Rust + JAX + Pallas stack. The Rust layer implements the
+//! whole system: a TensorIR-style program representation ([`tir`]),
+//! stochastic schedule primitives ([`schedule`]), execution traces
+//! ([`trace`]), composable transformation modules ([`space`]), the
+//! learning-driven evolutionary search with a gradient-boosted-tree cost
+//! model ([`search`], [`cost_model`]), a deterministic hardware latency
+//! simulator standing in for the paper's testbeds ([`sim`]), baseline
+//! tuners ([`baselines`]), graph-level task extraction and end-to-end model
+//! tuning ([`graph`]), the Appendix A.2 workload suite ([`workloads`]), a
+//! PJRT runtime for real-hardware measurement of AOT-compiled Pallas
+//! kernels ([`runtime`]), and the experiment harness that regenerates every
+//! figure and table of the paper's evaluation ([`exp`]).
+//!
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for results.
+
+pub mod baselines;
+pub mod cost_model;
+pub mod exp;
+pub mod graph;
+pub mod runtime;
+pub mod schedule;
+pub mod search;
+pub mod sim;
+pub mod space;
+pub mod tir;
+pub mod trace;
+pub mod util;
+pub mod workloads;

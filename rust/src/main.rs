@@ -1,0 +1,179 @@
+//! `metaschedule` CLI — the Layer-3 entrypoint.
+//!
+//! ```text
+//! metaschedule list                              # workloads + models
+//! metaschedule tune --workload GMM [--target cpu] [--trials 64]
+//! metaschedule tune-model --model bert-base [--target cpu] [--trials 32]
+//! metaschedule exp <fig8|fig9|fig10a|fig10b|table1|all> [--target cpu]
+//!                  [--trials N] [--seed S] [--out results.jsonl]
+//! metaschedule pjrt-verify                       # artifact correctness gate
+//! ```
+
+use metaschedule::exp::{self, ExpConfig};
+use metaschedule::graph;
+use metaschedule::sim::Target;
+use metaschedule::tir::{print_program, PrintOptions};
+use metaschedule::util::cli::Args;
+use metaschedule::workloads;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let cmd = args.positional.first().cloned().unwrap_or_default();
+    match cmd.as_str() {
+        "list" => list(),
+        "tune" => tune(&args),
+        "tune-model" => tune_model(&args),
+        "exp" => experiment(&args),
+        "pjrt-verify" => pjrt_verify(&args),
+        _ => {
+            eprintln!(
+                "usage: metaschedule <list|tune|tune-model|exp|pjrt-verify> [flags]\n\
+                 see rust/src/main.rs header for details"
+            );
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cfg_of(args: &Args) -> ExpConfig {
+    ExpConfig {
+        trials: args.flag_usize("trials", 64),
+        seed: args.flag_u64("seed", 42),
+    }
+}
+
+fn target_of(args: &Args) -> Target {
+    let name = args.flag_or("target", "cpu");
+    Target::by_name(&name).unwrap_or_else(|| {
+        eprintln!("unknown target {name} (cpu|gpu|tpu)");
+        std::process::exit(2);
+    })
+}
+
+fn list() {
+    println!("operator workloads (Appendix A.2):");
+    for w in workloads::suite() {
+        println!("  {:<4} {}", w.name, w.description);
+    }
+    println!(
+        "  {:<4} {}",
+        "fused-dense",
+        workloads::fused_dense_workload().description
+    );
+    println!("end-to-end models:");
+    for m in graph::MODEL_NAMES {
+        let tasks = graph::extract_tasks(&graph::by_name(m).unwrap());
+        println!("  {:<14} {} unique tasks", m, tasks.len());
+    }
+}
+
+fn tune(args: &Args) {
+    let name = args.flag_or("workload", "GMM");
+    let Some(w) = workloads::by_name(&name) else {
+        eprintln!("unknown workload {name}; see `metaschedule list`");
+        std::process::exit(2);
+    };
+    let target = target_of(args);
+    let cfg = cfg_of(args);
+    let prog = (w.build)();
+    println!("== tuning {} on {} ({} trials)", w.name, target.name, cfg.trials);
+    let naive = metaschedule::sim::simulate(&prog, &target)
+        .map(|r| r.total_s)
+        .unwrap_or(f64::NAN);
+    let r = exp::tune_metaschedule(&prog, &target, &cfg);
+    println!(
+        "naive {:.2} us -> tuned {:.2} us ({:.1}x) in {} trials",
+        naive * 1e6,
+        r.best_latency_s * 1e6,
+        naive / r.best_latency_s,
+        r.trials
+    );
+    if args.has_switch("show-program") {
+        println!("{}", print_program(&r.best_prog, PrintOptions::default()));
+    }
+    if args.has_switch("show-trace") {
+        println!("{}", metaschedule::trace::serde::trace_to_text(&r.best_trace));
+    }
+}
+
+fn tune_model(args: &Args) {
+    let name = args.flag_or("model", "bert-base");
+    let target = target_of(args);
+    let cfg = cfg_of(args);
+    let Some(ops) = graph::by_name(&name) else {
+        eprintln!("unknown model {name}; see `metaschedule list`");
+        std::process::exit(2);
+    };
+    println!("== tuning {name} on {} ({} trials/task)", target.name, cfg.trials);
+    let vendor = graph::vendor_e2e(&ops, &target);
+    let ms = exp::fig9::metaschedule_e2e(&name, &target, &cfg);
+    println!(
+        "vendor (PyTorch-class) e2e {:.3} ms; MetaSchedule e2e {:.3} ms ({:.2}x)",
+        vendor * 1e3,
+        ms * 1e3,
+        vendor / ms
+    );
+}
+
+fn experiment(args: &Args) {
+    let which = args
+        .positional
+        .get(1)
+        .cloned()
+        .unwrap_or_else(|| "all".into());
+    let cfg = cfg_of(args);
+    let out = args.flag("out").map(|s| s.to_string());
+    let mut reports = Vec::new();
+    match which.as_str() {
+        "fig8" => {
+            reports.push(exp::fig8::run(&Target::cpu_avx512(), &cfg, None));
+            reports.push(exp::fig8::run(&Target::gpu(), &cfg, None));
+        }
+        "fig9" => {
+            reports.push(exp::fig9::run(&Target::cpu_avx512(), &cfg, None));
+            reports.push(exp::fig9::run(&Target::gpu(), &cfg, None));
+        }
+        "fig10a" => reports.push(exp::fig10::run_10a(&cfg)),
+        "fig10b" => reports.push(exp::fig10::run_10b(&cfg)),
+        "table1" => reports.push(exp::table1::run(&Target::cpu_avx512(), &cfg, None)),
+        "all" => {
+            reports.push(exp::fig8::run(&Target::cpu_avx512(), &cfg, None));
+            reports.push(exp::fig8::run(&Target::gpu(), &cfg, None));
+            reports.push(exp::fig9::run(&Target::cpu_avx512(), &cfg, None));
+            reports.push(exp::fig9::run(&Target::gpu(), &cfg, None));
+            reports.push(exp::fig10::run_10a(&cfg));
+            reports.push(exp::fig10::run_10b(&cfg));
+            reports.push(exp::table1::run(&Target::cpu_avx512(), &cfg, None));
+        }
+        other => {
+            eprintln!("unknown experiment {other}");
+            std::process::exit(2);
+        }
+    }
+    for r in &reports {
+        r.print();
+        if let Some(path) = &out {
+            if let Err(e) = r.write(path) {
+                eprintln!("failed writing {path}: {e}");
+            }
+        }
+    }
+}
+
+fn pjrt_verify(args: &Args) {
+    let dir = args.flag_or("artifacts", "artifacts");
+    let variants = metaschedule::runtime::scan_variants(std::path::Path::new(&dir));
+    if variants.is_empty() {
+        eprintln!("no artifacts under {dir}; run `make artifacts` first");
+        std::process::exit(1);
+    }
+    let mut runner = metaschedule::runtime::PjrtRunner::new(&dir).expect("pjrt client");
+    println!("platform: {}", runner.platform());
+    for v in &variants {
+        let err = runner.verify_gmm(*v, 128, 128, 128).expect("execution");
+        let status = if err < 1e-3 { "OK" } else { "FAIL" };
+        println!("  {:<30} max|err| = {err:.2e}  {status}", v.artifact_name());
+        assert!(err < 1e-3, "artifact {v:?} numerics diverge");
+    }
+    println!("all {} variants verified against host matmul", variants.len());
+}

@@ -1,0 +1,382 @@
+//! PJRT runtime: load the AOT artifacts (`artifacts/*.hlo.txt`, produced
+//! once by `make artifacts` — Python never runs on this path) and execute
+//! them on the XLA CPU client for *real wall-clock measurement* `f(e)`.
+//!
+//! The GMM artifact grid realizes one (bm, bn, bk) Pallas tile variant per
+//! file; [`PjrtGmmMeasurer`] maps a scheduled TIR program to its tile
+//! sizes (via [`tile_of`]) and times the nearest real executable — closing
+//! the loop: L3 search decisions -> L1 kernel schedule -> measured
+//! hardware latency.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::schedule::{LoopRv, SchResult, Schedule};
+use crate::search::Measurer;
+use crate::sim::Target;
+use crate::space::TransformModule;
+use crate::tir::Program;
+use crate::trace::FactorArg;
+
+/// Default artifact directory relative to the repo root.
+pub const ARTIFACT_DIR: &str = "artifacts";
+
+/// One compiled GMM tile variant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct TileVariant {
+    pub bm: i64,
+    pub bn: i64,
+    pub bk: i64,
+}
+
+impl TileVariant {
+    pub fn artifact_name(&self) -> String {
+        format!("gmm_bm{}_bn{}_bk{}.hlo.txt", self.bm, self.bn, self.bk)
+    }
+}
+
+/// Scan the artifact directory for GMM tile variants.
+pub fn scan_variants(dir: &Path) -> Vec<TileVariant> {
+    let mut out = Vec::new();
+    let Ok(rd) = std::fs::read_dir(dir) else {
+        return out;
+    };
+    for e in rd.flatten() {
+        let name = e.file_name().to_string_lossy().to_string();
+        if let Some(rest) = name.strip_prefix("gmm_bm").and_then(|r| r.strip_suffix(".hlo.txt")) {
+            let parts: Vec<&str> = rest.split('_').collect();
+            // bm{X} bn{Y} bk{Z}
+            if parts.len() == 3 {
+                let bm = parts[0].parse().ok();
+                let bn = parts[1].strip_prefix("bn").and_then(|s| s.parse().ok());
+                let bk = parts[2].strip_prefix("bk").and_then(|s| s.parse().ok());
+                if let (Some(bm), Some(bn), Some(bk)) = (bm, bn, bk) {
+                    out.push(TileVariant { bm, bn, bk });
+                }
+            }
+        }
+    }
+    out.sort_by_key(|v| (v.bm, v.bn, v.bk));
+    out
+}
+
+/// PJRT CPU client with a compile-once executable cache.
+pub struct PjrtRunner {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Wall-clock measurements performed.
+    pub measurements: usize,
+}
+
+impl PjrtRunner {
+    pub fn new(dir: impl Into<PathBuf>) -> Result<PjrtRunner> {
+        Ok(PjrtRunner {
+            client: xla::PjRtClient::cpu()?,
+            dir: dir.into(),
+            cache: HashMap::new(),
+            measurements: 0,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an artifact (cached).
+    pub fn load(&mut self, artifact: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.cache.contains_key(artifact) {
+            let path = self.dir.join(artifact);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .with_context(|| format!("loading {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            self.cache.insert(artifact.to_string(), exe);
+        }
+        Ok(&self.cache[artifact])
+    }
+
+    /// Execute an artifact on two f32 matrices, returning the flat output.
+    pub fn run_f32(
+        &mut self,
+        artifact: &str,
+        x: (&[f32], &[i64]),
+        y: (&[f32], &[i64]),
+    ) -> Result<Vec<f32>> {
+        let exe = self.load(artifact)?;
+        let lx = xla::Literal::vec1(x.0).reshape(x.1)?;
+        let ly = xla::Literal::vec1(y.0).reshape(y.1)?;
+        let result = exe.execute::<xla::Literal>(&[lx, ly])?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True -> 1-tuple output.
+        Ok(result.to_tuple1()?.to_vec::<f32>()?)
+    }
+
+    /// Time an artifact: median wall clock per execution over `iters`
+    /// timed runs after `warmup` untimed ones.
+    pub fn time_artifact(
+        &mut self,
+        artifact: &str,
+        x: (&[f32], &[i64]),
+        y: (&[f32], &[i64]),
+        warmup: usize,
+        iters: usize,
+    ) -> Result<f64> {
+        let exe = self.load(artifact)?;
+        let lx = xla::Literal::vec1(x.0).reshape(x.1)?;
+        let ly = xla::Literal::vec1(y.0).reshape(y.1)?;
+        for _ in 0..warmup {
+            let _ = exe.execute::<xla::Literal>(&[lx.clone(), ly.clone()])?;
+        }
+        let mut samples = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let t0 = Instant::now();
+            let out = exe.execute::<xla::Literal>(&[lx.clone(), ly.clone()])?;
+            // Force completion.
+            let _ = out[0][0].to_literal_sync()?;
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        self.measurements += 1;
+        Ok(samples[samples.len() / 2])
+    }
+
+    /// Correctness gate: run the GMM variant and compare with a host-side
+    /// f32 matmul; returns the max absolute error.
+    pub fn verify_gmm(&mut self, v: TileVariant, m: usize, n: usize, k: usize) -> Result<f64> {
+        let x: Vec<f32> = (0..m * k).map(|i| ((i % 13) as f32 - 6.0) * 0.25).collect();
+        let y: Vec<f32> = (0..k * n).map(|i| ((i % 7) as f32 - 3.0) * 0.5).collect();
+        let got = self.run_f32(
+            &v.artifact_name(),
+            (&x, &[m as i64, k as i64]),
+            (&y, &[k as i64, n as i64]),
+        )?;
+        let mut max_err = 0.0f64;
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0f32;
+                for kk in 0..k {
+                    acc += x[i * k + kk] * y[kk * n + j];
+                }
+                let e = (acc - got[i * n + j]).abs() as f64;
+                max_err = max_err.max(e);
+            }
+        }
+        Ok(max_err)
+    }
+}
+
+/// Extract the (bm, bn, bk) tile of a program scheduled by
+/// [`PallasTileModule`]: the innermost three loops above the matmul block
+/// (the module reorders to `... i0 j0 k0 i1 j1 k1`).
+pub fn tile_of(prog: &Program) -> Option<TileVariant> {
+    let b = prog.find_block("matmul")?;
+    let loops = prog.loops_above(b);
+    if loops.len() < 3 {
+        return None;
+    }
+    let e: Vec<i64> = loops[loops.len() - 3..]
+        .iter()
+        .map(|&l| prog.loop_data(l).extent)
+        .collect();
+    Some(TileVariant { bm: e[0], bn: e[1], bk: e[2] })
+}
+
+/// Transformation module defining the *Pallas tile* search space for the
+/// GMM task: `sample_perfect_tile` on (i, j, k) with the inner factors
+/// becoming the kernel block sizes. The realized schedule points are the
+/// AOT artifact grid.
+pub struct PallasTileModule {
+    pub max_tile: i64,
+}
+
+impl PallasTileModule {
+    pub fn new() -> PallasTileModule {
+        PallasTileModule { max_tile: 128 }
+    }
+
+    fn transform(&self, s: &mut Schedule, block_name: &str) -> SchResult<()> {
+        let b = s.get_block(block_name)?;
+        let loops = s.get_loops(b)?;
+        // Expect (batch) i j k with batch possibly extent-1.
+        let mut work: Vec<LoopRv> = Vec::new();
+        for &l in &loops {
+            let item = s.loop_item(l)?;
+            if s.prog.loop_data(item).extent > 1 {
+                work.push(l);
+            }
+        }
+        if work.len() != 3 {
+            return Err(crate::schedule::ScheduleError::Unsupported(format!(
+                "pallas tile space expects (i, j, k), got {} loops",
+                work.len()
+            )));
+        }
+        let mut outers = Vec::new();
+        let mut inners = Vec::new();
+        for &l in &work {
+            let t = s.sample_perfect_tile(l, 2, self.max_tile)?;
+            let parts = s.split(l, &[FactorArg::Rv(t[0].0), FactorArg::Rv(t[1].0)])?;
+            outers.push(parts[0]);
+            inners.push(parts[1]);
+        }
+        // i0 j0 k0 i1 j1 k1 — tile_of() reads the last three extents.
+        let order: Vec<LoopRv> = outers.into_iter().chain(inners).collect();
+        s.reorder(&order)?;
+        Ok(())
+    }
+}
+
+impl Default for PallasTileModule {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl TransformModule for PallasTileModule {
+    fn name(&self) -> &'static str {
+        "pallas-tile"
+    }
+
+    fn apply(&self, sch: Schedule, block_name: &str, _target: &Target) -> Vec<Schedule> {
+        match crate::space::try_transform(&sch, |s| self.transform(s, block_name)) {
+            Some(out) => vec![out],
+            None => vec![sch],
+        }
+    }
+}
+
+/// Real-hardware measurer for the GMM task: snaps the schedule's tile to
+/// the nearest AOT variant and times the actual PJRT executable.
+pub struct PjrtGmmMeasurer {
+    pub runner: PjrtRunner,
+    pub variants: Vec<TileVariant>,
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+    x: Vec<f32>,
+    y: Vec<f32>,
+    n_measured: usize,
+    /// Measurement cache: tile variant -> latency (schedules snapping to
+    /// the same artifact share one timing).
+    cache: HashMap<TileVariant, f64>,
+}
+
+impl PjrtGmmMeasurer {
+    pub fn new(dir: impl Into<PathBuf>, m: usize, n: usize, k: usize) -> Result<PjrtGmmMeasurer> {
+        let dir = dir.into();
+        let variants = scan_variants(&dir);
+        if variants.is_empty() {
+            return Err(anyhow!(
+                "no gmm artifacts under {} — run `make artifacts`",
+                dir.display()
+            ));
+        }
+        let runner = PjrtRunner::new(dir)?;
+        let x = (0..m * k).map(|i| ((i % 17) as f32 - 8.0) * 0.1).collect();
+        let y = (0..k * n).map(|i| ((i % 11) as f32 - 5.0) * 0.1).collect();
+        Ok(PjrtGmmMeasurer {
+            runner,
+            variants,
+            m,
+            n,
+            k,
+            x,
+            y,
+            n_measured: 0,
+            cache: HashMap::new(),
+        })
+    }
+
+    /// Nearest artifact variant in log-tile space.
+    pub fn snap(&self, t: TileVariant) -> TileVariant {
+        *self
+            .variants
+            .iter()
+            .min_by(|a, b| {
+                let d = |v: &TileVariant| {
+                    let dl = |x: i64, y: i64| ((x as f64).ln() - (y as f64).ln()).abs();
+                    dl(v.bm, t.bm) + dl(v.bn, t.bn) + dl(v.bk, t.bk)
+                };
+                d(a).partial_cmp(&d(b)).unwrap()
+            })
+            .expect("non-empty variants")
+    }
+
+    pub fn time_variant(&mut self, v: TileVariant) -> Result<f64> {
+        if let Some(&l) = self.cache.get(&v) {
+            return Ok(l);
+        }
+        let lat = self.runner.time_artifact(
+            &v.artifact_name(),
+            (&self.x, &[self.m as i64, self.k as i64]),
+            (&self.y, &[self.k as i64, self.n as i64]),
+            2,
+            9,
+        )?;
+        self.cache.insert(v, lat);
+        Ok(lat)
+    }
+}
+
+impl Measurer for PjrtGmmMeasurer {
+    fn measure(&mut self, prog: &Program) -> Option<f64> {
+        let t = tile_of(prog)?;
+        let v = self.snap(t);
+        self.n_measured += 1;
+        self.time_variant(v).ok()
+    }
+
+    fn count(&self) -> usize {
+        self.n_measured
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn variant_name_roundtrip() {
+        let v = TileVariant { bm: 32, bn: 32, bk: 64 };
+        assert_eq!(v.artifact_name(), "gmm_bm32_bn32_bk64.hlo.txt");
+    }
+
+    #[test]
+    fn scan_parses_filenames() {
+        let dir = std::env::temp_dir().join("ms_scan_test");
+        let _ = std::fs::create_dir_all(&dir);
+        std::fs::write(dir.join("gmm_bm16_bn16_bk32.hlo.txt"), "x").unwrap();
+        std::fs::write(dir.join("fused_dense.hlo.txt"), "x").unwrap();
+        std::fs::write(dir.join("junk.txt"), "x").unwrap();
+        let vs = scan_variants(&dir);
+        assert_eq!(vs, vec![TileVariant { bm: 16, bn: 16, bk: 32 }]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn tile_module_produces_readable_tiles() {
+        let prog = crate::workloads::matmul(1, 128, 128, 128);
+        let m = PallasTileModule::new();
+        let sch = m
+            .apply(
+                crate::schedule::Schedule::new(prog, 3),
+                "matmul",
+                &Target::cpu_avx512(),
+            )
+            .pop()
+            .unwrap();
+        let t = tile_of(&sch.prog).unwrap();
+        assert_eq!(128 % t.bm, 0);
+        assert_eq!(128 % t.bn, 0);
+        assert_eq!(128 % t.bk, 0);
+        assert!(t.bm <= 128 && t.bn <= 128 && t.bk <= 128);
+    }
+
+    // PJRT-backed tests live in rust/tests/pjrt_integration.rs (they need
+    // `make artifacts` to have run).
+}

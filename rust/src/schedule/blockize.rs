@@ -1,0 +1,314 @@
+//! Blockize and tensorize: wrap a loop subtree into an opaque block and map
+//! it onto a hardware tensor intrinsic.
+//!
+//! Hardware adaptation note (DESIGN.md §Hardware-Adaptation): the paper's
+//! `Use-Tensor-Core` targets CUDA WMMA 16x16x16 fragments; we register that
+//! intrinsic for the GPU-flavoured target and an MXU-flavoured 128x128x128
+//! systolic intrinsic for the TPU notes. Tensorize validates that the
+//! blockized subtree is a matmul-shaped reduction with matching extents.
+
+use std::collections::HashMap;
+
+use crate::schedule::{BlockRv, LoopRef, LoopRv, SchResult, Schedule, ScheduleError};
+use crate::tir::analysis::is_ancestor;
+use crate::tir::{AExpr, BlockBody, BlockData, BinOp, Region, VarId};
+use crate::trace::Inst;
+
+/// A registered tensor intrinsic.
+#[derive(Debug, Clone)]
+pub struct TensorIntrin {
+    pub name: &'static str,
+    /// (m, n, k) dims of the matmul fragment.
+    pub dims: (i64, i64, i64),
+    /// Throughput multiplier the simulator credits relative to scalar FMA.
+    pub speedup: f64,
+}
+
+/// Intrinsic registry. `wmma_16x16x16`: CUDA TensorCore fragment;
+/// `mxu_128x128`: TPU MXU systolic tile (see DESIGN.md).
+pub fn intrin_registry() -> Vec<TensorIntrin> {
+    vec![
+        TensorIntrin {
+            name: "wmma_16x16x16",
+            dims: (16, 16, 16),
+            speedup: 8.0,
+        },
+        TensorIntrin {
+            name: "mxu_128x128",
+            dims: (128, 128, 128),
+            speedup: 16.0,
+        },
+        TensorIntrin {
+            name: "dot_4x4",
+            dims: (4, 4, 4),
+            speedup: 2.0,
+        },
+    ]
+}
+
+/// Look up an intrinsic by name.
+pub fn find_intrin(name: &str) -> Option<TensorIntrin> {
+    intrin_registry().into_iter().find(|i| i.name == name)
+}
+
+impl Schedule {
+    /// Convert the subtree rooted at `loop_rv` into a single opaque block
+    /// carrying aggregate statistics (flops, region footprints).
+    pub fn blockize(&mut self, loop_rv: LoopRv) -> SchResult<BlockRv> {
+        let loop_item = self.loop_item(loop_rv)?;
+        let blk = self.blockize_impl(loop_item)?;
+        let rv = self.push_block(blk);
+        self.record(Inst::Blockize {
+            loop_rv: loop_rv.0,
+            out: rv.0,
+        });
+        Ok(rv)
+    }
+
+    pub(crate) fn blockize_impl(&mut self, loop_item: usize) -> SchResult<usize> {
+        let inner_blocks = self.prog.blocks_under(loop_item);
+        if inner_blocks.is_empty() {
+            return Err(ScheduleError::Unsupported("blockize of empty subtree".into()));
+        }
+        // Loops inside the subtree (including the root loop).
+        let inner_loops: Vec<usize> = self
+            .prog
+            .preorder()
+            .into_iter()
+            .filter(|&l| self.prog.is_loop(l) && is_ancestor(&self.prog, loop_item, l))
+            .collect();
+        let sweep = crate::tir::analysis::sweep_env(&self.prog, &inner_loops);
+        let mut pin_zero: HashMap<VarId, AExpr> = HashMap::new();
+        for &l in &inner_loops {
+            pin_zero.insert(self.prog.loop_data(l).var, AExpr::Const(0));
+        }
+        // Aggregate flops + regions at the blockized boundary.
+        let mut flops = 0.0;
+        let mut reads: Vec<Region> = Vec::new();
+        let mut writes: Vec<Region> = Vec::new();
+        let mut has_reduce = false;
+        for &b in &inner_blocks {
+            let bd = self.prog.block_data(b);
+            has_reduce |= bd.is_reduction();
+            // Trip count of loops between (inclusive) loop_item and block.
+            let trips: i64 = self
+                .prog
+                .loops_above(b)
+                .into_iter()
+                .filter(|&l| is_ancestor(&self.prog, loop_item, l))
+                .map(|l| self.prog.loop_data(l).extent)
+                .product();
+            flops += trips as f64 * bd.body.flops();
+            let mut iter_ranges: HashMap<VarId, (i64, i64)> = HashMap::new();
+            let mut iter_binding: HashMap<VarId, AExpr> = HashMap::new();
+            for iv in &bd.iters {
+                iter_ranges.insert(iv.var, iv.binding.interval(&sweep));
+                iter_binding.insert(iv.var, iv.binding.clone());
+            }
+            for (src, dst) in [(&bd.reads, &mut reads), (&bd.writes, &mut writes)] {
+                for r in src {
+                    let ranges: Vec<(AExpr, i64)> = r
+                        .ranges
+                        .iter()
+                        .map(|(start, extent)| {
+                            let width = start.width(&iter_ranges) + extent - 1;
+                            let offset = start.subst(&iter_binding).subst(&pin_zero);
+                            (offset, width)
+                        })
+                        .collect();
+                    // Merge with an existing region on the same buffer.
+                    if let Some(existing) = dst.iter_mut().find(|e| e.buffer == r.buffer) {
+                        for (d, (_, w)) in ranges.iter().enumerate() {
+                            if d < existing.ranges.len() {
+                                existing.ranges[d].1 = existing.ranges[d].1.max(*w);
+                            }
+                        }
+                    } else {
+                        dst.push(Region {
+                            buffer: r.buffer,
+                            ranges,
+                        });
+                    }
+                }
+            }
+        }
+        // Intermediate buffers written and read entirely inside the subtree
+        // stay listed; that is fine for cost purposes.
+        let mut blk = BlockData::new(format!(
+            "{}_o",
+            self.prog.block_data(inner_blocks[0]).name
+        ));
+        blk.reads = reads;
+        blk.writes = writes;
+        blk.body = BlockBody::Opaque {
+            flops_per_instance: flops,
+        };
+        if has_reduce {
+            blk.annotations
+                .insert("blockized_reduction".into(), "1".into());
+        }
+        // Record the inner extents for tensorize validation.
+        let extents: Vec<String> = inner_loops
+            .iter()
+            .map(|&l| self.prog.loop_data(l).extent.to_string())
+            .collect();
+        blk.annotations
+            .insert("blockized_extents".into(), extents.join("x"));
+        let blk_item = self.prog.alloc_block(blk);
+        // Replace the subtree with the opaque block.
+        let parent = self.prog.items[loop_item].parent;
+        let pos = match parent {
+            Some(p) => self.prog.items[p]
+                .children
+                .iter()
+                .position(|&c| c == loop_item)
+                .unwrap(),
+            None => self
+                .prog
+                .roots
+                .iter()
+                .position(|&c| c == loop_item)
+                .unwrap(),
+        };
+        self.prog.remove_subtree(loop_item);
+        self.prog.attach_at(blk_item, parent, pos);
+        Ok(blk_item)
+    }
+
+    /// Tensorize: blockize the subtree at `loop_rv` and mark it as executed
+    /// by the named tensor intrinsic. Validates the fragment shape.
+    pub fn tensorize(&mut self, loop_rv: LoopRv, intrin_name: &str) -> SchResult<BlockRv> {
+        let intrin = find_intrin(intrin_name).ok_or_else(|| {
+            ScheduleError::TensorizeMismatch(format!("unknown intrinsic {intrin_name}"))
+        })?;
+        let loop_item = match self.loop_ref(loop_rv) {
+            LoopRef::Item(i) => i,
+            _ => return Err(ScheduleError::NotALoop("tensorize sentinel".into())),
+        };
+        if !self.prog.items[loop_item].alive {
+            return Err(ScheduleError::StaleHandle("tensorize loop".into()));
+        }
+        // Validate: the subtree must contain exactly one reduction block
+        // whose inner loops match the intrinsic dims (m, n, k) in order.
+        let inner_blocks = self.prog.blocks_under(loop_item);
+        if inner_blocks.len() != 1 {
+            return Err(ScheduleError::TensorizeMismatch(format!(
+                "expected one block under the tensorized loop, found {}",
+                inner_blocks.len()
+            )));
+        }
+        let bd = self.prog.block_data(inner_blocks[0]);
+        let is_matmul = matches!(&bd.body, BlockBody::Reduce { op: BinOp::Add, rhs, .. }
+            if matches!(rhs, crate::tir::CExpr::Bin(BinOp::Mul, _, _)));
+        if !is_matmul {
+            return Err(ScheduleError::TensorizeMismatch(
+                "tensorize target is not a multiply-accumulate reduction".into(),
+            ));
+        }
+        let inner_loops: Vec<usize> = self
+            .prog
+            .preorder()
+            .into_iter()
+            .filter(|&l| self.prog.is_loop(l) && is_ancestor(&self.prog, loop_item, l))
+            .collect();
+        let extents: Vec<i64> = inner_loops
+            .iter()
+            .map(|&l| self.prog.loop_data(l).extent)
+            .collect();
+        let (m, n, k) = intrin.dims;
+        if extents != vec![m, n, k] {
+            return Err(ScheduleError::TensorizeMismatch(format!(
+                "loop extents {extents:?} do not match intrinsic {:?}",
+                intrin.dims
+            )));
+        }
+        let blk = self.blockize_impl(loop_item)?;
+        self.prog
+            .block_data_mut(blk)
+            .annotate("tensor_intrin", intrin_name);
+        let rv = self.push_block(blk);
+        self.record(Inst::Tensorize {
+            loop_rv: loop_rv.0,
+            intrin: intrin_name.to_string(),
+            out: rv.0,
+        });
+        Ok(rv)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::testutil::matmul_prog;
+    use crate::schedule::Schedule;
+    use crate::tir::analysis::program_flops;
+    use crate::trace::FactorArg;
+
+    #[test]
+    fn blockize_preserves_total_flops() {
+        let mut s = Schedule::new(matmul_prog(64, 32), 0);
+        let before = program_flops(&s.prog);
+        let b = s.get_block("matmul").unwrap();
+        let loops = s.get_loops(b).unwrap();
+        // Split i and blockize at the inner i loop.
+        let parts = s
+            .split(loops[0], &[FactorArg::Lit(4), FactorArg::Lit(16)])
+            .unwrap();
+        let ob = s.blockize(parts[1]).unwrap();
+        s.prog.check_integrity().unwrap();
+        assert_eq!(program_flops(&s.prog), before);
+        let od = s.prog.block_data(s.block(ob).unwrap()).clone();
+        assert!(matches!(od.body, BlockBody::Opaque { .. }));
+        // Opaque block covers a 16-row slab of A and C, all of B.
+        assert_eq!(od.reads.len(), 2);
+        assert_eq!(od.writes.len(), 1);
+        assert_eq!(od.writes[0].ranges[0].1, 16); // 16 rows of C
+        assert_eq!(od.writes[0].ranges[1].1, 64); // all 64 cols
+    }
+
+    #[test]
+    fn tensorize_matching_fragment() {
+        // 64x64x32 matmul: tile to 16x16x16 fragments then tensorize.
+        let mut s = Schedule::new(matmul_prog(64, 32), 0);
+        let b = s.get_block("matmul").unwrap();
+        let loops = s.get_loops(b).unwrap();
+        let i = s
+            .split(loops[0], &[FactorArg::Lit(4), FactorArg::Lit(16)])
+            .unwrap();
+        let j = s
+            .split(loops[1], &[FactorArg::Lit(4), FactorArg::Lit(16)])
+            .unwrap();
+        let k = s
+            .split(loops[2], &[FactorArg::Lit(2), FactorArg::Lit(16)])
+            .unwrap();
+        // reorder to i0 j0 k0 i1 j1 k1
+        s.reorder(&[i[0], j[0], k[0], i[1], j[1], k[1]]).unwrap();
+        let frag = s.tensorize(i[1], "wmma_16x16x16").unwrap();
+        s.prog.check_integrity().unwrap();
+        let fd = s.prog.block_data(s.block(frag).unwrap()).clone();
+        assert_eq!(fd.annotations["tensor_intrin"], "wmma_16x16x16");
+        // flops preserved through blockize.
+        assert_eq!(program_flops(&s.prog), 64.0 * 64.0 * 32.0 * 2.0);
+    }
+
+    #[test]
+    fn tensorize_wrong_shape_rejected() {
+        let mut s = Schedule::new(matmul_prog(64, 32), 0);
+        let b = s.get_block("matmul").unwrap();
+        let loops = s.get_loops(b).unwrap();
+        // whole nest is 64x64x32, not a 16x16x16 fragment
+        let e = s.tensorize(loops[0], "wmma_16x16x16");
+        assert!(matches!(e, Err(ScheduleError::TensorizeMismatch(_))));
+    }
+
+    #[test]
+    fn tensorize_unknown_intrin_rejected() {
+        let mut s = Schedule::new(matmul_prog(64, 32), 0);
+        let b = s.get_block("matmul").unwrap();
+        let loops = s.get_loops(b).unwrap();
+        assert!(matches!(
+            s.tensorize(loops[0], "nope"),
+            Err(ScheduleError::TensorizeMismatch(_))
+        ));
+    }
+}

@@ -1,0 +1,369 @@
+//! Caching primitives: cache-read, cache-write, set-scope, storage-align.
+//!
+//! `cache-read` stages a consumed buffer into a faster storage scope via a
+//! fresh copy block (which is then usually moved inward with `compute-at`);
+//! `cache-write` stages a produced buffer symmetrically.
+
+use crate::schedule::{BlockRv, SchResult, Schedule, ScheduleError};
+use crate::tir::{
+    AExpr, BlockBody, BlockData, Buffer, CExpr, IterKind, IterVar, LoopData, Region, Scope,
+};
+use crate::trace::Inst;
+
+impl Schedule {
+    /// Create a block that stages `block`'s `read_idx`-th read buffer into
+    /// `scope`, and redirect the consumer to the staged copy. The copy block
+    /// initially covers the whole buffer at the program root, immediately
+    /// before the consumer's nest; move it inward with `compute-at`.
+    pub fn cache_read(&mut self, block: BlockRv, read_idx: usize, scope: &str) -> SchResult<BlockRv> {
+        let item = self.block(block)?;
+        let bd = self.prog.block_data(item).clone();
+        let region = bd
+            .reads
+            .get(read_idx)
+            .ok_or_else(|| {
+                ScheduleError::InvalidDecision(format!(
+                    "cache-read index {read_idx} out of {} reads",
+                    bd.reads.len()
+                ))
+            })?
+            .clone();
+        let src = region.buffer;
+        let src_buf = self.prog.buffers[src].clone();
+        let cached = self.prog.add_buffer(Buffer {
+            name: format!("{}_{}", src_buf.name, Scope::parse(scope).name().replace('.', "_")),
+            shape: src_buf.shape.clone(),
+            dtype: src_buf.dtype,
+            scope: Scope::parse(scope),
+            align: src_buf.align,
+            inlined: false,
+        });
+        // Copy block: one spatial iter per dim over the full buffer.
+        let copy = self.build_copy_block(
+            &format!("{}_cache", src_buf.name),
+            src,
+            cached,
+            &src_buf.shape,
+        );
+        // Insert the copy nest at root level before the consumer's root.
+        let consumer_root = self.prog.root_of(item);
+        let pos = self
+            .prog
+            .roots
+            .iter()
+            .position(|&r| r == consumer_root)
+            .unwrap_or(0);
+        self.attach_nest_at_root(copy, pos);
+        // Redirect the consumer: reads + body loads of src -> cached.
+        {
+            let bd_mut = self.prog.block_data_mut(item);
+            if let Some(r) = bd_mut.reads.get_mut(read_idx) {
+                r.buffer = cached;
+            }
+            let redirect = |e: &CExpr| {
+                e.map_loads(&mut |b, idx| {
+                    if b == src {
+                        CExpr::Load(cached, idx.to_vec())
+                    } else {
+                        CExpr::Load(b, idx.to_vec())
+                    }
+                })
+            };
+            bd_mut.body = match &bd_mut.body {
+                BlockBody::Assign { expr } => BlockBody::Assign {
+                    expr: redirect(expr),
+                },
+                BlockBody::Reduce { init, op, rhs } => BlockBody::Reduce {
+                    init: redirect(init),
+                    op: *op,
+                    rhs: redirect(rhs),
+                },
+                BlockBody::Opaque { flops_per_instance } => BlockBody::Opaque {
+                    flops_per_instance: *flops_per_instance,
+                },
+            };
+            // Other reads of the same buffer also redirect (matches TVM,
+            // which redirects the consumer block wholesale).
+            for r in bd_mut.reads.iter_mut() {
+                if r.buffer == src {
+                    r.buffer = cached;
+                }
+            }
+        }
+        let rv = self.push_block(copy);
+        self.record(Inst::CacheRead {
+            block: block.0,
+            read_idx,
+            scope: scope.to_string(),
+            out: rv.0,
+        });
+        Ok(rv)
+    }
+
+    /// Create a block that copies `block`'s `write_idx`-th written buffer
+    /// from a staged `scope` copy back to its original storage; `block` now
+    /// writes the staged copy.
+    pub fn cache_write(&mut self, block: BlockRv, write_idx: usize, scope: &str) -> SchResult<BlockRv> {
+        let item = self.block(block)?;
+        let bd = self.prog.block_data(item).clone();
+        let region = bd
+            .writes
+            .get(write_idx)
+            .ok_or_else(|| {
+                ScheduleError::InvalidDecision(format!(
+                    "cache-write index {write_idx} out of {} writes",
+                    bd.writes.len()
+                ))
+            })?
+            .clone();
+        let dst = region.buffer;
+        let dst_buf = self.prog.buffers[dst].clone();
+        let staged = self.prog.add_buffer(Buffer {
+            name: format!("{}_{}", dst_buf.name, Scope::parse(scope).name().replace('.', "_")),
+            shape: dst_buf.shape.clone(),
+            dtype: dst_buf.dtype,
+            scope: Scope::parse(scope),
+            align: dst_buf.align,
+            inlined: false,
+        });
+        // Producer now writes the staged buffer.
+        {
+            let bd_mut = self.prog.block_data_mut(item);
+            for w in bd_mut.writes.iter_mut() {
+                if w.buffer == dst {
+                    w.buffer = staged;
+                }
+            }
+        }
+        // Copy block staged -> dst, after the producer's nest.
+        let copy = self.build_copy_block(
+            &format!("{}_writeback", dst_buf.name),
+            staged,
+            dst,
+            &dst_buf.shape,
+        );
+        let producer_root = self.prog.root_of(item);
+        let pos = self
+            .prog
+            .roots
+            .iter()
+            .position(|&r| r == producer_root)
+            .map(|p| p + 1)
+            .unwrap_or(self.prog.roots.len());
+        self.attach_nest_at_root(copy, pos);
+        let rv = self.push_block(copy);
+        self.record(Inst::CacheWrite {
+            block: block.0,
+            write_idx,
+            scope: scope.to_string(),
+            out: rv.0,
+        });
+        Ok(rv)
+    }
+
+    /// Build `dst[i...] = src[i...]` over `shape`, returning the block item
+    /// (loops not yet attached; see `attach_nest_at_root`).
+    fn build_copy_block(&mut self, name: &str, src: usize, dst: usize, shape: &[i64]) -> usize {
+        let mut iters = Vec::new();
+        let mut loops = Vec::new();
+        for (d, &extent) in shape.iter().enumerate() {
+            let lv = self.prog.fresh_var(&format!("c{d}_"));
+            let bv = self.prog.fresh_var(&format!("cc{d}_"));
+            loops.push(self.prog.alloc_loop(LoopData::new(lv, extent)));
+            iters.push(IterVar {
+                var: bv,
+                extent,
+                kind: IterKind::Spatial,
+                binding: AExpr::Var(lv),
+            });
+        }
+        let idx: Vec<AExpr> = iters.iter().map(|iv| AExpr::Var(iv.var)).collect();
+        let mut blk = BlockData::new(name);
+        blk.reads = vec![Region::point(src, idx.clone())];
+        blk.writes = vec![Region::point(dst, idx.clone())];
+        blk.body = BlockBody::Assign {
+            expr: CExpr::Load(src, idx),
+        };
+        blk.iters = iters;
+        let blk = self.prog.alloc_block(blk);
+        // Chain loops; remember them on the side via parent links.
+        let mut parent: Option<usize> = None;
+        for &l in &loops {
+            if let Some(p) = parent {
+                self.prog.items[l].parent = Some(p);
+                self.prog.items[p].children.push(l);
+            }
+            parent = Some(l);
+        }
+        if let Some(p) = parent {
+            self.prog.items[blk].parent = Some(p);
+            self.prog.items[p].children.push(blk);
+        }
+        blk
+    }
+
+    /// Attach the (pre-linked) nest containing `block` at root position `pos`.
+    fn attach_nest_at_root(&mut self, block: usize, pos: usize) {
+        let mut top = block;
+        while let Some(p) = self.prog.items[top].parent {
+            top = p;
+        }
+        self.prog.roots.insert(pos.min(self.prog.roots.len()), top);
+    }
+
+    /// Set the storage scope of the buffer written by `block` at `write_idx`.
+    pub fn set_scope(&mut self, block: BlockRv, write_idx: usize, scope: &str) -> SchResult<()> {
+        let item = self.block(block)?;
+        let buf = self
+            .prog
+            .block_data(item)
+            .writes
+            .get(write_idx)
+            .map(|r| r.buffer)
+            .ok_or_else(|| ScheduleError::InvalidDecision("set-scope write index".into()))?;
+        if self.prog.params.contains(&buf) {
+            return Err(ScheduleError::Unsupported(
+                "cannot change scope of a parameter buffer".into(),
+            ));
+        }
+        self.prog.buffers[buf].scope = Scope::parse(scope);
+        self.record(Inst::SetScope {
+            block: block.0,
+            write_idx,
+            scope: scope.to_string(),
+        });
+        Ok(())
+    }
+
+    /// Set an alignment requirement on a buffer dimension (bank-conflict
+    /// avoidance on GPU shared memory; cacheline padding on CPU).
+    pub fn storage_align(
+        &mut self,
+        block: BlockRv,
+        write_idx: usize,
+        axis: usize,
+        factor: i64,
+    ) -> SchResult<()> {
+        let item = self.block(block)?;
+        let buf = self
+            .prog
+            .block_data(item)
+            .writes
+            .get(write_idx)
+            .map(|r| r.buffer)
+            .ok_or_else(|| ScheduleError::InvalidDecision("storage-align write index".into()))?;
+        if axis >= self.prog.buffers[buf].shape.len() {
+            return Err(ScheduleError::InvalidDecision(format!(
+                "storage-align axis {axis} out of rank"
+            )));
+        }
+        self.prog.buffers[buf].align = factor * self.prog.buffers[buf].dtype.bytes();
+        self.record(Inst::StorageAlign {
+            block: block.0,
+            write_idx,
+            axis,
+            factor,
+        });
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::testutil::matmul_prog;
+    use crate::schedule::Schedule;
+    use crate::tir::analysis::program_flops;
+
+    #[test]
+    fn cache_read_inserts_copy_and_redirects() {
+        let mut s = Schedule::new(matmul_prog(16, 8), 0);
+        let b = s.get_block("matmul").unwrap();
+        let c = s.cache_read(b, 0, "shared").unwrap();
+        s.prog.check_integrity().unwrap();
+        // A new buffer A_shared exists with shared scope.
+        let cached = s
+            .prog
+            .buffers
+            .iter()
+            .find(|bf| bf.name == "A_shared")
+            .unwrap();
+        assert_eq!(cached.scope, Scope::Shared);
+        // Copy block reads A and consumer now reads A_shared.
+        let copy_item = s.block(c).unwrap();
+        assert_eq!(s.prog.block_data(copy_item).name, "A_cache");
+        let mm = s.prog.find_block("matmul").unwrap();
+        let cached_id = s
+            .prog
+            .buffers
+            .iter()
+            .position(|bf| bf.name == "A_shared")
+            .unwrap();
+        assert_eq!(s.prog.block_data(mm).reads[0].buffer, cached_id);
+        // Copy nest precedes the consumer nest at root.
+        assert_eq!(s.prog.roots.len(), 2);
+        assert_eq!(s.prog.root_of(copy_item), s.prog.roots[0]);
+    }
+
+    #[test]
+    fn cache_read_then_compute_at_shrinks_copy() {
+        let mut s = Schedule::new(matmul_prog(16, 8), 0);
+        let b = s.get_block("matmul").unwrap();
+        let loops = s.get_loops(b).unwrap();
+        let c = s.cache_read(b, 0, "shared").unwrap();
+        // Move the copy under matmul's i loop: per i it must stage A[i, 0:8].
+        s.compute_at(c, loops[0]).unwrap();
+        s.prog.check_integrity().unwrap();
+        let copy_item = s.block(c).unwrap();
+        let above = s.prog.loops_above(copy_item);
+        let extents: Vec<i64> = above.iter().map(|&l| s.prog.loop_data(l).extent).collect();
+        assert_eq!(extents, vec![16, 8]); // i loop, then the k-dim copy loop
+    }
+
+    #[test]
+    fn cache_write_stages_output() {
+        let mut s = Schedule::new(matmul_prog(16, 8), 0);
+        let before = program_flops(&s.prog);
+        let b = s.get_block("matmul").unwrap();
+        let wb = s.cache_write(b, 0, "local").unwrap();
+        s.prog.check_integrity().unwrap();
+        let mm = s.prog.find_block("matmul").unwrap();
+        let staged = s
+            .prog
+            .buffers
+            .iter()
+            .position(|bf| bf.name == "C_local")
+            .unwrap();
+        assert_eq!(s.prog.block_data(mm).writes[0].buffer, staged);
+        // Writeback block writes C.
+        let wb_item = s.block(wb).unwrap();
+        assert_eq!(s.prog.block_data(wb_item).writes[0].buffer, 2);
+        // Writeback nest follows the producer nest.
+        assert_eq!(s.prog.roots.len(), 2);
+        assert!(program_flops(&s.prog) >= before);
+    }
+
+    #[test]
+    fn set_scope_on_param_rejected() {
+        let mut s = Schedule::new(matmul_prog(16, 8), 0);
+        let b = s.get_block("matmul").unwrap();
+        assert!(s.set_scope(b, 0, "shared").is_err()); // C is a param
+    }
+
+    #[test]
+    fn storage_align_sets_buffer_alignment() {
+        let mut s = Schedule::new(matmul_prog(16, 8), 0);
+        let b = s.get_block("matmul").unwrap();
+        let c = s.cache_write(b, 0, "shared").unwrap();
+        let _ = c;
+        let mm = s.get_block("matmul").unwrap();
+        s.storage_align(mm, 0, 1, 32).unwrap();
+        let staged = s
+            .prog
+            .buffers
+            .iter()
+            .find(|bf| bf.name == "C_shared")
+            .unwrap();
+        assert_eq!(staged.align, 32 * 4);
+    }
+}

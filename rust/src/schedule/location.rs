@@ -1,0 +1,685 @@
+//! Compute-location primitives: compute-at, reverse-compute-at,
+//! compute-inline, reverse-compute-inline.
+//!
+//! `compute-at` moves a producer block under a loop of its consumer and
+//! shrinks its loop nest to the region the consumer actually needs there
+//! (computed by exact interval analysis of the consumer's read regions).
+//! `compute-inline` substitutes a trivially-written Assign block's
+//! expression into its consumers, eliminating the intermediate buffer.
+
+use std::collections::HashMap;
+
+use crate::schedule::{BlockRv, LoopRef, LoopRv, SchResult, Schedule, ScheduleError};
+use crate::tir::analysis::is_ancestor;
+use crate::tir::{AExpr, BlockBody, CExpr, IterKind, ItemId, LoopData, Region, VarId};
+use crate::trace::Inst;
+
+impl Schedule {
+    /// Move producer `block` under `loop_rv` (a loop of its consumer),
+    /// recomputing its iteration domain to cover exactly the region the
+    /// consumers under that loop require per iteration.
+    pub fn compute_at(&mut self, block: BlockRv, loop_rv: LoopRv) -> SchResult<()> {
+        match self.loop_ref(loop_rv) {
+            LoopRef::Root => {
+                // Leave the block where it is; still record for replay fidelity.
+                self.record(Inst::ComputeAt {
+                    block: block.0,
+                    loop_rv: loop_rv.0,
+                });
+                return Ok(());
+            }
+            LoopRef::Inlined => {
+                let r = self.compute_inline_impl(block);
+                if r.is_ok() {
+                    self.record(Inst::ComputeAt {
+                        block: block.0,
+                        loop_rv: loop_rv.0,
+                    });
+                }
+                return r;
+            }
+            LoopRef::Item(_) => {}
+        }
+        let loop_item = self.loop_item(loop_rv)?;
+        self.compute_at_impl(block, loop_item, /*reverse=*/ false)?;
+        self.record(Inst::ComputeAt {
+            block: block.0,
+            loop_rv: loop_rv.0,
+        });
+        Ok(())
+    }
+
+    /// Move consumer `block` under `loop_rv` (a loop of its producer).
+    /// A `Root` sentinel location is a recorded no-op, so mutating a
+    /// compute-location decision to "root" (un-fuse) stays on-support.
+    pub fn reverse_compute_at(&mut self, block: BlockRv, loop_rv: LoopRv) -> SchResult<()> {
+        if self.loop_ref(loop_rv) == LoopRef::Root {
+            self.record(Inst::ReverseComputeAt {
+                block: block.0,
+                loop_rv: loop_rv.0,
+            });
+            return Ok(());
+        }
+        let loop_item = self.loop_item(loop_rv)?;
+        self.compute_at_impl(block, loop_item, /*reverse=*/ true)?;
+        self.record(Inst::ReverseComputeAt {
+            block: block.0,
+            loop_rv: loop_rv.0,
+        });
+        Ok(())
+    }
+
+    fn compute_at_impl(&mut self, block: BlockRv, target_loop: ItemId, reverse: bool) -> SchResult<()> {
+        let item = self.block(block)?;
+        if is_ancestor(&self.prog, target_loop, item) {
+            return Err(ScheduleError::InvalidComputeAt(
+                "target loop already encloses the block".into(),
+            ));
+        }
+        // The target must sit in the spatial prefix of its nest: at or
+        // below a reduction loop the block would re-execute per reduction
+        // step (see `compute_location_candidates`).
+        {
+            let mut cur = Some(target_loop);
+            while let Some(l) = cur {
+                if self.prog.is_loop(l) {
+                    match crate::tir::analysis::classify_loop(&self.prog, l) {
+                        crate::tir::analysis::LoopClass::Spatial
+                        | crate::tir::analysis::LoopClass::Unused => {}
+                        c => {
+                            return Err(ScheduleError::InvalidComputeAt(format!(
+                                "target under a {c:?} loop"
+                            )))
+                        }
+                    }
+                }
+                cur = self.prog.items[l].parent;
+            }
+        }
+        let bd = self.prog.block_data(item).clone();
+        if !bd.write_is_trivial() {
+            return Err(ScheduleError::InvalidComputeAt(format!(
+                "block {} write region is not a trivial identity",
+                bd.name
+            )));
+        }
+        let out_buf = bd.writes[0].buffer;
+
+        // Peer blocks under the target loop that link to this block.
+        let peers: Vec<ItemId> = self
+            .prog
+            .blocks_under(target_loop)
+            .into_iter()
+            .filter(|&c| {
+                c != item
+                    && if reverse {
+                        // producer peers: write a buffer we read
+                        self.prog.block_data(c).writes.iter().any(|w| {
+                            bd.reads.iter().any(|r| r.buffer == w.buffer)
+                        })
+                    } else {
+                        // consumer peers: read our output
+                        self.prog
+                            .block_data(c)
+                            .reads
+                            .iter()
+                            .any(|r| r.buffer == out_buf)
+                    }
+            })
+            .collect();
+        if peers.is_empty() {
+            return Err(ScheduleError::InvalidComputeAt(format!(
+                "no {} of {} under the target loop",
+                if reverse { "producer" } else { "consumer" },
+                bd.name
+            )));
+        }
+        // The block's own loop nest must contain only this block (exclusive
+        // ownership), so detaching it cannot strand other computation.
+        let own_root = self.prog.root_of(item);
+        if self.prog.blocks_under(own_root).len() != 1 {
+            return Err(ScheduleError::InvalidComputeAt(format!(
+                "block {} shares its loop nest with other blocks",
+                bd.name
+            )));
+        }
+
+        // Required region of `out_buf` per one iteration of `target_loop`:
+        // loops strictly inside the target sweep, everything else pinned.
+        let inner_loops: Vec<ItemId> = self
+            .prog
+            .preorder()
+            .into_iter()
+            .filter(|&l| {
+                self.prog.is_loop(l) && l != target_loop && is_ancestor(&self.prog, target_loop, l)
+            })
+            .collect();
+        let sweep = crate::tir::analysis::sweep_env(&self.prog, &inner_loops);
+        // Vars of inner loops, for offset computation (pin them to 0).
+        let mut pin_zero: HashMap<VarId, AExpr> = HashMap::new();
+        for &l in &inner_loops {
+            pin_zero.insert(self.prog.loop_data(l).var, AExpr::Const(0));
+        }
+
+        // Per output-buffer dim: needed extent + symbolic offset.
+        let ndim = bd.writes[0].ranges.len();
+        let mut need_extent = vec![1i64; ndim];
+        let mut offsets: Vec<Option<AExpr>> = vec![None; ndim];
+        for &peer in &peers {
+            let pd = self.prog.block_data(peer);
+            // Map peer iter vars to their binding intervals under the sweep.
+            let mut iter_ranges: HashMap<VarId, (i64, i64)> = HashMap::new();
+            let mut iter_binding: HashMap<VarId, AExpr> = HashMap::new();
+            for iv in &pd.iters {
+                iter_ranges.insert(iv.var, iv.binding.interval(&sweep));
+                iter_binding.insert(iv.var, iv.binding.clone());
+            }
+            let regions = if reverse { &pd.writes } else { &pd.reads };
+            for region in regions {
+                let relevant = if reverse {
+                    bd.reads.iter().any(|r| r.buffer == region.buffer)
+                } else {
+                    region.buffer == out_buf
+                };
+                if !relevant || region.ranges.len() != ndim {
+                    continue;
+                }
+                for (d, (start, extent)) in region.ranges.iter().enumerate() {
+                    let width = start.width(&iter_ranges) + extent - 1;
+                    need_extent[d] = need_extent[d].max(width);
+                    if offsets[d].is_none() {
+                        // Offset = start with iter vars replaced by their
+                        // bindings, inner loop vars pinned to zero.
+                        let over_loops = start.subst(&iter_binding);
+                        offsets[d] = Some(over_loops.subst(&pin_zero));
+                    }
+                }
+            }
+        }
+
+        // Detach the block's old nest entirely.
+        self.prog.detach(item); // unlink block from old innermost loop
+        let old_root = own_root;
+        if old_root != item {
+            self.prog.remove_subtree(old_root);
+        }
+        self.prog.items[item].alive = true; // keep the block itself alive
+
+        // Build the new nest under target_loop.
+        // Spatial iters follow the needed region; reduce iters keep full extent.
+        let mut parent = target_loop;
+        // Insert position: producers go before the first peer subtree,
+        // consumers after the last.
+        let pos = if reverse {
+            self.prog.items[target_loop].children.len()
+        } else {
+            0
+        };
+        let mut first_attach_pos = Some(pos);
+        let mut new_bindings: HashMap<VarId, AExpr> = HashMap::new();
+        let spatial_vars: Vec<VarId> = bd.spatial_iters().map(|iv| iv.var).collect();
+        for (d, &sv) in spatial_vars.iter().enumerate() {
+            if d >= ndim {
+                break;
+            }
+            let off = offsets[d].clone().unwrap_or(AExpr::Const(0));
+            if need_extent[d] > 1 {
+                let lv = self.prog.fresh_var("ca");
+                let l = self.prog.alloc_loop(LoopData::new(lv, need_extent[d]));
+                match first_attach_pos.take() {
+                    Some(p) => self.prog.attach_at(l, Some(parent), p),
+                    None => self.prog.attach(l, Some(parent)),
+                }
+                parent = l;
+                new_bindings.insert(sv, off.add(AExpr::Var(lv)));
+            } else {
+                new_bindings.insert(sv, off);
+            }
+        }
+        for iv in bd.iters.iter().filter(|iv| iv.kind == IterKind::Reduce) {
+            let lv = self.prog.fresh_var("cr");
+            let l = self.prog.alloc_loop(LoopData::new(lv, iv.extent));
+            match first_attach_pos.take() {
+                Some(p) => self.prog.attach_at(l, Some(parent), p),
+                None => self.prog.attach(l, Some(parent)),
+            }
+            parent = l;
+            new_bindings.insert(iv.var, AExpr::Var(lv));
+        }
+        // If no loops were created at all, attach the block directly.
+        match first_attach_pos.take() {
+            Some(p) => self.prog.attach_at(item, Some(parent), p),
+            None => self.prog.attach(item, Some(parent)),
+        }
+        // Update bindings and (for spatial) extents.
+        let bd_mut = self.prog.block_data_mut(item);
+        for iv in &mut bd_mut.iters {
+            if let Some(b) = new_bindings.get(&iv.var) {
+                iv.binding = b.clone();
+            }
+            if iv.kind == IterKind::Spatial {
+                if let Some(d) = spatial_vars.iter().position(|&v| v == iv.var) {
+                    if d < ndim {
+                        iv.extent = need_extent[d];
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Inline a trivially-written Assign block into all its consumers,
+    /// eliminating the intermediate buffer.
+    pub fn compute_inline(&mut self, block: BlockRv) -> SchResult<()> {
+        self.compute_inline_impl(block)?;
+        self.record(Inst::ComputeInline { block: block.0 });
+        Ok(())
+    }
+
+    pub(crate) fn compute_inline_impl(&mut self, block: BlockRv) -> SchResult<()> {
+        let item = self.block(block)?;
+        let bd = self.prog.block_data(item).clone();
+        let expr = match &bd.body {
+            BlockBody::Assign { expr } => expr.clone(),
+            _ => {
+                return Err(ScheduleError::NotInlineable(format!(
+                    "block {} is not a simple assignment",
+                    bd.name
+                )))
+            }
+        };
+        if !bd.write_is_trivial() {
+            return Err(ScheduleError::NotInlineable(format!(
+                "block {} write is not a trivial identity",
+                bd.name
+            )));
+        }
+        let out_buf = bd.writes[0].buffer;
+        if self.prog.params.contains(&out_buf) {
+            return Err(ScheduleError::NotInlineable(format!(
+                "block {} writes a parameter buffer",
+                bd.name
+            )));
+        }
+        let consumers = self.prog.readers_of(out_buf);
+        let consumers: Vec<ItemId> = consumers.into_iter().filter(|&c| c != item).collect();
+        if consumers.is_empty() {
+            return Err(ScheduleError::NotInlineable(format!(
+                "block {} has no consumers",
+                bd.name
+            )));
+        }
+        // Exclusive loop nest required so we can delete it.
+        let own_root = self.prog.root_of(item);
+        if self.prog.blocks_under(own_root).len() != 1 {
+            return Err(ScheduleError::NotInlineable(format!(
+                "block {} shares its loop nest",
+                bd.name
+            )));
+        }
+        let spatial_vars: Vec<VarId> = bd.spatial_iters().map(|iv| iv.var).collect();
+        for &c in &consumers {
+            let cd = self.prog.block_data(c).clone();
+            // Rewrite loads of out_buf in the consumer body.
+            let new_body = match &cd.body {
+                BlockBody::Assign { expr: ce } => BlockBody::Assign {
+                    expr: inline_into(ce, out_buf, &spatial_vars, &expr),
+                },
+                BlockBody::Reduce { init, op, rhs } => BlockBody::Reduce {
+                    init: inline_into(init, out_buf, &spatial_vars, &expr),
+                    op: *op,
+                    rhs: inline_into(rhs, out_buf, &spatial_vars, &expr),
+                },
+                BlockBody::Opaque { .. } => {
+                    return Err(ScheduleError::NotInlineable(
+                        "cannot inline into an opaque block".into(),
+                    ))
+                }
+            };
+            // Rewrite the consumer's read regions: regions on out_buf are
+            // replaced by the producer's reads with indices substituted.
+            let mut new_reads: Vec<Region> = Vec::new();
+            for r in &cd.reads {
+                if r.buffer != out_buf {
+                    new_reads.push(r.clone());
+                    continue;
+                }
+                // Substitution: producer spatial var d -> consumer index d.
+                let mut map: HashMap<VarId, AExpr> = HashMap::new();
+                for (d, &v) in spatial_vars.iter().enumerate() {
+                    if d < r.ranges.len() {
+                        map.insert(v, r.ranges[d].0.clone());
+                    }
+                }
+                for pr in &bd.reads {
+                    let ranges = pr
+                        .ranges
+                        .iter()
+                        .map(|(s, e)| (s.subst(&map), *e))
+                        .collect();
+                    new_reads.push(Region {
+                        buffer: pr.buffer,
+                        ranges,
+                    });
+                }
+            }
+            let cd_mut = self.prog.block_data_mut(c);
+            cd_mut.body = new_body;
+            cd_mut.reads = new_reads;
+        }
+        // Remove the producer nest and tombstone the buffer.
+        if own_root == item {
+            self.prog.detach(item);
+            self.prog.items[item].alive = false;
+        } else {
+            self.prog.remove_subtree(own_root);
+        }
+        self.prog.buffers[out_buf].inlined = true;
+        // Invalidate the RV so later uses error out.
+        self.blocks[block.0] = None;
+        Ok(())
+    }
+
+    /// Inline an elementwise consumer block back into its only producer:
+    /// the producer's body is post-composed with the consumer's expression
+    /// and the producer now writes the consumer's output buffer.
+    pub fn reverse_compute_inline(&mut self, block: BlockRv) -> SchResult<()> {
+        let item = self.block(block)?;
+        let cd = self.prog.block_data(item).clone();
+        let cexpr = match &cd.body {
+            BlockBody::Assign { expr } => expr.clone(),
+            _ => {
+                return Err(ScheduleError::NotInlineable(
+                    "reverse-inline target must be a simple assignment".into(),
+                ))
+            }
+        };
+        if !cd.write_is_trivial() {
+            return Err(ScheduleError::NotInlineable(
+                "reverse-inline target write is not trivial".into(),
+            ));
+        }
+        // Must read exactly one distinct buffer, produced by an Assign
+        // producer with a trivial write, at identity indices.
+        let read_bufs: Vec<usize> = {
+            let mut b: Vec<usize> = cd.reads.iter().map(|r| r.buffer).collect();
+            b.dedup();
+            b.sort_unstable();
+            b.dedup();
+            b
+        };
+        if read_bufs.len() != 1 {
+            return Err(ScheduleError::NotInlineable(
+                "reverse-inline target must read exactly one buffer".into(),
+            ));
+        }
+        let in_buf = read_bufs[0];
+        let producers = self.prog.writers_of(in_buf);
+        let producers: Vec<ItemId> = producers.into_iter().filter(|&p| p != item).collect();
+        if producers.len() != 1 {
+            return Err(ScheduleError::NotInlineable(
+                "reverse-inline requires exactly one producer".into(),
+            ));
+        }
+        let prod = producers[0];
+        let pd = self.prog.block_data(prod).clone();
+        if !pd.write_is_trivial() {
+            return Err(ScheduleError::NotInlineable(
+                "producer write is not trivial".into(),
+            ));
+        }
+        // Consumer reads must be identity over its spatial iters, matching
+        // producer dims one-to-one.
+        let c_spatial: Vec<VarId> = cd.spatial_iters().map(|iv| iv.var).collect();
+        for r in cd.reads.iter().filter(|r| r.buffer == in_buf) {
+            if r.ranges.len() != c_spatial.len() {
+                return Err(ScheduleError::NotInlineable(
+                    "reverse-inline read arity mismatch".into(),
+                ));
+            }
+            for (d, (s, e)) in r.ranges.iter().enumerate() {
+                if *e != 1 || *s != AExpr::Var(c_spatial[d]) {
+                    return Err(ScheduleError::NotInlineable(
+                        "reverse-inline read is not identity".into(),
+                    ));
+                }
+            }
+        }
+        // Exclusive nest for the consumer.
+        let own_root = self.prog.root_of(item);
+        if self.prog.blocks_under(own_root).len() != 1 {
+            return Err(ScheduleError::NotInlineable(
+                "reverse-inline target shares its loop nest".into(),
+            ));
+        }
+        let out_buf = cd.writes[0].buffer;
+        let p_spatial: Vec<VarId> = pd.spatial_iters().map(|iv| iv.var).collect();
+        // Map consumer spatial var d -> producer spatial var d.
+        let mut map: HashMap<VarId, AExpr> = HashMap::new();
+        for (cv, pv) in c_spatial.iter().zip(&p_spatial) {
+            map.insert(*cv, AExpr::Var(*pv));
+        }
+        let composed = |inner_value: &CExpr| -> CExpr {
+            cexpr.subst_indices(&map).map_loads(&mut |b, idx| {
+                if b == in_buf {
+                    inner_value.clone()
+                } else {
+                    CExpr::Load(b, idx.to_vec())
+                }
+            })
+        };
+        let new_body = match &pd.body {
+            BlockBody::Assign { expr } => BlockBody::Assign {
+                expr: composed(expr),
+            },
+            BlockBody::Reduce { .. } => {
+                return Err(ScheduleError::NotInlineable(
+                    "cannot reverse-inline into a reduction (use compute-at)".into(),
+                ))
+            }
+            BlockBody::Opaque { .. } => {
+                return Err(ScheduleError::NotInlineable(
+                    "cannot reverse-inline into an opaque block".into(),
+                ))
+            }
+        };
+        {
+            let pd_mut = self.prog.block_data_mut(prod);
+            pd_mut.body = new_body;
+            pd_mut.writes = vec![Region::point(
+                out_buf,
+                p_spatial.iter().map(|&v| AExpr::Var(v)).collect(),
+            )];
+        }
+        if own_root == item {
+            self.prog.detach(item);
+            self.prog.items[item].alive = false;
+        } else {
+            self.prog.remove_subtree(own_root);
+        }
+        self.prog.buffers[in_buf].inlined = true;
+        self.blocks[block.0] = None;
+        self.record(Inst::ReverseComputeInline { block: block.0 });
+        Ok(())
+    }
+}
+
+/// Replace `Load(buf, idx)` in `e` with `producer_expr[spatial -> idx]`.
+fn inline_into(e: &CExpr, buf: usize, spatial: &[VarId], producer_expr: &CExpr) -> CExpr {
+    e.map_loads(&mut |b, idx| {
+        if b == buf {
+            let mut map: HashMap<VarId, AExpr> = HashMap::new();
+            for (d, &v) in spatial.iter().enumerate() {
+                if d < idx.len() {
+                    map.insert(v, idx[d].clone());
+                }
+            }
+            producer_expr.subst_indices(&map)
+        } else {
+            CExpr::Load(b, idx.to_vec())
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::testutil::dense_relu_prog;
+    use crate::schedule::Schedule;
+    use crate::tir::analysis::program_flops;
+    use crate::trace::FactorArg;
+
+    #[test]
+    fn reverse_compute_at_moves_relu_under_dense_loop() {
+        let mut s = Schedule::new(dense_relu_prog(16, 8), 0);
+        let dense = s.get_block("matmul").unwrap();
+        let relu = s.get_block("relu").unwrap();
+        let loops = s.get_loops(dense).unwrap();
+        // Move relu under dense's i loop: relu should get a 16-extent j loop.
+        s.reverse_compute_at(relu, loops[0]).unwrap();
+        s.prog.check_integrity().unwrap();
+        let relu_item = s.block(relu).unwrap();
+        let above = s.prog.loops_above(relu_item);
+        assert_eq!(above[0], s.loop_item(loops[0]).unwrap());
+        // i is fixed by the outer loop: only j (16) remains.
+        let extents: Vec<i64> = above[1..]
+            .iter()
+            .map(|&l| s.prog.loop_data(l).extent)
+            .collect();
+        assert_eq!(extents, vec![16]);
+        // Flops preserved (relu executes 16*16 times total still).
+        assert_eq!(program_flops(&s.prog), 16.0 * 16.0 * 8.0 * 2.0 + 16.0 * 16.0);
+    }
+
+    #[test]
+    fn compute_at_after_split_covers_tile_region() {
+        // Split relu's loops and compute dense at an outer tile loop.
+        let mut s = Schedule::new(dense_relu_prog(16, 8), 0);
+        let dense = s.get_block("matmul").unwrap();
+        let relu = s.get_block("relu").unwrap();
+        let rloops = s.get_loops(relu).unwrap();
+        let ri = s
+            .split(rloops[0], &[FactorArg::Lit(4), FactorArg::Lit(4)])
+            .unwrap();
+        // compute dense at the outer i tile (extent 4): dense must cover a
+        // 4x16 tile of C plus the full k reduction.
+        s.compute_at(dense, ri[0]).unwrap();
+        s.prog.check_integrity().unwrap();
+        let d_item = s.block(dense).unwrap();
+        let above = s.prog.loops_above(d_item);
+        // outer = the ri[0] loop; then i-tile 4, j 16, k 8.
+        let extents: Vec<i64> = above.iter().map(|&l| s.prog.loop_data(l).extent).collect();
+        assert_eq!(extents, vec![4, 4, 16, 8]);
+        // dense comes before relu's inner loops under ri[0].
+        let kids = &s.prog.items[s.loop_item(ri[0]).unwrap()].children;
+        assert_eq!(kids.len(), 2);
+        assert_eq!(program_flops(&s.prog), 16.0 * 16.0 * 8.0 * 2.0 + 16.0 * 16.0);
+    }
+
+    #[test]
+    fn compute_inline_merges_elementwise_chain() {
+        // Build add -> relu chain and inline add into relu.
+        let mut p = crate::tir::Program::new("chain");
+        let a = p.param("A", vec![32], crate::tir::DType::F32);
+        let t = p.temp("T", vec![32], crate::tir::DType::F32);
+        let o = p.param("O", vec![32], crate::tir::DType::F32);
+        use crate::tir::*;
+        p.emit("add1", &[sp("i", 32)], |iv| {
+            (
+                vec![Region::point(a, vec![AExpr::Var(iv[0])])],
+                vec![Region::point(t, vec![AExpr::Var(iv[0])])],
+                BlockBody::Assign {
+                    expr: CExpr::bin(
+                        BinOp::Add,
+                        CExpr::load(a, vec![AExpr::Var(iv[0])]),
+                        CExpr::ConstF(1.0),
+                    ),
+                },
+            )
+        });
+        p.emit("relu", &[sp("i", 32)], |iv| {
+            (
+                vec![Region::point(t, vec![AExpr::Var(iv[0])])],
+                vec![Region::point(o, vec![AExpr::Var(iv[0])])],
+                BlockBody::Assign {
+                    expr: CExpr::un(UnOp::Relu, CExpr::load(t, vec![AExpr::Var(iv[0])])),
+                },
+            )
+        });
+        let mut s = Schedule::new(p, 0);
+        let add = s.get_block("add1").unwrap();
+        s.compute_inline(add).unwrap();
+        s.prog.check_integrity().unwrap();
+        // Only relu remains; it reads A directly; T is gone.
+        assert_eq!(s.prog.blocks().len(), 1);
+        let relu = s.prog.find_block("relu").unwrap();
+        assert_eq!(s.prog.block_data(relu).reads[0].buffer, a);
+        assert!(s.prog.buffers[t].inlined);
+        // relu body now computes relu(A[i] + 1).
+        assert_eq!(program_flops(&s.prog), 32.0 * 2.0);
+        // The inlined block's RV is dead.
+        assert!(s.compute_inline(add).is_err());
+    }
+
+    #[test]
+    fn reverse_compute_inline_fuses_epilogue() {
+        // add -> relu; reverse-inline relu into add.
+        let mut p = crate::tir::Program::new("chain");
+        use crate::tir::*;
+        let a = p.param("A", vec![32], DType::F32);
+        let t = p.temp("T", vec![32], DType::F32);
+        let o = p.param("O", vec![32], DType::F32);
+        p.emit("add1", &[sp("i", 32)], |iv| {
+            (
+                vec![Region::point(a, vec![AExpr::Var(iv[0])])],
+                vec![Region::point(t, vec![AExpr::Var(iv[0])])],
+                BlockBody::Assign {
+                    expr: CExpr::bin(
+                        BinOp::Add,
+                        CExpr::load(a, vec![AExpr::Var(iv[0])]),
+                        CExpr::ConstF(1.0),
+                    ),
+                },
+            )
+        });
+        p.emit("relu", &[sp("i", 32)], |iv| {
+            (
+                vec![Region::point(t, vec![AExpr::Var(iv[0])])],
+                vec![Region::point(o, vec![AExpr::Var(iv[0])])],
+                BlockBody::Assign {
+                    expr: CExpr::un(UnOp::Relu, CExpr::load(t, vec![AExpr::Var(iv[0])])),
+                },
+            )
+        });
+        let mut s = Schedule::new(p, 0);
+        let relu = s.get_block("relu").unwrap();
+        s.reverse_compute_inline(relu).unwrap();
+        s.prog.check_integrity().unwrap();
+        assert_eq!(s.prog.blocks().len(), 1);
+        let add = s.prog.find_block("add1").unwrap();
+        // add now writes O directly.
+        assert_eq!(s.prog.block_data(add).writes[0].buffer, o);
+        assert!(s.prog.buffers[t].inlined);
+    }
+
+    #[test]
+    fn reverse_inline_into_reduction_rejected() {
+        let mut s = Schedule::new(dense_relu_prog(16, 8), 0);
+        let relu = s.get_block("relu").unwrap();
+        // relu's producer (matmul) is a reduction: must be rejected.
+        assert!(matches!(
+            s.reverse_compute_inline(relu),
+            Err(ScheduleError::NotInlineable(_))
+        ));
+    }
+
+    #[test]
+    fn inline_of_reduction_rejected() {
+        let mut s = Schedule::new(dense_relu_prog(16, 8), 0);
+        let dense = s.get_block("matmul").unwrap();
+        assert!(matches!(
+            s.compute_inline(dense),
+            Err(ScheduleError::NotInlineable(_))
+        ));
+    }
+}

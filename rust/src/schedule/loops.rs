@@ -1,0 +1,472 @@
+//! Loop transformations: split, fuse, reorder, parallel, vectorize, unroll,
+//! bind, add-unit-loop.
+//!
+//! Loop restructuring rewrites only the *iter bindings* of blocks beneath
+//! the affected loops (the block bodies are expressed over block iteration
+//! variables and never change).
+
+use crate::schedule::{LoopRef, LoopRv, SchResult, Schedule, ScheduleError, BlockRv};
+use crate::tir::analysis::{classify_loop, LoopClass};
+use crate::tir::{AExpr, ItemId, LoopData, LoopKind};
+use crate::trace::{FactorArg, Inst};
+
+impl Schedule {
+    /// Split a loop into `factors.len()` nested loops (outermost first).
+    /// The factor product must equal the loop extent (perfect split).
+    pub fn split(&mut self, loop_rv: LoopRv, factors: &[FactorArg]) -> SchResult<Vec<LoopRv>> {
+        let item = self.loop_item(loop_rv)?;
+        let concrete: Vec<i64> = factors
+            .iter()
+            .map(|f| match f {
+                FactorArg::Rv(rv) => self.exprs[*rv],
+                FactorArg::Lit(v) => *v,
+            })
+            .collect();
+        let outs = self.split_concrete(item, &concrete)?;
+        let out_rvs: Vec<LoopRv> = outs
+            .iter()
+            .map(|&l| self.push_loop(LoopRef::Item(l)))
+            .collect();
+        self.record(Inst::Split {
+            loop_rv: loop_rv.0,
+            factors: factors.to_vec(),
+            outs: out_rvs.iter().map(|r| r.0).collect(),
+        });
+        Ok(out_rvs)
+    }
+
+    /// Internal: split `item` by concrete factors; returns new loop items.
+    pub(crate) fn split_concrete(
+        &mut self,
+        item: ItemId,
+        factors: &[i64],
+    ) -> SchResult<Vec<ItemId>> {
+        if factors.is_empty() {
+            return Err(ScheduleError::InvalidDecision("empty split factors".into()));
+        }
+        if factors.iter().any(|&f| f <= 0) {
+            return Err(ScheduleError::InvalidDecision(format!(
+                "non-positive split factor in {factors:?}"
+            )));
+        }
+        let data = self.prog.loop_data(item).clone();
+        let product: i64 = factors.iter().product();
+        if product != data.extent {
+            return Err(ScheduleError::ImperfectSplit {
+                extent: data.extent,
+                product,
+            });
+        }
+        if data.kind != LoopKind::Serial {
+            return Err(ScheduleError::WrongLoopKind(format!(
+                "cannot split {} loop",
+                data.kind.name()
+            )));
+        }
+        // Allocate new vars + loops, outermost first.
+        let base = self.prog.var_name(data.var).to_string();
+        let new_vars: Vec<_> = (0..factors.len())
+            .map(|i| self.prog.fresh_var(&format!("{base}_{i}_")))
+            .collect();
+        // old_var = v0*s0 + v1*s1 + ... where s_i = prod(factors[i+1..])
+        let mut replacement = AExpr::Const(0);
+        for (i, &v) in new_vars.iter().enumerate() {
+            let stride: i64 = factors[i + 1..].iter().product();
+            replacement = replacement.add(AExpr::Var(v).mul(stride));
+        }
+        // Rewrite bindings beneath before restructuring.
+        self.prog.subst_loop_var_under(item, data.var, &replacement);
+        // Build the chain of new loops in place of `item`.
+        let parent = self.prog.items[item].parent;
+        let pos = match parent {
+            Some(p) => self.prog.items[p]
+                .children
+                .iter()
+                .position(|&c| c == item)
+                .unwrap(),
+            None => self.prog.roots.iter().position(|&c| c == item).unwrap(),
+        };
+        let children = self.prog.items[item].children.clone();
+        self.prog.detach(item);
+        self.prog.items[item].alive = false;
+        let mut new_items = Vec::with_capacity(factors.len());
+        let mut cur_parent = parent;
+        let mut cur_pos = pos;
+        for (i, (&v, &f)) in new_vars.iter().zip(factors).enumerate() {
+            let l = self.prog.alloc_loop(LoopData::new(v, f));
+            self.prog.attach_at(l, cur_parent, cur_pos);
+            new_items.push(l);
+            cur_parent = Some(l);
+            cur_pos = 0;
+            let _ = i;
+        }
+        let innermost = *new_items.last().unwrap();
+        for c in children {
+            self.prog.items[c].parent = Some(innermost);
+            self.prog.items[innermost].children.push(c);
+        }
+        Ok(new_items)
+    }
+
+    /// Fuse a chain of perfectly-nested loops into one.
+    pub fn fuse(&mut self, loop_rvs: &[LoopRv]) -> SchResult<LoopRv> {
+        if loop_rvs.is_empty() {
+            return Err(ScheduleError::InvalidDecision("fuse of zero loops".into()));
+        }
+        let items: Vec<ItemId> = loop_rvs
+            .iter()
+            .map(|&rv| self.loop_item(rv))
+            .collect::<SchResult<_>>()?;
+        let fused = self.fuse_concrete(&items)?;
+        let rv = self.push_loop(LoopRef::Item(fused));
+        self.record(Inst::Fuse {
+            loops: loop_rvs.iter().map(|r| r.0).collect(),
+            out: rv.0,
+        });
+        Ok(rv)
+    }
+
+    pub(crate) fn fuse_concrete(&mut self, items: &[ItemId]) -> SchResult<ItemId> {
+        // Verify a simple parent-child chain, each link an only child.
+        for w in items.windows(2) {
+            let (a, b) = (w[0], w[1]);
+            if self.prog.items[b].parent != Some(a) {
+                return Err(ScheduleError::NotAChain(format!("items {a} -> {b}")));
+            }
+            if self.prog.items[a].children.len() != 1 {
+                return Err(ScheduleError::NotAChain(format!(
+                    "loop {a} has multiple children"
+                )));
+            }
+        }
+        for &i in items {
+            if self.prog.loop_data(i).kind != LoopKind::Serial {
+                return Err(ScheduleError::WrongLoopKind("fuse non-serial loop".into()));
+            }
+        }
+        let extents: Vec<i64> = items.iter().map(|&i| self.prog.loop_data(i).extent).collect();
+        let total: i64 = extents.iter().product();
+        let fused_var = self.prog.fresh_var("f");
+        // var_i = (fused / prod(extents[i+1..])) % extents[i]
+        let innermost = *items.last().unwrap();
+        for (i, &item) in items.iter().enumerate() {
+            let stride: i64 = extents[i + 1..].iter().product();
+            let mut expr = AExpr::Var(fused_var);
+            if stride > 1 {
+                expr = expr.floordiv(stride);
+            }
+            if i > 0 {
+                expr = expr.modulo(extents[i]);
+            }
+            let var = self.prog.loop_data(item).var;
+            self.prog.subst_loop_var_under(innermost, var, &expr);
+        }
+        // Replace the chain with the fused loop.
+        let outermost = items[0];
+        let parent = self.prog.items[outermost].parent;
+        let pos = match parent {
+            Some(p) => self.prog.items[p]
+                .children
+                .iter()
+                .position(|&c| c == outermost)
+                .unwrap(),
+            None => self
+                .prog
+                .roots
+                .iter()
+                .position(|&c| c == outermost)
+                .unwrap(),
+        };
+        let inner_children = self.prog.items[innermost].children.clone();
+        self.prog.detach(outermost);
+        for &i in items {
+            self.prog.items[i].alive = false;
+        }
+        let fused = self.prog.alloc_loop(LoopData::new(fused_var, total));
+        self.prog.attach_at(fused, parent, pos);
+        for c in inner_children {
+            self.prog.items[c].parent = Some(fused);
+            self.prog.items[fused].children.push(c);
+        }
+        Ok(fused)
+    }
+
+    /// Reorder the given loops (which must lie on one single-child chain)
+    /// into the order given (outermost first).
+    pub fn reorder(&mut self, loop_rvs: &[LoopRv]) -> SchResult<()> {
+        let items: Vec<ItemId> = loop_rvs
+            .iter()
+            .map(|&rv| self.loop_item(rv))
+            .collect::<SchResult<_>>()?;
+        self.reorder_concrete(&items)?;
+        self.record(Inst::Reorder {
+            loops: loop_rvs.iter().map(|r| r.0).collect(),
+        });
+        Ok(())
+    }
+
+    pub(crate) fn reorder_concrete(&mut self, order: &[ItemId]) -> SchResult<()> {
+        if order.len() < 2 {
+            return Ok(());
+        }
+        // Find the chain: sort the given loops by depth.
+        let mut with_depth: Vec<(usize, ItemId)> = order
+            .iter()
+            .map(|&i| (self.prog.loops_above(i).len(), i))
+            .collect();
+        with_depth.sort_by_key(|&(d, _)| d);
+        let chain_positions: Vec<ItemId> = with_depth.iter().map(|&(_, i)| i).collect();
+        // Verify they are on one chain with single children in between.
+        for w in chain_positions.windows(2) {
+            let (outer, inner) = (w[0], w[1]);
+            let mut cur = self.prog.items[inner].parent;
+            loop {
+                match cur {
+                    Some(p) if p == outer => break,
+                    Some(p) => {
+                        if self.prog.items[p].children.len() != 1 {
+                            return Err(ScheduleError::NotAChain(format!(
+                                "branching at loop {p} between reordered loops"
+                            )));
+                        }
+                        cur = self.prog.items[p].parent;
+                    }
+                    None => {
+                        return Err(ScheduleError::NotAChain(
+                            "reordered loops not nested".into(),
+                        ))
+                    }
+                }
+            }
+            if self.prog.items[outer].children.len() != 1 {
+                return Err(ScheduleError::NotAChain(format!(
+                    "loop {outer} has multiple children"
+                )));
+            }
+        }
+        // Swap the loop *payloads* at the chain positions into the requested
+        // order, then fix RV tables so handles keep following their loops.
+        //
+        // order[i] should end up at chain_positions[i]. Payload swap means
+        // the ItemId at chain_positions[i] now holds order[i]'s data; update
+        // loop RV entries pointing at moved items accordingly.
+        let mut payloads: Vec<LoopData> = order
+            .iter()
+            .map(|&i| self.prog.loop_data(i).clone())
+            .collect();
+        // Map old item -> new item for RV fixup.
+        let mut moves: Vec<(ItemId, ItemId)> = Vec::new();
+        for (slot, &src) in chain_positions.iter().zip(order.iter()) {
+            if *slot != src {
+                moves.push((src, *slot));
+            }
+        }
+        for (slot, payload) in chain_positions.iter().zip(payloads.drain(..)) {
+            *self.prog.loop_data_mut(*slot) = payload;
+        }
+        for lr in self.loops.iter_mut() {
+            if let LoopRef::Item(item) = lr {
+                if let Some(&(_, dst)) = moves.iter().find(|&&(src, _)| src == *item) {
+                    *lr = LoopRef::Item(dst);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn set_loop_kind(&mut self, loop_rv: LoopRv, kind: LoopKind, spatial_only: bool) -> SchResult<ItemId> {
+        let item = self.loop_item(loop_rv)?;
+        if spatial_only {
+            match classify_loop(&self.prog, item) {
+                LoopClass::Spatial | LoopClass::Unused => {}
+                c => {
+                    return Err(ScheduleError::WrongLoopKind(format!(
+                        "cannot apply {} to {:?} loop",
+                        kind.name(),
+                        c
+                    )))
+                }
+            }
+        }
+        self.prog.loop_data_mut(item).kind = kind;
+        Ok(item)
+    }
+
+    /// Parallelize a (data-parallel) loop across CPU cores.
+    pub fn parallel(&mut self, loop_rv: LoopRv) -> SchResult<()> {
+        self.set_loop_kind(loop_rv, LoopKind::Parallel, true)?;
+        self.record(Inst::Parallel { loop_rv: loop_rv.0 });
+        Ok(())
+    }
+
+    /// Vectorize a (data-parallel) loop with SIMD.
+    pub fn vectorize(&mut self, loop_rv: LoopRv) -> SchResult<()> {
+        self.set_loop_kind(loop_rv, LoopKind::Vectorized, true)?;
+        self.record(Inst::Vectorize { loop_rv: loop_rv.0 });
+        Ok(())
+    }
+
+    /// Unroll a loop.
+    pub fn unroll(&mut self, loop_rv: LoopRv) -> SchResult<()> {
+        self.set_loop_kind(loop_rv, LoopKind::Unrolled, false)?;
+        self.record(Inst::Unroll { loop_rv: loop_rv.0 });
+        Ok(())
+    }
+
+    /// Bind a loop to a GPU thread axis (blockIdx.* / threadIdx.*).
+    pub fn bind(&mut self, loop_rv: LoopRv, thread: &str) -> SchResult<()> {
+        // Reduction loops may only bind to threadIdx when the block does
+        // cross-thread reduction; we allow it and let the simulator model it.
+        let spatial_only = thread.starts_with("blockIdx");
+        self.set_loop_kind(loop_rv, LoopKind::ThreadBinding(thread.to_string()), spatial_only)?;
+        self.record(Inst::Bind {
+            loop_rv: loop_rv.0,
+            thread: thread.to_string(),
+        });
+        Ok(())
+    }
+
+    /// Create a unit (extent-1) loop immediately above a block.
+    pub fn add_unit_loop(&mut self, block: BlockRv) -> SchResult<LoopRv> {
+        let item = self.block(block)?;
+        let var = self.prog.fresh_var("u");
+        let parent = self.prog.items[item].parent;
+        let pos = match parent {
+            Some(p) => self.prog.items[p]
+                .children
+                .iter()
+                .position(|&c| c == item)
+                .unwrap(),
+            None => self.prog.roots.iter().position(|&c| c == item).unwrap(),
+        };
+        self.prog.detach(item);
+        let l = self.prog.alloc_loop(LoopData::new(var, 1));
+        self.prog.attach_at(l, parent, pos);
+        self.prog.attach(item, Some(l));
+        let rv = self.push_loop(LoopRef::Item(l));
+        self.record(Inst::AddUnitLoop {
+            block: block.0,
+            out: rv.0,
+        });
+        Ok(rv)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::testutil::matmul_prog;
+    use crate::tir::analysis::program_flops;
+
+    fn sch() -> Schedule {
+        Schedule::new(matmul_prog(64, 32), 0)
+    }
+
+    #[test]
+    fn split_preserves_flops_and_structure() {
+        let mut s = sch();
+        let before = program_flops(&s.prog);
+        let b = s.get_block("matmul").unwrap();
+        let loops = s.get_loops(b).unwrap();
+        let outs = s
+            .split(loops[0], &[FactorArg::Lit(4), FactorArg::Lit(16)])
+            .unwrap();
+        assert_eq!(outs.len(), 2);
+        s.prog.check_integrity().unwrap();
+        assert_eq!(program_flops(&s.prog), before);
+        // Block now sits under 4 loops.
+        let item = s.block(b).unwrap();
+        assert_eq!(s.prog.loops_above(item).len(), 4);
+    }
+
+    #[test]
+    fn imperfect_split_rejected() {
+        let mut s = sch();
+        let b = s.get_block("matmul").unwrap();
+        let loops = s.get_loops(b).unwrap();
+        let e = s.split(loops[0], &[FactorArg::Lit(7), FactorArg::Lit(9)]);
+        assert!(matches!(e, Err(ScheduleError::ImperfectSplit { .. })));
+    }
+
+    #[test]
+    fn stale_handle_after_split_rejected() {
+        let mut s = sch();
+        let b = s.get_block("matmul").unwrap();
+        let loops = s.get_loops(b).unwrap();
+        s.split(loops[0], &[FactorArg::Lit(4), FactorArg::Lit(16)])
+            .unwrap();
+        // The original loop RV is now dead.
+        assert!(matches!(
+            s.split(loops[0], &[FactorArg::Lit(2), FactorArg::Lit(32)]),
+            Err(ScheduleError::StaleHandle(_))
+        ));
+    }
+
+    #[test]
+    fn fuse_then_extent_is_product() {
+        let mut s = sch();
+        let b = s.get_block("matmul").unwrap();
+        let loops = s.get_loops(b).unwrap();
+        let f = s.fuse(&loops[0..2]).unwrap();
+        let item = s.loop_item(f).unwrap();
+        assert_eq!(s.prog.loop_data(item).extent, 64 * 64);
+        s.prog.check_integrity().unwrap();
+        assert_eq!(program_flops(&s.prog), 64.0 * 64.0 * 32.0 * 2.0);
+    }
+
+    #[test]
+    fn split_fuse_roundtrip_bindings() {
+        // split i into (4,16) then fuse back: binding must still evaluate
+        // to the same set of instances (flops invariant + integrity).
+        let mut s = sch();
+        let b = s.get_block("matmul").unwrap();
+        let loops = s.get_loops(b).unwrap();
+        let parts = s
+            .split(loops[0], &[FactorArg::Lit(4), FactorArg::Lit(16)])
+            .unwrap();
+        let fused = s.fuse(&parts).unwrap();
+        let item = s.loop_item(fused).unwrap();
+        assert_eq!(s.prog.loop_data(item).extent, 64);
+        s.prog.check_integrity().unwrap();
+    }
+
+    #[test]
+    fn reorder_swaps_loop_payloads() {
+        let mut s = sch();
+        let b = s.get_block("matmul").unwrap();
+        let loops = s.get_loops(b).unwrap();
+        // original order: i(64) j(64) k(32); request k j i
+        s.reorder(&[loops[2], loops[1], loops[0]]).unwrap();
+        let item = s.block(b).unwrap();
+        let above = s.prog.loops_above(item);
+        let extents: Vec<i64> = above.iter().map(|&l| s.prog.loop_data(l).extent).collect();
+        assert_eq!(extents, vec![32, 64, 64]);
+        // RVs must follow their loops: loops[0] (i) should now be innermost.
+        let i_item = s.loop_item(loops[0]).unwrap();
+        assert_eq!(above[2], i_item);
+        s.prog.check_integrity().unwrap();
+    }
+
+    #[test]
+    fn parallel_on_reduce_loop_rejected() {
+        let mut s = sch();
+        let b = s.get_block("matmul").unwrap();
+        let loops = s.get_loops(b).unwrap();
+        assert!(s.parallel(loops[2]).is_err()); // k is a reduction loop
+        s.parallel(loops[0]).unwrap();
+        s.vectorize(loops[1]).unwrap();
+        s.unroll(loops[2]).unwrap(); // unroll is fine on reduce loops
+    }
+
+    #[test]
+    fn add_unit_loop_wraps_block() {
+        let mut s = sch();
+        let b = s.get_block("matmul").unwrap();
+        let u = s.add_unit_loop(b).unwrap();
+        let item = s.block(b).unwrap();
+        let above = s.prog.loops_above(item);
+        assert_eq!(above.len(), 4);
+        assert_eq!(*above.last().unwrap(), s.loop_item(u).unwrap());
+        s.prog.check_integrity().unwrap();
+    }
+}

@@ -1,0 +1,375 @@
+//! The probabilistic schedule: program state + transformation primitives.
+//!
+//! A [`Schedule`] wraps a [`Program`] together with random-variable tables
+//! and the execution [`Trace`](crate::trace::Trace). Every primitive both
+//! transforms the program *and* appends an instruction to the trace, so a
+//! schedule execution can be re-run, mutated, serialized, and validated —
+//! the paper's "execution tracing" (§4, Figure 6).
+//!
+//! Primitives are grouped by file: [`loops`], [`cache`], [`location`],
+//! [`reduction`], [`blockize`], [`sampling`].
+
+pub mod blockize;
+pub mod cache;
+pub mod location;
+pub mod loops;
+pub mod reduction;
+pub mod sampling;
+
+use std::fmt;
+
+use crate::tir::{ItemId, Program};
+use crate::trace::{Inst, Trace};
+use crate::util::rng::Rng;
+
+/// Handle to a block random variable.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct BlockRv(pub usize);
+
+/// Handle to a loop random variable.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct LoopRv(pub usize);
+
+/// Handle to an integer expression random variable.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ExprRv(pub usize);
+
+/// What a loop RV refers to. `Root` and `Inlined` are the sentinel
+/// locations produced by `sample-compute-location` (paper Table 2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LoopRef {
+    Item(ItemId),
+    Root,
+    Inlined,
+}
+
+/// Errors from schedule primitives. During search these are *expected*: the
+/// trace validator (paper §4, "Trace validation") rejects mutated traces
+/// whose decisions fall off the support by catching exactly these.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ScheduleError {
+    BlockNotFound(String),
+    StaleHandle(String),
+    NotALoop(String),
+    ImperfectSplit { extent: i64, product: i64 },
+    NotAChain(String),
+    WrongLoopKind(String),
+    InvalidDecision(String),
+    NotInlineable(String),
+    NotReduction(String),
+    InvalidComputeAt(String),
+    TensorizeMismatch(String),
+    Unsupported(String),
+}
+
+impl fmt::Display for ScheduleError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ScheduleError::BlockNotFound(s) => write!(f, "block not found: {s}"),
+            ScheduleError::StaleHandle(s) => write!(f, "stale handle: {s}"),
+            ScheduleError::NotALoop(s) => write!(f, "not a loop: {s}"),
+            ScheduleError::ImperfectSplit { extent, product } => {
+                write!(f, "imperfect split: extent {extent} != factor product {product}")
+            }
+            ScheduleError::NotAChain(s) => write!(f, "loops not a simple chain: {s}"),
+            ScheduleError::WrongLoopKind(s) => write!(f, "wrong loop kind: {s}"),
+            ScheduleError::InvalidDecision(s) => write!(f, "invalid decision: {s}"),
+            ScheduleError::NotInlineable(s) => write!(f, "not inlineable: {s}"),
+            ScheduleError::NotReduction(s) => write!(f, "not a reduction: {s}"),
+            ScheduleError::InvalidComputeAt(s) => write!(f, "invalid compute-at: {s}"),
+            ScheduleError::TensorizeMismatch(s) => write!(f, "tensorize mismatch: {s}"),
+            ScheduleError::Unsupported(s) => write!(f, "unsupported: {s}"),
+        }
+    }
+}
+
+impl std::error::Error for ScheduleError {}
+
+pub type SchResult<T> = Result<T, ScheduleError>;
+
+/// Program state + RV tables + trace: one stochastic schedule execution.
+#[derive(Debug, Clone)]
+pub struct Schedule {
+    pub prog: Program,
+    pub trace: Trace,
+    pub rng: Rng,
+    pub(crate) blocks: Vec<Option<ItemId>>,
+    pub(crate) loops: Vec<LoopRef>,
+    pub(crate) exprs: Vec<i64>,
+}
+
+impl Schedule {
+    /// Start scheduling from an initial program `e_0`.
+    pub fn new(prog: Program, seed: u64) -> Schedule {
+        Schedule {
+            prog,
+            trace: Trace::default(),
+            rng: Rng::seed_from_u64(seed),
+            blocks: Vec::new(),
+            loops: Vec::new(),
+            exprs: Vec::new(),
+        }
+    }
+
+    // ---- RV table plumbing -------------------------------------------------
+
+    pub(crate) fn push_block(&mut self, item: ItemId) -> BlockRv {
+        self.blocks.push(Some(item));
+        BlockRv(self.blocks.len() - 1)
+    }
+
+    pub(crate) fn push_loop(&mut self, r: LoopRef) -> LoopRv {
+        self.loops.push(r);
+        LoopRv(self.loops.len() - 1)
+    }
+
+    pub(crate) fn push_expr(&mut self, v: i64) -> ExprRv {
+        self.exprs.push(v);
+        ExprRv(self.exprs.len() - 1)
+    }
+
+    /// Resolve a block RV, checking liveness.
+    pub fn block(&self, rv: BlockRv) -> SchResult<ItemId> {
+        let item = self.blocks[rv.0]
+            .ok_or_else(|| ScheduleError::StaleHandle(format!("block rv {}", rv.0)))?;
+        if !self.prog.items[item].alive {
+            return Err(ScheduleError::StaleHandle(format!(
+                "block rv {} (item {item} dead)",
+                rv.0
+            )));
+        }
+        Ok(item)
+    }
+
+    /// Resolve a loop RV to an item, checking liveness.
+    pub fn loop_item(&self, rv: LoopRv) -> SchResult<ItemId> {
+        match self.loops[rv.0] {
+            LoopRef::Item(item) => {
+                if !self.prog.items[item].alive {
+                    return Err(ScheduleError::StaleHandle(format!(
+                        "loop rv {} (item {item} dead)",
+                        rv.0
+                    )));
+                }
+                Ok(item)
+            }
+            LoopRef::Root | LoopRef::Inlined => Err(ScheduleError::NotALoop(format!(
+                "loop rv {} is a sentinel location",
+                rv.0
+            ))),
+        }
+    }
+
+    /// Resolve a loop RV including sentinel locations.
+    pub fn loop_ref(&self, rv: LoopRv) -> LoopRef {
+        self.loops[rv.0]
+    }
+
+    /// Value of an integer expression RV.
+    pub fn expr_value(&self, rv: ExprRv) -> i64 {
+        self.exprs[rv.0]
+    }
+
+    pub(crate) fn record(&mut self, inst: Inst) {
+        self.trace.insts.push(inst);
+    }
+
+    // ---- state queries (recorded, so traces replay identically) ------------
+
+    /// Look up a block by name and bind it to a fresh block RV.
+    pub fn get_block(&mut self, name: &str) -> SchResult<BlockRv> {
+        let item = self
+            .prog
+            .find_block(name)
+            .ok_or_else(|| ScheduleError::BlockNotFound(name.to_string()))?;
+        let rv = self.push_block(item);
+        self.record(Inst::GetBlock {
+            name: name.to_string(),
+            out: rv.0,
+        });
+        Ok(rv)
+    }
+
+    /// Loops above a block, outermost first, bound to fresh loop RVs.
+    pub fn get_loops(&mut self, block: BlockRv) -> SchResult<Vec<LoopRv>> {
+        let item = self.block(block)?;
+        let loops = self.prog.loops_above(item);
+        let rvs: Vec<LoopRv> = loops.iter().map(|&l| self.push_loop(LoopRef::Item(l))).collect();
+        self.record(Inst::GetLoops {
+            block: block.0,
+            outs: rvs.iter().map(|r| r.0).collect(),
+        });
+        Ok(rvs)
+    }
+
+    /// Producer blocks of `block`, bound to fresh RVs.
+    pub fn get_producers(&mut self, block: BlockRv) -> SchResult<Vec<BlockRv>> {
+        let item = self.block(block)?;
+        let prods = self.prog.producers_of(item);
+        let rvs: Vec<BlockRv> = prods.iter().map(|&b| self.push_block(b)).collect();
+        self.record(Inst::GetProducers {
+            block: block.0,
+            outs: rvs.iter().map(|r| r.0).collect(),
+        });
+        Ok(rvs)
+    }
+
+    /// Consumer blocks of `block`, bound to fresh RVs.
+    pub fn get_consumers(&mut self, block: BlockRv) -> SchResult<Vec<BlockRv>> {
+        let item = self.block(block)?;
+        let cons = self.prog.consumers_of(item);
+        let rvs: Vec<BlockRv> = cons.iter().map(|&b| self.push_block(b)).collect();
+        self.record(Inst::GetConsumers {
+            block: block.0,
+            outs: rvs.iter().map(|r| r.0).collect(),
+        });
+        Ok(rvs)
+    }
+
+    /// Annotate a block with a key/value pair.
+    pub fn annotate_block(&mut self, block: BlockRv, key: &str, value: &str) -> SchResult<()> {
+        let item = self.block(block)?;
+        self.prog
+            .block_data_mut(item)
+            .annotate(key, value);
+        self.record(Inst::AnnotateBlock {
+            block: block.0,
+            key: key.to_string(),
+            value: value.to_string(),
+        });
+        Ok(())
+    }
+
+    /// Annotate a loop with a key/value pair.
+    pub fn annotate_loop(&mut self, loop_rv: LoopRv, key: &str, value: &str) -> SchResult<()> {
+        let item = self.loop_item(loop_rv)?;
+        self.prog
+            .loop_data_mut(item)
+            .annotations
+            .insert(key.to_string(), value.to_string());
+        self.record(Inst::AnnotateLoop {
+            loop_rv: loop_rv.0,
+            key: key.to_string(),
+            value: value.to_string(),
+        });
+        Ok(())
+    }
+
+    /// Remove an annotation from a block.
+    pub fn unannotate_block(&mut self, block: BlockRv, key: &str) -> SchResult<()> {
+        let item = self.block(block)?;
+        self.prog.block_data_mut(item).annotations.remove(key);
+        self.record(Inst::UnannotateBlock {
+            block: block.0,
+            key: key.to_string(),
+        });
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use crate::tir::*;
+
+    /// C[i,j] = sum_k A[i,k]*B[k,j], square `n`, reduce `k`.
+    pub fn matmul_prog(n: i64, k: i64) -> Program {
+        let mut p = Program::new("matmul");
+        let a = p.param("A", vec![n, k], DType::F32);
+        let b = p.param("B", vec![k, n], DType::F32);
+        let c = p.param("C", vec![n, n], DType::F32);
+        p.emit(
+            "matmul",
+            &[sp("i", n), sp("j", n), rd("k", k)],
+            |iv| {
+                let (i, j, kk) = (iv[0], iv[1], iv[2]);
+                (
+                    vec![
+                        Region::point(a, vec![AExpr::Var(i), AExpr::Var(kk)]),
+                        Region::point(b, vec![AExpr::Var(kk), AExpr::Var(j)]),
+                    ],
+                    vec![Region::point(c, vec![AExpr::Var(i), AExpr::Var(j)])],
+                    BlockBody::Reduce {
+                        init: CExpr::ConstF(0.0),
+                        op: BinOp::Add,
+                        rhs: CExpr::bin(
+                            BinOp::Mul,
+                            CExpr::load(a, vec![AExpr::Var(i), AExpr::Var(kk)]),
+                            CExpr::load(b, vec![AExpr::Var(kk), AExpr::Var(j)]),
+                        ),
+                    },
+                )
+            },
+        );
+        p
+    }
+
+    /// Dense (matmul) followed by elementwise ReLU — the paper's Figure 3
+    /// running example.
+    pub fn dense_relu_prog(n: i64, k: i64) -> Program {
+        let mut p = matmul_prog(n, k);
+        p.name = "dense_relu".into();
+        let c = 2; // matmul output buffer id from matmul_prog
+        let d = p.param("D", vec![n, n], DType::F32);
+        p.emit("relu", &[sp("i", n), sp("j", n)], |iv| {
+            let (i, j) = (iv[0], iv[1]);
+            (
+                vec![Region::point(c, vec![AExpr::Var(i), AExpr::Var(j)])],
+                vec![Region::point(d, vec![AExpr::Var(i), AExpr::Var(j)])],
+                BlockBody::Assign {
+                    expr: CExpr::un(
+                        UnOp::Relu,
+                        CExpr::load(c, vec![AExpr::Var(i), AExpr::Var(j)]),
+                    ),
+                },
+            )
+        });
+        p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::testutil::*;
+    use super::*;
+
+    #[test]
+    fn get_block_and_loops() {
+        let mut sch = Schedule::new(matmul_prog(16, 8), 0);
+        let b = sch.get_block("matmul").unwrap();
+        let loops = sch.get_loops(b).unwrap();
+        assert_eq!(loops.len(), 3);
+        assert_eq!(sch.trace.insts.len(), 2);
+    }
+
+    #[test]
+    fn missing_block_errors() {
+        let mut sch = Schedule::new(matmul_prog(16, 8), 0);
+        assert!(matches!(
+            sch.get_block("nope"),
+            Err(ScheduleError::BlockNotFound(_))
+        ));
+    }
+
+    #[test]
+    fn producers_consumers() {
+        let mut sch = Schedule::new(dense_relu_prog(16, 8), 0);
+        let dense = sch.get_block("matmul").unwrap();
+        let relu = sch.get_block("relu").unwrap();
+        let cons = sch.get_consumers(dense).unwrap();
+        assert_eq!(cons.len(), 1);
+        assert_eq!(sch.block(cons[0]).unwrap(), sch.block(relu).unwrap());
+        let prods = sch.get_producers(relu).unwrap();
+        assert_eq!(prods.len(), 1);
+    }
+
+    #[test]
+    fn annotations_recorded() {
+        let mut sch = Schedule::new(matmul_prog(16, 8), 0);
+        let b = sch.get_block("matmul").unwrap();
+        sch.annotate_block(b, "k", "v").unwrap();
+        let item = sch.block(b).unwrap();
+        assert_eq!(sch.prog.block_data(item).annotations["k"], "v");
+        sch.unannotate_block(b, "k").unwrap();
+        assert!(sch.prog.block_data(item).annotations.is_empty());
+    }
+}

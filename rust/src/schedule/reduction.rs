@@ -1,0 +1,397 @@
+//! Reduction primitives: rfactor and decompose-reduction.
+
+use crate::schedule::{BlockRv, LoopRv, SchResult, Schedule, ScheduleError};
+use crate::tir::{
+    AExpr, BlockBody, BlockData, Buffer, CExpr, IterKind, IterVar, LoopData, Region,
+};
+use crate::trace::Inst;
+
+impl Schedule {
+    /// Factorize an associative reduction along `loop_rv`: the block writes
+    /// partial results to a fresh rfactor buffer indexed by that loop, and a
+    /// new block reduces the partials into the original output.
+    ///
+    /// Enables cross-thread / parallel reductions for NRM- and SFM-style
+    /// workloads where all original loops are reductions.
+    pub fn rfactor(&mut self, block: BlockRv, loop_rv: LoopRv) -> SchResult<BlockRv> {
+        let item = self.block(block)?;
+        let loop_item = self.loop_item(loop_rv)?;
+        let bd = self.prog.block_data(item).clone();
+        let (init, op) = match &bd.body {
+            BlockBody::Reduce { init, op, .. } => (init.clone(), *op),
+            _ => return Err(ScheduleError::NotReduction(bd.name.clone())),
+        };
+        if !bd.write_is_trivial() {
+            return Err(ScheduleError::Unsupported(
+                "rfactor requires a trivial write region".into(),
+            ));
+        }
+        let loop_var = self.prog.loop_data(loop_item).var;
+        let loop_extent = self.prog.loop_data(loop_item).extent;
+        // The loop must participate linearly in exactly one reduce iter's
+        // binding: binding = Var(loop)*c + g(inner) with g ranging [0, c).
+        // (Identity bindings are the c = 1 special case; split products like
+        // `l0*32 + l1` are the general one.)
+        let mut riter_idx = None;
+        for (i, iv) in bd.iters.iter().enumerate() {
+            if iv.binding.uses_var(loop_var) {
+                if iv.kind != IterKind::Reduce || riter_idx.is_some() {
+                    return Err(ScheduleError::NotReduction(format!(
+                        "loop feeds a non-reduction or multiple iters of {}",
+                        bd.name
+                    )));
+                }
+                riter_idx = Some(i);
+            }
+        }
+        let riter_idx = riter_idx.ok_or_else(|| {
+            ScheduleError::NotReduction(format!(
+                "loop does not bind a reduction iter of {}",
+                bd.name
+            ))
+        })?;
+        let binding = bd.iters[riter_idx].binding.clone();
+        // g = binding with loop var pinned to 0; c = binding(L=1) - binding(L=0).
+        let mut pin0: std::collections::HashMap<crate::tir::VarId, AExpr> =
+            std::collections::HashMap::new();
+        pin0.insert(loop_var, AExpr::Const(0));
+        let g = binding.subst(&pin0);
+        let env_ranges = self.prog.loop_var_ranges();
+        let at = |lval: i64| -> i64 {
+            let mut env: std::collections::HashMap<crate::tir::VarId, i64> =
+                env_ranges.keys().map(|&v| (v, 0)).collect();
+            env.insert(loop_var, lval);
+            binding.eval(&env)
+        };
+        let c = at(1) - at(0);
+        if c <= 0 || at(2) - at(1) != c {
+            return Err(ScheduleError::Unsupported(
+                "rfactor binding is not linear in the loop variable".into(),
+            ));
+        }
+        let (g_lo, g_hi) = g.interval(&env_ranges);
+        if g_lo != 0 || g_hi != c - 1 {
+            return Err(ScheduleError::Unsupported(format!(
+                "rfactor residual range [{g_lo},{g_hi}] does not tile stride {c}"
+            )));
+        }
+        let out_buf = bd.writes[0].buffer;
+        let spatial_extents: Vec<i64> = bd.spatial_iters().map(|iv| iv.extent).collect();
+        // rfactor buffer: spatial dims + factored axis (last).
+        let mut rf_shape = spatial_extents.clone();
+        rf_shape.push(loop_extent);
+        let rf_buf = self.prog.add_buffer(Buffer::new(
+            format!("{}_rf", self.prog.buffers[out_buf].name),
+            rf_shape,
+            self.prog.buffers[out_buf].dtype,
+        ));
+        // --- Rewrite the original block: a fresh spatial iter tracks the
+        // factored loop; the reduce iter shrinks to the residual range and
+        // accesses compose as rfv*c + r.
+        {
+            let riter_var = bd.iters[riter_idx].var;
+            let rfv = self.prog.fresh_var("rfx_");
+            let bd_mut = self.prog.block_data_mut(item);
+            bd_mut.iters[riter_idx].binding = g;
+            bd_mut.iters[riter_idx].extent = c;
+            bd_mut.iters.push(IterVar {
+                var: rfv,
+                extent: loop_extent,
+                kind: IterKind::Spatial,
+                binding: AExpr::Var(loop_var),
+            });
+            // Substitute r -> rfv*c + r in reads and body.
+            let mut sub: std::collections::HashMap<crate::tir::VarId, AExpr> =
+                std::collections::HashMap::new();
+            sub.insert(riter_var, AExpr::Var(rfv).mul(c).add(AExpr::Var(riter_var)));
+            for r in bd_mut.reads.iter_mut() {
+                for (start, _) in r.ranges.iter_mut() {
+                    *start = start.subst(&sub);
+                }
+            }
+            bd_mut.body = match &bd_mut.body {
+                BlockBody::Reduce { init, op, rhs } => BlockBody::Reduce {
+                    init: init.subst_indices(&sub),
+                    op: *op,
+                    rhs: rhs.subst_indices(&sub),
+                },
+                other => other.clone(),
+            };
+            let mut idx: Vec<AExpr> = bd_mut
+                .iters
+                .iter()
+                .filter(|iv| iv.kind == IterKind::Spatial && iv.var != rfv)
+                .map(|iv| AExpr::Var(iv.var))
+                .collect();
+            idx.push(AExpr::Var(rfv));
+            bd_mut.writes = vec![Region::point(rf_buf, idx)];
+            bd_mut.name = format!("{}_rf", bd_mut.name);
+        }
+        // --- New final-reduction block at root level after the original nest.
+        let spatial_meta: Vec<(i64,)> = spatial_extents.iter().map(|&e| (e,)).collect();
+        let mut iters = Vec::new();
+        let mut loops = Vec::new();
+        for (d, (extent,)) in spatial_meta.iter().enumerate() {
+            let lv = self.prog.fresh_var(&format!("rf{d}_"));
+            let bv = self.prog.fresh_var(&format!("rfb{d}_"));
+            loops.push(self.prog.alloc_loop(LoopData::new(lv, *extent)));
+            iters.push(IterVar {
+                var: bv,
+                extent: *extent,
+                kind: IterKind::Spatial,
+                binding: AExpr::Var(lv),
+            });
+        }
+        let rlv = self.prog.fresh_var("rfk_");
+        let rbv = self.prog.fresh_var("rfkb_");
+        loops.push(self.prog.alloc_loop(LoopData::new(rlv, loop_extent)));
+        iters.push(IterVar {
+            var: rbv,
+            extent: loop_extent,
+            kind: IterKind::Reduce,
+            binding: AExpr::Var(rlv),
+        });
+        let spatial_idx: Vec<AExpr> = iters[..iters.len() - 1]
+            .iter()
+            .map(|iv| AExpr::Var(iv.var))
+            .collect();
+        let mut rf_idx = spatial_idx.clone();
+        rf_idx.push(AExpr::Var(rbv));
+        let mut blk = BlockData::new(format!("{}_final", bd.name));
+        blk.reads = vec![Region {
+            buffer: rf_buf,
+            ranges: rf_idx.iter().map(|e| (e.clone(), 1)).collect(),
+        }];
+        blk.writes = vec![Region::point(out_buf, spatial_idx)];
+        blk.body = BlockBody::Reduce {
+            init,
+            op,
+            rhs: CExpr::Load(rf_buf, rf_idx),
+        };
+        blk.iters = iters;
+        let blk_item = self.prog.alloc_block(blk);
+        // Link the new nest.
+        let mut parent: Option<usize> = None;
+        for &l in &loops {
+            if let Some(p) = parent {
+                self.prog.items[l].parent = Some(p);
+                self.prog.items[p].children.push(l);
+            }
+            parent = Some(l);
+        }
+        let top = loops.first().copied().unwrap_or(blk_item);
+        if let Some(p) = parent {
+            self.prog.items[blk_item].parent = Some(p);
+            self.prog.items[p].children.push(blk_item);
+        }
+        let orig_root = self.prog.root_of(item);
+        let pos = self
+            .prog
+            .roots
+            .iter()
+            .position(|&r| r == orig_root)
+            .map(|p| p + 1)
+            .unwrap_or(self.prog.roots.len());
+        self.prog.roots.insert(pos, top);
+        let rv = self.push_block(blk_item);
+        self.record(Inst::RFactor {
+            block: block.0,
+            loop_rv: loop_rv.0,
+            out: rv.0,
+        });
+        Ok(rv)
+    }
+
+    /// Hoist the reduction's init assignment into a separate block placed
+    /// immediately before `loop_rv` (which must enclose the block).
+    pub fn decompose_reduction(&mut self, block: BlockRv, loop_rv: LoopRv) -> SchResult<BlockRv> {
+        let item = self.block(block)?;
+        let loop_item = self.loop_item(loop_rv)?;
+        if !crate::tir::analysis::is_ancestor(&self.prog, loop_item, item) {
+            return Err(ScheduleError::InvalidComputeAt(
+                "decompose-reduction loop does not enclose the block".into(),
+            ));
+        }
+        let bd = self.prog.block_data(item).clone();
+        let init = match &bd.body {
+            BlockBody::Reduce { init, .. } => init.clone(),
+            _ => return Err(ScheduleError::NotReduction(bd.name.clone())),
+        };
+        if bd.init_decomposed {
+            return Err(ScheduleError::Unsupported(
+                "reduction already decomposed".into(),
+            ));
+        }
+        if !bd.write_is_trivial() {
+            return Err(ScheduleError::Unsupported(
+                "decompose-reduction requires a trivial write".into(),
+            ));
+        }
+        let out_buf = bd.writes[0].buffer;
+        // Init block: fresh loops over the spatial extents.
+        let mut iters = Vec::new();
+        let mut loops = Vec::new();
+        for (d, siv) in bd.spatial_iters().enumerate() {
+            let lv = self.prog.fresh_var(&format!("in{d}_"));
+            let bv = self.prog.fresh_var(&format!("inb{d}_"));
+            loops.push(self.prog.alloc_loop(LoopData::new(lv, siv.extent)));
+            iters.push(IterVar {
+                var: bv,
+                extent: siv.extent,
+                kind: IterKind::Spatial,
+                binding: AExpr::Var(lv),
+            });
+        }
+        let idx: Vec<AExpr> = iters.iter().map(|iv| AExpr::Var(iv.var)).collect();
+        let mut blk = BlockData::new(format!("{}_init", bd.name));
+        blk.writes = vec![Region::point(out_buf, idx)];
+        blk.body = BlockBody::Assign { expr: init };
+        blk.iters = iters;
+        let blk_item = self.prog.alloc_block(blk);
+        let mut parent: Option<usize> = None;
+        for &l in &loops {
+            if let Some(p) = parent {
+                self.prog.items[l].parent = Some(p);
+                self.prog.items[p].children.push(l);
+            }
+            parent = Some(l);
+        }
+        if let Some(p) = parent {
+            self.prog.items[blk_item].parent = Some(p);
+            self.prog.items[p].children.push(blk_item);
+        }
+        let top = loops.first().copied().unwrap_or(blk_item);
+        // Insert before `loop_item` under its parent.
+        let lparent = self.prog.items[loop_item].parent;
+        let pos = match lparent {
+            Some(p) => self.prog.items[p]
+                .children
+                .iter()
+                .position(|&c| c == loop_item)
+                .unwrap(),
+            None => self
+                .prog
+                .roots
+                .iter()
+                .position(|&c| c == loop_item)
+                .unwrap(),
+        };
+        self.prog.items[top].parent = lparent;
+        match lparent {
+            Some(p) => self.prog.items[p].children.insert(pos, top),
+            None => self.prog.roots.insert(pos, top),
+        }
+        self.prog.block_data_mut(item).init_decomposed = true;
+        let rv = self.push_block(blk_item);
+        self.record(Inst::DecomposeReduction {
+            block: block.0,
+            loop_rv: loop_rv.0,
+            out: rv.0,
+        });
+        Ok(rv)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::testutil::matmul_prog;
+    use crate::schedule::Schedule;
+    use crate::tir::analysis::classify_loop;
+    use crate::tir::analysis::LoopClass;
+
+    /// s[i] = sum_j A[i,j] — a row-sum with a wide reduction.
+    fn rowsum() -> crate::tir::Program {
+        use crate::tir::*;
+        let mut p = Program::new("rowsum");
+        let a = p.param("A", vec![4, 256], DType::F32);
+        let s = p.param("S", vec![4], DType::F32);
+        p.emit("rowsum", &[sp("i", 4), rd("j", 256)], |iv| {
+            (
+                vec![Region::point(a, vec![AExpr::Var(iv[0]), AExpr::Var(iv[1])])],
+                vec![Region::point(s, vec![AExpr::Var(iv[0])])],
+                BlockBody::Reduce {
+                    init: CExpr::ConstF(0.0),
+                    op: BinOp::Add,
+                    rhs: CExpr::load(a, vec![AExpr::Var(iv[0]), AExpr::Var(iv[1])]),
+                },
+            )
+        });
+        p
+    }
+
+    #[test]
+    fn rfactor_splits_reduction_into_two_blocks() {
+        let mut s = Schedule::new(rowsum(), 0);
+        let b = s.get_block("rowsum").unwrap();
+        let loops = s.get_loops(b).unwrap();
+        // Split j into 8 x 32, rfactor over the outer part.
+        let parts = s
+            .split(loops[1], &[crate::trace::FactorArg::Lit(8), crate::trace::FactorArg::Lit(32)])
+            .unwrap();
+        let final_block = s.rfactor(b, parts[0]).unwrap();
+        s.prog.check_integrity().unwrap();
+        // Two blocks now; partial block's factored loop is spatial.
+        assert_eq!(s.prog.blocks().len(), 2);
+        let rf_item = s.block(b).unwrap();
+        let part_loop = s.loop_item(parts[0]).unwrap();
+        assert_eq!(classify_loop(&s.prog, part_loop), LoopClass::Spatial);
+        // The partial block writes S_rf (shape [4, 8]).
+        let rf_buf = &s.prog.buffers[s.prog.block_data(rf_item).writes[0].buffer];
+        assert_eq!(rf_buf.name, "S_rf");
+        assert_eq!(rf_buf.shape, vec![4, 8]);
+        // Final block reduces 8 partials into S.
+        let fin = s.block(final_block).unwrap();
+        assert_eq!(s.prog.block_data(fin).writes[0].buffer, 1);
+        let fin_loops = s.prog.loops_above(fin);
+        let extents: Vec<i64> = fin_loops.iter().map(|&l| s.prog.loop_data(l).extent).collect();
+        assert_eq!(extents, vec![4, 8]);
+        // Now the factored loop can be parallelized.
+        s.parallel(parts[0]).unwrap();
+    }
+
+    #[test]
+    fn rfactor_on_non_reduction_rejected() {
+        use crate::tir::*;
+        let mut p = Program::new("copy");
+        let a = p.param("A", vec![8], DType::F32);
+        let o = p.param("O", vec![8], DType::F32);
+        p.emit("copy", &[sp("i", 8)], |iv| {
+            (
+                vec![Region::point(a, vec![AExpr::Var(iv[0])])],
+                vec![Region::point(o, vec![AExpr::Var(iv[0])])],
+                BlockBody::Assign {
+                    expr: CExpr::load(a, vec![AExpr::Var(iv[0])]),
+                },
+            )
+        });
+        let mut s = Schedule::new(p, 0);
+        let b = s.get_block("copy").unwrap();
+        let loops = s.get_loops(b).unwrap();
+        assert!(matches!(
+            s.rfactor(b, loops[0]),
+            Err(ScheduleError::NotReduction(_))
+        ));
+    }
+
+    #[test]
+    fn decompose_reduction_hoists_init() {
+        let mut s = Schedule::new(matmul_prog(16, 8), 0);
+        let b = s.get_block("matmul").unwrap();
+        let loops = s.get_loops(b).unwrap();
+        let init = s.decompose_reduction(b, loops[2]).unwrap();
+        s.prog.check_integrity().unwrap();
+        let init_item = s.block(init).unwrap();
+        assert_eq!(s.prog.block_data(init_item).name, "matmul_init");
+        let mm = s.block(b).unwrap();
+        assert!(s.prog.block_data(mm).init_decomposed);
+        // Init block sits before the k loop under j.
+        let k_loop = s.loop_item(loops[2]).unwrap();
+        let parent = s.prog.items[k_loop].parent.unwrap();
+        let kids = &s.prog.items[parent].children;
+        assert_eq!(kids.len(), 2);
+        assert!(crate::tir::analysis::is_ancestor(&s.prog, kids[0], init_item));
+        // Double decomposition is rejected.
+        assert!(s.decompose_reduction(b, loops[2]).is_err());
+    }
+}

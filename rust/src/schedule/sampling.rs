@@ -1,0 +1,365 @@
+//! Sampling instructions — the probabilistic core of the language.
+//!
+//! Random variables are drawn from distributions that depend on the
+//! *current* program state (paper §3.1): `sample-perfect-tile` enumerates
+//! the factorizations of the loop's current extent,
+//! `sample-compute-location` enumerates the loops of the block's consumer
+//! in the current loop tree. Decisions are recorded in the trace and can be
+//! overridden on replay (mutation) — invalid overrides surface as
+//! `ScheduleError::InvalidDecision`, which is what the trace validator
+//! catches.
+
+use crate::schedule::{BlockRv, ExprRv, LoopRef, LoopRv, SchResult, Schedule, ScheduleError};
+use crate::tir::ItemId;
+use crate::trace::Inst;
+
+/// Enumerate ordered factorizations of `extent` into `n` positive factors
+/// with the last factor bounded by `max_innermost` (0 = unbounded).
+/// Memoized per thread: the same (extent, n, bound) support is enumerated
+/// on every fork-and-sample of a trace, which made this the hottest part
+/// of population initialization (§Perf).
+pub fn enumerate_perfect_tiles(extent: i64, n: usize, max_innermost: i64) -> std::rc::Rc<Vec<Vec<i64>>> {
+    thread_local! {
+        static CACHE: std::cell::RefCell<std::collections::HashMap<(i64, usize, i64), std::rc::Rc<Vec<Vec<i64>>>>> =
+            std::cell::RefCell::new(std::collections::HashMap::new());
+    }
+    CACHE.with(|c| {
+        if let Some(hit) = c.borrow().get(&(extent, n, max_innermost)) {
+            return hit.clone();
+        }
+        let v = std::rc::Rc::new(enumerate_perfect_tiles_uncached(extent, n, max_innermost));
+        c.borrow_mut().insert((extent, n, max_innermost), v.clone());
+        v
+    })
+}
+
+fn enumerate_perfect_tiles_uncached(extent: i64, n: usize, max_innermost: i64) -> Vec<Vec<i64>> {
+    fn divisors(x: i64) -> Vec<i64> {
+        let mut out = Vec::new();
+        let mut d = 1;
+        while d * d <= x {
+            if x % d == 0 {
+                out.push(d);
+                if d != x / d {
+                    out.push(x / d);
+                }
+            }
+            d += 1;
+        }
+        out.sort_unstable();
+        out
+    }
+    fn rec(remaining: i64, parts: usize, max_innermost: i64, cur: &mut Vec<i64>, out: &mut Vec<Vec<i64>>) {
+        if parts == 1 {
+            if max_innermost == 0 || remaining <= max_innermost {
+                cur.push(remaining);
+                out.push(cur.clone());
+                cur.pop();
+            }
+            return;
+        }
+        for d in divisors(remaining) {
+            cur.push(d);
+            rec(remaining / d, parts - 1, max_innermost, cur, out);
+            cur.pop();
+            if out.len() > 100_000 {
+                return; // safety cap; never hit for realistic extents
+            }
+        }
+    }
+    let mut out = Vec::new();
+    rec(extent, n, max_innermost, &mut Vec::new(), &mut out);
+    out
+}
+
+impl Schedule {
+    /// Sample tiling factors that perfectly tile `loop_rv` into `n` parts.
+    pub fn sample_perfect_tile(
+        &mut self,
+        loop_rv: LoopRv,
+        n: usize,
+        max_innermost: i64,
+    ) -> SchResult<Vec<ExprRv>> {
+        self.sample_perfect_tile_decided(loop_rv, n, max_innermost, None)
+    }
+
+    /// Like [`Schedule::sample_perfect_tile`] but with an optional decision
+    /// override (used by trace replay / mutation).
+    pub fn sample_perfect_tile_decided(
+        &mut self,
+        loop_rv: LoopRv,
+        n: usize,
+        max_innermost: i64,
+        decision: Option<Vec<i64>>,
+    ) -> SchResult<Vec<ExprRv>> {
+        let item = self.loop_item(loop_rv)?;
+        let extent = self.prog.loop_data(item).extent;
+        let factors = match decision {
+            Some(d) => {
+                if d.len() != n {
+                    return Err(ScheduleError::InvalidDecision(format!(
+                        "perfect-tile decision has {} parts, expected {n}",
+                        d.len()
+                    )));
+                }
+                let product: i64 = d.iter().product();
+                if product != extent || d.iter().any(|&f| f <= 0) {
+                    return Err(ScheduleError::InvalidDecision(format!(
+                        "perfect-tile {d:?} does not tile extent {extent}"
+                    )));
+                }
+                if max_innermost > 0 && *d.last().unwrap() > max_innermost {
+                    return Err(ScheduleError::InvalidDecision(format!(
+                        "innermost factor {} exceeds bound {max_innermost}",
+                        d.last().unwrap()
+                    )));
+                }
+                d
+            }
+            None => {
+                let all = enumerate_perfect_tiles(extent, n, max_innermost);
+                if all.is_empty() {
+                    return Err(ScheduleError::InvalidDecision(format!(
+                        "no perfect tiling of {extent} into {n} parts (max_innermost={max_innermost})"
+                    )));
+                }
+                all[self.rng.gen_range(all.len())].clone()
+            }
+        };
+        let rvs: Vec<ExprRv> = factors.iter().map(|&f| self.push_expr(f)).collect();
+        self.record(Inst::SamplePerfectTile {
+            loop_rv: loop_rv.0,
+            n,
+            max_innermost,
+            outs: rvs.iter().map(|r| r.0).collect(),
+            decision: factors,
+        });
+        Ok(rvs)
+    }
+
+    /// Sample one of `candidates` according to `probs`.
+    pub fn sample_categorical(&mut self, candidates: &[i64], probs: &[f64]) -> SchResult<ExprRv> {
+        self.sample_categorical_decided(candidates, probs, None)
+    }
+
+    /// Decision-overridable version of [`Schedule::sample_categorical`].
+    pub fn sample_categorical_decided(
+        &mut self,
+        candidates: &[i64],
+        probs: &[f64],
+        decision: Option<usize>,
+    ) -> SchResult<ExprRv> {
+        if candidates.is_empty() || candidates.len() != probs.len() {
+            return Err(ScheduleError::InvalidDecision(
+                "categorical candidates/probs mismatch".into(),
+            ));
+        }
+        let idx = match decision {
+            Some(i) => {
+                if i >= candidates.len() {
+                    return Err(ScheduleError::InvalidDecision(format!(
+                        "categorical decision {i} out of {} candidates",
+                        candidates.len()
+                    )));
+                }
+                i
+            }
+            None => self.rng.sample_weighted(probs),
+        };
+        let rv = self.push_expr(candidates[idx]);
+        self.record(Inst::SampleCategorical {
+            candidates: candidates.to_vec(),
+            probs: probs.to_vec(),
+            out: rv.0,
+            decision: idx,
+        });
+        Ok(rv)
+    }
+
+    /// Candidate compute-at locations for `block`: all loops of its first
+    /// consumer (for `compute-at`), or — when the block has no consumer,
+    /// i.e. it is an output block — the loops of its first producer (for
+    /// `reverse-compute-at`, the paper's Figure 3 Step 2 where ReLU is
+    /// fused into a tile loop of Dense). Outermost first either way.
+    /// State-dependent support: the candidate set changes as earlier
+    /// transformations restructure the loop tree.
+    pub fn compute_location_candidates(&self, block_item: ItemId) -> Vec<ItemId> {
+        let consumers = self.prog.consumers_of(block_item);
+        let loops = if let Some(&c) = consumers.first() {
+            self.prog.loops_above(c)
+        } else {
+            let producers = self.prog.producers_of(block_item);
+            match producers.first() {
+                Some(&p) => self.prog.loops_above(p),
+                None => Vec::new(),
+            }
+        };
+        // Only the spatial prefix is a legal location: placing a block at
+        // or below a reduction loop would re-execute it per reduction step
+        // (recompute at best, wrong values at worst).
+        let mut out = Vec::new();
+        for l in loops {
+            match crate::tir::analysis::classify_loop(&self.prog, l) {
+                crate::tir::analysis::LoopClass::Spatial
+                | crate::tir::analysis::LoopClass::Unused => out.push(l),
+                _ => break,
+            }
+        }
+        out
+    }
+
+    /// Sample a compute-at location for `block`: one of its consumer's
+    /// loops, or `Root` (leave standalone), or `Inlined`.
+    pub fn sample_compute_location(&mut self, block: BlockRv) -> SchResult<LoopRv> {
+        self.sample_compute_location_decided(block, None)
+    }
+
+    /// Decision-overridable version of [`Schedule::sample_compute_location`].
+    /// Decision: `-1` root, `-2` inlined, `k >= 0` the k-th candidate loop.
+    pub fn sample_compute_location_decided(
+        &mut self,
+        block: BlockRv,
+        decision: Option<i64>,
+    ) -> SchResult<LoopRv> {
+        let item = self.block(block)?;
+        let candidates = self.compute_location_candidates(item);
+        let inlineable = self.prog.block_data(item).write_is_trivial()
+            && matches!(
+                self.prog.block_data(item).body,
+                crate::tir::BlockBody::Assign { .. }
+            );
+        let d = match decision {
+            Some(d) => {
+                match d {
+                    -1 => {}
+                    -2 => {
+                        if !inlineable {
+                            return Err(ScheduleError::InvalidDecision(
+                                "compute-location: block is not inlineable".into(),
+                            ));
+                        }
+                    }
+                    k if k >= 0 && (k as usize) < candidates.len() => {}
+                    k => {
+                        return Err(ScheduleError::InvalidDecision(format!(
+                            "compute-location decision {k} out of support ({} candidates)",
+                            candidates.len()
+                        )))
+                    }
+                }
+                d
+            }
+            None => {
+                // Uniform over {root} ∪ {inlined if legal} ∪ candidates.
+                let extra = 1 + usize::from(inlineable);
+                let total = candidates.len() + extra;
+                let pick = self.rng.gen_range(total);
+                if pick == 0 {
+                    -1
+                } else if inlineable && pick == 1 {
+                    -2
+                } else {
+                    (pick - extra) as i64
+                }
+            }
+        };
+        let r = match d {
+            -1 => LoopRef::Root,
+            -2 => LoopRef::Inlined,
+            k => LoopRef::Item(candidates[k as usize]),
+        };
+        let rv = self.push_loop(r);
+        self.record(Inst::SampleComputeLocation {
+            block: block.0,
+            out: rv.0,
+            decision: d,
+        });
+        Ok(rv)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::testutil::{dense_relu_prog, matmul_prog};
+    use crate::schedule::Schedule;
+
+    #[test]
+    fn enumerate_tiles_small() {
+        let tiles = enumerate_perfect_tiles(8, 2, 0);
+        assert_eq!(
+            *tiles,
+            vec![vec![1, 8], vec![2, 4], vec![4, 2], vec![8, 1]]
+        );
+    }
+
+    #[test]
+    fn enumerate_tiles_respects_innermost_bound() {
+        let tiles = enumerate_perfect_tiles(16, 2, 4);
+        assert!(tiles.iter().all(|t| *t.last().unwrap() <= 4));
+        assert!(tiles.contains(&vec![4, 4]));
+        assert!(!tiles.contains(&vec![1, 16]));
+    }
+
+    #[test]
+    fn enumerate_tiles_products_correct() {
+        for t in enumerate_perfect_tiles(24, 3, 0).iter() {
+            assert_eq!(t.iter().product::<i64>(), 24);
+        }
+    }
+
+    #[test]
+    fn sample_perfect_tile_draws_valid_factors() {
+        let mut s = Schedule::new(matmul_prog(64, 32), 7);
+        let b = s.get_block("matmul").unwrap();
+        let loops = s.get_loops(b).unwrap();
+        for _ in 0..10 {
+            let mut s2 = s.clone();
+            let rvs = s2.sample_perfect_tile(loops[0], 4, 16).unwrap();
+            let fs: Vec<i64> = rvs.iter().map(|&r| s2.expr_value(r)).collect();
+            assert_eq!(fs.iter().product::<i64>(), 64);
+            assert!(*fs.last().unwrap() <= 16);
+        }
+    }
+
+    #[test]
+    fn bad_tile_decision_rejected() {
+        let mut s = Schedule::new(matmul_prog(64, 32), 7);
+        let b = s.get_block("matmul").unwrap();
+        let loops = s.get_loops(b).unwrap();
+        let e = s.sample_perfect_tile_decided(loops[0], 2, 0, Some(vec![3, 21]));
+        assert!(matches!(e, Err(ScheduleError::InvalidDecision(_))));
+    }
+
+    #[test]
+    fn categorical_decision_out_of_range_rejected() {
+        let mut s = Schedule::new(matmul_prog(64, 32), 7);
+        let e = s.sample_categorical_decided(&[4, 8, 16], &[0.3, 0.3, 0.4], Some(3));
+        assert!(matches!(e, Err(ScheduleError::InvalidDecision(_))));
+        let ok = s
+            .sample_categorical_decided(&[4, 8, 16], &[0.3, 0.3, 0.4], Some(2))
+            .unwrap();
+        assert_eq!(s.expr_value(ok), 16);
+    }
+
+    #[test]
+    fn compute_location_candidates_are_consumer_loops() {
+        let mut s = Schedule::new(dense_relu_prog(16, 8), 7);
+        let dense = s.get_block("matmul").unwrap();
+        let item = s.block(dense).unwrap();
+        // dense's consumer is relu with 2 loops.
+        assert_eq!(s.compute_location_candidates(item).len(), 2);
+    }
+
+    #[test]
+    fn compute_location_inline_requires_assign_block() {
+        let mut s = Schedule::new(dense_relu_prog(16, 8), 7);
+        let dense = s.get_block("matmul").unwrap();
+        // dense is a reduction — decision -2 (inline) must be rejected.
+        let e = s.sample_compute_location_decided(dense, Some(-2));
+        assert!(matches!(e, Err(ScheduleError::InvalidDecision(_))));
+        // root is always fine.
+        let rv = s.sample_compute_location_decided(dense, Some(-1)).unwrap();
+        assert_eq!(s.loop_ref(rv), crate::schedule::LoopRef::Root);
+    }
+}

@@ -1,0 +1,68 @@
+//! Learning-driven search (paper §4): evolutionary search over traces with
+//! annealed Metropolis–Hastings acceptance, trace mutation + validation,
+//! learned-cost-model candidate filtering, and a task scheduler for
+//! end-to-end models.
+
+pub mod evolutionary;
+pub mod mutator;
+pub mod task_scheduler;
+
+pub use evolutionary::{EvolutionarySearch, ReplaySearch, SearchConfig, TuneResult};
+pub use mutator::mutate;
+pub use task_scheduler::{Allocation, Task, TaskScheduler};
+
+use crate::sim::{simulate, Target};
+use crate::tir::Program;
+
+/// The hardware measurement oracle `f(e)` (paper Figure 7's "hardware"
+/// box). Returns `None` for programs that are invalid on the target
+/// (scratchpad overflow, thread limits, unsupported intrinsics).
+pub trait Measurer {
+    fn measure(&mut self, prog: &Program) -> Option<f64>;
+    /// Number of measurements performed so far.
+    fn count(&self) -> usize;
+}
+
+/// Measurer backed by the analytical hardware simulator (the default
+/// testbed substitute — DESIGN.md §3).
+pub struct SimMeasurer {
+    pub target: Target,
+    n: usize,
+}
+
+impl SimMeasurer {
+    pub fn new(target: Target) -> SimMeasurer {
+        SimMeasurer { target, n: 0 }
+    }
+}
+
+impl Measurer for SimMeasurer {
+    fn measure(&mut self, prog: &Program) -> Option<f64> {
+        self.n += 1;
+        simulate(prog, &self.target).ok().map(|r| r.total_s)
+    }
+
+    fn count(&self) -> usize {
+        self.n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads;
+
+    #[test]
+    fn sim_measurer_counts_and_rejects() {
+        let mut m = SimMeasurer::new(Target::gpu());
+        let ok = workloads::matmul(1, 32, 32, 32);
+        assert!(m.measure(&ok).is_some());
+        // 4096 threads on one loop -> invalid on GPU.
+        let mut s = crate::schedule::Schedule::new(workloads::matmul(1, 4096, 16, 16), 0);
+        let b = s.get_block("matmul").unwrap();
+        let loops = s.get_loops(b).unwrap();
+        s.bind(loops[1], "threadIdx.x").unwrap();
+        assert!(m.measure(&s.prog).is_none());
+        assert_eq!(m.count(), 2);
+    }
+}

@@ -1,0 +1,234 @@
+//! Trace mutators (paper §4, Figure 7): propose a new variant of a trace
+//! by changing one random variable's sampling decision, then validate by
+//! replaying. Replay failure = the proposal left the support set and is
+//! rejected — the *trace validator*.
+
+use std::collections::HashMap;
+
+use crate::schedule::Schedule;
+use crate::tir::Program;
+use crate::trace::replay::{replay_with_decisions, Decision};
+use crate::trace::{Inst, Trace};
+use crate::util::rng::Rng;
+
+/// Divisors of `x` greater than 1.
+fn proper_divisors(x: i64) -> Vec<i64> {
+    let mut out = Vec::new();
+    let mut d = 2;
+    while d * d <= x {
+        if x % d == 0 {
+            out.push(d);
+            if d != x / d {
+                out.push(x / d);
+            }
+        }
+        d += 1;
+    }
+    if x > 1 {
+        out.push(x);
+    }
+    out.sort_unstable();
+    out
+}
+
+/// Propose a mutated decision for the sampling instruction at `idx`.
+/// Returns `None` when the instruction has no alternative decision.
+pub fn propose(trace: &Trace, idx: usize, rng: &mut Rng) -> Option<Decision> {
+    match &trace.insts[idx] {
+        // Tile-size transfer: move a divisor from one tile level to another
+        // (preserves the factor product, i.e. stays a perfect tile).
+        Inst::SamplePerfectTile {
+            decision,
+            max_innermost,
+            ..
+        } => {
+            let n = decision.len();
+            if n < 2 {
+                return None;
+            }
+            for _ in 0..16 {
+                let src = rng.gen_range(n);
+                let dst = rng.gen_range(n);
+                if src == dst || decision[src] <= 1 {
+                    continue;
+                }
+                let divs = proper_divisors(decision[src]);
+                if divs.is_empty() {
+                    continue;
+                }
+                let d = *rng.choose(&divs);
+                let mut new = decision.clone();
+                new[src] /= d;
+                new[dst] *= d;
+                if *max_innermost > 0 && *new.last().unwrap() > *max_innermost {
+                    continue;
+                }
+                if new != *decision {
+                    return Some(Decision::Tile(new));
+                }
+            }
+            None
+        }
+        // Re-draw a different categorical index, weighted by probs.
+        Inst::SampleCategorical {
+            candidates,
+            probs,
+            decision,
+            ..
+        } => {
+            if candidates.len() < 2 {
+                return None;
+            }
+            for _ in 0..16 {
+                let i = rng.sample_weighted(probs);
+                if i != *decision {
+                    return Some(Decision::Categorical(i));
+                }
+            }
+            None
+        }
+        // Compute-location moves need the candidate set *at that point in
+        // the trace*; handled by `mutate` below via prefix replay.
+        Inst::SampleComputeLocation { .. } => None,
+        _ => None,
+    }
+}
+
+/// Propose a compute-location move by replaying the prefix of the trace to
+/// recover the state-dependent candidate set.
+fn propose_location(
+    trace: &Trace,
+    idx: usize,
+    prog: &Program,
+    rng: &mut Rng,
+) -> Option<Decision> {
+    let (block, old) = match &trace.insts[idx] {
+        Inst::SampleComputeLocation { block, decision, .. } => (*block, *decision),
+        _ => return None,
+    };
+    // Replay everything before idx to recover the program state.
+    let prefix = Trace {
+        insts: trace.insts[..idx].to_vec(),
+    };
+    let sch = crate::trace::replay(&prefix, prog, 0).ok()?;
+    let item = sch.block(crate::schedule::BlockRv(block)).ok()?;
+    let n = sch.compute_location_candidates(item).len();
+    // Candidates: {-1 (root)} ∪ {0..n}; try to find one different from old.
+    let mut options: Vec<i64> = vec![-1];
+    options.extend(0..n as i64);
+    options.retain(|&d| d != old);
+    if options.is_empty() {
+        return None;
+    }
+    Some(Decision::Location(*rng.choose(&options)))
+}
+
+/// Mutate one sampling decision of `trace` and validate by replay.
+/// Returns the new schedule (with its updated trace), or `None` if no
+/// proposal was possible or validation rejected it.
+pub fn mutate(trace: &Trace, prog: &Program, rng: &mut Rng, seed: u64) -> Option<Schedule> {
+    let sampling = trace.sampling_indices();
+    if sampling.is_empty() {
+        return None;
+    }
+    // Try a few instruction picks before giving up.
+    for _ in 0..4 {
+        let idx = *rng.choose(&sampling);
+        let proposal = match &trace.insts[idx] {
+            Inst::SampleComputeLocation { .. } => propose_location(trace, idx, prog, rng),
+            _ => propose(trace, idx, rng),
+        };
+        let Some(decision) = proposal else { continue };
+        let mut overrides = HashMap::new();
+        overrides.insert(idx, decision);
+        // Validation: replay with the override; off-support decisions fail.
+        if let Ok(sch) = replay_with_decisions(trace, prog, seed, &overrides) {
+            if sch.prog.check_integrity().is_ok() {
+                return Some(sch);
+            }
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::Schedule;
+    use crate::sim::Target;
+    use crate::space::SpaceComposer;
+    use crate::tir::structural_hash;
+    use crate::trace::FactorArg;
+    use crate::workloads;
+
+    fn tiled_matmul(seed: u64) -> (Program, Schedule) {
+        let prog = workloads::matmul(1, 64, 64, 64);
+        let mut s = Schedule::new(prog.clone(), seed);
+        let b = s.get_block("matmul").unwrap();
+        let loops = s.get_loops(b).unwrap();
+        let t = s.sample_perfect_tile(loops[1], 2, 0).unwrap();
+        s.split(loops[1], &[FactorArg::Rv(t[0].0), FactorArg::Rv(t[1].0)])
+            .unwrap();
+        (prog, s)
+    }
+
+    #[test]
+    fn tile_transfer_preserves_product() {
+        let (_, s) = tiled_matmul(5);
+        let mut rng = Rng::seed_from_u64(1);
+        let idx = s.trace.sampling_indices()[0];
+        let old = match &s.trace.insts[idx] {
+            Inst::SamplePerfectTile { decision, .. } => decision.clone(),
+            _ => panic!(),
+        };
+        for _ in 0..10 {
+            if let Some(Decision::Tile(new)) = propose(&s.trace, idx, &mut rng) {
+                assert_eq!(new.iter().product::<i64>(), old.iter().product::<i64>());
+                assert_ne!(new, old);
+            }
+        }
+    }
+
+    #[test]
+    fn mutate_produces_structurally_different_valid_schedule() {
+        let (prog, s) = tiled_matmul(5);
+        let mut rng = Rng::seed_from_u64(2);
+        let mut seen_diff = false;
+        for i in 0..10 {
+            if let Some(m) = mutate(&s.trace, &prog, &mut rng, i) {
+                m.prog.check_integrity().unwrap();
+                if structural_hash(&m.prog) != structural_hash(&s.prog) {
+                    seen_diff = true;
+                }
+            }
+        }
+        assert!(seen_diff);
+    }
+
+    #[test]
+    fn mutate_composed_space_traces() {
+        // Mutations over realistic traces from the space composer.
+        let prog = workloads::fused_dense(64, 128, 64);
+        let composer = SpaceComposer::generic(Target::cpu_avx512());
+        let states = composer.generate(&prog, 11);
+        let mut rng = Rng::seed_from_u64(3);
+        let mut successes = 0;
+        for s in &states {
+            for i in 0..8 {
+                if let Some(m) = mutate(&s.trace, &prog, &mut rng, i) {
+                    m.prog.check_integrity().unwrap();
+                    successes += 1;
+                }
+            }
+        }
+        assert!(successes > 0, "no successful mutations");
+    }
+
+    #[test]
+    fn empty_trace_cannot_mutate() {
+        let prog = workloads::matmul(1, 16, 16, 16);
+        let t = Trace::default();
+        let mut rng = Rng::seed_from_u64(0);
+        assert!(mutate(&t, &prog, &mut rng, 0).is_none());
+    }
+}

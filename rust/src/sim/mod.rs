@@ -1,0 +1,11 @@
+//! Deterministic analytical hardware simulator.
+//!
+//! Stands in for the paper's measurement testbeds (AWS C5.9xlarge CPU and
+//! RTX 3070 GPU — see DESIGN.md §3 for the substitution argument). Exposes
+//! `f(e)`: scheduled tensor program -> estimated latency on a [`Target`].
+
+pub mod model;
+pub mod target;
+
+pub use model::{simulate, LatencyReport, SimError};
+pub use target::{CacheLevel, Target, TargetKind};

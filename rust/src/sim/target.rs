@@ -1,0 +1,197 @@
+//! Hardware target descriptions for the analytical latency simulator.
+//!
+//! Substitution record (DESIGN.md §3): the paper measures on an AWS
+//! C5.9xlarge (Intel Xeon Platinum 8124M, AVX-512) and an NVIDIA RTX 3070.
+//! Neither is available here, so targets parameterize an analytical model
+//! with the published characteristics of those parts. What matters for
+//! reproducing the paper's *shape* claims is the relative reward structure
+//! (locality, vectorization, parallelism, tensor intrinsics), which these
+//! parameters encode.
+
+/// One level of the (per-core or shared) cache hierarchy.
+#[derive(Debug, Clone)]
+pub struct CacheLevel {
+    pub name: &'static str,
+    /// Capacity in bytes.
+    pub size: i64,
+    /// Sustained bandwidth into the level above it, bytes/s.
+    pub bandwidth: f64,
+    /// Whether the level is private per core (true) or chip-shared.
+    pub per_core: bool,
+}
+
+/// Kind of execution model the simulator applies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TargetKind {
+    /// Multicore CPU: `parallel` loops spread across cores, `vectorize`
+    /// maps to SIMD lanes.
+    Cpu,
+    /// GPU-style accelerator: `bind` maps loops onto a grid of thread
+    /// blocks; `shared`-scope buffers live in per-block scratchpad.
+    Gpu,
+}
+
+/// A simulated hardware target.
+#[derive(Debug, Clone)]
+pub struct Target {
+    pub name: &'static str,
+    pub kind: TargetKind,
+    /// CPU cores or GPU SMs.
+    pub num_cores: usize,
+    /// f32 SIMD lanes per vector instruction (CPU) / per-thread ILP unit (GPU).
+    pub vector_lanes: i64,
+    /// Peak f32 FLOP/s of one core/SM assuming full vector + FMA issue.
+    pub peak_flops_per_core: f64,
+    /// Cache hierarchy, innermost (fastest/smallest) first.
+    pub cache: Vec<CacheLevel>,
+    /// Off-chip bandwidth, bytes/s.
+    pub dram_bandwidth: f64,
+    /// Per-block scratchpad capacity in bytes (GPU shared mem / TPU VMEM slice).
+    pub shared_mem_bytes: i64,
+    /// Scratchpad bandwidth per SM, bytes/s.
+    pub shared_bandwidth: f64,
+    /// Max resident threads per block.
+    pub max_threads_per_block: i64,
+    /// Seconds to spawn/join one parallel region.
+    pub parallel_overhead: f64,
+    /// Seconds of issue overhead per executed loop iteration.
+    pub loop_overhead: f64,
+    /// Tensor intrinsics the target supports (names in the intrin registry).
+    pub tensor_intrins: Vec<&'static str>,
+}
+
+impl Target {
+    /// AWS C5.9xlarge-class CPU: 18 physical cores, AVX-512 (16 f32 lanes),
+    /// 2 FMA ports at ~3.0 GHz -> 192 GFLOP/s per core.
+    pub fn cpu_avx512() -> Target {
+        Target {
+            name: "cpu-avx512",
+            kind: TargetKind::Cpu,
+            num_cores: 18,
+            vector_lanes: 16,
+            peak_flops_per_core: 192e9,
+            cache: vec![
+                CacheLevel {
+                    name: "L1",
+                    size: 32 * 1024,
+                    bandwidth: 400e9,
+                    per_core: true,
+                },
+                CacheLevel {
+                    name: "L2",
+                    size: 1024 * 1024,
+                    bandwidth: 150e9,
+                    per_core: true,
+                },
+                CacheLevel {
+                    name: "L3",
+                    size: 24 * 1024 * 1024,
+                    // Aggregate (chip-shared) sustained L3 bandwidth.
+                    bandwidth: 300e9,
+                    per_core: false,
+                },
+            ],
+            dram_bandwidth: 90e9,
+            shared_mem_bytes: 0,
+            shared_bandwidth: 0.0,
+            max_threads_per_block: 0,
+            // Warm-pool OpenMP-class fork/join barrier on ~18 cores.
+            parallel_overhead: 3e-6,
+            loop_overhead: 0.8e-9,
+            tensor_intrins: vec!["dot_4x4"],
+        }
+    }
+
+    /// RTX 3070-class GPU: 46 SMs, ~20 TFLOP/s f32, TensorCore WMMA
+    /// fragments, 100 KB shared memory per SM, 448 GB/s HBM.
+    pub fn gpu() -> Target {
+        Target {
+            name: "gpu-rtx3070",
+            kind: TargetKind::Gpu,
+            num_cores: 46,
+            vector_lanes: 32, // warp width
+            peak_flops_per_core: 440e9,
+            cache: vec![CacheLevel {
+                name: "L2",
+                size: 4 * 1024 * 1024,
+                bandwidth: 1500e9,
+                per_core: false,
+            }],
+            dram_bandwidth: 448e9,
+            shared_mem_bytes: 100 * 1024,
+            shared_bandwidth: 1200e9,
+            max_threads_per_block: 1024,
+            parallel_overhead: 5e-6,
+            loop_overhead: 0.25e-9,
+            tensor_intrins: vec!["wmma_16x16x16"],
+        }
+    }
+
+    /// TPU-flavoured target for the Pallas hardware-adaptation notes:
+    /// VMEM-sized scratchpad (16 MB) and the 128x128 MXU systolic intrinsic.
+    pub fn tpu_like() -> Target {
+        Target {
+            name: "tpu-like",
+            kind: TargetKind::Gpu,
+            num_cores: 2, // tensor cores per chip
+            vector_lanes: 8,
+            peak_flops_per_core: 8e12,
+            cache: vec![],
+            dram_bandwidth: 600e9,
+            shared_mem_bytes: 16 * 1024 * 1024,
+            shared_bandwidth: 3000e9,
+            max_threads_per_block: 1024,
+            parallel_overhead: 2e-6,
+            loop_overhead: 0.3e-9,
+            tensor_intrins: vec!["mxu_128x128"],
+        }
+    }
+
+    /// Total peak FLOP/s of the whole chip.
+    pub fn peak_flops(&self) -> f64 {
+        self.peak_flops_per_core * self.num_cores as f64
+    }
+
+    /// Parse a target by name ("cpu", "gpu", "tpu").
+    pub fn by_name(name: &str) -> Option<Target> {
+        match name {
+            "cpu" | "cpu-avx512" => Some(Target::cpu_avx512()),
+            "gpu" | "gpu-rtx3070" => Some(Target::gpu()),
+            "tpu" | "tpu-like" => Some(Target::tpu_like()),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_peak_reasonable() {
+        let t = Target::cpu_avx512();
+        let pf = t.peak_flops();
+        assert!(pf > 1e12 && pf < 10e12, "peak {pf}");
+    }
+
+    #[test]
+    fn by_name_resolves() {
+        assert_eq!(Target::by_name("cpu").unwrap().kind, TargetKind::Cpu);
+        assert_eq!(Target::by_name("gpu").unwrap().kind, TargetKind::Gpu);
+        assert!(Target::by_name("vax").is_none());
+    }
+
+    #[test]
+    fn cache_sizes_increase_outward() {
+        let t = Target::cpu_avx512();
+        for w in t.cache.windows(2) {
+            assert!(w[0].size < w[1].size);
+            // Effective chip-wide bandwidth decreases outward (per-core
+            // levels multiply by the core count).
+            let eff = |c: &CacheLevel| {
+                c.bandwidth * if c.per_core { t.num_cores as f64 } else { 1.0 }
+            };
+            assert!(eff(&w[0]) > eff(&w[1]));
+        }
+    }
+}

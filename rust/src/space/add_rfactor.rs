@@ -1,0 +1,139 @@
+//! Add-Rfactor: CPU module for reduction blocks with too little spatial
+//! parallelism. Splits a reduction loop with sampled factors and
+//! `rfactor`s the block so the partial sums can run across cores.
+
+use crate::schedule::{SchResult, Schedule};
+use crate::sim::Target;
+use crate::space::{try_transform, TransformModule};
+use crate::tir::analysis::{classify_loop, LoopClass};
+use crate::tir::LoopKind;
+use crate::trace::FactorArg;
+
+pub struct AddRfactor {
+    /// Apply only when the spatial trip count is below
+    /// `cores * jobs_per_core` (otherwise plain parallelism suffices).
+    pub jobs_per_core: i64,
+}
+
+impl AddRfactor {
+    pub fn new() -> AddRfactor {
+        AddRfactor { jobs_per_core: 2 }
+    }
+
+    fn transform(&self, s: &mut Schedule, block_name: &str) -> SchResult<()> {
+        let b = s.get_block(block_name)?;
+        let loops = s.get_loops(b)?;
+        // Find the first serial reduction loop with a meaningful extent.
+        let mut target_loop = None;
+        for &l in &loops {
+            let item = s.loop_item(l)?;
+            if s.prog.loop_data(item).kind == LoopKind::Serial
+                && classify_loop(&s.prog, item) == LoopClass::Reduce
+                && s.prog.loop_data(item).extent >= 16
+            {
+                target_loop = Some(l);
+                break;
+            }
+        }
+        let l = target_loop.ok_or(crate::schedule::ScheduleError::NotReduction(
+            "no reduction loop to rfactor".into(),
+        ))?;
+        let t = s.sample_perfect_tile(l, 2, 0)?;
+        let parts = s.split(l, &[FactorArg::Rv(t[0].0), FactorArg::Rv(t[1].0)])?;
+        s.rfactor(b, parts[0])?;
+        Ok(())
+    }
+}
+
+impl Default for AddRfactor {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl TransformModule for AddRfactor {
+    fn name(&self) -> &'static str {
+        "add-rfactor"
+    }
+
+    fn apply(&self, sch: Schedule, block_name: &str, target: &Target) -> Vec<Schedule> {
+        let applicable = sch
+            .prog
+            .find_block(block_name)
+            .map(|b| {
+                let bd = sch.prog.block_data(b);
+                let spatial: i64 = bd.spatial_iters().map(|iv| iv.extent).product();
+                bd.is_reduction() && spatial < target.num_cores as i64 * self.jobs_per_core
+            })
+            .unwrap_or(false);
+        if !applicable {
+            return vec![sch];
+        }
+        // Fork the space: rfactored + original (rfactor costs an extra pass
+        // over the partials; which wins depends on shape).
+        match try_transform(&sch, |s| self.transform(s, block_name)) {
+            Some(out) => vec![out, sch],
+            None => vec![sch],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tir::analysis::program_flops;
+    use crate::tir::{rd, sp, AExpr, BinOp, BlockBody, CExpr, DType, Program, Region};
+
+    /// A long dot-product: tiny spatial extent, big reduction.
+    fn dot(n: i64) -> Program {
+        let mut p = Program::new("dot");
+        let a = p.param("A", vec![n], DType::F32);
+        let b = p.param("B", vec![n], DType::F32);
+        let c = p.param("C", vec![1], DType::F32);
+        p.emit("dot", &[sp("u", 1), rd("k", n)], |iv| {
+            let (u, k) = (iv[0], iv[1]);
+            (
+                vec![
+                    Region::point(a, vec![AExpr::Var(k)]),
+                    Region::point(b, vec![AExpr::Var(k)]),
+                ],
+                vec![Region::point(c, vec![AExpr::Var(u)])],
+                BlockBody::Reduce {
+                    init: CExpr::ConstF(0.0),
+                    op: BinOp::Add,
+                    rhs: CExpr::bin(
+                        BinOp::Mul,
+                        CExpr::load(a, vec![AExpr::Var(k)]),
+                        CExpr::load(b, vec![AExpr::Var(k)]),
+                    ),
+                },
+            )
+        });
+        p
+    }
+
+    #[test]
+    fn rfactors_long_dot_product() {
+        let t = Target::cpu_avx512();
+        let prog = dot(1 << 16);
+        let flops = program_flops(&prog);
+        let m = AddRfactor::new();
+        let variants = m.apply(Schedule::new(prog, 1), "dot", &t);
+        assert_eq!(variants.len(), 2);
+        let rf = &variants[0];
+        rf.prog.check_integrity().unwrap();
+        // A partial-sum block appeared; flops grow only by the final merge.
+        assert!(rf.prog.blocks().len() > 1);
+        assert!(program_flops(&rf.prog) >= flops);
+    }
+
+    #[test]
+    fn skips_blocks_with_plenty_of_spatial_parallelism() {
+        let t = Target::cpu_avx512();
+        let prog = crate::workloads::matmul(1, 128, 128, 128);
+        let m = AddRfactor::new();
+        let variants = m.apply(Schedule::new(prog, 1), "matmul", &t);
+        assert_eq!(variants.len(), 1);
+        assert!(variants[0].trace.is_empty());
+    }
+}

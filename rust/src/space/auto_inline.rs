@@ -1,0 +1,114 @@
+//! Auto-Inline: fold elementwise blocks into their consumers (or, for
+//! output blocks, back into their producer) for memory-bandwidth
+//! efficiency — the paper's canonical example of a generic module (§3.2).
+
+use crate::schedule::Schedule;
+use crate::sim::Target;
+use crate::space::{try_transform, TransformModule};
+
+/// Deterministic module: no sampling. When the block is a trivially-written
+/// assignment it is inlined forward into its consumers; when it is the
+/// final output of a chain it is reverse-inlined into its producer.
+pub struct AutoInline {
+    /// Also attempt reverse inlining of output blocks (default true).
+    pub into_producer: bool,
+}
+
+impl AutoInline {
+    pub fn new() -> AutoInline {
+        AutoInline { into_producer: true }
+    }
+}
+
+impl Default for AutoInline {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl TransformModule for AutoInline {
+    fn name(&self) -> &'static str {
+        "auto-inline"
+    }
+
+    fn apply(&self, sch: Schedule, block_name: &str, _target: &Target) -> Vec<Schedule> {
+        // Forward inline into consumers.
+        if let Some(s) = try_transform(&sch, |s| {
+            let b = s.get_block(block_name)?;
+            s.compute_inline(b)
+        }) {
+            return vec![s];
+        }
+        // Reverse inline into the single producer (output elementwise blocks).
+        if self.into_producer {
+            if let Some(s) = try_transform(&sch, |s| {
+                let b = s.get_block(block_name)?;
+                s.reverse_compute_inline(b)
+            }) {
+                return vec![s];
+            }
+        }
+        vec![sch]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads;
+
+    fn apply_all(mut sch: Schedule, m: &AutoInline) -> Schedule {
+        let names: Vec<String> = sch
+            .prog
+            .blocks()
+            .iter()
+            .map(|&b| sch.prog.block_data(b).name.clone())
+            .collect();
+        let t = crate::sim::Target::cpu_avx512();
+        for n in names {
+            if sch.prog.find_block(&n).is_some() {
+                sch = m.apply(sch, &n, &t).pop().unwrap();
+            }
+        }
+        sch
+    }
+
+    #[test]
+    fn inlines_bias_into_relu_in_fused_dense() {
+        let prog = workloads::fused_dense(32, 64, 32);
+        let sch = Schedule::new(prog, 0);
+        let out = apply_all(sch, &AutoInline::new());
+        // bias_add folds into relu; dense (reduction) and relu remain.
+        assert!(out.prog.find_block("bias_add").is_none());
+        assert!(out.prog.find_block("dense").is_some());
+        assert!(out.prog.find_block("relu").is_some());
+    }
+
+    #[test]
+    fn inlines_transpose_into_batch_matmul() {
+        let prog = workloads::transpose_batch_matmul(32, 4, 16);
+        let sch = Schedule::new(prog, 0);
+        let out = apply_all(sch, &AutoInline::new());
+        assert!(out.prog.find_block("transpose").is_none());
+        assert!(out.prog.find_block("batch_matmul").is_some());
+    }
+
+    #[test]
+    fn softmax_exp_inlines_into_both_consumers() {
+        let prog = workloads::softmax(1, 64, 64);
+        let sch = Schedule::new(prog, 0);
+        let out = apply_all(sch, &AutoInline::new());
+        assert!(out.prog.find_block("exp").is_none());
+        // Reductions cannot be inlined.
+        assert!(out.prog.find_block("row_max").is_some());
+        assert!(out.prog.find_block("row_sum").is_some());
+    }
+
+    #[test]
+    fn reduction_block_untouched() {
+        let prog = workloads::matmul(1, 32, 32, 32);
+        let sch = Schedule::new(prog, 0);
+        let out = apply_all(sch, &AutoInline::new());
+        assert!(out.prog.find_block("matmul").is_some());
+    }
+}

@@ -1,0 +1,244 @@
+//! Composable search-space construction: transformation modules (§3.2).
+//!
+//! A [`TransformModule`] is the paper's *transformation module*: a named,
+//! reusable unit of (program analysis + sampling + stochastic
+//! transformation). The [`SpaceComposer`] composes a list of modules over
+//! every block of the program (Figure 5's algorithm): visiting blocks in
+//! execution order and applying each module in turn, flat-mapping over the
+//! design variants each application returns. The resulting schedules carry
+//! *design-space traces* — linearized probabilistic programs whose sampling
+//! decisions the search later re-draws and mutates.
+
+pub mod add_rfactor;
+pub mod auto_inline;
+pub mod cross_thread_reduction;
+pub mod multi_level_tiling;
+pub mod parallel_vectorize_unroll;
+pub mod random_compute_location;
+pub mod thread_bind;
+pub mod use_tensor_core;
+
+pub use add_rfactor::AddRfactor;
+pub use auto_inline::AutoInline;
+pub use cross_thread_reduction::CrossThreadReduction;
+pub use multi_level_tiling::MultiLevelTiling;
+pub use parallel_vectorize_unroll::ParallelVectorizeUnroll;
+pub use random_compute_location::RandomComputeLocation;
+pub use thread_bind::ThreadBind;
+pub use use_tensor_core::UseTensorCore;
+
+use crate::schedule::{SchResult, Schedule};
+use crate::sim::{Target, TargetKind};
+use crate::tir::Program;
+
+/// A composable transformation module (paper §3.2, Figure 4).
+///
+/// `apply` receives one schedule state and the *name* of the block to
+/// consider (names are stable across design variants; RV handles are not)
+/// and returns the design variants it produces. Returning the input
+/// unchanged (one variant) means "not applicable here". Returning more
+/// than one variant forks the design space (e.g. tensorized + plain).
+pub trait TransformModule {
+    fn name(&self) -> &'static str;
+    fn apply(&self, sch: Schedule, block_name: &str, target: &Target) -> Vec<Schedule>;
+}
+
+/// Run `f` on a clone of `sch`; keep the transformed schedule if every
+/// primitive succeeded, otherwise discard it. This is the standard module
+/// idiom: probe applicability by attempting the transformation.
+pub fn try_transform(
+    sch: &Schedule,
+    f: impl FnOnce(&mut Schedule) -> SchResult<()>,
+) -> Option<Schedule> {
+    let mut c = sch.clone();
+    match f(&mut c) {
+        Ok(()) => Some(c),
+        Err(_) => None,
+    }
+}
+
+/// Composes transformation modules into a search space generator
+/// (Figure 5 left: `Compose([m1, ..., mk])`).
+pub struct SpaceComposer {
+    pub modules: Vec<Box<dyn TransformModule>>,
+    pub target: Target,
+}
+
+impl SpaceComposer {
+    pub fn new(modules: Vec<Box<dyn TransformModule>>, target: Target) -> SpaceComposer {
+        SpaceComposer { modules, target }
+    }
+
+    /// The paper's generic per-target module composition (Figure 5 right,
+    /// minus hardware-specific modules).
+    pub fn generic(target: Target) -> SpaceComposer {
+        let modules: Vec<Box<dyn TransformModule>> = match target.kind {
+            TargetKind::Cpu => vec![
+                Box::new(AutoInline::new()),
+                Box::new(MultiLevelTiling::cpu()),
+                Box::new(AddRfactor::new()),
+                Box::new(RandomComputeLocation::new()),
+                Box::new(ParallelVectorizeUnroll::new()),
+            ],
+            TargetKind::Gpu => vec![
+                Box::new(AutoInline::new()),
+                Box::new(MultiLevelTiling::gpu()),
+                Box::new(CrossThreadReduction::new()),
+                Box::new(RandomComputeLocation::new()),
+                Box::new(ThreadBind::new()),
+            ],
+        };
+        SpaceComposer::new(modules, target)
+    }
+
+    /// Generic composition plus the hardware-specific `Use-Tensor-Core`
+    /// module (Figure 5 right / Figure 10). The module is inserted after
+    /// AutoInline so it claims matmul-like blocks before generic tiling.
+    pub fn with_tensor_core(target: Target) -> SpaceComposer {
+        let mut c = SpaceComposer::generic(target);
+        c.modules.insert(1, Box::new(UseTensorCore::wmma()));
+        c
+    }
+
+    /// Generate the design space for `prog`: one or more schedules whose
+    /// traces are distinct linearized probabilistic programs (Figure 6).
+    /// Sampling decisions inside are drawn with `seed`; the search re-draws
+    /// them per population member via `replay_fresh`.
+    pub fn generate(&self, prog: &Program, seed: u64) -> Vec<Schedule> {
+        // Blocks in execution (pre-)order by name. Modules look blocks up by
+        // name because inlining/fusion invalidates ids across variants.
+        let block_names: Vec<String> = prog
+            .blocks()
+            .iter()
+            .map(|&b| prog.block_data(b).name.clone())
+            .collect();
+        let mut states = vec![Schedule::new(prog.clone(), seed)];
+        for name in &block_names {
+            for module in &self.modules {
+                let mut next = Vec::with_capacity(states.len());
+                for sch in states.drain(..) {
+                    // The block may have been inlined away in this variant.
+                    if sch.prog.find_block(name).is_none() {
+                        next.push(sch);
+                        continue;
+                    }
+                    let variants = module.apply(sch, name, &self.target);
+                    next.extend(variants);
+                }
+                states = next;
+            }
+        }
+        states
+    }
+}
+
+/// Block-level analyses shared by modules.
+pub mod analysis {
+    use crate::tir::{IterKind, ItemId, Program};
+
+    /// Whether the block would benefit from multi-level tiling: it is a
+    /// reduction and at least one read region exhibits data reuse (some
+    /// spatial iter var is absent from the region's indices — the same
+    /// value is re-read across that spatial dimension).
+    pub fn needs_multi_level_tiling(p: &Program, block: ItemId) -> bool {
+        let bd = p.block_data(block);
+        if !bd.is_reduction() {
+            return false;
+        }
+        let spatial: Vec<_> = bd
+            .iters
+            .iter()
+            .filter(|iv| iv.kind == IterKind::Spatial && iv.extent > 1)
+            .map(|iv| iv.var)
+            .collect();
+        if spatial.is_empty() {
+            return false;
+        }
+        bd.reads.iter().any(|r| {
+            let mut vars = Vec::new();
+            for (s, _) in &r.ranges {
+                s.collect_vars(&mut vars);
+            }
+            spatial.iter().any(|sv| !vars.contains(sv))
+        })
+    }
+
+    /// Whether the block body is a multiply-accumulate reduction (matmul-
+    /// shaped), the shape `tensorize` requires.
+    pub fn is_matmul_like(p: &Program, block: ItemId) -> bool {
+        use crate::tir::{BinOp, BlockBody, CExpr};
+        let bd = p.block_data(block);
+        let mac = matches!(&bd.body, BlockBody::Reduce { op: BinOp::Add, rhs, .. }
+            if matches!(rhs, CExpr::Bin(BinOp::Mul, _, _)));
+        mac && bd.spatial_iters().count() >= 2 && bd.reduce_iters().count() >= 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::analysis::*;
+    use super::*;
+    use crate::workloads;
+
+    #[test]
+    fn needs_mlt_matmul_yes_softmax_no() {
+        let p = workloads::matmul(1, 128, 128, 128);
+        let b = p.find_block("matmul").unwrap();
+        assert!(needs_multi_level_tiling(&p, b));
+
+        let s = workloads::softmax(1, 256, 256);
+        let rm = s.find_block("row_max").unwrap();
+        assert!(!needs_multi_level_tiling(&s, rm));
+    }
+
+    #[test]
+    fn matmul_like_detection() {
+        let p = workloads::matmul(1, 64, 64, 64);
+        assert!(is_matmul_like(&p, p.find_block("matmul").unwrap()));
+        let s = workloads::softmax(1, 64, 64);
+        assert!(!is_matmul_like(&s, s.find_block("row_max").unwrap()));
+        let c = workloads::conv2d(workloads::Conv2dParams::new(1, 56, 56, 16, 32, 3, 1, 1));
+        assert!(is_matmul_like(&c, c.find_block("conv2d").unwrap()));
+    }
+
+    #[test]
+    fn generic_composer_produces_valid_schedules() {
+        use crate::sim::simulate;
+        for target in [Target::cpu_avx512(), Target::gpu()] {
+            let prog = workloads::fused_dense(64, 128, 64);
+            let composer = SpaceComposer::generic(target.clone());
+            let states = composer.generate(&prog, 42);
+            assert!(!states.is_empty());
+            for s in &states {
+                s.prog.check_integrity().unwrap();
+                assert!(!s.trace.is_empty());
+            }
+            assert!(
+                states.iter().any(|s| simulate(&s.prog, &target).is_ok()),
+                "no simulatable schedule for {}",
+                target.name
+            );
+        }
+    }
+
+    #[test]
+    fn composed_space_traces_replay() {
+        use crate::trace::replay;
+        let prog = workloads::fused_dense(64, 128, 64);
+        let composer = SpaceComposer::generic(Target::cpu_avx512());
+        for s in composer.generate(&prog, 7) {
+            let r = replay(&s.trace, &prog, 0).unwrap();
+            assert_eq!(
+                crate::tir::structural_hash(&s.prog),
+                crate::tir::structural_hash(&r.prog)
+            );
+        }
+    }
+
+    #[test]
+    fn with_tensor_core_extends_module_list() {
+        let c = SpaceComposer::with_tensor_core(Target::gpu());
+        assert!(c.modules.iter().any(|m| m.name() == "use-tensor-core"));
+        assert_eq!(c.modules.len(), SpaceComposer::generic(Target::gpu()).modules.len() + 1);
+    }
+}

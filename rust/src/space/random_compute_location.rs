@@ -1,0 +1,154 @@
+//! Random-Compute-Location: the paper's Figure 3 Step 2. Samples where an
+//! elementwise block computes — standalone at the root, inlined, or fused
+//! under a loop of its consumer (`compute-at`) / producer
+//! (`reverse-compute-at`, e.g. ReLU into a Dense tile loop).
+
+use crate::schedule::{LoopRef, SchResult, Schedule};
+use crate::sim::Target;
+use crate::space::{try_transform, TransformModule};
+use crate::tir::BlockBody;
+
+pub struct RandomComputeLocation;
+
+impl RandomComputeLocation {
+    pub fn new() -> RandomComputeLocation {
+        RandomComputeLocation
+    }
+
+    fn transform(&self, s: &mut Schedule, block_name: &str) -> SchResult<()> {
+        let b = s.get_block(block_name)?;
+        let item = s.block(b)?;
+        let has_consumers = !s.prog.consumers_of(item).is_empty();
+        if has_consumers {
+            // Forward: compute-at handles Root / Inlined sentinels itself.
+            let loc = s.sample_compute_location(b)?;
+            s.compute_at(b, loc)?;
+        } else {
+            // Output block: fuse *into the producer's* loop nest. Draw from
+            // {root} ∪ candidate loops (inlining an output block into a
+            // reduction producer is not legal, so exclude -2).
+            let candidates = s.compute_location_candidates(item);
+            if candidates.is_empty() {
+                return Ok(());
+            }
+            let pick = s.rng.gen_range(candidates.len() + 1);
+            let d = if pick == 0 { -1 } else { (pick - 1) as i64 };
+            let loc = s.sample_compute_location_decided(b, Some(d))?;
+            if s.loop_ref(loc) != LoopRef::Root {
+                s.reverse_compute_at(b, loc)?;
+            } else {
+                // Recorded no-op keeps root mutations on-support.
+                s.reverse_compute_at(b, loc)?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Default for RandomComputeLocation {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl TransformModule for RandomComputeLocation {
+    fn name(&self) -> &'static str {
+        "random-compute-location"
+    }
+
+    fn apply(&self, sch: Schedule, block_name: &str, _target: &Target) -> Vec<Schedule> {
+        // Only movable elementwise blocks.
+        let movable = sch
+            .prog
+            .find_block(block_name)
+            .map(|b| {
+                let bd = sch.prog.block_data(b);
+                matches!(bd.body, BlockBody::Assign { .. }) && bd.write_is_trivial()
+            })
+            .unwrap_or(false);
+        if !movable {
+            return vec![sch];
+        }
+        match try_transform(&sch, |s| self.transform(s, block_name)) {
+            Some(out) => vec![out],
+            None => vec![sch],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::Schedule;
+    use crate::sim::Target;
+    use crate::trace::FactorArg;
+    use crate::workloads;
+
+    /// dense_relu with dense pre-tiled so there are interesting locations.
+    fn tiled_dense_relu(seed: u64) -> Schedule {
+        let prog = workloads::fused_dense(64, 64, 64);
+        let mut s = Schedule::new(prog, seed);
+        // Inline bias first so relu directly consumes dense's output.
+        let bias = s.get_block("bias_add").unwrap();
+        s.compute_inline(bias).unwrap();
+        let d = s.get_block("dense").unwrap();
+        let loops = s.get_loops(d).unwrap();
+        let i = s.split(loops[0], &[FactorArg::Lit(4), FactorArg::Lit(16)]).unwrap();
+        let _ = i;
+        s
+    }
+
+    #[test]
+    fn output_block_fuses_under_producer_loop() {
+        let t = Target::cpu_avx512();
+        let m = RandomComputeLocation::new();
+        // Across seeds we must see at least one fused placement (relu's
+        // loops_above non-empty under the dense nest) and at least one root.
+        let mut fused = 0;
+        let mut root = 0;
+        for seed in 0..16 {
+            let s = tiled_dense_relu(seed);
+            let out = m.apply(s, "relu", &t).pop().unwrap();
+            out.prog.check_integrity().unwrap();
+            let relu = out.prog.find_block("relu").unwrap();
+            let dense = out.prog.find_block("dense").unwrap();
+            let shared = out
+                .prog
+                .loops_above(relu)
+                .iter()
+                .any(|l| out.prog.loops_above(dense).contains(l));
+            if shared {
+                fused += 1;
+            } else {
+                root += 1;
+            }
+        }
+        assert!(fused > 0, "never fused");
+        assert!(root > 0, "never stayed at root");
+    }
+
+    #[test]
+    fn reduction_block_not_moved() {
+        let t = Target::cpu_avx512();
+        let m = RandomComputeLocation::new();
+        let prog = workloads::matmul(1, 32, 32, 32);
+        let s = Schedule::new(prog, 0);
+        let out = m.apply(s, "matmul", &t).pop().unwrap();
+        assert!(out.trace.is_empty());
+    }
+
+    #[test]
+    fn sampled_location_is_recorded_and_replayable() {
+        use crate::trace::replay;
+        let t = Target::cpu_avx512();
+        let m = RandomComputeLocation::new();
+        let s = tiled_dense_relu(3);
+        let prog0 = workloads::fused_dense(64, 64, 64);
+        let out = m.apply(s, "relu", &t).pop().unwrap();
+        let r = replay(&out.trace, &prog0, 0).unwrap();
+        assert_eq!(
+            crate::tir::structural_hash(&out.prog),
+            crate::tir::structural_hash(&r.prog)
+        );
+    }
+}

@@ -1,0 +1,141 @@
+//! Thread-Bind: GPU fallback module. Any block left without thread
+//! bindings (elementwise copies, normalization stages, ...) gets its
+//! leading spatial loops fused, split by sampled factors, and bound to
+//! `blockIdx.x` / `threadIdx.x` — without this every unbound kernel would
+//! serialize on one GPU thread.
+
+use crate::schedule::{LoopRv, SchResult, Schedule};
+use crate::sim::Target;
+use crate::space::{try_transform, TransformModule};
+use crate::tir::analysis::{classify_loop, LoopClass};
+use crate::tir::LoopKind;
+use crate::trace::FactorArg;
+
+pub struct ThreadBind {
+    pub max_threads: i64,
+}
+
+impl ThreadBind {
+    pub fn new() -> ThreadBind {
+        ThreadBind { max_threads: 1024 }
+    }
+
+    fn transform(&self, s: &mut Schedule, block_name: &str) -> SchResult<()> {
+        let b = s.get_block(block_name)?;
+        let loops = s.get_loops(b)?;
+        // Leading run of serial spatial loops.
+        let mut run: Vec<LoopRv> = Vec::new();
+        for &l in &loops {
+            let item = s.loop_item(l)?;
+            let ld = s.prog.loop_data(item);
+            let cls = classify_loop(&s.prog, item);
+            if ld.kind != LoopKind::Serial
+                || !(cls == LoopClass::Spatial || cls == LoopClass::Unused)
+            {
+                break;
+            }
+            run.push(l);
+        }
+        if run.is_empty() {
+            return Err(crate::schedule::ScheduleError::Unsupported(
+                "no spatial loops to bind".into(),
+            ));
+        }
+        let fused = if run.len() > 1 { s.fuse(&run)? } else { run[0] };
+        let extent = s.prog.loop_data(s.loop_item(fused)?).extent;
+        if extent == 1 {
+            s.bind(fused, "blockIdx.x")?;
+            return Ok(());
+        }
+        let t = s.sample_perfect_tile(fused, 2, self.max_threads)?;
+        let parts = s.split(fused, &[FactorArg::Rv(t[0].0), FactorArg::Rv(t[1].0)])?;
+        s.bind(parts[0], "blockIdx.x")?;
+        s.bind(parts[1], "threadIdx.x")?;
+        Ok(())
+    }
+}
+
+impl Default for ThreadBind {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl TransformModule for ThreadBind {
+    fn name(&self) -> &'static str {
+        "thread-bind"
+    }
+
+    fn apply(&self, sch: Schedule, block_name: &str, _target: &Target) -> Vec<Schedule> {
+        // Skip blocks that already have any thread binding above them.
+        let unbound = sch
+            .prog
+            .find_block(block_name)
+            .map(|b| {
+                sch.prog.loops_above(b).iter().all(|&l| {
+                    !matches!(sch.prog.loop_data(l).kind, LoopKind::ThreadBinding(_))
+                })
+            })
+            .unwrap_or(false);
+        if !unbound {
+            return vec![sch];
+        }
+        match try_transform(&sch, |s| self.transform(s, block_name)) {
+            Some(out) => vec![out],
+            None => vec![sch],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{simulate, Target};
+    use crate::workloads;
+
+    fn bound_axes(s: &Schedule) -> Vec<String> {
+        s.prog
+            .preorder()
+            .into_iter()
+            .filter(|&i| s.prog.is_loop(i))
+            .filter_map(|i| match &s.prog.loop_data(i).kind {
+                LoopKind::ThreadBinding(t) => Some(t.clone()),
+                _ => None,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn binds_elementwise_block() {
+        let t = Target::gpu();
+        let m = ThreadBind::new();
+        let prog = workloads::relu(1 << 20);
+        let out = m.apply(Schedule::new(prog.clone(), 4), "relu", &t).pop().unwrap();
+        let axes = bound_axes(&out);
+        assert!(axes.contains(&"blockIdx.x".to_string()));
+        // Bound kernel is far faster than the unbound one on the GPU model.
+        let base = simulate(&prog, &t).unwrap().total_s;
+        let best = (0..8)
+            .filter_map(|seed| {
+                let prog = workloads::relu(1 << 20);
+                let o = m.apply(Schedule::new(prog, seed), "relu", &t).pop().unwrap();
+                simulate(&o.prog, &t).ok().map(|r| r.total_s)
+            })
+            .fold(f64::INFINITY, f64::min);
+        assert!(best < base * 0.05, "best {best} vs base {base}");
+    }
+
+    #[test]
+    fn skips_already_bound_blocks() {
+        let t = Target::gpu();
+        let m = ThreadBind::new();
+        let prog = workloads::relu(1024);
+        let mut s = Schedule::new(prog, 0);
+        let b = s.get_block("relu").unwrap();
+        let loops = s.get_loops(b).unwrap();
+        s.bind(loops[0], "threadIdx.x").unwrap();
+        let len = s.trace.len();
+        let out = m.apply(s, "relu", &t).pop().unwrap();
+        assert_eq!(out.trace.len(), len); // untouched
+    }
+}

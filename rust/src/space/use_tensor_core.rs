@@ -1,0 +1,216 @@
+//! Use-Tensor-Core: the paper's hardware-specific module (§6.3, Appendix
+//! A.3/A.4). Maps matmul-like blocks onto a tensor intrinsic: tiles the
+//! (i, j, k) loops so a `(m, n, k)` fragment sits innermost, binds the
+//! outer tiles to the GPU grid, and `tensorize`s the fragment.
+//!
+//! Hardware adaptation (DESIGN.md §Hardware-Adaptation): on the CUDA
+//! target this is WMMA 16x16x16; the same module parameterized with
+//! `mxu_128x128` expresses the TPU MXU systolic mapping, which is what the
+//! Pallas L1 kernel realizes with `BlockSpec` tiles on the Python side.
+
+use crate::schedule::{LoopRv, SchResult, Schedule};
+use crate::schedule::blockize::find_intrin;
+use crate::sim::Target;
+use crate::space::{analysis::is_matmul_like, try_transform, TransformModule};
+use crate::tir::analysis::{classify_loop, LoopClass};
+use crate::tir::LoopKind;
+use crate::trace::FactorArg;
+
+pub struct UseTensorCore {
+    pub intrin: &'static str,
+}
+
+impl UseTensorCore {
+    /// CUDA WMMA 16x16x16 fragments (the paper's RTX 3070 experiments).
+    pub fn wmma() -> UseTensorCore {
+        UseTensorCore { intrin: "wmma_16x16x16" }
+    }
+
+    /// TPU MXU 128x128 systolic tiles (hardware-adaptation variant).
+    pub fn mxu() -> UseTensorCore {
+        UseTensorCore { intrin: "mxu_128x128" }
+    }
+
+    fn transform(&self, s: &mut Schedule, block_name: &str) -> SchResult<()> {
+        let (fm, fn_, fk) = find_intrin(self.intrin)
+            .ok_or_else(|| crate::schedule::ScheduleError::TensorizeMismatch(
+                format!("unknown intrinsic {}", self.intrin),
+            ))?
+            .dims;
+        let b = s.get_block(block_name)?;
+        let loops = s.get_loops(b)?;
+        let mut spatial: Vec<LoopRv> = Vec::new();
+        let mut reduce: Vec<LoopRv> = Vec::new();
+        for &l in &loops {
+            let item = s.loop_item(l)?;
+            if s.prog.loop_data(item).kind != LoopKind::Serial {
+                return Err(crate::schedule::ScheduleError::WrongLoopKind(
+                    "tensor-core tiling requires serial loops".into(),
+                ));
+            }
+            match classify_loop(&s.prog, item) {
+                LoopClass::Spatial => spatial.push(l),
+                LoopClass::Reduce => reduce.push(l),
+                LoopClass::Unused => {}
+                LoopClass::Mixed => {
+                    return Err(crate::schedule::ScheduleError::Unsupported("mixed loop".into()))
+                }
+            }
+        }
+        if spatial.len() < 2 || reduce.is_empty() {
+            return Err(crate::schedule::ScheduleError::TensorizeMismatch(
+                "need two spatial and one reduction loop".into(),
+            ));
+        }
+        // Fragment loops: the two innermost spatial dims (i, j) + the last
+        // reduction dim (k). Batch/head loops stay outside.
+        let li = spatial[spatial.len() - 2];
+        let lj = spatial[spatial.len() - 1];
+        let lk = *reduce.last().unwrap();
+        let (ei, ej, ek) = (
+            s.prog.loop_data(s.loop_item(li)?).extent,
+            s.prog.loop_data(s.loop_item(lj)?).extent,
+            s.prog.loop_data(s.loop_item(lk)?).extent,
+        );
+        if ei % fm != 0 || ej % fn_ != 0 || ek % fk != 0 {
+            return Err(crate::schedule::ScheduleError::TensorizeMismatch(format!(
+                "extents ({ei},{ej},{ek}) not divisible by fragment ({fm},{fn_},{fk})"
+            )));
+        }
+        // Peel the fragment: l -> [l_outer, fragment]; then sample-tile the
+        // outer part two ways for the grid/thread levels.
+        let peel = |s: &mut Schedule, l: LoopRv, frag: i64| -> SchResult<(LoopRv, LoopRv, LoopRv)> {
+            let e = s.prog.loop_data(s.loop_item(l)?).extent;
+            let parts = s.split(l, &[FactorArg::Lit(e / frag), FactorArg::Lit(frag)])?;
+            let t = s.sample_perfect_tile(parts[0], 2, 0)?;
+            let outer = s.split(parts[0], &[FactorArg::Rv(t[0].0), FactorArg::Rv(t[1].0)])?;
+            Ok((outer[0], outer[1], parts[1]))
+        };
+        let (i0, i1, i_f) = peel(s, li, fm)?;
+        let (j0, j1, j_f) = peel(s, lj, fn_)?;
+        let (k0, k1, k_f) = peel(s, lk, fk)?;
+        // i0 j0 | i1 j1 | k0 k1 | fragment(i_f j_f k_f)
+        s.reorder(&[i0, j0, i1, j1, k0, k1, i_f, j_f, k_f])?;
+        let grid = s.fuse(&[i0, j0])?;
+        s.bind(grid, "blockIdx.x")?;
+        let warp = s.fuse(&[i1, j1])?;
+        s.bind(warp, "threadIdx.y")?;
+        // The fragment subtree must be exactly (fm, fn, fk) — tensorize
+        // re-validates and swaps in the opaque intrinsic block.
+        s.tensorize(i_f, self.intrin)?;
+        Ok(())
+    }
+}
+
+impl TransformModule for UseTensorCore {
+    fn name(&self) -> &'static str {
+        "use-tensor-core"
+    }
+
+    fn apply(&self, sch: Schedule, block_name: &str, target: &Target) -> Vec<Schedule> {
+        let supported = target.tensor_intrins.iter().any(|i| *i == self.intrin);
+        let applicable = supported
+            && sch
+                .prog
+                .find_block(block_name)
+                .map(|b| is_matmul_like(&sch.prog, b))
+                .unwrap_or(false);
+        if !applicable {
+            return vec![sch];
+        }
+        // Fork the space: tensorized + generic (the paper composes
+        // Use-Tensor-Core *with* the generic modules; non-tensorizable
+        // decisions fall back to multi-level tiling).
+        match try_transform(&sch, |s| self.transform(s, block_name)) {
+            Some(out) => vec![out, sch],
+            None => vec![sch],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{simulate, Target};
+    use crate::tir::analysis::program_flops;
+    use crate::workloads;
+
+    #[test]
+    fn tensorizes_gmm() {
+        let t = Target::gpu();
+        let m = UseTensorCore::wmma();
+        let prog = workloads::matmul(1, 128, 128, 128);
+        let flops = program_flops(&prog);
+        let variants = m.apply(Schedule::new(prog, 6), "matmul", &t);
+        assert_eq!(variants.len(), 2);
+        let tc = &variants[0];
+        tc.prog.check_integrity().unwrap();
+        assert_eq!(program_flops(&tc.prog), flops);
+        let opaque = tc.prog.find_block("matmul_o").unwrap();
+        assert_eq!(
+            tc.prog.block_data(opaque).annotations["tensor_intrin"],
+            "wmma_16x16x16"
+        );
+    }
+
+    #[test]
+    fn tensorized_beats_plain_binding_on_sim() {
+        let t = Target::gpu();
+        let m = UseTensorCore::wmma();
+        let tb = crate::space::ThreadBind::new();
+        let best_tc = (0..8)
+            .filter_map(|seed| {
+                let prog = workloads::matmul(1, 512, 512, 512);
+                let v = m.apply(Schedule::new(prog, seed), "matmul", &t);
+                simulate(&v[0].prog, &t).ok().map(|r| r.total_s)
+            })
+            .fold(f64::INFINITY, f64::min);
+        let best_plain = (0..8)
+            .filter_map(|seed| {
+                let prog = workloads::matmul(1, 512, 512, 512);
+                let v = tb.apply(Schedule::new(prog, seed), "matmul", &t);
+                simulate(&v[0].prog, &t).ok().map(|r| r.total_s)
+            })
+            .fold(f64::INFINITY, f64::min);
+        assert!(
+            best_tc < best_plain,
+            "tensor core {best_tc} vs plain {best_plain}"
+        );
+    }
+
+    #[test]
+    fn odd_shapes_fall_back() {
+        let t = Target::gpu();
+        let m = UseTensorCore::wmma();
+        // 100 is not divisible by 16.
+        let prog = workloads::matmul(1, 100, 100, 100);
+        let variants = m.apply(Schedule::new(prog, 6), "matmul", &t);
+        assert_eq!(variants.len(), 1);
+        assert!(variants[0].trace.is_empty());
+    }
+
+    #[test]
+    fn cpu_target_not_applicable() {
+        let t = Target::cpu_avx512();
+        let m = UseTensorCore::wmma();
+        let prog = workloads::matmul(1, 128, 128, 128);
+        let variants = m.apply(Schedule::new(prog, 6), "matmul", &t);
+        assert_eq!(variants.len(), 1);
+        assert!(variants[0].trace.is_empty());
+    }
+
+    #[test]
+    fn mxu_variant_applies_at_128() {
+        let mut t = Target::tpu_like();
+        t.kind = crate::sim::TargetKind::Gpu;
+        let m = UseTensorCore::mxu();
+        let prog = workloads::matmul(1, 512, 512, 512);
+        let variants = m.apply(Schedule::new(prog, 6), "matmul", &t);
+        assert_eq!(variants.len(), 2);
+        let opaque = variants[0].prog.find_block("matmul_o").unwrap();
+        assert_eq!(
+            variants[0].prog.block_data(opaque).annotations["tensor_intrin"],
+            "mxu_128x128"
+        );
+    }
+}

@@ -1,0 +1,272 @@
+//! Structural analyses over tensor programs: loop classification, FLOP
+//! counting, region footprints. These feed the transformation modules
+//! (which must identify spatial vs. reduction loops, per Figure 4 of the
+//! paper) and the hardware simulator.
+
+use std::collections::HashMap;
+
+use crate::tir::block::IterKind;
+use crate::tir::expr::VarId;
+use crate::tir::program::{ItemId, ItemKind, Program};
+
+/// Classification of a loop with respect to the blocks beneath it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LoopClass {
+    /// Feeds only spatial block iters — safe to parallelize / vectorize.
+    Spatial,
+    /// Feeds only reduction block iters.
+    Reduce,
+    /// Feeds both (e.g. after fusing a spatial with a reduce loop).
+    Mixed,
+    /// Feeds no block iter (unit/dead loop).
+    Unused,
+}
+
+/// Classify `loop_id` by scanning iter bindings of all blocks beneath it.
+pub fn classify_loop(p: &Program, loop_id: ItemId) -> LoopClass {
+    let var = p.loop_data(loop_id).var;
+    let mut spatial = false;
+    let mut reduce = false;
+    for b in p.blocks_under(loop_id) {
+        for iv in &p.block_data(b).iters {
+            if iv.binding.uses_var(var) {
+                match iv.kind {
+                    IterKind::Spatial => spatial = true,
+                    IterKind::Reduce => reduce = true,
+                }
+            }
+        }
+    }
+    match (spatial, reduce) {
+        (true, false) => LoopClass::Spatial,
+        (false, true) => LoopClass::Reduce,
+        (true, true) => LoopClass::Mixed,
+        (false, false) => LoopClass::Unused,
+    }
+}
+
+/// Number of times a block executes = product of enclosing loop extents.
+pub fn block_trip_count(p: &Program, block: ItemId) -> i64 {
+    p.loops_above(block)
+        .iter()
+        .map(|&l| p.loop_data(l).extent)
+        .product()
+}
+
+/// Total weighted floating-point operations of the program.
+pub fn program_flops(p: &Program) -> f64 {
+    p.blocks()
+        .iter()
+        .map(|&b| block_trip_count(p, b) as f64 * p.block_data(b).body.flops())
+        .sum()
+}
+
+/// Footprint in *elements* of one region access when the variables in
+/// `free_vars` sweep their full ranges and all other variables are fixed.
+///
+/// This is the core quantity behind the cache model: fixing the loops
+/// outside level L and sweeping the loops inside gives the working set at
+/// level L.
+pub fn region_footprint_elems(
+    region_ranges: &[(crate::tir::expr::AExpr, i64)],
+    sweep_env: &HashMap<VarId, (i64, i64)>,
+) -> i64 {
+    region_ranges
+        .iter()
+        .map(|(start, extent)| {
+            let width = start.width(sweep_env);
+            width + extent - 1
+        })
+        .product()
+}
+
+/// Environment where the given loops sweep fully and all other vars are
+/// pinned (range (0,0)).
+pub fn sweep_env(p: &Program, sweeping: &[ItemId]) -> HashMap<VarId, (i64, i64)> {
+    let mut env = HashMap::new();
+    for &l in sweeping {
+        let d = p.loop_data(l);
+        env.insert(d.var, (0, d.extent - 1));
+    }
+    env
+}
+
+/// For a block, resolve each iter var to its binding interval under `env`
+/// (loop vars -> ranges), yielding an env over *block iter vars*.
+pub fn iter_env(
+    p: &Program,
+    block: ItemId,
+    loop_env: &HashMap<VarId, (i64, i64)>,
+) -> HashMap<VarId, (i64, i64)> {
+    p.block_data(block)
+        .iters
+        .iter()
+        .map(|iv| (iv.var, iv.binding.interval(loop_env)))
+        .collect()
+}
+
+/// Innermost loop above a block, if any.
+pub fn innermost_loop(p: &Program, block: ItemId) -> Option<ItemId> {
+    p.loops_above(block).last().copied()
+}
+
+/// Whether `maybe_ancestor` is an ancestor of `item` (or equal).
+pub fn is_ancestor(p: &Program, maybe_ancestor: ItemId, item: ItemId) -> bool {
+    let mut cur = Some(item);
+    while let Some(i) = cur {
+        if i == maybe_ancestor {
+            return true;
+        }
+        cur = p.items[i].parent;
+    }
+    false
+}
+
+/// Row-major linear address stride of one region access per unit step of
+/// `loop_var`: substitute iter-var bindings, take the coefficient of
+/// `loop_var` in each index, and weight by the buffer's row-major dim
+/// strides. |stride| <= 1 means the access is vector-friendly (stride-1
+/// contiguous or stride-0 broadcast) when that loop is vectorized.
+pub fn linear_stride(
+    p: &Program,
+    region: &crate::tir::buffer::Region,
+    iter_bindings: &HashMap<VarId, crate::tir::expr::AExpr>,
+    loop_var: VarId,
+) -> i64 {
+    let shape = &p.buffers[region.buffer].shape;
+    let mut stride = 1i64;
+    let mut total = 0i64;
+    for (d, (start, _)) in region.ranges.iter().enumerate().rev() {
+        let e = start.subst(iter_bindings);
+        let mut env: HashMap<VarId, i64> = HashMap::new();
+        let mut vars = Vec::new();
+        e.collect_vars(&mut vars);
+        for v in vars {
+            env.insert(v, 0);
+        }
+        let base = e.eval(&env);
+        env.insert(loop_var, 1);
+        let coef = e.eval(&env) - base;
+        total += coef.saturating_mul(stride);
+        stride = stride.saturating_mul(shape.get(d).copied().unwrap_or(1).max(1));
+    }
+    total
+}
+
+/// Count of live loops in the program.
+pub fn loop_count(p: &Program) -> usize {
+    p.preorder()
+        .into_iter()
+        .filter(|&i| matches!(p.items[i].kind, ItemKind::Loop(_)))
+        .count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tir::block::{BlockBody, BlockData, IterVar};
+    use crate::tir::buffer::{Buffer, DType, Region};
+    use crate::tir::expr::{AExpr, BinOp, CExpr};
+    use crate::tir::program::LoopData;
+
+    /// C[i,j] += A[i,k] * B[k,j] over 16x16x8.
+    fn matmul() -> (Program, ItemId) {
+        let mut p = Program::new("mm");
+        let a = p.add_buffer(Buffer::new("A", vec![16, 8], DType::F32));
+        let b = p.add_buffer(Buffer::new("B", vec![8, 16], DType::F32));
+        let c = p.add_buffer(Buffer::new("C", vec![16, 16], DType::F32));
+        p.params = vec![a, b, c];
+        let li_v = p.fresh_var("i");
+        let lj_v = p.fresh_var("j");
+        let lk_v = p.fresh_var("k");
+        let bi = p.fresh_var("bi");
+        let bj = p.fresh_var("bj");
+        let bk = p.fresh_var("bk");
+        let li = p.alloc_loop(LoopData::new(li_v, 16));
+        let lj = p.alloc_loop(LoopData::new(lj_v, 16));
+        let lk = p.alloc_loop(LoopData::new(lk_v, 8));
+        let mut blk = BlockData::new("matmul");
+        blk.iters = vec![
+            IterVar {
+                var: bi,
+                extent: 16,
+                kind: IterKind::Spatial,
+                binding: AExpr::Var(li_v),
+            },
+            IterVar {
+                var: bj,
+                extent: 16,
+                kind: IterKind::Spatial,
+                binding: AExpr::Var(lj_v),
+            },
+            IterVar {
+                var: bk,
+                extent: 8,
+                kind: IterKind::Reduce,
+                binding: AExpr::Var(lk_v),
+            },
+        ];
+        blk.reads = vec![
+            Region::point(a, vec![AExpr::Var(bi), AExpr::Var(bk)]),
+            Region::point(b, vec![AExpr::Var(bk), AExpr::Var(bj)]),
+        ];
+        blk.writes = vec![Region::point(c, vec![AExpr::Var(bi), AExpr::Var(bj)])];
+        blk.body = BlockBody::Reduce {
+            init: CExpr::ConstF(0.0),
+            op: BinOp::Add,
+            rhs: CExpr::bin(
+                BinOp::Mul,
+                CExpr::load(a, vec![AExpr::Var(bi), AExpr::Var(bk)]),
+                CExpr::load(b, vec![AExpr::Var(bk), AExpr::Var(bj)]),
+            ),
+        };
+        let blk = p.alloc_block(blk);
+        p.attach(li, None);
+        p.attach(lj, Some(li));
+        p.attach(lk, Some(lj));
+        p.attach(blk, Some(lk));
+        (p, blk)
+    }
+
+    #[test]
+    fn classifies_loops() {
+        let (p, blk) = matmul();
+        let loops = p.loops_above(blk);
+        assert_eq!(classify_loop(&p, loops[0]), LoopClass::Spatial);
+        assert_eq!(classify_loop(&p, loops[1]), LoopClass::Spatial);
+        assert_eq!(classify_loop(&p, loops[2]), LoopClass::Reduce);
+    }
+
+    #[test]
+    fn flops_of_matmul() {
+        let (p, _) = matmul();
+        // 16*16*8 instances * (mul + add) = 4096
+        assert_eq!(program_flops(&p), 16.0 * 16.0 * 8.0 * 2.0);
+    }
+
+    #[test]
+    fn footprint_under_sweep() {
+        let (p, blk) = matmul();
+        let loops = p.loops_above(blk);
+        // Sweep only k (innermost): A touches 1x8, B touches 8x1, C 1x1.
+        let le = sweep_env(&p, &loops[2..]);
+        let ie = iter_env(&p, blk, &le);
+        let bd = p.block_data(blk);
+        assert_eq!(region_footprint_elems(&bd.reads[0].ranges, &ie), 8);
+        assert_eq!(region_footprint_elems(&bd.reads[1].ranges, &ie), 8);
+        assert_eq!(region_footprint_elems(&bd.writes[0].ranges, &ie), 1);
+        // Sweep j and k: A row of 8, B 8x16, C row of 16.
+        let le = sweep_env(&p, &loops[1..]);
+        let ie = iter_env(&p, blk, &le);
+        assert_eq!(region_footprint_elems(&bd.reads[1].ranges, &ie), 128);
+        assert_eq!(region_footprint_elems(&bd.writes[0].ranges, &ie), 16);
+    }
+
+    #[test]
+    fn ancestor_relation() {
+        let (p, blk) = matmul();
+        let loops = p.loops_above(blk);
+        assert!(is_ancestor(&p, loops[0], blk));
+        assert!(!is_ancestor(&p, blk, loops[0]));
+    }
+}

@@ -1,0 +1,184 @@
+//! Blocks: the unit of computation in the IR (a TensorIR-style "block").
+//!
+//! A block owns its iteration variables (spatial or reduction), declares the
+//! buffer regions it reads and writes, and carries a scalar body. Bindings
+//! map each block iteration variable to an index expression over the
+//! *enclosing loop variables*; loop transformations (split/fuse/reorder)
+//! only ever rewrite bindings, never the body.
+
+use std::collections::BTreeMap;
+
+use crate::tir::buffer::Region;
+use crate::tir::expr::{AExpr, BinOp, CExpr, VarId};
+
+/// Kind of a block iteration variable.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum IterKind {
+    /// Data-parallel (output) axis.
+    Spatial,
+    /// Reduction axis.
+    Reduce,
+}
+
+/// A block iteration variable with its domain and loop binding.
+#[derive(Debug, Clone, PartialEq)]
+pub struct IterVar {
+    pub var: VarId,
+    pub extent: i64,
+    pub kind: IterKind,
+    /// Value of this iter var in terms of enclosing loop variables.
+    pub binding: AExpr,
+}
+
+/// Scalar body of a block.
+#[derive(Debug, Clone, PartialEq)]
+pub enum BlockBody {
+    /// `writes[0][...] = expr`
+    Assign { expr: CExpr },
+    /// `writes[0][...] = init` on the first reduction step, then
+    /// `writes[0][...] = op(writes[0][...], rhs)`.
+    Reduce { init: CExpr, op: BinOp, rhs: CExpr },
+    /// Structurally opaque block produced by blockize/tensorize; carries
+    /// aggregate statistics of the computation it encloses.
+    Opaque { flops_per_instance: f64 },
+}
+
+impl BlockBody {
+    /// Weighted scalar ops per block instance.
+    pub fn flops(&self) -> f64 {
+        match self {
+            BlockBody::Assign { expr } => expr.flops(),
+            // One combiner op per step plus the rhs expression.
+            BlockBody::Reduce { rhs, .. } => 1.0 + rhs.flops(),
+            BlockBody::Opaque { flops_per_instance } => *flops_per_instance,
+        }
+    }
+
+    pub fn is_reduction(&self) -> bool {
+        matches!(self, BlockBody::Reduce { .. })
+    }
+}
+
+/// A computation block.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BlockData {
+    pub name: String,
+    pub iters: Vec<IterVar>,
+    pub reads: Vec<Region>,
+    pub writes: Vec<Region>,
+    pub body: BlockBody,
+    /// Set by `decompose-reduction`: the init assignment has been hoisted
+    /// into a separate block, this block only performs updates.
+    pub init_decomposed: bool,
+    pub annotations: BTreeMap<String, String>,
+}
+
+impl BlockData {
+    pub fn new(name: impl Into<String>) -> BlockData {
+        BlockData {
+            name: name.into(),
+            iters: Vec::new(),
+            reads: Vec::new(),
+            writes: Vec::new(),
+            body: BlockBody::Assign {
+                expr: CExpr::ConstF(0.0),
+            },
+            init_decomposed: false,
+            annotations: BTreeMap::new(),
+        }
+    }
+
+    /// Spatial iteration variables in declaration order.
+    pub fn spatial_iters(&self) -> impl Iterator<Item = &IterVar> {
+        self.iters.iter().filter(|iv| iv.kind == IterKind::Spatial)
+    }
+
+    /// Reduction iteration variables in declaration order.
+    pub fn reduce_iters(&self) -> impl Iterator<Item = &IterVar> {
+        self.iters.iter().filter(|iv| iv.kind == IterKind::Reduce)
+    }
+
+    pub fn is_reduction(&self) -> bool {
+        self.iters.iter().any(|iv| iv.kind == IterKind::Reduce)
+    }
+
+    /// Whether the first write region is an identity over the spatial iter
+    /// vars: dimension `d` is exactly `Var(spatial_d)` with extent 1. Such
+    /// blocks can be inlined into consumers.
+    pub fn write_is_trivial(&self) -> bool {
+        let w = match self.writes.first() {
+            Some(w) => w,
+            None => return false,
+        };
+        let spatial: Vec<VarId> = self.spatial_iters().map(|iv| iv.var).collect();
+        if w.ranges.len() != spatial.len() {
+            return false;
+        }
+        w.ranges
+            .iter()
+            .zip(&spatial)
+            .all(|((start, extent), v)| *extent == 1 && *start == AExpr::Var(*v))
+    }
+
+    /// Total block instances = product of iter extents.
+    pub fn domain_size(&self) -> i64 {
+        self.iters.iter().map(|iv| iv.extent).product()
+    }
+
+    pub fn annotate(&mut self, key: &str, value: &str) {
+        self.annotations.insert(key.to_string(), value.to_string());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn iter(var: VarId, extent: i64, kind: IterKind) -> IterVar {
+        IterVar {
+            var,
+            extent,
+            kind,
+            binding: AExpr::Var(var + 100),
+        }
+    }
+
+    #[test]
+    fn spatial_and_reduce_partition() {
+        let mut b = BlockData::new("matmul");
+        b.iters = vec![
+            iter(0, 64, IterKind::Spatial),
+            iter(1, 64, IterKind::Spatial),
+            iter(2, 32, IterKind::Reduce),
+        ];
+        assert_eq!(b.spatial_iters().count(), 2);
+        assert_eq!(b.reduce_iters().count(), 1);
+        assert!(b.is_reduction());
+        assert_eq!(b.domain_size(), 64 * 64 * 32);
+    }
+
+    #[test]
+    fn trivial_write_detection() {
+        let mut b = BlockData::new("relu");
+        b.iters = vec![iter(0, 8, IterKind::Spatial), iter(1, 8, IterKind::Spatial)];
+        b.writes = vec![Region::point(0, vec![AExpr::Var(0), AExpr::Var(1)])];
+        assert!(b.write_is_trivial());
+        // Swapped indices are not an identity binding.
+        b.writes = vec![Region::point(0, vec![AExpr::Var(1), AExpr::Var(0)])];
+        assert!(!b.write_is_trivial());
+    }
+
+    #[test]
+    fn reduce_body_flops() {
+        let body = BlockBody::Reduce {
+            init: CExpr::ConstF(0.0),
+            op: BinOp::Add,
+            rhs: CExpr::bin(
+                BinOp::Mul,
+                CExpr::load(0, vec![]),
+                CExpr::load(1, vec![]),
+            ),
+        };
+        assert_eq!(body.flops(), 2.0); // mul + add
+    }
+}

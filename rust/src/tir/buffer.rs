@@ -1,0 +1,168 @@
+//! Buffers, storage scopes, and accessed regions.
+
+use crate::tir::expr::AExpr;
+
+/// Element datatype of a buffer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    F32,
+    BF16,
+    F16,
+    I32,
+}
+
+impl DType {
+    pub fn bytes(self) -> i64 {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::BF16 | DType::F16 => 2,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::BF16 => "bf16",
+            DType::F16 => "f16",
+            DType::I32 => "i32",
+        }
+    }
+}
+
+/// Storage scope of a buffer in the memory hierarchy.
+///
+/// `Shared`/`Local` follow the CUDA naming the paper uses; on the TPU
+/// adaptation `Shared` models VMEM staging and `Wmma*` model the MXU input /
+/// accumulator registers (see DESIGN.md §Hardware-Adaptation).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub enum Scope {
+    /// Off-chip memory (DRAM / HBM).
+    Global,
+    /// On-chip scratchpad shared by a thread block (shared mem / VMEM).
+    Shared,
+    /// Per-thread registers / local cache.
+    Local,
+    /// Tensor-intrinsic staging fragment, e.g. "wmma.matrix_a".
+    Wmma(String),
+}
+
+impl Scope {
+    pub fn parse(s: &str) -> Scope {
+        match s {
+            "global" => Scope::Global,
+            "shared" | "shared.dyn" => Scope::Shared,
+            "local" => Scope::Local,
+            other => Scope::Wmma(other.to_string()),
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            Scope::Global => "global".into(),
+            Scope::Shared => "shared".into(),
+            Scope::Local => "local".into(),
+            Scope::Wmma(s) => s.clone(),
+        }
+    }
+}
+
+/// A tensor buffer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Buffer {
+    pub name: String,
+    pub shape: Vec<i64>,
+    pub dtype: DType,
+    pub scope: Scope,
+    /// Storage alignment requirement in bytes (set by `storage-align`).
+    pub align: i64,
+    /// True once the buffer has been eliminated by compute-inline.
+    pub inlined: bool,
+}
+
+impl Buffer {
+    pub fn new(name: impl Into<String>, shape: Vec<i64>, dtype: DType) -> Buffer {
+        Buffer {
+            name: name.into(),
+            shape,
+            dtype,
+            scope: Scope::Global,
+            align: dtype.bytes(),
+            inlined: false,
+        }
+    }
+
+    /// Total elements.
+    pub fn numel(&self) -> i64 {
+        self.shape.iter().product()
+    }
+
+    /// Total bytes.
+    pub fn bytes(&self) -> i64 {
+        self.numel() * self.dtype.bytes()
+    }
+}
+
+/// A rectangular region of a buffer: per-dimension `(start, extent)` where
+/// `start` is an index expression over block iteration variables and
+/// `extent` a constant. A point access has extent 1 in every dimension.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Region {
+    pub buffer: usize,
+    pub ranges: Vec<(AExpr, i64)>,
+}
+
+impl Region {
+    /// A single-element access at the given indices.
+    pub fn point(buffer: usize, indices: Vec<AExpr>) -> Region {
+        Region {
+            buffer,
+            ranges: indices.into_iter().map(|e| (e, 1)).collect(),
+        }
+    }
+
+    /// Elements covered by one access of this region.
+    pub fn extent_numel(&self) -> i64 {
+        self.ranges.iter().map(|(_, e)| *e).product()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dtype_sizes() {
+        assert_eq!(DType::F32.bytes(), 4);
+        assert_eq!(DType::BF16.bytes(), 2);
+    }
+
+    #[test]
+    fn buffer_bytes() {
+        let b = Buffer::new("A", vec![128, 128], DType::F32);
+        assert_eq!(b.numel(), 128 * 128);
+        assert_eq!(b.bytes(), 128 * 128 * 4);
+    }
+
+    #[test]
+    fn scope_roundtrip() {
+        for s in ["global", "shared", "local", "wmma.accumulator"] {
+            let sc = Scope::parse(s);
+            if s == "shared.dyn" {
+                assert_eq!(sc.name(), "shared");
+            } else {
+                assert_eq!(sc.name(), s);
+            }
+        }
+    }
+
+    #[test]
+    fn region_extent() {
+        let r = Region {
+            buffer: 0,
+            ranges: vec![(AExpr::Const(0), 16), (AExpr::Const(0), 16)],
+        };
+        assert_eq!(r.extent_numel(), 256);
+        let p = Region::point(0, vec![AExpr::Var(0), AExpr::Var(1)]);
+        assert_eq!(p.extent_numel(), 1);
+    }
+}

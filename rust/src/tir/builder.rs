@@ -1,0 +1,156 @@
+//! Convenience builder for constructing workload programs.
+//!
+//! Workloads declare computations einsum-style: a named block with typed
+//! iteration axes; the builder materializes one loop per axis (identity
+//! bindings) at the program root, which is the canonical starting point
+//! `e_0` for scheduling.
+
+use crate::tir::block::{BlockBody, BlockData, IterKind, IterVar};
+use crate::tir::buffer::{Buffer, DType, Region};
+use crate::tir::expr::{AExpr, VarId};
+use crate::tir::program::{ItemId, LoopData, Program};
+
+/// Declared iteration axis of a compute block.
+#[derive(Debug, Clone)]
+pub struct Axis {
+    pub hint: &'static str,
+    pub extent: i64,
+    pub kind: IterKind,
+}
+
+/// Spatial axis shorthand.
+pub fn sp(hint: &'static str, extent: i64) -> Axis {
+    Axis {
+        hint,
+        extent,
+        kind: IterKind::Spatial,
+    }
+}
+
+/// Reduction axis shorthand.
+pub fn rd(hint: &'static str, extent: i64) -> Axis {
+    Axis {
+        hint,
+        extent,
+        kind: IterKind::Reduce,
+    }
+}
+
+impl Program {
+    /// Add an input/output parameter buffer.
+    pub fn param(&mut self, name: &str, shape: Vec<i64>, dtype: DType) -> usize {
+        let id = self.add_buffer(Buffer::new(name, shape, dtype));
+        self.params.push(id);
+        id
+    }
+
+    /// Add an intermediate (non-parameter) buffer.
+    pub fn temp(&mut self, name: &str, shape: Vec<i64>, dtype: DType) -> usize {
+        self.add_buffer(Buffer::new(name, shape, dtype))
+    }
+
+    /// Emit a compute block wrapped in one fresh loop per axis, attached at
+    /// the program root (after any existing roots). The closure receives the
+    /// block iteration vars in axis order and returns the regions + body.
+    pub fn emit(
+        &mut self,
+        name: &str,
+        axes: &[Axis],
+        f: impl FnOnce(&[VarId]) -> (Vec<Region>, Vec<Region>, BlockBody),
+    ) -> ItemId {
+        let mut loop_ids = Vec::with_capacity(axes.len());
+        let mut iter_vars = Vec::with_capacity(axes.len());
+        let mut iters = Vec::with_capacity(axes.len());
+        for ax in axes {
+            let lv = self.fresh_var(ax.hint);
+            let bv = self.fresh_var(&format!("{}_", ax.hint));
+            loop_ids.push(self.alloc_loop(LoopData::new(lv, ax.extent)));
+            iter_vars.push(bv);
+            iters.push(IterVar {
+                var: bv,
+                extent: ax.extent,
+                kind: ax.kind,
+                binding: AExpr::Var(lv),
+            });
+        }
+        let (reads, writes, body) = f(&iter_vars);
+        let mut block = BlockData::new(name);
+        block.iters = iters;
+        block.reads = reads;
+        block.writes = writes;
+        block.body = body;
+        let block_id = self.alloc_block(block);
+        // Chain the loops and hang the block at the innermost.
+        let mut parent: Option<ItemId> = None;
+        for &l in &loop_ids {
+            self.attach(l, parent);
+            parent = Some(l);
+        }
+        self.attach(block_id, parent);
+        block_id
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tir::analysis::program_flops;
+    use crate::tir::expr::{BinOp, CExpr};
+
+    #[test]
+    fn emit_builds_loop_nest_and_block() {
+        let mut p = Program::new("vecadd");
+        let a = p.param("A", vec![256], DType::F32);
+        let b = p.param("B", vec![256], DType::F32);
+        let c = p.param("C", vec![256], DType::F32);
+        let blk = p.emit("add", &[sp("i", 256)], |iv| {
+            let i = iv[0];
+            (
+                vec![
+                    Region::point(a, vec![AExpr::Var(i)]),
+                    Region::point(b, vec![AExpr::Var(i)]),
+                ],
+                vec![Region::point(c, vec![AExpr::Var(i)])],
+                BlockBody::Assign {
+                    expr: CExpr::bin(
+                        BinOp::Add,
+                        CExpr::load(a, vec![AExpr::Var(i)]),
+                        CExpr::load(b, vec![AExpr::Var(i)]),
+                    ),
+                },
+            )
+        });
+        p.check_integrity().unwrap();
+        assert_eq!(p.loops_above(blk).len(), 1);
+        assert_eq!(program_flops(&p), 256.0);
+    }
+
+    #[test]
+    fn emit_multiple_blocks_sequence_at_root() {
+        let mut p = Program::new("two");
+        let a = p.param("A", vec![8], DType::F32);
+        let t = p.temp("T", vec![8], DType::F32);
+        let o = p.param("O", vec![8], DType::F32);
+        let b1 = p.emit("first", &[sp("i", 8)], |iv| {
+            (
+                vec![Region::point(a, vec![AExpr::Var(iv[0])])],
+                vec![Region::point(t, vec![AExpr::Var(iv[0])])],
+                BlockBody::Assign {
+                    expr: CExpr::load(a, vec![AExpr::Var(iv[0])]),
+                },
+            )
+        });
+        let b2 = p.emit("second", &[sp("i", 8)], |iv| {
+            (
+                vec![Region::point(t, vec![AExpr::Var(iv[0])])],
+                vec![Region::point(o, vec![AExpr::Var(iv[0])])],
+                BlockBody::Assign {
+                    expr: CExpr::load(t, vec![AExpr::Var(iv[0])]),
+                },
+            )
+        });
+        assert_eq!(p.roots.len(), 2);
+        assert_eq!(p.producers_of(b2), vec![b1]);
+        assert_eq!(p.consumers_of(b1), vec![b2]);
+    }
+}

@@ -1,0 +1,414 @@
+//! Index and compute expressions for the tensor-program IR.
+//!
+//! Index expressions (`AExpr`) are affine-with-div/mod over interned loop /
+//! block-iter variables — rich enough for strided, padded, dilated access
+//! patterns (`i*stride + r*dilation - pad`) while keeping interval analysis
+//! and substitution exact and fast. Compute expressions (`CExpr`) describe
+//! the scalar computation of a block body.
+
+use std::collections::HashMap;
+
+/// Interned variable id. The owning [`crate::tir::Program`] maps ids to names.
+pub type VarId = u32;
+
+/// Index expression: affine combinations plus floordiv/mod by constants.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub enum AExpr {
+    Var(VarId),
+    Const(i64),
+    Add(Box<AExpr>, Box<AExpr>),
+    Sub(Box<AExpr>, Box<AExpr>),
+    /// Multiply by an integer constant.
+    Mul(Box<AExpr>, i64),
+    /// Floor division by a positive constant.
+    FloorDiv(Box<AExpr>, i64),
+    /// Euclidean remainder by a positive constant.
+    Mod(Box<AExpr>, i64),
+}
+
+impl AExpr {
+    pub fn var(v: VarId) -> AExpr {
+        AExpr::Var(v)
+    }
+
+    pub fn add(self, rhs: AExpr) -> AExpr {
+        match (&self, &rhs) {
+            (AExpr::Const(0), _) => rhs,
+            (_, AExpr::Const(0)) => self,
+            (AExpr::Const(a), AExpr::Const(b)) => AExpr::Const(a + b),
+            _ => AExpr::Add(Box::new(self), Box::new(rhs)),
+        }
+    }
+
+    pub fn sub(self, rhs: AExpr) -> AExpr {
+        match (&self, &rhs) {
+            (_, AExpr::Const(0)) => self,
+            (AExpr::Const(a), AExpr::Const(b)) => AExpr::Const(a - b),
+            _ => AExpr::Sub(Box::new(self), Box::new(rhs)),
+        }
+    }
+
+    pub fn mul(self, c: i64) -> AExpr {
+        match (&self, c) {
+            (_, 1) => self,
+            (_, 0) => AExpr::Const(0),
+            (AExpr::Const(a), c) => AExpr::Const(a * c),
+            _ => AExpr::Mul(Box::new(self), c),
+        }
+    }
+
+    pub fn floordiv(self, c: i64) -> AExpr {
+        debug_assert!(c > 0);
+        match (&self, c) {
+            (_, 1) => self,
+            (AExpr::Const(a), c) => AExpr::Const(a.div_euclid(c)),
+            _ => AExpr::FloorDiv(Box::new(self), c),
+        }
+    }
+
+    pub fn modulo(self, c: i64) -> AExpr {
+        debug_assert!(c > 0);
+        match (&self, c) {
+            (AExpr::Const(a), c) => AExpr::Const(a.rem_euclid(c)),
+            _ => AExpr::Mod(Box::new(self), c),
+        }
+    }
+
+    /// Substitute variables according to `map` (vars absent stay untouched).
+    pub fn subst(&self, map: &HashMap<VarId, AExpr>) -> AExpr {
+        match self {
+            AExpr::Var(v) => map.get(v).cloned().unwrap_or(AExpr::Var(*v)),
+            AExpr::Const(c) => AExpr::Const(*c),
+            AExpr::Add(a, b) => a.subst(map).add(b.subst(map)),
+            AExpr::Sub(a, b) => a.subst(map).sub(b.subst(map)),
+            AExpr::Mul(a, c) => a.subst(map).mul(*c),
+            AExpr::FloorDiv(a, c) => a.subst(map).floordiv(*c),
+            AExpr::Mod(a, c) => a.subst(map).modulo(*c),
+        }
+    }
+
+    /// Evaluate with a concrete assignment. Panics on unbound variable in
+    /// debug builds; treats unbound as 0 in release (used only in tests).
+    pub fn eval(&self, env: &HashMap<VarId, i64>) -> i64 {
+        match self {
+            AExpr::Var(v) => *env.get(v).unwrap_or(&0),
+            AExpr::Const(c) => *c,
+            AExpr::Add(a, b) => a.eval(env) + b.eval(env),
+            AExpr::Sub(a, b) => a.eval(env) - b.eval(env),
+            AExpr::Mul(a, c) => a.eval(env) * c,
+            AExpr::FloorDiv(a, c) => a.eval(env).div_euclid(*c),
+            AExpr::Mod(a, c) => a.eval(env).rem_euclid(*c),
+        }
+    }
+
+    /// Collect the set of variables referenced.
+    pub fn collect_vars(&self, out: &mut Vec<VarId>) {
+        match self {
+            AExpr::Var(v) => {
+                if !out.contains(v) {
+                    out.push(*v);
+                }
+            }
+            AExpr::Const(_) => {}
+            AExpr::Add(a, b) | AExpr::Sub(a, b) => {
+                a.collect_vars(out);
+                b.collect_vars(out);
+            }
+            AExpr::Mul(a, _) | AExpr::FloorDiv(a, _) | AExpr::Mod(a, _) => a.collect_vars(out),
+        }
+    }
+
+    pub fn uses_var(&self, v: VarId) -> bool {
+        match self {
+            AExpr::Var(x) => *x == v,
+            AExpr::Const(_) => false,
+            AExpr::Add(a, b) | AExpr::Sub(a, b) => a.uses_var(v) || b.uses_var(v),
+            AExpr::Mul(a, _) | AExpr::FloorDiv(a, _) | AExpr::Mod(a, _) => a.uses_var(v),
+        }
+    }
+
+    /// Interval (min/max inclusive) of the expression when each variable
+    /// ranges over the interval given in `env`. Exact for affine parts;
+    /// conservative (but tight for the patterns we generate) for div/mod.
+    pub fn interval(&self, env: &HashMap<VarId, (i64, i64)>) -> (i64, i64) {
+        match self {
+            AExpr::Var(v) => *env.get(v).unwrap_or(&(0, 0)),
+            AExpr::Const(c) => (*c, *c),
+            AExpr::Add(a, b) => {
+                let (al, ah) = a.interval(env);
+                let (bl, bh) = b.interval(env);
+                (al + bl, ah + bh)
+            }
+            AExpr::Sub(a, b) => {
+                let (al, ah) = a.interval(env);
+                let (bl, bh) = b.interval(env);
+                (al - bh, ah - bl)
+            }
+            AExpr::Mul(a, c) => {
+                let (al, ah) = a.interval(env);
+                if *c >= 0 {
+                    (al * c, ah * c)
+                } else {
+                    (ah * c, al * c)
+                }
+            }
+            AExpr::FloorDiv(a, c) => {
+                let (al, ah) = a.interval(env);
+                (al.div_euclid(*c), ah.div_euclid(*c))
+            }
+            AExpr::Mod(a, c) => {
+                let (al, ah) = a.interval(env);
+                // If the whole range lies in one "period" the mod is exact.
+                if al.div_euclid(*c) == ah.div_euclid(*c) {
+                    (al.rem_euclid(*c), ah.rem_euclid(*c))
+                } else {
+                    (0, c - 1)
+                }
+            }
+        }
+    }
+
+    /// Width (number of distinct values, max-min+1) over the given ranges.
+    pub fn width(&self, env: &HashMap<VarId, (i64, i64)>) -> i64 {
+        let (lo, hi) = self.interval(env);
+        hi - lo + 1
+    }
+}
+
+/// Binary scalar ops appearing in block bodies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum BinOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Max,
+    Min,
+}
+
+impl BinOp {
+    pub fn name(self) -> &'static str {
+        match self {
+            BinOp::Add => "add",
+            BinOp::Sub => "sub",
+            BinOp::Mul => "mul",
+            BinOp::Div => "div",
+            BinOp::Max => "max",
+            BinOp::Min => "min",
+        }
+    }
+}
+
+/// Unary scalar ops / intrinsics.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum UnOp {
+    Neg,
+    Exp,
+    Sqrt,
+    Rsqrt,
+    Relu,
+    Tanh,
+    Erf,
+    CastF32,
+    CastBF16,
+}
+
+impl UnOp {
+    pub fn name(self) -> &'static str {
+        match self {
+            UnOp::Neg => "neg",
+            UnOp::Exp => "exp",
+            UnOp::Sqrt => "sqrt",
+            UnOp::Rsqrt => "rsqrt",
+            UnOp::Relu => "relu",
+            UnOp::Tanh => "tanh",
+            UnOp::Erf => "erf",
+            UnOp::CastF32 => "f32",
+            UnOp::CastBF16 => "bf16",
+        }
+    }
+
+    /// Approximate scalar-op cost relative to an FMA (used by the simulator).
+    pub fn flop_cost(self) -> f64 {
+        match self {
+            UnOp::Neg | UnOp::Relu | UnOp::CastF32 | UnOp::CastBF16 => 1.0,
+            UnOp::Sqrt | UnOp::Rsqrt => 4.0,
+            UnOp::Exp | UnOp::Tanh | UnOp::Erf => 8.0,
+        }
+    }
+}
+
+/// Scalar compute expression of a block body. Buffer loads are indexed by
+/// `AExpr`s over the *block iteration variables*.
+#[derive(Debug, Clone, PartialEq)]
+pub enum CExpr {
+    /// Load `buffers[id][indices...]`.
+    Load(usize, Vec<AExpr>),
+    ConstF(f64),
+    Bin(BinOp, Box<CExpr>, Box<CExpr>),
+    Un(UnOp, Box<CExpr>),
+}
+
+impl CExpr {
+    pub fn load(buffer: usize, indices: Vec<AExpr>) -> CExpr {
+        CExpr::Load(buffer, indices)
+    }
+
+    pub fn bin(op: BinOp, a: CExpr, b: CExpr) -> CExpr {
+        CExpr::Bin(op, Box::new(a), Box::new(b))
+    }
+
+    pub fn un(op: UnOp, a: CExpr) -> CExpr {
+        CExpr::Un(op, Box::new(a))
+    }
+
+    /// Count of scalar operations per evaluation (weighted by op cost).
+    pub fn flops(&self) -> f64 {
+        match self {
+            CExpr::Load(_, _) | CExpr::ConstF(_) => 0.0,
+            CExpr::Bin(_, a, b) => 1.0 + a.flops() + b.flops(),
+            CExpr::Un(op, a) => op.flop_cost() + a.flops(),
+        }
+    }
+
+    /// Substitute index variables inside all loads.
+    pub fn subst_indices(&self, map: &HashMap<VarId, AExpr>) -> CExpr {
+        match self {
+            CExpr::Load(b, idx) => {
+                CExpr::Load(*b, idx.iter().map(|e| e.subst(map)).collect())
+            }
+            CExpr::ConstF(c) => CExpr::ConstF(*c),
+            CExpr::Bin(op, a, b) => CExpr::bin(*op, a.subst_indices(map), b.subst_indices(map)),
+            CExpr::Un(op, a) => CExpr::un(*op, a.subst_indices(map)),
+        }
+    }
+
+    /// Replace every `Load(buffer, idx)` via `f` (used by inlining and
+    /// cache-read redirection).
+    pub fn map_loads(&self, f: &mut impl FnMut(usize, &[AExpr]) -> CExpr) -> CExpr {
+        match self {
+            CExpr::Load(b, idx) => f(*b, idx),
+            CExpr::ConstF(c) => CExpr::ConstF(*c),
+            CExpr::Bin(op, a, b) => CExpr::bin(*op, a.map_loads(f), b.map_loads(f)),
+            CExpr::Un(op, a) => CExpr::un(*op, a.map_loads(f)),
+        }
+    }
+
+    /// All buffers loaded, with multiplicity.
+    pub fn loaded_buffers(&self, out: &mut Vec<usize>) {
+        match self {
+            CExpr::Load(b, _) => out.push(*b),
+            CExpr::ConstF(_) => {}
+            CExpr::Bin(_, a, b) => {
+                a.loaded_buffers(out);
+                b.loaded_buffers(out);
+            }
+            CExpr::Un(_, a) => a.loaded_buffers(out),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn env(pairs: &[(VarId, (i64, i64))]) -> HashMap<VarId, (i64, i64)> {
+        pairs.iter().cloned().collect()
+    }
+
+    #[test]
+    fn constant_folding_in_builders() {
+        let e = AExpr::Const(3).add(AExpr::Const(4)).mul(2);
+        assert_eq!(e, AExpr::Const(14));
+        assert_eq!(AExpr::Var(0).mul(1), AExpr::Var(0));
+        assert_eq!(AExpr::Var(0).add(AExpr::Const(0)), AExpr::Var(0));
+    }
+
+    #[test]
+    fn interval_of_strided_padded_access() {
+        // i*2 + r - 3 with i in [0,111], r in [0,6]  (conv-style index)
+        let e = AExpr::Var(0).mul(2).add(AExpr::Var(1)).sub(AExpr::Const(3));
+        let (lo, hi) = e.interval(&env(&[(0, (0, 111)), (1, (0, 6))]));
+        assert_eq!((lo, hi), (-3, 225));
+    }
+
+    #[test]
+    fn interval_mod_single_period_exact() {
+        let e = AExpr::Var(0).modulo(8);
+        assert_eq!(e.interval(&env(&[(0, (2, 5))])), (2, 5));
+        assert_eq!(e.interval(&env(&[(0, (2, 11))])), (0, 7));
+    }
+
+    #[test]
+    fn subst_split_pattern_preserves_value() {
+        // i -> i0*8 + i1, evaluate both sides.
+        let orig = AExpr::Var(0).mul(3).add(AExpr::Const(1));
+        let mut m = HashMap::new();
+        m.insert(0, AExpr::Var(1).mul(8).add(AExpr::Var(2)));
+        let sub = orig.subst(&m);
+        let mut env_val = HashMap::new();
+        env_val.insert(1, 5i64);
+        env_val.insert(2, 3i64);
+        let i = 5 * 8 + 3;
+        let mut env_orig = HashMap::new();
+        env_orig.insert(0, i);
+        assert_eq!(sub.eval(&env_val), orig.eval(&env_orig));
+    }
+
+    #[test]
+    fn fuse_pattern_roundtrip() {
+        // outer = f / 4, inner = f % 4; f = outer*4+inner must round-trip.
+        let outer = AExpr::Var(9).floordiv(4);
+        let inner = AExpr::Var(9).modulo(4);
+        for f in 0..16 {
+            let mut env_val = HashMap::new();
+            env_val.insert(9, f);
+            assert_eq!(outer.eval(&env_val) * 4 + inner.eval(&env_val), f);
+        }
+    }
+
+    #[test]
+    fn cexpr_flops_counts_weighted_ops() {
+        // relu(a*b + c) = 1 mul + 1 add + 1 relu = 3 weighted flops
+        let e = CExpr::un(
+            UnOp::Relu,
+            CExpr::bin(
+                BinOp::Add,
+                CExpr::bin(
+                    BinOp::Mul,
+                    CExpr::load(0, vec![AExpr::Var(0)]),
+                    CExpr::load(1, vec![AExpr::Var(0)]),
+                ),
+                CExpr::ConstF(1.0),
+            ),
+        );
+        assert_eq!(e.flops(), 3.0);
+    }
+
+    #[test]
+    fn map_loads_rewrites_buffers() {
+        let e = CExpr::bin(
+            BinOp::Add,
+            CExpr::load(0, vec![AExpr::Var(0)]),
+            CExpr::load(1, vec![AExpr::Var(1)]),
+        );
+        let r = e.map_loads(&mut |b, idx| {
+            if b == 0 {
+                CExpr::load(7, idx.to_vec())
+            } else {
+                CExpr::Load(b, idx.to_vec())
+            }
+        });
+        let mut bufs = vec![];
+        r.loaded_buffers(&mut bufs);
+        assert_eq!(bufs, vec![7, 1]);
+    }
+
+    #[test]
+    fn collect_vars_dedups() {
+        let e = AExpr::Var(2).add(AExpr::Var(2).mul(3)).add(AExpr::Var(5));
+        let mut vs = vec![];
+        e.collect_vars(&mut vs);
+        assert_eq!(vs, vec![2, 5]);
+    }
+}

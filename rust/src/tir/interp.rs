@@ -1,0 +1,367 @@
+//! Reference interpreter: execute a tensor program on concrete f32 data.
+//!
+//! This is the ground-truth semantics of the IR. Its purpose is *deep
+//! validation*: a schedule primitive is only correct if the transformed
+//! program computes bit-identical results to `e_0` on arbitrary inputs,
+//! which is a much stronger invariant than the structural checks the
+//! trace validator applies on the search hot path. The property suite
+//! (rust/tests/prop_invariants.rs) runs randomly-scheduled programs
+//! through this interpreter against their initial programs.
+//!
+//! Execution model: walk the loop forest in order (parallel / vectorized
+//! / unrolled / thread-bound loops run serially — scheduling annotations
+//! must not change semantics); at each block instance, bind the block
+//! iteration variables by evaluating their loop-var bindings, then apply
+//! the body. A `Reduce` body stores its init value on the instance where
+//! every reduction iter evaluates to 0 (the "first reduction step", which
+//! split/reordered/fused reduction loops still visit exactly once per
+//! output element), then folds the update.
+
+use std::collections::HashMap;
+
+use crate::tir::block::{BlockBody, IterKind};
+use crate::tir::buffer::Region;
+use crate::tir::expr::{AExpr, BinOp, CExpr, UnOp, VarId};
+use crate::tir::program::{ItemId, ItemKind, Program};
+
+/// Why a program cannot be interpreted.
+#[derive(Debug, Clone, PartialEq)]
+pub enum InterpError {
+    /// Blockized/tensorized blocks are opaque — no scalar body to run.
+    OpaqueBlock(String),
+    /// A write region with extent != 1 (not a point store).
+    NonPointWrite(String),
+    OutOfBounds { buffer: String, index: i64 },
+}
+
+impl std::fmt::Display for InterpError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            InterpError::OpaqueBlock(b) => write!(f, "cannot interpret opaque block {b}"),
+            InterpError::NonPointWrite(b) => write!(f, "non-point write in block {b}"),
+            InterpError::OutOfBounds { buffer, index } => {
+                write!(f, "index {index} out of bounds for buffer {buffer}")
+            }
+        }
+    }
+}
+
+/// Concrete buffer contents, indexed like `Program::buffers`.
+#[derive(Debug, Clone)]
+pub struct Memory {
+    pub bufs: Vec<Vec<f32>>,
+}
+
+impl Memory {
+    /// Allocate every buffer; parameters filled with a deterministic
+    /// pseudorandom pattern from `seed`, intermediates zeroed.
+    pub fn seeded(prog: &Program, seed: u64) -> Memory {
+        let mut state = seed ^ 0x9e3779b97f4a7c15;
+        let mut next = move || {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            // Small-magnitude values keep f32 reductions well-conditioned.
+            ((state >> 40) as f32 / (1u32 << 24) as f32) - 0.5
+        };
+        let bufs = prog
+            .buffers
+            .iter()
+            .enumerate()
+            .map(|(i, b)| {
+                let n = b.numel().max(0) as usize;
+                if prog.params.contains(&i) {
+                    (0..n).map(|_| next()).collect()
+                } else {
+                    vec![0.0; n]
+                }
+            })
+            .collect();
+        Memory { bufs }
+    }
+
+    fn flat_index(prog: &Program, buffer: usize, idx: &[i64]) -> i64 {
+        let shape = &prog.buffers[buffer].shape;
+        let mut flat = 0i64;
+        for (d, &i) in idx.iter().enumerate() {
+            flat = flat * shape.get(d).copied().unwrap_or(1) + i;
+        }
+        flat
+    }
+}
+
+fn eval_cexpr(
+    prog: &Program,
+    mem: &Memory,
+    env: &HashMap<VarId, i64>,
+    e: &CExpr,
+) -> Result<f32, InterpError> {
+    Ok(match e {
+        CExpr::ConstF(c) => *c as f32,
+        CExpr::Load(buf, idx) => {
+            let concrete: Vec<i64> = idx.iter().map(|a| a.eval(env)).collect();
+            let flat = Memory::flat_index(prog, *buf, &concrete);
+            let data = &mem.bufs[*buf];
+            if flat < 0 || flat as usize >= data.len() {
+                return Err(InterpError::OutOfBounds {
+                    buffer: prog.buffers[*buf].name.clone(),
+                    index: flat,
+                });
+            }
+            data[flat as usize]
+        }
+        CExpr::Bin(op, a, b) => {
+            let (x, y) = (
+                eval_cexpr(prog, mem, env, a)?,
+                eval_cexpr(prog, mem, env, b)?,
+            );
+            apply_bin(*op, x, y)
+        }
+        CExpr::Un(op, a) => {
+            let x = eval_cexpr(prog, mem, env, a)?;
+            match op {
+                UnOp::Neg => -x,
+                UnOp::Exp => x.exp(),
+                UnOp::Sqrt => x.sqrt(),
+                UnOp::Rsqrt => 1.0 / x.sqrt(),
+                UnOp::Relu => x.max(0.0),
+                UnOp::Tanh => x.tanh(),
+                UnOp::Erf => {
+                    // Abramowitz-Stegun 7.1.26 approximation.
+                    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+                    let t = 1.0 / (1.0 + 0.3275911 * x.abs());
+                    let y = 1.0
+                        - (((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t
+                            - 0.284496736)
+                            * t
+                            + 0.254829592)
+                            * t
+                            * (-x * x).exp();
+                    sign * y
+                }
+                UnOp::CastF32 | UnOp::CastBF16 => x,
+            }
+        }
+    })
+}
+
+fn apply_bin(op: BinOp, x: f32, y: f32) -> f32 {
+    match op {
+        BinOp::Add => x + y,
+        BinOp::Sub => x - y,
+        BinOp::Mul => x * y,
+        BinOp::Div => x / y,
+        BinOp::Max => x.max(y),
+        BinOp::Min => x.min(y),
+    }
+}
+
+fn store(
+    prog: &Program,
+    mem: &mut Memory,
+    block_name: &str,
+    region: &Region,
+    env: &HashMap<VarId, i64>,
+    value: f32,
+) -> Result<i64, InterpError> {
+    if region.ranges.iter().any(|(_, e)| *e != 1) {
+        return Err(InterpError::NonPointWrite(block_name.to_string()));
+    }
+    let idx: Vec<i64> = region.ranges.iter().map(|(s, _)| s.eval(env)).collect();
+    let flat = Memory::flat_index(prog, region.buffer, &idx);
+    let data = &mut mem.bufs[region.buffer];
+    if flat < 0 || flat as usize >= data.len() {
+        return Err(InterpError::OutOfBounds {
+            buffer: prog.buffers[region.buffer].name.clone(),
+            index: flat,
+        });
+    }
+    data[flat as usize] = value;
+    Ok(flat)
+}
+
+/// Execute `prog` over `mem` in place.
+pub fn execute(prog: &Program, mem: &mut Memory) -> Result<(), InterpError> {
+    let mut env: HashMap<VarId, i64> = HashMap::new();
+    for &root in &prog.roots {
+        exec_item(prog, mem, root, &mut env)?;
+    }
+    Ok(())
+}
+
+fn exec_item(
+    prog: &Program,
+    mem: &mut Memory,
+    item: ItemId,
+    env: &mut HashMap<VarId, i64>,
+) -> Result<(), InterpError> {
+    if !prog.items[item].alive {
+        return Ok(());
+    }
+    match &prog.items[item].kind {
+        ItemKind::Loop(l) => {
+            for v in 0..l.extent {
+                env.insert(l.var, v);
+                for &c in &prog.items[item].children {
+                    exec_item(prog, mem, c, env)?;
+                }
+            }
+            env.remove(&l.var);
+            Ok(())
+        }
+        ItemKind::Block(bd) => {
+            // Bind block iter vars from their loop-var bindings.
+            let mut benv = env.clone();
+            for iv in &bd.iters {
+                let val = iv.binding.eval(env);
+                benv.insert(iv.var, val);
+            }
+            match &bd.body {
+                BlockBody::Assign { expr } => {
+                    let v = eval_cexpr(prog, mem, &benv, expr)?;
+                    store(prog, mem, &bd.name, &bd.writes[0], &benv, v)?;
+                    Ok(())
+                }
+                BlockBody::Reduce { init, op, rhs } => {
+                    // First reduction step for this output element: every
+                    // reduce iter evaluates to 0.
+                    let first = bd
+                        .iters
+                        .iter()
+                        .filter(|iv| iv.kind == IterKind::Reduce)
+                        .all(|iv| benv[&iv.var] == 0);
+                    if first && !bd.init_decomposed {
+                        let v = eval_cexpr(prog, mem, &benv, init)?;
+                        store(prog, mem, &bd.name, &bd.writes[0], &benv, v)?;
+                    }
+                    let update = eval_cexpr(prog, mem, &benv, rhs)?;
+                    // Load-modify-store on the accumulator.
+                    let region = &bd.writes[0];
+                    let idx: Vec<AExpr> = region.ranges.iter().map(|(s, _)| s.clone()).collect();
+                    let cur = eval_cexpr(prog, mem, &benv, &CExpr::Load(region.buffer, idx))?;
+                    store(prog, mem, &bd.name, region, &benv, apply_bin(*op, cur, update))?;
+                    Ok(())
+                }
+                BlockBody::Opaque { .. } => Err(InterpError::OpaqueBlock(bd.name.clone())),
+            }
+        }
+    }
+}
+
+/// Execute `prog` from a seeded memory and return the final state.
+pub fn run_seeded(prog: &Program, seed: u64) -> Result<Memory, InterpError> {
+    let mut mem = Memory::seeded(prog, seed);
+    execute(prog, &mut mem)?;
+    Ok(mem)
+}
+
+/// Compare two programs' *parameter* buffers (inputs are identical by
+/// seeding; outputs must agree) after executing both from the same seed.
+/// Returns the max absolute difference over all parameter buffers.
+pub fn semantic_distance(a: &Program, b: &Program, seed: u64) -> Result<f64, InterpError> {
+    let ma = run_seeded(a, seed)?;
+    let mb = run_seeded(b, seed)?;
+    let mut max = 0.0f64;
+    for (&pa, &pb) in a.params.iter().zip(b.params.iter()) {
+        for (x, y) in ma.bufs[pa].iter().zip(mb.bufs[pb].iter()) {
+            max = max.max((x - y).abs() as f64);
+        }
+    }
+    Ok(max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::Schedule;
+    use crate::trace::FactorArg;
+    use crate::workloads;
+
+    #[test]
+    fn matmul_matches_host_reference() {
+        let prog = workloads::matmul(1, 8, 8, 8);
+        let mem = run_seeded(&prog, 1).unwrap();
+        // Host-side reference from the same inputs.
+        let (a, b, c) = (&mem.bufs[0], &mem.bufs[1], &mem.bufs[2]);
+        for i in 0..8 {
+            for j in 0..8 {
+                let mut acc = 0.0f32;
+                for k in 0..8 {
+                    acc += a[i * 8 + k] * b[k * 8 + j];
+                }
+                assert!((acc - c[i * 8 + j]).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn fused_dense_relu_nonnegative_and_consistent() {
+        let prog = workloads::fused_dense(8, 16, 8);
+        let mem = run_seeded(&prog, 2).unwrap();
+        let out = &mem.bufs[prog.params[4]]; // Out
+        assert!(out.iter().all(|&x| x >= 0.0));
+        assert!(out.iter().any(|&x| x > 0.0));
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let prog = workloads::softmax(1, 8, 8);
+        let mem = run_seeded(&prog, 3).unwrap();
+        let out = &mem.bufs[prog.params[1]];
+        for i in 0..8 {
+            let s: f32 = out[i * 8..(i + 1) * 8].iter().sum();
+            assert!((s - 1.0).abs() < 1e-4, "row {i} sums to {s}");
+        }
+    }
+
+    #[test]
+    fn split_reorder_parallel_preserve_semantics() {
+        let prog = workloads::matmul(1, 16, 16, 16);
+        let mut s = Schedule::new(prog.clone(), 0);
+        let b = s.get_block("matmul").unwrap();
+        let loops = s.get_loops(b).unwrap();
+        let i = s.split(loops[1], &[FactorArg::Lit(4), FactorArg::Lit(4)]).unwrap();
+        let k = s.split(loops[3], &[FactorArg::Lit(2), FactorArg::Lit(8)]).unwrap();
+        s.reorder(&[k[0], i[1]]).unwrap();
+        s.parallel(i[0]).unwrap();
+        let loops2 = s.get_loops(b).unwrap();
+        s.vectorize(*loops2.last().unwrap()).unwrap_or(());
+        let d = semantic_distance(&prog, &s.prog, 7).unwrap();
+        assert_eq!(d, 0.0, "schedule changed program values");
+    }
+
+    #[test]
+    fn compute_inline_preserves_semantics() {
+        let prog = workloads::fused_dense(8, 8, 8);
+        let mut s = Schedule::new(prog.clone(), 0);
+        let bias = s.get_block("bias_add").unwrap();
+        s.compute_inline(bias).unwrap();
+        let d = semantic_distance(&prog, &s.prog, 11).unwrap();
+        assert!(d < 1e-5, "inline changed values by {d}");
+    }
+
+    #[test]
+    fn rfactor_preserves_semantics() {
+        let prog = workloads::norm(1, 8, 32);
+        let mut s = Schedule::new(prog.clone(), 0);
+        let b = s.get_block("sq_sum").unwrap();
+        let loops = s.get_loops(b).unwrap();
+        let parts = s.split(loops[1], &[FactorArg::Lit(4), FactorArg::Lit(8)]).unwrap();
+        s.rfactor(b, parts[0]).unwrap();
+        let d = semantic_distance(&prog, &s.prog, 13).unwrap();
+        assert!(d < 1e-4, "rfactor changed values by {d}");
+    }
+
+    #[test]
+    fn opaque_blocks_rejected() {
+        let prog = workloads::matmul(1, 16, 16, 16);
+        let mut s = Schedule::new(prog, 0);
+        let b = s.get_block("matmul").unwrap();
+        let loops = s.get_loops(b).unwrap();
+        s.blockize(loops[3]).unwrap();
+        assert!(matches!(
+            run_seeded(&s.prog, 0),
+            Err(InterpError::OpaqueBlock(_))
+        ));
+    }
+}

@@ -1,0 +1,24 @@
+//! Tensor-program IR (a TensorIR-style substrate built from scratch).
+//!
+//! The paper schedules TVM TensorIR programs; this module provides the
+//! equivalent substrate: buffers with storage scopes, blocks with
+//! spatial/reduction iteration variables bound to an enclosing loop tree,
+//! affine index expressions amenable to exact interval analysis, a
+//! pretty-printer, and the structural analyses the transformation modules
+//! and the hardware simulator rely on.
+
+pub mod analysis;
+pub mod block;
+pub mod buffer;
+pub mod builder;
+pub mod expr;
+pub mod interp;
+pub mod printer;
+pub mod program;
+
+pub use block::{BlockBody, BlockData, IterKind, IterVar};
+pub use buffer::{Buffer, DType, Region, Scope};
+pub use builder::{rd, sp, Axis};
+pub use expr::{AExpr, BinOp, CExpr, UnOp, VarId};
+pub use printer::{print_program, structural_hash, PrintOptions};
+pub use program::{Item, ItemId, ItemKind, LoopData, LoopKind, Program};

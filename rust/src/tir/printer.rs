@@ -1,0 +1,276 @@
+//! Pretty-printer for tensor programs (TVMScript-flavoured text) and the
+//! normalized form used for structural hashing / task deduplication.
+
+use std::collections::HashMap;
+
+use crate::tir::block::{BlockBody, IterKind};
+use crate::tir::expr::{AExpr, CExpr, VarId};
+use crate::tir::program::{ItemKind, Program};
+
+/// Options controlling printing.
+#[derive(Debug, Clone, Copy)]
+pub struct PrintOptions {
+    /// Rename variables by order of first appearance (`v0`, `v1`, …) so two
+    /// structurally-identical programs print identically.
+    pub normalize_vars: bool,
+}
+
+impl Default for PrintOptions {
+    fn default() -> Self {
+        PrintOptions {
+            normalize_vars: false,
+        }
+    }
+}
+
+struct Printer<'a> {
+    p: &'a Program,
+    opts: PrintOptions,
+    rename: HashMap<VarId, String>,
+    out: String,
+}
+
+impl<'a> Printer<'a> {
+    fn var(&mut self, v: VarId) -> String {
+        if self.opts.normalize_vars {
+            if let Some(n) = self.rename.get(&v) {
+                return n.clone();
+            }
+            let n = format!("v{}", self.rename.len());
+            self.rename.insert(v, n.clone());
+            n
+        } else {
+            self.p.var_name(v).to_string()
+        }
+    }
+
+    fn aexpr(&mut self, e: &AExpr) -> String {
+        match e {
+            AExpr::Var(v) => self.var(*v),
+            AExpr::Const(c) => c.to_string(),
+            AExpr::Add(a, b) => format!("({} + {})", self.aexpr(a), self.aexpr(b)),
+            AExpr::Sub(a, b) => format!("({} - {})", self.aexpr(a), self.aexpr(b)),
+            AExpr::Mul(a, c) => format!("({}*{})", self.aexpr(a), c),
+            AExpr::FloorDiv(a, c) => format!("({} // {})", self.aexpr(a), c),
+            AExpr::Mod(a, c) => format!("({} % {})", self.aexpr(a), c),
+        }
+    }
+
+    fn cexpr(&mut self, e: &CExpr) -> String {
+        match e {
+            CExpr::Load(b, idx) => {
+                let name = self.p.buffers[*b].name.clone();
+                let idx: Vec<String> = idx.iter().map(|i| self.aexpr(i)).collect();
+                format!("{}[{}]", name, idx.join(", "))
+            }
+            CExpr::ConstF(c) => format!("{c}"),
+            CExpr::Bin(op, a, b) => {
+                format!("{}({}, {})", op.name(), self.cexpr(a), self.cexpr(b))
+            }
+            CExpr::Un(op, a) => format!("{}({})", op.name(), self.cexpr(a)),
+        }
+    }
+
+    fn indent(&mut self, depth: usize) {
+        for _ in 0..depth {
+            self.out.push_str("  ");
+        }
+    }
+
+    fn item(&mut self, id: usize, depth: usize) {
+        match &self.p.items[id].kind {
+            ItemKind::Loop(l) => {
+                let l = l.clone();
+                self.indent(depth);
+                let var = self.var(l.var);
+                let kind = match l.kind {
+                    crate::tir::program::LoopKind::Serial => String::new(),
+                    k => format!(" ({})", k.name()),
+                };
+                let ann = if l.annotations.is_empty() {
+                    String::new()
+                } else {
+                    format!(
+                        " @[{}]",
+                        l.annotations
+                            .iter()
+                            .map(|(k, v)| format!("{k}={v}"))
+                            .collect::<Vec<_>>()
+                            .join(", ")
+                    )
+                };
+                self.out
+                    .push_str(&format!("for {} in {}{}{} {{\n", var, l.extent, kind, ann));
+                for c in self.p.items[id].children.clone() {
+                    self.item(c, depth + 1);
+                }
+                self.indent(depth);
+                self.out.push_str("}\n");
+            }
+            ItemKind::Block(b) => {
+                let b = b.clone();
+                self.indent(depth);
+                let iters: Vec<String> = b
+                    .iters
+                    .iter()
+                    .map(|iv| {
+                        let tag = match iv.kind {
+                            IterKind::Spatial => "",
+                            IterKind::Reduce => "[reduce]",
+                        };
+                        let name = self.var(iv.var);
+                        let bind = self.aexpr(&iv.binding);
+                        format!("{}{}:{} = {}", name, tag, iv.extent, bind)
+                    })
+                    .collect();
+                self.out
+                    .push_str(&format!("block {}({}) {{\n", b.name, iters.join(", ")));
+                for (label, regions) in [("reads", &b.reads), ("writes", &b.writes)] {
+                    self.indent(depth + 1);
+                    let rs: Vec<String> = regions
+                        .iter()
+                        .map(|r| {
+                            let name = self.p.buffers[r.buffer].name.clone();
+                            let dims: Vec<String> = r
+                                .ranges
+                                .iter()
+                                .map(|(start, extent)| {
+                                    if *extent == 1 {
+                                        self.aexpr(start)
+                                    } else {
+                                        format!("{}+:{}", self.aexpr(start), extent)
+                                    }
+                                })
+                                .collect();
+                            format!("{}[{}]", name, dims.join(", "))
+                        })
+                        .collect();
+                    self.out.push_str(&format!("{}: {}\n", label, rs.join(", ")));
+                }
+                self.indent(depth + 1);
+                match &b.body {
+                    BlockBody::Assign { expr } => {
+                        let e = self.cexpr(expr);
+                        self.out.push_str(&format!("out = {e}\n"));
+                    }
+                    BlockBody::Reduce { init, op, rhs } => {
+                        let i = self.cexpr(init);
+                        let r = self.cexpr(rhs);
+                        self.out
+                            .push_str(&format!("out = {}(out, {r}) [init = {i}]\n", op.name()));
+                    }
+                    BlockBody::Opaque { flops_per_instance } => {
+                        self.out
+                            .push_str(&format!("opaque [flops={flops_per_instance}]\n"));
+                    }
+                }
+                if !b.annotations.is_empty() {
+                    self.indent(depth + 1);
+                    let ann: Vec<String> = b
+                        .annotations
+                        .iter()
+                        .map(|(k, v)| format!("{k}={v}"))
+                        .collect();
+                    self.out.push_str(&format!("@[{}]\n", ann.join(", ")));
+                }
+                self.indent(depth);
+                self.out.push_str("}\n");
+            }
+        }
+    }
+}
+
+/// Render a program to text.
+pub fn print_program(p: &Program, opts: PrintOptions) -> String {
+    let mut pr = Printer {
+        p,
+        opts,
+        rename: HashMap::new(),
+        out: String::new(),
+    };
+    let sig: Vec<String> = p
+        .params
+        .iter()
+        .map(|&b| {
+            let buf = &p.buffers[b];
+            let dims: Vec<String> = buf.shape.iter().map(|d| d.to_string()).collect();
+            format!("{}: {}[{}]", buf.name, buf.dtype.name(), dims.join(","))
+        })
+        .collect();
+    pr.out
+        .push_str(&format!("func {}({}) {{\n", p.name, sig.join(", ")));
+    for r in p.roots.clone() {
+        pr.item(r, 1);
+    }
+    pr.out.push_str("}\n");
+    pr.out
+}
+
+/// FNV-1a over the normalized print — the structural hash used for task
+/// deduplication in graph-level tuning.
+pub fn structural_hash(p: &Program) -> u64 {
+    let text = print_program(
+        p,
+        PrintOptions {
+            normalize_vars: true,
+        },
+    );
+    let mut h: u64 = 0xcbf29ce484222325;
+    for byte in text.bytes() {
+        h ^= byte as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+impl std::fmt::Display for Program {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", print_program(self, PrintOptions::default()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tir::block::BlockData;
+    use crate::tir::buffer::{Buffer, DType};
+    use crate::tir::program::LoopData;
+
+    fn prog(name_hint: &str) -> Program {
+        let mut p = Program::new("t");
+        let a = p.add_buffer(Buffer::new("A", vec![8], DType::F32));
+        p.params = vec![a];
+        let v = p.fresh_var(name_hint);
+        let l = p.alloc_loop(LoopData::new(v, 8));
+        let b = p.alloc_block(BlockData::new("B"));
+        p.attach(l, None);
+        p.attach(b, Some(l));
+        p
+    }
+
+    #[test]
+    fn prints_signature_and_structure() {
+        let p = prog("i");
+        let text = print_program(&p, PrintOptions::default());
+        assert!(text.contains("func t(A: f32[8])"));
+        assert!(text.contains("for i0 in 8 {"));
+        assert!(text.contains("block B("));
+    }
+
+    #[test]
+    fn structural_hash_ignores_var_names() {
+        let p1 = prog("i");
+        let p2 = prog("zzz");
+        assert_eq!(structural_hash(&p1), structural_hash(&p2));
+    }
+
+    #[test]
+    fn structural_hash_sees_extent_change() {
+        let p1 = prog("i");
+        let mut p2 = prog("i");
+        // change loop extent
+        let l = p2.roots[0];
+        p2.loop_data_mut(l).extent = 16;
+        assert_ne!(structural_hash(&p1), structural_hash(&p2));
+    }
+}

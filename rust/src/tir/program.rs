@@ -1,0 +1,493 @@
+//! The tensor program: an arena of loops and blocks forming a forest.
+//!
+//! Items (loops and blocks) live in a flat arena with stable ids, so
+//! schedule primitives can hold handles across transformations. Structure
+//! is parent/children links; removal tombstones the item (`alive = false`).
+
+use std::collections::{BTreeMap, HashMap};
+
+use crate::tir::block::BlockData;
+use crate::tir::buffer::Buffer;
+use crate::tir::expr::{AExpr, VarId};
+
+/// Index into [`Program::items`].
+pub type ItemId = usize;
+
+/// Execution kind of a loop.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub enum LoopKind {
+    Serial,
+    Parallel,
+    Vectorized,
+    Unrolled,
+    /// Bound to a hardware thread axis, e.g. "blockIdx.x", "threadIdx.y".
+    ThreadBinding(String),
+}
+
+impl LoopKind {
+    pub fn name(&self) -> String {
+        match self {
+            LoopKind::Serial => "serial".into(),
+            LoopKind::Parallel => "parallel".into(),
+            LoopKind::Vectorized => "vectorized".into(),
+            LoopKind::Unrolled => "unrolled".into(),
+            LoopKind::ThreadBinding(t) => format!("thread<{t}>"),
+        }
+    }
+}
+
+/// A loop node.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LoopData {
+    pub var: VarId,
+    pub extent: i64,
+    pub kind: LoopKind,
+    pub annotations: BTreeMap<String, String>,
+}
+
+impl LoopData {
+    pub fn new(var: VarId, extent: i64) -> LoopData {
+        LoopData {
+            var,
+            extent,
+            kind: LoopKind::Serial,
+            annotations: BTreeMap::new(),
+        }
+    }
+}
+
+/// Arena item payload.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ItemKind {
+    Loop(LoopData),
+    Block(BlockData),
+}
+
+/// Arena item: payload plus tree links.
+#[derive(Debug, Clone)]
+pub struct Item {
+    pub parent: Option<ItemId>,
+    pub children: Vec<ItemId>,
+    pub kind: ItemKind,
+    pub alive: bool,
+}
+
+/// A complete tensor program.
+#[derive(Debug, Clone)]
+pub struct Program {
+    pub name: String,
+    /// Variable names, indexed by `VarId`.
+    pub vars: Vec<String>,
+    pub buffers: Vec<Buffer>,
+    pub items: Vec<Item>,
+    /// Top-level items in execution order.
+    pub roots: Vec<ItemId>,
+    /// Ids of buffers that are kernel parameters (inputs + outputs).
+    pub params: Vec<usize>,
+}
+
+impl Program {
+    pub fn new(name: impl Into<String>) -> Program {
+        Program {
+            name: name.into(),
+            vars: Vec::new(),
+            buffers: Vec::new(),
+            items: Vec::new(),
+            roots: Vec::new(),
+            params: Vec::new(),
+        }
+    }
+
+    // ---- construction -----------------------------------------------------
+
+    /// Intern a fresh variable with the given name hint.
+    pub fn fresh_var(&mut self, hint: &str) -> VarId {
+        let id = self.vars.len() as VarId;
+        self.vars.push(format!("{hint}{id}"));
+        id
+    }
+
+    pub fn var_name(&self, v: VarId) -> &str {
+        &self.vars[v as usize]
+    }
+
+    pub fn add_buffer(&mut self, buffer: Buffer) -> usize {
+        self.buffers.push(buffer);
+        self.buffers.len() - 1
+    }
+
+    /// Allocate a loop item (not yet linked into the tree).
+    pub fn alloc_loop(&mut self, data: LoopData) -> ItemId {
+        self.items.push(Item {
+            parent: None,
+            children: Vec::new(),
+            kind: ItemKind::Loop(data),
+            alive: true,
+        });
+        self.items.len() - 1
+    }
+
+    /// Allocate a block item (not yet linked into the tree).
+    pub fn alloc_block(&mut self, data: BlockData) -> ItemId {
+        self.items.push(Item {
+            parent: None,
+            children: Vec::new(),
+            kind: ItemKind::Block(data),
+            alive: true,
+        });
+        self.items.len() - 1
+    }
+
+    /// Append `child` as the last child of `parent` (or as a root).
+    pub fn attach(&mut self, child: ItemId, parent: Option<ItemId>) {
+        self.items[child].parent = parent;
+        match parent {
+            Some(p) => self.items[p].children.push(child),
+            None => self.roots.push(child),
+        }
+    }
+
+    /// Insert `child` under `parent` at position `pos`.
+    pub fn attach_at(&mut self, child: ItemId, parent: Option<ItemId>, pos: usize) {
+        self.items[child].parent = parent;
+        match parent {
+            Some(p) => self.items[p].children.insert(pos, child),
+            None => self.roots.insert(pos, child),
+        }
+    }
+
+    /// Unlink `item` from its parent (does not tombstone).
+    pub fn detach(&mut self, item: ItemId) {
+        let parent = self.items[item].parent;
+        match parent {
+            Some(p) => self.items[p].children.retain(|&c| c != item),
+            None => self.roots.retain(|&c| c != item),
+        }
+        self.items[item].parent = None;
+    }
+
+    /// Remove an item and its whole subtree from the tree (tombstoned).
+    pub fn remove_subtree(&mut self, item: ItemId) {
+        self.detach(item);
+        let mut stack = vec![item];
+        while let Some(i) = stack.pop() {
+            self.items[i].alive = false;
+            stack.extend(self.items[i].children.iter().copied());
+        }
+    }
+
+    // ---- accessors ---------------------------------------------------------
+
+    pub fn is_loop(&self, item: ItemId) -> bool {
+        matches!(self.items[item].kind, ItemKind::Loop(_))
+    }
+
+    pub fn loop_data(&self, item: ItemId) -> &LoopData {
+        match &self.items[item].kind {
+            ItemKind::Loop(l) => l,
+            _ => panic!("item {item} is not a loop"),
+        }
+    }
+
+    pub fn loop_data_mut(&mut self, item: ItemId) -> &mut LoopData {
+        match &mut self.items[item].kind {
+            ItemKind::Loop(l) => l,
+            _ => panic!("item {item} is not a loop"),
+        }
+    }
+
+    pub fn block_data(&self, item: ItemId) -> &BlockData {
+        match &self.items[item].kind {
+            ItemKind::Block(b) => b,
+            _ => panic!("item {item} is not a block"),
+        }
+    }
+
+    pub fn block_data_mut(&mut self, item: ItemId) -> &mut BlockData {
+        match &mut self.items[item].kind {
+            ItemKind::Block(b) => b,
+            _ => panic!("item {item} is not a block"),
+        }
+    }
+
+    // ---- navigation ---------------------------------------------------------
+
+    /// Pre-order traversal of live items.
+    pub fn preorder(&self) -> Vec<ItemId> {
+        let mut out = Vec::with_capacity(self.items.len());
+        let mut stack: Vec<ItemId> = self.roots.iter().rev().copied().collect();
+        while let Some(i) = stack.pop() {
+            if !self.items[i].alive {
+                continue;
+            }
+            out.push(i);
+            stack.extend(self.items[i].children.iter().rev().copied());
+        }
+        out
+    }
+
+    /// All live blocks, in pre-order.
+    pub fn blocks(&self) -> Vec<ItemId> {
+        self.preorder()
+            .into_iter()
+            .filter(|&i| matches!(self.items[i].kind, ItemKind::Block(_)))
+            .collect()
+    }
+
+    /// Find a live block by name. Returns the first match in pre-order.
+    pub fn find_block(&self, name: &str) -> Option<ItemId> {
+        self.blocks()
+            .into_iter()
+            .find(|&i| self.block_data(i).name == name)
+    }
+
+    /// Loops on the path from root to `item` (outermost first), excluding
+    /// `item` itself.
+    pub fn loops_above(&self, item: ItemId) -> Vec<ItemId> {
+        let mut out = Vec::new();
+        let mut cur = self.items[item].parent;
+        while let Some(p) = cur {
+            if self.is_loop(p) {
+                out.push(p);
+            }
+            cur = self.items[p].parent;
+        }
+        out.reverse();
+        out
+    }
+
+    /// All live blocks in the subtree rooted at `item` (pre-order).
+    pub fn blocks_under(&self, item: ItemId) -> Vec<ItemId> {
+        let mut out = Vec::new();
+        let mut stack = vec![item];
+        while let Some(i) = stack.pop() {
+            if !self.items[i].alive {
+                continue;
+            }
+            if matches!(self.items[i].kind, ItemKind::Block(_)) {
+                out.push(i);
+            }
+            stack.extend(self.items[i].children.iter().rev().copied());
+        }
+        out.reverse();
+        out.reverse();
+        out
+    }
+
+    /// The outermost ancestor (root item) containing `item`.
+    pub fn root_of(&self, item: ItemId) -> ItemId {
+        let mut cur = item;
+        while let Some(p) = self.items[cur].parent {
+            cur = p;
+        }
+        cur
+    }
+
+    /// Extents of loop variables as an environment for interval analysis:
+    /// every live loop var maps to `(0, extent-1)`.
+    pub fn loop_var_ranges(&self) -> HashMap<VarId, (i64, i64)> {
+        let mut env = HashMap::new();
+        for i in self.preorder() {
+            if let ItemKind::Loop(l) = &self.items[i].kind {
+                env.insert(l.var, (0, l.extent - 1));
+            }
+        }
+        env
+    }
+
+    /// Substitute a loop variable in every block-iter binding within the
+    /// subtree rooted at `item`.
+    pub fn subst_loop_var_under(&mut self, item: ItemId, var: VarId, replacement: &AExpr) {
+        let mut map = HashMap::new();
+        map.insert(var, replacement.clone());
+        let mut stack = vec![item];
+        while let Some(i) = stack.pop() {
+            if !self.items[i].alive {
+                continue;
+            }
+            let children = self.items[i].children.clone();
+            if let ItemKind::Block(b) = &mut self.items[i].kind {
+                for iv in &mut b.iters {
+                    if iv.binding.uses_var(var) {
+                        iv.binding = iv.binding.subst(&map);
+                    }
+                }
+            }
+            stack.extend(children);
+        }
+    }
+
+    /// Blocks writing / reading each buffer (live blocks only).
+    pub fn writers_of(&self, buffer: usize) -> Vec<ItemId> {
+        self.blocks()
+            .into_iter()
+            .filter(|&b| self.block_data(b).writes.iter().any(|r| r.buffer == buffer))
+            .collect()
+    }
+
+    pub fn readers_of(&self, buffer: usize) -> Vec<ItemId> {
+        self.blocks()
+            .into_iter()
+            .filter(|&b| self.block_data(b).reads.iter().any(|r| r.buffer == buffer))
+            .collect()
+    }
+
+    /// Consumer blocks of `block`: blocks reading any buffer it writes.
+    pub fn consumers_of(&self, block: ItemId) -> Vec<ItemId> {
+        let written: Vec<usize> = self
+            .block_data(block)
+            .writes
+            .iter()
+            .map(|r| r.buffer)
+            .collect();
+        self.blocks()
+            .into_iter()
+            .filter(|&b| {
+                b != block
+                    && self
+                        .block_data(b)
+                        .reads
+                        .iter()
+                        .any(|r| written.contains(&r.buffer))
+            })
+            .collect()
+    }
+
+    /// Producer blocks of `block`: blocks writing any buffer it reads.
+    pub fn producers_of(&self, block: ItemId) -> Vec<ItemId> {
+        let read: Vec<usize> = self
+            .block_data(block)
+            .reads
+            .iter()
+            .map(|r| r.buffer)
+            .collect();
+        self.blocks()
+            .into_iter()
+            .filter(|&b| {
+                b != block
+                    && self
+                        .block_data(b)
+                        .writes
+                        .iter()
+                        .any(|r| read.contains(&r.buffer))
+            })
+            .collect()
+    }
+
+    /// Sanity-check tree links; used by tests and the trace validator.
+    pub fn check_integrity(&self) -> Result<(), String> {
+        for (id, item) in self.items.iter().enumerate() {
+            if !item.alive {
+                continue;
+            }
+            for &c in &item.children {
+                if !self.items[c].alive {
+                    return Err(format!("live item {id} has dead child {c}"));
+                }
+                if self.items[c].parent != Some(id) {
+                    return Err(format!("child {c} of {id} has wrong parent link"));
+                }
+            }
+            match item.parent {
+                Some(p) => {
+                    if !self.items[p].children.contains(&id) {
+                        return Err(format!("item {id} not in parent {p}'s children"));
+                    }
+                }
+                None => {
+                    if !self.roots.contains(&id) {
+                        return Err(format!("parentless live item {id} not a root"));
+                    }
+                }
+            }
+            // Blocks must be leaves unless opaque wrappers; loops must have children.
+            match &item.kind {
+                ItemKind::Loop(l) => {
+                    if l.extent <= 0 {
+                        return Err(format!("loop {id} has non-positive extent"));
+                    }
+                    if item.children.is_empty() {
+                        return Err(format!("loop {id} has no children"));
+                    }
+                }
+                ItemKind::Block(_) => {
+                    if !item.children.is_empty() {
+                        return Err(format!("block {id} has children"));
+                    }
+                }
+            }
+        }
+        for &r in &self.roots {
+            if self.items[r].parent.is_some() {
+                return Err(format!("root {r} has a parent"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tir::block::BlockData;
+
+    /// Build: for i in 64 { for j in 32 { block B } }
+    fn tiny() -> (Program, ItemId, ItemId, ItemId) {
+        let mut p = Program::new("tiny");
+        let vi = p.fresh_var("i");
+        let vj = p.fresh_var("j");
+        let li = p.alloc_loop(LoopData::new(vi, 64));
+        let lj = p.alloc_loop(LoopData::new(vj, 32));
+        let b = p.alloc_block(BlockData::new("B"));
+        p.attach(li, None);
+        p.attach(lj, Some(li));
+        p.attach(b, Some(lj));
+        (p, li, lj, b)
+    }
+
+    #[test]
+    fn preorder_and_loops_above() {
+        let (p, li, lj, b) = tiny();
+        assert_eq!(p.preorder(), vec![li, lj, b]);
+        assert_eq!(p.loops_above(b), vec![li, lj]);
+        assert_eq!(p.blocks(), vec![b]);
+        p.check_integrity().unwrap();
+    }
+
+    #[test]
+    fn detach_and_reattach() {
+        let (mut p, li, lj, b) = tiny();
+        p.detach(b);
+        assert!(p.blocks_under(li).is_empty());
+        p.attach(b, Some(lj));
+        assert_eq!(p.blocks_under(li), vec![b]);
+        p.check_integrity().unwrap();
+    }
+
+    #[test]
+    fn remove_subtree_tombstones() {
+        let (mut p, li, _lj, b) = tiny();
+        p.remove_subtree(li);
+        assert!(!p.items[li].alive);
+        assert!(!p.items[b].alive);
+        assert!(p.roots.is_empty());
+        assert!(p.blocks().is_empty());
+    }
+
+    #[test]
+    fn loop_var_ranges_cover_loops() {
+        let (p, li, lj, _) = tiny();
+        let env = p.loop_var_ranges();
+        assert_eq!(env[&p.loop_data(li).var], (0, 63));
+        assert_eq!(env[&p.loop_data(lj).var], (0, 31));
+    }
+
+    #[test]
+    fn integrity_detects_bad_parent() {
+        let (mut p, _li, lj, b) = tiny();
+        p.items[b].parent = None; // corrupt: not in roots
+        assert!(p.check_integrity().is_err());
+        p.items[b].parent = Some(lj);
+        p.check_integrity().unwrap();
+    }
+}

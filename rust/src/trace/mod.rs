@@ -1,0 +1,165 @@
+//! Execution traces: the linearized probabilistic programs of Figure 6.
+//!
+//! Running a MetaSchedule program records every sampling and transformation
+//! instruction (host-language control flow is *not* recorded). The trace can
+//! be re-executed against the initial program, its sampling decisions can be
+//! overridden/mutated, and it serializes to a line-oriented text format.
+
+pub mod replay;
+pub mod serde;
+
+pub use replay::{replay, replay_with_decisions};
+
+/// A `split` factor argument: either a previously-sampled expression RV or
+/// an inline literal.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FactorArg {
+    Rv(usize),
+    Lit(i64),
+}
+
+/// One recorded instruction. RV operands are indices into the schedule's
+/// block/loop/expr tables; `out*` fields are the indices the instruction's
+/// results were bound to (replay re-binds in the same order and asserts).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Inst {
+    // -- state queries ------------------------------------------------------
+    GetBlock { name: String, out: usize },
+    GetLoops { block: usize, outs: Vec<usize> },
+    GetProducers { block: usize, outs: Vec<usize> },
+    GetConsumers { block: usize, outs: Vec<usize> },
+    // -- sampling (decision-bearing) -----------------------------------------
+    SamplePerfectTile {
+        loop_rv: usize,
+        n: usize,
+        max_innermost: i64,
+        outs: Vec<usize>,
+        decision: Vec<i64>,
+    },
+    SampleCategorical {
+        candidates: Vec<i64>,
+        probs: Vec<f64>,
+        out: usize,
+        decision: usize,
+    },
+    SampleComputeLocation {
+        block: usize,
+        out: usize,
+        /// -1 = root, -2 = inlined, k >= 0 = k-th candidate loop.
+        decision: i64,
+    },
+    // -- loop transformations -------------------------------------------------
+    Split { loop_rv: usize, factors: Vec<FactorArg>, outs: Vec<usize> },
+    Fuse { loops: Vec<usize>, out: usize },
+    Reorder { loops: Vec<usize> },
+    Parallel { loop_rv: usize },
+    Vectorize { loop_rv: usize },
+    Unroll { loop_rv: usize },
+    Bind { loop_rv: usize, thread: String },
+    AddUnitLoop { block: usize, out: usize },
+    // -- caching / memory ------------------------------------------------------
+    CacheRead { block: usize, read_idx: usize, scope: String, out: usize },
+    CacheWrite { block: usize, write_idx: usize, scope: String, out: usize },
+    SetScope { block: usize, write_idx: usize, scope: String },
+    StorageAlign { block: usize, write_idx: usize, axis: usize, factor: i64 },
+    // -- compute location --------------------------------------------------------
+    ComputeAt { block: usize, loop_rv: usize },
+    ReverseComputeAt { block: usize, loop_rv: usize },
+    ComputeInline { block: usize },
+    ReverseComputeInline { block: usize },
+    // -- reductions ---------------------------------------------------------------
+    RFactor { block: usize, loop_rv: usize, out: usize },
+    DecomposeReduction { block: usize, loop_rv: usize, out: usize },
+    // -- tensorization ---------------------------------------------------------------
+    Blockize { loop_rv: usize, out: usize },
+    Tensorize { loop_rv: usize, intrin: String, out: usize },
+    // -- annotations -----------------------------------------------------------------
+    AnnotateBlock { block: usize, key: String, value: String },
+    AnnotateLoop { loop_rv: usize, key: String, value: String },
+    UnannotateBlock { block: usize, key: String },
+    /// Marks the boundary after which instructions are postprocessing (the
+    /// search mutates only decisions before this marker).
+    EnterPostproc,
+}
+
+impl Inst {
+    /// Whether this instruction carries a mutable sampling decision.
+    pub fn is_sampling(&self) -> bool {
+        matches!(
+            self,
+            Inst::SamplePerfectTile { .. }
+                | Inst::SampleCategorical { .. }
+                | Inst::SampleComputeLocation { .. }
+        )
+    }
+
+    /// Instruction mnemonic (used by serialization and stats).
+    pub fn opcode(&self) -> &'static str {
+        match self {
+            Inst::GetBlock { .. } => "get-block",
+            Inst::GetLoops { .. } => "get-loops",
+            Inst::GetProducers { .. } => "get-producers",
+            Inst::GetConsumers { .. } => "get-consumers",
+            Inst::SamplePerfectTile { .. } => "sample-perfect-tile",
+            Inst::SampleCategorical { .. } => "sample-categorical",
+            Inst::SampleComputeLocation { .. } => "sample-compute-location",
+            Inst::Split { .. } => "split",
+            Inst::Fuse { .. } => "fuse",
+            Inst::Reorder { .. } => "reorder",
+            Inst::Parallel { .. } => "parallel",
+            Inst::Vectorize { .. } => "vectorize",
+            Inst::Unroll { .. } => "unroll",
+            Inst::Bind { .. } => "bind",
+            Inst::AddUnitLoop { .. } => "add-unit-loop",
+            Inst::CacheRead { .. } => "cache-read",
+            Inst::CacheWrite { .. } => "cache-write",
+            Inst::SetScope { .. } => "set-scope",
+            Inst::StorageAlign { .. } => "storage-align",
+            Inst::ComputeAt { .. } => "compute-at",
+            Inst::ReverseComputeAt { .. } => "reverse-compute-at",
+            Inst::ComputeInline { .. } => "compute-inline",
+            Inst::ReverseComputeInline { .. } => "reverse-compute-inline",
+            Inst::RFactor { .. } => "rfactor",
+            Inst::DecomposeReduction { .. } => "decompose-reduction",
+            Inst::Blockize { .. } => "blockize",
+            Inst::Tensorize { .. } => "tensorize",
+            Inst::AnnotateBlock { .. } => "annotate-block",
+            Inst::AnnotateLoop { .. } => "annotate-loop",
+            Inst::UnannotateBlock { .. } => "unannotate-block",
+            Inst::EnterPostproc => "enter-postproc",
+        }
+    }
+}
+
+/// A linearized probabilistic program: the recorded instruction sequence.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Trace {
+    pub insts: Vec<Inst>,
+}
+
+impl Trace {
+    /// Indices of decision-bearing (sampling) instructions, excluding any
+    /// after the `EnterPostproc` marker.
+    pub fn sampling_indices(&self) -> Vec<usize> {
+        let postproc = self
+            .insts
+            .iter()
+            .position(|i| matches!(i, Inst::EnterPostproc))
+            .unwrap_or(self.insts.len());
+        self.insts[..postproc]
+            .iter()
+            .enumerate()
+            .filter(|(_, i)| i.is_sampling())
+            .map(|(idx, _)| idx)
+            .collect()
+    }
+
+    /// Number of instructions.
+    pub fn len(&self) -> usize {
+        self.insts.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.insts.is_empty()
+    }
+}

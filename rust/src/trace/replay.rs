@@ -1,0 +1,370 @@
+//! Trace replay: re-execute a recorded instruction sequence against the
+//! initial program, optionally overriding sampling decisions.
+//!
+//! Replay is the workhorse of the search (paper §4): every mutation
+//! proposal is validated by replaying the mutated trace; decisions that
+//! fall off the support surface as `ScheduleError`s and the candidate is
+//! rejected — this *is* the trace validator.
+
+use std::collections::HashMap;
+
+use crate::schedule::{BlockRv, ExprRv, LoopRv, SchResult, Schedule, ScheduleError};
+use crate::tir::Program;
+use crate::trace::{Inst, Trace};
+
+/// An override for one sampling instruction's decision.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Decision {
+    Tile(Vec<i64>),
+    Categorical(usize),
+    Location(i64),
+}
+
+/// Replay `trace` on `prog` using the recorded decisions.
+pub fn replay(trace: &Trace, prog: &Program, seed: u64) -> SchResult<Schedule> {
+    replay_with_decisions(trace, prog, seed, &HashMap::new())
+}
+
+/// Replay `trace` on `prog`, overriding decisions at the given instruction
+/// indices. Non-overridden sampling instructions keep their recorded
+/// decisions, so the result is deterministic given the trace.
+pub fn replay_with_decisions(
+    trace: &Trace,
+    prog: &Program,
+    seed: u64,
+    overrides: &HashMap<usize, Decision>,
+) -> SchResult<Schedule> {
+    let mut sch = Schedule::new(prog.clone(), seed);
+    for (idx, inst) in trace.insts.iter().enumerate() {
+        apply(&mut sch, idx, inst, overrides.get(&idx), false)?;
+    }
+    Ok(sch)
+}
+
+/// Replay `trace` on `prog`, redrawing every sampling decision from its
+/// (state-dependent) distribution. This is "fork-and-sample": how the
+/// search initializes a population from one design-space trace (paper §4,
+/// "conceptually ... sampling the program conditioned on the execution
+/// sequence").
+pub fn replay_fresh(trace: &Trace, prog: &Program, seed: u64) -> SchResult<Schedule> {
+    let mut sch = Schedule::new(prog.clone(), seed);
+    for (idx, inst) in trace.insts.iter().enumerate() {
+        apply(&mut sch, idx, inst, None, true)?;
+    }
+    Ok(sch)
+}
+
+fn expect_outs(got: &[usize], want: &[usize]) -> SchResult<()> {
+    if got != want {
+        return Err(ScheduleError::Unsupported(format!(
+            "replay RV misalignment: got {got:?}, trace says {want:?}"
+        )));
+    }
+    Ok(())
+}
+
+fn apply(
+    sch: &mut Schedule,
+    _idx: usize,
+    inst: &Inst,
+    over: Option<&Decision>,
+    fresh: bool,
+) -> SchResult<()> {
+    match inst {
+        Inst::GetBlock { name, out } => {
+            let rv = sch.get_block(name)?;
+            expect_outs(&[rv.0], &[*out])
+        }
+        Inst::GetLoops { block, outs } => {
+            let rvs = sch.get_loops(BlockRv(*block))?;
+            expect_outs(&rvs.iter().map(|r| r.0).collect::<Vec<_>>(), outs)
+        }
+        Inst::GetProducers { block, outs } => {
+            let rvs = sch.get_producers(BlockRv(*block))?;
+            expect_outs(&rvs.iter().map(|r| r.0).collect::<Vec<_>>(), outs)
+        }
+        Inst::GetConsumers { block, outs } => {
+            let rvs = sch.get_consumers(BlockRv(*block))?;
+            expect_outs(&rvs.iter().map(|r| r.0).collect::<Vec<_>>(), outs)
+        }
+        Inst::SamplePerfectTile {
+            loop_rv,
+            n,
+            max_innermost,
+            outs,
+            decision,
+        } => {
+            let d = match over {
+                Some(Decision::Tile(t)) => t.clone(),
+                Some(_) => {
+                    return Err(ScheduleError::InvalidDecision(
+                        "override kind mismatch for perfect-tile".into(),
+                    ))
+                }
+                None => decision.clone(),
+            };
+            let d = if fresh && over.is_none() { None } else { Some(d) };
+            let rvs = sch.sample_perfect_tile_decided(LoopRv(*loop_rv), *n, *max_innermost, d)?;
+            expect_outs(&rvs.iter().map(|r| r.0).collect::<Vec<_>>(), outs)
+        }
+        Inst::SampleCategorical {
+            candidates,
+            probs,
+            out,
+            decision,
+        } => {
+            let d = match over {
+                Some(Decision::Categorical(i)) => *i,
+                Some(_) => {
+                    return Err(ScheduleError::InvalidDecision(
+                        "override kind mismatch for categorical".into(),
+                    ))
+                }
+                None => *decision,
+            };
+            let d = if fresh && over.is_none() { None } else { Some(d) };
+            let rv = sch.sample_categorical_decided(candidates, probs, d)?;
+            expect_outs(&[rv.0], &[*out])
+        }
+        Inst::SampleComputeLocation {
+            block,
+            out,
+            decision,
+        } => {
+            let d = match over {
+                Some(Decision::Location(l)) => *l,
+                Some(_) => {
+                    return Err(ScheduleError::InvalidDecision(
+                        "override kind mismatch for compute-location".into(),
+                    ))
+                }
+                None => *decision,
+            };
+            let d = if fresh && over.is_none() { None } else { Some(d) };
+            let rv = sch.sample_compute_location_decided(BlockRv(*block), d)?;
+            expect_outs(&[rv.0], &[*out])
+        }
+        Inst::Split {
+            loop_rv,
+            factors,
+            outs,
+        } => {
+            let rvs = sch.split(LoopRv(*loop_rv), factors)?;
+            expect_outs(&rvs.iter().map(|r| r.0).collect::<Vec<_>>(), outs)
+        }
+        Inst::Fuse { loops, out } => {
+            let ls: Vec<LoopRv> = loops.iter().map(|&l| LoopRv(l)).collect();
+            let rv = sch.fuse(&ls)?;
+            expect_outs(&[rv.0], &[*out])
+        }
+        Inst::Reorder { loops } => {
+            let ls: Vec<LoopRv> = loops.iter().map(|&l| LoopRv(l)).collect();
+            sch.reorder(&ls)
+        }
+        Inst::Parallel { loop_rv } => sch.parallel(LoopRv(*loop_rv)),
+        Inst::Vectorize { loop_rv } => sch.vectorize(LoopRv(*loop_rv)),
+        Inst::Unroll { loop_rv } => sch.unroll(LoopRv(*loop_rv)),
+        Inst::Bind { loop_rv, thread } => sch.bind(LoopRv(*loop_rv), thread),
+        Inst::AddUnitLoop { block, out } => {
+            let rv = sch.add_unit_loop(BlockRv(*block))?;
+            expect_outs(&[rv.0], &[*out])
+        }
+        Inst::CacheRead {
+            block,
+            read_idx,
+            scope,
+            out,
+        } => {
+            let rv = sch.cache_read(BlockRv(*block), *read_idx, scope)?;
+            expect_outs(&[rv.0], &[*out])
+        }
+        Inst::CacheWrite {
+            block,
+            write_idx,
+            scope,
+            out,
+        } => {
+            let rv = sch.cache_write(BlockRv(*block), *write_idx, scope)?;
+            expect_outs(&[rv.0], &[*out])
+        }
+        Inst::SetScope {
+            block,
+            write_idx,
+            scope,
+        } => sch.set_scope(BlockRv(*block), *write_idx, scope),
+        Inst::StorageAlign {
+            block,
+            write_idx,
+            axis,
+            factor,
+        } => sch.storage_align(BlockRv(*block), *write_idx, *axis, *factor),
+        Inst::ComputeAt { block, loop_rv } => sch.compute_at(BlockRv(*block), LoopRv(*loop_rv)),
+        Inst::ReverseComputeAt { block, loop_rv } => {
+            sch.reverse_compute_at(BlockRv(*block), LoopRv(*loop_rv))
+        }
+        Inst::ComputeInline { block } => sch.compute_inline(BlockRv(*block)),
+        Inst::ReverseComputeInline { block } => sch.reverse_compute_inline(BlockRv(*block)),
+        Inst::RFactor {
+            block,
+            loop_rv,
+            out,
+        } => {
+            let rv = sch.rfactor(BlockRv(*block), LoopRv(*loop_rv))?;
+            expect_outs(&[rv.0], &[*out])
+        }
+        Inst::DecomposeReduction {
+            block,
+            loop_rv,
+            out,
+        } => {
+            let rv = sch.decompose_reduction(BlockRv(*block), LoopRv(*loop_rv))?;
+            expect_outs(&[rv.0], &[*out])
+        }
+        Inst::Blockize { loop_rv, out } => {
+            let rv = sch.blockize(LoopRv(*loop_rv))?;
+            expect_outs(&[rv.0], &[*out])
+        }
+        Inst::Tensorize {
+            loop_rv,
+            intrin,
+            out,
+        } => {
+            let rv = sch.tensorize(LoopRv(*loop_rv), intrin)?;
+            expect_outs(&[rv.0], &[*out])
+        }
+        Inst::AnnotateBlock { block, key, value } => {
+            sch.annotate_block(BlockRv(*block), key, value)
+        }
+        Inst::AnnotateLoop {
+            loop_rv,
+            key,
+            value,
+        } => sch.annotate_loop(LoopRv(*loop_rv), key, value),
+        Inst::UnannotateBlock { block, key } => sch.unannotate_block(BlockRv(*block), key),
+        Inst::EnterPostproc => {
+            sch.record(Inst::EnterPostproc);
+            Ok(())
+        }
+    }
+}
+
+/// Extract the decisions of all sampling instructions in a trace
+/// (index -> decision), used by mutators.
+pub fn decisions_of(trace: &Trace) -> HashMap<usize, Decision> {
+    let mut out = HashMap::new();
+    for (idx, inst) in trace.insts.iter().enumerate() {
+        match inst {
+            Inst::SamplePerfectTile { decision, .. } => {
+                out.insert(idx, Decision::Tile(decision.clone()));
+            }
+            Inst::SampleCategorical { decision, .. } => {
+                out.insert(idx, Decision::Categorical(*decision));
+            }
+            Inst::SampleComputeLocation { decision, .. } => {
+                out.insert(idx, Decision::Location(*decision));
+            }
+            _ => {}
+        }
+    }
+    out
+}
+
+/// ExprRv helper used by generated code in modules.
+pub fn expr_rvs(ids: &[usize]) -> Vec<ExprRv> {
+    ids.iter().map(|&i| ExprRv(i)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::testutil::{dense_relu_prog, matmul_prog};
+    use crate::tir::printer::structural_hash;
+    use crate::trace::FactorArg;
+
+    /// Record a little schedule with sampling, then replay it.
+    fn sample_schedule(seed: u64) -> (Program, Schedule) {
+        let prog = matmul_prog(64, 32);
+        let mut s = Schedule::new(prog.clone(), seed);
+        let b = s.get_block("matmul").unwrap();
+        let loops = s.get_loops(b).unwrap();
+        let t = s.sample_perfect_tile(loops[0], 2, 16).unwrap();
+        s.split(
+            loops[0],
+            &[FactorArg::Rv(t[0].0), FactorArg::Rv(t[1].0)],
+        )
+        .unwrap();
+        let v = s.sample_categorical(&[0, 16, 64], &[0.3, 0.3, 0.4]).unwrap();
+        let loops2 = s.get_loops(b).unwrap();
+        s.annotate_loop(loops2[0], "pragma_unroll", &s.expr_value(v).to_string())
+            .unwrap();
+        (prog, s)
+    }
+
+    #[test]
+    fn replay_reproduces_program_exactly() {
+        let (prog, s) = sample_schedule(42);
+        let r = replay(&s.trace, &prog, 0).unwrap();
+        assert_eq!(structural_hash(&s.prog), structural_hash(&r.prog));
+        assert_eq!(r.trace.insts.len(), s.trace.insts.len());
+    }
+
+    #[test]
+    fn replay_with_override_changes_tiling() {
+        let (prog, s) = sample_schedule(42);
+        // Find the perfect-tile instruction.
+        let idx = s
+            .trace
+            .insts
+            .iter()
+            .position(|i| matches!(i, Inst::SamplePerfectTile { .. }))
+            .unwrap();
+        let mut overrides = HashMap::new();
+        overrides.insert(idx, Decision::Tile(vec![16, 4]));
+        let r = replay_with_decisions(&s.trace, &prog, 0, &overrides).unwrap();
+        // The replayed trace records the overridden decision.
+        match &r.trace.insts[idx] {
+            Inst::SamplePerfectTile { decision, .. } => assert_eq!(decision, &vec![16, 4]),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn replay_with_invalid_override_rejected() {
+        let (prog, s) = sample_schedule(42);
+        let idx = s
+            .trace
+            .insts
+            .iter()
+            .position(|i| matches!(i, Inst::SamplePerfectTile { .. }))
+            .unwrap();
+        let mut overrides = HashMap::new();
+        overrides.insert(idx, Decision::Tile(vec![5, 13])); // 65 != 64
+        assert!(replay_with_decisions(&s.trace, &prog, 0, &overrides).is_err());
+    }
+
+    #[test]
+    fn replay_complex_trace_with_fusion() {
+        let prog = dense_relu_prog(16, 8);
+        let mut s = Schedule::new(prog.clone(), 1);
+        let dense = s.get_block("matmul").unwrap();
+        let relu = s.get_block("relu").unwrap();
+        let loops = s.get_loops(dense).unwrap();
+        let t = s.sample_perfect_tile(loops[0], 2, 8).unwrap();
+        let parts = s
+            .split(loops[0], &[FactorArg::Rv(t[0].0), FactorArg::Rv(t[1].0)])
+            .unwrap();
+        s.reverse_compute_at(relu, parts[0]).unwrap();
+        s.prog.check_integrity().unwrap();
+        let r = replay(&s.trace, &prog, 7).unwrap();
+        assert_eq!(structural_hash(&s.prog), structural_hash(&r.prog));
+    }
+
+    #[test]
+    fn decisions_of_extracts_all_sampling() {
+        let (_, s) = sample_schedule(42);
+        let d = decisions_of(&s.trace);
+        assert_eq!(d.len(), 2);
+        assert!(d.values().any(|x| matches!(x, Decision::Tile(_))));
+        assert!(d.values().any(|x| matches!(x, Decision::Categorical(_))));
+    }
+}

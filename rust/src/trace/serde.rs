@@ -1,0 +1,500 @@
+//! Text serialization of traces (one instruction per line) with an exact
+//! parse round-trip. The search database persists tuned traces in this
+//! format, mirroring how TVM MetaSchedule stores tuning records.
+
+use crate::trace::{FactorArg, Inst, Trace};
+
+fn ints(v: &[i64]) -> String {
+    v.iter().map(|x| x.to_string()).collect::<Vec<_>>().join(",")
+}
+
+fn usizes(v: &[usize]) -> String {
+    v.iter().map(|x| x.to_string()).collect::<Vec<_>>().join(",")
+}
+
+fn floats(v: &[f64]) -> String {
+    v.iter().map(|x| format!("{x}")).collect::<Vec<_>>().join(",")
+}
+
+fn factors(v: &[FactorArg]) -> String {
+    v.iter()
+        .map(|f| match f {
+            FactorArg::Rv(r) => format!("rv{r}"),
+            FactorArg::Lit(l) => format!("{l}"),
+        })
+        .collect::<Vec<_>>()
+        .join(",")
+}
+
+/// Escape a string value (names, scopes) for the line format.
+fn esc(s: &str) -> String {
+    s.replace('\\', "\\\\").replace(' ', "\\s")
+}
+
+fn unesc(s: &str) -> String {
+    s.replace("\\s", " ").replace("\\\\", "\\")
+}
+
+/// Serialize one instruction to a line.
+pub fn inst_to_line(inst: &Inst) -> String {
+    match inst {
+        Inst::GetBlock { name, out } => format!("get-block name={} out={out}", esc(name)),
+        Inst::GetLoops { block, outs } => {
+            format!("get-loops block={block} outs={}", usizes(outs))
+        }
+        Inst::GetProducers { block, outs } => {
+            format!("get-producers block={block} outs={}", usizes(outs))
+        }
+        Inst::GetConsumers { block, outs } => {
+            format!("get-consumers block={block} outs={}", usizes(outs))
+        }
+        Inst::SamplePerfectTile {
+            loop_rv,
+            n,
+            max_innermost,
+            outs,
+            decision,
+        } => format!(
+            "sample-perfect-tile loop={loop_rv} n={n} max={max_innermost} outs={} decision={}",
+            usizes(outs),
+            ints(decision)
+        ),
+        Inst::SampleCategorical {
+            candidates,
+            probs,
+            out,
+            decision,
+        } => format!(
+            "sample-categorical candidates={} probs={} out={out} decision={decision}",
+            ints(candidates),
+            floats(probs)
+        ),
+        Inst::SampleComputeLocation {
+            block,
+            out,
+            decision,
+        } => format!("sample-compute-location block={block} out={out} decision={decision}"),
+        Inst::Split {
+            loop_rv,
+            factors: f,
+            outs,
+        } => format!(
+            "split loop={loop_rv} factors={} outs={}",
+            factors(f),
+            usizes(outs)
+        ),
+        Inst::Fuse { loops, out } => format!("fuse loops={} out={out}", usizes(loops)),
+        Inst::Reorder { loops } => format!("reorder loops={}", usizes(loops)),
+        Inst::Parallel { loop_rv } => format!("parallel loop={loop_rv}"),
+        Inst::Vectorize { loop_rv } => format!("vectorize loop={loop_rv}"),
+        Inst::Unroll { loop_rv } => format!("unroll loop={loop_rv}"),
+        Inst::Bind { loop_rv, thread } => format!("bind loop={loop_rv} thread={}", esc(thread)),
+        Inst::AddUnitLoop { block, out } => format!("add-unit-loop block={block} out={out}"),
+        Inst::CacheRead {
+            block,
+            read_idx,
+            scope,
+            out,
+        } => format!(
+            "cache-read block={block} idx={read_idx} scope={} out={out}",
+            esc(scope)
+        ),
+        Inst::CacheWrite {
+            block,
+            write_idx,
+            scope,
+            out,
+        } => format!(
+            "cache-write block={block} idx={write_idx} scope={} out={out}",
+            esc(scope)
+        ),
+        Inst::SetScope {
+            block,
+            write_idx,
+            scope,
+        } => format!("set-scope block={block} idx={write_idx} scope={}", esc(scope)),
+        Inst::StorageAlign {
+            block,
+            write_idx,
+            axis,
+            factor,
+        } => format!("storage-align block={block} idx={write_idx} axis={axis} factor={factor}"),
+        Inst::ComputeAt { block, loop_rv } => format!("compute-at block={block} loop={loop_rv}"),
+        Inst::ReverseComputeAt { block, loop_rv } => {
+            format!("reverse-compute-at block={block} loop={loop_rv}")
+        }
+        Inst::ComputeInline { block } => format!("compute-inline block={block}"),
+        Inst::ReverseComputeInline { block } => format!("reverse-compute-inline block={block}"),
+        Inst::RFactor {
+            block,
+            loop_rv,
+            out,
+        } => format!("rfactor block={block} loop={loop_rv} out={out}"),
+        Inst::DecomposeReduction {
+            block,
+            loop_rv,
+            out,
+        } => format!("decompose-reduction block={block} loop={loop_rv} out={out}"),
+        Inst::Blockize { loop_rv, out } => format!("blockize loop={loop_rv} out={out}"),
+        Inst::Tensorize {
+            loop_rv,
+            intrin,
+            out,
+        } => format!("tensorize loop={loop_rv} intrin={} out={out}", esc(intrin)),
+        Inst::AnnotateBlock { block, key, value } => format!(
+            "annotate-block block={block} key={} value={}",
+            esc(key),
+            esc(value)
+        ),
+        Inst::AnnotateLoop {
+            loop_rv,
+            key,
+            value,
+        } => format!(
+            "annotate-loop loop={loop_rv} key={} value={}",
+            esc(key),
+            esc(value)
+        ),
+        Inst::UnannotateBlock { block, key } => {
+            format!("unannotate-block block={block} key={}", esc(key))
+        }
+        Inst::EnterPostproc => "enter-postproc".to_string(),
+    }
+}
+
+/// Serialize a whole trace.
+pub fn trace_to_text(trace: &Trace) -> String {
+    let mut out = String::new();
+    for inst in &trace.insts {
+        out.push_str(&inst_to_line(inst));
+        out.push('\n');
+    }
+    out
+}
+
+fn kv(parts: &[&str], key: &str) -> Result<String, String> {
+    for p in parts {
+        if let Some(v) = p.strip_prefix(&format!("{key}=")) {
+            return Ok(v.to_string());
+        }
+    }
+    Err(format!("missing key {key}"))
+}
+
+fn p_usize(parts: &[&str], key: &str) -> Result<usize, String> {
+    kv(parts, key)?.parse().map_err(|e| format!("{key}: {e}"))
+}
+
+fn p_i64(parts: &[&str], key: &str) -> Result<i64, String> {
+    kv(parts, key)?.parse().map_err(|e| format!("{key}: {e}"))
+}
+
+fn p_usizes(parts: &[&str], key: &str) -> Result<Vec<usize>, String> {
+    let raw = kv(parts, key)?;
+    if raw.is_empty() {
+        return Ok(vec![]);
+    }
+    raw.split(',')
+        .map(|s| s.parse().map_err(|e| format!("{key}: {e}")))
+        .collect()
+}
+
+fn p_i64s(parts: &[&str], key: &str) -> Result<Vec<i64>, String> {
+    let raw = kv(parts, key)?;
+    if raw.is_empty() {
+        return Ok(vec![]);
+    }
+    raw.split(',')
+        .map(|s| s.parse().map_err(|e| format!("{key}: {e}")))
+        .collect()
+}
+
+fn p_f64s(parts: &[&str], key: &str) -> Result<Vec<f64>, String> {
+    let raw = kv(parts, key)?;
+    if raw.is_empty() {
+        return Ok(vec![]);
+    }
+    raw.split(',')
+        .map(|s| s.parse().map_err(|e| format!("{key}: {e}")))
+        .collect()
+}
+
+fn p_factors(parts: &[&str], key: &str) -> Result<Vec<FactorArg>, String> {
+    let raw = kv(parts, key)?;
+    raw.split(',')
+        .map(|s| {
+            if let Some(rv) = s.strip_prefix("rv") {
+                rv.parse().map(FactorArg::Rv).map_err(|e| format!("{e}"))
+            } else {
+                s.parse().map(FactorArg::Lit).map_err(|e| format!("{e}"))
+            }
+        })
+        .collect()
+}
+
+/// Parse one instruction line.
+pub fn line_to_inst(line: &str) -> Result<Inst, String> {
+    let parts: Vec<&str> = line.split_whitespace().collect();
+    let op = *parts.first().ok_or("empty line")?;
+    let p = &parts[1..];
+    Ok(match op {
+        "get-block" => Inst::GetBlock {
+            name: unesc(&kv(p, "name")?),
+            out: p_usize(p, "out")?,
+        },
+        "get-loops" => Inst::GetLoops {
+            block: p_usize(p, "block")?,
+            outs: p_usizes(p, "outs")?,
+        },
+        "get-producers" => Inst::GetProducers {
+            block: p_usize(p, "block")?,
+            outs: p_usizes(p, "outs")?,
+        },
+        "get-consumers" => Inst::GetConsumers {
+            block: p_usize(p, "block")?,
+            outs: p_usizes(p, "outs")?,
+        },
+        "sample-perfect-tile" => Inst::SamplePerfectTile {
+            loop_rv: p_usize(p, "loop")?,
+            n: p_usize(p, "n")?,
+            max_innermost: p_i64(p, "max")?,
+            outs: p_usizes(p, "outs")?,
+            decision: p_i64s(p, "decision")?,
+        },
+        "sample-categorical" => Inst::SampleCategorical {
+            candidates: p_i64s(p, "candidates")?,
+            probs: p_f64s(p, "probs")?,
+            out: p_usize(p, "out")?,
+            decision: p_usize(p, "decision")?,
+        },
+        "sample-compute-location" => Inst::SampleComputeLocation {
+            block: p_usize(p, "block")?,
+            out: p_usize(p, "out")?,
+            decision: p_i64(p, "decision")?,
+        },
+        "split" => Inst::Split {
+            loop_rv: p_usize(p, "loop")?,
+            factors: p_factors(p, "factors")?,
+            outs: p_usizes(p, "outs")?,
+        },
+        "fuse" => Inst::Fuse {
+            loops: p_usizes(p, "loops")?,
+            out: p_usize(p, "out")?,
+        },
+        "reorder" => Inst::Reorder {
+            loops: p_usizes(p, "loops")?,
+        },
+        "parallel" => Inst::Parallel {
+            loop_rv: p_usize(p, "loop")?,
+        },
+        "vectorize" => Inst::Vectorize {
+            loop_rv: p_usize(p, "loop")?,
+        },
+        "unroll" => Inst::Unroll {
+            loop_rv: p_usize(p, "loop")?,
+        },
+        "bind" => Inst::Bind {
+            loop_rv: p_usize(p, "loop")?,
+            thread: unesc(&kv(p, "thread")?),
+        },
+        "add-unit-loop" => Inst::AddUnitLoop {
+            block: p_usize(p, "block")?,
+            out: p_usize(p, "out")?,
+        },
+        "cache-read" => Inst::CacheRead {
+            block: p_usize(p, "block")?,
+            read_idx: p_usize(p, "idx")?,
+            scope: unesc(&kv(p, "scope")?),
+            out: p_usize(p, "out")?,
+        },
+        "cache-write" => Inst::CacheWrite {
+            block: p_usize(p, "block")?,
+            write_idx: p_usize(p, "idx")?,
+            scope: unesc(&kv(p, "scope")?),
+            out: p_usize(p, "out")?,
+        },
+        "set-scope" => Inst::SetScope {
+            block: p_usize(p, "block")?,
+            write_idx: p_usize(p, "idx")?,
+            scope: unesc(&kv(p, "scope")?),
+        },
+        "storage-align" => Inst::StorageAlign {
+            block: p_usize(p, "block")?,
+            write_idx: p_usize(p, "idx")?,
+            axis: p_usize(p, "axis")?,
+            factor: p_i64(p, "factor")?,
+        },
+        "compute-at" => Inst::ComputeAt {
+            block: p_usize(p, "block")?,
+            loop_rv: p_usize(p, "loop")?,
+        },
+        "reverse-compute-at" => Inst::ReverseComputeAt {
+            block: p_usize(p, "block")?,
+            loop_rv: p_usize(p, "loop")?,
+        },
+        "compute-inline" => Inst::ComputeInline {
+            block: p_usize(p, "block")?,
+        },
+        "reverse-compute-inline" => Inst::ReverseComputeInline {
+            block: p_usize(p, "block")?,
+        },
+        "rfactor" => Inst::RFactor {
+            block: p_usize(p, "block")?,
+            loop_rv: p_usize(p, "loop")?,
+            out: p_usize(p, "out")?,
+        },
+        "decompose-reduction" => Inst::DecomposeReduction {
+            block: p_usize(p, "block")?,
+            loop_rv: p_usize(p, "loop")?,
+            out: p_usize(p, "out")?,
+        },
+        "blockize" => Inst::Blockize {
+            loop_rv: p_usize(p, "loop")?,
+            out: p_usize(p, "out")?,
+        },
+        "tensorize" => Inst::Tensorize {
+            loop_rv: p_usize(p, "loop")?,
+            intrin: unesc(&kv(p, "intrin")?),
+            out: p_usize(p, "out")?,
+        },
+        "annotate-block" => Inst::AnnotateBlock {
+            block: p_usize(p, "block")?,
+            key: unesc(&kv(p, "key")?),
+            value: unesc(&kv(p, "value")?),
+        },
+        "annotate-loop" => Inst::AnnotateLoop {
+            loop_rv: p_usize(p, "loop")?,
+            key: unesc(&kv(p, "key")?),
+            value: unesc(&kv(p, "value")?),
+        },
+        "unannotate-block" => Inst::UnannotateBlock {
+            block: p_usize(p, "block")?,
+            key: unesc(&kv(p, "key")?),
+        },
+        "enter-postproc" => Inst::EnterPostproc,
+        other => return Err(format!("unknown opcode {other}")),
+    })
+}
+
+/// Parse a whole trace (blank lines and `#` comments ignored).
+pub fn text_to_trace(text: &str) -> Result<Trace, String> {
+    let mut insts = Vec::new();
+    for (no, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        insts.push(line_to_inst(line).map_err(|e| format!("line {}: {e}", no + 1))?);
+    }
+    Ok(Trace { insts })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_insts() -> Vec<Inst> {
+        vec![
+            Inst::GetBlock {
+                name: "T dense".into(),
+                out: 0,
+            },
+            Inst::GetLoops {
+                block: 0,
+                outs: vec![1, 2, 3],
+            },
+            Inst::SamplePerfectTile {
+                loop_rv: 1,
+                n: 4,
+                max_innermost: 16,
+                outs: vec![4, 5, 6, 7],
+                decision: vec![2, 8, 2, 2],
+            },
+            Inst::SampleCategorical {
+                candidates: vec![0, 16, 64],
+                probs: vec![0.25, 0.5, 0.25],
+                out: 8,
+                decision: 1,
+            },
+            Inst::Split {
+                loop_rv: 1,
+                factors: vec![FactorArg::Rv(4), FactorArg::Lit(8)],
+                outs: vec![9, 10],
+            },
+            Inst::Fuse {
+                loops: vec![9, 10],
+                out: 11,
+            },
+            Inst::Reorder {
+                loops: vec![11, 2],
+            },
+            Inst::Bind {
+                loop_rv: 11,
+                thread: "blockIdx.x".into(),
+            },
+            Inst::CacheRead {
+                block: 0,
+                read_idx: 1,
+                scope: "shared.dyn".into(),
+                out: 12,
+            },
+            Inst::ComputeAt {
+                block: 12,
+                loop_rv: 2,
+            },
+            Inst::Tensorize {
+                loop_rv: 2,
+                intrin: "wmma_16x16x16".into(),
+                out: 13,
+            },
+            Inst::AnnotateBlock {
+                block: 0,
+                key: "software pipeline".into(),
+                value: "0,0,1".into(),
+            },
+            Inst::EnterPostproc,
+        ]
+    }
+
+    #[test]
+    fn every_inst_roundtrips() {
+        for inst in sample_insts() {
+            let line = inst_to_line(&inst);
+            let back = line_to_inst(&line).unwrap_or_else(|e| panic!("{line}: {e}"));
+            assert_eq!(back, inst, "line: {line}");
+        }
+    }
+
+    #[test]
+    fn whole_trace_roundtrips() {
+        let t = Trace {
+            insts: sample_insts(),
+        };
+        let text = trace_to_text(&t);
+        let back = text_to_trace(&text).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn comments_and_blanks_ignored() {
+        let text = "# a comment\n\nparallel loop=3\n";
+        let t = text_to_trace(text).unwrap();
+        assert_eq!(t.insts, vec![Inst::Parallel { loop_rv: 3 }]);
+    }
+
+    #[test]
+    fn unknown_opcode_errors() {
+        assert!(text_to_trace("frobnicate x=1").is_err());
+    }
+
+    #[test]
+    fn escaped_spaces_in_names() {
+        let inst = Inst::GetBlock {
+            name: "a b".into(),
+            out: 0,
+        };
+        let line = inst_to_line(&inst);
+        assert!(!line.contains("a b"));
+        assert_eq!(line_to_inst(&line).unwrap(), inst);
+    }
+}

@@ -1,0 +1,133 @@
+//! Tiny benchmark harness used by `benches/*.rs` (all declared with
+//! `harness = false`; the image has no `criterion`).
+//!
+//! Provides warmup + repeated timed runs, reports min/median/mean, and a
+//! table printer that the figure/table reproduction benches use to emit
+//! the same rows the paper reports.
+
+use std::time::Instant;
+
+/// Result of benching one closure.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchStats {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns / 1e6
+    }
+}
+
+fn fmt_time(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} us", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Time `f`, self-calibrating the iteration count so the measured region
+/// lasts at least `min_total_ms` per sample. Returns per-iteration stats.
+pub fn bench<F: FnMut()>(name: &str, samples: usize, min_total_ms: f64, mut f: F) -> BenchStats {
+    // Warmup + calibration.
+    let mut iters = 1usize;
+    loop {
+        let t = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        let elapsed_ms = t.elapsed().as_secs_f64() * 1e3;
+        if elapsed_ms >= min_total_ms || iters >= 1 << 24 {
+            break;
+        }
+        let scale = (min_total_ms / elapsed_ms.max(1e-6)).ceil().max(2.0);
+        iters = (iters as f64 * scale.min(16.0)) as usize;
+    }
+    let mut per_iter: Vec<f64> = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        per_iter.push(t.elapsed().as_nanos() as f64 / iters as f64);
+    }
+    per_iter.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = per_iter.iter().sum::<f64>() / per_iter.len() as f64;
+    let stats = BenchStats {
+        name: name.to_string(),
+        iters,
+        mean_ns: mean,
+        median_ns: per_iter[per_iter.len() / 2],
+        min_ns: per_iter[0],
+    };
+    println!(
+        "bench {:<44} mean {:>12}  median {:>12}  min {:>12}  ({} iters/sample)",
+        stats.name,
+        fmt_time(stats.mean_ns),
+        fmt_time(stats.median_ns),
+        fmt_time(stats.min_ns),
+        stats.iters
+    );
+    stats
+}
+
+/// Render an aligned table (used to print paper-figure rows).
+pub fn print_table(title: &str, headers: &[&str], rows: &[Vec<String>]) {
+    println!("\n== {title} ==");
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let line: String = headers
+        .iter()
+        .enumerate()
+        .map(|(i, h)| format!("{:<w$}", h, w = widths[i] + 2))
+        .collect();
+    println!("{line}");
+    println!("{}", "-".repeat(line.len()));
+    for row in rows {
+        let line: String = row
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:<w$}", c, w = widths.get(i).copied().unwrap_or(8) + 2))
+            .collect();
+        println!("{line}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_returns_sane_stats() {
+        let mut acc = 0u64;
+        let s = bench("noop-ish", 3, 1.0, || {
+            acc = acc.wrapping_add(std::hint::black_box(1));
+        });
+        assert!(s.mean_ns > 0.0);
+        assert!(s.min_ns <= s.mean_ns * 1.5);
+        assert!(s.iters >= 1);
+    }
+
+    #[test]
+    fn fmt_time_scales() {
+        assert!(fmt_time(500.0).ends_with("ns"));
+        assert!(fmt_time(5_000.0).ends_with("us"));
+        assert!(fmt_time(5_000_000.0).ends_with("ms"));
+        assert!(fmt_time(5e9).ends_with("s"));
+    }
+}

@@ -1,0 +1,95 @@
+//! Minimal command-line parsing (no `clap` in the offline image).
+//!
+//! Grammar: `metaschedule <command> [subcommand] [--flag value]... [--switch]...`
+
+use std::collections::HashMap;
+
+/// Parsed command line: positional arguments + `--key value` flags.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: HashMap<String, String>,
+    pub switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut out = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(arg) = iter.next() {
+            if let Some(name) = arg.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    out.flags.insert(name.to_string(), v);
+                } else {
+                    out.switches.push(name.to_string());
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        out
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn flag_or(&self, name: &str, default: &str) -> String {
+        self.flag(name).unwrap_or(default).to_string()
+    }
+
+    pub fn flag_usize(&self, name: &str, default: usize) -> usize {
+        self.flag(name)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn flag_u64(&self, name: &str, default: u64) -> u64 {
+        self.flag(name)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn has_switch(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn parses_positional_and_flags() {
+        let a = parse("exp fig8 --target cpu --trials 256 --verbose");
+        assert_eq!(a.positional, vec!["exp", "fig8"]);
+        assert_eq!(a.flag("target"), Some("cpu"));
+        assert_eq!(a.flag_usize("trials", 0), 256);
+        assert!(a.has_switch("verbose"));
+    }
+
+    #[test]
+    fn parses_equals_form() {
+        let a = parse("tune --seed=99");
+        assert_eq!(a.flag_u64("seed", 0), 99);
+    }
+
+    #[test]
+    fn missing_flag_uses_default() {
+        let a = parse("tune");
+        assert_eq!(a.flag_or("target", "cpu"), "cpu");
+        assert_eq!(a.flag_usize("trials", 64), 64);
+    }
+}

@@ -1,0 +1,8 @@
+//! In-tree utility crates-in-miniature (the offline image vendors only the
+//! `xla` dependency tree — see DESIGN.md §Dependency-Substitutions).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;

@@ -1,0 +1,154 @@
+//! Minimal property-based testing helpers.
+//!
+//! The offline image has no `proptest`, so this module provides the same
+//! workflow in miniature: generate many random cases from a seedable RNG,
+//! run a property, and on failure report the *seed and case index* so the
+//! exact failing case replays deterministically. A simple integer/vec
+//! shrinker narrows failing cases before reporting.
+
+use crate::util::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Debug, Clone)]
+pub struct PropConfig {
+    /// Number of random cases to generate.
+    pub cases: usize,
+    /// Base seed; case `i` uses `seed + i`.
+    pub seed: u64,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        PropConfig { cases: 128, seed: 0x5EED }
+    }
+}
+
+/// Property outcome: `bool` or `Result<(), String>` both work.
+pub trait IntoPropResult {
+    fn into_prop(self) -> Result<(), String>;
+}
+
+impl IntoPropResult for bool {
+    fn into_prop(self) -> Result<(), String> {
+        if self {
+            Ok(())
+        } else {
+            Err("property returned false".into())
+        }
+    }
+}
+
+impl IntoPropResult for Result<(), String> {
+    fn into_prop(self) -> Result<(), String> {
+        self
+    }
+}
+
+/// Run `prop` on `cases` inputs drawn by `gen`. Panics with the seed and a
+/// debug dump of the failing input on the first failure.
+pub fn check<T, G, P, R>(cfg: PropConfig, mut gen: G, mut prop: P)
+where
+    T: std::fmt::Debug + Clone,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> R,
+    R: IntoPropResult,
+{
+    for i in 0..cfg.cases {
+        let mut rng = Rng::seed_from_u64(cfg.seed.wrapping_add(i as u64));
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input).into_prop() {
+            panic!(
+                "property failed (seed={}, case={}): {}\ninput: {:?}",
+                cfg.seed, i, msg, input
+            );
+        }
+    }
+}
+
+/// Shrink a failing integer towards zero while the property still fails.
+pub fn shrink_i64<P: FnMut(i64) -> bool>(mut failing: i64, mut still_fails: P) -> i64 {
+    loop {
+        let candidate = failing / 2;
+        if candidate != failing && still_fails(candidate) {
+            failing = candidate;
+        } else {
+            return failing;
+        }
+    }
+}
+
+/// Shrink a failing vector by repeatedly removing elements while the
+/// property still fails. Returns a (locally) minimal failing vector.
+pub fn shrink_vec<T: Clone, P: FnMut(&[T]) -> bool>(xs: &[T], mut still_fails: P) -> Vec<T> {
+    let mut cur: Vec<T> = xs.to_vec();
+    let mut changed = true;
+    while changed {
+        changed = false;
+        for i in 0..cur.len() {
+            let mut cand = cur.clone();
+            cand.remove(i);
+            if still_fails(&cand) {
+                cur = cand;
+                changed = true;
+                break;
+            }
+        }
+    }
+    cur
+}
+
+/// Draw a random vector of length `[min_len, max_len]` with elements from `gen`.
+pub fn vec_of<T>(
+    rng: &mut Rng,
+    min_len: usize,
+    max_len: usize,
+    mut gen: impl FnMut(&mut Rng) -> T,
+) -> Vec<T> {
+    let len = min_len + rng.gen_range(max_len - min_len + 1);
+    (0..len).map(|_| gen(rng)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_trivial_property() {
+        check(
+            PropConfig::default(),
+            |r| r.gen_range(100),
+            |&x| {
+                if x < 100 {
+                    Ok(())
+                } else {
+                    Err("out of range".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn check_reports_failure() {
+        check(
+            PropConfig { cases: 64, seed: 1 },
+            |r| r.gen_range(10),
+            |&x| if x != 7 { Ok(()) } else { Err("hit 7".into()) },
+        );
+    }
+
+    #[test]
+    fn shrinker_minimizes() {
+        // Property "x >= 10 fails" should shrink towards a small failing value.
+        let shrunk = shrink_i64(1000, |x| x >= 10);
+        assert!(shrunk < 20, "shrunk={shrunk}");
+        assert!(shrunk >= 10);
+    }
+
+    #[test]
+    fn vec_shrinker_minimizes() {
+        // Failure = vector contains a 3. Minimal failing vec is [3].
+        let shrunk = shrink_vec(&[1, 3, 5, 3, 2], |v| v.contains(&3));
+        assert_eq!(shrunk, vec![3]);
+    }
+}

@@ -1,0 +1,398 @@
+//! Convolution workload builders (Appendix A.2).
+//!
+//! Padding is folded into the input buffer shape — the conv block reads a
+//! pre-padded buffer at `oh*stride + kh*dilation` — exactly the structure
+//! TVM produces after inlining the pad stage. This preserves the flop count
+//! and the memory-footprint structure that drive the simulator while
+//! keeping every index affine.
+
+use crate::tir::{rd, sp, AExpr, BinOp, BlockBody, CExpr, DType, Program, Region};
+
+/// Output spatial extent of a conv dim.
+pub fn conv_out(size: i64, kernel: i64, stride: i64, pad: i64, dilation: i64) -> i64 {
+    (size + 2 * pad - dilation * (kernel - 1) - 1) / stride + 1
+}
+
+/// Parameters of a 2-D convolution workload.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Conv2dParams {
+    pub n: i64,
+    pub h: i64,
+    pub w: i64,
+    pub ci: i64,
+    pub co: i64,
+    pub k: i64,
+    pub stride: i64,
+    pub pad: i64,
+    pub dilation: i64,
+    pub groups: i64,
+}
+
+impl Conv2dParams {
+    pub fn new(n: i64, h: i64, w: i64, ci: i64, co: i64, k: i64, stride: i64, pad: i64) -> Self {
+        Conv2dParams { n, h, w, ci, co, k, stride, pad, dilation: 1, groups: 1 }
+    }
+
+    pub fn oh(&self) -> i64 {
+        conv_out(self.h, self.k, self.stride, self.pad, self.dilation)
+    }
+
+    pub fn ow(&self) -> i64 {
+        conv_out(self.w, self.k, self.stride, self.pad, self.dilation)
+    }
+}
+
+/// 1-D convolution. A.2 C1D: batch=1, length=256, ci=64, co=128, k=3, s=2, p=1.
+pub fn conv1d(n: i64, l: i64, ci: i64, co: i64, k: i64, stride: i64, pad: i64) -> Program {
+    let ol = conv_out(l, k, stride, pad, 1);
+    let lp = l + 2 * pad;
+    let mut p = Program::new("conv1d");
+    let x = p.param("X", vec![n, ci, lp], DType::F32);
+    let w = p.param("W", vec![co, ci, k], DType::F32);
+    let y = p.param("Y", vec![n, co, ol], DType::F32);
+    p.emit(
+        "conv1d",
+        &[sp("n", n), sp("co", co), sp("ol", ol), rd("ci", ci), rd("k", k)],
+        |iv| {
+            let (vn, vco, vol, vci, vk) = (iv[0], iv[1], iv[2], iv[3], iv[4]);
+            let ix = AExpr::Var(vol).mul(stride).add(AExpr::Var(vk));
+            (
+                vec![
+                    Region::point(x, vec![AExpr::Var(vn), AExpr::Var(vci), ix.clone()]),
+                    Region::point(w, vec![AExpr::Var(vco), AExpr::Var(vci), AExpr::Var(vk)]),
+                ],
+                vec![Region::point(y, vec![AExpr::Var(vn), AExpr::Var(vco), AExpr::Var(vol)])],
+                BlockBody::Reduce {
+                    init: CExpr::ConstF(0.0),
+                    op: BinOp::Add,
+                    rhs: CExpr::bin(
+                        BinOp::Mul,
+                        CExpr::load(x, vec![AExpr::Var(vn), AExpr::Var(vci), ix]),
+                        CExpr::load(w, vec![AExpr::Var(vco), AExpr::Var(vci), AExpr::Var(vk)]),
+                    ),
+                },
+            )
+        },
+    );
+    p
+}
+
+/// 2-D convolution (optionally grouped / dilated) as a single reduction block.
+pub fn conv2d(params: Conv2dParams) -> Program {
+    let Conv2dParams { n, h, w: wd, ci, co, k, stride, pad, dilation, groups } = params;
+    assert!(ci % groups == 0 && co % groups == 0, "groups must divide channels");
+    let (oh, ow) = (params.oh(), params.ow());
+    let (hp, wp) = (h + 2 * pad, wd + 2 * pad);
+    let cig = ci / groups; // input channels per group
+    let cog = co / groups; // output channels per group
+    let mut p = Program::new(if groups > 1 { "group_conv2d" } else { "conv2d" });
+    let x = p.param("X", vec![n, ci, hp, wp], DType::F32);
+    let w = p.param("W", vec![co, cig, k, k], DType::F32);
+    let y = p.param("Y", vec![n, co, oh, ow], DType::F32);
+    // Iterate (g, cog) instead of co so the group offset stays affine.
+    p.emit(
+        "conv2d",
+        &[
+            sp("n", n),
+            sp("g", groups),
+            sp("cog", cog),
+            sp("oh", oh),
+            sp("ow", ow),
+            rd("cig", cig),
+            rd("kh", k),
+            rd("kw", k),
+        ],
+        |iv| {
+            let (vn, vg, vcog, voh, vow, vcig, vkh, vkw) =
+                (iv[0], iv[1], iv[2], iv[3], iv[4], iv[5], iv[6], iv[7]);
+            let co_idx = AExpr::Var(vg).mul(cog).add(AExpr::Var(vcog));
+            let ci_idx = AExpr::Var(vg).mul(cig).add(AExpr::Var(vcig));
+            let ih = AExpr::Var(voh).mul(stride).add(AExpr::Var(vkh).mul(dilation));
+            let iw = AExpr::Var(vow).mul(stride).add(AExpr::Var(vkw).mul(dilation));
+            let x_idx = vec![AExpr::Var(vn), ci_idx, ih, iw];
+            let w_idx = vec![co_idx.clone(), AExpr::Var(vcig), AExpr::Var(vkh), AExpr::Var(vkw)];
+            (
+                vec![
+                    Region::point(x, x_idx.clone()),
+                    Region::point(w, w_idx.clone()),
+                ],
+                vec![Region::point(
+                    y,
+                    vec![AExpr::Var(vn), co_idx, AExpr::Var(voh), AExpr::Var(vow)],
+                )],
+                BlockBody::Reduce {
+                    init: CExpr::ConstF(0.0),
+                    op: BinOp::Add,
+                    rhs: CExpr::bin(
+                        BinOp::Mul,
+                        CExpr::load(x, x_idx),
+                        CExpr::load(w, w_idx),
+                    ),
+                },
+            )
+        },
+    );
+    p
+}
+
+/// 3-D convolution. A.2 C3D: batch=1, d=16, h=w=224, ci=3, co=64, k=7, s=2, p=3.
+#[allow(clippy::too_many_arguments)]
+pub fn conv3d(n: i64, d: i64, h: i64, w: i64, ci: i64, co: i64, k: i64, stride: i64, pad: i64) -> Program {
+    let od = conv_out(d, k, stride, pad, 1);
+    let oh = conv_out(h, k, stride, pad, 1);
+    let ow = conv_out(w, k, stride, pad, 1);
+    let (dp, hp, wp) = (d + 2 * pad, h + 2 * pad, w + 2 * pad);
+    let mut p = Program::new("conv3d");
+    let x = p.param("X", vec![n, ci, dp, hp, wp], DType::F32);
+    let wt = p.param("W", vec![co, ci, k, k, k], DType::F32);
+    let y = p.param("Y", vec![n, co, od, oh, ow], DType::F32);
+    p.emit(
+        "conv3d",
+        &[
+            sp("n", n),
+            sp("co", co),
+            sp("od", od),
+            sp("oh", oh),
+            sp("ow", ow),
+            rd("ci", ci),
+            rd("kd", k),
+            rd("kh", k),
+            rd("kw", k),
+        ],
+        |iv| {
+            let (vn, vco, vod, voh, vow, vci, vkd, vkh, vkw) =
+                (iv[0], iv[1], iv[2], iv[3], iv[4], iv[5], iv[6], iv[7], iv[8]);
+            let id = AExpr::Var(vod).mul(stride).add(AExpr::Var(vkd));
+            let ih = AExpr::Var(voh).mul(stride).add(AExpr::Var(vkh));
+            let iw = AExpr::Var(vow).mul(stride).add(AExpr::Var(vkw));
+            let x_idx = vec![AExpr::Var(vn), AExpr::Var(vci), id, ih, iw];
+            let w_idx = vec![
+                AExpr::Var(vco),
+                AExpr::Var(vci),
+                AExpr::Var(vkd),
+                AExpr::Var(vkh),
+                AExpr::Var(vkw),
+            ];
+            (
+                vec![Region::point(x, x_idx.clone()), Region::point(wt, w_idx.clone())],
+                vec![Region::point(
+                    y,
+                    vec![AExpr::Var(vn), AExpr::Var(vco), AExpr::Var(vod), AExpr::Var(voh), AExpr::Var(vow)],
+                )],
+                BlockBody::Reduce {
+                    init: CExpr::ConstF(0.0),
+                    op: BinOp::Add,
+                    rhs: CExpr::bin(BinOp::Mul, CExpr::load(x, x_idx), CExpr::load(wt, w_idx)),
+                },
+            )
+        },
+    );
+    p
+}
+
+/// Depthwise 2-D convolution. A.2 DEP: batch=1, h=w=112, c=32, k=3, s=1, p=1.
+pub fn depthwise_conv2d(n: i64, h: i64, w: i64, c: i64, k: i64, stride: i64, pad: i64) -> Program {
+    let oh = conv_out(h, k, stride, pad, 1);
+    let ow = conv_out(w, k, stride, pad, 1);
+    let (hp, wp) = (h + 2 * pad, w + 2 * pad);
+    let mut p = Program::new("depthwise_conv2d");
+    let x = p.param("X", vec![n, c, hp, wp], DType::F32);
+    let wt = p.param("W", vec![c, k, k], DType::F32);
+    let y = p.param("Y", vec![n, c, oh, ow], DType::F32);
+    p.emit(
+        "dwconv2d",
+        &[sp("n", n), sp("c", c), sp("oh", oh), sp("ow", ow), rd("kh", k), rd("kw", k)],
+        |iv| {
+            let (vn, vc, voh, vow, vkh, vkw) = (iv[0], iv[1], iv[2], iv[3], iv[4], iv[5]);
+            let ih = AExpr::Var(voh).mul(stride).add(AExpr::Var(vkh));
+            let iw = AExpr::Var(vow).mul(stride).add(AExpr::Var(vkw));
+            let x_idx = vec![AExpr::Var(vn), AExpr::Var(vc), ih, iw];
+            let w_idx = vec![AExpr::Var(vc), AExpr::Var(vkh), AExpr::Var(vkw)];
+            (
+                vec![Region::point(x, x_idx.clone()), Region::point(wt, w_idx.clone())],
+                vec![Region::point(
+                    y,
+                    vec![AExpr::Var(vn), AExpr::Var(vc), AExpr::Var(voh), AExpr::Var(vow)],
+                )],
+                BlockBody::Reduce {
+                    init: CExpr::ConstF(0.0),
+                    op: BinOp::Add,
+                    rhs: CExpr::bin(BinOp::Mul, CExpr::load(x, x_idx), CExpr::load(wt, w_idx)),
+                },
+            )
+        },
+    );
+    p
+}
+
+/// Transposed 2-D convolution. A.2 T2D: batch=1, h=w=4, ci=512, co=256, k=4,
+/// s=2, p=1. Expressed as a dense convolution over the stride-dilated,
+/// padded input (shape `(h-1)*s + 1 + 2*(k-1-p)`), which is the standard
+/// lowering and preserves the flop/footprint structure.
+pub fn transposed_conv2d(n: i64, h: i64, w: i64, ci: i64, co: i64, k: i64, stride: i64, pad: i64) -> Program {
+    let hd = (h - 1) * stride + 1 + 2 * (k - 1 - pad); // dilated+padded input extent
+    let wd = (w - 1) * stride + 1 + 2 * (k - 1 - pad);
+    let oh = hd - k + 1;
+    let ow = wd - k + 1;
+    let mut p = Program::new("transposed_conv2d");
+    let x = p.param("X", vec![n, ci, hd, wd], DType::F32);
+    let wt = p.param("W", vec![ci, co, k, k], DType::F32);
+    let y = p.param("Y", vec![n, co, oh, ow], DType::F32);
+    p.emit(
+        "t2d",
+        &[sp("n", n), sp("co", co), sp("oh", oh), sp("ow", ow), rd("ci", ci), rd("kh", k), rd("kw", k)],
+        |iv| {
+            let (vn, vco, voh, vow, vci, vkh, vkw) =
+                (iv[0], iv[1], iv[2], iv[3], iv[4], iv[5], iv[6]);
+            let ih = AExpr::Var(voh).add(AExpr::Var(vkh));
+            let iw = AExpr::Var(vow).add(AExpr::Var(vkw));
+            let x_idx = vec![AExpr::Var(vn), AExpr::Var(vci), ih, iw];
+            let w_idx = vec![AExpr::Var(vci), AExpr::Var(vco), AExpr::Var(vkh), AExpr::Var(vkw)];
+            (
+                vec![Region::point(x, x_idx.clone()), Region::point(wt, w_idx.clone())],
+                vec![Region::point(
+                    y,
+                    vec![AExpr::Var(vn), AExpr::Var(vco), AExpr::Var(voh), AExpr::Var(vow)],
+                )],
+                BlockBody::Reduce {
+                    init: CExpr::ConstF(0.0),
+                    op: BinOp::Add,
+                    rhs: CExpr::bin(BinOp::Mul, CExpr::load(x, x_idx), CExpr::load(wt, w_idx)),
+                },
+            )
+        },
+    );
+    p
+}
+
+/// Conv2d + BatchNorm (folded scale/shift) + ReLU. A.2 CBR.
+pub fn conv2d_bn_relu(params: Conv2dParams) -> Program {
+    let mut p = conv2d(params);
+    p.name = "conv2d_bn_relu".into();
+    let (n, co, oh, ow) = (params.n, params.co, params.oh(), params.ow());
+    let y = 2; // conv output buffer (X=0, W=1, Y=2)
+    // Inference-time batchnorm folds to per-channel scale+shift.
+    let scale = p.param("Scale", vec![co], DType::F32);
+    let shift = p.param("Shift", vec![co], DType::F32);
+    let t = p.temp("BN", vec![n, co, oh, ow], DType::F32);
+    let out = p.param("Out", vec![n, co, oh, ow], DType::F32);
+    use crate::tir::UnOp;
+    p.emit("bn", &[sp("n", n), sp("c", co), sp("h", oh), sp("w", ow)], |iv| {
+        let idx = vec![AExpr::Var(iv[0]), AExpr::Var(iv[1]), AExpr::Var(iv[2]), AExpr::Var(iv[3])];
+        (
+            vec![
+                Region::point(y, idx.clone()),
+                Region::point(scale, vec![AExpr::Var(iv[1])]),
+                Region::point(shift, vec![AExpr::Var(iv[1])]),
+            ],
+            vec![Region::point(t, idx.clone())],
+            BlockBody::Assign {
+                expr: CExpr::bin(
+                    BinOp::Add,
+                    CExpr::bin(
+                        BinOp::Mul,
+                        CExpr::load(y, idx),
+                        CExpr::load(scale, vec![AExpr::Var(iv[1])]),
+                    ),
+                    CExpr::load(shift, vec![AExpr::Var(iv[1])]),
+                ),
+            },
+        )
+    });
+    p.emit("relu", &[sp("n", n), sp("c", co), sp("h", oh), sp("w", ow)], |iv| {
+        let idx = vec![AExpr::Var(iv[0]), AExpr::Var(iv[1]), AExpr::Var(iv[2]), AExpr::Var(iv[3])];
+        (
+            vec![Region::point(t, idx.clone())],
+            vec![Region::point(out, idx.clone())],
+            BlockBody::Assign {
+                expr: CExpr::un(UnOp::Relu, CExpr::load(t, idx)),
+            },
+        )
+    });
+    p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tir::analysis::program_flops;
+
+    #[test]
+    fn conv_out_formula() {
+        assert_eq!(conv_out(224, 7, 2, 3, 1), 112);
+        assert_eq!(conv_out(256, 3, 2, 1, 1), 128);
+        assert_eq!(conv_out(224, 7, 2, 3, 2), 109); // dilated
+        assert_eq!(conv_out(112, 3, 1, 1, 1), 112);
+    }
+
+    #[test]
+    fn c2d_flops_match_formula() {
+        // A.2 C2D: 1x3x224x224 -> 64, k=7, s=2, p=3 => oh=ow=112
+        let p = conv2d(Conv2dParams::new(1, 224, 224, 3, 64, 7, 2, 3));
+        p.check_integrity().unwrap();
+        let expect = 2.0 * 64.0 * 112.0 * 112.0 * 3.0 * 49.0;
+        assert_eq!(program_flops(&p), expect);
+    }
+
+    #[test]
+    fn grouped_conv_reduces_flops() {
+        let dense = conv2d(Conv2dParams::new(1, 56, 56, 64, 128, 3, 2, 1));
+        let mut gp = Conv2dParams::new(1, 56, 56, 64, 128, 3, 2, 1);
+        gp.groups = 4;
+        let grouped = conv2d(gp);
+        grouped.check_integrity().unwrap();
+        assert_eq!(program_flops(&grouped) * 4.0, program_flops(&dense));
+    }
+
+    #[test]
+    fn dilated_conv_shape() {
+        let mut params = Conv2dParams::new(1, 224, 224, 3, 64, 7, 2, 3);
+        params.dilation = 2;
+        let p = conv2d(params);
+        p.check_integrity().unwrap();
+        assert_eq!(params.oh(), 109);
+    }
+
+    #[test]
+    fn depthwise_flops() {
+        let p = depthwise_conv2d(1, 112, 112, 32, 3, 1, 1);
+        p.check_integrity().unwrap();
+        assert_eq!(program_flops(&p), 2.0 * 32.0 * 112.0 * 112.0 * 9.0);
+    }
+
+    #[test]
+    fn t2d_output_shape() {
+        // 4x4 -> 8x8 with k=4, s=2, p=1
+        let p = transposed_conv2d(1, 4, 4, 512, 256, 4, 2, 1);
+        p.check_integrity().unwrap();
+        // Output buffer Y is params[2]
+        assert_eq!(p.buffers[p.params[2]].shape, vec![1, 256, 8, 8]);
+    }
+
+    #[test]
+    fn cbr_has_three_blocks_chained() {
+        let p = conv2d_bn_relu(Conv2dParams::new(1, 224, 224, 3, 64, 7, 2, 3));
+        p.check_integrity().unwrap();
+        let blocks = p.blocks();
+        assert_eq!(blocks.len(), 3);
+        let conv = p.find_block("conv2d").unwrap();
+        let bn = p.find_block("bn").unwrap();
+        let relu = p.find_block("relu").unwrap();
+        assert_eq!(p.consumers_of(conv), vec![bn]);
+        assert_eq!(p.consumers_of(bn), vec![relu]);
+    }
+
+    #[test]
+    fn conv1d_flops() {
+        let p = conv1d(1, 256, 64, 128, 3, 2, 1);
+        p.check_integrity().unwrap();
+        assert_eq!(program_flops(&p), 2.0 * 128.0 * 128.0 * 64.0 * 3.0);
+    }
+
+    #[test]
+    fn conv3d_integrity() {
+        let p = conv3d(1, 16, 224, 224, 3, 64, 7, 2, 3);
+        p.check_integrity().unwrap();
+        assert_eq!(p.blocks().len(), 1);
+    }
+}

@@ -1,0 +1,202 @@
+//! Normalization / softmax / elementwise workload builders.
+
+use crate::tir::{rd, sp, AExpr, BinOp, BlockBody, CExpr, DType, Program, Region, UnOp};
+
+/// Row L2-normalization. A.2 NRM: batch=1, m=256, n=256.
+/// `sq[i] = sum_j x[i,j]^2; out[i,j] = x[i,j] * rsqrt(sq[i])`.
+pub fn norm(b: i64, m: i64, n: i64) -> Program {
+    let _ = b; // batch folded into m (batch=1 in A.2)
+    let mut p = Program::new("norm");
+    let x = p.param("X", vec![m, n], DType::F32);
+    let sq = p.temp("Sq", vec![m], DType::F32);
+    let out = p.param("Out", vec![m, n], DType::F32);
+    p.emit("sq_sum", &[sp("i", m), rd("j", n)], |iv| {
+        let (vi, vj) = (iv[0], iv[1]);
+        (
+            vec![Region::point(x, vec![AExpr::Var(vi), AExpr::Var(vj)])],
+            vec![Region::point(sq, vec![AExpr::Var(vi)])],
+            BlockBody::Reduce {
+                init: CExpr::ConstF(0.0),
+                op: BinOp::Add,
+                rhs: CExpr::bin(
+                    BinOp::Mul,
+                    CExpr::load(x, vec![AExpr::Var(vi), AExpr::Var(vj)]),
+                    CExpr::load(x, vec![AExpr::Var(vi), AExpr::Var(vj)]),
+                ),
+            },
+        )
+    });
+    p.emit("normalize", &[sp("i", m), sp("j", n)], |iv| {
+        let (vi, vj) = (iv[0], iv[1]);
+        (
+            vec![
+                Region::point(x, vec![AExpr::Var(vi), AExpr::Var(vj)]),
+                Region::point(sq, vec![AExpr::Var(vi)]),
+            ],
+            vec![Region::point(out, vec![AExpr::Var(vi), AExpr::Var(vj)])],
+            BlockBody::Assign {
+                expr: CExpr::bin(
+                    BinOp::Mul,
+                    CExpr::load(x, vec![AExpr::Var(vi), AExpr::Var(vj)]),
+                    CExpr::un(UnOp::Rsqrt, CExpr::load(sq, vec![AExpr::Var(vi)])),
+                ),
+            },
+        )
+    });
+    p
+}
+
+/// Row softmax. A.2 SFM: batch=1, m=256, n=256. Four blocks:
+/// row-max, exp(x - max), row-sum, divide.
+pub fn softmax(b: i64, m: i64, n: i64) -> Program {
+    let _ = b;
+    let mut p = Program::new("softmax");
+    let x = p.param("X", vec![m, n], DType::F32);
+    let mx = p.temp("Max", vec![m], DType::F32);
+    let ex = p.temp("Exp", vec![m, n], DType::F32);
+    let sm = p.temp("Sum", vec![m], DType::F32);
+    let out = p.param("Out", vec![m, n], DType::F32);
+    p.emit("row_max", &[sp("i", m), rd("j", n)], |iv| {
+        let (vi, vj) = (iv[0], iv[1]);
+        (
+            vec![Region::point(x, vec![AExpr::Var(vi), AExpr::Var(vj)])],
+            vec![Region::point(mx, vec![AExpr::Var(vi)])],
+            BlockBody::Reduce {
+                init: CExpr::ConstF(f64::NEG_INFINITY),
+                op: BinOp::Max,
+                rhs: CExpr::load(x, vec![AExpr::Var(vi), AExpr::Var(vj)]),
+            },
+        )
+    });
+    p.emit("exp", &[sp("i", m), sp("j", n)], |iv| {
+        let (vi, vj) = (iv[0], iv[1]);
+        (
+            vec![
+                Region::point(x, vec![AExpr::Var(vi), AExpr::Var(vj)]),
+                Region::point(mx, vec![AExpr::Var(vi)]),
+            ],
+            vec![Region::point(ex, vec![AExpr::Var(vi), AExpr::Var(vj)])],
+            BlockBody::Assign {
+                expr: CExpr::un(
+                    UnOp::Exp,
+                    CExpr::bin(
+                        BinOp::Sub,
+                        CExpr::load(x, vec![AExpr::Var(vi), AExpr::Var(vj)]),
+                        CExpr::load(mx, vec![AExpr::Var(vi)]),
+                    ),
+                ),
+            },
+        )
+    });
+    p.emit("row_sum", &[sp("i", m), rd("j", n)], |iv| {
+        let (vi, vj) = (iv[0], iv[1]);
+        (
+            vec![Region::point(ex, vec![AExpr::Var(vi), AExpr::Var(vj)])],
+            vec![Region::point(sm, vec![AExpr::Var(vi)])],
+            BlockBody::Reduce {
+                init: CExpr::ConstF(0.0),
+                op: BinOp::Add,
+                rhs: CExpr::load(ex, vec![AExpr::Var(vi), AExpr::Var(vj)]),
+            },
+        )
+    });
+    p.emit("divide", &[sp("i", m), sp("j", n)], |iv| {
+        let (vi, vj) = (iv[0], iv[1]);
+        (
+            vec![
+                Region::point(ex, vec![AExpr::Var(vi), AExpr::Var(vj)]),
+                Region::point(sm, vec![AExpr::Var(vi)]),
+            ],
+            vec![Region::point(out, vec![AExpr::Var(vi), AExpr::Var(vj)])],
+            BlockBody::Assign {
+                expr: CExpr::bin(
+                    BinOp::Div,
+                    CExpr::load(ex, vec![AExpr::Var(vi), AExpr::Var(vj)]),
+                    CExpr::load(sm, vec![AExpr::Var(vi)]),
+                ),
+            },
+        )
+    });
+    p
+}
+
+/// Elementwise ReLU over a flat buffer (the paper's Figure 2 example).
+pub fn relu(numel: i64) -> Program {
+    let mut p = Program::new("relu");
+    let a = p.param("A", vec![numel], DType::F32);
+    let b = p.param("B", vec![numel], DType::F32);
+    p.emit("relu", &[sp("i", numel)], |iv| {
+        let i = iv[0];
+        (
+            vec![Region::point(a, vec![AExpr::Var(i)])],
+            vec![Region::point(b, vec![AExpr::Var(i)])],
+            BlockBody::Assign {
+                expr: CExpr::un(UnOp::Relu, CExpr::load(a, vec![AExpr::Var(i)])),
+            },
+        )
+    });
+    p
+}
+
+/// Elementwise add of two equal-shaped 2-D tensors (residual connections).
+pub fn add2d(m: i64, n: i64) -> Program {
+    let mut p = Program::new("add2d");
+    let a = p.param("A", vec![m, n], DType::F32);
+    let b = p.param("B", vec![m, n], DType::F32);
+    let c = p.param("C", vec![m, n], DType::F32);
+    p.emit("add", &[sp("i", m), sp("j", n)], |iv| {
+        let idx = vec![AExpr::Var(iv[0]), AExpr::Var(iv[1])];
+        (
+            vec![Region::point(a, idx.clone()), Region::point(b, idx.clone())],
+            vec![Region::point(c, idx.clone())],
+            BlockBody::Assign {
+                expr: CExpr::bin(
+                    BinOp::Add,
+                    CExpr::load(a, idx.clone()),
+                    CExpr::load(b, idx),
+                ),
+            },
+        )
+    });
+    p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tir::analysis::program_flops;
+
+    #[test]
+    fn norm_two_blocks() {
+        let p = norm(1, 256, 256);
+        p.check_integrity().unwrap();
+        assert_eq!(p.blocks().len(), 2);
+        let sq = p.find_block("sq_sum").unwrap();
+        let nm = p.find_block("normalize").unwrap();
+        assert_eq!(p.consumers_of(sq), vec![nm]);
+    }
+
+    #[test]
+    fn softmax_four_block_chain() {
+        let p = softmax(1, 256, 256);
+        p.check_integrity().unwrap();
+        assert_eq!(p.blocks().len(), 4);
+        let exp = p.find_block("exp").unwrap();
+        // exp feeds both row_sum and divide.
+        assert_eq!(p.consumers_of(exp).len(), 2);
+    }
+
+    #[test]
+    fn relu_flops_is_numel() {
+        let p = relu(1024);
+        assert_eq!(program_flops(&p), 1024.0);
+    }
+
+    #[test]
+    fn add2d_reads_two_buffers() {
+        let p = add2d(16, 16);
+        let b = p.find_block("add").unwrap();
+        assert_eq!(p.block_data(b).reads.len(), 2);
+        assert_eq!(program_flops(&p), 256.0);
+    }
+}

@@ -1,0 +1,198 @@
+//! Matrix-multiply-family workload builders: GMM, TBG, dense, fused-dense.
+
+use crate::tir::{rd, sp, AExpr, BinOp, BlockBody, CExpr, DType, Program, Region, UnOp};
+
+/// Plain matmul `C[m,n] = sum_k A[m,k] * B[k,n]` with a batch dim folded in.
+/// A.2 GMM: batch=1, N=M=K=128.
+pub fn matmul(b: i64, m: i64, n: i64, k: i64) -> Program {
+    let mut p = Program::new("matmul");
+    let a = p.param("A", vec![b, m, k], DType::F32);
+    let bb = p.param("B", vec![b, k, n], DType::F32);
+    let c = p.param("C", vec![b, m, n], DType::F32);
+    p.emit(
+        "matmul",
+        &[sp("b", b), sp("i", m), sp("j", n), rd("k", k)],
+        |iv| {
+            let (vb, vi, vj, vk) = (iv[0], iv[1], iv[2], iv[3]);
+            (
+                vec![
+                    Region::point(a, vec![AExpr::Var(vb), AExpr::Var(vi), AExpr::Var(vk)]),
+                    Region::point(bb, vec![AExpr::Var(vb), AExpr::Var(vk), AExpr::Var(vj)]),
+                ],
+                vec![Region::point(c, vec![AExpr::Var(vb), AExpr::Var(vi), AExpr::Var(vj)])],
+                BlockBody::Reduce {
+                    init: CExpr::ConstF(0.0),
+                    op: BinOp::Add,
+                    rhs: CExpr::bin(
+                        BinOp::Mul,
+                        CExpr::load(a, vec![AExpr::Var(vb), AExpr::Var(vi), AExpr::Var(vk)]),
+                        CExpr::load(bb, vec![AExpr::Var(vb), AExpr::Var(vk), AExpr::Var(vj)]),
+                    ),
+                },
+            )
+        },
+    );
+    p
+}
+
+/// Transpose + batched matmul: the BERT attention-score pattern.
+/// A.2 TBG: batch=1, seq=128, head=12, dim=64. Computes
+/// `K_t[h,d,s] = K[s,h,d]` then `S[h,i,j] = sum_d Q[i,h,d] * K_t[h,d,j]`.
+pub fn transpose_batch_matmul(seq: i64, head: i64, dim: i64) -> Program {
+    let mut p = Program::new("transpose_batch_matmul");
+    let q = p.param("Q", vec![seq, head, dim], DType::F32);
+    let kbuf = p.param("K", vec![seq, head, dim], DType::F32);
+    let kt = p.temp("K_t", vec![head, dim, seq], DType::F32);
+    let s = p.param("S", vec![head, seq, seq], DType::F32);
+    p.emit(
+        "transpose",
+        &[sp("h", head), sp("d", dim), sp("s", seq)],
+        |iv| {
+            let (vh, vd, vs) = (iv[0], iv[1], iv[2]);
+            (
+                vec![Region::point(kbuf, vec![AExpr::Var(vs), AExpr::Var(vh), AExpr::Var(vd)])],
+                vec![Region::point(kt, vec![AExpr::Var(vh), AExpr::Var(vd), AExpr::Var(vs)])],
+                BlockBody::Assign {
+                    expr: CExpr::load(kbuf, vec![AExpr::Var(vs), AExpr::Var(vh), AExpr::Var(vd)]),
+                },
+            )
+        },
+    );
+    p.emit(
+        "batch_matmul",
+        &[sp("h", head), sp("i", seq), sp("j", seq), rd("d", dim)],
+        |iv| {
+            let (vh, vi, vj, vd) = (iv[0], iv[1], iv[2], iv[3]);
+            (
+                vec![
+                    Region::point(q, vec![AExpr::Var(vi), AExpr::Var(vh), AExpr::Var(vd)]),
+                    Region::point(kt, vec![AExpr::Var(vh), AExpr::Var(vd), AExpr::Var(vj)]),
+                ],
+                vec![Region::point(s, vec![AExpr::Var(vh), AExpr::Var(vi), AExpr::Var(vj)])],
+                BlockBody::Reduce {
+                    init: CExpr::ConstF(0.0),
+                    op: BinOp::Add,
+                    rhs: CExpr::bin(
+                        BinOp::Mul,
+                        CExpr::load(q, vec![AExpr::Var(vi), AExpr::Var(vh), AExpr::Var(vd)]),
+                        CExpr::load(kt, vec![AExpr::Var(vh), AExpr::Var(vd), AExpr::Var(vj)]),
+                    ),
+                },
+            )
+        },
+    );
+    p
+}
+
+/// Dense (fully-connected): `Y[i,j] = sum_k X[i,k] * W[j,k]`, row-major
+/// weights as in framework `Linear` layers.
+pub fn dense(m: i64, n: i64, k: i64) -> Program {
+    let mut p = Program::new("dense");
+    let x = p.param("X", vec![m, k], DType::F32);
+    let w = p.param("W", vec![n, k], DType::F32);
+    let y = p.param("Y", vec![m, n], DType::F32);
+    p.emit("dense", &[sp("i", m), sp("j", n), rd("k", k)], |iv| {
+        let (vi, vj, vk) = (iv[0], iv[1], iv[2]);
+        (
+            vec![
+                Region::point(x, vec![AExpr::Var(vi), AExpr::Var(vk)]),
+                Region::point(w, vec![AExpr::Var(vj), AExpr::Var(vk)]),
+            ],
+            vec![Region::point(y, vec![AExpr::Var(vi), AExpr::Var(vj)])],
+            BlockBody::Reduce {
+                init: CExpr::ConstF(0.0),
+                op: BinOp::Add,
+                rhs: CExpr::bin(
+                    BinOp::Mul,
+                    CExpr::load(x, vec![AExpr::Var(vi), AExpr::Var(vk)]),
+                    CExpr::load(w, vec![AExpr::Var(vj), AExpr::Var(vk)]),
+                ),
+            },
+        )
+    });
+    p
+}
+
+/// Dense + bias + ReLU: the `fused-dense` BERT subgraph of Figure 10a.
+/// Default Fig. 10a shape: seq=128 rows, 768 -> 3072 (BERT-base FFN).
+pub fn fused_dense(m: i64, n: i64, k: i64) -> Program {
+    let mut p = dense(m, n, k);
+    p.name = "fused_dense".into();
+    let y = 2; // dense output
+    let bias = p.param("Bias", vec![n], DType::F32);
+    let t = p.temp("Biased", vec![m, n], DType::F32);
+    let out = p.param("Out", vec![m, n], DType::F32);
+    p.emit("bias_add", &[sp("i", m), sp("j", n)], |iv| {
+        let (vi, vj) = (iv[0], iv[1]);
+        let idx = vec![AExpr::Var(vi), AExpr::Var(vj)];
+        (
+            vec![
+                Region::point(y, idx.clone()),
+                Region::point(bias, vec![AExpr::Var(vj)]),
+            ],
+            vec![Region::point(t, idx.clone())],
+            BlockBody::Assign {
+                expr: CExpr::bin(
+                    BinOp::Add,
+                    CExpr::load(y, idx),
+                    CExpr::load(bias, vec![AExpr::Var(vj)]),
+                ),
+            },
+        )
+    });
+    p.emit("relu", &[sp("i", m), sp("j", n)], |iv| {
+        let idx = vec![AExpr::Var(iv[0]), AExpr::Var(iv[1])];
+        (
+            vec![Region::point(t, idx.clone())],
+            vec![Region::point(out, idx.clone())],
+            BlockBody::Assign {
+                expr: CExpr::un(UnOp::Relu, CExpr::load(t, idx)),
+            },
+        )
+    });
+    p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tir::analysis::program_flops;
+
+    #[test]
+    fn gmm_flops() {
+        let p = matmul(1, 128, 128, 128);
+        p.check_integrity().unwrap();
+        assert_eq!(program_flops(&p), 2.0 * 128f64.powi(3));
+    }
+
+    #[test]
+    fn tbg_structure() {
+        let p = transpose_batch_matmul(128, 12, 64);
+        p.check_integrity().unwrap();
+        let t = p.find_block("transpose").unwrap();
+        let bmm = p.find_block("batch_matmul").unwrap();
+        assert_eq!(p.consumers_of(t), vec![bmm]);
+        // matmul flops dominate: 2 * 12 * 128 * 128 * 64 (transpose is copy-only)
+        assert_eq!(program_flops(&p), 2.0 * 12.0 * 128.0 * 128.0 * 64.0);
+    }
+
+    #[test]
+    fn fused_dense_chain() {
+        let p = fused_dense(128, 3072, 768);
+        p.check_integrity().unwrap();
+        let d = p.find_block("dense").unwrap();
+        let b = p.find_block("bias_add").unwrap();
+        let r = p.find_block("relu").unwrap();
+        assert_eq!(p.consumers_of(d), vec![b]);
+        assert_eq!(p.consumers_of(b), vec![r]);
+        // bias_add and relu blocks have trivial writes -> inlineable.
+        assert!(p.block_data(b).write_is_trivial());
+        assert!(p.block_data(r).write_is_trivial());
+    }
+
+    #[test]
+    fn dense_weight_layout_is_nk() {
+        let p = dense(64, 256, 512);
+        assert_eq!(p.buffers[1].shape, vec![256, 512]);
+    }
+}

@@ -1,0 +1,161 @@
+//! The Appendix A.2 workload suite + parameterized operator builders.
+//!
+//! Each workload is an initial program `e_0` built with the exact
+//! configurations the paper tabulates (Appendix A.2). Parameterized
+//! builders in [`conv`], [`matmul`] and [`elementwise`] are reused by the
+//! [`graph`](crate::graph) model zoo at other shapes.
+
+pub mod conv;
+pub mod elementwise;
+pub mod matmul;
+
+pub use conv::{conv1d, conv2d, conv2d_bn_relu, conv3d, conv_out, depthwise_conv2d, transposed_conv2d, Conv2dParams};
+pub use elementwise::{add2d, norm, relu, softmax};
+pub use matmul::{dense, fused_dense, matmul, transpose_batch_matmul};
+
+use crate::tir::Program;
+
+/// A named workload from the paper's evaluation suite.
+#[derive(Clone)]
+pub struct Workload {
+    /// Short name used in Figure 8 ("C1D", "GMM", ...).
+    pub name: &'static str,
+    /// Human description with the A.2 configuration.
+    pub description: &'static str,
+    /// Build the initial program `e_0`.
+    pub build: fn() -> Program,
+}
+
+impl std::fmt::Debug for Workload {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Workload").field("name", &self.name).finish()
+    }
+}
+
+fn build_c1d() -> Program {
+    conv1d(1, 256, 64, 128, 3, 2, 1)
+}
+fn build_c2d() -> Program {
+    conv2d(Conv2dParams::new(1, 224, 224, 3, 64, 7, 2, 3))
+}
+fn build_c3d() -> Program {
+    conv3d(1, 16, 224, 224, 3, 64, 7, 2, 3)
+}
+fn build_dep() -> Program {
+    depthwise_conv2d(1, 112, 112, 32, 3, 1, 1)
+}
+fn build_dil() -> Program {
+    let mut p = Conv2dParams::new(1, 224, 224, 3, 64, 7, 2, 3);
+    p.dilation = 2;
+    let mut prog = conv2d(p);
+    prog.name = "dilated_conv2d".into();
+    prog
+}
+fn build_gmm() -> Program {
+    matmul(1, 128, 128, 128)
+}
+fn build_grp() -> Program {
+    let mut p = Conv2dParams::new(1, 56, 56, 64, 128, 3, 2, 1);
+    p.groups = 4;
+    conv2d(p)
+}
+fn build_t2d() -> Program {
+    transposed_conv2d(1, 4, 4, 512, 256, 4, 2, 1)
+}
+fn build_cbr() -> Program {
+    conv2d_bn_relu(Conv2dParams::new(1, 224, 224, 3, 64, 7, 2, 3))
+}
+fn build_tbg() -> Program {
+    transpose_batch_matmul(128, 12, 64)
+}
+fn build_nrm() -> Program {
+    norm(1, 256, 256)
+}
+fn build_sfm() -> Program {
+    softmax(1, 256, 256)
+}
+fn build_fused_dense() -> Program {
+    fused_dense(128, 3072, 768)
+}
+
+/// The 12 operator/subgraph workloads of Figure 8, in paper order.
+pub fn suite() -> Vec<Workload> {
+    vec![
+        Workload { name: "C1D", description: "1D conv: b1 l256 ci64 co128 k3 s2 p1", build: build_c1d },
+        Workload { name: "C2D", description: "2D conv: b1 224x224 ci3 co64 k7 s2 p3", build: build_c2d },
+        Workload { name: "C3D", description: "3D conv: b1 d16 224x224 ci3 co64 k7 s2 p3", build: build_c3d },
+        Workload { name: "DEP", description: "depthwise conv: b1 112x112 c32 k3 s1 p1", build: build_dep },
+        Workload { name: "DIL", description: "dilated conv: b1 224x224 ci3 co64 k7 s2 p3 d2", build: build_dil },
+        Workload { name: "GMM", description: "matmul: b1 n=m=k=128", build: build_gmm },
+        Workload { name: "GRP", description: "group conv: b1 56x56 ci64 co128 k3 s2 p1 g4", build: build_grp },
+        Workload { name: "T2D", description: "transposed conv: b1 4x4 ci512 co256 k4 s2 p1", build: build_t2d },
+        Workload { name: "CBR", description: "conv+bn+relu: b1 224x224 ci3 co64 k7 s2 p3", build: build_cbr },
+        Workload { name: "TBG", description: "transpose+batch-matmul: b1 s128 h12 d64", build: build_tbg },
+        Workload { name: "NRM", description: "norm: b1 256x256", build: build_nrm },
+        Workload { name: "SFM", description: "softmax: b1 256x256", build: build_sfm },
+    ]
+}
+
+/// The Figure 10a `fused-dense` BERT subgraph.
+pub fn fused_dense_workload() -> Workload {
+    Workload {
+        name: "fused-dense",
+        description: "dense+bias+relu: 128x768 -> 3072 (BERT FFN)",
+        build: build_fused_dense,
+    }
+}
+
+/// Look a suite workload up by (case-insensitive) name.
+pub fn by_name(name: &str) -> Option<Workload> {
+    let upper = name.to_uppercase();
+    if upper == "FUSED-DENSE" || upper == "FUSED_DENSE" {
+        return Some(fused_dense_workload());
+    }
+    suite().into_iter().find(|w| w.name == upper)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tir::analysis::program_flops;
+
+    #[test]
+    fn suite_has_twelve_buildable_workloads() {
+        let s = suite();
+        assert_eq!(s.len(), 12);
+        for w in &s {
+            let p = (w.build)();
+            p.check_integrity().unwrap();
+            assert!(program_flops(&p) > 0.0, "{} has zero flops", w.name);
+            assert!(!p.blocks().is_empty());
+        }
+    }
+
+    #[test]
+    fn names_unique() {
+        let s = suite();
+        let mut names: Vec<_> = s.iter().map(|w| w.name).collect();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), 12);
+    }
+
+    #[test]
+    fn by_name_lookup() {
+        assert!(by_name("gmm").is_some());
+        assert!(by_name("GMM").is_some());
+        assert!(by_name("fused-dense").is_some());
+        assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn simulator_accepts_all_workloads() {
+        use crate::sim::{simulate, Target};
+        let cpu = Target::cpu_avx512();
+        for w in suite() {
+            let p = (w.build)();
+            let r = simulate(&p, &cpu).unwrap();
+            assert!(r.total_s > 0.0, "{} zero latency", w.name);
+        }
+    }
+}

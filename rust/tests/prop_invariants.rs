@@ -1,0 +1,356 @@
+//! Property-based tests over the coordinator invariants (in-tree
+//! mini-proptest, `util::prop`): random schedule transformations must
+//! preserve program semantics proxies (flop count, structural integrity),
+//! traces must replay deterministically, mutation must stay on-support,
+//! and the simulator must be deterministic and monotone where physics
+//! says so.
+
+use metaschedule::schedule::Schedule;
+use metaschedule::search::mutate;
+use metaschedule::sim::{simulate, Target};
+use metaschedule::space::SpaceComposer;
+use metaschedule::tir::analysis::program_flops;
+use metaschedule::tir::structural_hash;
+use metaschedule::trace::replay;
+use metaschedule::trace::replay::replay_fresh;
+use metaschedule::trace::FactorArg;
+use metaschedule::util::prop::{check, PropConfig};
+use metaschedule::util::rng::Rng;
+use metaschedule::workloads;
+
+fn cfg(cases: usize) -> PropConfig {
+    PropConfig {
+        cases,
+        ..PropConfig::default()
+    }
+}
+
+/// Random (m, n, k) with highly-composite extents.
+fn rand_shape(rng: &mut Rng) -> (i64, i64, i64) {
+    let pick = |rng: &mut Rng| [16, 24, 32, 48, 64, 96, 128][rng.gen_range(7)];
+    (pick(rng), pick(rng), pick(rng))
+}
+
+#[test]
+fn prop_random_transformations_preserve_flops_and_integrity() {
+    check(
+        cfg(60),
+        |rng| {
+            let (m, n, k) = rand_shape(rng);
+            (m, n, k, rng.next_u64())
+        },
+        |&(m, n, k, seed)| {
+            let prog = workloads::matmul(1, m, n, k);
+            let flops = program_flops(&prog);
+            let mut s = Schedule::new(prog, seed);
+            let mut rng = Rng::seed_from_u64(seed ^ 0x5eed);
+            let b = s.get_block("matmul").unwrap();
+            // Apply a random sequence of structure-preserving primitives.
+            for _ in 0..6 {
+                let loops = s.get_loops(b).unwrap();
+                if loops.is_empty() {
+                    break;
+                }
+                match rng.gen_range(4) {
+                    0 => {
+                        let l = loops[rng.gen_range(loops.len())];
+                        if let Ok(t) = s.sample_perfect_tile(l, 2, 0) {
+                            let _ = s.split(l, &[FactorArg::Rv(t[0].0), FactorArg::Rv(t[1].0)]);
+                        }
+                    }
+                    1 => {
+                        if loops.len() >= 2 {
+                            let i = rng.gen_range(loops.len() - 1);
+                            let _ = s.fuse(&loops[i..i + 2]);
+                        }
+                    }
+                    2 => {
+                        if loops.len() >= 2 {
+                            let mut order = loops.clone();
+                            let a = rng.gen_range(order.len());
+                            let c = rng.gen_range(order.len());
+                            order.swap(a, c);
+                            let _ = s.reorder(&order);
+                        }
+                    }
+                    _ => {
+                        let l = loops[rng.gen_range(loops.len())];
+                        let _ = s.unroll(l);
+                    }
+                }
+            }
+            s.prog.check_integrity().is_ok() && (program_flops(&s.prog) - flops).abs() < 1e-6
+        },
+    );
+}
+
+#[test]
+fn prop_traces_replay_deterministically() {
+    // For any design-space trace: replay(trace) == original program, and
+    // two replays agree with each other.
+    check(
+        cfg(20),
+        |rng| rng.next_u64(),
+        |&seed| {
+            let prog = workloads::fused_dense(64, 128, 64);
+            let composer = SpaceComposer::generic(Target::cpu_avx512());
+            let designs = composer.generate(&prog, seed);
+            designs.iter().all(|d| {
+                let a = replay(&d.trace, &prog, 1).unwrap();
+                let b = replay(&d.trace, &prog, 2).unwrap();
+                structural_hash(&a.prog) == structural_hash(&d.prog)
+                    && structural_hash(&a.prog) == structural_hash(&b.prog)
+            })
+        },
+    );
+}
+
+#[test]
+fn prop_fresh_samples_stay_on_support() {
+    // Fork-and-sample either fails validation or yields a program with
+    // identical semantics proxies (flops) and valid structure.
+    check(
+        cfg(30),
+        |rng| rng.next_u64(),
+        |&seed| {
+            let prog = workloads::matmul(1, 64, 64, 64);
+            let flops = program_flops(&prog);
+            let composer = SpaceComposer::generic(Target::cpu_avx512());
+            let designs = composer.generate(&prog, 1);
+            designs.iter().all(|d| match replay_fresh(&d.trace, &prog, seed) {
+                Ok(s) => {
+                    s.prog.check_integrity().is_ok()
+                        && (program_flops(&s.prog) - flops).abs() < 1e-6
+                }
+                Err(_) => true, // off-support draws are legitimately rejected
+            })
+        },
+    );
+}
+
+#[test]
+fn prop_mutations_preserve_semantics() {
+    check(
+        cfg(30),
+        |rng| rng.next_u64(),
+        |&seed| {
+            let prog = workloads::fused_dense(64, 128, 64);
+            let flops = program_flops(&prog);
+            let composer = SpaceComposer::generic(Target::cpu_avx512());
+            let designs = composer.generate(&prog, 3);
+            let mut rng = Rng::seed_from_u64(seed);
+            designs.iter().all(|d| {
+                for _ in 0..4 {
+                    if let Some(m) = mutate(&d.trace, &prog, &mut rng, seed) {
+                        if m.prog.check_integrity().is_err() {
+                            return false;
+                        }
+                        if (program_flops(&m.prog) - flops).abs() > 1e-6 {
+                            return false;
+                        }
+                    }
+                }
+                true
+            })
+        },
+    );
+}
+
+#[test]
+fn prop_simulator_deterministic_and_positive() {
+    check(
+        cfg(40),
+        |rng| {
+            let (m, n, k) = rand_shape(rng);
+            (m, n, k, rng.gen_bool(0.5))
+        },
+        |&(m, n, k, gpu)| {
+            let prog = workloads::matmul(1, m, n, k);
+            let target = if gpu { Target::gpu() } else { Target::cpu_avx512() };
+            let a = simulate(&prog, &target).unwrap();
+            let b = simulate(&prog, &target).unwrap();
+            a.total_s == b.total_s && a.total_s > 0.0 && a.flops == 2.0 * (m * n * k) as f64
+        },
+    );
+}
+
+#[test]
+fn prop_simulator_monotone_in_problem_size() {
+    // Double one dimension of a matmul => latency must not decrease.
+    check(
+        cfg(30),
+        |rng| {
+            let (m, n, k) = rand_shape(rng);
+            (m, n, k, rng.gen_range(3))
+        },
+        |&(m, n, k, dim)| {
+            let t = Target::cpu_avx512();
+            let base = simulate(&workloads::matmul(1, m, n, k), &t).unwrap().total_s;
+            let (m2, n2, k2) = match dim {
+                0 => (m * 2, n, k),
+                1 => (m, n * 2, k),
+                _ => (m, n, k * 2),
+            };
+            let bigger = simulate(&workloads::matmul(1, m2, n2, k2), &t)
+                .unwrap()
+                .total_s;
+            bigger >= base * 0.99
+        },
+    );
+}
+
+#[test]
+fn prop_scheduled_programs_compute_identical_values() {
+    // The strongest invariant in the suite: every schedule the composed
+    // space produces (and every valid mutation of it) must compute the
+    // SAME values as e_0 on concrete data — checked with the reference
+    // interpreter (tir::interp), not a structural proxy. Small shapes
+    // keep interpretation fast; tensorized (opaque) schedules cannot be
+    // interpreted and are skipped.
+    use metaschedule::tir::interp::{semantic_distance, InterpError};
+    check(
+        cfg(10),
+        |rng| rng.next_u64(),
+        |&seed| {
+            let prog = workloads::fused_dense(8, 16, 8);
+            let composer = SpaceComposer::generic(Target::cpu_avx512());
+            let designs = composer.generate(&prog, seed);
+            let mut rng = Rng::seed_from_u64(seed ^ 0xabcd);
+            for d in &designs {
+                match semantic_distance(&prog, &d.prog, seed) {
+                    Ok(dist) => {
+                        if dist > 1e-4 {
+                            return Err(format!("design diverges by {dist}"));
+                        }
+                    }
+                    Err(InterpError::OpaqueBlock(_)) => {}
+                    Err(e) => return Err(format!("interp error: {e}")),
+                }
+                // And one mutation of it.
+                if let Some(m) = mutate(&d.trace, &prog, &mut rng, seed) {
+                    match semantic_distance(&prog, &m.prog, seed) {
+                        Ok(dist) => {
+                            if dist > 1e-4 {
+                                return Err(format!("mutation diverges by {dist}"));
+                            }
+                        }
+                        Err(InterpError::OpaqueBlock(_)) => {}
+                        Err(e) => return Err(format!("interp error: {e}")),
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_random_primitive_sequences_compute_identical_values() {
+    // Same invariant over raw primitive sequences (not just module-made
+    // schedules): random split/fuse/reorder/parallel/vectorize/unroll
+    // chains on a small matmul leave the interpreted output unchanged.
+    use metaschedule::tir::interp::semantic_distance;
+    check(
+        cfg(20),
+        |rng| rng.next_u64(),
+        |&seed| {
+            let prog = workloads::matmul(1, 8, 12, 16);
+            let mut s = Schedule::new(prog.clone(), seed);
+            let mut rng = Rng::seed_from_u64(seed ^ 0xfeed);
+            let b = s.get_block("matmul").unwrap();
+            for _ in 0..5 {
+                let loops = s.get_loops(b).unwrap();
+                if loops.is_empty() {
+                    break;
+                }
+                match rng.gen_range(5) {
+                    0 => {
+                        let l = loops[rng.gen_range(loops.len())];
+                        if let Ok(t) = s.sample_perfect_tile(l, 2, 0) {
+                            let _ = s.split(l, &[FactorArg::Rv(t[0].0), FactorArg::Rv(t[1].0)]);
+                        }
+                    }
+                    1 => {
+                        if loops.len() >= 2 {
+                            let i = rng.gen_range(loops.len() - 1);
+                            let _ = s.fuse(&loops[i..i + 2]);
+                        }
+                    }
+                    2 => {
+                        let mut order = loops.clone();
+                        let a = rng.gen_range(order.len());
+                        let c = rng.gen_range(order.len());
+                        order.swap(a, c);
+                        let _ = s.reorder(&order);
+                    }
+                    3 => {
+                        let l = loops[rng.gen_range(loops.len())];
+                        let _ = s.parallel(l);
+                    }
+                    _ => {
+                        let l = loops[rng.gen_range(loops.len())];
+                        let _ = s.unroll(l);
+                    }
+                }
+            }
+            let d = semantic_distance(&prog, &s.prog, seed).map_err(|e| e.to_string())?;
+            if d > 1e-5 {
+                return Err(format!("primitive chain diverges by {d}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_perfect_tile_enumeration_sound() {
+    use metaschedule::schedule::sampling::enumerate_perfect_tiles;
+    check(
+        cfg(50),
+        |rng| {
+            let extent = [4, 6, 12, 24, 36, 60, 96, 120][rng.gen_range(8)];
+            let n = 2 + rng.gen_range(3);
+            let max_inner = [0, 4, 16][rng.gen_range(3)];
+            (extent, n, max_inner)
+        },
+        |&(extent, n, max_inner)| {
+            let tiles = enumerate_perfect_tiles(extent, n, max_inner);
+            !tiles.is_empty()
+                && tiles.iter().all(|t| {
+                    t.len() == n
+                        && t.iter().product::<i64>() == extent
+                        && t.iter().all(|&f| f >= 1)
+                        && (max_inner == 0 || *t.last().unwrap() <= max_inner)
+                })
+                && {
+                    // No duplicates.
+                    let mut s: Vec<Vec<i64>> = tiles.as_ref().clone();
+                    s.sort();
+                    s.dedup();
+                    s.len() == tiles.len()
+                }
+        },
+    );
+}
+
+#[test]
+fn prop_vendor_latency_scale_invariance() {
+    // Vendor model: scaling a GEMM's flops scales its compute-bound
+    // latency roughly linearly (sanity of the roofline form).
+    check(
+        cfg(20),
+        |rng| [256, 384, 512][rng.gen_range(3)],
+        |&n| {
+            let t = Target::cpu_avx512();
+            let small = metaschedule::baselines::vendor_latency(
+                &workloads::matmul(1, n, n, n),
+                &t,
+            );
+            let big = metaschedule::baselines::vendor_latency(
+                &workloads::matmul(1, 2 * n, 2 * n, 2 * n),
+                &t,
+            );
+            big > small * 4.0 && big < small * 16.0
+        },
+    );
+}
