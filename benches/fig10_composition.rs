@@ -14,6 +14,7 @@ fn main() {
     let cfg = ExpConfig {
         trials: args.flag_usize("trials", 48),
         seed: args.flag_u64("seed", 42),
+        threads: args.flag_usize("threads", 0),
     };
     let a = fig10::run_10a(&cfg);
     a.print();

@@ -1,14 +1,17 @@
 //! Microbenchmarks of the search hot paths (§Perf in EXPERIMENTS.md):
-//! trace replay, mutation+validation, feature extraction, GBT
-//! train/predict, and simulator evaluation. These are what bound tuning
-//! throughput (Table 1), so the perf pass optimizes against this bench.
+//! trace replay, mutation+validation, feature extraction (single and
+//! batched), GBT train/predict, simulator evaluation, and a full
+//! evolutionary-search round at 1 vs N threads (the chain-parallel
+//! pipeline). These are what bound tuning throughput (Table 1), so the
+//! perf pass optimizes against this bench.
 //!
 //! ```sh
-//! cargo bench --bench hot_path
+//! cargo bench --bench hot_path             # full run
+//! cargo bench --bench hot_path -- --smoke  # CI: one pass, compile+run gate
 //! ```
 
-use metaschedule::cost_model::{extract, Gbt};
-use metaschedule::search::mutate;
+use metaschedule::cost_model::{extract, extract_batch, Gbt, GbtCostModel};
+use metaschedule::search::{mutate, EvolutionarySearch, SearchConfig, SimMeasurer};
 use metaschedule::sim::{simulate, Target};
 use metaschedule::space::SpaceComposer;
 use metaschedule::trace::replay::{replay, replay_fresh};
@@ -17,8 +20,17 @@ use metaschedule::util::rng::Rng;
 use metaschedule::workloads;
 
 fn main() {
+    // --smoke: single sample, minimal budget — run in CI so the hot path
+    // can never silently stop compiling (or panicking).
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let (samples, budget_ms) = if smoke { (1, 0.0) } else { (30, 20.0) };
+
     let target = Target::cpu_avx512();
-    let prog = workloads::fused_dense(128, 3072, 768);
+    let prog = if smoke {
+        workloads::fused_dense(64, 128, 64)
+    } else {
+        workloads::fused_dense(128, 3072, 768)
+    };
     let composer = SpaceComposer::generic(target.clone());
     let designs = composer.generate(&prog, 42);
     let sch = designs
@@ -27,47 +39,57 @@ fn main() {
         .expect("non-empty design space")
         .clone();
     println!(
-        "design space: {} traces; benchmarked trace has {} instructions\n",
+        "design space: {} traces; benchmarked trace has {} instructions{}\n",
         designs.len(),
-        sch.trace.len()
+        sch.trace.len(),
+        if smoke { " [smoke mode]" } else { "" }
     );
 
     let mut rows = Vec::new();
 
-    let s = bench("space_generate", 20, 20.0, || {
+    let s = bench("space_generate", samples.min(20), budget_ms, || {
         let _ = composer.generate(&prog, 42);
     });
     rows.push(vec!["space generate (all traces)".into(), fmt(&s)]);
 
-    let s = bench("trace_replay", 30, 20.0, || {
+    let s = bench("trace_replay", samples, budget_ms, || {
         let _ = replay(&sch.trace, &prog, 0).unwrap();
     });
     let replay_ns = s.median_ns;
     rows.push(vec!["trace replay (recorded decisions)".into(), fmt(&s)]);
 
-    let s = bench("trace_replay_fresh", 30, 20.0, || {
+    let s = bench("trace_replay_fresh", samples, budget_ms, || {
         let _ = replay_fresh(&sch.trace, &prog, 1);
     });
     rows.push(vec!["trace replay (fresh sampling)".into(), fmt(&s)]);
 
     let mut rng = Rng::seed_from_u64(3);
-    let s = bench("mutate_validate", 30, 20.0, || {
+    let s = bench("mutate_validate", samples, budget_ms, || {
         let _ = mutate(&sch.trace, &prog, &mut rng, 7);
     });
     rows.push(vec!["mutate + validate".into(), fmt(&s)]);
 
-    let s = bench("feature_extract", 30, 20.0, || {
+    let s = bench("feature_extract", samples, budget_ms, || {
         let _ = extract(&sch.prog);
     });
     rows.push(vec!["feature extraction".into(), fmt(&s)]);
 
-    let s = bench("simulate", 30, 20.0, || {
+    // Batched extraction over a candidate generation (the matrix the
+    // parallel chains push through the cost model each generation).
+    let cand_progs: Vec<&metaschedule::tir::Program> = vec![&sch.prog; 32];
+    let s = bench("feature_extract_batch32", samples, budget_ms, || {
+        let _ = extract_batch(&cand_progs);
+    });
+    rows.push(vec!["feature extraction (batch of 32)".into(), fmt(&s)]);
+
+    let s = bench("simulate", samples, budget_ms, || {
         let _ = simulate(&sch.prog, &target);
     });
     rows.push(vec!["simulator f(e)".into(), fmt(&s)]);
 
     // GBT on a realistic database size.
-    let xs: Vec<Vec<f64>> = (0..512)
+    let n_db = if smoke { 64 } else { 512 };
+    let xs: Vec<Vec<f64>> = (0..n_db)
         .map(|i| {
             let mut rng = Rng::seed_from_u64(i);
             (0..24).map(|_| rng.gen_f64() * 8.0).collect()
@@ -75,14 +97,49 @@ fn main() {
         .collect();
     let ys: Vec<f64> = xs.iter().map(|x| x[0] * 2.0 + x[3] * x[5]).collect();
     let mut gbt = Gbt::new(50, 5, 0.2);
-    let s = bench("gbt_train", 5, 50.0, || {
+    let s = bench("gbt_train", samples.min(5), budget_ms.max(1.0), || {
         gbt.fit(&xs, &ys);
     });
-    rows.push(vec!["GBT train (512 x 24, 50 trees)".into(), fmt(&s)]);
-    let s = bench("gbt_predict", 20, 20.0, || {
+    rows.push(vec![format!("GBT train ({n_db} x 24, 50 trees)"), fmt(&s)]);
+    let s = bench("gbt_predict", samples.min(20), budget_ms, || {
         let _ = gbt.predict(&xs);
     });
-    rows.push(vec!["GBT predict (512 programs)".into(), fmt(&s)]);
+    rows.push(vec![format!("GBT predict ({n_db} programs)"), fmt(&s)]);
+
+    // Full search round, serial vs chain-parallel: same seed, identical
+    // result, different wall-clock (the tentpole's payoff).
+    let small = workloads::matmul(1, 128, 128, 128);
+    let trials = if smoke { 16 } else { 48 };
+    for threads in [1usize, 4] {
+        let cfg = SearchConfig {
+            population: 24,
+            generations: 3,
+            num_trials: trials,
+            measure_batch: 8,
+            threads,
+            ..SearchConfig::default()
+        };
+        let s = bench(
+            if threads == 1 { "search_1_thread" } else { "search_4_threads" },
+            samples.min(3),
+            budget_ms,
+            || {
+                let mut model = GbtCostModel::new();
+                let mut measurer = SimMeasurer::new(target.clone());
+                let _ = EvolutionarySearch::new(cfg.clone()).tune(
+                    &small,
+                    &composer,
+                    &mut model,
+                    &mut measurer,
+                    7,
+                );
+            },
+        );
+        rows.push(vec![
+            format!("evolutionary round ({trials} trials, {threads} thr)"),
+            fmt(&s),
+        ]);
+    }
 
     print_table("hot-path microbenchmarks", &["path", "median"], &rows);
     println!(

@@ -14,6 +14,7 @@ fn main() {
     let cfg = ExpConfig {
         trials: args.flag_usize("trials", 16),
         seed: args.flag_u64("seed", 42),
+        threads: args.flag_usize("threads", 0),
     };
     let report = table1::run(&Target::cpu_avx512(), &cfg, None);
     // Values are seconds of tuning wall-clock, not operator latency.

@@ -20,7 +20,7 @@ fn main() {
     let naive = simulate(&prog, &target).unwrap().total_s;
     println!("fused-dense on {}: naive {:.1} us\n", target.name, naive * 1e6);
 
-    let cfg = ExpConfig { trials: 64, seed: 5 };
+    let cfg = ExpConfig { trials: 64, seed: 5, ..ExpConfig::default() };
     let steps: Vec<(&str, Vec<Box<dyn TransformModule>>)> = vec![
         ("thread-bind only", vec![Box::new(ThreadBind::new())]),
         (

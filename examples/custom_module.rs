@@ -81,7 +81,7 @@ fn main() {
     let naive = simulate(&prog, &target).unwrap().total_s;
     println!("NRM workload, naive {:.2} us", naive * 1e6);
 
-    let cfg = ExpConfig { trials: 64, seed: 2 };
+    let cfg = ExpConfig { trials: 64, seed: 2, ..ExpConfig::default() };
 
     // Stock generic space.
     let generic = SpaceComposer::generic(target.clone());

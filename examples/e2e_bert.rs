@@ -41,7 +41,10 @@ fn main() {
     // Tune.
     let composer = SpaceComposer::generic(target.clone());
     let mut measurer = SimMeasurer::new(target.clone());
-    let ts = TaskScheduler::new(SearchConfig::default());
+    let ts = TaskScheduler::new(SearchConfig {
+        threads: args.flag_usize("threads", 0),
+        ..SearchConfig::default()
+    });
     let total_budget = trials_per_task * tasks.len();
     let t0 = std::time::Instant::now();
     let results = ts.tune_tasks(&tasks, &composer, &mut measurer, total_budget, 42);

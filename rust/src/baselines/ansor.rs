@@ -41,6 +41,9 @@ fn frozen_sketch_rules(target: &Target) -> Vec<Box<dyn TransformModule>> {
 /// learned cost model (same learner class as ours, per [43]).
 pub struct Ansor {
     pub num_trials: usize,
+    /// OS threads for the inner evolutionary search (0 = auto);
+    /// plumbed so baseline timing comparisons share the cap.
+    pub threads: usize,
 }
 
 impl Ansor {
@@ -54,6 +57,7 @@ impl Ansor {
         let composer = SpaceComposer::new(frozen_sketch_rules(target), target.clone());
         let cfg = SearchConfig {
             num_trials: self.num_trials,
+            threads: self.threads,
             ..SearchConfig::default()
         };
         // Ansor re-runs sketch generation every search round; MetaSchedule
@@ -83,7 +87,7 @@ mod tests {
             let prog = workloads::matmul(1, 128, 128, 128);
             let naive = simulate(&prog, &target).unwrap().total_s;
             let mut m = SimMeasurer::new(target.clone());
-            let r = Ansor { num_trials: 32 }.tune(&prog, &target, &mut m, 0);
+            let r = Ansor { num_trials: 32, threads: 0 }.tune(&prog, &target, &mut m, 0);
             assert!(
                 r.best_latency_s < naive * 0.5,
                 "{}: {} vs {naive}",

@@ -176,12 +176,27 @@ pub fn extract(p: &Program) -> Vec<f64> {
     acc.to_vec()
 }
 
+/// Extract the feature matrix for a candidate batch (one row per
+/// program). This is the cost model's batched entry point: the search
+/// scores whole generations through it instead of program-at-a-time.
+pub fn extract_batch(progs: &[&Program]) -> Vec<Vec<f64>> {
+    progs.iter().map(|&p| extract(p)).collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::schedule::Schedule;
     use crate::trace::FactorArg;
     use crate::workloads;
+
+    #[test]
+    fn batch_extraction_matches_single() {
+        let a = workloads::matmul(1, 64, 64, 64);
+        let b = workloads::softmax(1, 32, 32);
+        let batch = extract_batch(&[&a, &b]);
+        assert_eq!(batch, vec![extract(&a), extract(&b)]);
+    }
 
     #[test]
     fn feature_vector_has_fixed_dim() {

@@ -6,7 +6,7 @@
 pub mod features;
 pub mod gbt;
 
-pub use features::{extract, FEAT_DIM};
+pub use features::{extract, extract_batch, FEAT_DIM};
 pub use gbt::Gbt;
 
 use crate::tir::Program;
@@ -17,9 +17,13 @@ pub fn latency_to_score(latency_s: f64) -> f64 {
     -latency_s.max(1e-12).ln()
 }
 
-/// A cost model the search can query and update.
-pub trait CostModel {
-    /// Predicted score for each program (higher = faster).
+/// A cost model the search can query and update. `Send + Sync` so worker
+/// chains can score candidate batches concurrently through a shared
+/// reference; mutation (`update`) stays exclusive on the coordinator.
+pub trait CostModel: Send + Sync {
+    /// Predicted score for each program (higher = faster). Implementations
+    /// should treat the slice as one batch (feature matrix in, score
+    /// vector out) rather than looping one-at-a-time internally.
     fn predict(&self, progs: &[&Program]) -> Vec<f64>;
     /// Feed back measured latencies (seconds) for the given programs.
     fn update(&mut self, progs: &[&Program], latencies_s: &[f64]);
@@ -71,10 +75,9 @@ impl CostModel for GbtCostModel {
             // prior (random exploration + measured elites).
             return vec![0.0; progs.len()];
         }
-        progs
-            .iter()
-            .map(|p| self.model.predict_one(&extract(p)))
-            .collect()
+        // One feature matrix, one ensemble pass — the batched path the
+        // parallel chains score whole candidate generations through.
+        self.model.predict(&extract_batch(progs))
     }
 
     fn update(&mut self, progs: &[&Program], latencies_s: &[f64]) {
@@ -96,23 +99,28 @@ impl CostModel for GbtCostModel {
     }
 }
 
-/// Random cost model (ablation baseline).
+/// Random cost model (ablation baseline): a fixed pseudo-random score per
+/// program, keyed by `(seed, structural hash)`. Pure `predict` — no
+/// interior state — so concurrent worker chains scoring through a shared
+/// reference stay deterministic regardless of call interleaving (the same
+/// property the search's `(seed, 1 thread) == (seed, N threads)`
+/// guarantee relies on).
 pub struct RandomModel {
-    rng: std::cell::RefCell<Rng>,
+    seed: u64,
 }
 
 impl RandomModel {
     pub fn new(seed: u64) -> RandomModel {
-        RandomModel {
-            rng: std::cell::RefCell::new(Rng::seed_from_u64(seed)),
-        }
+        RandomModel { seed }
     }
 }
 
 impl CostModel for RandomModel {
     fn predict(&self, progs: &[&Program]) -> Vec<f64> {
-        let mut rng = self.rng.borrow_mut();
-        progs.iter().map(|_| rng.gen_f64()).collect()
+        progs
+            .iter()
+            .map(|p| Rng::for_stream(self.seed, crate::tir::structural_hash(p)).gen_f64())
+            .collect()
     }
 
     fn update(&mut self, _progs: &[&Program], _latencies_s: &[f64]) {}

@@ -104,7 +104,10 @@ pub fn run_10b(cfg: &ExpConfig) -> Report {
     // MetaSchedule with the generic space.
     let e2e = |composer: &SpaceComposer, seed: u64| {
         let mut measurer = SimMeasurer::new(target.clone());
-        let ts = TaskScheduler::new(SearchConfig::default());
+        let ts = TaskScheduler::new(SearchConfig {
+            threads: cfg.threads,
+            ..SearchConfig::default()
+        });
         let results = ts.tune_tasks(&tasks, composer, &mut measurer, cfg.trials * tasks.len(), seed);
         TaskScheduler::e2e_latency(&tasks, &results)
     };
@@ -129,7 +132,7 @@ mod tests {
 
     #[test]
     fn fig10a_tensor_core_wins_and_composition_helps() {
-        let cfg = ExpConfig { trials: 40, seed: 11 };
+        let cfg = ExpConfig { trials: 40, seed: 11, ..ExpConfig::default() };
         let r = run_10a(&cfg);
         let ws = r.workloads();
         assert_eq!(ws.len(), 5);
@@ -143,7 +146,7 @@ mod tests {
 
     #[test]
     fn fig10b_tc_beats_autotvm_substantially() {
-        let cfg = ExpConfig { trials: 16, seed: 5 };
+        let cfg = ExpConfig { trials: 16, seed: 5, ..ExpConfig::default() };
         let r = run_10b(&cfg);
         let autotvm = r.latency("BERT-large", "TVM(AutoTVM)").unwrap();
         let tc = r.latency("BERT-large", "MetaSchedule+TC").unwrap();

@@ -67,7 +67,7 @@ mod tests {
     /// `fig8_operators` bench / `metaschedule exp fig8`.
     #[test]
     fn fig8_subset_shape_claims_hold_on_cpu() {
-        let cfg = ExpConfig { trials: 48, seed: 7 };
+        let cfg = ExpConfig { trials: 48, seed: 7, ..ExpConfig::default() };
         let r = run(
             &Target::cpu_avx512(),
             &cfg,

@@ -19,7 +19,10 @@ pub fn metaschedule_e2e(model: &str, target: &Target, cfg: &ExpConfig) -> f64 {
     let tasks = extract_tasks(&ops);
     let composer = SpaceComposer::generic(target.clone());
     let mut measurer = SimMeasurer::new(target.clone());
-    let ts = TaskScheduler::new(SearchConfig::default());
+    let ts = TaskScheduler::new(SearchConfig {
+        threads: cfg.threads,
+        ..SearchConfig::default()
+    });
     let total = cfg.trials * tasks.len();
     let results = ts.tune_tasks(&tasks, &composer, &mut measurer, total, cfg.seed);
     TaskScheduler::e2e_latency(&tasks, &results)
@@ -33,7 +36,7 @@ pub fn ansor_e2e(model: &str, target: &Target, cfg: &ExpConfig) -> f64 {
     let mut total = 0.0;
     for t in &tasks {
         let mut measurer = SimMeasurer::new(target.clone());
-        let r = Ansor { num_trials: cfg.trials }.tune(&t.prog, target, &mut measurer, cfg.seed);
+        let r = Ansor { num_trials: cfg.trials, threads: cfg.threads }.tune(&t.prog, target, &mut measurer, cfg.seed);
         total += r.best_latency_s * t.weight as f64;
     }
     total
@@ -60,12 +63,16 @@ pub fn run(target: &Target, cfg: &ExpConfig, models: Option<&[&str]>) -> Report 
         report.push(
             m,
             "TVM",
-            median3(&|s| ansor_e2e(m, target, &ExpConfig { trials: cfg.trials, seed: s })),
+            median3(&|s| {
+                ansor_e2e(m, target, &ExpConfig { trials: cfg.trials, seed: s, ..*cfg })
+            }),
         );
         report.push(
             m,
             "MetaSchedule",
-            median3(&|s| metaschedule_e2e(m, target, &ExpConfig { trials: cfg.trials, seed: s })),
+            median3(&|s| {
+                metaschedule_e2e(m, target, &ExpConfig { trials: cfg.trials, seed: s, ..*cfg })
+            }),
         );
     }
     let mut parity = 0;
@@ -99,7 +106,7 @@ mod tests {
     #[test]
     fn fig9_mobilenet_cpu_smoke() {
         // Small budget smoke: MetaSchedule must beat the vendor e2e.
-        let cfg = ExpConfig { trials: 32, seed: 3 };
+        let cfg = ExpConfig { trials: 32, seed: 3, ..ExpConfig::default() };
         let r = run(&Target::cpu_avx512(), &cfg, Some(&["mobilenet-v2"]));
         let pt = r.latency("mobilenet-v2", "PyTorch").unwrap();
         let ms = r.latency("mobilenet-v2", "MetaSchedule").unwrap();

@@ -23,16 +23,19 @@ use crate::tir::Program;
 use crate::util::json::Json;
 
 /// Shared experiment knobs.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Copy)]
 pub struct ExpConfig {
     /// Measurement trials per (workload, system).
     pub trials: usize,
     pub seed: u64,
+    /// OS threads for the search pipeline (0 = auto). Never changes
+    /// results — see the determinism notes in [`crate::search`].
+    pub threads: usize,
 }
 
 impl Default for ExpConfig {
     fn default() -> Self {
-        ExpConfig { trials: 64, seed: 42 }
+        ExpConfig { trials: 64, seed: 42, threads: 0 }
     }
 }
 
@@ -51,6 +54,7 @@ pub fn tune_with_composer(
 ) -> TuneResult {
     let search = EvolutionarySearch::new(SearchConfig {
         num_trials: cfg.trials,
+        threads: cfg.threads,
         ..SearchConfig::default()
     });
     let mut model = GbtCostModel::new();
@@ -65,7 +69,7 @@ pub fn tune_tvm_best(prog: &Program, target: &Target, cfg: &ExpConfig) -> f64 {
         .tune(prog, target, &mut m1, cfg.seed)
         .best_latency_s;
     let mut m2 = SimMeasurer::new(target.clone());
-    let ansor = crate::baselines::Ansor { num_trials: cfg.trials }
+    let ansor = crate::baselines::Ansor { num_trials: cfg.trials, threads: cfg.threads }
         .tune(prog, target, &mut m2, cfg.seed)
         .best_latency_s;
     autotvm.min(ansor)

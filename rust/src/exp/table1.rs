@@ -42,7 +42,7 @@ pub fn run(target: &Target, cfg: &ExpConfig, models: Option<&[&str]>) -> Report 
         let mut ansor_measurements = 0usize;
         for t in &tasks {
             let mut meas = SimMeasurer::new(target.clone());
-            let _ = Ansor { num_trials: cfg.trials }.tune(&t.prog, target, &mut meas, cfg.seed);
+            let _ = Ansor { num_trials: cfg.trials, threads: cfg.threads }.tune(&t.prog, target, &mut meas, cfg.seed);
             ansor_measurements += meas.count();
         }
         let ansor_s = t0.elapsed().as_secs_f64() / ansor_measurements.max(1) as f64 * nominal;
@@ -51,7 +51,10 @@ pub fn run(target: &Target, cfg: &ExpConfig, models: Option<&[&str]>) -> Report 
         let composer = SpaceComposer::generic(target.clone());
         let t1 = Instant::now();
         let mut meas = SimMeasurer::new(target.clone());
-        let ts = TaskScheduler::new(SearchConfig::default());
+        let ts = TaskScheduler::new(SearchConfig {
+            threads: cfg.threads,
+            ..SearchConfig::default()
+        });
         let _ = ts.tune_tasks(&tasks, &composer, &mut meas, cfg.trials * tasks.len(), cfg.seed);
         let ms_s = t1.elapsed().as_secs_f64() / meas.count().max(1) as f64 * nominal;
 
@@ -79,7 +82,7 @@ mod tests {
 
     #[test]
     fn table1_smoke_single_model() {
-        let cfg = ExpConfig { trials: 8, seed: 1 };
+        let cfg = ExpConfig { trials: 8, seed: 1, ..ExpConfig::default() };
         let r = run(&Target::cpu_avx512(), &cfg, Some(&["mobilenet-v2"]));
         assert!(r.latency("mobilenet-v2", "TVM-Ansor").unwrap() > 0.0);
         assert!(r.latency("mobilenet-v2", "MetaSchedule").unwrap() > 0.0);

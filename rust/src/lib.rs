@@ -15,6 +15,11 @@
 //! figure and table of the paper's evaluation ([`exp`]).
 //!
 //! See DESIGN.md for the system inventory and EXPERIMENTS.md for results.
+//!
+//! Lint policy lives in `Cargo.toml` (`[lints]`): correctness and perf
+//! clippy lints are hard errors in CI; a small set of style lints is
+//! allowed where the codebase deliberately deviates (explicit index loops
+//! in kernel-adjacent math code, many-argument internal plumbing).
 
 pub mod baselines;
 pub mod cost_model;

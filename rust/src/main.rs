@@ -2,11 +2,14 @@
 //!
 //! ```text
 //! metaschedule list                              # workloads + models
-//! metaschedule tune --workload GMM [--target cpu] [--trials 64]
+//! metaschedule tune --workload GMM [--target cpu] [--trials 64] [--threads N]
 //! metaschedule tune-model --model bert-base [--target cpu] [--trials 32]
 //! metaschedule exp <fig8|fig9|fig10a|fig10b|table1|all> [--target cpu]
-//!                  [--trials N] [--seed S] [--out results.jsonl]
+//!                  [--trials N] [--seed S] [--threads N] [--out results.jsonl]
 //! metaschedule pjrt-verify                       # artifact correctness gate
+//!
+//! `--threads` caps the OS threads of the search pipeline (0 = all
+//! cores); it never changes tuning results, only wall-clock.
 //! ```
 
 use metaschedule::exp::{self, ExpConfig};
@@ -39,6 +42,7 @@ fn cfg_of(args: &Args) -> ExpConfig {
     ExpConfig {
         trials: args.flag_usize("trials", 64),
         seed: args.flag_u64("seed", 42),
+        threads: args.flag_usize("threads", 0),
     }
 }
 
@@ -167,7 +171,13 @@ fn pjrt_verify(args: &Args) {
         eprintln!("no artifacts under {dir}; run `make artifacts` first");
         std::process::exit(1);
     }
-    let mut runner = metaschedule::runtime::PjrtRunner::new(&dir).expect("pjrt client");
+    let mut runner = match metaschedule::runtime::PjrtRunner::new(&dir) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("cannot start PJRT runtime: {e}");
+            std::process::exit(1);
+        }
+    };
     println!("platform: {}", runner.platform());
     for v in &variants {
         let err = runner.verify_gmm(*v, 128, 128, 128).expect("execution");

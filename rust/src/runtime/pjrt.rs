@@ -1,0 +1,153 @@
+//! The real XLA-backed PJRT runner (`--features pjrt`). Requires a
+//! vendored `xla` crate; the offline CI image builds the stub instead.
+//!
+//! Note for whoever vendors `xla`: `Measurer: Send` means
+//! `PjrtGmmMeasurer` (and therefore `PjRtClient` /
+//! `PjRtLoadedExecutable`) must be `Send`. If the vendored bindings are
+//! `!Send`, wrap the runner in a dedicated measurement thread and have
+//! the measurer hand work over a channel instead of holding the client
+//! directly.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::time::Instant;
+
+use crate::util::error::{Context, Error, Result};
+
+/// PJRT CPU client with a compile-once executable cache.
+pub struct PjrtRunner {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Wall-clock measurements performed.
+    pub measurements: usize,
+}
+
+impl PjrtRunner {
+    pub fn new(dir: impl Into<PathBuf>) -> Result<PjrtRunner> {
+        Ok(PjrtRunner {
+            client: xla::PjRtClient::cpu().with_context(|| "creating PJRT CPU client".into())?,
+            dir: dir.into(),
+            cache: HashMap::new(),
+            measurements: 0,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an artifact (cached).
+    pub fn load(&mut self, artifact: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.cache.contains_key(artifact) {
+            let path = self.dir.join(artifact);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| Error::msg("non-utf8 path"))?,
+            )
+            .with_context(|| format!("loading {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling {artifact}"))?;
+            self.cache.insert(artifact.to_string(), exe);
+        }
+        Ok(&self.cache[artifact])
+    }
+
+    /// Execute an artifact on two f32 matrices, returning the flat output.
+    pub fn run_f32(
+        &mut self,
+        artifact: &str,
+        x: (&[f32], &[i64]),
+        y: (&[f32], &[i64]),
+    ) -> Result<Vec<f32>> {
+        let exe = self.load(artifact)?;
+        let lx = xla::Literal::vec1(x.0)
+            .reshape(x.1)
+            .with_context(|| "reshaping x".into())?;
+        let ly = xla::Literal::vec1(y.0)
+            .reshape(y.1)
+            .with_context(|| "reshaping y".into())?;
+        let result = exe
+            .execute::<xla::Literal>(&[lx, ly])
+            .with_context(|| format!("executing {artifact}"))?[0][0]
+            .to_literal_sync()
+            .with_context(|| "syncing output".into())?;
+        // aot.py lowers with return_tuple=True -> 1-tuple output.
+        Ok(result
+            .to_tuple1()
+            .with_context(|| "untupling output".into())?
+            .to_vec::<f32>()
+            .with_context(|| "reading output".into())?)
+    }
+
+    /// Time an artifact: median wall clock per execution over `iters`
+    /// timed runs after `warmup` untimed ones.
+    pub fn time_artifact(
+        &mut self,
+        artifact: &str,
+        x: (&[f32], &[i64]),
+        y: (&[f32], &[i64]),
+        warmup: usize,
+        iters: usize,
+    ) -> Result<f64> {
+        let exe = self.load(artifact)?;
+        let lx = xla::Literal::vec1(x.0)
+            .reshape(x.1)
+            .with_context(|| "reshaping x".into())?;
+        let ly = xla::Literal::vec1(y.0)
+            .reshape(y.1)
+            .with_context(|| "reshaping y".into())?;
+        for _ in 0..warmup {
+            let _ = exe
+                .execute::<xla::Literal>(&[lx.clone(), ly.clone()])
+                .with_context(|| format!("warmup of {artifact}"))?;
+        }
+        let mut samples = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let t0 = Instant::now();
+            let out = exe
+                .execute::<xla::Literal>(&[lx.clone(), ly.clone()])
+                .with_context(|| format!("timing {artifact}"))?;
+            // Force completion.
+            let _ = out[0][0]
+                .to_literal_sync()
+                .with_context(|| "syncing timed output".into())?;
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        self.measurements += 1;
+        Ok(samples[samples.len() / 2])
+    }
+
+    /// Correctness gate: run the GMM variant and compare with a host-side
+    /// f32 matmul; returns the max absolute error.
+    pub fn verify_gmm(
+        &mut self,
+        v: super::TileVariant,
+        m: usize,
+        n: usize,
+        k: usize,
+    ) -> Result<f64> {
+        let x: Vec<f32> = (0..m * k).map(|i| ((i % 13) as f32 - 6.0) * 0.25).collect();
+        let y: Vec<f32> = (0..k * n).map(|i| ((i % 7) as f32 - 3.0) * 0.5).collect();
+        let got = self.run_f32(
+            &v.artifact_name(),
+            (&x, &[m as i64, k as i64]),
+            (&y, &[k as i64, n as i64]),
+        )?;
+        let mut max_err = 0.0f64;
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0f32;
+                for kk in 0..k {
+                    acc += x[i * k + kk] * y[kk * n + j];
+                }
+                let e = (acc - got[i * n + j]).abs() as f64;
+                max_err = max_err.max(e);
+            }
+        }
+        Ok(max_err)
+    }
+}

@@ -1,0 +1,62 @@
+//! Stub PJRT runner for builds without the `pjrt` feature (the offline
+//! image vendors no `xla` crate). Mirrors the real runner's API so the
+//! rest of the runtime layer — and everything that links against it —
+//! compiles identically; constructing it reports the missing feature.
+
+use std::path::PathBuf;
+
+use crate::util::error::{Error, Result};
+
+/// What the error message tells an operator to do.
+const DISABLED: &str =
+    "PJRT runtime disabled: rebuild with `--features pjrt` and a vendored `xla` crate";
+
+/// Stub stand-in for the XLA-backed PJRT CPU client.
+pub struct PjrtRunner {
+    /// Wall-clock measurements performed (always zero on the stub).
+    pub measurements: usize,
+}
+
+impl PjrtRunner {
+    pub fn new(dir: impl Into<PathBuf>) -> Result<PjrtRunner> {
+        let _ = dir.into();
+        Err(Error::msg(DISABLED))
+    }
+
+    pub fn platform(&self) -> String {
+        "stub".to_string()
+    }
+
+    /// Execute an artifact on two f32 matrices, returning the flat output.
+    pub fn run_f32(
+        &mut self,
+        _artifact: &str,
+        _x: (&[f32], &[i64]),
+        _y: (&[f32], &[i64]),
+    ) -> Result<Vec<f32>> {
+        Err(Error::msg(DISABLED))
+    }
+
+    /// Time an artifact: median wall clock per execution.
+    pub fn time_artifact(
+        &mut self,
+        _artifact: &str,
+        _x: (&[f32], &[i64]),
+        _y: (&[f32], &[i64]),
+        _warmup: usize,
+        _iters: usize,
+    ) -> Result<f64> {
+        Err(Error::msg(DISABLED))
+    }
+
+    /// Correctness gate against a host-side f32 matmul.
+    pub fn verify_gmm(
+        &mut self,
+        _v: super::TileVariant,
+        _m: usize,
+        _n: usize,
+        _k: usize,
+    ) -> Result<f64> {
+        Err(Error::msg(DISABLED))
+    }
+}

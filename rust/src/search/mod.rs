@@ -5,10 +5,12 @@
 
 pub mod evolutionary;
 pub mod mutator;
+pub mod parallel;
 pub mod task_scheduler;
 
 pub use evolutionary::{EvolutionarySearch, ReplaySearch, SearchConfig, TuneResult};
 pub use mutator::mutate;
+pub use parallel::{BoundedQueue, MeasureRecord, SharedMeasurer};
 pub use task_scheduler::{Allocation, Task, TaskScheduler};
 
 use crate::sim::{simulate, Target};
@@ -17,7 +19,11 @@ use crate::tir::Program;
 /// The hardware measurement oracle `f(e)` (paper Figure 7's "hardware"
 /// box). Returns `None` for programs that are invalid on the target
 /// (scratchpad overflow, thread limits, unsupported intrinsics).
-pub trait Measurer {
+/// `Send` so the search pipeline can hand the oracle to its measurement
+/// worker; exclusive access is still serialized (see
+/// [`parallel::SharedMeasurer`]) — implementations need no internal
+/// locking of their own.
+pub trait Measurer: Send {
     fn measure(&mut self, prog: &Program) -> Option<f64>;
     /// Number of measurements performed so far.
     fn count(&self) -> usize;

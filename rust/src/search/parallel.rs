@@ -1,0 +1,268 @@
+//! Parallel execution primitives for the search pipeline: a bounded
+//! multi-consumer work queue, a thread-safe measurer wrapper, and an
+//! order-preserving parallel map over owned items.
+//!
+//! Everything here is built on `std::sync` + scoped threads only (the
+//! offline image vendors no `rayon`/`crossbeam`), and everything preserves
+//! the search's determinism contract: results are always merged in
+//! submission/item order, so the number of OS threads never changes what
+//! the algorithm computes — only how fast.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex};
+
+use crate::search::Measurer;
+use crate::tir::Program;
+
+/// A bounded FIFO work queue: producers block when the queue is full,
+/// consumers block when it is empty, and `close()` drains everyone out.
+/// This is the backpressure channel between candidate selection and the
+/// measurement workers (top-k measurement overlaps the next generation's
+/// mutation without unbounded buffering).
+pub struct BoundedQueue<T> {
+    state: Mutex<QueueState<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    capacity: usize,
+}
+
+struct QueueState<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+impl<T> BoundedQueue<T> {
+    pub fn new(capacity: usize) -> BoundedQueue<T> {
+        BoundedQueue {
+            state: Mutex::new(QueueState { items: VecDeque::new(), closed: false }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            capacity: capacity.max(1),
+        }
+    }
+
+    /// Enqueue, blocking while the queue is at capacity. Returns `false`
+    /// if the queue was closed (the item is dropped).
+    pub fn push(&self, item: T) -> bool {
+        let mut st = self.state.lock().unwrap();
+        while !st.closed && st.items.len() >= self.capacity {
+            st = self.not_full.wait(st).unwrap();
+        }
+        if st.closed {
+            return false;
+        }
+        st.items.push_back(item);
+        self.not_empty.notify_one();
+        true
+    }
+
+    /// Dequeue, blocking while empty; `None` once closed and drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(x) = st.items.pop_front() {
+                self.not_full.notify_one();
+                return Some(x);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.not_empty.wait(st).unwrap();
+        }
+    }
+
+    /// Close the queue: blocked producers give up, consumers drain what
+    /// remains and then see `None`.
+    pub fn close(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.closed = true;
+        drop(st);
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+}
+
+/// One entry of the measurement ledger: what was measured, in which
+/// submission slot, and what the hardware said.
+#[derive(Debug, Clone)]
+pub struct MeasureRecord {
+    /// Submission index within the round (drain order key).
+    pub slot: usize,
+    /// Latency in seconds; `None` = rejected by the hardware validator.
+    pub latency_s: Option<f64>,
+}
+
+/// Thread-safe wrapper around a `Measurer`: serializes access behind a
+/// mutex and keeps a slot-tagged ledger of every measurement taken
+/// through the pipeline entry point ([`Self::measure`]) — the ledger is
+/// how the measurement worker hands results back in submission order.
+/// The wrapped oracle stays free to be single-threaded (PJRT clients,
+/// shared simulators); concurrency happens in the pipeline around it.
+pub struct SharedMeasurer<'a> {
+    inner: Mutex<&'a mut dyn Measurer>,
+    ledger: Mutex<Vec<MeasureRecord>>,
+}
+
+impl<'a> SharedMeasurer<'a> {
+    pub fn new(inner: &'a mut dyn Measurer) -> SharedMeasurer<'a> {
+        SharedMeasurer {
+            inner: Mutex::new(inner),
+            ledger: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Measure under the lock and record the outcome in the ledger.
+    pub fn measure(&self, slot: usize, prog: &Program) -> Option<f64> {
+        let latency_s = self.inner.lock().unwrap().measure(prog);
+        self.ledger.lock().unwrap().push(MeasureRecord { slot, latency_s });
+        latency_s
+    }
+
+    pub fn count(&self) -> usize {
+        self.inner.lock().unwrap().count()
+    }
+
+    /// Take the accumulated ledger (clears it).
+    pub fn take_ledger(&self) -> Vec<MeasureRecord> {
+        std::mem::take(&mut self.ledger.lock().unwrap())
+    }
+}
+
+/// Adapter so a `&SharedMeasurer` can be handed to APIs that expect an
+/// exclusive `&mut dyn Measurer` (each thread makes its own reference).
+/// Goes straight to the wrapped oracle without touching the ledger — the
+/// ledger is the measurement pipeline's slot-ordered result channel, and
+/// adapter calls (e.g. task-scheduler searches sharing one oracle) have
+/// no slot to record.
+impl Measurer for &SharedMeasurer<'_> {
+    fn measure(&mut self, prog: &Program) -> Option<f64> {
+        self.inner.lock().unwrap().measure(prog)
+    }
+
+    fn count(&self) -> usize {
+        SharedMeasurer::count(*self)
+    }
+}
+
+/// Map `f` over owned `items` on up to `threads` OS threads, returning
+/// results in item order. With `threads <= 1` (or one item) this runs
+/// inline with no thread spawned — the serial reference path that the
+/// determinism tests compare against.
+pub fn parallel_map<T, R, F>(items: Vec<T>, threads: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(usize, T) -> R + Sync,
+{
+    let n = items.len();
+    if threads <= 1 || n <= 1 {
+        return items.into_iter().enumerate().map(|(i, x)| f(i, x)).collect();
+    }
+    let slots: Vec<Mutex<Option<T>>> = items.into_iter().map(|x| Mutex::new(Some(x))).collect();
+    let results: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..threads.min(n) {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let item = slots[i].lock().unwrap().take().expect("item taken once");
+                let r = f(i, item);
+                *results[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    results
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("worker filled every slot"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let items: Vec<usize> = (0..37).collect();
+        let serial = parallel_map(items.clone(), 1, |i, x| i * 1000 + x * x);
+        let parallel = parallel_map(items, 4, |i, x| i * 1000 + x * x);
+        assert_eq!(serial, parallel);
+    }
+
+    #[test]
+    fn parallel_map_runs_every_item_once() {
+        let calls = AtomicUsize::new(0);
+        let out = parallel_map((0..64).collect::<Vec<i32>>(), 8, |_, x| {
+            calls.fetch_add(1, Ordering::Relaxed);
+            x + 1
+        });
+        assert_eq!(calls.load(Ordering::Relaxed), 64);
+        assert_eq!(out, (1..=64).collect::<Vec<i32>>());
+    }
+
+    #[test]
+    fn bounded_queue_fifo_and_close() {
+        let q = BoundedQueue::new(4);
+        for i in 0..3 {
+            assert!(q.push(i));
+        }
+        assert_eq!(q.pop(), Some(0));
+        q.close();
+        assert!(!q.push(99));
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn bounded_queue_backpressure_across_threads() {
+        let q = BoundedQueue::new(2);
+        let total = 100usize;
+        let consumed = Mutex::new(Vec::new());
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                while let Some(x) = q.pop() {
+                    consumed.lock().unwrap().push(x);
+                }
+            });
+            s.spawn(|| {
+                while let Some(x) = q.pop() {
+                    consumed.lock().unwrap().push(x);
+                }
+            });
+            for i in 0..total {
+                assert!(q.push(i));
+            }
+            q.close();
+        });
+        let mut got = consumed.into_inner().unwrap();
+        got.sort_unstable();
+        assert_eq!(got, (0..total).collect::<Vec<usize>>());
+    }
+
+    #[test]
+    fn shared_measurer_ledger_records_slots() {
+        use crate::search::SimMeasurer;
+        use crate::sim::Target;
+        let mut inner = SimMeasurer::new(Target::cpu_avx512());
+        let shared = SharedMeasurer::new(&mut inner);
+        let prog = crate::workloads::matmul(1, 16, 16, 16);
+        assert!(shared.measure(7, &prog).is_some());
+        assert!(shared.measure(3, &prog).is_some());
+        // The `&mut dyn Measurer` adapter reaches the oracle but not the
+        // ledger (no slot to record).
+        let mut adapter: &SharedMeasurer = &shared;
+        assert!(Measurer::measure(&mut adapter, &prog).is_some());
+        let ledger = shared.take_ledger();
+        assert_eq!(ledger.len(), 2);
+        assert_eq!(ledger[0].slot, 7);
+        assert_eq!(ledger[1].slot, 3);
+        assert!(shared.take_ledger().is_empty());
+        assert_eq!(shared.count(), 3);
+    }
+}

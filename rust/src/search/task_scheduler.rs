@@ -3,9 +3,19 @@
 //! gradient-style allocation — each round goes to the task whose weighted
 //! best latency (occurrences x latency) dominates the end-to-end time, the
 //! same greedy criterion used by task schedulers in [43]-style systems.
+//!
+//! The warmup phase is embarrassingly parallel (every task runs exactly
+//! one round with its own cost model and design space), so it executes
+//! across worker threads against a [`SharedMeasurer`]; results merge in
+//! task order, keeping the schedule deterministic. Gradient rounds are
+//! inherently sequential — each allocation decision depends on all
+//! results so far — and stay on the coordinator, but the searches they
+//! launch still parallelize internally (chain parallelism + the
+//! measurement pipeline).
 
 use crate::cost_model::GbtCostModel;
 use crate::search::evolutionary::{EvolutionarySearch, SearchConfig, TuneResult};
+use crate::search::parallel::{parallel_map, SharedMeasurer};
 use crate::search::Measurer;
 use crate::space::SpaceComposer;
 use crate::tir::Program;
@@ -43,6 +53,17 @@ impl TaskScheduler {
         }
     }
 
+    /// Round config for a trial budget: tail rounds with small budgets
+    /// scale the population down so fixed per-round costs stay
+    /// proportional to the trials spent.
+    fn round_cfg(&self, trials: usize, threads: usize) -> SearchConfig {
+        let mut cfg = self.cfg.clone();
+        cfg.num_trials = trials;
+        cfg.population = cfg.population.min((trials * 6).max(8));
+        cfg.threads = threads;
+        cfg
+    }
+
     /// Tune all tasks within a total trial budget; returns per-task results
     /// in task order.
     pub fn tune_tasks(
@@ -54,7 +75,7 @@ impl TaskScheduler {
         seed: u64,
     ) -> Vec<TuneResult> {
         assert!(!tasks.is_empty());
-        let mut results: Vec<Option<TuneResult>> = vec![None; tasks.len()];
+        let threads = self.cfg.resolved_threads();
         let mut models: Vec<GbtCostModel> = tasks.iter().map(|_| GbtCostModel::new()).collect();
         // Design spaces generated ONCE per task; later rounds re-execute
         // the recorded traces (§4 execution tracing) instead of re-running
@@ -69,60 +90,81 @@ impl TaskScheduler {
                     .collect()
             })
             .collect();
-        let mut spent = 0usize;
-        // Warmup: one round each, round-robin, with the full fair share
-        // (capped by round_trials): matching the per-task baseline's round
-        // structure keeps the scheduler's fixed costs per measurement at
-        // parity (§Perf / Table 1); any budget beyond `round_trials` per
-        // task flows into gradient rounds on the weighted-worst tasks.
+
+        // Warmup: one round each, with the full fair share (capped by
+        // round_trials): matching the per-task baseline's round structure
+        // keeps the scheduler's fixed costs per measurement at parity
+        // (§Perf / Table 1); any budget beyond `round_trials` per task
+        // flows into gradient rounds on the weighted-worst tasks. All
+        // warmup rounds run concurrently — inner searches drop to one
+        // thread each so the machine is shared across tasks, and each
+        // task's result is a pure function of (task, seed).
         let warmup_trials = (total_trials / tasks.len()).clamp(1, self.round_trials);
-        let order: Vec<usize> = (0..tasks.len()).collect();
-        let mut round = 0usize;
-        while spent < total_trials || round < tasks.len() {
-            let warmup = round < tasks.len();
-            let ti = if warmup || self.allocation == Allocation::RoundRobin {
-                order[round % tasks.len()]
+        let shared = SharedMeasurer::new(measurer);
+        let items: Vec<(usize, GbtCostModel)> = models.drain(..).enumerate().collect();
+        let warmed: Vec<(TuneResult, GbtCostModel)> =
+            parallel_map(items, threads, |_, (ti, mut model)| {
+                // Split the thread budget across concurrent tasks; the
+                // inner search is thread-count-invariant, so this only
+                // affects wall-clock.
+                let inner_threads = (threads / tasks.len()).max(1);
+                let search = EvolutionarySearch::new(self.round_cfg(warmup_trials, inner_threads));
+                let mut local: &SharedMeasurer = &shared;
+                let r = search.tune_with_designs_warm(
+                    &tasks[ti].prog,
+                    &designs[ti],
+                    &[],
+                    &mut model,
+                    &mut local,
+                    seed.wrapping_add(ti as u64 * 7919),
+                );
+                (r, model)
+            });
+        let mut results: Vec<Option<TuneResult>> = Vec::with_capacity(tasks.len());
+        for (r, model) in warmed {
+            models.push(model);
+            results.push(Some(r));
+        }
+        let mut spent: usize = results
+            .iter()
+            .map(|r| r.as_ref().map(|r| r.trials.max(1)).unwrap_or(0))
+            .sum();
+
+        // Allocation rounds: sequential greedy (or round-robin) refinement
+        // until the budget is exhausted.
+        let mut round = tasks.len();
+        while spent < total_trials {
+            let ti = if self.allocation == Allocation::RoundRobin {
+                round % tasks.len()
             } else {
                 // Greedy: largest weighted best-latency.
-                *order
-                    .iter()
-                    .max_by(|&&a, &&b| {
-                        let la = results[a]
-                            .as_ref()
-                            .map(|r| r.best_latency_s * tasks[a].weight as f64)
-                            .unwrap_or(f64::INFINITY);
-                        let lb = results[b]
-                            .as_ref()
-                            .map(|r| r.best_latency_s * tasks[b].weight as f64)
-                            .unwrap_or(f64::INFINITY);
-                        la.partial_cmp(&lb).unwrap()
+                (0..tasks.len())
+                    .max_by(|&a, &b| {
+                        let w = |i: usize| {
+                            results[i]
+                                .as_ref()
+                                .map(|r| r.best_latency_s * tasks[i].weight as f64)
+                                .unwrap_or(f64::INFINITY)
+                        };
+                        w(a).partial_cmp(&w(b)).unwrap()
                     })
                     .unwrap()
             };
-            let budget_left = total_trials.saturating_sub(spent);
-            let trials = if warmup {
-                warmup_trials.min(budget_left.max(1))
-            } else {
-                self.round_trials.min(budget_left)
-            };
-            let mut cfg = self.cfg.clone();
-            cfg.num_trials = trials;
-            // Tail rounds with small budgets scale the population down so
-            // fixed per-round costs stay proportional to the trials spent.
-            cfg.population = cfg.population.min((trials * 6).max(8));
-            let search = EvolutionarySearch::new(cfg);
+            let trials = self.round_trials.min(total_trials - spent);
+            let search = EvolutionarySearch::new(self.round_cfg(trials, self.cfg.threads));
             // Warm-start with the task's best trace so later rounds refine
             // rather than restart from scratch.
             let warm: Vec<crate::trace::Trace> = results[ti]
                 .iter()
                 .map(|r| r.best_trace.clone())
                 .collect();
+            let mut local: &SharedMeasurer = &shared;
             let r = search.tune_with_designs_warm(
                 &tasks[ti].prog,
                 &designs[ti],
                 &warm,
                 &mut models[ti],
-                measurer,
+                &mut local,
                 seed.wrapping_add(round as u64 * 7919),
             );
             spent += r.trials.max(1);
@@ -213,4 +255,7 @@ mod tests {
         let results = ts.tune_tasks(&tasks, &composer, &mut measurer, 96, 1);
         assert!(results[0].trials >= results[1].trials);
     }
+
+    // Thread-count determinism for the scheduler is covered by
+    // rust/tests/determinism.rs::task_scheduler_identical_across_thread_counts.
 }

@@ -1,0 +1,92 @@
+//! Minimal error type (no `anyhow` in the offline image): a boxed message
+//! with optional context frames, used by the runtime layer and anything
+//! else that needs fallible I/O-ish APIs.
+
+use std::fmt;
+
+/// A string-message error with context frames, innermost last.
+#[derive(Debug, Clone)]
+pub struct Error {
+    frames: Vec<String>,
+}
+
+/// Crate-local result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl Error {
+    pub fn msg(m: impl Into<String>) -> Error {
+        Error { frames: vec![m.into()] }
+    }
+
+    /// Wrap with an outer context frame.
+    pub fn context(mut self, c: impl Into<String>) -> Error {
+        self.frames.push(c.into());
+        self
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for (i, frame) in self.frames.iter().rev().enumerate() {
+            if i > 0 {
+                write!(f, ": ")?;
+            }
+            write!(f, "{frame}")?;
+        }
+        Ok(())
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<String> for Error {
+    fn from(s: String) -> Error {
+        Error::msg(s)
+    }
+}
+
+impl From<&str> for Error {
+    fn from(s: &str) -> Error {
+        Error::msg(s)
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Error {
+        Error::msg(e.to_string())
+    }
+}
+
+/// Add context to any displayable error carried by a `Result`.
+pub trait Context<T> {
+    fn with_context(self, f: impl FnOnce() -> String) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn with_context(self, f: impl FnOnce() -> String) -> Result<T> {
+        self.map_err(|e| Error::msg(e.to_string()).context(f()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_orders_context_outermost_first() {
+        let e = Error::msg("root cause").context("loading file");
+        assert_eq!(e.to_string(), "loading file: root cause");
+    }
+
+    #[test]
+    fn context_trait_wraps_io_errors() {
+        let r: std::result::Result<(), std::io::Error> = Err(std::io::Error::new(
+            std::io::ErrorKind::NotFound,
+            "missing",
+        ));
+        let e = r.with_context(|| "opening artifact".into()).unwrap_err();
+        let s = e.to_string();
+        assert!(s.starts_with("opening artifact"), "{s}");
+        assert!(s.contains("missing"), "{s}");
+    }
+}

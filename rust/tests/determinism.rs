@@ -1,0 +1,140 @@
+//! The parallel pipeline's determinism contract: the OS-thread count is
+//! an execution knob, never an input to the search. `(seed, threads=1)`
+//! and `(seed, threads=N)` must produce bit-identical tuning outcomes —
+//! best trace, best latency, trial count, and the full tuning curve.
+
+use metaschedule::cost_model::GbtCostModel;
+use metaschedule::search::{EvolutionarySearch, SearchConfig, SimMeasurer, TaskScheduler};
+use metaschedule::sim::Target;
+use metaschedule::space::SpaceComposer;
+use metaschedule::tir::structural_hash;
+use metaschedule::trace::serde::trace_to_text;
+use metaschedule::workloads;
+
+fn cfg(trials: usize, threads: usize) -> SearchConfig {
+    SearchConfig {
+        population: 24,
+        generations: 3,
+        num_trials: trials,
+        measure_batch: 8,
+        threads,
+        ..SearchConfig::default()
+    }
+}
+
+#[test]
+fn matmul_search_identical_across_thread_counts() {
+    let target = Target::cpu_avx512();
+    let prog = workloads::matmul(1, 128, 128, 128);
+    let composer = SpaceComposer::generic(target.clone());
+    let run = |threads: usize| {
+        let mut model = GbtCostModel::new();
+        let mut measurer = SimMeasurer::new(target.clone());
+        EvolutionarySearch::new(cfg(48, threads)).tune(
+            &prog,
+            &composer,
+            &mut model,
+            &mut measurer,
+            42,
+        )
+    };
+    let serial = run(1);
+    for threads in [2, 4] {
+        let parallel = run(threads);
+        assert_eq!(
+            serial.best_latency_s, parallel.best_latency_s,
+            "latency diverged at {threads} threads"
+        );
+        assert_eq!(
+            structural_hash(&serial.best_prog),
+            structural_hash(&parallel.best_prog),
+            "best program diverged at {threads} threads"
+        );
+        assert_eq!(
+            trace_to_text(&serial.best_trace),
+            trace_to_text(&parallel.best_trace),
+            "best trace diverged at {threads} threads"
+        );
+        assert_eq!(serial.trials, parallel.trials);
+        assert_eq!(serial.curve, parallel.curve, "curve diverged at {threads} threads");
+    }
+}
+
+#[test]
+fn gpu_space_identical_across_thread_counts() {
+    // Same contract on the GPU design space (thread-binding decisions in
+    // the traces, different mutation surface).
+    let target = Target::gpu();
+    let prog = workloads::matmul(1, 128, 128, 128);
+    let composer = SpaceComposer::generic(target.clone());
+    let run = |threads: usize| {
+        let mut model = GbtCostModel::new();
+        let mut measurer = SimMeasurer::new(target.clone());
+        EvolutionarySearch::new(cfg(32, threads)).tune(
+            &prog,
+            &composer,
+            &mut model,
+            &mut measurer,
+            7,
+        )
+    };
+    let a = run(1);
+    let b = run(4);
+    assert_eq!(a.best_latency_s, b.best_latency_s);
+    assert_eq!(a.curve, b.curve);
+}
+
+#[test]
+fn task_scheduler_identical_across_thread_counts() {
+    // Warmup rounds run task-parallel; merged results must match the
+    // serial schedule, per task, including trial accounting.
+    let target = Target::cpu_avx512();
+    let composer = SpaceComposer::generic(target.clone());
+    let tasks = vec![
+        metaschedule::search::Task {
+            name: "gmm".into(),
+            prog: workloads::matmul(1, 128, 128, 128),
+            weight: 3,
+        },
+        metaschedule::search::Task {
+            name: "sfm".into(),
+            prog: workloads::softmax(1, 128, 128),
+            weight: 1,
+        },
+    ];
+    let run = |threads: usize| {
+        let mut measurer = SimMeasurer::new(target.clone());
+        let ts = TaskScheduler::new(cfg(0, threads));
+        ts.tune_tasks(&tasks, &composer, &mut measurer, 64, 11)
+    };
+    let serial = run(1);
+    let parallel = run(4);
+    assert_eq!(serial.len(), parallel.len());
+    for (a, b) in serial.iter().zip(&parallel) {
+        assert_eq!(a.best_latency_s, b.best_latency_s, "task {} diverged", a.task);
+        assert_eq!(a.trials, b.trials);
+        assert_eq!(
+            structural_hash(&a.best_prog),
+            structural_hash(&b.best_prog)
+        );
+    }
+}
+
+#[test]
+fn repeated_runs_are_reproducible() {
+    // Same seed, same thread count, run twice: byte-identical output (no
+    // hidden global state, no time dependence).
+    let target = Target::cpu_avx512();
+    let prog = workloads::fused_dense(64, 128, 64);
+    let composer = SpaceComposer::generic(target.clone());
+    let run = || {
+        let mut model = GbtCostModel::new();
+        let mut measurer = SimMeasurer::new(target.clone());
+        EvolutionarySearch::new(cfg(32, 4)).tune(&prog, &composer, &mut model, &mut measurer, 5)
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.best_latency_s, b.best_latency_s);
+    assert_eq!(a.curve, b.curve);
+    assert_eq!(trace_to_text(&a.best_trace), trace_to_text(&b.best_trace));
+}

@@ -149,7 +149,7 @@ fn baselines_and_metaschedule_rank_sanely_on_gmm() {
         .tune(&prog, &target, &mut m, 1)
         .best_latency_s;
     let mut m = SimMeasurer::new(target.clone());
-    let ansor = Ansor { num_trials: trials }
+    let ansor = Ansor { num_trials: trials, threads: 0 }
         .tune(&prog, &target, &mut m, 1)
         .best_latency_s;
     let composer = SpaceComposer::generic(target.clone());

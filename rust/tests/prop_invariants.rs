@@ -334,6 +334,44 @@ fn prop_perfect_tile_enumeration_sound() {
 }
 
 #[test]
+fn prop_chain_split_rngs_never_collide() {
+    // The parallel search derives one RNG stream per (round, chain, kind)
+    // from the root seed. For any seed, sibling streams must not collide:
+    // no two of the first chains' generators may share any prefix of
+    // their first 1k draws (a collision would mean two chains exploring
+    // identical candidates — silent loss of population diversity).
+    check(
+        cfg(10),
+        |rng| rng.next_u64(),
+        |&seed| {
+            const STREAMS: u64 = 8;
+            const DRAWS: usize = 1000;
+            let mut streams: Vec<Vec<u64>> = Vec::new();
+            for c in 0..STREAMS {
+                let mut r = Rng::for_stream(seed, c);
+                streams.push((0..DRAWS).map(|_| r.next_u64()).collect());
+            }
+            for a in 0..streams.len() {
+                for b in (a + 1)..streams.len() {
+                    // Identical draw at the same position = the streams
+                    // entered lockstep; forbid any overlap at all beyond
+                    // chance (u64 draws colliding by chance is ~0).
+                    let collisions = streams[a]
+                        .iter()
+                        .zip(&streams[b])
+                        .filter(|(x, y)| x == y)
+                        .count();
+                    if collisions != 0 {
+                        return false;
+                    }
+                }
+            }
+            true
+        },
+    );
+}
+
+#[test]
 fn prop_vendor_latency_scale_invariance() {
     // Vendor model: scaling a GEMM's flops scales its compute-bound
     // latency roughly linearly (sanity of the roofline form).
