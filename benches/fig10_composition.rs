@@ -15,6 +15,7 @@ fn main() {
         trials: args.flag_usize("trials", 48),
         seed: args.flag_u64("seed", 42),
         threads: args.flag_usize("threads", 0),
+        db_path: args.flag("db").map(String::from),
     };
     let a = fig10::run_10a(&cfg);
     a.print();

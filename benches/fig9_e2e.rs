@@ -16,6 +16,7 @@ fn main() {
         trials: args.flag_usize("trials", 64),
         seed: args.flag_u64("seed", 42),
         threads: args.flag_usize("threads", 0),
+        db_path: args.flag("db").map(String::from),
     };
     for target in [Target::cpu_avx512(), Target::gpu()] {
         let report = fig9::run(&target, &cfg, None);

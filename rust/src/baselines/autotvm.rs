@@ -250,6 +250,7 @@ impl AutoTvm {
             best_prog: best_sch.prog,
             trials,
             curve,
+            warm_records: 0,
         }
     }
 }

@@ -1,0 +1,253 @@
+//! Append-only JSONL persistence: one JSON object per line, either a
+//! workload registration (`kind: "workload"`) or a tuning record
+//! (`kind: "record"`, trace embedded in the [`crate::trace::serde`] line
+//! format). Opening a file replays every line into an [`InMemoryDb`]
+//! index; commits append + flush synchronously so a killed run is
+//! resumable from everything it measured. Line order is registration/
+//! commit order — re-opening reproduces the exact iteration order the
+//! writing process saw, which is what keeps warm-started runs
+//! deterministic.
+
+use std::fs::{File, OpenOptions};
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+use crate::db::memory::InMemoryDb;
+use crate::db::record::TuningRecord;
+use crate::db::{Database, WorkloadEntry, WorkloadId};
+use crate::util::json::Json;
+
+/// File-backed tuning database (`--db path.jsonl`).
+pub struct JsonFileDb {
+    path: PathBuf,
+    file: File,
+    mem: InMemoryDb,
+}
+
+impl JsonFileDb {
+    /// Open (or create) a JSONL database file. Parent directories are
+    /// created; a corrupt line fails the whole open with its line number
+    /// rather than silently dropping history.
+    pub fn open(path: impl AsRef<Path>) -> Result<JsonFileDb, String> {
+        let path = path.as_ref().to_path_buf();
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir).map_err(|e| format!("mkdir {}: {e}", dir.display()))?;
+            }
+        }
+        let mut mem = InMemoryDb::new();
+        if path.exists() {
+            let text =
+                std::fs::read_to_string(&path).map_err(|e| format!("read {}: {e}", path.display()))?;
+            // Registered-workload count maintained inline: the bounds
+            // check runs once per record line and must not clone the
+            // registry each time.
+            let mut n_workloads = 0usize;
+            for (no, line) in text.lines().enumerate() {
+                let line = line.trim();
+                if line.is_empty() {
+                    continue;
+                }
+                let ctx = |e: String| format!("{}:{}: {e}", path.display(), no + 1);
+                let j = Json::parse(line).map_err(ctx)?;
+                match j.get("kind").and_then(Json::as_str) {
+                    Some("workload") => {
+                        let entry = WorkloadEntry::from_json(&j).map_err(ctx)?;
+                        mem.insert_entry(entry).map_err(ctx)?;
+                        n_workloads += 1;
+                    }
+                    Some("record") => {
+                        let rec = TuningRecord::from_json(&j).map_err(ctx)?;
+                        if rec.workload >= n_workloads {
+                            return Err(ctx(format!("record references unknown workload {}", rec.workload)));
+                        }
+                        mem.commit_record(rec);
+                    }
+                    other => return Err(ctx(format!("unknown line kind {other:?}"))),
+                }
+            }
+        }
+        let file = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&path)
+            .map_err(|e| format!("open {}: {e}", path.display()))?;
+        Ok(JsonFileDb { path, file, mem })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Size of the backing file in bytes (0 if unreadable).
+    pub fn file_len(&self) -> u64 {
+        std::fs::metadata(&self.path).map(|m| m.len()).unwrap_or(0)
+    }
+
+    /// Append one JSON line and flush. Persistence failure is fatal: a
+    /// tuning run that silently stops recording would poison every
+    /// warm-started run after it.
+    fn append_line(&mut self, j: &Json) {
+        let line = j.to_string();
+        debug_assert!(!line.contains('\n'), "JSONL line must be newline-free");
+        writeln!(self.file, "{line}")
+            .and_then(|()| self.file.flush())
+            .unwrap_or_else(|e| panic!("tuning db append to {} failed: {e}", self.path.display()));
+    }
+}
+
+impl Database for JsonFileDb {
+    fn register_workload(&mut self, name: &str, shash: u64, target: &str) -> WorkloadId {
+        if let Some(id) = self.mem.find_workload(shash, target) {
+            return id;
+        }
+        let id = self.mem.register_workload(name, shash, target);
+        let entry = WorkloadEntry {
+            id,
+            name: name.to_string(),
+            shash,
+            target: target.to_string(),
+        };
+        self.append_line(&entry.to_json());
+        id
+    }
+
+    fn find_workload(&self, shash: u64, target: &str) -> Option<WorkloadId> {
+        self.mem.find_workload(shash, target)
+    }
+
+    fn workload_entries(&self) -> Vec<WorkloadEntry> {
+        self.mem.workload_entries()
+    }
+
+    fn commit_record(&mut self, rec: TuningRecord) {
+        self.append_line(&rec.to_json());
+        self.mem.commit_record(rec);
+    }
+
+    fn records_for(&self, workload: WorkloadId) -> Vec<TuningRecord> {
+        self.mem.records_for(workload)
+    }
+
+    fn candidate_hashes(&self, workload: WorkloadId) -> Vec<u64> {
+        self.mem.candidate_hashes(workload)
+    }
+
+    fn num_records(&self) -> usize {
+        self.mem.num_records()
+    }
+
+    fn has_candidate(&self, workload: WorkloadId, cand_hash: u64) -> bool {
+        self.mem.has_candidate(workload, cand_hash)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{Inst, Trace};
+
+    /// Unique temp path per test (process id + name), cleaned up by Guard.
+    fn tmp(name: &str) -> (PathBuf, Guard) {
+        let p = std::env::temp_dir().join(format!("ms-dbtest-{}-{name}.jsonl", std::process::id()));
+        let _ = std::fs::remove_file(&p);
+        (p.clone(), Guard(p))
+    }
+
+    struct Guard(PathBuf);
+    impl Drop for Guard {
+        fn drop(&mut self) {
+            let _ = std::fs::remove_file(&self.0);
+        }
+    }
+
+    fn rec(workload: WorkloadId, cand: u64, lat: Option<f64>) -> TuningRecord {
+        TuningRecord {
+            workload,
+            trace: Trace {
+                insts: vec![Inst::GetBlock {
+                    name: "blk with space".into(),
+                    out: 0,
+                }],
+            },
+            latencies: lat.into_iter().collect(),
+            target: "cpu".into(),
+            seed: 7,
+            round: 1,
+            cand_hash: cand,
+        }
+    }
+
+    #[test]
+    fn reopen_restores_registry_and_records() {
+        let (path, _g) = tmp("reopen");
+        {
+            let mut db = JsonFileDb::open(&path).unwrap();
+            let a = db.register_workload("A", 11, "cpu");
+            let b = db.register_workload("B", 22, "gpu");
+            db.commit_record(rec(a, 1, Some(3.0)));
+            db.commit_record(rec(b, 2, Some(1.0)));
+            db.commit_record(rec(a, 3, None));
+        }
+        let db = JsonFileDb::open(&path).unwrap();
+        assert_eq!(db.workload_entries().len(), 2);
+        assert_eq!(db.num_records(), 3);
+        assert_eq!(db.find_workload(11, "cpu"), Some(0));
+        assert_eq!(db.candidate_hashes(0), vec![1, 3]);
+        assert_eq!(db.best_latency(0), Some(3.0));
+        assert_eq!(db.best_latency(1), Some(1.0));
+        assert!(db.has_candidate(0, 3), "failed candidate persisted for dedup");
+    }
+
+    #[test]
+    fn appends_accumulate_across_opens() {
+        let (path, _g) = tmp("accumulate");
+        {
+            let mut db = JsonFileDb::open(&path).unwrap();
+            let a = db.register_workload("A", 5, "cpu");
+            db.commit_record(rec(a, 1, Some(2.0)));
+        }
+        {
+            let mut db = JsonFileDb::open(&path).unwrap();
+            // Re-registration must not duplicate the registry line.
+            let a = db.register_workload("A", 5, "cpu");
+            assert_eq!(a, 0);
+            db.commit_record(rec(a, 2, Some(1.5)));
+        }
+        let db = JsonFileDb::open(&path).unwrap();
+        assert_eq!(db.workload_entries().len(), 1);
+        assert_eq!(db.candidate_hashes(0), vec![1, 2]);
+        assert_eq!(db.best_latency(0), Some(1.5));
+    }
+
+    #[test]
+    fn corrupt_line_fails_open_with_location() {
+        let (path, _g) = tmp("corrupt");
+        let good = "{\"kind\":\"workload\",\"id\":0,\"name\":\"A\",\"shash\":\"05\",\"target\":\"cpu\"}";
+        std::fs::write(&path, format!("{good}\nnot json\n")).unwrap();
+        let err = JsonFileDb::open(&path).unwrap_err();
+        assert!(err.contains(":2:"), "error should name the line: {err}");
+    }
+
+    #[test]
+    fn record_for_unknown_workload_fails_open() {
+        let (path, _g) = tmp("orphan");
+        let r = rec(4, 1, Some(1.0));
+        std::fs::write(&path, format!("{}\n", r.to_json().to_string())).unwrap();
+        let err = JsonFileDb::open(&path).unwrap_err();
+        assert!(err.contains("unknown workload"), "{err}");
+    }
+
+    #[test]
+    fn blank_lines_tolerated() {
+        let (path, _g) = tmp("blank");
+        {
+            let mut db = JsonFileDb::open(&path).unwrap();
+            db.register_workload("A", 9, "cpu");
+        }
+        let mut text = std::fs::read_to_string(&path).unwrap();
+        text.push('\n');
+        std::fs::write(&path, text).unwrap();
+        assert_eq!(JsonFileDb::open(&path).unwrap().workload_entries().len(), 1);
+    }
+}

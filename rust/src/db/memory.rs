@@ -1,0 +1,165 @@
+//! Process-local database backend. Also the index that file-backed
+//! backends rebuild on open, so everything here is deterministic by
+//! construction: entries and records live in `Vec`s in arrival order and
+//! the hash maps are lookup accelerators only — never iterated.
+
+use std::collections::{HashMap, HashSet};
+
+use crate::db::record::TuningRecord;
+use crate::db::{Database, WorkloadEntry, WorkloadId};
+
+/// In-memory tuning database (the default when no `--db` file is given:
+/// every run starts cold and the records die with the process).
+#[derive(Debug, Clone, Default)]
+pub struct InMemoryDb {
+    entries: Vec<WorkloadEntry>,
+    /// (shash, target) -> id lookup accelerator.
+    by_key: HashMap<(u64, String), WorkloadId>,
+    records: Vec<TuningRecord>,
+    /// (workload, cand_hash) membership accelerator for dedup queries.
+    cand_index: HashSet<(WorkloadId, u64)>,
+}
+
+impl InMemoryDb {
+    pub fn new() -> InMemoryDb {
+        InMemoryDb::default()
+    }
+
+    /// Rebuild-path insert of an already-numbered entry (file load). The
+    /// id must match registration order; duplicate keys are rejected.
+    pub(crate) fn insert_entry(&mut self, e: WorkloadEntry) -> Result<(), String> {
+        if e.id != self.entries.len() {
+            return Err(format!("workload id {} out of order (expected {})", e.id, self.entries.len()));
+        }
+        let key = (e.shash, e.target.clone());
+        if self.by_key.contains_key(&key) {
+            return Err(format!("duplicate workload ({:016x}, {})", e.shash, e.target));
+        }
+        self.by_key.insert(key, e.id);
+        self.entries.push(e);
+        Ok(())
+    }
+}
+
+impl Database for InMemoryDb {
+    fn register_workload(&mut self, name: &str, shash: u64, target: &str) -> WorkloadId {
+        if let Some(&id) = self.by_key.get(&(shash, target.to_string())) {
+            return id;
+        }
+        let id = self.entries.len();
+        let entry = WorkloadEntry {
+            id,
+            name: name.to_string(),
+            shash,
+            target: target.to_string(),
+        };
+        self.by_key.insert((shash, target.to_string()), id);
+        self.entries.push(entry);
+        id
+    }
+
+    fn find_workload(&self, shash: u64, target: &str) -> Option<WorkloadId> {
+        self.by_key.get(&(shash, target.to_string())).copied()
+    }
+
+    fn workload_entries(&self) -> Vec<WorkloadEntry> {
+        self.entries.clone()
+    }
+
+    fn commit_record(&mut self, rec: TuningRecord) {
+        assert!(rec.workload < self.entries.len(), "record for unregistered workload {}", rec.workload);
+        self.cand_index.insert((rec.workload, rec.cand_hash));
+        self.records.push(rec);
+    }
+
+    fn records_for(&self, workload: WorkloadId) -> Vec<TuningRecord> {
+        self.records.iter().filter(|r| r.workload == workload).cloned().collect()
+    }
+
+    fn candidate_hashes(&self, workload: WorkloadId) -> Vec<u64> {
+        self.records.iter().filter(|r| r.workload == workload).map(|r| r.cand_hash).collect()
+    }
+
+    fn num_records(&self) -> usize {
+        self.records.len()
+    }
+
+    fn has_candidate(&self, workload: WorkloadId, cand_hash: u64) -> bool {
+        self.cand_index.contains(&(workload, cand_hash))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::Trace;
+
+    fn rec(workload: WorkloadId, cand: u64, lat: Option<f64>) -> TuningRecord {
+        TuningRecord {
+            workload,
+            trace: Trace { insts: vec![] },
+            latencies: lat.into_iter().collect(),
+            target: "cpu".into(),
+            seed: 0,
+            round: 0,
+            cand_hash: cand,
+        }
+    }
+
+    #[test]
+    fn registration_is_idempotent_and_ordered() {
+        let mut db = InMemoryDb::new();
+        let a = db.register_workload("A", 10, "cpu");
+        let b = db.register_workload("B", 20, "cpu");
+        let a2 = db.register_workload("A-renamed", 10, "cpu");
+        // Same hash, different target = a distinct workload.
+        let a_gpu = db.register_workload("A", 10, "gpu");
+        assert_eq!((a, b, a2), (0, 1, 0));
+        assert_eq!(a_gpu, 2);
+        let entries = db.workload_entries();
+        assert_eq!(entries.len(), 3);
+        assert_eq!(entries[0].name, "A", "first registration keeps its name");
+        assert_eq!(db.find_workload(10, "cpu"), Some(0));
+        assert_eq!(db.find_workload(10, "tpu"), None);
+    }
+
+    #[test]
+    fn records_partition_by_workload_in_commit_order() {
+        let mut db = InMemoryDb::new();
+        let a = db.register_workload("A", 1, "cpu");
+        let b = db.register_workload("B", 2, "cpu");
+        db.commit_record(rec(a, 100, Some(2.0)));
+        db.commit_record(rec(b, 200, Some(1.0)));
+        db.commit_record(rec(a, 101, None));
+        assert_eq!(db.num_records(), 3);
+        assert_eq!(db.candidate_hashes(a), vec![100, 101]);
+        assert_eq!(db.candidate_hashes(b), vec![200]);
+        assert!(db.has_candidate(a, 101));
+        assert!(!db.has_candidate(b, 101));
+        assert_eq!(db.records_for(a).len(), 2);
+        assert_eq!(db.best_latency(a), Some(2.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "unregistered workload")]
+    fn committing_to_unregistered_workload_panics() {
+        let mut db = InMemoryDb::new();
+        db.commit_record(rec(0, 1, Some(1.0)));
+    }
+
+    #[test]
+    fn insert_entry_validates_order_and_duplicates() {
+        let mut db = InMemoryDb::new();
+        let e = |id: usize, shash: u64| WorkloadEntry {
+            id,
+            name: "w".into(),
+            shash,
+            target: "cpu".into(),
+        };
+        db.insert_entry(e(0, 1)).unwrap();
+        assert!(db.insert_entry(e(2, 2)).is_err(), "gap in ids");
+        assert!(db.insert_entry(e(1, 1)).is_err(), "duplicate key");
+        db.insert_entry(e(1, 2)).unwrap();
+        assert_eq!(db.workload_entries().len(), 2);
+    }
+}

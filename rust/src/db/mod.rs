@@ -1,0 +1,301 @@
+//! Persistent tuning-record database (the paper's §5 "database" box).
+//!
+//! MetaSchedule's learning-driven search is anchored by a record store
+//! that registers workloads, persists measured `(trace, latency)` pairs,
+//! and serves top-k queries back to the search and the cost model — the
+//! same role the record store plays in Ansor and the training-data
+//! pipeline of "Learning to Optimize Tensor Programs". This module is
+//! that store:
+//!
+//! - [`Database`] — the backend-agnostic API ([`register_workload`],
+//!   [`commit_record`], [`query_top_k`], [`best_latency`]).
+//! - [`InMemoryDb`] — process-local store (also the index every other
+//!   backend builds on).
+//! - [`JsonFileDb`] — append-only JSONL persistence via the zero-dep
+//!   [`crate::util::json`] value and the [`crate::trace::serde`] line
+//!   format; re-opening the file warm-starts the next run.
+//! - [`SharedDb`] — mutex adapter so task-parallel scheduler rounds can
+//!   commit through one handle.
+//! - [`pretrain_cost_model`] — replays committed records into training
+//!   samples so [`crate::cost_model::GbtCostModel`] starts round 1 fit.
+//!
+//! Iteration order everywhere is registration/commit order, never hash
+//! order, so warm-started runs stay bit-reproducible.
+//!
+//! [`register_workload`]: Database::register_workload
+//! [`commit_record`]: Database::commit_record
+//! [`query_top_k`]: Database::query_top_k
+//! [`best_latency`]: Database::best_latency
+
+pub mod json_file;
+pub mod memory;
+pub mod record;
+pub mod shared;
+pub mod stats;
+
+pub use json_file::JsonFileDb;
+pub use memory::InMemoryDb;
+pub use record::TuningRecord;
+pub use shared::SharedDb;
+pub use stats::{DbStats, WorkloadStats};
+
+use crate::cost_model::CostModel;
+use crate::tir::Program;
+use crate::util::json::Json;
+
+/// Index of a registered workload within a database (registration order).
+pub type WorkloadId = usize;
+
+/// One registry entry: a workload is identified by the structural hash of
+/// its base (unscheduled) program plus the target it is tuned for —
+/// records never transfer across targets implicitly (cross-target
+/// transfer is an explicit, future feature; see ROADMAP).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WorkloadEntry {
+    pub id: WorkloadId,
+    /// Human-readable name (task/program name at first registration).
+    pub name: String,
+    /// Structural hash of the base program.
+    pub shash: u64,
+    /// Target name the records were measured on.
+    pub target: String,
+}
+
+impl WorkloadEntry {
+    /// Serialize to the JSONL object (`kind: "workload"`).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("kind", Json::str("workload")),
+            ("id", Json::num(self.id as f64)),
+            ("name", Json::str(self.name.clone())),
+            ("shash", Json::str(format!("{:016x}", self.shash))),
+            ("target", Json::str(self.target.clone())),
+        ])
+    }
+
+    /// Parse back from a JSONL object.
+    pub fn from_json(j: &Json) -> Result<WorkloadEntry, String> {
+        if j.get("kind").and_then(Json::as_str) != Some("workload") {
+            return Err("not a workload object".into());
+        }
+        let get_str = |k: &str| {
+            j.get(k).and_then(Json::as_str).ok_or_else(|| format!("missing string field {k}"))
+        };
+        let id = record::usize_field(j, "id")?;
+        let shash =
+            u64::from_str_radix(get_str("shash")?, 16).map_err(|e| format!("shash: {e}"))?;
+        Ok(WorkloadEntry {
+            id,
+            name: get_str("name")?.to_string(),
+            shash,
+            target: get_str("target")?.to_string(),
+        })
+    }
+}
+
+/// A tuning-record database. `Send` (not `Sync`): concurrent access goes
+/// through [`SharedDb`], mirroring how [`crate::search::parallel::SharedMeasurer`]
+/// shares the measurement oracle.
+///
+/// Query methods return owned values rather than borrows so the trait
+/// stays implementable by lock-guarded adapters (a `&[TuningRecord]`
+/// cannot escape a mutex guard); record counts here are small enough
+/// that the clones never show up in profiles.
+pub trait Database: Send {
+    /// Register (or find) the workload `(shash, target)`. Idempotent:
+    /// re-registration returns the existing id and keeps the first name.
+    fn register_workload(&mut self, name: &str, shash: u64, target: &str) -> WorkloadId;
+
+    /// Look up a workload id without registering.
+    fn find_workload(&self, shash: u64, target: &str) -> Option<WorkloadId>;
+
+    /// All registry entries, in registration order.
+    fn workload_entries(&self) -> Vec<WorkloadEntry>;
+
+    /// Append one record. Backends persist synchronously (a crashed run
+    /// must be resumable from everything it measured).
+    fn commit_record(&mut self, rec: TuningRecord);
+
+    /// All records for one workload, in commit order.
+    fn records_for(&self, workload: WorkloadId) -> Vec<TuningRecord>;
+
+    /// Structural hashes of every candidate ever committed (measured OR
+    /// failed) for the workload, in commit order — the search seeds its
+    /// dedup set from this.
+    fn candidate_hashes(&self, workload: WorkloadId) -> Vec<u64>;
+
+    /// Total committed records across all workloads.
+    fn num_records(&self) -> usize;
+
+    /// The `k` best successful records for a workload, ordered by
+    /// ascending best latency with commit order breaking ties (stable
+    /// sort), so the result is deterministic for a given file content.
+    fn query_top_k(&self, workload: WorkloadId, k: usize) -> Vec<TuningRecord> {
+        let mut recs: Vec<TuningRecord> =
+            self.records_for(workload).into_iter().filter(|r| !r.is_failed()).collect();
+        recs.sort_by(|a, b| {
+            let (Some(la), Some(lb)) = (a.best_latency(), b.best_latency()) else {
+                unreachable!("failed records filtered above");
+            };
+            la.total_cmp(&lb)
+        });
+        recs.truncate(k);
+        recs
+    }
+
+    /// Best latency on record for a workload (`None` = no successful
+    /// measurement yet).
+    fn best_latency(&self, workload: WorkloadId) -> Option<f64> {
+        self.query_top_k(workload, 1).first().and_then(TuningRecord::best_latency)
+    }
+
+    /// Whether a candidate (by structural hash) was already committed for
+    /// the workload.
+    fn has_candidate(&self, workload: WorkloadId, cand_hash: u64) -> bool {
+        self.candidate_hashes(workload).contains(&cand_hash)
+    }
+}
+
+/// Replay up to `limit` of a workload's best records against its base
+/// program and feed the `(program, latency)` pairs to the cost model as
+/// one training batch — so the model is fit *before* round 1 of a
+/// warm-started search instead of starting cold. Records whose traces no
+/// longer replay (e.g. after a schedule-primitive change) are skipped.
+/// Returns the number of samples fed.
+pub fn pretrain_cost_model(
+    model: &mut dyn CostModel,
+    db: &dyn Database,
+    workload: WorkloadId,
+    prog: &Program,
+    limit: usize,
+) -> usize {
+    let mut progs: Vec<Program> = Vec::new();
+    let mut lats: Vec<f64> = Vec::new();
+    for rec in db.query_top_k(workload, limit) {
+        let Some(lat) = rec.best_latency() else {
+            continue;
+        };
+        if let Ok(sch) = crate::trace::replay(&rec.trace, prog, 0) {
+            progs.push(sch.prog);
+            lats.push(lat);
+        }
+    }
+    if progs.is_empty() {
+        return 0;
+    }
+    let refs: Vec<&Program> = progs.iter().collect();
+    model.update(&refs, &lats);
+    progs.len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost_model::GbtCostModel;
+    use crate::search::{Measurer, SimMeasurer};
+    use crate::sim::Target;
+    use crate::space::SpaceComposer;
+    use crate::tir::structural_hash;
+    use crate::workloads;
+
+    #[test]
+    fn workload_entry_roundtrips_through_json() {
+        let e = WorkloadEntry {
+            id: 7,
+            name: "GMM odd name\n".into(),
+            shash: 0x0123_4567_89ab_cdef,
+            target: "gpu".into(),
+        };
+        let back = WorkloadEntry::from_json(&Json::parse(&e.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back, e);
+    }
+
+    #[test]
+    fn workload_entry_rejects_wrong_kind() {
+        let r = Json::parse("{\"kind\":\"record\"}").unwrap();
+        assert!(WorkloadEntry::from_json(&r).is_err());
+    }
+
+    /// Populate a db with a couple of real measured schedules for GMM.
+    fn seeded_db(prog: &crate::tir::Program, target: &Target, n: usize) -> (InMemoryDb, WorkloadId) {
+        let mut db = InMemoryDb::new();
+        let wid = db.register_workload(&prog.name, structural_hash(prog), target.name);
+        let composer = SpaceComposer::generic(target.clone());
+        let designs = composer.generate(prog, 1);
+        let mut measurer = SimMeasurer::new(target.clone());
+        let mut committed = 0;
+        for (i, d) in designs.iter().cycle().take(n * 20).enumerate() {
+            if committed >= n {
+                break;
+            }
+            let Ok(sch) = crate::trace::replay::replay_fresh(&d.trace, prog, 1000 + i as u64) else {
+                continue;
+            };
+            let lat = measurer.measure(&sch.prog);
+            db.commit_record(TuningRecord {
+                workload: wid,
+                trace: sch.trace.clone(),
+                latencies: lat.into_iter().collect(),
+                target: target.name.to_string(),
+                seed: 1,
+                round: i as u64,
+                cand_hash: structural_hash(&sch.prog),
+            });
+            committed += 1;
+        }
+        (db, wid)
+    }
+
+    #[test]
+    fn pretrain_fits_model_from_records() {
+        let target = Target::cpu_avx512();
+        let prog = workloads::matmul(1, 64, 64, 64);
+        let (db, wid) = seeded_db(&prog, &target, 8);
+        assert!(db.best_latency(wid).is_some());
+        let mut model = GbtCostModel::new();
+        let fed = pretrain_cost_model(&mut model, &db, wid, &prog, 64);
+        assert!(fed > 0, "no samples fed");
+        assert_eq!(model.n_samples(), fed);
+        // A fit model no longer returns the cold neutral score for every
+        // input (scores are -ln(latency), strictly positive here).
+        let preds = model.predict(&[&prog]);
+        assert!(preds[0] != 0.0, "model still cold after pretraining");
+    }
+
+    #[test]
+    fn pretrain_on_empty_workload_is_noop() {
+        let target = Target::cpu_avx512();
+        let prog = workloads::matmul(1, 32, 32, 32);
+        let mut db = InMemoryDb::new();
+        let wid = db.register_workload(&prog.name, structural_hash(&prog), target.name);
+        let mut model = GbtCostModel::new();
+        assert_eq!(pretrain_cost_model(&mut model, &db, wid, &prog, 64), 0);
+        assert_eq!(model.n_samples(), 0);
+    }
+
+    #[test]
+    fn query_top_k_orders_by_latency_and_skips_failures() {
+        let mut db = InMemoryDb::new();
+        let wid = db.register_workload("w", 1, "cpu");
+        let mk = |lats: Vec<f64>, round: u64| TuningRecord {
+            workload: wid,
+            trace: crate::trace::Trace { insts: vec![] },
+            latencies: lats,
+            target: "cpu".into(),
+            seed: 0,
+            round,
+            cand_hash: round,
+        };
+        db.commit_record(mk(vec![3.0], 0));
+        db.commit_record(mk(vec![], 1)); // failed
+        db.commit_record(mk(vec![1.0, 9.0], 2));
+        db.commit_record(mk(vec![2.0], 3));
+        let top = db.query_top_k(wid, 2);
+        assert_eq!(top.len(), 2);
+        assert_eq!(top[0].round, 2);
+        assert_eq!(top[1].round, 3);
+        assert_eq!(db.best_latency(wid), Some(1.0));
+        assert!(db.has_candidate(wid, 1), "failed candidates still dedup");
+        assert!(!db.has_candidate(wid, 99));
+    }
+}

@@ -1,0 +1,207 @@
+//! The unit of persistence: one measured candidate — its trace, measured
+//! latencies, and provenance — serialized as a single JSON object (one
+//! JSONL line in [`crate::db::JsonFileDb`]).
+//!
+//! Field conventions: 64-bit hashes are hex strings and seeds are decimal
+//! strings, because the zero-dep JSON value models numbers as `f64` and
+//! a `u64` does not round-trip through one.
+
+use crate::db::WorkloadId;
+use crate::trace::serde::{text_to_trace, trace_to_text};
+use crate::trace::Trace;
+use crate::util::json::Json;
+
+/// One tuning record: a candidate schedule (as its trace) measured for a
+/// registered workload. `latencies` is empty when the candidate was
+/// rejected by the hardware validator — failed candidates are kept so
+/// warm-started runs do not re-measure known-invalid schedules.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TuningRecord {
+    /// Id of the workload this record belongs to (see
+    /// [`crate::db::Database::register_workload`]).
+    pub workload: WorkloadId,
+    /// The candidate's execution trace (replays against the workload's
+    /// base program to reconstruct the scheduled program).
+    pub trace: Trace,
+    /// Measured latencies in seconds; empty = invalid on the target.
+    pub latencies: Vec<f64>,
+    /// Target the measurement ran on (e.g. `cpu-avx512`).
+    pub target: String,
+    /// Search seed that produced the candidate.
+    pub seed: u64,
+    /// Search round within that run.
+    pub round: u64,
+    /// Structural hash of the scheduled candidate program — the
+    /// cross-session deduplication key.
+    pub cand_hash: u64,
+}
+
+impl TuningRecord {
+    /// Best (minimum) measured latency; `None` for failed candidates.
+    pub fn best_latency(&self) -> Option<f64> {
+        self.latencies.iter().copied().reduce(f64::min)
+    }
+
+    /// Whether the candidate was rejected by the hardware validator.
+    pub fn is_failed(&self) -> bool {
+        self.latencies.is_empty()
+    }
+
+    /// Serialize to the JSONL object (`kind: "record"`). Non-finite
+    /// latencies are dropped here: the JSON writer would emit them as
+    /// `null`, and one such value must not make the whole file
+    /// unreadable (a record whose latencies all vanish reads back as a
+    /// failed candidate, which is the honest interpretation).
+    pub fn to_json(&self) -> Json {
+        let finite = self.latencies.iter().filter(|l| l.is_finite());
+        Json::obj(vec![
+            ("kind", Json::str("record")),
+            ("workload", Json::num(self.workload as f64)),
+            ("trace", Json::str(trace_to_text(&self.trace))),
+            ("latencies", Json::arr(finite.map(|l| Json::num(*l)))),
+            ("target", Json::str(self.target.clone())),
+            ("seed", Json::str(self.seed.to_string())),
+            ("round", Json::num(self.round as f64)),
+            ("cand", Json::str(format!("{:016x}", self.cand_hash))),
+        ])
+    }
+
+    /// Parse back from a JSONL object.
+    pub fn from_json(j: &Json) -> Result<TuningRecord, String> {
+        if j.get("kind").and_then(Json::as_str) != Some("record") {
+            return Err("not a record object".into());
+        }
+        let workload = usize_field(j, "workload")?;
+        let trace_text = str_field(j, "trace")?;
+        let trace = text_to_trace(trace_text).map_err(|e| format!("trace: {e}"))?;
+        // Tolerate non-numeric entries (e.g. a `null` written by an old
+        // build) by skipping them — refusing to open the whole file over
+        // one unusable sample would break resumability.
+        let latencies: Vec<f64> = j
+            .get("latencies")
+            .and_then(Json::as_arr)
+            .ok_or("missing latencies")?
+            .iter()
+            .filter_map(Json::as_f64)
+            .filter(|l| l.is_finite())
+            .collect();
+        let target = str_field(j, "target")?.to_string();
+        let seed = str_field(j, "seed")?.parse::<u64>().map_err(|e| format!("seed: {e}"))?;
+        let round = usize_field(j, "round")? as u64;
+        let cand_hash =
+            u64::from_str_radix(str_field(j, "cand")?, 16).map_err(|e| format!("cand: {e}"))?;
+        Ok(TuningRecord {
+            workload,
+            trace,
+            latencies,
+            target,
+            seed,
+            round,
+            cand_hash,
+        })
+    }
+}
+
+fn str_field<'a>(j: &'a Json, key: &str) -> Result<&'a str, String> {
+    j.get(key).and_then(Json::as_str).ok_or_else(|| format!("missing string field {key}"))
+}
+
+fn num_field(j: &Json, key: &str) -> Result<f64, String> {
+    j.get(key).and_then(Json::as_f64).ok_or_else(|| format!("missing numeric field {key}"))
+}
+
+/// A non-negative integer field. Validated rather than `as`-cast: a
+/// corrupt `-3` must fail the line (an unchecked cast saturates it to 0
+/// and silently misfiles the record into workload 0).
+pub(crate) fn usize_field(j: &Json, key: &str) -> Result<usize, String> {
+    let v = num_field(j, key)?;
+    if !v.is_finite() || v < 0.0 || v.fract() != 0.0 || v > usize::MAX as f64 {
+        return Err(format!("{key}: {v} is not a non-negative integer"));
+    }
+    Ok(v as usize)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::Inst;
+
+    fn sample_record() -> TuningRecord {
+        TuningRecord {
+            workload: 3,
+            trace: Trace {
+                insts: vec![
+                    Inst::GetBlock {
+                        name: "mat mul\nx".into(),
+                        out: 0,
+                    },
+                    Inst::Parallel { loop_rv: 1 },
+                ],
+            },
+            latencies: vec![1.25e-5, 1.5e-5],
+            target: "cpu-avx512".into(),
+            seed: u64::MAX - 7,
+            round: 12,
+            cand_hash: 0xdead_beef_cafe_f00d,
+        }
+    }
+
+    #[test]
+    fn record_roundtrips_through_json_line() {
+        let r = sample_record();
+        let line = r.to_json().to_string();
+        assert!(!line.contains('\n'), "JSONL line must be newline-free");
+        let back = TuningRecord::from_json(&Json::parse(&line).unwrap()).unwrap();
+        assert_eq!(back, r);
+    }
+
+    #[test]
+    fn failed_record_roundtrips_and_reports() {
+        let mut r = sample_record();
+        r.latencies.clear();
+        assert!(r.is_failed());
+        assert_eq!(r.best_latency(), None);
+        let back = TuningRecord::from_json(&Json::parse(&r.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back, r);
+    }
+
+    #[test]
+    fn best_latency_is_minimum() {
+        let r = sample_record();
+        assert_eq!(r.best_latency(), Some(1.25e-5));
+    }
+
+    #[test]
+    fn non_finite_latencies_never_brick_the_line() {
+        let mut r = sample_record();
+        r.latencies = vec![f64::INFINITY, 1.0, f64::NAN];
+        let line = r.to_json().to_string();
+        assert!(!line.contains("null"), "non-finite latency leaked into JSONL: {line}");
+        let back = TuningRecord::from_json(&Json::parse(&line).unwrap()).unwrap();
+        assert_eq!(back.latencies, vec![1.0]);
+        // Even a hand-written null entry parses (skipped), rather than
+        // failing the whole file.
+        let hostile = line.replace("[1]", "[null,1]");
+        let back2 = TuningRecord::from_json(&Json::parse(&hostile).unwrap()).unwrap();
+        assert_eq!(back2.latencies, vec![1.0]);
+    }
+
+    #[test]
+    fn from_json_rejects_malformed() {
+        assert!(TuningRecord::from_json(&Json::parse("{}").unwrap()).is_err());
+        let mut j = sample_record().to_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("trace".into(), Json::str("frobnicate x=1"));
+        }
+        assert!(TuningRecord::from_json(&j).is_err());
+        // Negative / fractional ids must error, not saturate to a valid
+        // workload and misfile the record.
+        for bad in [-3.0, 1.5, f64::NAN] {
+            let mut j = sample_record().to_json();
+            if let Json::Obj(m) = &mut j {
+                m.insert("workload".into(), Json::Num(bad));
+            }
+            assert!(TuningRecord::from_json(&j).is_err(), "workload {bad} accepted");
+        }
+    }
+}

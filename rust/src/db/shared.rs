@@ -1,0 +1,120 @@
+//! Mutex adapter sharing one database across the task scheduler's
+//! parallel warmup rounds — the same shape as
+//! [`crate::search::parallel::SharedMeasurer`]: the backend stays free to
+//! be single-threaded, each worker takes a `&SharedDb` and hands it to
+//! APIs expecting `&mut dyn Database`.
+//!
+//! Determinism: concurrent tasks interleave their commits in the global
+//! log, but every query the search makes ([`Database::records_for`],
+//! [`Database::candidate_hashes`], [`Database::query_top_k`]) filters to
+//! one workload, and each workload is only ever written by the one task
+//! that owns it — per-workload order is each task's own commit order
+//! regardless of thread count.
+
+use std::sync::Mutex;
+
+use crate::db::record::TuningRecord;
+use crate::db::{Database, WorkloadEntry, WorkloadId};
+
+/// Thread-safe wrapper around an exclusive database borrow.
+pub struct SharedDb<'a> {
+    inner: Mutex<&'a mut dyn Database>,
+}
+
+impl<'a> SharedDb<'a> {
+    pub fn new(inner: &'a mut dyn Database) -> SharedDb<'a> {
+        SharedDb {
+            inner: Mutex::new(inner),
+        }
+    }
+}
+
+/// Adapter so a `&SharedDb` can be handed to APIs that expect an
+/// exclusive `&mut dyn Database` (each thread makes its own reference).
+/// Every call takes the lock for exactly one backend operation; the
+/// provided-method defaults are overridden to forward whole queries so a
+/// top-k never interleaves with a concurrent commit mid-sort.
+impl Database for &SharedDb<'_> {
+    fn register_workload(&mut self, name: &str, shash: u64, target: &str) -> WorkloadId {
+        self.inner.lock().unwrap().register_workload(name, shash, target)
+    }
+
+    fn find_workload(&self, shash: u64, target: &str) -> Option<WorkloadId> {
+        self.inner.lock().unwrap().find_workload(shash, target)
+    }
+
+    fn workload_entries(&self) -> Vec<WorkloadEntry> {
+        self.inner.lock().unwrap().workload_entries()
+    }
+
+    fn commit_record(&mut self, rec: TuningRecord) {
+        self.inner.lock().unwrap().commit_record(rec);
+    }
+
+    fn records_for(&self, workload: WorkloadId) -> Vec<TuningRecord> {
+        self.inner.lock().unwrap().records_for(workload)
+    }
+
+    fn candidate_hashes(&self, workload: WorkloadId) -> Vec<u64> {
+        self.inner.lock().unwrap().candidate_hashes(workload)
+    }
+
+    fn num_records(&self) -> usize {
+        self.inner.lock().unwrap().num_records()
+    }
+
+    fn query_top_k(&self, workload: WorkloadId, k: usize) -> Vec<TuningRecord> {
+        self.inner.lock().unwrap().query_top_k(workload, k)
+    }
+
+    fn best_latency(&self, workload: WorkloadId) -> Option<f64> {
+        self.inner.lock().unwrap().best_latency(workload)
+    }
+
+    fn has_candidate(&self, workload: WorkloadId, cand_hash: u64) -> bool {
+        self.inner.lock().unwrap().has_candidate(workload, cand_hash)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::db::InMemoryDb;
+    use crate::trace::Trace;
+
+    #[test]
+    fn concurrent_commits_land_and_partition_cleanly() {
+        let mut db = InMemoryDb::new();
+        let a = db.register_workload("A", 1, "cpu");
+        let b = db.register_workload("B", 2, "cpu");
+        let base: &mut dyn Database = &mut db;
+        let shared = SharedDb::new(base);
+        std::thread::scope(|s| {
+            for (wid, offset) in [(a, 0u64), (b, 1000u64)] {
+                let shared = &shared;
+                s.spawn(move || {
+                    let mut local: &SharedDb = shared;
+                    for i in 0..50u64 {
+                        local.commit_record(TuningRecord {
+                            workload: wid,
+                            trace: Trace { insts: vec![] },
+                            latencies: vec![(i + 1) as f64],
+                            target: "cpu".into(),
+                            seed: 0,
+                            round: i,
+                            cand_hash: offset + i,
+                        });
+                    }
+                });
+            }
+        });
+        // Per-workload commit order is each writer's program order.
+        let local: &SharedDb = &shared;
+        assert_eq!(local.num_records(), 100);
+        let rounds: Vec<u64> = local.records_for(a).iter().map(|r| r.round).collect();
+        assert_eq!(rounds, (0..50).collect::<Vec<u64>>());
+        assert_eq!(local.best_latency(b), Some(1.0));
+        assert!(local.has_candidate(b, 1000));
+        assert!(!local.has_candidate(a, 1000));
+    }
+}

@@ -1,0 +1,115 @@
+//! Aggregate statistics over a database — the `metaschedule db stats`
+//! view and the numbers the CI smoke step asserts on.
+
+use crate::db::{Database, TuningRecord, WorkloadEntry};
+
+/// Per-workload aggregate.
+#[derive(Debug, Clone)]
+pub struct WorkloadStats {
+    pub entry: WorkloadEntry,
+    /// Total committed records (including failed candidates).
+    pub records: usize,
+    /// Records with no successful measurement.
+    pub failed: usize,
+    pub best_latency_s: Option<f64>,
+}
+
+/// Whole-database aggregate, in registration order.
+#[derive(Debug, Clone)]
+pub struct DbStats {
+    pub workloads: Vec<WorkloadStats>,
+    pub records: usize,
+    pub failed: usize,
+}
+
+impl DbStats {
+    pub fn compute(db: &dyn Database) -> DbStats {
+        let workloads: Vec<WorkloadStats> = db
+            .workload_entries()
+            .into_iter()
+            .map(|entry| {
+                let recs = db.records_for(entry.id);
+                let failed = recs.iter().filter(|r| r.is_failed()).count();
+                // Minimum over the records already in hand — a
+                // best_latency() call would re-fetch and re-sort them.
+                let best_latency_s = recs.iter().filter_map(TuningRecord::best_latency).reduce(f64::min);
+                WorkloadStats {
+                    best_latency_s,
+                    records: recs.len(),
+                    failed,
+                    entry,
+                }
+            })
+            .collect();
+        let records = workloads.iter().map(|w| w.records).sum();
+        let failed = workloads.iter().map(|w| w.failed).sum();
+        DbStats {
+            workloads,
+            records,
+            failed,
+        }
+    }
+
+    /// Human-readable rendering (one line per workload).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("workloads: {}\n", self.workloads.len()));
+        out.push_str(&format!("records:   {} ({} failed)\n", self.records, self.failed));
+        for w in &self.workloads {
+            let best = match w.best_latency_s {
+                Some(l) => format!("best {:.2} us", l * 1e6),
+                None => "no successful measurement".to_string(),
+            };
+            out.push_str(&format!(
+                "  [{}] {} on {} (shash {:016x}): {} records ({} failed), {}\n",
+                w.entry.id, w.entry.name, w.entry.target, w.entry.shash, w.records, w.failed, best
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::db::{InMemoryDb, TuningRecord};
+    use crate::trace::Trace;
+
+    #[test]
+    fn stats_count_per_workload_and_render() {
+        let mut db = InMemoryDb::new();
+        let a = db.register_workload("GMM", 0xabc, "cpu");
+        let b = db.register_workload("C1D", 0xdef, "gpu");
+        let mk = |w: usize, lat: Option<f64>| TuningRecord {
+            workload: w,
+            trace: Trace { insts: vec![] },
+            latencies: lat.into_iter().collect(),
+            target: "cpu".into(),
+            seed: 0,
+            round: 0,
+            cand_hash: 0,
+        };
+        db.commit_record(mk(a, Some(2e-6)));
+        db.commit_record(mk(a, None));
+        db.commit_record(mk(b, Some(5e-6)));
+        let stats = DbStats::compute(&db);
+        assert_eq!(stats.records, 3);
+        assert_eq!(stats.failed, 1);
+        assert_eq!(stats.workloads.len(), 2);
+        assert_eq!(stats.workloads[0].records, 2);
+        assert_eq!(stats.workloads[0].failed, 1);
+        assert_eq!(stats.workloads[0].best_latency_s, Some(2e-6));
+        assert_eq!(stats.workloads[1].best_latency_s, Some(5e-6));
+        let text = stats.render();
+        assert!(text.contains("workloads: 2"));
+        assert!(text.contains("GMM"));
+        assert!(text.contains("2.00 us"));
+    }
+
+    #[test]
+    fn empty_db_renders() {
+        let stats = DbStats::compute(&InMemoryDb::new());
+        assert_eq!(stats.records, 0);
+        assert!(stats.render().contains("workloads: 0"));
+    }
+}

@@ -67,9 +67,17 @@ pub fn run_10a(cfg: &ExpConfig) -> Report {
     );
     let mut prev = f64::INFINITY;
     let mut monotone = true;
+    // The ablation arms share one base program, and workload identity is
+    // (program hash, target) — a shared tuning db would let each richer
+    // space warm-start from the previous arm's records and void the
+    // comparison. The arms therefore always run cold.
+    let cold = ExpConfig { db_path: None, ..cfg.clone() };
+    if cfg.db_path.is_some() {
+        report.notes.push("--db ignored: ablation arms share one workload and must run cold".into());
+    }
     for (name, modules) in compositions() {
         let composer = SpaceComposer::new(modules, target.clone());
-        let r = tune_with_composer(&prog, &target, &composer, cfg);
+        let r = tune_with_composer(&prog, &target, &composer, &cold);
         report.push(name, "MetaSchedule", r.best_latency_s);
         // Allow small search noise in the monotonicity note.
         if r.best_latency_s > prev * 1.15 {
@@ -90,6 +98,12 @@ pub fn run_10b(cfg: &ExpConfig) -> Report {
     let ops = graph::bert_large();
     let tasks = extract_tasks(&ops);
     let mut report = Report::new("fig10b", "Figure 10b: BERT-large (GPU)");
+    // Generic and +TC arms tune the same task programs, and workload
+    // identity is (program hash, target) — a shared db would let the TC
+    // arm inherit the generic arm's records. Deliberately cold.
+    if cfg.db_path.is_some() {
+        report.notes.push("--db ignored: composition arms share workloads and must run cold".into());
+    }
 
     // AutoTVM-style baseline (the paper's "TVM (AutoTVM)" bar; Ansor does
     // not support TensorCore — Appendix A.4).

@@ -7,8 +7,11 @@
 //! workloads *except SFM*, where the vendor's hand-fused softmax wins.
 
 use crate::baselines::vendor_latency;
-use crate::exp::{tune_metaschedule, tune_tvm_best, ExpConfig, Report};
+use crate::db::Database;
+use crate::exp::{open_db, tune_tvm_best, tune_with_composer_db, ExpConfig, Report};
 use crate::sim::Target;
+use crate::space::SpaceComposer;
+use crate::tir::structural_hash;
 use crate::workloads;
 
 /// Run Figure 8 for one target; `subset` limits workloads (None = all 12).
@@ -17,6 +20,11 @@ pub fn run(target: &Target, cfg: &ExpConfig, subset: Option<&[&str]>) -> Report 
         &format!("fig8-{}", target.name),
         &format!("Figure 8: operator/subgraph latency on {}", target.name),
     );
+    // One db open for the whole figure (re-opening per workload would
+    // re-parse the JSONL file O(workloads) times), registered under the
+    // Figure-8 display names so `db top --workload GMM` finds them.
+    let mut db = open_db(cfg);
+    let composer = SpaceComposer::generic(target.clone());
     for w in workloads::suite() {
         if let Some(names) = subset {
             if !names.contains(&w.name) {
@@ -24,9 +32,10 @@ pub fn run(target: &Target, cfg: &ExpConfig, subset: Option<&[&str]>) -> Report 
             }
         }
         let prog = (w.build)();
+        db.register_workload(w.name, structural_hash(&prog), target.name);
         report.push(w.name, "PyTorch", vendor_latency(&prog, target));
         report.push(w.name, "TVM", tune_tvm_best(&prog, target, cfg));
-        let ms = tune_metaschedule(&prog, target, cfg);
+        let ms = tune_with_composer_db(&prog, target, &composer, cfg, db.as_mut());
         report.push(w.name, "MetaSchedule", ms.best_latency_s);
     }
     summarize(&mut report);

@@ -13,18 +13,21 @@ use crate::space::SpaceComposer;
 
 pub const FIG9_MODELS: [&str; 3] = ["bert-base", "resnet50", "mobilenet-v2"];
 
-/// End-to-end latency with the MetaSchedule task scheduler.
+/// End-to-end latency with the MetaSchedule task scheduler. With
+/// `cfg.db_path` set the whole model tune reads/commits one shared
+/// database, so a killed run resumes from the tasks it already tuned.
 pub fn metaschedule_e2e(model: &str, target: &Target, cfg: &ExpConfig) -> f64 {
     let ops = graph::by_name(model).expect("unknown model");
     let tasks = extract_tasks(&ops);
     let composer = SpaceComposer::generic(target.clone());
     let mut measurer = SimMeasurer::new(target.clone());
+    let mut db = crate::exp::open_db(cfg);
     let ts = TaskScheduler::new(SearchConfig {
         threads: cfg.threads,
         ..SearchConfig::default()
     });
     let total = cfg.trials * tasks.len();
-    let results = ts.tune_tasks(&tasks, &composer, &mut measurer, total, cfg.seed);
+    let results = ts.tune_tasks_with_db(&tasks, &composer, &mut measurer, db.as_mut(), total, cfg.seed);
     TaskScheduler::e2e_latency(&tasks, &results)
 }
 
@@ -57,22 +60,22 @@ pub fn run(target: &Target, cfg: &ExpConfig, models: Option<&[&str]>) -> Report 
         v.sort_by(|a, b| a.partial_cmp(b).unwrap());
         v[1]
     };
+    // The three seed runs must stay statistically independent — one
+    // shared db would make them cold/warm/warmer and bias the median —
+    // so each seed resumes its own per-seed file.
+    let seed_cfg = |s: u64| ExpConfig {
+        seed: s,
+        db_path: cfg.db_path.as_ref().map(|p| format!("{p}.seed{s}")),
+        ..cfg.clone()
+    };
     for m in models {
         let ops = graph::by_name(m).expect("unknown model");
         report.push(m, "PyTorch", graph::vendor_e2e(&ops, target));
-        report.push(
-            m,
-            "TVM",
-            median3(&|s| {
-                ansor_e2e(m, target, &ExpConfig { trials: cfg.trials, seed: s, ..*cfg })
-            }),
-        );
+        report.push(m, "TVM", median3(&|s| ansor_e2e(m, target, &seed_cfg(s))));
         report.push(
             m,
             "MetaSchedule",
-            median3(&|s| {
-                metaschedule_e2e(m, target, &ExpConfig { trials: cfg.trials, seed: s, ..*cfg })
-            }),
+            median3(&|s| metaschedule_e2e(m, target, &seed_cfg(s))),
         );
     }
     let mut parity = 0;

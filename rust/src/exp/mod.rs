@@ -16,6 +16,7 @@ pub mod fig9;
 pub mod table1;
 
 use crate::cost_model::GbtCostModel;
+use crate::db::{Database, InMemoryDb, JsonFileDb};
 use crate::search::{EvolutionarySearch, SearchConfig, SimMeasurer, TuneResult};
 use crate::sim::Target;
 use crate::space::SpaceComposer;
@@ -23,7 +24,7 @@ use crate::tir::Program;
 use crate::util::json::Json;
 
 /// Shared experiment knobs.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct ExpConfig {
     /// Measurement trials per (workload, system).
     pub trials: usize,
@@ -31,11 +32,30 @@ pub struct ExpConfig {
     /// OS threads for the search pipeline (0 = auto). Never changes
     /// results — see the determinism notes in [`crate::search`].
     pub threads: usize,
+    /// Optional JSONL tuning-database path (`--db`). When set, every
+    /// MetaSchedule tuning call warm-starts from (and commits to) this
+    /// file, making `tune`/`tune-model`/`exp` runs resumable across
+    /// sessions. Baseline tuners stay cold by design — records would
+    /// contaminate the comparison.
+    pub db_path: Option<String>,
 }
 
 impl Default for ExpConfig {
     fn default() -> Self {
-        ExpConfig { trials: 64, seed: 42, threads: 0 }
+        ExpConfig { trials: 64, seed: 42, threads: 0, db_path: None }
+    }
+}
+
+/// Open the configured tuning database: the JSONL file when `--db` was
+/// given, a run-local in-memory store otherwise. Panics on a corrupt
+/// file — silently ignoring recorded history would be worse.
+pub fn open_db(cfg: &ExpConfig) -> Box<dyn Database> {
+    match &cfg.db_path {
+        Some(path) => match JsonFileDb::open(path) {
+            Ok(db) => Box::new(db),
+            Err(e) => panic!("cannot open tuning db: {e}"),
+        },
+        None => Box::new(InMemoryDb::new()),
     }
 }
 
@@ -52,6 +72,19 @@ pub fn tune_with_composer(
     composer: &SpaceComposer,
     cfg: &ExpConfig,
 ) -> TuneResult {
+    let mut db = open_db(cfg);
+    tune_with_composer_db(prog, target, composer, cfg, db.as_mut())
+}
+
+/// Tune against an explicit database handle (shared across calls when
+/// the caller batches many workloads into one open).
+pub fn tune_with_composer_db(
+    prog: &Program,
+    target: &Target,
+    composer: &SpaceComposer,
+    cfg: &ExpConfig,
+    db: &mut dyn Database,
+) -> TuneResult {
     let search = EvolutionarySearch::new(SearchConfig {
         num_trials: cfg.trials,
         threads: cfg.threads,
@@ -59,7 +92,7 @@ pub fn tune_with_composer(
     });
     let mut model = GbtCostModel::new();
     let mut measurer = SimMeasurer::new(target.clone());
-    search.tune(prog, composer, &mut model, &mut measurer, cfg.seed)
+    search.tune_db(prog, composer, &mut model, &mut measurer, db, cfg.seed)
 }
 
 /// The paper's "TVM" bars pick the best of AutoTVM and Ansor per setup.

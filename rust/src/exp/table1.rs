@@ -32,6 +32,12 @@ pub fn run(target: &Target, cfg: &ExpConfig, models: Option<&[&str]>) -> Report 
         "table1",
         &format!("Table 1: tuning time (s, budget-normalized) on {}", target.name),
     );
+    // Table 1 measures tuning *time*; a warm database would let the
+    // MetaSchedule arm skip measurements and fake a speedup, so this
+    // experiment deliberately ignores --db.
+    if cfg.db_path.is_some() {
+        report.notes.push("--db ignored: tuning-time comparison must run cold".into());
+    }
     for m in models {
         let ops = graph::by_name(m).expect("unknown model");
         let tasks = extract_tasks(&ops);

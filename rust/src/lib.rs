@@ -6,7 +6,9 @@
 //! stochastic schedule primitives ([`schedule`]), execution traces
 //! ([`trace`]), composable transformation modules ([`space`]), the
 //! learning-driven evolutionary search with a gradient-boosted-tree cost
-//! model ([`search`], [`cost_model`]), a deterministic hardware latency
+//! model ([`search`], [`cost_model`]), a persistent tuning-record
+//! database that warm-starts search and pretrains the cost model across
+//! sessions ([`db`]), a deterministic hardware latency
 //! simulator standing in for the paper's testbeds ([`sim`]), baseline
 //! tuners ([`baselines`]), graph-level task extraction and end-to-end model
 //! tuning ([`graph`]), the Appendix A.2 workload suite ([`workloads`]), a
@@ -23,6 +25,7 @@
 
 pub mod baselines;
 pub mod cost_model;
+pub mod db;
 pub mod exp;
 pub mod graph;
 pub mod runtime;

@@ -2,20 +2,28 @@
 //!
 //! ```text
 //! metaschedule list                              # workloads + models
-//! metaschedule tune --workload GMM [--target cpu] [--trials 64] [--threads N]
-//! metaschedule tune-model --model bert-base [--target cpu] [--trials 32]
+//! metaschedule tune --workload GMM [--target cpu] [--trials 64] [--threads N] [--db t.jsonl]
+//! metaschedule tune-model --model bert-base [--target cpu] [--trials 32] [--db t.jsonl]
 //! metaschedule exp <fig8|fig9|fig10a|fig10b|table1|all> [--target cpu]
-//!                  [--trials N] [--seed S] [--threads N] [--out results.jsonl]
+//!                  [--trials N] [--seed S] [--threads N] [--out results.jsonl] [--db t.jsonl]
+//! metaschedule db stats --db t.jsonl             # tuning-database summary
+//! metaschedule db top --workload GMM -k 5 --db t.jsonl
 //! metaschedule pjrt-verify                       # artifact correctness gate
 //!
 //! `--threads` caps the OS threads of the search pipeline (0 = all
 //! cores); it never changes tuning results, only wall-clock.
+//!
+//! `--db` points tuning at a persistent JSONL record database: runs
+//! warm-start from it, commit every measurement back to it, and are
+//! therefore resumable across sessions (see README "Tuning database").
 //! ```
 
+use metaschedule::db::{Database, DbStats, JsonFileDb};
 use metaschedule::exp::{self, ExpConfig};
 use metaschedule::graph;
 use metaschedule::sim::Target;
-use metaschedule::tir::{print_program, PrintOptions};
+use metaschedule::tir::{print_program, structural_hash, PrintOptions};
+use metaschedule::trace::serde::{text_to_trace, trace_to_text};
 use metaschedule::util::cli::Args;
 use metaschedule::workloads;
 
@@ -27,10 +35,11 @@ fn main() {
         "tune" => tune(&args),
         "tune-model" => tune_model(&args),
         "exp" => experiment(&args),
+        "db" => db_cmd(&args),
         "pjrt-verify" => pjrt_verify(&args),
         _ => {
             eprintln!(
-                "usage: metaschedule <list|tune|tune-model|exp|pjrt-verify> [flags]\n\
+                "usage: metaschedule <list|tune|tune-model|exp|db|pjrt-verify> [flags]\n\
                  see rust/src/main.rs header for details"
             );
             std::process::exit(2);
@@ -43,6 +52,7 @@ fn cfg_of(args: &Args) -> ExpConfig {
         trials: args.flag_usize("trials", 64),
         seed: args.flag_u64("seed", 42),
         threads: args.flag_usize("threads", 0),
+        db_path: args.flag("db").map(String::from),
     }
 }
 
@@ -84,7 +94,21 @@ fn tune(args: &Args) {
     let naive = metaschedule::sim::simulate(&prog, &target)
         .map(|r| r.total_s)
         .unwrap_or(f64::NAN);
-    let r = exp::tune_metaschedule(&prog, &target, &cfg);
+    let mut db = exp::open_db(&cfg);
+    // Pre-register under the Figure-8 display name ("GMM", not the
+    // program's internal "matmul") so `db top --workload GMM` finds it;
+    // registration is idempotent and first name wins.
+    db.register_workload(w.name, structural_hash(&prog), target.name);
+    let composer = metaschedule::space::SpaceComposer::generic(target.clone());
+    let r = exp::tune_with_composer_db(&prog, &target, &composer, &cfg, db.as_mut());
+    if r.warm_records > 0 {
+        println!(
+            "warm-start: resumed from {} db records (search continues from the recorded best)",
+            r.warm_records
+        );
+    } else if cfg.db_path.is_some() {
+        println!("cold start: no prior records for this workload in the db");
+    }
     println!(
         "naive {:.2} us -> tuned {:.2} us ({:.1}x) in {} trials",
         naive * 1e6,
@@ -92,6 +116,9 @@ fn tune(args: &Args) {
         naive / r.best_latency_s,
         r.trials
     );
+    if let Some(path) = &cfg.db_path {
+        println!("db: committed {} new records to {path}", r.trials);
+    }
     if args.has_switch("show-program") {
         println!("{}", print_program(&r.best_prog, PrintOptions::default()));
     }
@@ -109,6 +136,9 @@ fn tune_model(args: &Args) {
         std::process::exit(2);
     };
     println!("== tuning {name} on {} ({} trials/task)", target.name, cfg.trials);
+    if let Some(path) = &cfg.db_path {
+        println!("db: {path} (per-task records shared; killed runs resume from it)");
+    }
     let vendor = graph::vendor_e2e(&ops, &target);
     let ms = exp::fig9::metaschedule_e2e(&name, &target, &cfg);
     println!(
@@ -160,6 +190,72 @@ fn experiment(args: &Args) {
             if let Err(e) = r.write(path) {
                 eprintln!("failed writing {path}: {e}");
             }
+        }
+    }
+}
+
+/// `db stats` / `db top`: inspect a JSONL tuning database.
+fn db_cmd(args: &Args) {
+    let sub = args.positional.get(1).cloned().unwrap_or_else(|| "stats".into());
+    let Some(path) = args.flag("db") else {
+        eprintln!("db: --db <path.jsonl> required");
+        std::process::exit(2);
+    };
+    let db = match JsonFileDb::open(path) {
+        Ok(db) => db,
+        Err(e) => {
+            eprintln!("db: {e}");
+            std::process::exit(1);
+        }
+    };
+    match sub.as_str() {
+        "stats" => {
+            println!("db: {} ({} bytes)", path, db.file_len());
+            print!("{}", DbStats::compute(&db).render());
+        }
+        "top" => {
+            let wname = args.flag_or("workload", "GMM");
+            let k = args.flag_usize("k", 5);
+            let entries: Vec<_> = db.workload_entries().into_iter().filter(|e| e.name == wname).collect();
+            if entries.is_empty() {
+                eprintln!("db: no workload named {wname}; see `metaschedule db stats`");
+                std::process::exit(1);
+            }
+            for entry in entries {
+                let top = db.query_top_k(entry.id, k);
+                println!(
+                    "== top {} of {} records for {} on {} (shash {:016x})",
+                    top.len(),
+                    db.records_for(entry.id).len(),
+                    entry.name,
+                    entry.target,
+                    entry.shash
+                );
+                for (rank, rec) in top.iter().enumerate() {
+                    let lat = rec.best_latency().unwrap_or(f64::NAN);
+                    println!(
+                        "# rank {} | latency {:.3} us | seed {} | round {} | cand {:016x}",
+                        rank + 1,
+                        lat * 1e6,
+                        rec.seed,
+                        rec.round,
+                        rec.cand_hash
+                    );
+                    let text = trace_to_text(&rec.trace);
+                    print!("{text}");
+                    // The printed trace must parse back — the db's whole
+                    // point is that records survive round trips.
+                    match text_to_trace(&text) {
+                        Ok(t) if t == rec.trace => println!("# trace round-trips OK"),
+                        Ok(_) => println!("# WARNING: trace round-trip mismatch"),
+                        Err(e) => println!("# WARNING: trace does not re-parse: {e}"),
+                    }
+                }
+            }
+        }
+        other => {
+            eprintln!("usage: metaschedule db <stats|top> --db <path.jsonl> [--workload W] [-k N] (got {other})");
+            std::process::exit(2);
         }
     }
 }

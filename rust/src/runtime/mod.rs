@@ -245,6 +245,12 @@ impl Measurer for PjrtGmmMeasurer {
     fn count(&self) -> usize {
         self.n_measured
     }
+
+    // One name for all PJRT-visible devices for now; per-device naming
+    // (platform string into the workload key) is a ROADMAP item.
+    fn target_name(&self) -> &'static str {
+        "pjrt"
+    }
 }
 
 #[cfg(test)]

@@ -25,6 +25,7 @@
 use std::collections::HashSet;
 
 use crate::cost_model::CostModel;
+use crate::db::{pretrain_cost_model, Database, InMemoryDb, TuningRecord};
 use crate::schedule::Schedule;
 use crate::search::mutator::mutate;
 use crate::search::parallel::{parallel_map, BoundedQueue, SharedMeasurer};
@@ -92,6 +93,14 @@ impl SearchConfig {
     }
 }
 
+/// Elite traces carried between rounds (and seeded from the database on
+/// warm starts).
+const ELITE_POOL: usize = 8;
+/// Database records replayed into the elite pool on a warm start.
+const WARM_TOP_K: usize = 8;
+/// Cap on database records replayed into cost-model pretraining samples.
+const PRETRAIN_RECORDS: usize = 256;
+
 /// RNG stream kinds, combined with (round, chain) into a stream id. Kept
 /// collision-free by construction: see [`stream_id`].
 const STREAM_PREFETCH: u64 = 0;
@@ -116,6 +125,8 @@ pub struct TuneResult {
     pub trials: usize,
     /// (trial index, best-so-far latency) — the tuning curve.
     pub curve: Vec<(usize, f64)>,
+    /// Database records that warm-started this run (0 = cold start).
+    pub warm_records: usize,
 }
 
 /// One population member: a validated schedule plus its model score.
@@ -149,6 +160,23 @@ impl EvolutionarySearch {
         self.tune_with_designs_warm(prog, &design_traces, &[], model, measurer, seed)
     }
 
+    /// Like [`Self::tune`] but backed by a tuning database: prior records
+    /// for this workload warm-start the search and pretrain the model,
+    /// and every measurement is committed back (see [`Self::tune_with_db`]).
+    pub fn tune_db(
+        &self,
+        prog: &Program,
+        composer: &SpaceComposer,
+        model: &mut dyn CostModel,
+        measurer: &mut dyn Measurer,
+        db: &mut dyn Database,
+        seed: u64,
+    ) -> TuneResult {
+        let designs = composer.generate(prog, seed);
+        let design_traces: Vec<Trace> = designs.into_iter().map(|d| d.trace).collect();
+        self.tune_with_db(prog, &design_traces, &[], model, measurer, db, seed)
+    }
+
     /// Tune against a precomputed design space (the trace skeletons from a
     /// previous `SpaceComposer::generate`). This is the §4 execution-
     /// tracing payoff: across task-scheduler rounds the traces are simply
@@ -178,17 +206,67 @@ impl EvolutionarySearch {
         measurer: &mut dyn Measurer,
         seed: u64,
     ) -> TuneResult {
+        // A fresh in-memory database is behaviorally identical to the
+        // pre-database search: no warm start, no pretraining, and the
+        // committed records die with this call.
+        let mut scratch = InMemoryDb::new();
+        self.tune_with_db(prog, design_traces, warm_start, model, measurer, &mut scratch, seed)
+    }
+
+    /// The full database-backed search (paper §5: search <-> database <->
+    /// cost model). On entry the workload is registered, prior records
+    /// warm-start the elite pool / best-so-far / dedup set, and the cost
+    /// model pretrains on replayed history; every measured candidate
+    /// (including validator rejections) is committed back so the next run
+    /// — same process or a later session re-opening a
+    /// [`crate::db::JsonFileDb`] — resumes instead of restarting.
+    #[allow(clippy::too_many_arguments)]
+    pub fn tune_with_db(
+        &self,
+        prog: &Program,
+        design_traces: &[Trace],
+        warm_start: &[Trace],
+        model: &mut dyn CostModel,
+        measurer: &mut dyn Measurer,
+        db: &mut dyn Database,
+        seed: u64,
+    ) -> TuneResult {
         let cfg = &self.cfg;
         assert!(!design_traces.is_empty(), "empty design space");
         let chains = cfg.chains.max(1);
         let threads = cfg.resolved_threads();
         let chain_pop = (cfg.population / chains).max(1);
 
+        // Database warm start: prior candidates must not be re-measured
+        // (they seed the dedup set), the best recorded traces join the
+        // elite pool, and the best record becomes the starting
+        // best-so-far — so a warm run can only improve on its history.
+        let target_name = measurer.target_name();
+        let wid = db.register_workload(&prog.name, structural_hash(prog), target_name);
+        let mut measured_hashes: HashSet<u64> = db.candidate_hashes(wid).into_iter().collect();
+        let db_top = db.query_top_k(wid, WARM_TOP_K);
+        let warm_records = db_top.len();
+        // Seed best-so-far from the best record that still replays (a
+        // schedule-primitive change can invalidate old traces; falling
+        // through to the next record keeps the "warm run can only
+        // improve on its history" invariant and avoids a best=None panic
+        // when the dedup set already covers the whole design space).
         let mut best: Option<(f64, Schedule)> = None;
-        let mut measured_hashes: HashSet<u64> = HashSet::new();
+        for top in &db_top {
+            if let (Some(lat), Ok(sch)) = (top.best_latency(), crate::trace::replay(&top.trace, prog, 0)) {
+                best = Some((lat, sch));
+                break;
+            }
+        }
+        let mut elites: Vec<Trace> = warm_start.to_vec();
+        elites.extend(db_top.into_iter().map(|r| r.trace));
+        elites.truncate(ELITE_POOL);
+        // Pretrain the cost model from history so round 1 scores with a
+        // fit model instead of the cold neutral prior.
+        pretrain_cost_model(model, &*db, wid, prog, PRETRAIN_RECORDS);
+
         let mut curve = Vec::new();
         let mut trials = 0usize;
-        let mut elites: Vec<Trace> = warm_start.to_vec();
         let mut round: u64 = 0;
 
         // Round 0's fork-and-sample happens up front; every later round's
@@ -227,7 +305,9 @@ impl EvolutionarySearch {
             let mut sel_rng = Rng::for_stream(seed, stream_id(round, 0, STREAM_SELECT));
             population.sort_by(|a, b| b.score.partial_cmp(&a.score).unwrap());
             let batch = cfg.measure_batch.min(cfg.num_trials - trials);
-            let mut picked: Vec<usize> = Vec::with_capacity(batch);
+            // (population index, structural hash) — the hash is carried
+            // to the commit step so the program is only hashed once.
+            let mut picked: Vec<(usize, u64)> = Vec::with_capacity(batch);
             let mut pi = 0;
             while picked.len() < batch && pi < population.len() {
                 let idx = if sel_rng.gen_bool(cfg.eps_greedy) {
@@ -236,7 +316,7 @@ impl EvolutionarySearch {
                     pi
                 };
                 pi += 1;
-                if picked.contains(&idx) {
+                if picked.iter().any(|&(i, _)| i == idx) {
                     continue;
                 }
                 let h = structural_hash(&population[idx].sch.prog);
@@ -244,7 +324,7 @@ impl EvolutionarySearch {
                     continue;
                 }
                 measured_hashes.insert(h);
-                picked.push(idx);
+                picked.push((idx, h));
             }
 
             // 5. Measure the picked batch through the bounded queue while
@@ -252,7 +332,7 @@ impl EvolutionarySearch {
             let jobs: Vec<(usize, Program)> = picked
                 .iter()
                 .enumerate()
-                .map(|(slot, &idx)| (slot, population[idx].sch.prog.clone()))
+                .map(|(slot, &(idx, _))| (slot, population[idx].sch.prog.clone()))
                 .collect();
             // Prefetch only if another round can actually run (otherwise
             // the samples would be thrown away on loop exit).
@@ -272,12 +352,24 @@ impl EvolutionarySearch {
             prefetched = next_fresh;
 
             // 6. Fold results in submission order (serial-identical),
-            //    update database / model / elites.
+            //    update database / model / elites. Every outcome is
+            //    committed — validator rejections persist with empty
+            //    latencies so future runs skip them too.
             let mut progs = Vec::new();
             let mut lats = Vec::new();
             for (slot, lat) in lats_by_slot.into_iter().enumerate() {
-                let member = &population[picked[slot]];
+                let (idx, cand_hash) = picked[slot];
+                let member = &population[idx];
                 trials += 1;
+                db.commit_record(TuningRecord {
+                    workload: wid,
+                    trace: member.sch.trace.clone(),
+                    latencies: lat.into_iter().collect(),
+                    target: target_name.to_string(),
+                    seed,
+                    round,
+                    cand_hash,
+                });
                 // Invalid on hardware (e.g. scratchpad overflow) -> skipped,
                 // exactly like the paper's validator rejections.
                 let Some(lat) = lat else {
@@ -289,7 +381,7 @@ impl EvolutionarySearch {
                 if better {
                     best = Some((lat, member.sch.clone()));
                     elites.insert(0, member.sch.trace.clone());
-                    elites.truncate(8);
+                    elites.truncate(ELITE_POOL);
                 }
                 curve.push((trials, best.as_ref().unwrap().0));
             }
@@ -309,6 +401,7 @@ impl EvolutionarySearch {
             best_prog: best_sch.prog,
             trials,
             curve,
+            warm_records,
         }
     }
 
@@ -566,6 +659,7 @@ impl ReplaySearch {
             best_prog: best_sch.prog,
             trials,
             curve,
+            warm_records: 0,
         }
     }
 }
@@ -680,7 +774,62 @@ mod tests {
         assert!(r.best_latency_s < naive);
     }
 
+    #[test]
+    fn second_run_warm_starts_from_database() {
+        let target = Target::cpu_avx512();
+        let prog = workloads::matmul(1, 128, 128, 128);
+        let composer = SpaceComposer::generic(target.clone());
+        let mut db = crate::db::InMemoryDb::new();
+        let run = |db: &mut dyn crate::db::Database| {
+            let mut model = GbtCostModel::new();
+            let mut measurer = SimMeasurer::new(target.clone());
+            EvolutionarySearch::new(quick_cfg(32)).tune_db(&prog, &composer, &mut model, &mut measurer, db, 4)
+        };
+        let cold = run(&mut db);
+        assert_eq!(cold.warm_records, 0);
+        assert!(db.num_records() > 0, "measurements were not committed");
+        let committed_after_cold = db.num_records();
+        let warm = run(&mut db);
+        assert!(warm.warm_records > 0, "second run did not see the records");
+        // Warm best can only match or improve on the recorded best.
+        assert!(warm.best_latency_s <= cold.best_latency_s);
+        // Records keep accumulating, and the dedup set prevented
+        // re-measuring any candidate committed by the cold run.
+        assert!(db.num_records() > committed_after_cold);
+        let wid = db.find_workload(structural_hash(&prog), target.name).unwrap();
+        let hashes = db.candidate_hashes(wid);
+        let unique: std::collections::HashSet<u64> = hashes.iter().copied().collect();
+        assert_eq!(unique.len(), hashes.len(), "a candidate was measured twice");
+    }
+
+    #[test]
+    fn warm_start_survives_even_if_budget_exhausts_instantly() {
+        // With the entire (tiny) budget already covered by history, the
+        // search must return the recorded best instead of panicking.
+        let target = Target::cpu_avx512();
+        let prog = workloads::matmul(1, 64, 64, 64);
+        let composer = SpaceComposer::generic(target.clone());
+        let mut db = crate::db::InMemoryDb::new();
+        let mut run = |trials: usize, seed: u64| {
+            let mut model = GbtCostModel::new();
+            let mut measurer = SimMeasurer::new(target.clone());
+            EvolutionarySearch::new(quick_cfg(trials)).tune_db(
+                &prog,
+                &composer,
+                &mut model,
+                &mut measurer,
+                &mut db,
+                seed,
+            )
+        };
+        let first = run(24, 9);
+        let resumed = run(2, 9);
+        assert!(resumed.best_latency_s <= first.best_latency_s);
+        assert!(resumed.warm_records > 0);
+    }
+
     // The thread-count determinism contract is covered by the integration
     // suite in rust/tests/determinism.rs (search, GPU space, scheduler,
-    // and repeat-run reproducibility).
+    // and repeat-run reproducibility), and warm-start determinism by the
+    // same suite's warm_start cases.
 }

@@ -27,6 +27,14 @@ pub trait Measurer: Send {
     fn measure(&mut self, prog: &Program) -> Option<f64>;
     /// Number of measurements performed so far.
     fn count(&self) -> usize;
+    /// Name of the target this oracle measures on — stamped into tuning
+    /// records and part of the workload identity, so a database never
+    /// silently mixes targets. Required (no default): a measurer that
+    /// forgot to name its target would silently pool every device's
+    /// records into one workload. `'static` because target names are
+    /// compile-time constants ([`Target::name`]) and a borrowed return
+    /// could not cross the mutex of [`parallel::SharedMeasurer`].
+    fn target_name(&self) -> &'static str;
 }
 
 /// Measurer backed by the analytical hardware simulator (the default
@@ -50,6 +58,10 @@ impl Measurer for SimMeasurer {
 
     fn count(&self) -> usize {
         self.n
+    }
+
+    fn target_name(&self) -> &'static str {
+        self.target.name
     }
 }
 

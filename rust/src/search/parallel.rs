@@ -143,6 +143,10 @@ impl Measurer for &SharedMeasurer<'_> {
     fn count(&self) -> usize {
         SharedMeasurer::count(*self)
     }
+
+    fn target_name(&self) -> &'static str {
+        self.inner.lock().unwrap().target_name()
+    }
 }
 
 /// Map `f` over owned `items` on up to `threads` OS threads, returning

@@ -14,11 +14,12 @@
 //! measurement pipeline).
 
 use crate::cost_model::GbtCostModel;
+use crate::db::{Database, InMemoryDb, SharedDb};
 use crate::search::evolutionary::{EvolutionarySearch, SearchConfig, TuneResult};
 use crate::search::parallel::{parallel_map, SharedMeasurer};
 use crate::search::Measurer;
 use crate::space::SpaceComposer;
-use crate::tir::Program;
+use crate::tir::{structural_hash, Program};
 
 /// One tuning task: a deduplicated subgraph with its occurrence count.
 #[derive(Debug, Clone)]
@@ -74,8 +75,40 @@ impl TaskScheduler {
         total_trials: usize,
         seed: u64,
     ) -> Vec<TuneResult> {
+        let mut scratch = InMemoryDb::new();
+        self.tune_tasks_with_db(tasks, composer, measurer, &mut scratch, total_trials, seed)
+    }
+
+    /// Like [`Self::tune_tasks`] but backed by a tuning database. Tasks
+    /// whose workload already has records get their warmup round
+    /// shortened to a quarter of the fair share — their searches resume
+    /// from the recorded best instead of exploring from scratch — and the
+    /// saved budget flows into the gradient rounds on the weighted-worst
+    /// tasks. All searches read and commit through the
+    /// shared database, so an end-to-end model tune is resumable
+    /// mid-model: killed after task 3 of 12, the next run replays tasks
+    /// 1-3 from records in seconds and spends its budget on 4-12.
+    pub fn tune_tasks_with_db(
+        &self,
+        tasks: &[Task],
+        composer: &SpaceComposer,
+        measurer: &mut dyn Measurer,
+        db: &mut dyn Database,
+        total_trials: usize,
+        seed: u64,
+    ) -> Vec<TuneResult> {
         assert!(!tasks.is_empty());
         let threads = self.cfg.resolved_threads();
+        // Register every workload up front, in task order, so ids (and
+        // any new JSONL registry lines) are deterministic, and snapshot
+        // which tasks have history before any of this run's commits land.
+        let target_name = measurer.target_name();
+        let wids: Vec<usize> = tasks
+            .iter()
+            .map(|t| db.register_workload(&t.name, structural_hash(&t.prog), target_name))
+            .collect();
+        let has_history: Vec<bool> = wids.iter().map(|&w| db.best_latency(w).is_some()).collect();
+        let shared_db = SharedDb::new(db);
         let mut models: Vec<GbtCostModel> = tasks.iter().map(|_| GbtCostModel::new()).collect();
         // Design spaces generated ONCE per task; later rounds re-execute
         // the recorded traces (§4 execution tracing) instead of re-running
@@ -106,16 +139,21 @@ impl TaskScheduler {
             parallel_map(items, threads, |_, (ti, mut model)| {
                 // Split the thread budget across concurrent tasks; the
                 // inner search is thread-count-invariant, so this only
-                // affects wall-clock.
+                // affects wall-clock. Tasks with database history warm-
+                // start (elites + pretrained model + dedup) and need only
+                // a short confirmation round.
                 let inner_threads = (threads / tasks.len()).max(1);
-                let search = EvolutionarySearch::new(self.round_cfg(warmup_trials, inner_threads));
+                let trials = if has_history[ti] { (warmup_trials / 4).max(1) } else { warmup_trials };
+                let search = EvolutionarySearch::new(self.round_cfg(trials, inner_threads));
                 let mut local: &SharedMeasurer = &shared;
-                let r = search.tune_with_designs_warm(
+                let mut local_db: &SharedDb = &shared_db;
+                let r = search.tune_with_db(
                     &tasks[ti].prog,
                     &designs[ti],
                     &[],
                     &mut model,
                     &mut local,
+                    &mut local_db,
                     seed.wrapping_add(ti as u64 * 7919),
                 );
                 (r, model)
@@ -153,18 +191,21 @@ impl TaskScheduler {
             let trials = self.round_trials.min(total_trials - spent);
             let search = EvolutionarySearch::new(self.round_cfg(trials, self.cfg.threads));
             // Warm-start with the task's best trace so later rounds refine
-            // rather than restart from scratch.
+            // rather than restart from scratch (the database adds its own
+            // top-k on top, and dedups against everything measured so far).
             let warm: Vec<crate::trace::Trace> = results[ti]
                 .iter()
                 .map(|r| r.best_trace.clone())
                 .collect();
             let mut local: &SharedMeasurer = &shared;
-            let r = search.tune_with_designs_warm(
+            let mut local_db: &SharedDb = &shared_db;
+            let r = search.tune_with_db(
                 &tasks[ti].prog,
                 &designs[ti],
                 &warm,
                 &mut models[ti],
                 &mut local,
+                &mut local_db,
                 seed.wrapping_add(round as u64 * 7919),
             );
             spent += r.trials.max(1);
@@ -256,6 +297,37 @@ mod tests {
         assert!(results[0].trials >= results[1].trials);
     }
 
+    #[test]
+    fn resumed_model_tune_reuses_records_and_stays_valid() {
+        // First pass populates the db; a resumed pass must (a) see the
+        // history, (b) not re-measure committed candidates, (c) end at
+        // least as good per task.
+        let target = Target::cpu_avx512();
+        let composer = crate::space::SpaceComposer::generic(target.clone());
+        let tasks = tiny_tasks();
+        let mut db = crate::db::InMemoryDb::new();
+        let run = |db: &mut dyn crate::db::Database| {
+            let mut measurer = SimMeasurer::new(target.clone());
+            let ts = TaskScheduler::new(quick_cfg());
+            ts.tune_tasks_with_db(&tasks, &composer, &mut measurer, db, 48, 3)
+        };
+        let first = run(&mut db);
+        let n_records = db.num_records();
+        assert!(n_records > 0);
+        let second = run(&mut db);
+        for (a, b) in first.iter().zip(&second) {
+            assert!(b.best_latency_s <= a.best_latency_s, "task {} regressed on resume", a.task);
+        }
+        assert!(second.iter().any(|r| r.warm_records > 0), "resume never warm-started");
+        // Candidate dedup held across the two passes, per workload.
+        for e in db.workload_entries() {
+            let hashes = db.candidate_hashes(e.id);
+            let unique: std::collections::HashSet<u64> = hashes.iter().copied().collect();
+            assert_eq!(unique.len(), hashes.len(), "workload {} re-measured a candidate", e.name);
+        }
+    }
+
     // Thread-count determinism for the scheduler is covered by
-    // rust/tests/determinism.rs::task_scheduler_identical_across_thread_counts.
+    // rust/tests/determinism.rs::task_scheduler_identical_across_thread_counts
+    // (including the shared-database variant).
 }

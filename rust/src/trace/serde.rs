@@ -26,13 +26,80 @@ fn factors(v: &[FactorArg]) -> String {
         .join(",")
 }
 
-/// Escape a string value (names, scopes) for the line format.
+/// Escape a string value (names, scopes) for the line format. The
+/// parser tokenizes with `split_whitespace`, which splits on *all*
+/// Unicode whitespace — so every whitespace char must be escaped, not
+/// just ASCII space and newlines (which would also break the
+/// line-per-instruction framing and the JSONL tuning database built on
+/// it). Common ones get short escapes; the rest go through `\u{hex}`.
 fn esc(s: &str) -> String {
-    s.replace('\\', "\\\\").replace(' ', "\\s")
+    use std::fmt::Write as _;
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            ' ' => out.push_str("\\s"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if c.is_whitespace() => {
+                let _ = write!(out, "\\u{{{:x}}}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out
 }
 
+/// Single-pass inverse of [`esc`]. A scanner, not chained `str::replace`
+/// calls — replace-chains mis-decode adjacent sequences (e.g. the name
+/// `\s` escapes to `\\s`, which a `\s -> space` replace would corrupt).
 fn unesc(s: &str) -> String {
-    s.replace("\\s", " ").replace("\\\\", "\\")
+    let mut out = String::with_capacity(s.len());
+    let mut chars = s.chars().peekable();
+    while let Some(c) = chars.next() {
+        if c != '\\' {
+            out.push(c);
+            continue;
+        }
+        match chars.next() {
+            Some('\\') => out.push('\\'),
+            Some('s') => out.push(' '),
+            Some('n') => out.push('\n'),
+            Some('r') => out.push('\r'),
+            Some('t') => out.push('\t'),
+            Some('u') if chars.peek() == Some(&'{') => {
+                chars.next(); // consume '{'
+                let mut hex = String::new();
+                let mut closed = false;
+                for h in chars.by_ref() {
+                    if h == '}' {
+                        closed = true;
+                        break;
+                    }
+                    hex.push(h);
+                }
+                match u32::from_str_radix(&hex, 16).ok().and_then(char::from_u32) {
+                    Some(ch) if closed => out.push(ch),
+                    // Lenient: malformed \u{...} kept literally.
+                    _ => {
+                        out.push_str("\\u{");
+                        out.push_str(&hex);
+                        if closed {
+                            out.push('}');
+                        }
+                    }
+                }
+            }
+            // Lenient: unknown escape (or trailing backslash) kept as-is.
+            Some(other) => {
+                out.push('\\');
+                out.push(other);
+            }
+            None => out.push('\\'),
+        }
+    }
+    out
 }
 
 /// Serialize one instruction to a line.
@@ -496,5 +563,73 @@ mod tests {
         let line = inst_to_line(&inst);
         assert!(!line.contains("a b"));
         assert_eq!(line_to_inst(&line).unwrap(), inst);
+    }
+
+    #[test]
+    fn hostile_names_roundtrip() {
+        // Newlines must not break the line-per-instruction framing (a
+        // block named "a\nb" once corrupted the whole trace file), and
+        // escape-adjacent names must not confuse the decoder.
+        let names = [
+            "a\nb",
+            "a\r\nb",
+            "tab\there",
+            "back\\slash",
+            "\\s",
+            "\\\\s",
+            "trailing\\",
+            "mix \\n literal",
+            " lead and trail ",
+            // Non-ASCII / exotic whitespace: split_whitespace() splits on
+            // all of these, so esc() must catch them too.
+            "a\u{a0}b",
+            "v\u{0b}tab",
+            "ff\u{0c}",
+            "line\u{2028}sep",
+            "em\u{2003}space",
+            // Literal text that *looks* like the \u escape must survive.
+            "\\u{b}",
+            "u{b}",
+        ];
+        for name in names {
+            let inst = Inst::GetBlock {
+                name: name.into(),
+                out: 0,
+            };
+            let line = inst_to_line(&inst);
+            // `get-block name=... out=...` must stay exactly 3 tokens —
+            // any whitespace leaking out of esc() would split more.
+            assert_eq!(
+                line.split_whitespace().count(),
+                3,
+                "name {name:?} leaked whitespace that splits tokens: {line:?}"
+            );
+            assert!(!line.contains('\n'), "name {name:?} leaked a newline into the line format");
+            assert_eq!(line_to_inst(&line).unwrap(), inst, "name {name:?}");
+        }
+        // Whole-trace framing survives a newline-bearing annotation value.
+        let t = Trace {
+            insts: vec![
+                Inst::GetBlock {
+                    name: "evil\nname".into(),
+                    out: 0,
+                },
+                Inst::AnnotateBlock {
+                    block: 0,
+                    key: "k v".into(),
+                    value: "line1\nline2\r\n".into(),
+                },
+            ],
+        };
+        let text = trace_to_text(&t);
+        assert_eq!(text.lines().count(), 2);
+        assert_eq!(text_to_trace(&text).unwrap(), t);
+    }
+
+    #[test]
+    fn unesc_is_exact_inverse_on_adjacent_sequences() {
+        for s in ["\\s", "a\\sb", "\\\\", "\\n\\r", "x\\", "\\u{a0}", "\u{a0}", "\\u{", "u{}"] {
+            assert_eq!(super::unesc(&super::esc(s)), s);
+        }
     }
 }

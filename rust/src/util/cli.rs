@@ -1,6 +1,9 @@
 //! Minimal command-line parsing (no `clap` in the offline image).
 //!
-//! Grammar: `metaschedule <command> [subcommand] [--flag value]... [--switch]...`
+//! Grammar: `metaschedule <command> [subcommand] [--flag value]...
+//! [-f value]... [--switch]...` — short flags are single-dash +
+//! alphabetic (`-k 5`); anything else after one dash (e.g. a negative
+//! number) stays a positional/value.
 
 use std::collections::HashMap;
 
@@ -12,27 +15,39 @@ pub struct Args {
     pub switches: Vec<String>,
 }
 
+/// Whether `arg` introduces a flag (`--name` or alphabetic `-n`) rather
+/// than being a positional or a flag value.
+fn is_flag(arg: &str) -> bool {
+    if arg.starts_with("--") {
+        return true;
+    }
+    match arg.strip_prefix('-') {
+        Some(rest) => {
+            let name = rest.split_once('=').map(|(k, _)| k).unwrap_or(rest);
+            !name.is_empty() && name.chars().all(|c| c.is_ascii_alphabetic())
+        }
+        None => false,
+    }
+}
+
 impl Args {
     /// Parse from an iterator of raw arguments (excluding argv[0]).
     pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
         let mut out = Args::default();
         let mut iter = raw.into_iter().peekable();
         while let Some(arg) = iter.next() {
-            if let Some(name) = arg.strip_prefix("--") {
-                if let Some((k, v)) = name.split_once('=') {
-                    out.flags.insert(k.to_string(), v.to_string());
-                } else if iter
-                    .peek()
-                    .map(|n| !n.starts_with("--"))
-                    .unwrap_or(false)
-                {
-                    let v = iter.next().unwrap();
-                    out.flags.insert(name.to_string(), v);
-                } else {
-                    out.switches.push(name.to_string());
-                }
-            } else {
+            if !is_flag(&arg) {
                 out.positional.push(arg);
+                continue;
+            }
+            let name = arg.trim_start_matches('-');
+            if let Some((k, v)) = name.split_once('=') {
+                out.flags.insert(k.to_string(), v.to_string());
+            } else if iter.peek().map(|n| !is_flag(n)).unwrap_or(false) {
+                let v = iter.next().unwrap();
+                out.flags.insert(name.to_string(), v);
+            } else {
+                out.switches.push(name.to_string());
             }
         }
         out
@@ -91,5 +106,24 @@ mod tests {
         let a = parse("tune");
         assert_eq!(a.flag_or("target", "cpu"), "cpu");
         assert_eq!(a.flag_usize("trials", 64), 64);
+    }
+
+    #[test]
+    fn parses_short_flags() {
+        let a = parse("db top --workload GMM -k 5 --db /tmp/t.jsonl");
+        assert_eq!(a.positional, vec!["db", "top"]);
+        assert_eq!(a.flag("workload"), Some("GMM"));
+        assert_eq!(a.flag_usize("k", 0), 5);
+        assert_eq!(a.flag("db"), Some("/tmp/t.jsonl"));
+    }
+
+    #[test]
+    fn negative_numbers_stay_values() {
+        let a = parse("cmd --offset -5 -v");
+        assert_eq!(a.flag("offset"), Some("-5"));
+        assert!(a.has_switch("v"));
+        let b = parse("cmd -k=3 -7");
+        assert_eq!(b.flag("k"), Some("3"));
+        assert_eq!(b.positional, vec!["cmd", "-7"]);
     }
 }

@@ -1,7 +1,9 @@
-//! Minimal JSON value + writer (no serde in the offline image).
+//! Minimal JSON value + writer + parser (no serde in the offline image).
 //!
 //! Used by the experiment harness to persist measurement databases and
-//! machine-readable reports next to the human-readable tables.
+//! machine-readable reports next to the human-readable tables, and by the
+//! tuning-record database ([`crate::db`]) whose JSONL files must parse
+//! back on warm-started runs.
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
@@ -39,6 +41,59 @@ impl Json {
         let mut out = String::new();
         self.write(&mut out);
         out
+    }
+
+    /// Parse a JSON document (the exact grammar this module writes, plus
+    /// standard whitespace). Rejects trailing garbage, and nesting
+    /// deeper than [`MAX_DEPTH`] — the parser recurses, and a corrupt or
+    /// hostile input line must produce a clean error, not a stack
+    /// overflow.
+    pub fn parse(text: &str) -> Result<Json, String> {
+        let chars: Vec<char> = text.chars().collect();
+        let mut p = Parser { chars, pos: 0, depth: 0 };
+        p.skip_ws();
+        let v = p.value()?;
+        p.skip_ws();
+        if p.pos != p.chars.len() {
+            return Err(format!("trailing characters at offset {}", p.pos));
+        }
+        Ok(v)
+    }
+
+    /// Object field lookup (`None` for non-objects / missing keys).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(v) => Some(v),
+            _ => None,
+        }
     }
 
     fn write(&self, out: &mut String) {
@@ -99,6 +154,173 @@ impl Json {
     }
 }
 
+/// Nesting ceiling for [`Json::parse`] — far above anything the record
+/// store writes (≤3 levels), far below stack-overflow territory.
+const MAX_DEPTH: usize = 128;
+
+/// Recursive-descent JSON parser over a char buffer.
+struct Parser {
+    chars: Vec<char>,
+    pos: usize,
+    depth: usize,
+}
+
+impl Parser {
+    fn peek(&self) -> Option<char> {
+        self.chars.get(self.pos).copied()
+    }
+
+    fn bump(&mut self) -> Result<char, String> {
+        let c = self.peek().ok_or("unexpected end of input")?;
+        self.pos += 1;
+        Ok(c)
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(' ' | '\t' | '\n' | '\r')) {
+            self.pos += 1;
+        }
+    }
+
+    fn expect(&mut self, c: char) -> Result<(), String> {
+        let got = self.bump()?;
+        if got != c {
+            return Err(format!("expected '{c}', got '{got}' at offset {}", self.pos - 1));
+        }
+        Ok(())
+    }
+
+    fn literal(&mut self, word: &str, value: Json) -> Result<Json, String> {
+        for c in word.chars() {
+            self.expect(c)?;
+        }
+        Ok(value)
+    }
+
+    fn value(&mut self) -> Result<Json, String> {
+        self.skip_ws();
+        self.depth += 1;
+        if self.depth > MAX_DEPTH {
+            return Err(format!("nesting deeper than {MAX_DEPTH}"));
+        }
+        let v = match self.peek().ok_or("unexpected end of input")? {
+            '{' => self.object(),
+            '[' => self.array(),
+            '"' => Ok(Json::Str(self.string()?)),
+            't' => self.literal("true", Json::Bool(true)),
+            'f' => self.literal("false", Json::Bool(false)),
+            'n' => self.literal("null", Json::Null),
+            '-' | '0'..='9' => self.number(),
+            c => Err(format!("unexpected '{c}' at offset {}", self.pos)),
+        };
+        self.depth -= 1;
+        v
+    }
+
+    fn object(&mut self) -> Result<Json, String> {
+        self.expect('{')?;
+        let mut map = BTreeMap::new();
+        self.skip_ws();
+        if self.peek() == Some('}') {
+            self.pos += 1;
+            return Ok(Json::Obj(map));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(':')?;
+            let val = self.value()?;
+            map.insert(key, val);
+            self.skip_ws();
+            match self.bump()? {
+                ',' => continue,
+                '}' => return Ok(Json::Obj(map)),
+                c => return Err(format!("expected ',' or '}}', got '{c}'")),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json, String> {
+        self.expect('[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(']') {
+            self.pos += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            items.push(self.value()?);
+            self.skip_ws();
+            match self.bump()? {
+                ',' => continue,
+                ']' => return Ok(Json::Arr(items)),
+                c => return Err(format!("expected ',' or ']', got '{c}'")),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.expect('"')?;
+        let mut out = String::new();
+        loop {
+            match self.bump()? {
+                '"' => return Ok(out),
+                '\\' => match self.bump()? {
+                    '"' => out.push('"'),
+                    '\\' => out.push('\\'),
+                    '/' => out.push('/'),
+                    'b' => out.push('\u{0008}'),
+                    'f' => out.push('\u{000c}'),
+                    'n' => out.push('\n'),
+                    'r' => out.push('\r'),
+                    't' => out.push('\t'),
+                    'u' => out.push(self.unicode_escape()?),
+                    c => return Err(format!("bad escape '\\{c}'")),
+                },
+                c => out.push(c),
+            }
+        }
+    }
+
+    fn hex4(&mut self) -> Result<u32, String> {
+        let mut v = 0u32;
+        for _ in 0..4 {
+            let c = self.bump()?;
+            let d = c.to_digit(16).ok_or_else(|| format!("bad hex digit '{c}'"))?;
+            v = v * 16 + d;
+        }
+        Ok(v)
+    }
+
+    fn unicode_escape(&mut self) -> Result<char, String> {
+        let hi = self.hex4()?;
+        // Surrogate pair: a following \uXXXX low surrogate combines.
+        if (0xd800..0xdc00).contains(&hi) {
+            self.expect('\\')?;
+            self.expect('u')?;
+            let lo = self.hex4()?;
+            if !(0xdc00..0xe000).contains(&lo) {
+                return Err(format!("unpaired surrogate {hi:04x}/{lo:04x}"));
+            }
+            let code = 0x10000 + ((hi - 0xd800) << 10) + (lo - 0xdc00);
+            return char::from_u32(code).ok_or_else(|| format!("bad codepoint {code:x}"));
+        }
+        char::from_u32(hi).ok_or_else(|| format!("bad codepoint {hi:x}"))
+    }
+
+    fn number(&mut self) -> Result<Json, String> {
+        let start = self.pos;
+        while matches!(self.peek(), Some('-' | '+' | '.' | 'e' | 'E' | '0'..='9')) {
+            self.pos += 1;
+        }
+        let s: String = self.chars[start..self.pos].iter().collect();
+        s.parse::<f64>()
+            .map(Json::Num)
+            .map_err(|e| format!("bad number '{s}': {e}"))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -125,5 +347,74 @@ mod tests {
     fn integral_floats_print_as_ints() {
         assert_eq!(Json::num(3.0).to_string(), "3");
         assert_eq!(Json::num(3.5).to_string(), "3.5");
+    }
+
+    #[test]
+    fn parse_roundtrips_writer_output() {
+        let j = Json::obj(vec![
+            ("name", Json::str("g m\nm\t\"q\"\\x")),
+            ("lat", Json::num(1.25e-5)),
+            ("n", Json::num(42.0)),
+            ("ok", Json::Bool(true)),
+            ("none", Json::Null),
+            (
+                "arr",
+                Json::arr(vec![Json::num(-3.5), Json::str(""), Json::Bool(false)]),
+            ),
+        ]);
+        let text = j.to_string();
+        assert_eq!(Json::parse(&text).unwrap(), j);
+    }
+
+    #[test]
+    fn parse_handles_whitespace_and_nesting() {
+        let j = Json::parse(" { \"a\" : [ 1 , { \"b\" : null } ] } ").unwrap();
+        assert_eq!(j.get("a").unwrap().as_arr().unwrap()[0].as_f64(), Some(1.0));
+        assert_eq!(
+            j.get("a").unwrap().as_arr().unwrap()[1].get("b"),
+            Some(&Json::Null)
+        );
+    }
+
+    #[test]
+    fn parse_control_char_escapes() {
+        // The writer emits \u00XX for control chars; the parser must read
+        // them back, including an astral-plane surrogate pair.
+        let j = Json::Str("a\u{0001}b".into());
+        assert_eq!(Json::parse(&j.to_string()).unwrap(), j);
+        assert_eq!(
+            Json::parse("\"\\ud83d\\ude00\"").unwrap(),
+            Json::Str("\u{1f600}".into())
+        );
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(Json::parse("").is_err());
+        assert!(Json::parse("{").is_err());
+        assert!(Json::parse("{}extra").is_err());
+        assert!(Json::parse("{\"a\":}").is_err());
+        assert!(Json::parse("[1,]").is_err());
+        assert!(Json::parse("\"\\q\"").is_err());
+        assert!(Json::parse("nul").is_err());
+    }
+
+    #[test]
+    fn parse_deep_nesting_errors_instead_of_overflowing() {
+        let hostile = "[".repeat(100_000);
+        let err = Json::parse(&hostile).unwrap_err();
+        assert!(err.contains("nesting"), "{err}");
+        // At the ceiling itself, a legal deep document still parses.
+        let deep = format!("{}1{}", "[".repeat(100), "]".repeat(100));
+        assert!(Json::parse(&deep).is_ok());
+    }
+
+    #[test]
+    fn accessors_return_none_on_type_mismatch() {
+        let j = Json::parse("{\"a\":1}").unwrap();
+        assert!(j.get("missing").is_none());
+        assert!(j.get("a").unwrap().as_str().is_none());
+        assert!(j.as_f64().is_none());
+        assert_eq!(j.get("a").unwrap().as_f64(), Some(1.0));
     }
 }

@@ -1,0 +1,135 @@
+//! End-to-end persistence: tune into a JSONL file, re-open it in a
+//! "new session", and verify the acceptance contract — the second run
+//! starts from the first run's best, the cost model pretrains from
+//! records, `db stats` numbers add up, and every stored trace
+//! round-trips through `trace::serde`.
+
+use std::path::{Path, PathBuf};
+
+use metaschedule::cost_model::GbtCostModel;
+use metaschedule::db::{pretrain_cost_model, Database, DbStats, JsonFileDb};
+use metaschedule::search::{EvolutionarySearch, SearchConfig, SimMeasurer};
+use metaschedule::sim::Target;
+use metaschedule::space::SpaceComposer;
+use metaschedule::tir::structural_hash;
+use metaschedule::trace::serde::{text_to_trace, trace_to_text};
+use metaschedule::workloads;
+
+/// Unique temp path per test; removed on drop.
+fn tmp(name: &str) -> (PathBuf, Guard) {
+    let p = std::env::temp_dir().join(format!("ms-dbpersist-{}-{name}.jsonl", std::process::id()));
+    let _ = std::fs::remove_file(&p);
+    (p.clone(), Guard(p))
+}
+
+struct Guard(PathBuf);
+impl Drop for Guard {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.0);
+    }
+}
+
+fn quick_cfg(trials: usize) -> SearchConfig {
+    SearchConfig {
+        population: 24,
+        generations: 3,
+        num_trials: trials,
+        measure_batch: 8,
+        ..SearchConfig::default()
+    }
+}
+
+/// One "session": open the file, tune, drop the handle.
+fn tune_session(path: &Path, trials: usize, seed: u64) -> metaschedule::search::TuneResult {
+    let target = Target::cpu_avx512();
+    let prog = workloads::matmul(1, 128, 128, 128);
+    let composer = SpaceComposer::generic(target.clone());
+    let mut db = JsonFileDb::open(path).expect("open db");
+    let mut model = GbtCostModel::new();
+    let mut measurer = SimMeasurer::new(target);
+    EvolutionarySearch::new(quick_cfg(trials)).tune_db(&prog, &composer, &mut model, &mut measurer, &mut db, seed)
+}
+
+#[test]
+fn second_session_resumes_from_first() {
+    let (path, _g) = tmp("resume");
+    let first = tune_session(&path, 24, 42);
+    assert_eq!(first.warm_records, 0, "fresh file must start cold");
+
+    // "New session": a separate open of the same file.
+    let second = tune_session(&path, 24, 42);
+    assert!(second.warm_records > 0, "second session did not warm-start");
+    assert!(
+        second.best_latency_s <= first.best_latency_s,
+        "resumed run regressed: {} vs {}",
+        second.best_latency_s,
+        first.best_latency_s
+    );
+
+    // The file accumulated both sessions, with no candidate measured twice.
+    let db = JsonFileDb::open(&path).unwrap();
+    let stats = DbStats::compute(&db);
+    assert_eq!(stats.workloads.len(), 1);
+    assert_eq!(stats.records, first.trials + second.trials);
+    let hashes = db.candidate_hashes(0);
+    let unique: std::collections::HashSet<u64> = hashes.iter().copied().collect();
+    assert_eq!(unique.len(), hashes.len(), "a candidate was re-measured across sessions");
+}
+
+#[test]
+fn stored_traces_roundtrip_and_replay_to_recorded_best() {
+    let (path, _g) = tmp("roundtrip");
+    let result = tune_session(&path, 24, 7);
+    let db = JsonFileDb::open(&path).unwrap();
+    let top = db.query_top_k(0, 3);
+    assert!(!top.is_empty());
+    // Acceptance: the top record's trace round-trips through trace::serde
+    // and replays to a program matching its stored candidate hash.
+    for rec in &top {
+        let text = trace_to_text(&rec.trace);
+        assert_eq!(text_to_trace(&text).unwrap(), rec.trace);
+        let prog = workloads::matmul(1, 128, 128, 128);
+        let sch = metaschedule::trace::replay(&rec.trace, &prog, 0).expect("stored trace must replay");
+        assert_eq!(structural_hash(&sch.prog), rec.cand_hash);
+    }
+    // The best record matches the returned tuning result.
+    assert_eq!(top[0].best_latency(), Some(result.best_latency_s));
+    assert_eq!(trace_to_text(&top[0].trace), trace_to_text(&result.best_trace));
+}
+
+#[test]
+fn pretraining_from_file_fits_the_model() {
+    let (path, _g) = tmp("pretrain");
+    tune_session(&path, 24, 5);
+    let db = JsonFileDb::open(&path).unwrap();
+    let prog = workloads::matmul(1, 128, 128, 128);
+    let mut model = GbtCostModel::new();
+    assert_eq!(model.n_samples(), 0);
+    let fed = pretrain_cost_model(&mut model, &db, 0, &prog, 256);
+    assert!(fed > 0);
+    assert_eq!(model.n_samples(), fed);
+    assert!(model.predict(&[&prog])[0] != 0.0, "model still cold after file pretrain");
+}
+
+#[test]
+fn distinct_targets_do_not_share_records() {
+    let (path, _g) = tmp("targets");
+    let prog = workloads::matmul(1, 128, 128, 128);
+    let tune_on = |path: &Path, target: Target, seed: u64| {
+        let composer = SpaceComposer::generic(target.clone());
+        let mut db = JsonFileDb::open(path).expect("open db");
+        let mut model = GbtCostModel::new();
+        let mut measurer = SimMeasurer::new(target);
+        EvolutionarySearch::new(quick_cfg(16)).tune_db(&prog, &composer, &mut model, &mut measurer, &mut db, seed)
+    };
+    let cpu = tune_on(&path, Target::cpu_avx512(), 1);
+    // Same program on GPU: the cpu records must not leak into its warm set.
+    let gpu = tune_on(&path, Target::gpu(), 1);
+    assert_eq!(cpu.warm_records, 0);
+    assert_eq!(gpu.warm_records, 0, "gpu run warm-started from cpu records");
+    let db = JsonFileDb::open(&path).unwrap();
+    assert_eq!(db.workload_entries().len(), 2, "one workload per (program, target)");
+    // But a second cpu run does warm-start.
+    let cpu2 = tune_on(&path, Target::cpu_avx512(), 2);
+    assert!(cpu2.warm_records > 0);
+}

@@ -2,8 +2,13 @@
 //! an execution knob, never an input to the search. `(seed, threads=1)`
 //! and `(seed, threads=N)` must produce bit-identical tuning outcomes —
 //! best trace, best latency, trial count, and the full tuning curve.
+//! The tuning database extends the contract: the database *contents* are
+//! an input to the search (a warm run differs from a cold run), but for
+//! a fixed starting database the outcome is still thread-count-invariant
+//! and repeat-run reproducible.
 
 use metaschedule::cost_model::GbtCostModel;
+use metaschedule::db::{Database, InMemoryDb};
 use metaschedule::search::{EvolutionarySearch, SearchConfig, SimMeasurer, TaskScheduler};
 use metaschedule::sim::Target;
 use metaschedule::space::SpaceComposer;
@@ -117,6 +122,99 @@ fn task_scheduler_identical_across_thread_counts() {
             structural_hash(&a.best_prog),
             structural_hash(&b.best_prog)
         );
+    }
+}
+
+#[test]
+fn warm_start_deterministic_across_thread_counts() {
+    // (seed, cold DB) and (seed, warm DB) are *different* searches, but
+    // each must be deterministic in its own right: identical across
+    // thread counts and across repeat runs from the same starting DB.
+    let target = Target::cpu_avx512();
+    let prog = workloads::matmul(1, 128, 128, 128);
+    let composer = SpaceComposer::generic(target.clone());
+    let run = |db: &mut dyn Database, threads: usize| {
+        let mut model = GbtCostModel::new();
+        let mut measurer = SimMeasurer::new(target.clone());
+        EvolutionarySearch::new(cfg(32, threads)).tune_db(&prog, &composer, &mut model, &mut measurer, db, 13)
+    };
+    // Cold phase, serial vs parallel: identical results AND identical
+    // database contents (records are committed in fold order).
+    let mut db_serial = InMemoryDb::new();
+    let mut db_parallel = InMemoryDb::new();
+    let cold_a = run(&mut db_serial, 1);
+    let cold_b = run(&mut db_parallel, 4);
+    assert_eq!(cold_a.best_latency_s, cold_b.best_latency_s);
+    assert_eq!(cold_a.curve, cold_b.curve);
+    assert_eq!(db_serial.num_records(), db_parallel.num_records());
+    let dump = |db: &InMemoryDb| -> Vec<String> {
+        db.records_for(0).iter().map(|r| r.to_json().to_string()).collect()
+    };
+    assert_eq!(dump(&db_serial), dump(&db_parallel), "committed records diverged with threads");
+
+    // Warm phase from identical snapshots: same contract, and the warm
+    // result can only improve on the recorded best.
+    let mut warm_serial = db_serial.clone();
+    let mut warm_parallel = db_serial.clone();
+    let warm_a = run(&mut warm_serial, 1);
+    let warm_b = run(&mut warm_parallel, 4);
+    assert!(warm_a.warm_records > 0);
+    assert_eq!(warm_a.best_latency_s, warm_b.best_latency_s, "warm run diverged with threads");
+    assert_eq!(warm_a.curve, warm_b.curve);
+    assert_eq!(
+        trace_to_text(&warm_a.best_trace),
+        trace_to_text(&warm_b.best_trace)
+    );
+    assert_eq!(dump(&warm_serial), dump(&warm_parallel));
+    assert!(warm_a.best_latency_s <= cold_a.best_latency_s);
+
+    // Repeat warm run from the same snapshot: byte-identical.
+    let mut warm_again = db_serial.clone();
+    let warm_c = run(&mut warm_again, 1);
+    assert_eq!(warm_a.best_latency_s, warm_c.best_latency_s);
+    assert_eq!(warm_a.curve, warm_c.curve);
+}
+
+#[test]
+fn task_scheduler_with_shared_db_identical_across_thread_counts() {
+    // Warmup rounds commit through the SharedDb from worker threads; the
+    // per-task results must still match the serial schedule for a fixed
+    // starting database — cold and warm.
+    let target = Target::cpu_avx512();
+    let composer = SpaceComposer::generic(target.clone());
+    let tasks = vec![
+        metaschedule::search::Task {
+            name: "gmm".into(),
+            prog: workloads::matmul(1, 128, 128, 128),
+            weight: 3,
+        },
+        metaschedule::search::Task {
+            name: "sfm".into(),
+            prog: workloads::softmax(1, 128, 128),
+            weight: 1,
+        },
+    ];
+    let run = |db: &mut dyn Database, threads: usize| {
+        let mut measurer = SimMeasurer::new(target.clone());
+        let ts = TaskScheduler::new(cfg(0, threads));
+        ts.tune_tasks_with_db(&tasks, &composer, &mut measurer, db, 64, 17)
+    };
+    let mut cold = InMemoryDb::new();
+    let serial = run(&mut cold.clone(), 1);
+    let parallel = run(&mut cold, 4);
+    for (a, b) in serial.iter().zip(&parallel) {
+        assert_eq!(a.best_latency_s, b.best_latency_s, "cold task {} diverged", a.task);
+        assert_eq!(a.trials, b.trials);
+    }
+    // Warm pass from the (parallel-written) database.
+    let warm_serial = run(&mut cold.clone(), 1);
+    let warm_parallel = run(&mut cold.clone(), 4);
+    for (a, b) in warm_serial.iter().zip(&warm_parallel) {
+        assert_eq!(a.best_latency_s, b.best_latency_s, "warm task {} diverged", a.task);
+        assert_eq!(structural_hash(&a.best_prog), structural_hash(&b.best_prog));
+    }
+    for (cold_r, warm_r) in parallel.iter().zip(&warm_serial) {
+        assert!(warm_r.best_latency_s <= cold_r.best_latency_s);
     }
 }
 

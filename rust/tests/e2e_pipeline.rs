@@ -114,6 +114,9 @@ impl Measurer for RejectingMeasurer {
     fn count(&self) -> usize {
         self.0
     }
+    fn target_name(&self) -> &'static str {
+        "rejecting"
+    }
 }
 
 #[test]
