@@ -1,0 +1,118 @@
+//! Serving-path microbenchmarks: `ServingCache::lookup` throughput (the
+//! "heavy traffic" read path) against the log-replay alternative it
+//! replaces (`Database::query_top_k` per request), plus the snapshot
+//! build cost a publisher pays per refresh.
+//!
+//! ```sh
+//! cargo bench --bench serving_lookup             # full run
+//! cargo bench --bench serving_lookup -- --smoke  # CI: one pass, compile+run gate
+//! ```
+
+use metaschedule::db::{Database, InMemoryDb, TuningRecord};
+use metaschedule::serve::ServingCache;
+use metaschedule::trace::{Inst, Trace};
+use metaschedule::util::bench::{bench, print_table};
+use metaschedule::util::rng::Rng;
+
+/// Synthetic database: `workloads` workloads x `records` records each,
+/// split across two targets, with a small but real trace per record.
+fn synthetic_db(workloads: usize, records: usize) -> (InMemoryDb, Vec<(u64, &'static str)>) {
+    let mut db = InMemoryDb::new();
+    let mut rng = Rng::seed_from_u64(7);
+    let mut keys = Vec::with_capacity(workloads);
+    for w in 0..workloads {
+        let shash = rng.next_u64();
+        let target = if w % 2 == 0 { "cpu" } else { "gpu" };
+        let wid = db.register_workload(&format!("w{w}"), shash, target);
+        keys.push((shash, target));
+        for r in 0..records {
+            let lat = if r % 7 == 6 { None } else { Some((1.0 + rng.gen_f64()) * 1e-5) };
+            db.commit_record(TuningRecord {
+                workload: wid,
+                trace: Trace {
+                    insts: vec![Inst::GetBlock { name: format!("blk{w}"), out: 0 }],
+                },
+                latencies: lat.into_iter().collect(),
+                target: target.to_string(),
+                seed: 1,
+                round: r as u64,
+                cand_hash: rng.next_u64(),
+            });
+        }
+    }
+    (db, keys)
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let (samples, budget_ms) = if smoke { (1, 0.0) } else { (30, 20.0) };
+    let (n_workloads, n_records) = if smoke { (8, 16) } else { (128, 64) };
+    let (db, keys) = synthetic_db(n_workloads, n_records);
+
+    let cache = ServingCache::build(&db, 8);
+    println!(
+        "serving snapshot: {} workloads, {} records indexed from {} on file{}\n",
+        cache.num_workloads(),
+        cache.num_records(),
+        db.num_records(),
+        if smoke { " [smoke mode]" } else { "" }
+    );
+    // The snapshot must answer (sanity-gate the numbers below).
+    assert!(cache.lookup(keys[0].0, keys[0].1).is_some(), "snapshot lost workload 0");
+
+    let mut rows = Vec::new();
+    const BATCH: usize = 1000;
+
+    let s = bench("serving_cache_build", samples.min(10), budget_ms, || {
+        let _ = ServingCache::build(&db, 8);
+    });
+    rows.push(vec!["snapshot build (publisher cost)".into(), fmt(s.median_ns), "-".into()]);
+
+    // Indexed lookups: a hash probe + short target scan per request.
+    let mut hits = 0usize;
+    let s = bench("serving_lookup", samples, budget_ms, || {
+        for i in 0..BATCH {
+            let (shash, target) = keys[i % keys.len()];
+            if cache.lookup(shash, target).is_some() {
+                hits += 1;
+            }
+        }
+    });
+    let lookup_ns = s.median_ns / BATCH as f64;
+    rows.push(vec![
+        format!("ServingCache::lookup (batch of {BATCH})"),
+        fmt(lookup_ns),
+        format!("{:.1}M lookups/s", 1e3 / lookup_ns),
+    ]);
+    assert!(hits > 0, "benchmark loop never hit");
+
+    // The path it replaces: top-k query against the database per request
+    // (sort + clone of the workload's records each time).
+    let s = bench("db_query_top_k", samples.min(10), budget_ms, || {
+        for w in 0..keys.len().min(64) {
+            let _ = db.query_top_k(w, 1);
+        }
+    });
+    let replay_ns = s.median_ns / keys.len().min(64) as f64;
+    rows.push(vec![
+        "Database::query_top_k per request".into(),
+        fmt(replay_ns),
+        format!("{:.0}x slower than lookup", replay_ns / lookup_ns.max(1e-9)),
+    ]);
+
+    print_table(
+        "serving-path microbenchmarks",
+        &["path", "median/op", "throughput"],
+        &rows,
+    );
+}
+
+fn fmt(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} us", ns / 1e3)
+    } else {
+        format!("{:.2} ms", ns / 1e6)
+    }
+}

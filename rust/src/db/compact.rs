@@ -1,0 +1,200 @@
+//! Record GC / compaction: rewrite a grown database down to the records
+//! that still earn their bytes — the top-k successful records per
+//! workload (what [`crate::db::Database::query_top_k`] and the serving
+//! layer actually read) plus **every** failed record (their candidate
+//! hashes are the cross-session dedup set; dropping one would let a
+//! warm-started search re-measure a known-invalid schedule).
+//!
+//! The plan is a pure function of the record list ([`keep_mask`]), so the
+//! same logic backs three entry points: the `db compact` CLI
+//! ([`compact_file`]), the size-triggered auto-GC inside
+//! [`crate::db::JsonFileDb`]'s commit path, and the property tests that
+//! pin the contract. Rewrites are atomic (temp file in the same
+//! directory, fsync, rename) and canonicalizing (records re-serialize
+//! through [`crate::db::TuningRecord::to_json`]), which is what makes
+//! compaction idempotent byte-for-byte: the first pass canonicalizes,
+//! the second is the identity.
+//!
+//! What compaction deliberately loses: the candidate hashes of dropped
+//! *successful* records. A later warm start may re-measure a dominated
+//! candidate it had already seen — a bounded cost, unlike losing a best
+//! record (never dropped) or a failure hash (never dropped).
+
+use crate::db::record::TuningRecord;
+
+/// What to keep when compacting.
+#[derive(Debug, Clone)]
+pub struct CompactionPolicy {
+    /// Successful records kept per workload (best-first). Failed records
+    /// are always kept for dedup.
+    pub top_k: usize,
+}
+
+/// Default `top_k`: comfortably above the search's warm-start replay
+/// depth (8) so compaction never degrades a warm start, while still
+/// bounding the file.
+pub const DEFAULT_TOP_K: usize = 32;
+
+impl Default for CompactionPolicy {
+    fn default() -> Self {
+        CompactionPolicy { top_k: DEFAULT_TOP_K }
+    }
+}
+
+/// Outcome of one compaction pass.
+#[derive(Debug, Clone)]
+pub struct CompactionReport {
+    /// Records surviving (successful top-k + all failures).
+    pub kept: usize,
+    /// Records dropped (dominated successful records).
+    pub dropped: usize,
+    /// Failed records kept for cross-session dedup.
+    pub kept_failures: usize,
+    /// Corrupt lines the open had recovered over, now gone for good (the
+    /// canonical rewrite does not carry unparseable bytes forward).
+    pub corrupt_dropped: usize,
+    pub bytes_before: u64,
+    pub bytes_after: u64,
+}
+
+impl CompactionReport {
+    /// One-line human rendering (the `db compact` CLI output).
+    pub fn render(&self, path: &str) -> String {
+        let mut out = format!(
+            "compacted {path}: kept {} records ({} failures for dedup), dropped {}; {} -> {} bytes",
+            self.kept, self.kept_failures, self.dropped, self.bytes_before, self.bytes_after
+        );
+        if self.corrupt_dropped > 0 {
+            out.push_str(&format!(
+                "\nwarning: {} corrupt line(s) were dropped permanently",
+                self.corrupt_dropped
+            ));
+        }
+        out
+    }
+}
+
+/// The compaction plan: `mask[i]` says whether `records[i]` survives.
+/// Pure and order-preserving — survivors keep their relative commit
+/// order, so `query_top_k` (stable sort, commit-order ties) answers
+/// identically on the compacted set for any `k <= policy.top_k`.
+pub fn keep_mask(records: &[TuningRecord], policy: &CompactionPolicy) -> Vec<bool> {
+    let mut mask = vec![false; records.len()];
+    // Group successful record indices per workload, in commit order.
+    let mut by_workload: Vec<(usize, Vec<usize>)> = Vec::new();
+    for (i, r) in records.iter().enumerate() {
+        if r.is_failed() {
+            mask[i] = true; // failures always survive (dedup set)
+            continue;
+        }
+        match by_workload.iter_mut().find(|(w, _)| *w == r.workload) {
+            Some((_, v)) => v.push(i),
+            None => by_workload.push((r.workload, vec![i])),
+        }
+    }
+    for (_, mut idxs) in by_workload {
+        // Same criterion as `query_top_k`: ascending best latency, stable
+        // sort so commit order breaks ties.
+        idxs.sort_by(|&a, &b| {
+            let la = records[a].best_latency().expect("failures filtered above");
+            let lb = records[b].best_latency().expect("failures filtered above");
+            la.total_cmp(&lb)
+        });
+        for &i in idxs.iter().take(policy.top_k) {
+            mask[i] = true;
+        }
+    }
+    mask
+}
+
+/// Compact a JSONL database file in place (atomically): open, rewrite
+/// with the [`keep_mask`] survivors, rename over the original. Returns
+/// the report; the file is untouched on error.
+///
+/// When the open recovered over corrupt lines, the rewrite would drop
+/// them *permanently* — that destruction is refused unless `repair` is
+/// set (the CLI's `--repair` switch), so a user always sees what they
+/// are about to lose before losing it.
+pub fn compact_file(
+    path: impl AsRef<std::path::Path>,
+    policy: &CompactionPolicy,
+    repair: bool,
+) -> Result<CompactionReport, String> {
+    let path = path.as_ref();
+    if !path.exists() {
+        return Err(format!("no database at {}", path.display()));
+    }
+    let mut db = crate::db::JsonFileDb::open(path)?;
+    if db.skipped_lines() > 0 && !repair {
+        return Err(format!(
+            "{}: {} corrupt line(s) would be dropped permanently:\n  {}\nre-run with --repair to drop them",
+            path.display(),
+            db.skipped_lines(),
+            db.skip_notes().join("\n  ")
+        ));
+    }
+    db.compact(policy)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::Trace;
+
+    fn rec(workload: usize, cand: u64, lat: Option<f64>) -> TuningRecord {
+        TuningRecord {
+            workload,
+            trace: Trace { insts: vec![] },
+            latencies: lat.into_iter().collect(),
+            target: "cpu".into(),
+            seed: 0,
+            round: cand,
+            cand_hash: cand,
+        }
+    }
+
+    #[test]
+    fn keep_mask_keeps_top_k_and_all_failures() {
+        let records = vec![
+            rec(0, 1, Some(3.0)),
+            rec(0, 2, None), // failure: always kept
+            rec(0, 3, Some(1.0)),
+            rec(0, 4, Some(2.0)),
+            rec(1, 5, Some(9.0)),
+        ];
+        let mask = keep_mask(&records, &CompactionPolicy { top_k: 2 });
+        // Workload 0 keeps its two best (1.0, 2.0) + the failure; the 3.0
+        // record is dominated and dropped. Workload 1 keeps its only record.
+        assert_eq!(mask, vec![false, true, true, true, true]);
+    }
+
+    #[test]
+    fn keep_mask_breaks_latency_ties_by_commit_order() {
+        let records = vec![rec(0, 1, Some(2.0)), rec(0, 2, Some(2.0)), rec(0, 3, Some(2.0))];
+        let mask = keep_mask(&records, &CompactionPolicy { top_k: 2 });
+        assert_eq!(mask, vec![true, true, false], "earliest committed ties must win");
+    }
+
+    #[test]
+    fn keep_mask_on_survivors_is_identity() {
+        let records = vec![
+            rec(0, 1, Some(3.0)),
+            rec(0, 2, None),
+            rec(0, 3, Some(1.0)),
+            rec(1, 4, Some(5.0)),
+            rec(1, 5, Some(4.0)),
+        ];
+        let policy = CompactionPolicy { top_k: 1 };
+        let mask = keep_mask(&records, &policy);
+        let survivors: Vec<TuningRecord> =
+            records.into_iter().zip(&mask).filter(|(_, k)| **k).map(|(r, _)| r).collect();
+        let mask2 = keep_mask(&survivors, &policy);
+        assert!(mask2.iter().all(|&k| k), "compaction must be idempotent");
+    }
+
+    #[test]
+    fn compact_file_errors_on_missing_path() {
+        let err = compact_file("/nonexistent/db.jsonl", &CompactionPolicy::default(), false).unwrap_err();
+        assert!(err.contains("no database"), "{err}");
+    }
+}

@@ -7,27 +7,182 @@
 //! commit order — re-opening reproduces the exact iteration order the
 //! writing process saw, which is what keeps warm-started runs
 //! deterministic.
+//!
+//! # Corruption recovery
+//!
+//! A crash mid-append leaves a truncated final line; stray editors leave
+//! garbage ones. [`JsonFileDb::open`] recovers every intact line and
+//! counts the rest ([`JsonFileDb::skipped_lines`]) instead of refusing
+//! the whole file — losing one line must not orphan a campaign's worth
+//! of history. Recovery never rewrites the file on open (an open must be
+//! read-safe on a file it merely mis-identified); skipped lines linger
+//! until the next [`JsonFileDb::compact`], whose canonical rewrite drops
+//! them. Two guards bound the lossiness: a non-empty file where *no*
+//! line parses is rejected as not-a-tuning-db (opening the wrong path
+//! must never append records into someone's unrelated file), and
+//! workload-*registry* damage (a registration line missing from the
+//! middle of the file) fails the open outright — recovering past it
+//! would silently drop every later workload's intact records, and a
+//! subsequent compaction would make that loss permanent.
+//!
+//! # Auto-GC
+//!
+//! With [`JsonFileDb::set_auto_gc`], a commit that pushes the file past
+//! `max_bytes` triggers an in-place [`JsonFileDb::compact`] (only when
+//! the plan would actually drop something, so a file of all-live records
+//! is not rewritten once per commit). Off by default: auto-GC shrinks
+//! the candidate-dedup set, which is a policy choice, not a default.
 
 use std::fs::{File, OpenOptions};
 use std::io::Write as _;
 use std::path::{Path, PathBuf};
 
+use crate::db::compact::{keep_mask, CompactionPolicy, CompactionReport};
 use crate::db::memory::InMemoryDb;
 use crate::db::record::TuningRecord;
 use crate::db::{Database, WorkloadEntry, WorkloadId};
 use crate::util::json::Json;
+
+/// Size-triggered GC configuration (see [`JsonFileDb::set_auto_gc`]).
+#[derive(Debug, Clone)]
+pub struct AutoGc {
+    /// Compact when a commit leaves the file larger than this. When the
+    /// live records alone (top-k + failures) already exceed the budget,
+    /// the runtime ratchets this up to twice the current file size so
+    /// the (futile) plan is not recomputed on every commit.
+    pub max_bytes: u64,
+    pub policy: CompactionPolicy,
+}
+
+/// Result of replaying a JSONL file into an in-memory index without
+/// opening it for writing — shared by [`JsonFileDb::open`] and the
+/// read-only serving loader ([`crate::serve::ServingCache::load`]).
+pub(crate) struct LoadedIndex {
+    pub mem: InMemoryDb,
+    /// Lines that failed to parse/apply and were skipped.
+    pub skipped: usize,
+    /// `file:line: error` for the first few skipped lines.
+    pub notes: Vec<String>,
+    /// Whether the file ends in a newline (false after a crash truncated
+    /// the final line — the next append must not concatenate onto it).
+    pub ends_with_newline: bool,
+}
+
+/// Cap on retained skip diagnostics (the count is always exact).
+const MAX_SKIP_NOTES: usize = 8;
+
+/// Per-line recovery outcome: applied, or skipped with a reason. A
+/// `Result::Err` from [`apply_line`] is *fatal* to the whole open.
+enum LineOutcome {
+    Applied,
+    Skipped(String),
+}
+
+/// Parse and apply one JSONL line against the index under construction.
+///
+/// Record-level damage is skippable: losing one record loses one
+/// measurement. Registry-level damage is NOT — an intact workload line
+/// that no longer fits the registry (out-of-order id, duplicate key)
+/// proves an *earlier* registration went missing, and "recovering" past
+/// it would misbind or silently drop every later workload's records
+/// (and a subsequent compaction would make that loss permanent). That
+/// case fails the open instead.
+fn apply_line(mem: &mut InMemoryDb, line: &str) -> Result<LineOutcome, String> {
+    let j = match Json::parse(line) {
+        Ok(j) => j,
+        Err(e) => return Ok(LineOutcome::Skipped(e)),
+    };
+    match j.get("kind").and_then(Json::as_str) {
+        Some("workload") => {
+            let entry = match WorkloadEntry::from_json(&j) {
+                Ok(e) => e,
+                Err(e) => return Ok(LineOutcome::Skipped(format!("workload line: {e}"))),
+            };
+            mem.insert_entry(entry)
+                .map_err(|e| format!("workload registry damaged ({e}); refusing lossy recovery"))?;
+            Ok(LineOutcome::Applied)
+        }
+        Some("record") => {
+            let rec = match TuningRecord::from_json(&j) {
+                Ok(r) => r,
+                Err(e) => return Ok(LineOutcome::Skipped(format!("record line: {e}"))),
+            };
+            if rec.workload >= mem.num_workloads() {
+                return Ok(LineOutcome::Skipped(format!(
+                    "record references unknown workload {}",
+                    rec.workload
+                )));
+            }
+            mem.commit_record(rec);
+            Ok(LineOutcome::Applied)
+        }
+        other => Ok(LineOutcome::Skipped(format!("unknown line kind {other:?}"))),
+    }
+}
+
+/// Replay `path` into an index, recovering over corrupt lines. Errors
+/// on I/O failure, on a non-empty file yielding no recognizable line at
+/// all (wrong file), and on workload-registry damage (see
+/// [`apply_line`]). A missing file is an empty index.
+pub(crate) fn read_index(path: &Path) -> Result<LoadedIndex, String> {
+    let mut out = LoadedIndex {
+        mem: InMemoryDb::new(),
+        skipped: 0,
+        notes: Vec::new(),
+        ends_with_newline: true,
+    };
+    if !path.exists() {
+        return Ok(out);
+    }
+    let text = std::fs::read_to_string(path).map_err(|e| format!("read {}: {e}", path.display()))?;
+    out.ends_with_newline = text.is_empty() || text.ends_with('\n');
+    let mut recognized = 0usize;
+    for (no, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        match apply_line(&mut out.mem, line) {
+            Ok(LineOutcome::Applied) => recognized += 1,
+            Ok(LineOutcome::Skipped(e)) => {
+                out.skipped += 1;
+                if out.notes.len() < MAX_SKIP_NOTES {
+                    out.notes.push(format!("{}:{}: {e}", path.display(), no + 1));
+                }
+            }
+            Err(e) => return Err(format!("{}:{}: {e}", path.display(), no + 1)),
+        }
+    }
+    if recognized == 0 && out.skipped > 0 {
+        return Err(format!(
+            "{}: no recognizable tuning-db lines ({} unparseable) — refusing to treat it as a database",
+            path.display(),
+            out.skipped
+        ));
+    }
+    Ok(out)
+}
 
 /// File-backed tuning database (`--db path.jsonl`).
 pub struct JsonFileDb {
     path: PathBuf,
     file: File,
     mem: InMemoryDb,
+    /// Corrupt lines recovered over at open time.
+    skipped: usize,
+    skip_notes: Vec<String>,
+    /// The file ends mid-line (crash-truncated tail): the next append
+    /// must start on a fresh line or it would corrupt itself too.
+    needs_newline: bool,
+    auto_gc: Option<AutoGc>,
 }
 
 impl JsonFileDb {
     /// Open (or create) a JSONL database file. Parent directories are
-    /// created; a corrupt line fails the whole open with its line number
-    /// rather than silently dropping history.
+    /// created. Corrupt lines (truncated final line after a crash,
+    /// interleaved garbage) are skipped and counted — see
+    /// [`Self::skipped_lines`] — rather than failing the open; only I/O
+    /// errors and files with no recognizable line at all are errors.
     pub fn open(path: impl AsRef<Path>) -> Result<JsonFileDb, String> {
         let path = path.as_ref().to_path_buf();
         if let Some(dir) = path.parent() {
@@ -35,53 +190,106 @@ impl JsonFileDb {
                 std::fs::create_dir_all(dir).map_err(|e| format!("mkdir {}: {e}", dir.display()))?;
             }
         }
-        let mut mem = InMemoryDb::new();
-        if path.exists() {
-            let text =
-                std::fs::read_to_string(&path).map_err(|e| format!("read {}: {e}", path.display()))?;
-            // Registered-workload count maintained inline: the bounds
-            // check runs once per record line and must not clone the
-            // registry each time.
-            let mut n_workloads = 0usize;
-            for (no, line) in text.lines().enumerate() {
-                let line = line.trim();
-                if line.is_empty() {
-                    continue;
-                }
-                let ctx = |e: String| format!("{}:{}: {e}", path.display(), no + 1);
-                let j = Json::parse(line).map_err(ctx)?;
-                match j.get("kind").and_then(Json::as_str) {
-                    Some("workload") => {
-                        let entry = WorkloadEntry::from_json(&j).map_err(ctx)?;
-                        mem.insert_entry(entry).map_err(ctx)?;
-                        n_workloads += 1;
-                    }
-                    Some("record") => {
-                        let rec = TuningRecord::from_json(&j).map_err(ctx)?;
-                        if rec.workload >= n_workloads {
-                            return Err(ctx(format!("record references unknown workload {}", rec.workload)));
-                        }
-                        mem.commit_record(rec);
-                    }
-                    other => return Err(ctx(format!("unknown line kind {other:?}"))),
-                }
-            }
-        }
+        let loaded = read_index(&path)?;
         let file = OpenOptions::new()
             .create(true)
             .append(true)
             .open(&path)
             .map_err(|e| format!("open {}: {e}", path.display()))?;
-        Ok(JsonFileDb { path, file, mem })
+        Ok(JsonFileDb {
+            path,
+            file,
+            mem: loaded.mem,
+            skipped: loaded.skipped,
+            skip_notes: loaded.notes,
+            needs_newline: !loaded.ends_with_newline,
+            auto_gc: None,
+        })
     }
 
     pub fn path(&self) -> &Path {
         &self.path
     }
 
+    /// Corrupt lines skipped while opening (0 for a healthy file). The
+    /// skipped bytes stay in the file until the next [`Self::compact`].
+    pub fn skipped_lines(&self) -> usize {
+        self.skipped
+    }
+
+    /// `file:line: error` diagnostics for the first few skipped lines.
+    pub fn skip_notes(&self) -> &[String] {
+        &self.skip_notes
+    }
+
+    /// Enable (`Some`) or disable (`None`) size-triggered auto-GC.
+    pub fn set_auto_gc(&mut self, gc: Option<AutoGc>) {
+        self.auto_gc = gc;
+    }
+
     /// Size of the backing file in bytes (0 if unreadable).
     pub fn file_len(&self) -> u64 {
         std::fs::metadata(&self.path).map(|m| m.len()).unwrap_or(0)
+    }
+
+    /// Rewrite the file atomically with only the [`keep_mask`] survivors
+    /// (top-k successful records per workload + every failure), in
+    /// canonical serialization: temp file in the same directory, fsync,
+    /// rename over the original. The in-memory index is pruned to match,
+    /// so the open handle and a fresh re-open agree. Skipped corrupt
+    /// lines and blank lines do not survive the rewrite.
+    pub fn compact(&mut self, policy: &CompactionPolicy) -> Result<CompactionReport, String> {
+        let bytes_before = self.file_len();
+        let mask = keep_mask(self.mem.records(), policy);
+        let kept: Vec<TuningRecord> = self
+            .mem
+            .records()
+            .iter()
+            .zip(&mask)
+            .filter(|(_, keep)| **keep)
+            .map(|(r, _)| r.clone())
+            .collect();
+        let dropped = mask.len() - kept.len();
+        let kept_failures = kept.iter().filter(|r| r.is_failed()).count();
+
+        let mut tmp_name = self.path.file_name().unwrap_or_default().to_os_string();
+        tmp_name.push(".compact-tmp");
+        let tmp = self.path.with_file_name(tmp_name);
+        let write_all = || -> std::io::Result<()> {
+            let mut f = File::create(&tmp)?;
+            for e in self.mem.workload_entries() {
+                writeln!(f, "{}", e.to_json().to_string())?;
+            }
+            for r in &kept {
+                writeln!(f, "{}", r.to_json().to_string())?;
+            }
+            f.sync_all()
+        };
+        if let Err(e) = write_all() {
+            let _ = std::fs::remove_file(&tmp);
+            return Err(format!("compact write {}: {e}", tmp.display()));
+        }
+        std::fs::rename(&tmp, &self.path)
+            .map_err(|e| format!("compact rename {} -> {}: {e}", tmp.display(), self.path.display()))?;
+        // Past the rename, failure is fatal rather than an Err: the old
+        // handle points at the now-unlinked inode, so carrying on would
+        // have every later append land in a file nobody can ever open —
+        // exactly the silent-record-loss append_line refuses to allow.
+        self.file = OpenOptions::new().append(true).open(&self.path).unwrap_or_else(|e| {
+            panic!("tuning db {} unusable after compaction (reopen failed: {e})", self.path.display())
+        });
+        self.needs_newline = false;
+        let corrupt_dropped = std::mem::take(&mut self.skipped);
+        self.skip_notes.clear();
+        self.mem.replace_records(kept);
+        Ok(CompactionReport {
+            kept: self.mem.num_records(),
+            dropped,
+            kept_failures,
+            corrupt_dropped,
+            bytes_before,
+            bytes_after: self.file_len(),
+        })
     }
 
     /// Append one JSON line and flush. Persistence failure is fatal: a
@@ -90,8 +298,16 @@ impl JsonFileDb {
     fn append_line(&mut self, j: &Json) {
         let line = j.to_string();
         debug_assert!(!line.contains('\n'), "JSONL line must be newline-free");
-        writeln!(self.file, "{line}")
-            .and_then(|()| self.file.flush())
+        // A file ending in a crash-truncated partial line needs a fresh
+        // line first, or this append would corrupt itself too (the
+        // partial tail is skipped on every open until compaction).
+        let res = if self.needs_newline {
+            self.needs_newline = false;
+            writeln!(self.file).and_then(|()| writeln!(self.file, "{line}"))
+        } else {
+            writeln!(self.file, "{line}")
+        };
+        res.and_then(|()| self.file.flush())
             .unwrap_or_else(|e| panic!("tuning db append to {} failed: {e}", self.path.display()));
     }
 }
@@ -123,6 +339,57 @@ impl Database for JsonFileDb {
     fn commit_record(&mut self, rec: TuningRecord) {
         self.append_line(&rec.to_json());
         self.mem.commit_record(rec);
+        if let Some(gc) = self.auto_gc.clone() {
+            if self.file_len() > gc.max_bytes {
+                if self.skipped > 0 {
+                    // Compacting now would permanently drop the corrupt
+                    // lines the open recovered over — the CLI refuses
+                    // that without `--repair`, and auto-GC must not be
+                    // the back door. Stand down for this run.
+                    eprintln!(
+                        "tuning db auto-GC paused: {} corrupt line(s) recovered at open; \
+                         run `db compact --repair` first",
+                        self.skipped
+                    );
+                    self.auto_gc = None;
+                    return;
+                }
+                // Rewrite only when the plan actually shrinks: a file of
+                // all-live records must not be rewritten on every commit.
+                let droppable = keep_mask(self.mem.records(), &gc.policy).iter().any(|&k| !k);
+                if droppable {
+                    match self.compact(&gc.policy) {
+                        Ok(report) if report.bytes_after.saturating_mul(2) > gc.max_bytes => {
+                            // The compacted floor is at (or within 2x of)
+                            // the budget: without a ratchet the file
+                            // re-crosses the trigger after a commit or
+                            // two and every commit pays a full rewrite.
+                            // Re-arm at double the compacted size so the
+                            // file must grow meaningfully between GCs.
+                            if let Some(gc) = &mut self.auto_gc {
+                                gc.max_bytes = report.bytes_after.saturating_mul(2).max(gc.max_bytes);
+                            }
+                        }
+                        Ok(_) => {}
+                        Err(e) => {
+                            // A pre-rename failure (tmp write) leaves the
+                            // file untouched — recoverable, but retrying
+                            // every commit would spam the same failure,
+                            // so GC stands down.
+                            eprintln!("tuning db auto-GC failed (disabled for this run): {e}");
+                            self.auto_gc = None;
+                        }
+                    }
+                } else {
+                    // Nothing to drop: top-k + failures alone exceed the
+                    // budget. Ratchet so the (futile) plan is not
+                    // recomputed on every commit forever.
+                    if let Some(gc) = &mut self.auto_gc {
+                        gc.max_bytes = self.file_len().saturating_mul(2);
+                    }
+                }
+            }
+        }
     }
 
     fn records_for(&self, workload: WorkloadId) -> Vec<TuningRecord> {
@@ -192,6 +459,7 @@ mod tests {
         let db = JsonFileDb::open(&path).unwrap();
         assert_eq!(db.workload_entries().len(), 2);
         assert_eq!(db.num_records(), 3);
+        assert_eq!(db.skipped_lines(), 0);
         assert_eq!(db.find_workload(11, "cpu"), Some(0));
         assert_eq!(db.candidate_hashes(0), vec![1, 3]);
         assert_eq!(db.best_latency(0), Some(3.0));
@@ -221,21 +489,88 @@ mod tests {
     }
 
     #[test]
-    fn corrupt_line_fails_open_with_location() {
+    fn corrupt_line_is_skipped_and_counted() {
         let (path, _g) = tmp("corrupt");
         let good = "{\"kind\":\"workload\",\"id\":0,\"name\":\"A\",\"shash\":\"05\",\"target\":\"cpu\"}";
         std::fs::write(&path, format!("{good}\nnot json\n")).unwrap();
-        let err = JsonFileDb::open(&path).unwrap_err();
-        assert!(err.contains(":2:"), "error should name the line: {err}");
+        let db = JsonFileDb::open(&path).unwrap();
+        assert_eq!(db.workload_entries().len(), 1);
+        assert_eq!(db.skipped_lines(), 1);
+        assert!(db.skip_notes()[0].contains(":2:"), "note should name the line: {:?}", db.skip_notes());
     }
 
     #[test]
-    fn record_for_unknown_workload_fails_open() {
+    fn record_for_unknown_workload_is_skipped() {
         let (path, _g) = tmp("orphan");
-        let r = rec(4, 1, Some(1.0));
-        std::fs::write(&path, format!("{}\n", r.to_json().to_string())).unwrap();
+        let good = "{\"kind\":\"workload\",\"id\":0,\"name\":\"A\",\"shash\":\"05\",\"target\":\"cpu\"}";
+        let orphan = rec(4, 1, Some(1.0)).to_json().to_string();
+        std::fs::write(&path, format!("{good}\n{orphan}\n")).unwrap();
+        let db = JsonFileDb::open(&path).unwrap();
+        assert_eq!(db.num_records(), 0);
+        assert_eq!(db.skipped_lines(), 1);
+        assert!(db.skip_notes()[0].contains("unknown workload"), "{:?}", db.skip_notes());
+    }
+
+    #[test]
+    fn damaged_registry_fails_open_instead_of_lossy_recovery() {
+        // Workload A's line survives, B's line is destroyed, C's line is
+        // intact: C's id no longer fits the registry, which proves a
+        // registration went missing. Recovering would silently drop C's
+        // (and B's) records — and compaction would then erase them for
+        // good — so the open must refuse instead.
+        let (path, _g) = tmp("registry");
+        let entry = |id: usize, shash: u64| {
+            WorkloadEntry {
+                id,
+                name: format!("w{id}"),
+                shash,
+                target: "cpu".into(),
+            }
+            .to_json()
+            .to_string()
+        };
+        let text = format!("{}\nB's line got vandalized\n{}\n", entry(0, 1), entry(2, 3));
+        std::fs::write(&path, text).unwrap();
         let err = JsonFileDb::open(&path).unwrap_err();
-        assert!(err.contains("unknown workload"), "{err}");
+        assert!(err.contains("registry damaged"), "{err}");
+        assert!(err.contains(":3:"), "error should name the intact-but-unplaceable line: {err}");
+    }
+
+    #[test]
+    fn foreign_file_refused_entirely() {
+        // Zero recognizable lines = this is not a tuning db; appending to
+        // it would vandalize an unrelated file.
+        let (path, _g) = tmp("foreign");
+        std::fs::write(&path, "hello\nworld\n").unwrap();
+        let err = JsonFileDb::open(&path).unwrap_err();
+        assert!(err.contains("no recognizable"), "{err}");
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "hello\nworld\n", "open must not touch the file");
+    }
+
+    #[test]
+    fn truncated_final_line_recovers_and_future_appends_stay_parseable() {
+        let (path, _g) = tmp("truncated");
+        {
+            let mut db = JsonFileDb::open(&path).unwrap();
+            let a = db.register_workload("A", 9, "cpu");
+            db.commit_record(rec(a, 1, Some(2.0)));
+            db.commit_record(rec(a, 2, Some(1.0)));
+        }
+        // Simulate a crash mid-append: chop the tail of the last line.
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::write(&path, &text[..text.len() - 10]).unwrap();
+        {
+            let mut db = JsonFileDb::open(&path).unwrap();
+            assert_eq!(db.num_records(), 1, "intact record must survive");
+            assert_eq!(db.skipped_lines(), 1);
+            assert_eq!(db.best_latency(0), Some(2.0));
+            // Appending after a partial tail must start a fresh line.
+            db.commit_record(rec(0, 3, Some(0.5)));
+        }
+        let db = JsonFileDb::open(&path).unwrap();
+        assert_eq!(db.num_records(), 2);
+        assert_eq!(db.skipped_lines(), 1, "partial tail lingers until compaction");
+        assert_eq!(db.best_latency(0), Some(0.5));
     }
 
     #[test]
@@ -248,6 +583,98 @@ mod tests {
         let mut text = std::fs::read_to_string(&path).unwrap();
         text.push('\n');
         std::fs::write(&path, text).unwrap();
-        assert_eq!(JsonFileDb::open(&path).unwrap().workload_entries().len(), 1);
+        let db = JsonFileDb::open(&path).unwrap();
+        assert_eq!(db.workload_entries().len(), 1);
+        assert_eq!(db.skipped_lines(), 0, "blank lines are not corruption");
+    }
+
+    #[test]
+    fn compact_drops_dominated_records_and_is_atomic_in_effect() {
+        let (path, _g) = tmp("compact");
+        let mut db = JsonFileDb::open(&path).unwrap();
+        let a = db.register_workload("A", 1, "cpu");
+        for i in 0..10u64 {
+            db.commit_record(rec(a, i, Some((i + 1) as f64)));
+        }
+        db.commit_record(rec(a, 100, None)); // failure: must survive
+        let before = db.file_len();
+        let report = db.compact(&CompactionPolicy { top_k: 3 }).unwrap();
+        assert_eq!(report.kept, 4, "3 best + 1 failure");
+        assert_eq!(report.dropped, 7);
+        assert_eq!(report.kept_failures, 1);
+        assert!(report.bytes_after < before);
+        // The live handle and a fresh open agree.
+        assert_eq!(db.num_records(), 4);
+        assert_eq!(db.best_latency(a), Some(1.0));
+        assert!(db.has_candidate(a, 100), "failure hash kept for dedup");
+        assert!(!db.has_candidate(a, 9), "dominated record dropped");
+        let reopened = JsonFileDb::open(&path).unwrap();
+        assert_eq!(reopened.num_records(), 4);
+        assert_eq!(reopened.best_latency(a), Some(1.0));
+        // No temp file left behind.
+        let mut tmp_name = path.file_name().unwrap().to_os_string();
+        tmp_name.push(".compact-tmp");
+        assert!(!path.with_file_name(tmp_name).exists(), "compaction temp file left behind");
+    }
+
+    #[test]
+    fn compact_then_commit_then_reopen_is_consistent() {
+        let (path, _g) = tmp("compact-append");
+        let mut db = JsonFileDb::open(&path).unwrap();
+        let a = db.register_workload("A", 1, "cpu");
+        for i in 0..6u64 {
+            db.commit_record(rec(a, i, Some((i + 1) as f64)));
+        }
+        db.compact(&CompactionPolicy { top_k: 2 }).unwrap();
+        db.commit_record(rec(a, 50, Some(0.25)));
+        let reopened = JsonFileDb::open(&path).unwrap();
+        assert_eq!(reopened.num_records(), 3);
+        assert_eq!(reopened.best_latency(a), Some(0.25));
+    }
+
+    #[test]
+    fn auto_gc_triggers_on_size_and_keeps_best() {
+        let (path, _g) = tmp("autogc");
+        let mut db = JsonFileDb::open(&path).unwrap();
+        let a = db.register_workload("A", 1, "cpu");
+        db.set_auto_gc(Some(AutoGc {
+            max_bytes: 2048,
+            policy: CompactionPolicy { top_k: 4 },
+        }));
+        for i in 0..200u64 {
+            db.commit_record(rec(a, i, Some((i + 1) as f64)));
+        }
+        // One record line is ~150 bytes; 200 commits without GC would be
+        // ~30 KB. The GC must have kept the file bounded...
+        assert!(db.file_len() < 8192, "auto-GC never triggered: {} bytes", db.file_len());
+        // Between triggers the file re-accumulates up to the byte budget,
+        // so the index holds top-4 plus at most a budget's worth of
+        // fresh commits — far below the 200 committed.
+        assert!(db.num_records() <= 24, "index not pruned: {}", db.num_records());
+        // ...without ever losing the best record.
+        assert_eq!(db.best_latency(a), Some(1.0));
+        let reopened = JsonFileDb::open(&path).unwrap();
+        assert_eq!(reopened.best_latency(a), Some(1.0));
+        assert_eq!(reopened.num_records(), db.num_records());
+    }
+
+    #[test]
+    fn compaction_repairs_recovered_corruption() {
+        let (path, _g) = tmp("repair");
+        {
+            let mut db = JsonFileDb::open(&path).unwrap();
+            let a = db.register_workload("A", 9, "cpu");
+            db.commit_record(rec(a, 1, Some(2.0)));
+        }
+        let mut text = std::fs::read_to_string(&path).unwrap();
+        text.push_str("garbage line\n");
+        std::fs::write(&path, text).unwrap();
+        let mut db = JsonFileDb::open(&path).unwrap();
+        assert_eq!(db.skipped_lines(), 1);
+        db.compact(&CompactionPolicy::default()).unwrap();
+        assert_eq!(db.skipped_lines(), 0);
+        let reopened = JsonFileDb::open(&path).unwrap();
+        assert_eq!(reopened.skipped_lines(), 0, "compaction should have dropped the garbage");
+        assert_eq!(reopened.num_records(), 1);
     }
 }

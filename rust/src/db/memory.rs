@@ -25,6 +25,25 @@ impl InMemoryDb {
         InMemoryDb::default()
     }
 
+    /// Registered workload count (cheaper than `workload_entries().len()`,
+    /// which clones the registry).
+    pub fn num_workloads(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// All records across workloads, in commit order — the compaction
+    /// planner's input ([`crate::db::compact::keep_mask`]).
+    pub(crate) fn records(&self) -> &[TuningRecord] {
+        &self.records
+    }
+
+    /// Replace the record log wholesale (post-compaction prune), keeping
+    /// the registry and rebuilding the dedup accelerator to match.
+    pub(crate) fn replace_records(&mut self, records: Vec<TuningRecord>) {
+        self.cand_index = records.iter().map(|r| (r.workload, r.cand_hash)).collect();
+        self.records = records;
+    }
+
     /// Rebuild-path insert of an already-numbered entry (file load). The
     /// id must match registration order; duplicate keys are rejected.
     pub(crate) fn insert_entry(&mut self, e: WorkloadEntry) -> Result<(), String> {

@@ -16,6 +16,9 @@
 //!   format; re-opening the file warm-starts the next run.
 //! - [`SharedDb`] — mutex adapter so task-parallel scheduler rounds can
 //!   commit through one handle.
+//! - [`compact`] — record GC: atomic top-k-per-workload rewrite of the
+//!   JSONL file (plus the size-triggered auto-GC hook inside
+//!   [`JsonFileDb`]); failures always survive for cross-session dedup.
 //! - [`pretrain_cost_model`] — replays committed records into training
 //!   samples so [`crate::cost_model::GbtCostModel`] starts round 1 fit.
 //!
@@ -27,13 +30,15 @@
 //! [`query_top_k`]: Database::query_top_k
 //! [`best_latency`]: Database::best_latency
 
+pub mod compact;
 pub mod json_file;
 pub mod memory;
 pub mod record;
 pub mod shared;
 pub mod stats;
 
-pub use json_file::JsonFileDb;
+pub use compact::{compact_file, CompactionPolicy, CompactionReport};
+pub use json_file::{AutoGc, JsonFileDb};
 pub use memory::InMemoryDb;
 pub use record::TuningRecord;
 pub use shared::SharedDb;

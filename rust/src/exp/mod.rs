@@ -47,12 +47,22 @@ impl Default for ExpConfig {
 }
 
 /// Open the configured tuning database: the JSONL file when `--db` was
-/// given, a run-local in-memory store otherwise. Panics on a corrupt
-/// file — silently ignoring recorded history would be worse.
+/// given, a run-local in-memory store otherwise. Corrupt lines are
+/// recovered over with a warning (see [`JsonFileDb::skipped_lines`]);
+/// only an unreadable or entirely unrecognizable file panics — silently
+/// ignoring recorded history would be worse.
 pub fn open_db(cfg: &ExpConfig) -> Box<dyn Database> {
     match &cfg.db_path {
         Some(path) => match JsonFileDb::open(path) {
-            Ok(db) => Box::new(db),
+            Ok(db) => {
+                if db.skipped_lines() > 0 {
+                    eprintln!(
+                        "tuning db {path}: recovered over {} corrupt line(s); `db compact` will drop them",
+                        db.skipped_lines()
+                    );
+                }
+                Box::new(db)
+            }
             Err(e) => panic!("cannot open tuning db: {e}"),
         },
         None => Box::new(InMemoryDb::new()),

@@ -8,7 +8,9 @@
 //! learning-driven evolutionary search with a gradient-boosted-tree cost
 //! model ([`search`], [`cost_model`]), a persistent tuning-record
 //! database that warm-starts search and pretrains the cost model across
-//! sessions ([`db`]), a deterministic hardware latency
+//! sessions ([`db`]), a read-optimized serving layer with compaction and
+//! indexed snapshots over that database ([`serve`]), a deterministic
+//! hardware latency
 //! simulator standing in for the paper's testbeds ([`sim`]), baseline
 //! tuners ([`baselines`]), graph-level task extraction and end-to-end model
 //! tuning ([`graph`]), the Appendix A.2 workload suite ([`workloads`]), a
@@ -31,6 +33,7 @@ pub mod graph;
 pub mod runtime;
 pub mod schedule;
 pub mod search;
+pub mod serve;
 pub mod sim;
 pub mod space;
 pub mod tir;

@@ -8,6 +8,8 @@
 //!                  [--trials N] [--seed S] [--threads N] [--out results.jsonl] [--db t.jsonl]
 //! metaschedule db stats --db t.jsonl             # tuning-database summary
 //! metaschedule db top --workload GMM -k 5 --db t.jsonl
+//! metaschedule db compact --db t.jsonl [-k 32] [--repair]  # GC: top-k + failures, atomic rewrite
+//! metaschedule serve GMM SFM --db t.jsonl [--target cpu] [--miss-trials 16]  # 0 = read-only
 //! metaschedule pjrt-verify                       # artifact correctness gate
 //!
 //! `--threads` caps the OS threads of the search pipeline (0 = all
@@ -16,11 +18,18 @@
 //! `--db` points tuning at a persistent JSONL record database: runs
 //! warm-start from it, commit every measurement back to it, and are
 //! therefore resumable across sessions (see README "Tuning database").
+//!
+//! `serve` is the read path: it builds an indexed in-memory snapshot of
+//! the db (no JSONL replay per lookup), reports hit/miss + the replayed
+//! best latency per named workload, and falls back to a bounded
+//! tune-on-miss (`--miss-trials 0` = report-only) that commits back to
+//! the db (see README "Serving tuned programs").
 //! ```
 
-use metaschedule::db::{Database, DbStats, JsonFileDb};
+use metaschedule::db::{self, Database, DbStats, JsonFileDb};
 use metaschedule::exp::{self, ExpConfig};
 use metaschedule::graph;
+use metaschedule::serve::{serve_batch, serve_snapshot, ServeConfig, ServeOutcome, ServingCache};
 use metaschedule::sim::Target;
 use metaschedule::tir::{print_program, structural_hash, PrintOptions};
 use metaschedule::trace::serde::{text_to_trace, trace_to_text};
@@ -36,10 +45,11 @@ fn main() {
         "tune-model" => tune_model(&args),
         "exp" => experiment(&args),
         "db" => db_cmd(&args),
+        "serve" => serve_cmd(&args),
         "pjrt-verify" => pjrt_verify(&args),
         _ => {
             eprintln!(
-                "usage: metaschedule <list|tune|tune-model|exp|db|pjrt-verify> [flags]\n\
+                "usage: metaschedule <list|tune|tune-model|exp|db|serve|pjrt-verify> [flags]\n\
                  see rust/src/main.rs header for details"
             );
             std::process::exit(2);
@@ -194,13 +204,29 @@ fn experiment(args: &Args) {
     }
 }
 
-/// `db stats` / `db top`: inspect a JSONL tuning database.
+/// `db stats` / `db top` / `db compact`: inspect or GC a JSONL tuning
+/// database.
 fn db_cmd(args: &Args) {
     let sub = args.positional.get(1).cloned().unwrap_or_else(|| "stats".into());
     let Some(path) = args.flag("db") else {
         eprintln!("db: --db <path.jsonl> required");
         std::process::exit(2);
     };
+    if sub == "compact" {
+        let policy = db::CompactionPolicy {
+            top_k: args.flag_usize("k", db::compact::DEFAULT_TOP_K),
+        };
+        // --repair: also drop corrupt lines recovered over at open
+        // (refused otherwise, so data loss is never a surprise).
+        match db::compact_file(path, &policy, args.has_switch("repair")) {
+            Ok(report) => println!("{}", report.render(path)),
+            Err(e) => {
+                eprintln!("db compact: {e}");
+                std::process::exit(1);
+            }
+        }
+        return;
+    }
     let db = match JsonFileDb::open(path) {
         Ok(db) => db,
         Err(e) => {
@@ -208,6 +234,7 @@ fn db_cmd(args: &Args) {
             std::process::exit(1);
         }
     };
+    report_skipped(&db);
     match sub.as_str() {
         "stats" => {
             println!("db: {} ({} bytes)", path, db.file_len());
@@ -254,10 +281,110 @@ fn db_cmd(args: &Args) {
             }
         }
         other => {
-            eprintln!("usage: metaschedule db <stats|top> --db <path.jsonl> [--workload W] [-k N] (got {other})");
+            eprintln!(
+                "usage: metaschedule db <stats|top|compact> --db <path.jsonl> [--workload W] [-k N] (got {other})"
+            );
             std::process::exit(2);
         }
     }
+}
+
+/// Warn (to stderr, so greppable stdout stays clean) when an open
+/// recovered over corrupt lines.
+fn report_skipped(db: &JsonFileDb) {
+    if db.skipped_lines() > 0 {
+        eprintln!(
+            "db: recovered over {} corrupt line(s); `db compact` will drop them",
+            db.skipped_lines()
+        );
+        for note in db.skip_notes() {
+            eprintln!("db:   {note}");
+        }
+    }
+}
+
+/// `serve`: answer workload lookups from an indexed snapshot of the db.
+fn serve_cmd(args: &Args) {
+    let Some(path) = args.flag("db") else {
+        eprintln!("serve: --db <path.jsonl> required");
+        std::process::exit(2);
+    };
+    let target = target_of(args);
+    // Batch mode: positional names after `serve`, plus `--workloads A,B`.
+    let mut names: Vec<String> = args.positional.iter().skip(1).cloned().collect();
+    names.extend(args.flag_csv("workloads"));
+    if names.is_empty() {
+        eprintln!("serve: name at least one workload (positional or --workloads GMM,SFM)");
+        std::process::exit(2);
+    }
+    let cfg = ServeConfig {
+        miss_trials: args.flag_usize("miss-trials", 16),
+        threads: args.flag_usize("threads", 0),
+        seed: args.flag_u64("seed", 42),
+        top_k: args.flag_usize("k", ServingCache::DEFAULT_TOP_K),
+    };
+    fn serve_fail(e: String) -> Vec<ServeOutcome> {
+        eprintln!("serve: {e}");
+        std::process::exit(2);
+    }
+    let outcomes = if cfg.miss_trials == 0 {
+        // Report-only: load the snapshot without ever opening the file
+        // for writing, so serving works off a read-only mount.
+        let (cache, skipped) = match ServingCache::load(path, cfg.top_k) {
+            Ok(x) => x,
+            Err(e) => {
+                eprintln!("serve: {e}");
+                std::process::exit(1);
+            }
+        };
+        if skipped > 0 {
+            eprintln!("serve: recovered over {skipped} corrupt line(s); `db compact --repair` drops them");
+        }
+        println!(
+            "== serving {} workload(s) on {} from {path} ({} records indexed, read-only)",
+            names.len(),
+            target.name,
+            cache.num_records()
+        );
+        serve_snapshot(&names, &target, &cache).unwrap_or_else(serve_fail)
+    } else {
+        let mut db = match JsonFileDb::open(path) {
+            Ok(db) => db,
+            Err(e) => {
+                eprintln!("serve: {e}");
+                std::process::exit(1);
+            }
+        };
+        report_skipped(&db);
+        println!(
+            "== serving {} workload(s) on {} from {path} ({} records on file)",
+            names.len(),
+            target.name,
+            db.num_records()
+        );
+        serve_batch(&names, &target, &mut db, &cfg).unwrap_or_else(serve_fail)
+    };
+    let mut hits = 0;
+    for o in &outcomes {
+        match (o.hit, o.latency_s) {
+            (true, Some(lat)) => {
+                hits += 1;
+                println!("  {}: HIT  {:.2} us (replayed best of {} records)", o.workload, lat * 1e6, o.records);
+            }
+            (true, None) => {
+                hits += 1;
+                println!("  {}: HIT (recorded schedule invalid on simulator)", o.workload);
+            }
+            (false, Some(lat)) => println!(
+                "  {}: MISS -> tuned {:.2} us in {} trials (committed to db)",
+                o.workload,
+                lat * 1e6,
+                o.trials
+            ),
+            (false, None) => println!("  {}: MISS (report-only; tune with --miss-trials N)", o.workload),
+        }
+    }
+    println!("served {}: {} hit(s), {} miss(es)", outcomes.len(), hits, outcomes.len() - hits);
 }
 
 fn pjrt_verify(args: &Args) {

@@ -161,6 +161,26 @@ impl TransformModule for PallasTileModule {
     }
 }
 
+/// Per-device workload key for PJRT measurements: the platform/device
+/// string folded into the target name (`pjrt:<platform>`), so records
+/// from two physical devices never pool into one workload (the database
+/// keys workloads by `(structural hash, target name)`). Lowercased and
+/// whitespace-collapsed because the name flows into the JSONL workload
+/// registry and CLI flags. The stub runner's platform is `"stub"`, so a
+/// feature-off build deterministically yields `pjrt:stub`.
+pub fn pjrt_target_name(platform: &str) -> String {
+    let folded: String = platform
+        .trim()
+        .chars()
+        .map(|c| if c.is_whitespace() { '-' } else { c.to_ascii_lowercase() })
+        .collect();
+    if folded.is_empty() {
+        "pjrt:unknown".to_string()
+    } else {
+        format!("pjrt:{folded}")
+    }
+}
+
 /// Real-hardware measurer for the GMM task: snaps the schedule's tile to
 /// the nearest AOT variant and times the actual PJRT executable.
 pub struct PjrtGmmMeasurer {
@@ -175,6 +195,9 @@ pub struct PjrtGmmMeasurer {
     /// Measurement cache: tile variant -> latency (schedules snapping to
     /// the same artifact share one timing).
     cache: HashMap<TileVariant, f64>,
+    /// Per-device target name ([`pjrt_target_name`]), fixed at
+    /// construction from the runner's platform string.
+    target: String,
 }
 
 impl PjrtGmmMeasurer {
@@ -188,6 +211,7 @@ impl PjrtGmmMeasurer {
             )));
         }
         let runner = PjrtRunner::new(dir)?;
+        let target = pjrt_target_name(&runner.platform());
         let x = (0..m * k).map(|i| ((i % 17) as f32 - 8.0) * 0.1).collect();
         let y = (0..k * n).map(|i| ((i % 11) as f32 - 5.0) * 0.1).collect();
         Ok(PjrtGmmMeasurer {
@@ -200,6 +224,7 @@ impl PjrtGmmMeasurer {
             y,
             n_measured: 0,
             cache: HashMap::new(),
+            target,
         })
     }
 
@@ -246,10 +271,8 @@ impl Measurer for PjrtGmmMeasurer {
         self.n_measured
     }
 
-    // One name for all PJRT-visible devices for now; per-device naming
-    // (platform string into the workload key) is a ROADMAP item.
-    fn target_name(&self) -> &'static str {
-        "pjrt"
+    fn target_name(&self) -> String {
+        self.target.clone()
     }
 }
 
@@ -299,6 +322,18 @@ mod tests {
     fn stub_runner_reports_disabled_feature() {
         let err = PjrtRunner::new("artifacts").unwrap_err();
         assert!(err.to_string().contains("pjrt"), "{err}");
+    }
+
+    #[test]
+    fn pjrt_target_names_are_per_device_and_deterministic() {
+        // The stub runner's platform string maps to the documented name.
+        assert_eq!(pjrt_target_name("stub"), "pjrt:stub");
+        // Real platform strings fold whitespace/case into one stable key.
+        assert_eq!(pjrt_target_name("Host CPU"), "pjrt:host-cpu");
+        assert_eq!(pjrt_target_name("  cuda:0 "), "pjrt:cuda:0");
+        assert_eq!(pjrt_target_name(""), "pjrt:unknown");
+        // Two distinct devices never share a workload key.
+        assert_ne!(pjrt_target_name("cuda:0"), pjrt_target_name("cuda:1"));
     }
 
     // PJRT-backed tests live in rust/tests/pjrt_integration.rs (they need

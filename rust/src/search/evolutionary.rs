@@ -242,7 +242,7 @@ impl EvolutionarySearch {
         // elite pool, and the best record becomes the starting
         // best-so-far — so a warm run can only improve on its history.
         let target_name = measurer.target_name();
-        let wid = db.register_workload(&prog.name, structural_hash(prog), target_name);
+        let wid = db.register_workload(&prog.name, structural_hash(prog), &target_name);
         let mut measured_hashes: HashSet<u64> = db.candidate_hashes(wid).into_iter().collect();
         let db_top = db.query_top_k(wid, WARM_TOP_K);
         let warm_records = db_top.len();
@@ -365,7 +365,7 @@ impl EvolutionarySearch {
                     workload: wid,
                     trace: member.sch.trace.clone(),
                     latencies: lat.into_iter().collect(),
-                    target: target_name.to_string(),
+                    target: target_name.clone(),
                     seed,
                     round,
                     cand_hash,

@@ -31,10 +31,12 @@ pub trait Measurer: Send {
     /// records and part of the workload identity, so a database never
     /// silently mixes targets. Required (no default): a measurer that
     /// forgot to name its target would silently pool every device's
-    /// records into one workload. `'static` because target names are
-    /// compile-time constants ([`Target::name`]) and a borrowed return
-    /// could not cross the mutex of [`parallel::SharedMeasurer`].
-    fn target_name(&self) -> &'static str;
+    /// records into one workload. Returns an owned `String` because
+    /// device-discovered names (e.g. the PJRT platform string folded
+    /// into [`crate::runtime::PjrtGmmMeasurer`]'s name) are not
+    /// compile-time constants, and a borrowed return could not cross the
+    /// mutex of [`parallel::SharedMeasurer`].
+    fn target_name(&self) -> String;
 }
 
 /// Measurer backed by the analytical hardware simulator (the default
@@ -60,8 +62,8 @@ impl Measurer for SimMeasurer {
         self.n
     }
 
-    fn target_name(&self) -> &'static str {
-        self.target.name
+    fn target_name(&self) -> String {
+        self.target.name.to_string()
     }
 }
 

@@ -144,7 +144,7 @@ impl Measurer for &SharedMeasurer<'_> {
         SharedMeasurer::count(*self)
     }
 
-    fn target_name(&self) -> &'static str {
+    fn target_name(&self) -> String {
         self.inner.lock().unwrap().target_name()
     }
 }

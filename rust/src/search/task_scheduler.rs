@@ -105,7 +105,7 @@ impl TaskScheduler {
         let target_name = measurer.target_name();
         let wids: Vec<usize> = tasks
             .iter()
-            .map(|t| db.register_workload(&t.name, structural_hash(&t.prog), target_name))
+            .map(|t| db.register_workload(&t.name, structural_hash(&t.prog), &target_name))
             .collect();
         let has_history: Vec<bool> = wids.iter().map(|&w| db.best_latency(w).is_some()).collect();
         let shared_db = SharedDb::new(db);

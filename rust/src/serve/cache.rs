@@ -1,0 +1,282 @@
+//! The indexed snapshot: everything a serving process needs to answer
+//! "best known schedule for (structural hash, target)" in memory, built
+//! once, immutable afterwards.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+use crate::db::record::TuningRecord;
+use crate::db::{Database, WorkloadEntry};
+use crate::schedule::Schedule;
+use crate::tir::{structural_hash, Program};
+use crate::trace::replay;
+
+/// One served workload: its registry entry plus the top records,
+/// best-first (ascending best latency, commit order breaking ties —
+/// exactly [`Database::query_top_k`] order).
+#[derive(Debug, Clone)]
+pub struct ServedWorkload {
+    pub entry: WorkloadEntry,
+    pub top: Vec<TuningRecord>,
+}
+
+impl ServedWorkload {
+    /// Reconstruct this workload's best schedule by replaying its best
+    /// record against `prog` (the workload's base program), falling
+    /// through to the next record when a stored trace no longer replays
+    /// (schedule-primitive drift) — mirroring the search's warm start.
+    pub fn apply(&self, prog: &Program) -> Option<Schedule> {
+        self.top.iter().find_map(|rec| replay(&rec.trace, prog, 0).ok())
+    }
+}
+
+/// Immutable, hash-indexed view of a tuning database. Lookups are a
+/// `HashMap` probe on the structural hash plus a scan over the (few)
+/// targets sharing it — no file I/O, no JSONL parsing, no allocation,
+/// no lock. All data is owned, so the cache is `Send + Sync` and shares
+/// across threads as a plain `Arc<ServingCache>`.
+#[derive(Debug, Clone)]
+pub struct ServingCache {
+    /// Served workloads in registration order.
+    slots: Vec<ServedWorkload>,
+    /// shash -> indices into `slots` (one per target seen for the hash).
+    by_hash: HashMap<u64, Vec<usize>>,
+    /// Successful records indexed across all slots.
+    records: usize,
+}
+
+impl ServingCache {
+    /// Records retained per workload by default — matches the search's
+    /// warm-start replay depth, so a fall-through on a stale best trace
+    /// has the same candidates the search itself would see.
+    pub const DEFAULT_TOP_K: usize = 8;
+
+    /// Build a snapshot from any database backend, keeping the `top_k`
+    /// best successful records per workload. Workloads with no
+    /// successful record are indexed with an empty `top` (a lookup on
+    /// them is a miss, but [`Self::num_workloads`] still counts them).
+    pub fn build(db: &dyn Database, top_k: usize) -> ServingCache {
+        let mut slots = Vec::new();
+        let mut by_hash: HashMap<u64, Vec<usize>> = HashMap::new();
+        let mut records = 0usize;
+        for entry in db.workload_entries() {
+            let top = db.query_top_k(entry.id, top_k);
+            records += top.len();
+            by_hash.entry(entry.shash).or_default().push(slots.len());
+            slots.push(ServedWorkload { entry, top });
+        }
+        ServingCache { slots, by_hash, records }
+    }
+
+    /// Load a snapshot read-only from a JSONL database file: the file is
+    /// parsed once here (with the same corruption recovery as
+    /// [`crate::db::JsonFileDb::open`]) and never touched again — no
+    /// append handle is opened, so a serving process can load from a
+    /// file it has no write permission on. Returns the cache plus the
+    /// number of corrupt lines skipped.
+    pub fn load(path: impl AsRef<Path>, top_k: usize) -> Result<(ServingCache, usize), String> {
+        let path = path.as_ref();
+        if !path.exists() {
+            return Err(format!("no database at {}", path.display()));
+        }
+        let loaded = crate::db::json_file::read_index(path)?;
+        Ok((ServingCache::build(&loaded.mem, top_k), loaded.skipped))
+    }
+
+    /// The served workload for `(shash, target)`, if registered.
+    pub fn lookup_workload(&self, shash: u64, target: &str) -> Option<&ServedWorkload> {
+        self.by_hash
+            .get(&shash)?
+            .iter()
+            .map(|&i| &self.slots[i])
+            .find(|w| w.entry.target == target)
+    }
+
+    /// Best known record for `(shash, target)`. `None` = unknown
+    /// workload or no successful measurement on file.
+    pub fn lookup(&self, shash: u64, target: &str) -> Option<&TuningRecord> {
+        self.lookup_workload(shash, target).and_then(|w| w.top.first())
+    }
+
+    /// Best known latency for `(shash, target)`.
+    pub fn best_latency(&self, shash: u64, target: &str) -> Option<f64> {
+        self.lookup(shash, target).and_then(TuningRecord::best_latency)
+    }
+
+    /// Reconstruct the best schedule for `prog` on `target`: one lookup,
+    /// then [`ServedWorkload::apply`]. Callers that already hold the
+    /// [`ServedWorkload`] (e.g. after [`Self::lookup_workload`]) should
+    /// call `apply` directly and skip the second hash + probe.
+    pub fn apply_best(&self, prog: &Program, target: &str) -> Option<Schedule> {
+        self.lookup_workload(structural_hash(prog), target)?.apply(prog)
+    }
+
+    /// Served workloads in registration order.
+    pub fn workloads(&self) -> &[ServedWorkload] {
+        &self.slots
+    }
+
+    pub fn num_workloads(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Successful records indexed across all workloads.
+    pub fn num_records(&self) -> usize {
+        self.records
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+}
+
+/// The swap point between one writer (tuner / compactor, which builds
+/// fresh [`ServingCache`]s) and many readers. Readers take a brief lock
+/// only to clone the current `Arc`; every lookup after that is lock-free
+/// on an immutable snapshot, so a reader mid-batch keeps one consistent
+/// view no matter how many publishes happen meanwhile — pre- or
+/// post-publish state, never a torn mix.
+pub struct SnapshotSlot {
+    current: Mutex<Arc<ServingCache>>,
+}
+
+impl SnapshotSlot {
+    pub fn new(cache: ServingCache) -> SnapshotSlot {
+        SnapshotSlot {
+            current: Mutex::new(Arc::new(cache)),
+        }
+    }
+
+    /// The currently-published snapshot.
+    pub fn get(&self) -> Arc<ServingCache> {
+        self.current.lock().unwrap().clone()
+    }
+
+    /// Publish a fresh snapshot; readers holding the old `Arc` keep it
+    /// alive (and consistent) until they next call [`Self::get`].
+    pub fn publish(&self, cache: ServingCache) -> Arc<ServingCache> {
+        let next = Arc::new(cache);
+        *self.current.lock().unwrap() = next.clone();
+        next
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::db::InMemoryDb;
+    use crate::trace::Trace;
+
+    fn assert_send_sync<T: Send + Sync>() {}
+
+    #[test]
+    fn serving_cache_is_send_and_sync() {
+        assert_send_sync::<ServingCache>();
+        assert_send_sync::<SnapshotSlot>();
+    }
+
+    fn rec(workload: usize, cand: u64, lat: Option<f64>) -> TuningRecord {
+        TuningRecord {
+            workload,
+            trace: Trace { insts: vec![] },
+            latencies: lat.into_iter().collect(),
+            target: "cpu".into(),
+            seed: 0,
+            round: cand,
+            cand_hash: cand,
+        }
+    }
+
+    #[test]
+    fn lookup_matches_query_top_k_and_separates_targets() {
+        let mut db = InMemoryDb::new();
+        let a = db.register_workload("A", 10, "cpu");
+        let a_gpu = db.register_workload("A", 10, "gpu");
+        let b = db.register_workload("B", 20, "cpu");
+        db.commit_record(rec(a, 1, Some(3.0)));
+        db.commit_record(rec(a, 2, Some(1.0)));
+        db.commit_record(rec(a, 3, None)); // failure: not served
+        db.commit_record(rec(a_gpu, 4, Some(0.5)));
+        let _ = b; // registered but empty
+        let cache = ServingCache::build(&db, 8);
+        assert_eq!(cache.num_workloads(), 3);
+        assert_eq!(cache.num_records(), 3);
+        assert_eq!(cache.lookup(10, "cpu").unwrap().cand_hash, 2);
+        assert_eq!(cache.best_latency(10, "cpu"), Some(1.0));
+        assert_eq!(cache.best_latency(10, "gpu"), Some(0.5), "targets must not pool");
+        assert_eq!(cache.lookup(20, "cpu"), None, "workload with no success is a miss");
+        assert_eq!(cache.lookup(99, "cpu"), None);
+        // Same answer the database itself would give.
+        assert_eq!(cache.lookup(10, "cpu"), db.query_top_k(a, 1).first());
+    }
+
+    #[test]
+    fn top_k_truncates_per_workload() {
+        let mut db = InMemoryDb::new();
+        let a = db.register_workload("A", 1, "cpu");
+        for i in 0..10u64 {
+            db.commit_record(rec(a, i, Some((10 - i) as f64)));
+        }
+        let cache = ServingCache::build(&db, 3);
+        let w = cache.lookup_workload(1, "cpu").unwrap();
+        assert_eq!(w.top.len(), 3);
+        assert_eq!(w.top[0].cand_hash, 9, "best-first order");
+        assert_eq!(cache.num_records(), 3);
+    }
+
+    #[test]
+    fn snapshot_slot_swaps_whole_snapshots() {
+        let mut db = InMemoryDb::new();
+        let a = db.register_workload("A", 1, "cpu");
+        db.commit_record(rec(a, 1, Some(2.0)));
+        let slot = SnapshotSlot::new(ServingCache::build(&db, 8));
+        let held = slot.get();
+        db.commit_record(rec(a, 2, Some(1.0)));
+        slot.publish(ServingCache::build(&db, 8));
+        // The reader's held snapshot is unchanged; a re-get sees the new one.
+        assert_eq!(held.best_latency(1, "cpu"), Some(2.0));
+        assert_eq!(slot.get().best_latency(1, "cpu"), Some(1.0));
+    }
+
+    #[test]
+    fn apply_best_replays_real_traces() {
+        use crate::search::{Measurer, SimMeasurer};
+        use crate::sim::Target;
+        use crate::space::SpaceComposer;
+        let target = Target::cpu_avx512();
+        let prog = crate::workloads::matmul(1, 64, 64, 64);
+        let mut db = InMemoryDb::new();
+        let wid = db.register_workload(&prog.name, structural_hash(&prog), target.name);
+        let composer = SpaceComposer::generic(target.clone());
+        let mut measurer = SimMeasurer::new(target.clone());
+        let mut committed = 0;
+        for (i, d) in composer.generate(&prog, 1).iter().cycle().take(64).enumerate() {
+            if committed >= 4 {
+                break;
+            }
+            let Ok(sch) = crate::trace::replay::replay_fresh(&d.trace, &prog, 500 + i as u64) else {
+                continue;
+            };
+            let lat = measurer.measure(&sch.prog);
+            db.commit_record(TuningRecord {
+                workload: wid,
+                trace: sch.trace.clone(),
+                latencies: lat.into_iter().collect(),
+                target: target.name.to_string(),
+                seed: 1,
+                round: i as u64,
+                cand_hash: structural_hash(&sch.prog),
+            });
+            committed += 1;
+        }
+        let cache = ServingCache::build(&db, 8);
+        let best = cache.lookup(structural_hash(&prog), target.name).expect("hit");
+        let sch = cache.apply_best(&prog, target.name).expect("best trace must replay");
+        assert_eq!(structural_hash(&sch.prog), best.cand_hash);
+        // The replayed program reproduces the recorded latency on the
+        // deterministic simulator.
+        let mut m = SimMeasurer::new(target.clone());
+        assert_eq!(m.measure(&sch.prog), best.best_latency());
+    }
+}

@@ -1,0 +1,36 @@
+//! Read-optimized serving layer over the tuning database (the ROADMAP's
+//! "serve heavy traffic" path, and the payoff of the paper's
+//! learning-driven framework: tuned schedules are *reused*, not
+//! re-searched, when a known workload arrives).
+//!
+//! The write path ([`crate::db`]) is an append-only JSONL log — perfect
+//! for crash-safe tuning, wrong for serving: answering "best schedule
+//! for this workload hash" from the log means replaying the whole file.
+//! This module is the read path:
+//!
+//! - [`ServingCache`] — an immutable, hash-indexed snapshot built once
+//!   from a [`crate::db::Database`] (or loaded read-only from a JSONL
+//!   file). `lookup` is a `HashMap` probe + a short target scan: no file
+//!   I/O, no JSONL parsing, no locking. Share it across threads as a
+//!   plain `Arc<ServingCache>`.
+//! - [`SnapshotSlot`] — the swap point between the write and read paths:
+//!   a publisher (tuner, compactor) builds a fresh snapshot and
+//!   [`SnapshotSlot::publish`]es it; readers [`SnapshotSlot::get`] an
+//!   `Arc` and do every subsequent lookup lock-free on a consistent
+//!   snapshot. Readers see either the pre- or post-publish cache in its
+//!   entirety, never a torn mix.
+//! - [`serve_batch`] — the batch front-end behind the `serve` CLI
+//!   subcommand: resolve workload names, report hit/miss + the replayed
+//!   best latency, and fall back to a bounded tune-on-miss (reusing
+//!   [`crate::search::EvolutionarySearch`]'s database path) that commits
+//!   its records and refreshes the snapshot.
+//!
+//! Snapshot lifecycle: tune into a JSONL db -> (optionally) `db compact`
+//! it -> build/load a [`ServingCache`] -> serve lookups -> on db growth,
+//! build a fresh cache and publish it through the [`SnapshotSlot`].
+
+pub mod cache;
+pub mod front;
+
+pub use cache::{ServedWorkload, ServingCache, SnapshotSlot};
+pub use front::{serve_batch, serve_snapshot, ServeConfig, ServeOutcome};

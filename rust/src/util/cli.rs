@@ -73,6 +73,14 @@ impl Args {
             .unwrap_or(default)
     }
 
+    /// Comma-separated list flag (`--workloads GMM,SFM`). Missing flag or
+    /// empty items collapse away, so `--workloads GMM,` is just `[GMM]`.
+    pub fn flag_csv(&self, name: &str) -> Vec<String> {
+        self.flag(name)
+            .map(|s| s.split(',').map(str::trim).filter(|t| !t.is_empty()).map(String::from).collect())
+            .unwrap_or_default()
+    }
+
     pub fn has_switch(&self, name: &str) -> bool {
         self.switches.iter().any(|s| s == name)
     }
@@ -115,6 +123,13 @@ mod tests {
         assert_eq!(a.flag("workload"), Some("GMM"));
         assert_eq!(a.flag_usize("k", 0), 5);
         assert_eq!(a.flag("db"), Some("/tmp/t.jsonl"));
+    }
+
+    #[test]
+    fn parses_csv_flags() {
+        let a = parse("serve --workloads GMM,SFM, --db t.jsonl");
+        assert_eq!(a.flag_csv("workloads"), vec!["GMM".to_string(), "SFM".to_string()]);
+        assert!(a.flag_csv("missing").is_empty());
     }
 
     #[test]

@@ -112,6 +112,85 @@ fn pretraining_from_file_fits_the_model() {
 }
 
 #[test]
+fn truncated_final_line_recovers_every_intact_record() {
+    // Simulated crash mid-append: the file ends in half a record line.
+    let (path, _g) = tmp("truncate");
+    let first = tune_session(&path, 16, 13);
+    let text = std::fs::read_to_string(&path).unwrap();
+    assert!(text.ends_with('\n'));
+    // Chop into the final line (drop its newline + tail bytes).
+    std::fs::write(&path, &text[..text.len() - 25]).unwrap();
+
+    let db = JsonFileDb::open(&path).expect("recovery open");
+    assert_eq!(db.skipped_lines(), 1, "exactly the torn line is skipped");
+    assert_eq!(db.num_records(), first.trials - 1, "every intact record recovered");
+    assert!(db.best_latency(0).is_some());
+    drop(db);
+
+    // The recovered file is still a working database: a new session
+    // warm-starts from it and appends cleanly past the torn tail.
+    let resumed = tune_session(&path, 8, 13);
+    assert!(resumed.warm_records > 0, "recovery lost the warm-start set");
+    assert!(resumed.best_latency_s.is_finite());
+    let reopened = JsonFileDb::open(&path).unwrap();
+    assert_eq!(
+        reopened.num_records(),
+        first.trials - 1 + resumed.trials,
+        "appends after recovery must all be parseable"
+    );
+}
+
+#[test]
+fn interleaved_garbage_lines_recover_and_report_skip_count() {
+    let (path, _g) = tmp("garbage");
+    let first = tune_session(&path, 16, 17);
+    // Sprinkle garbage between intact lines (editor droppings, partial
+    // writes from another process, a JSON object of the wrong kind).
+    let lines: Vec<String> = std::fs::read_to_string(&path)
+        .unwrap()
+        .lines()
+        .map(String::from)
+        .collect();
+    let mut vandalized = Vec::new();
+    for (i, line) in lines.iter().enumerate() {
+        vandalized.push(line.clone());
+        if i % 5 == 0 {
+            vandalized.push("%% not json at all".to_string());
+        }
+        if i == 2 {
+            vandalized.push("{\"kind\":\"frobnicate\"}".to_string());
+        }
+    }
+    let n_garbage = vandalized.len() - lines.len();
+    std::fs::write(&path, vandalized.join("\n") + "\n").unwrap();
+
+    let db = JsonFileDb::open(&path).expect("recovery open");
+    assert_eq!(db.skipped_lines(), n_garbage);
+    assert!(!db.skip_notes().is_empty(), "skip diagnostics must name lines");
+    assert_eq!(db.num_records(), first.trials, "garbage must not cost intact records");
+    let stats = DbStats::compute(&db);
+    assert_eq!(stats.records, first.trials);
+    assert_eq!(db.best_latency(0), Some(first.best_latency_s));
+    drop(db);
+
+    // Dropping the corrupt bytes for good is gated: refused without
+    // `repair`, performed (and reported) with it.
+    let policy = metaschedule::db::CompactionPolicy::default();
+    let refused = metaschedule::db::compact_file(&path, &policy, false).unwrap_err();
+    assert!(refused.contains("--repair"), "{refused}");
+    assert_eq!(
+        JsonFileDb::open(&path).unwrap().skipped_lines(),
+        n_garbage,
+        "refused compaction must leave the file untouched"
+    );
+    let report = metaschedule::db::compact_file(&path, &policy, true).unwrap();
+    assert_eq!(report.corrupt_dropped, n_garbage);
+    let repaired = JsonFileDb::open(&path).unwrap();
+    assert_eq!(repaired.skipped_lines(), 0);
+    assert_eq!(repaired.best_latency(0), Some(first.best_latency_s));
+}
+
+#[test]
 fn distinct_targets_do_not_share_records() {
     let (path, _g) = tmp("targets");
     let prog = workloads::matmul(1, 128, 128, 128);

@@ -114,8 +114,8 @@ impl Measurer for RejectingMeasurer {
     fn count(&self) -> usize {
         self.0
     }
-    fn target_name(&self) -> &'static str {
-        "rejecting"
+    fn target_name(&self) -> String {
+        "rejecting".to_string()
     }
 }
 

@@ -5,6 +5,7 @@
 //! and the simulator must be deterministic and monotone where physics
 //! says so.
 
+use metaschedule::db::{compact_file, CompactionPolicy, Database, JsonFileDb, TuningRecord};
 use metaschedule::schedule::Schedule;
 use metaschedule::search::mutate;
 use metaschedule::sim::{simulate, Target};
@@ -13,8 +14,8 @@ use metaschedule::tir::analysis::program_flops;
 use metaschedule::tir::structural_hash;
 use metaschedule::trace::replay;
 use metaschedule::trace::replay::replay_fresh;
-use metaschedule::trace::FactorArg;
-use metaschedule::util::prop::{check, PropConfig};
+use metaschedule::trace::{FactorArg, Inst, Trace};
+use metaschedule::util::prop::{check, vec_of, PropConfig};
 use metaschedule::util::rng::Rng;
 use metaschedule::workloads;
 
@@ -368,6 +369,100 @@ fn prop_chain_split_rngs_never_collide() {
             }
             true
         },
+    );
+}
+
+/// One random record: (workload, latencies — empty = failure, cand hash).
+type RandRecord = (usize, Vec<f64>, u64);
+
+/// Build a JSONL db from the case, compact it, and check the compaction
+/// contract: `best_latency` and `query_top_k(j)` (j <= top_k) answer
+/// identically, no failure hash leaves the dedup set, and a second
+/// compaction is a byte-for-byte no-op.
+fn check_compaction_case(n_workloads: usize, recs: &[RandRecord], top_k: usize) -> Result<(), String> {
+    let path = std::env::temp_dir().join(format!("ms-prop-compact-{}.jsonl", std::process::id()));
+    let _ = std::fs::remove_file(&path);
+    let mut db = JsonFileDb::open(&path)?;
+    for w in 0..n_workloads {
+        db.register_workload(&format!("w{w}"), w as u64 + 1, "cpu");
+    }
+    for (i, (w, lats, cand)) in recs.iter().enumerate() {
+        db.commit_record(TuningRecord {
+            workload: *w,
+            trace: Trace {
+                insts: vec![Inst::GetBlock { name: format!("b{i}"), out: 0 }],
+            },
+            latencies: lats.clone(),
+            target: "cpu".into(),
+            seed: 1,
+            round: i as u64,
+            cand_hash: *cand,
+        });
+    }
+    // Reference answers from the uncompacted database.
+    let ref_best: Vec<Option<f64>> = (0..n_workloads).map(|w| db.best_latency(w)).collect();
+    let ref_top: Vec<Vec<Vec<TuningRecord>>> = (0..n_workloads)
+        .map(|w| (1..=top_k).map(|j| db.query_top_k(w, j)).collect())
+        .collect();
+    drop(db);
+
+    let policy = CompactionPolicy { top_k };
+    compact_file(&path, &policy, false)?;
+    let bytes_once = std::fs::read(&path).map_err(|e| e.to_string())?;
+    let db = JsonFileDb::open(&path)?;
+    if db.skipped_lines() != 0 {
+        return Err("compacted file has unparseable lines".into());
+    }
+    for w in 0..n_workloads {
+        if db.best_latency(w) != ref_best[w] {
+            return Err(format!(
+                "workload {w}: best_latency {:?} != {:?} after compaction",
+                db.best_latency(w),
+                ref_best[w]
+            ));
+        }
+        for j in 1..=top_k {
+            if db.query_top_k(w, j) != ref_top[w][j - 1] {
+                return Err(format!("workload {w}: query_top_k({j}) changed after compaction"));
+            }
+        }
+    }
+    // Every failure hash must still answer has_candidate (dedup safety).
+    for (w, lats, cand) in recs {
+        if lats.is_empty() && !db.has_candidate(*w, *cand) {
+            return Err(format!("workload {w}: failure hash {cand:016x} dropped by compaction"));
+        }
+    }
+    drop(db);
+    // Idempotence: compact(compact(f)) == compact(f), byte for byte.
+    compact_file(&path, &policy, false)?;
+    let bytes_twice = std::fs::read(&path).map_err(|e| e.to_string())?;
+    if bytes_once != bytes_twice {
+        return Err("second compaction changed the file".into());
+    }
+    let _ = std::fs::remove_file(&path);
+    Ok(())
+}
+
+#[test]
+fn prop_compaction_preserves_queries_dedup_and_is_idempotent() {
+    const TOP_K: usize = 3;
+    check(
+        cfg(30),
+        |rng| {
+            let n_workloads = 1 + rng.gen_range(3);
+            let recs: Vec<RandRecord> = vec_of(rng, 0, 24, |rng| {
+                let w = rng.gen_range(n_workloads);
+                let n_lat = rng.gen_range(3); // 0 latencies = failed candidate
+                // Latencies drawn from a small grid so exact ties are
+                // common — the tie-break (commit order) is part of the
+                // contract under test.
+                let lats: Vec<f64> = (0..n_lat).map(|_| (1 + rng.gen_range(8)) as f64 * 0.5e-6).collect();
+                (w, lats, rng.next_u64())
+            });
+            (n_workloads, recs)
+        },
+        |(n_workloads, recs)| check_compaction_case(*n_workloads, recs, TOP_K),
     );
 }
 

@@ -1,0 +1,240 @@
+//! Serving-layer integration: read-only snapshot loads, hit/miss
+//! batch serving over a compacted file, auto-GC under a live tuning
+//! session, and the concurrency contract — N readers hammering an
+//! immutable snapshot while a writer commits, GCs, and publishes must
+//! only ever observe whole snapshots (pre- or post-publish, never torn)
+//! with thread-count-invariant lookup results.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use metaschedule::cost_model::GbtCostModel;
+use metaschedule::db::{AutoGc, CompactionPolicy, Database, JsonFileDb, TuningRecord};
+use metaschedule::search::{EvolutionarySearch, SearchConfig, SimMeasurer};
+use metaschedule::serve::{serve_batch, ServeConfig, ServingCache, SnapshotSlot};
+use metaschedule::sim::Target;
+use metaschedule::space::SpaceComposer;
+use metaschedule::tir::structural_hash;
+use metaschedule::trace::{Inst, Trace};
+use metaschedule::workloads;
+
+/// Unique temp path per test; removed on drop.
+fn tmp(name: &str) -> (PathBuf, Guard) {
+    let p = std::env::temp_dir().join(format!("ms-serving-{}-{name}.jsonl", std::process::id()));
+    let _ = std::fs::remove_file(&p);
+    (p.clone(), Guard(p))
+}
+
+struct Guard(PathBuf);
+impl Drop for Guard {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.0);
+    }
+}
+
+fn quick_cfg(trials: usize) -> SearchConfig {
+    SearchConfig {
+        population: 24,
+        generations: 3,
+        num_trials: trials,
+        measure_batch: 8,
+        ..SearchConfig::default()
+    }
+}
+
+/// One tuning "session" against the GMM workload (registered under its
+/// display name, like the `tune` CLI does).
+fn tune_gmm(path: &Path, trials: usize, seed: u64, auto_gc: Option<AutoGc>) -> (f64, usize) {
+    let target = Target::cpu_avx512();
+    let w = workloads::by_name("GMM").unwrap();
+    let prog = (w.build)();
+    let composer = SpaceComposer::generic(target.clone());
+    let mut db = JsonFileDb::open(path).expect("open db");
+    db.set_auto_gc(auto_gc);
+    db.register_workload(w.name, structural_hash(&prog), target.name);
+    let mut model = GbtCostModel::new();
+    let mut measurer = SimMeasurer::new(target);
+    let r = EvolutionarySearch::new(quick_cfg(trials))
+        .tune_db(&prog, &composer, &mut model, &mut measurer, &mut db, seed);
+    (r.best_latency_s, r.warm_records)
+}
+
+#[test]
+fn read_only_snapshot_answers_like_the_live_db_without_touching_the_file() {
+    let (path, _g) = tmp("load");
+    let (best, _) = tune_gmm(&path, 24, 7, None);
+    let bytes_before = std::fs::read(&path).unwrap();
+
+    let (cache, skipped) = ServingCache::load(&path, 8).expect("load snapshot");
+    assert_eq!(skipped, 0);
+    assert_eq!(cache.num_workloads(), 1);
+    let target = Target::cpu_avx512();
+    let prog = (workloads::by_name("GMM").unwrap().build)();
+    let shash = structural_hash(&prog);
+    // Snapshot answers match the database's own top-k view.
+    let db = JsonFileDb::open(&path).unwrap();
+    assert_eq!(cache.lookup(shash, target.name), db.query_top_k(0, 1).first());
+    assert_eq!(cache.best_latency(shash, target.name), Some(best));
+    // apply_best reconstructs the recorded best program.
+    let sch = cache.apply_best(&prog, target.name).expect("best trace replays");
+    assert_eq!(structural_hash(&sch.prog), cache.lookup(shash, target.name).unwrap().cand_hash);
+    // Loading was genuinely read-only.
+    assert_eq!(std::fs::read(&path).unwrap(), bytes_before, "load must not modify the file");
+    // Unknown hash / wrong target are clean misses.
+    assert_eq!(cache.lookup(shash ^ 1, target.name), None);
+    assert_eq!(cache.lookup(shash, "gpu"), None);
+}
+
+#[test]
+fn serve_batch_hits_identically_before_and_after_compaction() {
+    let (path, _g) = tmp("compact-serve");
+    let (best, _) = tune_gmm(&path, 24, 11, None);
+    let target = Target::cpu_avx512();
+    let report_only = ServeConfig { miss_trials: 0, ..ServeConfig::default() };
+    let serve_once = |path: &Path| {
+        let mut db = JsonFileDb::open(path).unwrap();
+        serve_batch(&["GMM".to_string()], &target, &mut db, &report_only).unwrap()
+    };
+    let pre = serve_once(&path);
+    assert!(pre[0].hit);
+    assert_eq!(pre[0].latency_s, Some(best));
+
+    let report =
+        metaschedule::db::compact_file(&path, &CompactionPolicy { top_k: 4 }, false).expect("compact");
+    assert!(report.kept <= 4 + report.kept_failures);
+    let post = serve_once(&path);
+    assert!(post[0].hit, "compaction must not lose the served best");
+    assert_eq!(post[0].latency_s, Some(best));
+    assert!(post[0].records <= 4, "snapshot top-k exceeds the compaction policy");
+}
+
+#[test]
+fn tuning_with_auto_gc_stays_resumable() {
+    let (path, _g) = tmp("autogc-resume");
+    let gc = || {
+        Some(AutoGc {
+            max_bytes: 4096,
+            policy: CompactionPolicy { top_k: 8 },
+        })
+    };
+    let (first_best, warm0) = tune_gmm(&path, 24, 5, gc());
+    assert_eq!(warm0, 0);
+    let size_after_first = std::fs::metadata(&path).unwrap().len();
+    let (second_best, warm1) = tune_gmm(&path, 24, 5, gc());
+    assert!(warm1 > 0, "GC must not erase the warm-start set");
+    assert!(second_best <= first_best, "resume regressed: {second_best} vs {first_best}");
+    // The file stayed bounded instead of doubling.
+    let size_after_second = std::fs::metadata(&path).unwrap().len();
+    assert!(
+        size_after_second < size_after_first * 3,
+        "auto-GC never engaged: {size_after_first} -> {size_after_second} bytes"
+    );
+}
+
+/// Synthetic record for the concurrency test (distinct cand hashes keep
+/// the dedup index honest).
+fn rec(workload: usize, cand: u64, lat: f64) -> TuningRecord {
+    TuningRecord {
+        workload,
+        trace: Trace {
+            insts: vec![Inst::GetBlock { name: "blk".into(), out: 0 }],
+        },
+        latencies: vec![lat],
+        target: "cpu".into(),
+        seed: 0,
+        round: cand,
+        cand_hash: cand,
+    }
+}
+
+#[test]
+fn readers_observe_whole_snapshots_while_writer_commits_and_gcs() {
+    const READERS: usize = 8;
+    let (path, _g) = tmp("torn");
+    let mut db = JsonFileDb::open(&path).unwrap();
+    let a = db.register_workload("A", 0xa, "cpu");
+    let b = db.register_workload("B", 0xb, "cpu");
+    // Invariant made for tearing-detection: every commit writes B at
+    // exactly twice A's latency, so EVERY consistent snapshot satisfies
+    // best_B == 2 * best_A — while a torn mix of two published
+    // snapshots (which all have distinct bests) violates it.
+    db.commit_record(rec(a, 1, 4.0));
+    db.commit_record(rec(b, 2, 8.0));
+    // Final state after the writer's 200 improving commit pairs.
+    let post = (Some(1.0), Some(2.0));
+
+    let slot = Arc::new(SnapshotSlot::new(ServingCache::build(&db, 8)));
+    db.set_auto_gc(Some(AutoGc {
+        max_bytes: 2048,
+        policy: CompactionPolicy { top_k: 4 },
+    }));
+
+    fn observe(cache: &ServingCache) -> (Option<f64>, Option<f64>) {
+        (cache.best_latency(0xa, "cpu"), cache.best_latency(0xb, "cpu"))
+    }
+    let published = std::sync::atomic::AtomicBool::new(false);
+    let final_pairs: Vec<(Option<f64>, Option<f64>)> = std::thread::scope(|s| {
+        let writer = {
+            let slot = slot.clone();
+            let published = &published;
+            s.spawn(move || {
+                // Interleave commits across workloads, improving towards
+                // the post state; the byte budget forces several GC
+                // passes mid-stream, and a fresh snapshot is published
+                // every 20 commit pairs (including mid-GC states) so the
+                // readers race against real swaps, not just one.
+                for i in 0..200u64 {
+                    let lat = 4.0 - 3.0 * (i as f64 + 1.0) / 200.0; // 4.0 -> 1.0
+                    db.commit_record(rec(a, 100 + i, lat));
+                    db.commit_record(rec(b, 10_000 + i, 2.0 * lat));
+                    if (i + 1) % 20 == 0 {
+                        slot.publish(ServingCache::build(&db, 8));
+                    }
+                }
+                assert!(db.num_records() <= 32, "auto-GC never engaged");
+                published.store(true, std::sync::atomic::Ordering::Release);
+            })
+        };
+        let readers: Vec<_> = (0..READERS)
+            .map(|_| {
+                let slot = slot.clone();
+                let published = &published;
+                s.spawn(move || {
+                    // Hammer lookups until the final snapshot lands.
+                    // Every observation must be internally consistent
+                    // (the B == 2A invariant every published snapshot
+                    // satisfies and torn mixes violate) and bests may
+                    // only improve across observations.
+                    let mut last_a = f64::INFINITY;
+                    loop {
+                        let done = published.load(std::sync::atomic::Ordering::Acquire);
+                        let pair = observe(&slot.get());
+                        let (Some(la), Some(lb)) = pair else {
+                            panic!("snapshot lost a workload: {pair:?}");
+                        };
+                        assert!(lb == 2.0 * la, "torn snapshot observed: {pair:?}");
+                        assert!(la <= last_a, "snapshot went backwards: {la} after {last_a}");
+                        last_a = la;
+                        if pair == post {
+                            return pair;
+                        }
+                        // The final publish happened-before we loaded
+                        // `done`, so a get() after that must see it.
+                        assert!(!done, "stale snapshot read after final publish");
+                        std::thread::yield_now();
+                    }
+                })
+            })
+            .collect();
+        writer.join().unwrap();
+        readers.into_iter().map(|r| r.join().unwrap()).collect()
+    });
+    // Thread-count invariance: every reader converged on the identical
+    // result, and a fresh single-threaded lookup agrees.
+    assert_eq!(final_pairs.len(), READERS);
+    for pair in &final_pairs {
+        assert_eq!(*pair, post);
+    }
+    let solo = ServingCache::load(&path, 8).unwrap().0;
+    assert_eq!(observe(&solo), post, "on-disk state diverged from the published snapshot");
+}
