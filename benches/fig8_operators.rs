@@ -17,6 +17,7 @@ fn main() {
         seed: args.flag_u64("seed", 42),
         threads: args.flag_usize("threads", 0),
         db_path: args.flag("db").map(String::from),
+        ..ExpConfig::default()
     };
     for target in [Target::cpu_avx512(), Target::gpu()] {
         let report = fig8::run(&target, &cfg, None);

@@ -11,9 +11,9 @@
 //! ```
 
 use metaschedule::cost_model::{extract, extract_batch, Gbt, GbtCostModel};
+use metaschedule::ctx::TuneContext;
 use metaschedule::search::{mutate, EvolutionarySearch, SearchConfig, SimMeasurer};
 use metaschedule::sim::{simulate, Target};
-use metaschedule::space::SpaceComposer;
 use metaschedule::trace::replay::{replay, replay_fresh};
 use metaschedule::util::bench::{bench, print_table};
 use metaschedule::util::rng::Rng;
@@ -31,8 +31,8 @@ fn main() {
     } else {
         workloads::fused_dense(128, 3072, 768)
     };
-    let composer = SpaceComposer::generic(target.clone());
-    let designs = composer.generate(&prog, 42);
+    let ctx = TuneContext::generic(target.clone());
+    let designs = ctx.generate(&prog, 42);
     let sch = designs
         .iter()
         .max_by_key(|s| s.trace.len())
@@ -48,7 +48,7 @@ fn main() {
     let mut rows = Vec::new();
 
     let s = bench("space_generate", samples.min(20), budget_ms, || {
-        let _ = composer.generate(&prog, 42);
+        let _ = ctx.generate(&prog, 42);
     });
     rows.push(vec!["space generate (all traces)".into(), fmt(&s)]);
 
@@ -128,7 +128,7 @@ fn main() {
                 let mut measurer = SimMeasurer::new(target.clone());
                 let _ = EvolutionarySearch::new(cfg.clone()).tune(
                     &small,
-                    &composer,
+                    &ctx,
                     &mut model,
                     &mut measurer,
                     7,

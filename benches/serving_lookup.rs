@@ -37,6 +37,8 @@ fn synthetic_db(workloads: usize, records: usize) -> (InMemoryDb, Vec<(u64, &'st
                 seed: 1,
                 round: r as u64,
                 cand_hash: rng.next_u64(),
+                sim_version: "simtest".into(),
+                rule_set: String::new(),
             });
         }
     }

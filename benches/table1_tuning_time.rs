@@ -16,6 +16,7 @@ fn main() {
         seed: args.flag_u64("seed", 42),
         threads: args.flag_usize("threads", 0),
         db_path: args.flag("db").map(String::from),
+        ..ExpConfig::default()
     };
     let report = table1::run(&Target::cpu_avx512(), &cfg, None);
     // Values are seconds of tuning wall-clock, not operator latency.

@@ -1,17 +1,18 @@
 //! Search-space composition (paper §3.2, Figure 5): progressively compose
-//! transformation modules and watch the searched latency improve — the
-//! Figure 10a experiment in miniature, on the GPU target.
+//! schedule rules and watch the searched latency improve — the Figure 10a
+//! experiment in miniature, on the GPU target.
+//!
+//! Each step is just a `--rules`-style spec resolved against the built-in
+//! rule registry: growing the space is adding a name to a list, not
+//! editing system code.
 //!
 //! ```sh
 //! cargo run --release --example compose_space
 //! ```
 
-use metaschedule::exp::{tune_with_composer, ExpConfig};
+use metaschedule::ctx::TuneContext;
+use metaschedule::exp::{tune_with_ctx, ExpConfig};
 use metaschedule::sim::{simulate, Target};
-use metaschedule::space::{
-    AutoInline, CrossThreadReduction, MultiLevelTiling, RandomComputeLocation, SpaceComposer,
-    ThreadBind, TransformModule, UseTensorCore,
-};
 use metaschedule::workloads;
 
 fn main() {
@@ -21,48 +22,28 @@ fn main() {
     println!("fused-dense on {}: naive {:.1} us\n", target.name, naive * 1e6);
 
     let cfg = ExpConfig { trials: 64, seed: 5, ..ExpConfig::default() };
-    let steps: Vec<(&str, Vec<Box<dyn TransformModule>>)> = vec![
-        ("thread-bind only", vec![Box::new(ThreadBind::new())]),
-        (
-            "+ auto-inline",
-            vec![Box::new(AutoInline::new()), Box::new(ThreadBind::new())],
-        ),
+    let steps: Vec<(&str, &str)> = vec![
+        ("thread-bind only", "thread-bind"),
+        ("+ auto-inline", "auto-inline,thread-bind"),
         (
             "+ multi-level-tiling",
-            vec![
-                Box::new(AutoInline::new()),
-                Box::new(MultiLevelTiling::gpu()),
-                Box::new(CrossThreadReduction::new()),
-                Box::new(ThreadBind::new()),
-            ],
+            "auto-inline,multi-level-tiling,cross-thread-reduction,thread-bind",
         ),
         (
             "+ compute-location",
-            vec![
-                Box::new(AutoInline::new()),
-                Box::new(MultiLevelTiling::gpu()),
-                Box::new(CrossThreadReduction::new()),
-                Box::new(RandomComputeLocation::new()),
-                Box::new(ThreadBind::new()),
-            ],
+            "auto-inline,multi-level-tiling,cross-thread-reduction,random-compute-location,thread-bind",
         ),
         (
             "+ use-tensor-core (hardware-specific)",
-            vec![
-                Box::new(AutoInline::new()),
-                Box::new(UseTensorCore::wmma()),
-                Box::new(MultiLevelTiling::gpu()),
-                Box::new(CrossThreadReduction::new()),
-                Box::new(RandomComputeLocation::new()),
-                Box::new(ThreadBind::new()),
-            ],
+            "auto-inline,use-tensor-core,multi-level-tiling,cross-thread-reduction,random-compute-location,thread-bind",
         ),
     ];
 
     println!("{:<42} {:>12} {:>10}", "composition", "latency(us)", "vs naive");
-    for (name, modules) in steps {
-        let composer = SpaceComposer::new(modules, target.clone());
-        let r = tune_with_composer(&prog, &target, &composer, &cfg);
+    for (name, spec) in steps {
+        let ctx = TuneContext::from_specs(target.clone(), spec, "default", "default")
+            .expect("built-in rule names");
+        let r = tune_with_ctx(&prog, &ctx, &cfg);
         println!(
             "{:<42} {:>12.1} {:>9.1}x",
             name,
@@ -70,5 +51,6 @@ fn main() {
             naive / r.best_latency_s
         );
     }
-    println!("\neach row adds one module; richer spaces cover faster programs (Figure 10a).");
+    println!("\neach row adds one rule name; richer spaces cover faster programs (Figure 10a).");
+    println!("the same specs work on the CLI: metaschedule tune --rules <spec>");
 }

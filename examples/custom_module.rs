@@ -1,22 +1,26 @@
-//! Writing a custom transformation module — the paper's headline
-//! extensibility story (§6.3: a grad student wrote the 82-line
-//! Use-Tensor-Core module in 2 days and composed it in without touching
-//! the system).
+//! Writing a custom schedule rule — the paper's headline extensibility
+//! story (§6.3: a grad student wrote the 82-line Use-Tensor-Core module
+//! in 2 days and composed it in without touching the system).
 //!
-//! This example defines a new module from scratch — `SplitReorderCache`:
+//! This example defines a new rule from scratch — `SplitUnrollReduction`:
 //! a deliberately quirky "expert rule" that tiles the reduction loop and
-//! annotates a software-pipelining hint — and composes it with the stock
-//! generic modules. No framework code changes required: implement
-//! `TransformModule`, push it into the composer's list.
+//! annotates a software-pipelining hint — registers it in a
+//! [`RegistrySet`] under the name `split-unroll-reduction`, and invokes
+//! it exactly like a CLI user would: `--rules
+//! auto-inline,split-unroll-reduction,…`. No framework code changes
+//! required: implement `ScheduleRule`, register, name it in a spec. The
+//! rule then shows up in `--explain-space` diagnostics and in the
+//! rule-set provenance stamped into every tuning record.
 //!
 //! ```sh
 //! cargo run --release --example custom_module
 //! ```
 
-use metaschedule::exp::{tune_with_composer, ExpConfig};
+use metaschedule::ctx::{RegistrySet, TuneContext};
+use metaschedule::exp::{tune_with_ctx, ExpConfig};
 use metaschedule::schedule::{SchResult, Schedule};
 use metaschedule::sim::{simulate, Target};
-use metaschedule::space::{self, try_transform, SpaceComposer, TransformModule};
+use metaschedule::space::{attempt, RuleOutcome, ScheduleRule};
 use metaschedule::tir::analysis::{classify_loop, LoopClass};
 use metaschedule::tir::LoopKind;
 use metaschedule::trace::FactorArg;
@@ -53,24 +57,28 @@ impl SplitUnrollReduction {
     }
 }
 
-impl TransformModule for SplitUnrollReduction {
-    fn name(&self) -> &'static str {
+impl ScheduleRule for SplitUnrollReduction {
+    fn name(&self) -> &str {
         "split-unroll-reduction"
     }
 
-    fn apply(&self, sch: Schedule, block_name: &str, _t: &Target) -> Vec<Schedule> {
+    fn describe(&self) -> String {
+        "expert rule: sampled reduction split + inner unroll + pipeline hint".into()
+    }
+
+    fn apply(&self, sch: Schedule, block_name: &str, _t: &Target) -> RuleOutcome {
         let is_red = sch
             .prog
             .find_block(block_name)
             .map(|b| sch.prog.block_data(b).is_reduction())
             .unwrap_or(false);
         if !is_red {
-            return vec![sch];
+            return RuleOutcome::Skip(sch);
         }
-        match try_transform(&sch, |s| self.transform(s, block_name)) {
-            // Fork: with and without the expert rule.
-            Some(out) => vec![out, sch],
-            None => vec![sch],
+        // Fork: with and without the expert rule.
+        match attempt(&sch, |s| self.transform(s, block_name)) {
+            Ok(out) => RuleOutcome::Applied(vec![out, sch]),
+            Err(e) => RuleOutcome::Fail(sch, e),
         }
     }
 }
@@ -84,24 +92,31 @@ fn main() {
     let cfg = ExpConfig { trials: 64, seed: 2, ..ExpConfig::default() };
 
     // Stock generic space.
-    let generic = SpaceComposer::generic(target.clone());
-    let r0 = tune_with_composer(&prog, &target, &generic, &cfg);
+    let generic = TuneContext::generic(target.clone());
+    let r0 = tune_with_ctx(&prog, &generic, &cfg);
     println!("generic space              -> {:.2} us", r0.best_latency_s * 1e6);
 
-    // Generic space + the custom module, composed in one line.
-    let mut modules: Vec<Box<dyn TransformModule>> = vec![
-        Box::new(space::AutoInline::new()),
-        Box::new(SplitUnrollReduction),
-        Box::new(space::MultiLevelTiling::cpu()),
-        Box::new(space::AddRfactor::new()),
-        Box::new(space::RandomComputeLocation::new()),
-        Box::new(space::ParallelVectorizeUnroll::new()),
-    ];
-    let composer = SpaceComposer::new(std::mem::take(&mut modules), target.clone());
-    let r1 = tune_with_composer(&prog, &target, &composer, &cfg);
-    println!("generic + custom module    -> {:.2} us", r1.best_latency_s * 1e6);
+    // Register the custom rule, then compose it by NAME — the same spec
+    // grammar the CLI's --rules flag takes.
+    let mut reg = RegistrySet::builtin();
+    reg.rules.register("split-unroll-reduction", |_| {
+        Box::new(SplitUnrollReduction) as Box<dyn ScheduleRule>
+    });
+    let ctx = TuneContext::from_specs_in(
+        &reg,
+        target.clone(),
+        "auto-inline,split-unroll-reduction,multi-level-tiling,add-rfactor,random-compute-location,parallel-vectorize-unroll",
+        "default",
+        "default",
+    )
+    .expect("registered rule resolves by name");
+    let r1 = tune_with_ctx(&prog, &ctx, &cfg);
+    println!("generic + custom rule      -> {:.2} us", r1.best_latency_s * 1e6);
+    println!("rule-set provenance        -> {}", ctx.rule_set());
+    println!("\n--explain-space view of the extended context:");
+    print!("{}", ctx.explain());
     println!(
-        "\ncustom module composed without any framework change; best space wins ({})",
+        "\ncustom rule composed without any framework change; best space wins ({})",
         if r1.best_latency_s <= r0.best_latency_s { "custom helped or tied" } else { "generic was already sufficient" }
     );
 }

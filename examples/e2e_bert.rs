@@ -9,10 +9,10 @@
 //! cargo run --release --example e2e_bert [-- --trials 48 --target cpu]
 //! ```
 
+use metaschedule::ctx::TuneContext;
 use metaschedule::graph::{self, extract_tasks};
 use metaschedule::search::{SearchConfig, SimMeasurer, TaskScheduler};
 use metaschedule::sim::{simulate, Target};
-use metaschedule::space::SpaceComposer;
 use metaschedule::util::cli::Args;
 
 fn main() {
@@ -39,7 +39,7 @@ fn main() {
         .sum();
 
     // Tune.
-    let composer = SpaceComposer::generic(target.clone());
+    let ctx = TuneContext::generic(target.clone());
     let mut measurer = SimMeasurer::new(target.clone());
     let ts = TaskScheduler::new(SearchConfig {
         threads: args.flag_usize("threads", 0),
@@ -47,7 +47,7 @@ fn main() {
     });
     let total_budget = trials_per_task * tasks.len();
     let t0 = std::time::Instant::now();
-    let results = ts.tune_tasks(&tasks, &composer, &mut measurer, total_budget, 42);
+    let results = ts.tune_tasks(&tasks, &ctx, &mut measurer, total_budget, 42);
     let wall = t0.elapsed().as_secs_f64();
 
     println!(

@@ -6,10 +6,10 @@
 //! ```
 
 use metaschedule::cost_model::GbtCostModel;
+use metaschedule::ctx::TuneContext;
 use metaschedule::schedule::Schedule;
 use metaschedule::search::{EvolutionarySearch, SearchConfig, SimMeasurer};
 use metaschedule::sim::{simulate, Target};
-use metaschedule::space::SpaceComposer;
 use metaschedule::tir::{print_program, PrintOptions};
 use metaschedule::trace::serde::trace_to_text;
 use metaschedule::trace::FactorArg;
@@ -54,14 +54,14 @@ fn main() {
     println!("  ...\n");
 
     // ---- 3. Learning-driven search over the composed generic space --------
-    let composer = SpaceComposer::generic(target.clone());
+    let ctx = TuneContext::generic(target.clone());
     let search = EvolutionarySearch::new(SearchConfig {
         num_trials: 96,
         ..SearchConfig::default()
     });
     let mut model = GbtCostModel::new();
     let mut measurer = SimMeasurer::new(target.clone());
-    let result = search.tune(&prog, &composer, &mut model, &mut measurer, 1);
+    let result = search.tune(&prog, &ctx, &mut model, &mut measurer, 1);
     println!(
         "evolutionary search ({} trials) -> {:.1} us  ({:.1}x over naive, {:.1}x over hand)",
         result.trials,

@@ -14,10 +14,10 @@
 //! ```
 
 use metaschedule::cost_model::GbtCostModel;
+use metaschedule::ctx::TuneContext;
 use metaschedule::runtime::{scan_variants, PallasTileModule, PjrtGmmMeasurer, TileVariant};
 use metaschedule::search::{EvolutionarySearch, Measurer, SearchConfig};
 use metaschedule::sim::Target;
-use metaschedule::space::SpaceComposer;
 use metaschedule::workloads;
 
 fn main() {
@@ -66,7 +66,7 @@ fn main() {
     // fraction of the measurements? (Measurements are cached per variant,
     // so `count` counts proposals; distinct timings <= grid size.)
     let prog = workloads::matmul(1, 128, 128, 128);
-    let composer = SpaceComposer::new(
+    let ctx = TuneContext::from_rules(
         vec![Box::new(PallasTileModule::new())],
         Target::cpu_avx512(),
     );
@@ -78,7 +78,7 @@ fn main() {
         ..SearchConfig::default()
     };
     let mut model = GbtCostModel::new();
-    let r = EvolutionarySearch::new(cfg).tune(&prog, &composer, &mut model, &mut measurer, 3);
+    let r = EvolutionarySearch::new(cfg).tune(&prog, &ctx, &mut model, &mut measurer, 3);
     let tile = metaschedule::runtime::tile_of(&r.best_prog).unwrap();
     let snapped = measurer.snap(tile);
     println!(

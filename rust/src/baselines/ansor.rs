@@ -9,17 +9,18 @@
 //! extensions like Use-Tensor-Core without a system revamp (Appendix A.4).
 
 use crate::cost_model::GbtCostModel;
+use crate::ctx::TuneContext;
 use crate::search::{EvolutionarySearch, Measurer, SearchConfig, TuneResult};
 use crate::sim::{Target, TargetKind};
 use crate::space::{
     AutoInline, CrossThreadReduction, MultiLevelTiling, ParallelVectorizeUnroll,
-    RandomComputeLocation, SpaceComposer, ThreadBind, TransformModule,
+    RandomComputeLocation, ScheduleRule, ThreadBind,
 };
 use crate::tir::Program;
 
 /// The frozen sketch-rule list. Deliberately *not* configurable: this is
 /// the "surgical changes required" property the paper contrasts against.
-fn frozen_sketch_rules(target: &Target) -> Vec<Box<dyn TransformModule>> {
+fn frozen_sketch_rules(target: &Target) -> Vec<Box<dyn ScheduleRule>> {
     match target.kind {
         TargetKind::Cpu => vec![
             Box::new(AutoInline::new()),
@@ -54,7 +55,10 @@ impl Ansor {
         measurer: &mut dyn Measurer,
         seed: u64,
     ) -> TuneResult {
-        let composer = SpaceComposer::new(frozen_sketch_rules(target), target.clone());
+        // Deliberately bypasses the rule registry: Ansor's rule list is a
+        // frozen constant, which is exactly the architectural contrast the
+        // paper draws against MetaSchedule's named, user-extensible sets.
+        let ctx = TuneContext::from_rules(frozen_sketch_rules(target), target.clone());
         let cfg = SearchConfig {
             num_trials: self.num_trials,
             threads: self.threads,
@@ -67,10 +71,10 @@ impl Ansor {
         // what Table 1's tuning-time gap measures.
         let rounds = self.num_trials.div_ceil(cfg.measure_batch);
         for r in 1..rounds {
-            let _ = composer.generate(prog, seed.wrapping_add(r as u64));
+            let _ = ctx.generate(prog, seed.wrapping_add(r as u64));
         }
         let mut model = GbtCostModel::new();
-        EvolutionarySearch::new(cfg).tune(prog, &composer, &mut model, measurer, seed)
+        EvolutionarySearch::new(cfg).tune(prog, &ctx, &mut model, measurer, seed)
     }
 }
 

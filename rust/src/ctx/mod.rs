@@ -1,0 +1,356 @@
+//! `TuneContext`: the pluggable component bundle the search runs against.
+//!
+//! MetaSchedule's headline claim is that domain experts *modularly grow*
+//! the search space. This module is that claim's API surface: a
+//! [`TuneContext`] owns four component families behind object-safe
+//! traits —
+//!
+//! - [`crate::space::ScheduleRule`] (space construction, §3.2),
+//! - [`crate::space::SpaceGenerator`] (the composer, built from a *named*
+//!   rule set resolved against [`registry::RegistrySet`]),
+//! - [`Mutator`] (per-decision-kind trace mutation with configurable
+//!   weights, §4),
+//! - [`Postproc`] (named, ordered candidate validity checks),
+//!
+//! — and the search ([`crate::search`]) consumes only this bundle: no
+//! concrete rule type is named anywhere inside the search layer, which is
+//! what makes a custom rule registered purely through the public API a
+//! first-class citizen of tuning, diagnostics (`--explain-space`), and
+//! record provenance (the rule-set label stamped into every
+//! [`crate::db::TuningRecord`]).
+//!
+//! The default context ([`TuneContext::generic`]) is byte-identical to
+//! the pre-registry hardcoded composition: same rules in the same order,
+//! same RNG draw sequence in mutation, same integrity check gating
+//! mutation validation. (Postprocs additionally gate fresh-sample and
+//! elite admission into the population — with the default
+//! `verify-integrity` pipeline that accepts every successful replay, so
+//! default behaviour is unchanged; an opt-in `sim-validity` really does
+//! filter before measurement.) Pinned by the equivalence suite in
+//! `rust/tests/space_registry.rs`.
+
+pub mod mutators;
+pub mod postproc;
+pub mod registry;
+
+pub use mutators::{mutate, CategoricalRedraw, ComputeLocationMove, Mutator, MutatorSet, TileTransfer};
+pub use postproc::{Postproc, SimValidity, VerifyIntegrity};
+pub use registry::{
+    default_rule_names, expand_rule_spec, parse_mutators, parse_postprocs, parse_rules, Registry,
+    RegistrySet, DEFAULT_MUTATORS, DEFAULT_POSTPROCS, DEFAULT_RULES_CPU, DEFAULT_RULES_GPU,
+};
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::schedule::Schedule;
+use crate::sim::Target;
+use crate::space::{ScheduleRule, SpaceGenerator};
+use crate::tir::Program;
+use crate::trace::Trace;
+use crate::util::rng::Rng;
+
+/// Pass/reject counters for one postprocessor (diagnostics only).
+struct PostprocStat {
+    pass: AtomicUsize,
+    reject: AtomicUsize,
+    notes: Mutex<Vec<String>>,
+}
+
+impl PostprocStat {
+    fn new() -> PostprocStat {
+        PostprocStat {
+            pass: AtomicUsize::new(0),
+            reject: AtomicUsize::new(0),
+            notes: Mutex::new(Vec::new()),
+        }
+    }
+}
+
+/// The tuning context: target + space generator + mutators + postprocs,
+/// plus the provenance label and diagnostic counters. Shared immutably
+/// (`&TuneContext`) across the search's worker threads; all counters are
+/// atomics, so recording diagnostics never perturbs determinism.
+pub struct TuneContext {
+    target: Target,
+    space: SpaceGenerator,
+    mutators: MutatorSet,
+    postprocs: Vec<Box<dyn Postproc>>,
+    postproc_stats: Vec<PostprocStat>,
+    mutations_accepted: AtomicUsize,
+    rule_set: String,
+}
+
+impl TuneContext {
+    /// Assemble a context from concrete components. The rule-set label
+    /// is canonical — the rule names joined with `,` plus a digest of
+    /// their `(name, params)` sequence (see
+    /// [`SpaceGenerator::rule_set`]) — so two contexts with the same
+    /// rules share provenance no matter how they were spelled, and two
+    /// differently-configured spaces never collide.
+    pub fn new(
+        rules: Vec<Box<dyn ScheduleRule>>,
+        mutators: MutatorSet,
+        postprocs: Vec<Box<dyn Postproc>>,
+        target: Target,
+    ) -> TuneContext {
+        let space = SpaceGenerator::new(rules, target.clone());
+        let rule_set = space.rule_set();
+        let postproc_stats = postprocs.iter().map(|_| PostprocStat::new()).collect();
+        TuneContext {
+            target,
+            space,
+            mutators,
+            postprocs,
+            postproc_stats,
+            mutations_accepted: AtomicUsize::new(0),
+            rule_set,
+        }
+    }
+
+    /// The paper's generic per-target composition (Figure 5 right, minus
+    /// hardware-specific rules), resolved from the registry defaults.
+    pub fn generic(target: Target) -> TuneContext {
+        TuneContext::from_specs(target, "default", "default", "default")
+            .expect("builtin default specs must resolve")
+    }
+
+    /// Generic composition plus the hardware-specific `Use-Tensor-Core`
+    /// rule (Figure 5 right / Figure 10), inserted after `auto-inline` so
+    /// it claims matmul-like blocks before generic tiling.
+    pub fn with_tensor_core(target: Target) -> TuneContext {
+        TuneContext::from_specs(target, "default-tc", "default", "default")
+            .expect("builtin default-tc spec must resolve")
+    }
+
+    /// A context from explicit rule instances with default mutators and
+    /// postprocessors (baselines and custom spaces use this).
+    pub fn from_rules(rules: Vec<Box<dyn ScheduleRule>>, target: Target) -> TuneContext {
+        let reg = RegistrySet::builtin();
+        let mutators = parse_mutators(&reg, "default", &target).expect("builtin mutators");
+        let postprocs = parse_postprocs(&reg, "default", &target).expect("builtin postprocs");
+        TuneContext::new(rules, mutators, postprocs, target)
+    }
+
+    /// Parse `--rules`/`--mutators`/`--postprocs` specs against the
+    /// built-in registry.
+    pub fn from_specs(target: Target, rules: &str, mutators: &str, postprocs: &str) -> Result<TuneContext, String> {
+        TuneContext::from_specs_in(&RegistrySet::builtin(), target, rules, mutators, postprocs)
+    }
+
+    /// Parse specs against a caller-extended registry — the public path
+    /// by which a custom rule/mutator/postproc becomes addressable.
+    pub fn from_specs_in(
+        reg: &RegistrySet,
+        target: Target,
+        rules: &str,
+        mutators: &str,
+        postprocs: &str,
+    ) -> Result<TuneContext, String> {
+        let rules = parse_rules(reg, rules, &target)?;
+        let mutators = parse_mutators(reg, mutators, &target)?;
+        let postprocs = parse_postprocs(reg, postprocs, &target)?;
+        Ok(TuneContext::new(rules, mutators, postprocs, target))
+    }
+
+    pub fn target(&self) -> &Target {
+        &self.target
+    }
+
+    pub fn space(&self) -> &SpaceGenerator {
+        &self.space
+    }
+
+    pub fn mutators(&self) -> &MutatorSet {
+        &self.mutators
+    }
+
+    /// Canonical rule-set label, stamped into tuning-record provenance.
+    pub fn rule_set(&self) -> &str {
+        &self.rule_set
+    }
+
+    /// Generate the design space for `prog` (see
+    /// [`SpaceGenerator::generate`]).
+    pub fn generate(&self, prog: &Program, seed: u64) -> Vec<Schedule> {
+        self.space.generate(prog, seed)
+    }
+
+    /// Mutate one sampling decision of `trace`, validating candidates by
+    /// replay plus this context's postprocessor pipeline.
+    pub fn mutate(&self, trace: &Trace, prog: &Program, rng: &mut Rng, seed: u64) -> Option<Schedule> {
+        let out = self.mutators.mutate_with(trace, prog, rng, seed, |sch| self.postprocess(sch));
+        if out.is_some() {
+            self.mutations_accepted.fetch_add(1, Ordering::Relaxed);
+        }
+        out
+    }
+
+    /// Run the postprocessor pipeline in order; the first rejection wins.
+    pub fn postprocess(&self, sch: &Schedule) -> bool {
+        for (p, stat) in self.postprocs.iter().zip(&self.postproc_stats) {
+            match p.check(sch, &self.target) {
+                Ok(()) => {
+                    stat.pass.fetch_add(1, Ordering::Relaxed);
+                }
+                Err(e) => {
+                    stat.reject.fetch_add(1, Ordering::Relaxed);
+                    let mut notes = stat.notes.lock().unwrap();
+                    if notes.len() < 2 && !notes.contains(&e) {
+                        notes.push(e);
+                    }
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// Human-readable diagnostics: per-rule applicability/error counters,
+    /// per-postproc pass/reject, per-mutator proposal counts — the
+    /// `tune --explain-space` payload.
+    pub fn explain(&self) -> String {
+        let mut out = String::new();
+        out.push_str("== search-space context ==\n");
+        out.push_str(&format!("target: {}\n", self.target.name));
+        out.push_str(&format!("rules: {}\n", self.rule_set));
+        out.push_str(&format!("mutators: {}\n", self.mutators.label()));
+        for (rule, diag) in self.space.rules().iter().zip(self.space.diag()) {
+            out.push_str(&format!(
+                "rule {}: applied {}, skipped {}, failed {}\n",
+                diag.name(),
+                diag.applied(),
+                diag.skipped(),
+                diag.failed()
+            ));
+            let desc = rule.describe();
+            if !desc.is_empty() {
+                out.push_str(&format!("    {desc}\n"));
+            }
+            for (k, v) in rule.params() {
+                out.push_str(&format!("    param {k}={v}\n"));
+            }
+            for e in diag.errors() {
+                out.push_str(&format!("    error: {e}\n"));
+            }
+        }
+        for (p, stat) in self.postprocs.iter().zip(&self.postproc_stats) {
+            out.push_str(&format!(
+                "postproc {}: pass {}, reject {}\n",
+                p.name(),
+                stat.pass.load(Ordering::Relaxed),
+                stat.reject.load(Ordering::Relaxed)
+            ));
+            let desc = p.describe();
+            if !desc.is_empty() {
+                out.push_str(&format!("    {desc}\n"));
+            }
+            for e in stat.notes.lock().unwrap().iter() {
+                out.push_str(&format!("    reject: {e}\n"));
+            }
+        }
+        for (name, weight, proposed) in self.mutators.stats() {
+            out.push_str(&format!("mutator {name} (weight {weight}): {proposed} proposals\n"));
+        }
+        out.push_str(&format!(
+            "mutations accepted: {}\n",
+            self.mutations_accepted.load(Ordering::Relaxed)
+        ));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads;
+
+    fn assert_send_sync<T: Send + Sync>() {}
+
+    #[test]
+    fn tune_context_is_shareable_across_threads() {
+        assert_send_sync::<TuneContext>();
+    }
+
+    #[test]
+    fn generic_context_has_canonical_labels() {
+        let cpu = TuneContext::generic(Target::cpu_avx512());
+        assert!(
+            cpu.rule_set().starts_with(
+                "auto-inline,multi-level-tiling,add-rfactor,random-compute-location,parallel-vectorize-unroll #"
+            ),
+            "{}",
+            cpu.rule_set()
+        );
+        // Spelling the same list explicitly yields the identical label —
+        // provenance does not depend on the `default` sugar.
+        let explicit = TuneContext::from_specs(
+            Target::cpu_avx512(),
+            "auto-inline,multi-level-tiling,add-rfactor,random-compute-location,parallel-vectorize-unroll",
+            "default",
+            "default",
+        )
+        .unwrap();
+        assert_eq!(cpu.rule_set(), explicit.rule_set());
+        // The mlt-cpu alias resolves to the same instance name, so the
+        // label is still canonical.
+        let alias = TuneContext::from_specs(Target::cpu_avx512(), "mlt-cpu", "default", "default")
+            .unwrap();
+        assert!(alias.rule_set().starts_with("multi-level-tiling #"), "{}", alias.rule_set());
+        // ...and the digest distinguishes spaces the names alone cannot:
+        // the CPU tiling structure resolved on a GPU target is a
+        // DIFFERENT space from the GPU default, and must stamp a
+        // different label even though every rule family name matches.
+        let gpu_default = TuneContext::generic(Target::gpu());
+        let gpu_with_cpu_mlt = TuneContext::from_specs(
+            Target::gpu(),
+            "auto-inline,mlt-cpu,cross-thread-reduction,random-compute-location,thread-bind",
+            "default",
+            "default",
+        )
+        .unwrap();
+        assert_ne!(gpu_default.rule_set(), gpu_with_cpu_mlt.rule_set());
+        // WMMA vs MXU tensor cores likewise.
+        let wmma = TuneContext::from_specs(Target::gpu(), "use-tensor-core", "default", "default").unwrap();
+        let mxu = TuneContext::from_specs(Target::gpu(), "use-tensor-core-mxu", "default", "default").unwrap();
+        assert_ne!(wmma.rule_set(), mxu.rule_set());
+    }
+
+    #[test]
+    fn bad_specs_are_rejected() {
+        assert!(TuneContext::from_specs(Target::cpu_avx512(), "nope", "default", "default").is_err());
+        assert!(TuneContext::from_specs(Target::cpu_avx512(), "default", "nope", "default").is_err());
+        assert!(TuneContext::from_specs(Target::cpu_avx512(), "default", "default", "nope").is_err());
+    }
+
+    #[test]
+    fn explain_reports_rules_postprocs_and_mutators() {
+        let ctx = TuneContext::generic(Target::cpu_avx512());
+        let prog = workloads::matmul(1, 64, 64, 64);
+        let _ = ctx.generate(&prog, 1);
+        let text = ctx.explain();
+        assert!(text.contains("rule auto-inline:"), "{text}");
+        assert!(text.contains("rule multi-level-tiling:"), "{text}");
+        assert!(text.contains("postproc verify-integrity:"), "{text}");
+        assert!(text.contains("mutator tile-transfer"), "{text}");
+        assert!(text.contains("rules: auto-inline,"), "{text}");
+        assert!(text.contains("mutators: tile-transfer,categorical-redraw,compute-location-move"), "{text}");
+    }
+
+    #[test]
+    fn postprocess_counts_passes_and_rejections() {
+        let ctx = TuneContext::from_specs(Target::gpu(), "default", "default", "sim-validity")
+            .unwrap();
+        // Valid on the GPU model.
+        let ok = Schedule::new(workloads::matmul(1, 32, 32, 32), 0);
+        assert!(ctx.postprocess(&ok));
+        // 4096 threads on one loop -> sim-invalid.
+        let mut bad = Schedule::new(workloads::matmul(1, 4096, 16, 16), 0);
+        let b = bad.get_block("matmul").unwrap();
+        let loops = bad.get_loops(b).unwrap();
+        bad.bind(loops[1], "threadIdx.x").unwrap();
+        assert!(!ctx.postprocess(&bad));
+        let text = ctx.explain();
+        assert!(text.contains("postproc sim-validity: pass 1, reject 1"), "{text}");
+    }
+}

@@ -1,0 +1,471 @@
+//! Trace mutators (paper §4, Figure 7), trait-ified: propose a new
+//! variant of a trace by changing one random variable's sampling
+//! decision, then validate by replaying. Replay failure = the proposal
+//! left the support set and is rejected — the *trace validator*.
+//!
+//! Each [`Mutator`] owns one decision kind (tile transfer, categorical
+//! redraw, compute-location move); a [`MutatorSet`] composes them with
+//! configurable weights, so callers can extend or reweight mutation the
+//! same way they extend the rule set. With the default set (exactly one
+//! mutator per decision kind, equal weights) the RNG draw sequence is
+//! bit-identical to the pre-trait free functions: the instruction pick is
+//! uniform, and a weight draw only happens when *several* mutators claim
+//! the same instruction.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use crate::schedule::Schedule;
+use crate::tir::Program;
+use crate::trace::replay::{replay_with_decisions, Decision};
+use crate::trace::{Inst, Trace};
+use crate::util::rng::Rng;
+
+/// A per-decision-kind trace mutator. `applies` declares which sampling
+/// instructions the mutator can rewrite; `propose` draws an alternative
+/// decision (or `None` when the instruction has no alternative).
+/// `Send + Sync` because the search's worker chains share one
+/// [`crate::ctx::TuneContext`].
+pub trait Mutator: Send + Sync {
+    fn name(&self) -> &str;
+    fn applies(&self, inst: &Inst) -> bool;
+    fn propose(&self, trace: &Trace, idx: usize, prog: &Program, rng: &mut Rng) -> Option<Decision>;
+}
+
+/// Divisors of `x` greater than 1.
+fn proper_divisors(x: i64) -> Vec<i64> {
+    let mut out = Vec::new();
+    let mut d = 2;
+    while d * d <= x {
+        if x % d == 0 {
+            out.push(d);
+            if d != x / d {
+                out.push(x / d);
+            }
+        }
+        d += 1;
+    }
+    if x > 1 {
+        out.push(x);
+    }
+    out.sort_unstable();
+    out
+}
+
+/// Tile-size transfer: move a divisor from one tile level to another
+/// (preserves the factor product, i.e. stays a perfect tile).
+pub struct TileTransfer;
+
+impl Mutator for TileTransfer {
+    fn name(&self) -> &str {
+        "tile-transfer"
+    }
+
+    fn applies(&self, inst: &Inst) -> bool {
+        matches!(inst, Inst::SamplePerfectTile { .. })
+    }
+
+    fn propose(&self, trace: &Trace, idx: usize, _prog: &Program, rng: &mut Rng) -> Option<Decision> {
+        let Inst::SamplePerfectTile { decision, max_innermost, .. } = &trace.insts[idx] else {
+            return None;
+        };
+        let n = decision.len();
+        if n < 2 {
+            return None;
+        }
+        for _ in 0..16 {
+            let src = rng.gen_range(n);
+            let dst = rng.gen_range(n);
+            if src == dst || decision[src] <= 1 {
+                continue;
+            }
+            let divs = proper_divisors(decision[src]);
+            if divs.is_empty() {
+                continue;
+            }
+            let d = *rng.choose(&divs);
+            let mut new = decision.clone();
+            new[src] /= d;
+            new[dst] *= d;
+            if *max_innermost > 0 && *new.last().unwrap() > *max_innermost {
+                continue;
+            }
+            if new != *decision {
+                return Some(Decision::Tile(new));
+            }
+        }
+        None
+    }
+}
+
+/// Re-draw a different categorical index, weighted by the instruction's
+/// own probabilities.
+pub struct CategoricalRedraw;
+
+impl Mutator for CategoricalRedraw {
+    fn name(&self) -> &str {
+        "categorical-redraw"
+    }
+
+    fn applies(&self, inst: &Inst) -> bool {
+        matches!(inst, Inst::SampleCategorical { .. })
+    }
+
+    fn propose(&self, trace: &Trace, idx: usize, _prog: &Program, rng: &mut Rng) -> Option<Decision> {
+        let Inst::SampleCategorical { candidates, probs, decision, .. } = &trace.insts[idx] else {
+            return None;
+        };
+        if candidates.len() < 2 {
+            return None;
+        }
+        for _ in 0..16 {
+            let i = rng.sample_weighted(probs);
+            if i != *decision {
+                return Some(Decision::Categorical(i));
+            }
+        }
+        None
+    }
+}
+
+/// Compute-location move: the candidate set is state-dependent, so the
+/// trace prefix is replayed to recover the program state at that point.
+pub struct ComputeLocationMove;
+
+impl Mutator for ComputeLocationMove {
+    fn name(&self) -> &str {
+        "compute-location-move"
+    }
+
+    fn applies(&self, inst: &Inst) -> bool {
+        matches!(inst, Inst::SampleComputeLocation { .. })
+    }
+
+    fn propose(&self, trace: &Trace, idx: usize, prog: &Program, rng: &mut Rng) -> Option<Decision> {
+        let (block, old) = match &trace.insts[idx] {
+            Inst::SampleComputeLocation { block, decision, .. } => (*block, *decision),
+            _ => return None,
+        };
+        // Replay everything before idx to recover the program state.
+        let prefix = Trace {
+            insts: trace.insts[..idx].to_vec(),
+        };
+        let sch = crate::trace::replay(&prefix, prog, 0).ok()?;
+        let item = sch.block(crate::schedule::BlockRv(block)).ok()?;
+        let n = sch.compute_location_candidates(item).len();
+        // Candidates: {-1 (root)} ∪ {0..n}; try to find one different from old.
+        let mut options: Vec<i64> = vec![-1];
+        options.extend(0..n as i64);
+        options.retain(|&d| d != old);
+        if options.is_empty() {
+            return None;
+        }
+        Some(Decision::Location(*rng.choose(&options)))
+    }
+}
+
+struct Entry {
+    mutator: Box<dyn Mutator>,
+    weight: f64,
+    proposed: AtomicUsize,
+}
+
+/// A weighted, ordered set of mutators — the mutation half of a
+/// [`crate::ctx::TuneContext`].
+pub struct MutatorSet {
+    entries: Vec<Entry>,
+}
+
+impl MutatorSet {
+    pub fn new() -> MutatorSet {
+        MutatorSet { entries: Vec::new() }
+    }
+
+    /// The built-in default: one mutator per decision kind, equal weight
+    /// — RNG-for-RNG the pre-registry mutation behaviour.
+    pub fn builtin_default() -> MutatorSet {
+        let mut set = MutatorSet::new();
+        set.push(Box::new(TileTransfer), 1.0);
+        set.push(Box::new(CategoricalRedraw), 1.0);
+        set.push(Box::new(ComputeLocationMove), 1.0);
+        set
+    }
+
+    pub fn push(&mut self, mutator: Box<dyn Mutator>, weight: f64) {
+        self.entries.push(Entry {
+            mutator,
+            weight: weight.max(0.0),
+            proposed: AtomicUsize::new(0),
+        });
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Canonical label: names joined with `,`, weights appended as
+    /// `:w` only when not 1.
+    pub fn label(&self) -> String {
+        self.entries
+            .iter()
+            .map(|e| {
+                if (e.weight - 1.0).abs() < 1e-12 {
+                    e.mutator.name().to_string()
+                } else {
+                    format!("{}:{}", e.mutator.name(), e.weight)
+                }
+            })
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+
+    /// `(name, weight, proposals so far)` per mutator, for diagnostics.
+    pub fn stats(&self) -> Vec<(String, f64, usize)> {
+        self.entries
+            .iter()
+            .map(|e| (e.mutator.name().to_string(), e.weight, e.proposed.load(Ordering::Relaxed)))
+            .collect()
+    }
+
+    /// Propose a mutated decision for the sampling instruction at `idx`:
+    /// dispatch to the applicable mutator (weight-sampled only when more
+    /// than one applies, so the default set draws nothing extra). The
+    /// common exactly-one-applies case dispatches allocation-free — this
+    /// runs inside the innermost search loop, where the old free
+    /// functions dispatched with a bare `match`.
+    pub fn propose_for(&self, trace: &Trace, idx: usize, prog: &Program, rng: &mut Rng) -> Option<Decision> {
+        let inst = &trace.insts[idx];
+        let mut first: Option<usize> = None;
+        let mut multiple = false;
+        for (i, e) in self.entries.iter().enumerate() {
+            if e.weight > 0.0 && e.mutator.applies(inst) {
+                if first.is_none() {
+                    first = Some(i);
+                } else {
+                    multiple = true;
+                    break;
+                }
+            }
+        }
+        let pick = match first {
+            None => return None,
+            Some(i) if !multiple => i,
+            Some(_) => {
+                // Rare path (several mutators claim one decision kind):
+                // collect for the weighted draw.
+                let applicable: Vec<usize> = self
+                    .entries
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, e)| e.weight > 0.0 && e.mutator.applies(inst))
+                    .map(|(i, _)| i)
+                    .collect();
+                let weights: Vec<f64> = applicable.iter().map(|&i| self.entries[i].weight).collect();
+                applicable[rng.sample_weighted(&weights)]
+            }
+        };
+        let e = &self.entries[pick];
+        e.proposed.fetch_add(1, Ordering::Relaxed);
+        e.mutator.propose(trace, idx, prog, rng)
+    }
+
+    /// Mutate one sampling decision of `trace` and validate by replay
+    /// plus the caller's `validate` hook (the context's postprocessors).
+    /// Returns the new schedule (with its updated trace), or `None` if no
+    /// proposal was possible or validation rejected every attempt.
+    pub fn mutate_with<F>(
+        &self,
+        trace: &Trace,
+        prog: &Program,
+        rng: &mut Rng,
+        seed: u64,
+        validate: F,
+    ) -> Option<Schedule>
+    where
+        F: Fn(&Schedule) -> bool,
+    {
+        let sampling = trace.sampling_indices();
+        if sampling.is_empty() {
+            return None;
+        }
+        // Try a few instruction picks before giving up.
+        for _ in 0..4 {
+            let idx = *rng.choose(&sampling);
+            let Some(decision) = self.propose_for(trace, idx, prog, rng) else {
+                continue;
+            };
+            let mut overrides = HashMap::new();
+            overrides.insert(idx, decision);
+            // Validation: replay with the override; off-support decisions fail.
+            if let Ok(sch) = replay_with_decisions(trace, prog, seed, &overrides) {
+                if validate(&sch) {
+                    return Some(sch);
+                }
+            }
+        }
+        None
+    }
+}
+
+impl Default for MutatorSet {
+    fn default() -> Self {
+        MutatorSet::builtin_default()
+    }
+}
+
+/// Convenience free function with the pre-registry signature: the default
+/// mutator set plus program-integrity validation. Benches and property
+/// tests use this; the search itself goes through
+/// [`crate::ctx::TuneContext::mutate`] so custom mutators and
+/// postprocessors take effect. The set is built once (`OnceLock`) so
+/// per-call cost matches the old free function — this IS the mutation
+/// row of `benches/hot_path.rs`, which must not measure set
+/// construction. (The shared set's proposal counters aggregate across
+/// all callers; they are diagnostics and nothing reads them here.)
+pub fn mutate(trace: &Trace, prog: &Program, rng: &mut Rng, seed: u64) -> Option<Schedule> {
+    static DEFAULT_SET: std::sync::OnceLock<MutatorSet> = std::sync::OnceLock::new();
+    DEFAULT_SET
+        .get_or_init(MutatorSet::builtin_default)
+        .mutate_with(trace, prog, rng, seed, |sch| sch.prog.check_integrity().is_ok())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ctx::TuneContext;
+    use crate::schedule::Schedule;
+    use crate::sim::Target;
+    use crate::tir::structural_hash;
+    use crate::trace::FactorArg;
+    use crate::workloads;
+
+    fn tiled_matmul(seed: u64) -> (Program, Schedule) {
+        let prog = workloads::matmul(1, 64, 64, 64);
+        let mut s = Schedule::new(prog.clone(), seed);
+        let b = s.get_block("matmul").unwrap();
+        let loops = s.get_loops(b).unwrap();
+        let t = s.sample_perfect_tile(loops[1], 2, 0).unwrap();
+        s.split(loops[1], &[FactorArg::Rv(t[0].0), FactorArg::Rv(t[1].0)])
+            .unwrap();
+        (prog, s)
+    }
+
+    #[test]
+    fn tile_transfer_preserves_product() {
+        let (prog, s) = tiled_matmul(5);
+        let mut rng = Rng::seed_from_u64(1);
+        let idx = s.trace.sampling_indices()[0];
+        let old = match &s.trace.insts[idx] {
+            Inst::SamplePerfectTile { decision, .. } => decision.clone(),
+            _ => panic!(),
+        };
+        let m = TileTransfer;
+        assert!(m.applies(&s.trace.insts[idx]));
+        for _ in 0..10 {
+            if let Some(Decision::Tile(new)) = m.propose(&s.trace, idx, &prog, &mut rng) {
+                assert_eq!(new.iter().product::<i64>(), old.iter().product::<i64>());
+                assert_ne!(new, old);
+            }
+        }
+    }
+
+    #[test]
+    fn mutate_produces_structurally_different_valid_schedule() {
+        let (prog, s) = tiled_matmul(5);
+        let mut rng = Rng::seed_from_u64(2);
+        let mut seen_diff = false;
+        for i in 0..10 {
+            if let Some(m) = mutate(&s.trace, &prog, &mut rng, i) {
+                m.prog.check_integrity().unwrap();
+                if structural_hash(&m.prog) != structural_hash(&s.prog) {
+                    seen_diff = true;
+                }
+            }
+        }
+        assert!(seen_diff);
+    }
+
+    #[test]
+    fn mutate_composed_space_traces() {
+        // Mutations over realistic traces from the space generator.
+        let prog = workloads::fused_dense(64, 128, 64);
+        let ctx = TuneContext::generic(Target::cpu_avx512());
+        let states = ctx.generate(&prog, 11);
+        let mut rng = Rng::seed_from_u64(3);
+        let mut successes = 0;
+        for s in &states {
+            for i in 0..8 {
+                if let Some(m) = ctx.mutate(&s.trace, &prog, &mut rng, i) {
+                    m.prog.check_integrity().unwrap();
+                    successes += 1;
+                }
+            }
+        }
+        assert!(successes > 0, "no successful mutations");
+    }
+
+    #[test]
+    fn empty_trace_cannot_mutate() {
+        let prog = workloads::matmul(1, 16, 16, 16);
+        let t = Trace::default();
+        let mut rng = Rng::seed_from_u64(0);
+        assert!(mutate(&t, &prog, &mut rng, 0).is_none());
+    }
+
+    #[test]
+    fn default_set_matches_free_function_rng_for_rng() {
+        // The trait-ified default set must draw the identical RNG
+        // sequence as the convenience free function (itself the old
+        // behaviour): same seed, same proposals, same schedules.
+        let prog = workloads::fused_dense(64, 128, 64);
+        let ctx = TuneContext::generic(Target::cpu_avx512());
+        let states = ctx.generate(&prog, 4);
+        let set = MutatorSet::builtin_default();
+        for s in &states {
+            let mut rng_a = Rng::seed_from_u64(9);
+            let mut rng_b = Rng::seed_from_u64(9);
+            for i in 0..6 {
+                let a = mutate(&s.trace, &prog, &mut rng_a, i);
+                let b = set.mutate_with(&s.trace, &prog, &mut rng_b, i, |sch| {
+                    sch.prog.check_integrity().is_ok()
+                });
+                match (a, b) {
+                    (None, None) => {}
+                    (Some(x), Some(y)) => {
+                        assert_eq!(structural_hash(&x.prog), structural_hash(&y.prog));
+                    }
+                    (x, y) => panic!("diverged: {:?} vs {:?}", x.is_some(), y.is_some()),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn zero_weight_disables_a_mutator() {
+        let (prog, s) = tiled_matmul(7);
+        let mut set = MutatorSet::new();
+        set.push(Box::new(TileTransfer), 0.0);
+        let mut rng = Rng::seed_from_u64(3);
+        for i in 0..8 {
+            assert!(set
+                .mutate_with(&s.trace, &prog, &mut rng, i, |_| true)
+                .is_none());
+        }
+        assert_eq!(set.stats()[0].2, 0, "disabled mutator must never propose");
+    }
+
+    #[test]
+    fn labels_and_stats_render() {
+        let mut set = MutatorSet::builtin_default();
+        set.push(Box::new(TileTransfer), 2.5);
+        assert_eq!(
+            set.label(),
+            "tile-transfer,categorical-redraw,compute-location-move,tile-transfer:2.5"
+        );
+        assert_eq!(set.stats().len(), 4);
+    }
+}

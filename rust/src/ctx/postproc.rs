@@ -1,0 +1,97 @@
+//! Postprocessors: named, ordered validity checks a candidate schedule
+//! must pass after mutation, before it may enter the population.
+//!
+//! Before the registry redesign these were implicit fixups buried in the
+//! search loop (a bare `check_integrity` call after replay). Naming them
+//! makes the pipeline extensible — a custom backend can demand its own
+//! invariants — and inspectable: `tune --explain-space` reports per-
+//! postproc pass/reject counts.
+//!
+//! The default set is exactly `verify-integrity`, which reproduces the
+//! pre-redesign search behaviour bit-for-bit. `sim-validity` is available
+//! by name for callers that prefer rejecting target-invalid candidates
+//! before spending a measurement on them (a *policy change*: the default
+//! search measures them and records the failure for cross-session dedup).
+
+use crate::schedule::Schedule;
+use crate::sim::Target;
+
+/// A named schedule check. `Ok(())` = the candidate passes; `Err` carries
+/// a human-readable reason for the diagnostics. Checks must be pure —
+/// they run on every mutation proposal inside the deterministic search.
+pub trait Postproc: Send + Sync {
+    fn name(&self) -> &str;
+    /// One-line human description for `--explain-space`.
+    fn describe(&self) -> String {
+        String::new()
+    }
+    fn check(&self, sch: &Schedule, target: &Target) -> Result<(), String>;
+}
+
+/// Structural program integrity (the former implicit `check_integrity`
+/// call in the mutation-validation path).
+pub struct VerifyIntegrity;
+
+impl Postproc for VerifyIntegrity {
+    fn name(&self) -> &str {
+        "verify-integrity"
+    }
+
+    fn describe(&self) -> String {
+        "reject candidates whose program fails the structural integrity check".into()
+    }
+
+    fn check(&self, sch: &Schedule, _target: &Target) -> Result<(), String> {
+        sch.prog.check_integrity().map_err(|e| format!("{e}"))
+    }
+}
+
+/// Reject candidates the hardware simulator deems invalid on the target
+/// (scratchpad overflow, thread limits). NOT in the default set: the
+/// default search measures such candidates and records the failure so
+/// warm starts skip them — filtering here trades that dedup record for a
+/// cheaper round.
+pub struct SimValidity;
+
+impl Postproc for SimValidity {
+    fn name(&self) -> &str {
+        "sim-validity"
+    }
+
+    fn describe(&self) -> String {
+        "reject candidates invalid on the simulated target before measuring them".into()
+    }
+
+    fn check(&self, sch: &Schedule, target: &Target) -> Result<(), String> {
+        crate::sim::simulate(&sch.prog, target).map(|_| ()).map_err(|e| format!("{e}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads;
+
+    #[test]
+    fn verify_integrity_passes_valid_schedules() {
+        let prog = workloads::matmul(1, 32, 32, 32);
+        let sch = Schedule::new(prog, 0);
+        assert!(VerifyIntegrity.check(&sch, &Target::cpu_avx512()).is_ok());
+        assert_eq!(VerifyIntegrity.name(), "verify-integrity");
+    }
+
+    #[test]
+    fn sim_validity_rejects_overbound_gpu_kernels() {
+        // 4096 threads on one loop -> invalid on the GPU model.
+        let mut s = Schedule::new(workloads::matmul(1, 4096, 16, 16), 0);
+        let b = s.get_block("matmul").unwrap();
+        let loops = s.get_loops(b).unwrap();
+        s.bind(loops[1], "threadIdx.x").unwrap();
+        assert!(SimValidity.check(&s, &Target::gpu()).is_err());
+        // But integrity still holds — the two checks are independent.
+        assert!(VerifyIntegrity.check(&s, &Target::gpu()).is_ok());
+        // And the same schedule is fine on a valid-size workload.
+        let ok = Schedule::new(workloads::matmul(1, 32, 32, 32), 0);
+        assert!(SimValidity.check(&ok, &Target::gpu()).is_ok());
+    }
+}

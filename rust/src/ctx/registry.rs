@@ -1,0 +1,352 @@
+//! Named component registries and per-target defaults-as-data.
+//!
+//! This is the inversion at the heart of the `TuneContext` redesign: the
+//! search-space composition is no longer a `match target.kind` baked into
+//! the space module — it is a *name list* resolved against a registry of
+//! factories. The per-target default lists below are plain data; a custom
+//! rule/mutator/postproc registers under a name through
+//! [`RegistrySet`] and is then addressable from `--rules`/`--mutators`/
+//! `--postprocs` specs exactly like the built-ins.
+//!
+//! Spec grammar (comma-separated, whitespace-tolerant):
+//! - rules:     `default`, `default-tc`, or names (`auto-inline,mlt-cpu,…`);
+//!   `default` tokens splice the target's default list in place.
+//! - mutators:  `default` or `name[:weight]` items (`tile-transfer:2`).
+//! - postprocs: `default` or names (`verify-integrity,sim-validity`).
+
+use std::sync::Arc;
+
+use crate::ctx::mutators::{CategoricalRedraw, ComputeLocationMove, Mutator, MutatorSet, TileTransfer};
+use crate::ctx::postproc::{Postproc, SimValidity, VerifyIntegrity};
+use crate::sim::{Target, TargetKind};
+use crate::space::{
+    AddRfactor, AutoInline, CrossThreadReduction, MultiLevelTiling, ParallelVectorizeUnroll,
+    RandomComputeLocation, ScheduleRule, ThreadBind, UseTensorCore,
+};
+
+/// Per-target default rule lists — the Figure 5 generic composition,
+/// expressed as data instead of `match` arms. `multi-level-tiling`
+/// resolves to the CPU or GPU tiling structure via its factory.
+pub const DEFAULT_RULES_CPU: &[&str] = &[
+    "auto-inline",
+    "multi-level-tiling",
+    "add-rfactor",
+    "random-compute-location",
+    "parallel-vectorize-unroll",
+];
+
+/// GPU counterpart of [`DEFAULT_RULES_CPU`].
+pub const DEFAULT_RULES_GPU: &[&str] = &[
+    "auto-inline",
+    "multi-level-tiling",
+    "cross-thread-reduction",
+    "random-compute-location",
+    "thread-bind",
+];
+
+/// Default mutator names (one per decision kind, weight 1).
+pub const DEFAULT_MUTATORS: &[&str] =
+    &["tile-transfer", "categorical-redraw", "compute-location-move"];
+
+/// Default postprocessor names (the pre-redesign implicit pipeline).
+pub const DEFAULT_POSTPROCS: &[&str] = &["verify-integrity"];
+
+/// The default rule names for a target kind.
+pub fn default_rule_names(kind: TargetKind) -> &'static [&'static str] {
+    match kind {
+        TargetKind::Cpu => DEFAULT_RULES_CPU,
+        TargetKind::Gpu => DEFAULT_RULES_GPU,
+    }
+}
+
+/// A name -> factory table for one component family. `T` is the
+/// object-safe trait (`dyn ScheduleRule`, `dyn Mutator`, `dyn Postproc`);
+/// factories take the target so one name can resolve target-adaptively
+/// (e.g. `multi-level-tiling`). Registration is last-wins, so a custom
+/// build can shadow a built-in under the same name.
+pub struct Registry<T: ?Sized> {
+    entries: Vec<(String, Arc<dyn Fn(&Target) -> Box<T> + Send + Sync>)>,
+}
+
+impl<T: ?Sized> Registry<T> {
+    pub fn new() -> Registry<T> {
+        Registry { entries: Vec::new() }
+    }
+
+    /// Register (or shadow) a factory under `name`.
+    pub fn register<F>(&mut self, name: &str, factory: F)
+    where
+        F: Fn(&Target) -> Box<T> + Send + Sync + 'static,
+    {
+        if let Some(entry) = self.entries.iter_mut().find(|(n, _)| n == name) {
+            entry.1 = Arc::new(factory);
+        } else {
+            self.entries.push((name.to_string(), Arc::new(factory)));
+        }
+    }
+
+    /// Instantiate the component registered under `name` for `target`.
+    pub fn make(&self, name: &str, target: &Target) -> Option<Box<T>> {
+        self.entries.iter().find(|(n, _)| n == name).map(|(_, f)| f(target))
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.entries.iter().any(|(n, _)| n == name)
+    }
+
+    /// Registered names, in registration order.
+    pub fn names(&self) -> Vec<&str> {
+        self.entries.iter().map(|(n, _)| n.as_str()).collect()
+    }
+}
+
+impl<T: ?Sized> Default for Registry<T> {
+    fn default() -> Self {
+        Registry::new()
+    }
+}
+
+/// The three component registries a [`crate::ctx::TuneContext`] resolves
+/// specs against. [`RegistrySet::builtin`] carries every in-tree
+/// component; extend it with `set.rules.register(...)` (and friends) to
+/// make custom components addressable by name.
+pub struct RegistrySet {
+    pub rules: Registry<dyn ScheduleRule>,
+    pub mutators: Registry<dyn Mutator>,
+    pub postprocs: Registry<dyn Postproc>,
+}
+
+impl RegistrySet {
+    /// All built-in rules, mutators, and postprocessors.
+    pub fn builtin() -> RegistrySet {
+        let mut rules: Registry<dyn ScheduleRule> = Registry::new();
+        rules.register("auto-inline", |_| Box::new(AutoInline::new()) as Box<dyn ScheduleRule>);
+        rules.register("multi-level-tiling", |t: &Target| -> Box<dyn ScheduleRule> {
+            match t.kind {
+                TargetKind::Cpu => Box::new(MultiLevelTiling::cpu()),
+                TargetKind::Gpu => Box::new(MultiLevelTiling::gpu()),
+            }
+        });
+        rules.register("mlt-cpu", |_| Box::new(MultiLevelTiling::cpu()) as Box<dyn ScheduleRule>);
+        rules.register("mlt-gpu", |_| Box::new(MultiLevelTiling::gpu()) as Box<dyn ScheduleRule>);
+        rules.register("add-rfactor", |_| Box::new(AddRfactor::new()) as Box<dyn ScheduleRule>);
+        rules.register("cross-thread-reduction", |_| Box::new(CrossThreadReduction::new()) as Box<dyn ScheduleRule>);
+        rules.register("random-compute-location", |_| Box::new(RandomComputeLocation::new()) as Box<dyn ScheduleRule>);
+        rules.register("parallel-vectorize-unroll", |_| Box::new(ParallelVectorizeUnroll::new()) as Box<dyn ScheduleRule>);
+        rules.register("thread-bind", |_| Box::new(ThreadBind::new()) as Box<dyn ScheduleRule>);
+        rules.register("use-tensor-core", |_| Box::new(UseTensorCore::wmma()) as Box<dyn ScheduleRule>);
+        rules.register("use-tensor-core-mxu", |_| Box::new(UseTensorCore::mxu()) as Box<dyn ScheduleRule>);
+
+        let mut mutators: Registry<dyn Mutator> = Registry::new();
+        mutators.register("tile-transfer", |_| Box::new(TileTransfer) as Box<dyn Mutator>);
+        mutators.register("categorical-redraw", |_| Box::new(CategoricalRedraw) as Box<dyn Mutator>);
+        mutators.register("compute-location-move", |_| Box::new(ComputeLocationMove) as Box<dyn Mutator>);
+
+        let mut postprocs: Registry<dyn Postproc> = Registry::new();
+        postprocs.register("verify-integrity", |_| Box::new(VerifyIntegrity) as Box<dyn Postproc>);
+        postprocs.register("sim-validity", |_| Box::new(SimValidity) as Box<dyn Postproc>);
+
+        RegistrySet { rules, mutators, postprocs }
+    }
+}
+
+/// Split a comma-separated spec into trimmed, non-empty tokens.
+fn tokens(spec: &str) -> Vec<&str> {
+    spec.split(',').map(str::trim).filter(|t| !t.is_empty()).collect()
+}
+
+/// Expand a rule spec to concrete registry names: `default` splices the
+/// target's default list, `default-tc` the same with `use-tensor-core`
+/// inserted after `auto-inline` (the Figure 10 composition).
+pub fn expand_rule_spec(spec: &str, target: &Target) -> Vec<String> {
+    let mut out = Vec::new();
+    for tok in tokens(spec) {
+        match tok {
+            "default" => {
+                out.extend(default_rule_names(target.kind).iter().map(|s| s.to_string()));
+            }
+            "default-tc" => {
+                for (i, name) in default_rule_names(target.kind).iter().enumerate() {
+                    out.push(name.to_string());
+                    if i == 0 {
+                        out.push("use-tensor-core".to_string());
+                    }
+                }
+            }
+            other => out.push(other.to_string()),
+        }
+    }
+    out
+}
+
+/// Resolve a rule spec to instances. Unknown names error with the list of
+/// registered names (a CLI typo must not silently shrink the space).
+pub fn parse_rules(reg: &RegistrySet, spec: &str, target: &Target) -> Result<Vec<Box<dyn ScheduleRule>>, String> {
+    let names = expand_rule_spec(spec, target);
+    if names.is_empty() {
+        return Err("empty rule spec".to_string());
+    }
+    // Duplicates are almost always a spec mistake ("auto-inline,default"
+    // meant as a reorder): each rule already applies to every block once
+    // per pass, so applying it twice compounds silently. Fail fast, like
+    // unknown names.
+    for (i, n) in names.iter().enumerate() {
+        if names[..i].contains(n) {
+            return Err(format!("rule {n:?} appears twice in spec {spec:?} (after default expansion)"));
+        }
+    }
+    names
+        .iter()
+        .map(|n| {
+            reg.rules.make(n, target).ok_or_else(|| {
+                format!("unknown rule {n:?}; registered: {}", reg.rules.names().join(", "))
+            })
+        })
+        .collect()
+}
+
+/// Resolve a mutator spec (`default` or `name[:weight]` items) to a
+/// weighted [`MutatorSet`].
+pub fn parse_mutators(reg: &RegistrySet, spec: &str, target: &Target) -> Result<MutatorSet, String> {
+    let mut set = MutatorSet::new();
+    for tok in tokens(spec) {
+        if tok == "default" {
+            for name in DEFAULT_MUTATORS {
+                let m = reg
+                    .mutators
+                    .make(name, target)
+                    .ok_or_else(|| format!("builtin mutator {name:?} missing from registry"))?;
+                set.push(m, 1.0);
+            }
+            continue;
+        }
+        let (name, weight) = match tok.split_once(':') {
+            Some((n, w)) => {
+                let w: f64 = w
+                    .trim()
+                    .parse()
+                    .map_err(|_| format!("mutator weight {w:?} in {tok:?} is not a number"))?;
+                if !(w.is_finite() && w >= 0.0) {
+                    return Err(format!("mutator weight in {tok:?} must be finite and >= 0"));
+                }
+                (n.trim(), w)
+            }
+            None => (tok, 1.0),
+        };
+        let m = reg.mutators.make(name, target).ok_or_else(|| {
+            format!("unknown mutator {name:?}; registered: {}", reg.mutators.names().join(", "))
+        })?;
+        set.push(m, weight);
+    }
+    if set.is_empty() {
+        return Err("empty mutator spec".to_string());
+    }
+    if set.stats().iter().all(|(_, w, _)| *w <= 0.0) {
+        // Weight 0 disables a mutator; all-zero would silently disable
+        // mutation entirely — the same "typo must not silently shrink
+        // the search" failure parse_rules guards against.
+        return Err("mutator spec disables every mutator (all weights are 0)".to_string());
+    }
+    Ok(set)
+}
+
+/// Resolve a postproc spec to an ordered pipeline.
+pub fn parse_postprocs(reg: &RegistrySet, spec: &str, target: &Target) -> Result<Vec<Box<dyn Postproc>>, String> {
+    let mut out: Vec<Box<dyn Postproc>> = Vec::new();
+    for tok in tokens(spec) {
+        if tok == "default" {
+            for name in DEFAULT_POSTPROCS {
+                let p = reg
+                    .postprocs
+                    .make(name, target)
+                    .ok_or_else(|| format!("builtin postproc {name:?} missing from registry"))?;
+                out.push(p);
+            }
+            continue;
+        }
+        let p = reg.postprocs.make(tok, target).ok_or_else(|| {
+            format!("unknown postproc {tok:?}; registered: {}", reg.postprocs.names().join(", "))
+        })?;
+        out.push(p);
+    }
+    if out.is_empty() {
+        return Err("empty postproc spec".to_string());
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_registry_makes_every_default_rule() {
+        let reg = RegistrySet::builtin();
+        for target in [Target::cpu_avx512(), Target::gpu()] {
+            for name in default_rule_names(target.kind) {
+                let r = reg.rules.make(name, &target).unwrap_or_else(|| panic!("missing {name}"));
+                assert!(!r.name().is_empty());
+            }
+        }
+    }
+
+    #[test]
+    fn default_spec_expands_per_target() {
+        let cpu = expand_rule_spec("default", &Target::cpu_avx512());
+        assert_eq!(cpu, DEFAULT_RULES_CPU.iter().map(|s| s.to_string()).collect::<Vec<_>>());
+        let gpu = expand_rule_spec("default", &Target::gpu());
+        assert!(gpu.contains(&"thread-bind".to_string()));
+        // default-tc splices use-tensor-core right after auto-inline.
+        let tc = expand_rule_spec("default-tc", &Target::gpu());
+        assert_eq!(tc[0], "auto-inline");
+        assert_eq!(tc[1], "use-tensor-core");
+        assert_eq!(tc.len(), gpu.len() + 1);
+        // Mixed specs splice defaults in place.
+        let mixed = expand_rule_spec(" thread-bind , default ", &Target::cpu_avx512());
+        assert_eq!(mixed[0], "thread-bind");
+        assert_eq!(mixed.len(), DEFAULT_RULES_CPU.len() + 1);
+    }
+
+    #[test]
+    fn unknown_names_error_with_suggestions() {
+        let reg = RegistrySet::builtin();
+        let t = Target::cpu_avx512();
+        let err = parse_rules(&reg, "auto-inline,frobnicate", &t).unwrap_err();
+        assert!(err.contains("frobnicate") && err.contains("auto-inline"), "{err}");
+        assert!(parse_mutators(&reg, "nope", &t).is_err());
+        assert!(parse_postprocs(&reg, "nope", &t).is_err());
+        assert!(parse_rules(&reg, "", &t).is_err());
+        // Duplicates (directly or via default expansion) fail fast too.
+        assert!(parse_rules(&reg, "auto-inline,default", &t).is_err());
+        assert!(parse_rules(&reg, "default,default", &t).is_err());
+    }
+
+    #[test]
+    fn mutator_weights_parse_and_validate() {
+        let reg = RegistrySet::builtin();
+        let t = Target::cpu_avx512();
+        let set = parse_mutators(&reg, "tile-transfer:2.5,categorical-redraw", &t).unwrap();
+        assert_eq!(set.len(), 2);
+        assert_eq!(set.stats()[0].1, 2.5);
+        assert_eq!(set.stats()[1].1, 1.0);
+        assert!(parse_mutators(&reg, "tile-transfer:abc", &t).is_err());
+        assert!(parse_mutators(&reg, "tile-transfer:-1", &t).is_err());
+        // All-zero weights would disable mutation outright: rejected.
+        assert!(parse_mutators(&reg, "tile-transfer:0,categorical-redraw:0", &t).is_err());
+        // A zero weight among live ones stays legal (selective disable).
+        assert!(parse_mutators(&reg, "tile-transfer:0,categorical-redraw", &t).is_ok());
+    }
+
+    #[test]
+    fn registration_is_last_wins() {
+        let mut reg = RegistrySet::builtin();
+        reg.rules.register("auto-inline", |_| {
+            Box::new(AutoInline { into_producer: false }) as Box<dyn ScheduleRule>
+        });
+        let t = Target::cpu_avx512();
+        let r = reg.rules.make("auto-inline", &t).unwrap();
+        assert_eq!(r.params(), vec![("into-producer".to_string(), "false".to_string())]);
+        // Name count unchanged (shadowed, not duplicated).
+        assert_eq!(reg.rules.names().iter().filter(|&&n| n == "auto-inline").count(), 1);
+    }
+}

@@ -150,6 +150,8 @@ mod tests {
             seed: 0,
             round: cand,
             cand_hash: cand,
+            sim_version: "simtest".into(),
+            rule_set: String::new(),
         }
     }
 

@@ -163,6 +163,33 @@ pub(crate) fn read_index(path: &Path) -> Result<LoadedIndex, String> {
     Ok(out)
 }
 
+/// A cheap change signature for a database file: `(length, mtime)`.
+/// The JSONL write path is append-only (and compaction rewrites change
+/// both fields in practice), so an unchanged signature means "nothing
+/// new to index" for a cross-process watcher — the probe costs one
+/// `stat`, no open, no parse.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FileSignature {
+    pub len: u64,
+    /// Modification time as nanoseconds since the epoch (0 when the
+    /// platform reports a pre-epoch or unavailable mtime — `len` still
+    /// catches every append).
+    pub mtime_nanos: u128,
+}
+
+/// Probe the change signature of `path`; `None` when the file is absent
+/// or unreadable.
+pub fn probe(path: impl AsRef<Path>) -> Option<FileSignature> {
+    let md = std::fs::metadata(path.as_ref()).ok()?;
+    let mtime_nanos = md
+        .modified()
+        .ok()
+        .and_then(|t| t.duration_since(std::time::UNIX_EPOCH).ok())
+        .map(|d| d.as_nanos())
+        .unwrap_or(0);
+    Some(FileSignature { len: md.len(), mtime_nanos })
+}
+
 /// File-backed tuning database (`--db path.jsonl`).
 pub struct JsonFileDb {
     path: PathBuf,
@@ -175,6 +202,12 @@ pub struct JsonFileDb {
     /// must start on a fresh line or it would corrupt itself too.
     needs_newline: bool,
     auto_gc: Option<AutoGc>,
+    /// Monotonic count of lines appended through this handle (workload
+    /// registrations + record commits). A serving process holding the
+    /// same handle can compare this against the value captured at its
+    /// last snapshot build to refresh on change instead of on a timer;
+    /// cross-process watchers use [`probe`] instead.
+    commit_counter: u64,
 }
 
 impl JsonFileDb {
@@ -204,7 +237,14 @@ impl JsonFileDb {
             skip_notes: loaded.notes,
             needs_newline: !loaded.ends_with_newline,
             auto_gc: None,
+            commit_counter: 0,
         })
+    }
+
+    /// Lines appended through this handle since open (registrations +
+    /// commits). Monotonic; never reset, not even by compaction.
+    pub fn commit_counter(&self) -> u64 {
+        self.commit_counter
     }
 
     pub fn path(&self) -> &Path {
@@ -309,6 +349,7 @@ impl JsonFileDb {
         };
         res.and_then(|()| self.file.flush())
             .unwrap_or_else(|e| panic!("tuning db append to {} failed: {e}", self.path.display()));
+        self.commit_counter += 1;
     }
 }
 
@@ -442,6 +483,8 @@ mod tests {
             seed: 7,
             round: 1,
             cand_hash: cand,
+            sim_version: "simtest".into(),
+            rule_set: String::new(),
         }
     }
 
@@ -571,6 +614,35 @@ mod tests {
         assert_eq!(db.num_records(), 2);
         assert_eq!(db.skipped_lines(), 1, "partial tail lingers until compaction");
         assert_eq!(db.best_latency(0), Some(0.5));
+    }
+
+    #[test]
+    fn commit_counter_counts_appends_and_survives_compaction() {
+        let (path, _g) = tmp("counter");
+        let mut db = JsonFileDb::open(&path).unwrap();
+        assert_eq!(db.commit_counter(), 0);
+        let a = db.register_workload("A", 1, "cpu");
+        db.commit_record(rec(a, 1, Some(2.0)));
+        db.commit_record(rec(a, 2, Some(1.0)));
+        assert_eq!(db.commit_counter(), 3, "registration + 2 commits");
+        db.compact(&CompactionPolicy { top_k: 1 }).unwrap();
+        db.commit_record(rec(a, 3, Some(0.5)));
+        assert_eq!(db.commit_counter(), 4, "monotonic across compaction");
+    }
+
+    #[test]
+    fn probe_signature_changes_on_append_only() {
+        let (path, _g) = tmp("probe");
+        assert_eq!(probe(&path), None, "missing file probes as None");
+        let mut db = JsonFileDb::open(&path).unwrap();
+        let a = db.register_workload("A", 1, "cpu");
+        let s1 = probe(&path).expect("file exists");
+        let again = probe(&path).unwrap();
+        assert_eq!(s1, again, "no write, no change");
+        db.commit_record(rec(a, 1, Some(2.0)));
+        let s2 = probe(&path).unwrap();
+        assert_ne!(s1, s2, "append must change the signature");
+        assert!(s2.len > s1.len);
     }
 
     #[test]

@@ -122,6 +122,8 @@ mod tests {
             seed: 0,
             round: 0,
             cand_hash: cand,
+            sim_version: "simtest".into(),
+            rule_set: String::new(),
         }
     }
 

@@ -38,7 +38,7 @@ pub mod shared;
 pub mod stats;
 
 pub use compact::{compact_file, CompactionPolicy, CompactionReport};
-pub use json_file::{AutoGc, JsonFileDb};
+pub use json_file::{probe, AutoGc, FileSignature, JsonFileDb};
 pub use memory::InMemoryDb;
 pub use record::TuningRecord;
 pub use shared::SharedDb;
@@ -199,7 +199,7 @@ mod tests {
     use crate::cost_model::GbtCostModel;
     use crate::search::{Measurer, SimMeasurer};
     use crate::sim::Target;
-    use crate::space::SpaceComposer;
+    use crate::ctx::TuneContext;
     use crate::tir::structural_hash;
     use crate::workloads;
 
@@ -225,8 +225,8 @@ mod tests {
     fn seeded_db(prog: &crate::tir::Program, target: &Target, n: usize) -> (InMemoryDb, WorkloadId) {
         let mut db = InMemoryDb::new();
         let wid = db.register_workload(&prog.name, structural_hash(prog), target.name);
-        let composer = SpaceComposer::generic(target.clone());
-        let designs = composer.generate(prog, 1);
+        let ctx = TuneContext::generic(target.clone());
+        let designs = ctx.generate(prog, 1);
         let mut measurer = SimMeasurer::new(target.clone());
         let mut committed = 0;
         for (i, d) in designs.iter().cycle().take(n * 20).enumerate() {
@@ -245,6 +245,8 @@ mod tests {
                 seed: 1,
                 round: i as u64,
                 cand_hash: structural_hash(&sch.prog),
+                sim_version: crate::sim::SIM_VERSION.to_string(),
+                rule_set: String::new(),
             });
             committed += 1;
         }
@@ -290,6 +292,8 @@ mod tests {
             seed: 0,
             round,
             cand_hash: round,
+            sim_version: "simtest".into(),
+            rule_set: String::new(),
         };
         db.commit_record(mk(vec![3.0], 0));
         db.commit_record(mk(vec![], 1)); // failed

@@ -34,6 +34,16 @@ pub struct TuningRecord {
     /// Structural hash of the scheduled candidate program — the
     /// cross-session deduplication key.
     pub cand_hash: u64,
+    /// Simulator/toolchain version the latencies were measured under
+    /// ([`crate::sim::SIM_VERSION`] at commit time). Records written
+    /// before provenance stamping parse back as `"v0"`, so a stats pass
+    /// (or a future invalidation policy) can tell stale generations
+    /// apart from current ones.
+    pub sim_version: String,
+    /// Canonical rule-set label of the space the candidate was drawn
+    /// from ([`crate::ctx::TuneContext::rule_set`]). Empty for
+    /// pre-provenance records.
+    pub rule_set: String,
 }
 
 impl TuningRecord {
@@ -63,6 +73,8 @@ impl TuningRecord {
             ("seed", Json::str(self.seed.to_string())),
             ("round", Json::num(self.round as f64)),
             ("cand", Json::str(format!("{:016x}", self.cand_hash))),
+            ("sim", Json::str(self.sim_version.clone())),
+            ("rules", Json::str(self.rule_set.clone())),
         ])
     }
 
@@ -90,6 +102,18 @@ impl TuningRecord {
         let round = usize_field(j, "round")? as u64;
         let cand_hash =
             u64::from_str_radix(str_field(j, "cand")?, 16).map_err(|e| format!("cand: {e}"))?;
+        // Provenance stamps are backward-compatible: absent fields mean
+        // the record predates stamping ("v0" simulator, unknown rules).
+        let sim_version = j
+            .get("sim")
+            .and_then(Json::as_str)
+            .unwrap_or("v0")
+            .to_string();
+        let rule_set = j
+            .get("rules")
+            .and_then(Json::as_str)
+            .unwrap_or("")
+            .to_string();
         Ok(TuningRecord {
             workload,
             trace,
@@ -98,6 +122,8 @@ impl TuningRecord {
             seed,
             round,
             cand_hash,
+            sim_version,
+            rule_set,
         })
     }
 }
@@ -143,6 +169,8 @@ mod tests {
             seed: u64::MAX - 7,
             round: 12,
             cand_hash: 0xdead_beef_cafe_f00d,
+            sim_version: crate::sim::SIM_VERSION.to_string(),
+            rule_set: "auto-inline,multi-level-tiling".to_string(),
         }
     }
 
@@ -184,6 +212,23 @@ mod tests {
         let hostile = line.replace("[1]", "[null,1]");
         let back2 = TuningRecord::from_json(&Json::parse(&hostile).unwrap()).unwrap();
         assert_eq!(back2.latencies, vec![1.0]);
+    }
+
+    #[test]
+    fn pre_provenance_lines_parse_with_v0_defaults() {
+        // A line written before the provenance stamps (no "sim"/"rules"
+        // fields) must still parse — absent = v0 / unknown rules.
+        let mut j = sample_record().to_json();
+        if let Json::Obj(m) = &mut j {
+            m.remove("sim");
+            m.remove("rules");
+        }
+        let back = TuningRecord::from_json(&j).unwrap();
+        assert_eq!(back.sim_version, "v0");
+        assert_eq!(back.rule_set, "");
+        // And re-serializing writes the defaults explicitly.
+        let line = back.to_json().to_string();
+        assert!(line.contains("\"sim\""), "{line}");
     }
 
     #[test]

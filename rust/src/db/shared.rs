@@ -103,6 +103,8 @@ mod tests {
                             seed: 0,
                             round: i,
                             cand_hash: offset + i,
+                            sim_version: "simtest".into(),
+                            rule_set: String::new(),
                         });
                     }
                 });

@@ -20,15 +20,32 @@ pub struct DbStats {
     pub workloads: Vec<WorkloadStats>,
     pub records: usize,
     pub failed: usize,
+    /// Provenance mix: `(sim_version, rule_set) -> record count`, in
+    /// first-seen (commit) order. Pre-provenance records group under
+    /// `("v0", "")` — a non-empty mix after a simulator bump tells the
+    /// operator which records predate the current model.
+    pub versions: Vec<((String, String), usize)>,
 }
 
 impl DbStats {
     pub fn compute(db: &dyn Database) -> DbStats {
+        // One records_for() fetch per workload: the provenance tally
+        // shares the record set the per-workload stats already hold
+        // (records_for deep-clones traces, so a second pass would double
+        // the cost on large databases).
+        let mut versions: Vec<((String, String), usize)> = Vec::new();
         let workloads: Vec<WorkloadStats> = db
             .workload_entries()
             .into_iter()
             .map(|entry| {
                 let recs = db.records_for(entry.id);
+                for rec in &recs {
+                    let key = (rec.sim_version.clone(), rec.rule_set.clone());
+                    match versions.iter_mut().find(|(k, _)| *k == key) {
+                        Some((_, n)) => *n += 1,
+                        None => versions.push((key, 1)),
+                    }
+                }
                 let failed = recs.iter().filter(|r| r.is_failed()).count();
                 // Minimum over the records already in hand — a
                 // best_latency() call would re-fetch and re-sort them.
@@ -47,6 +64,7 @@ impl DbStats {
             workloads,
             records,
             failed,
+            versions,
         }
     }
 
@@ -64,6 +82,10 @@ impl DbStats {
                 "  [{}] {} on {} (shash {:016x}): {} records ({} failed), {}\n",
                 w.entry.id, w.entry.name, w.entry.target, w.entry.shash, w.records, w.failed, best
             ));
+        }
+        for ((sim, rules), n) in &self.versions {
+            let rules = if rules.is_empty() { "-" } else { rules.as_str() };
+            out.push_str(&format!("  version {sim} rules={rules}: {n} records\n"));
         }
         out
     }
@@ -88,6 +110,8 @@ mod tests {
             seed: 0,
             round: 0,
             cand_hash: 0,
+            sim_version: "simtest".into(),
+            rule_set: String::new(),
         };
         db.commit_record(mk(a, Some(2e-6)));
         db.commit_record(mk(a, None));
@@ -104,6 +128,10 @@ mod tests {
         assert!(text.contains("workloads: 2"));
         assert!(text.contains("GMM"));
         assert!(text.contains("2.00 us"));
+        // Provenance mix: the helper stamps every record identically.
+        assert_eq!(stats.versions.len(), 1);
+        assert_eq!(stats.versions[0].1, 3);
+        assert!(text.contains("version simtest rules=-: 3 records"), "{text}");
     }
 
     #[test]

@@ -1,58 +1,39 @@
 //! Figure 10: (a) search-space composition ablation on the fused-dense
-//! BERT subgraph — progressively composing more transformation modules
-//! must progressively improve the optimized program; (b) the 82-line
-//! hardware-specific Use-Tensor-Core module composed into the generic
+//! BERT subgraph — progressively composing more schedule rules must
+//! progressively improve the optimized program; (b) the 82-line
+//! hardware-specific Use-Tensor-Core rule composed into the generic
 //! space delivers a large speedup over the AutoTVM-style baseline on
 //! BERT-large (paper: 48%).
+//!
+//! Both experiments dogfood the rule-registry API: every arm is a
+//! `--rules`-style spec resolved through [`TuneContext::from_specs`], so
+//! the ablation is literally "the same CLI flag with more names in it".
 
 use crate::baselines::AutoTvm;
-use crate::exp::{tune_with_composer, ExpConfig, Report};
+use crate::ctx::TuneContext;
+use crate::exp::{tune_with_ctx, ExpConfig, Report};
 use crate::graph::{self, extract_tasks};
 use crate::search::{SearchConfig, SimMeasurer, TaskScheduler};
 use crate::sim::Target;
-use crate::space::{
-    AutoInline, CrossThreadReduction, MultiLevelTiling, RandomComputeLocation, SpaceComposer,
-    ThreadBind, TransformModule, UseTensorCore,
-};
 use crate::workloads;
 
-/// The progressive compositions of Figure 10a (GPU target).
-pub fn compositions() -> Vec<(&'static str, Vec<Box<dyn TransformModule>>)> {
+/// The progressive compositions of Figure 10a (GPU target), as rule
+/// specs for the registry.
+pub fn compositions() -> Vec<(&'static str, &'static str)> {
     vec![
-        ("thread-bind", vec![Box::new(ThreadBind::new()) as Box<dyn TransformModule>]),
-        (
-            "+auto-inline",
-            vec![Box::new(AutoInline::new()), Box::new(ThreadBind::new())],
-        ),
+        ("thread-bind", "thread-bind"),
+        ("+auto-inline", "auto-inline,thread-bind"),
         (
             "+multi-level-tiling",
-            vec![
-                Box::new(AutoInline::new()),
-                Box::new(MultiLevelTiling::gpu()),
-                Box::new(CrossThreadReduction::new()),
-                Box::new(ThreadBind::new()),
-            ],
+            "auto-inline,multi-level-tiling,cross-thread-reduction,thread-bind",
         ),
         (
             "+compute-location",
-            vec![
-                Box::new(AutoInline::new()),
-                Box::new(MultiLevelTiling::gpu()),
-                Box::new(CrossThreadReduction::new()),
-                Box::new(RandomComputeLocation::new()),
-                Box::new(ThreadBind::new()),
-            ],
+            "auto-inline,multi-level-tiling,cross-thread-reduction,random-compute-location,thread-bind",
         ),
         (
             "+use-tensor-core",
-            vec![
-                Box::new(AutoInline::new()),
-                Box::new(UseTensorCore::wmma()),
-                Box::new(MultiLevelTiling::gpu()),
-                Box::new(CrossThreadReduction::new()),
-                Box::new(RandomComputeLocation::new()),
-                Box::new(ThreadBind::new()),
-            ],
+            "auto-inline,use-tensor-core,multi-level-tiling,cross-thread-reduction,random-compute-location,thread-bind",
         ),
     ]
 }
@@ -70,14 +51,22 @@ pub fn run_10a(cfg: &ExpConfig) -> Report {
     // The ablation arms share one base program, and workload identity is
     // (program hash, target) — a shared tuning db would let each richer
     // space warm-start from the previous arm's records and void the
-    // comparison. The arms therefore always run cold.
-    let cold = ExpConfig { db_path: None, ..cfg.clone() };
+    // comparison. The arms therefore always run cold. A custom --rules
+    // spec is likewise ignored: the arms ARE the rule specs.
+    let cold = ExpConfig { db_path: None, rules: None, ..cfg.clone() };
     if cfg.db_path.is_some() {
         report.notes.push("--db ignored: ablation arms share one workload and must run cold".into());
     }
-    for (name, modules) in compositions() {
-        let composer = SpaceComposer::new(modules, target.clone());
-        let r = tune_with_composer(&prog, &target, &composer, &cold);
+    if cfg.rules.is_some() {
+        report.notes.push("--rules ignored: the ablation arms ARE the rule specs".into());
+    }
+    if cfg.mutators.is_some() || cfg.postprocs.is_some() {
+        report.notes.push("--mutators/--postprocs ignored: ablation arms use the default policy".into());
+    }
+    for (name, spec) in compositions() {
+        let ctx = TuneContext::from_specs(target.clone(), spec, "default", "default")
+            .expect("fig10a rule specs are built-in names");
+        let r = tune_with_ctx(&prog, &ctx, &cold);
         report.push(name, "MetaSchedule", r.best_latency_s);
         // Allow small search noise in the monotonicity note.
         if r.best_latency_s > prev * 1.15 {
@@ -104,6 +93,12 @@ pub fn run_10b(cfg: &ExpConfig) -> Report {
     if cfg.db_path.is_some() {
         report.notes.push("--db ignored: composition arms share workloads and must run cold".into());
     }
+    if cfg.rules.is_some() {
+        report.notes.push("--rules ignored: fig10b compares the generic and +TC rule sets".into());
+    }
+    if cfg.mutators.is_some() || cfg.postprocs.is_some() {
+        report.notes.push("--mutators/--postprocs ignored: both arms use the default policy".into());
+    }
 
     // AutoTVM-style baseline (the paper's "TVM (AutoTVM)" bar; Ansor does
     // not support TensorCore — Appendix A.4).
@@ -116,20 +111,20 @@ pub fn run_10b(cfg: &ExpConfig) -> Report {
     report.push("BERT-large", "TVM(AutoTVM)", autotvm_total);
 
     // MetaSchedule with the generic space.
-    let e2e = |composer: &SpaceComposer, seed: u64| {
+    let e2e = |ctx: &TuneContext, seed: u64| {
         let mut measurer = SimMeasurer::new(target.clone());
         let ts = TaskScheduler::new(SearchConfig {
             threads: cfg.threads,
             ..SearchConfig::default()
         });
-        let results = ts.tune_tasks(&tasks, composer, &mut measurer, cfg.trials * tasks.len(), seed);
+        let results = ts.tune_tasks(&tasks, ctx, &mut measurer, cfg.trials * tasks.len(), seed);
         TaskScheduler::e2e_latency(&tasks, &results)
     };
-    let generic = e2e(&SpaceComposer::generic(target.clone()), cfg.seed);
+    let generic = e2e(&TuneContext::generic(target.clone()), cfg.seed);
     report.push("BERT-large", "MetaSchedule", generic);
 
     // MetaSchedule + Use-Tensor-Core.
-    let tc = e2e(&SpaceComposer::with_tensor_core(target.clone()), cfg.seed);
+    let tc = e2e(&TuneContext::with_tensor_core(target.clone()), cfg.seed);
     report.push("BERT-large", "MetaSchedule+TC", tc);
 
     report.notes.push(format!(
@@ -168,5 +163,17 @@ mod tests {
             tc < autotvm / 1.2,
             "tc {tc} should be >=1.2x faster than autotvm {autotvm}"
         );
+    }
+
+    #[test]
+    fn fig10a_specs_match_the_legacy_hardcoded_arms() {
+        // The ablation arms used to be hand-built Vec<Box<dyn ...>>
+        // lists; as registry specs they must resolve to the same rule
+        // names in the same order (the +use-tensor-core arm is the old
+        // `with_tensor_core` insertion point).
+        let target = Target::gpu();
+        let (_, last_spec) = compositions().pop().unwrap();
+        let ctx = TuneContext::from_specs(target.clone(), last_spec, "default", "default").unwrap();
+        assert_eq!(ctx.rule_set(), TuneContext::with_tensor_core(target).rule_set());
     }
 }

@@ -8,9 +8,8 @@
 
 use crate::baselines::vendor_latency;
 use crate::db::Database;
-use crate::exp::{open_db, tune_tvm_best, tune_with_composer_db, ExpConfig, Report};
+use crate::exp::{open_db, tune_tvm_best, tune_with_ctx_db, ExpConfig, Report};
 use crate::sim::Target;
-use crate::space::SpaceComposer;
 use crate::tir::structural_hash;
 use crate::workloads;
 
@@ -24,7 +23,7 @@ pub fn run(target: &Target, cfg: &ExpConfig, subset: Option<&[&str]>) -> Report 
     // re-parse the JSONL file O(workloads) times), registered under the
     // Figure-8 display names so `db top --workload GMM` finds them.
     let mut db = open_db(cfg);
-    let composer = SpaceComposer::generic(target.clone());
+    let ctx = cfg.context(target);
     for w in workloads::suite() {
         if let Some(names) = subset {
             if !names.contains(&w.name) {
@@ -35,7 +34,7 @@ pub fn run(target: &Target, cfg: &ExpConfig, subset: Option<&[&str]>) -> Report 
         db.register_workload(w.name, structural_hash(&prog), target.name);
         report.push(w.name, "PyTorch", vendor_latency(&prog, target));
         report.push(w.name, "TVM", tune_tvm_best(&prog, target, cfg));
-        let ms = tune_with_composer_db(&prog, target, &composer, cfg, db.as_mut());
+        let ms = tune_with_ctx_db(&prog, &ctx, cfg, db.as_mut());
         report.push(w.name, "MetaSchedule", ms.best_latency_s);
     }
     summarize(&mut report);

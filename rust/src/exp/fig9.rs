@@ -9,7 +9,6 @@ use crate::exp::{ExpConfig, Report};
 use crate::graph::{self, extract_tasks};
 use crate::search::{SearchConfig, SimMeasurer, TaskScheduler};
 use crate::sim::Target;
-use crate::space::SpaceComposer;
 
 pub const FIG9_MODELS: [&str; 3] = ["bert-base", "resnet50", "mobilenet-v2"];
 
@@ -19,7 +18,7 @@ pub const FIG9_MODELS: [&str; 3] = ["bert-base", "resnet50", "mobilenet-v2"];
 pub fn metaschedule_e2e(model: &str, target: &Target, cfg: &ExpConfig) -> f64 {
     let ops = graph::by_name(model).expect("unknown model");
     let tasks = extract_tasks(&ops);
-    let composer = SpaceComposer::generic(target.clone());
+    let ctx = cfg.context(target);
     let mut measurer = SimMeasurer::new(target.clone());
     let mut db = crate::exp::open_db(cfg);
     let ts = TaskScheduler::new(SearchConfig {
@@ -27,7 +26,7 @@ pub fn metaschedule_e2e(model: &str, target: &Target, cfg: &ExpConfig) -> f64 {
         ..SearchConfig::default()
     });
     let total = cfg.trials * tasks.len();
-    let results = ts.tune_tasks_with_db(&tasks, &composer, &mut measurer, db.as_mut(), total, cfg.seed);
+    let results = ts.tune_tasks_with_db(&tasks, &ctx, &mut measurer, db.as_mut(), total, cfg.seed);
     TaskScheduler::e2e_latency(&tasks, &results)
 }
 

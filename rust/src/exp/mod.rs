@@ -16,10 +16,10 @@ pub mod fig9;
 pub mod table1;
 
 use crate::cost_model::GbtCostModel;
+use crate::ctx::TuneContext;
 use crate::db::{Database, InMemoryDb, JsonFileDb};
 use crate::search::{EvolutionarySearch, SearchConfig, SimMeasurer, TuneResult};
 use crate::sim::Target;
-use crate::space::SpaceComposer;
 use crate::tir::Program;
 use crate::util::json::Json;
 
@@ -38,11 +38,41 @@ pub struct ExpConfig {
     /// sessions. Baseline tuners stay cold by design — records would
     /// contaminate the comparison.
     pub db_path: Option<String>,
+    /// `--rules` spec (None = `default`); resolved per target against
+    /// the built-in registry by [`ExpConfig::context`].
+    pub rules: Option<String>,
+    /// `--mutators` spec (None = `default`).
+    pub mutators: Option<String>,
+    /// `--postprocs` spec (None = `default`).
+    pub postprocs: Option<String>,
 }
 
 impl Default for ExpConfig {
     fn default() -> Self {
-        ExpConfig { trials: 64, seed: 42, threads: 0, db_path: None }
+        ExpConfig {
+            trials: 64,
+            seed: 42,
+            threads: 0,
+            db_path: None,
+            rules: None,
+            mutators: None,
+            postprocs: None,
+        }
+    }
+}
+
+impl ExpConfig {
+    /// Build the tuning context for `target` from the configured specs
+    /// (all-default = the generic context). Panics on an invalid spec —
+    /// the CLI validates specs up front, so a panic here means a caller
+    /// bypassed validation, and silently falling back to a different
+    /// space would corrupt the experiment.
+    pub fn context(&self, target: &Target) -> TuneContext {
+        let rules = self.rules.as_deref().unwrap_or("default");
+        let mutators = self.mutators.as_deref().unwrap_or("default");
+        let postprocs = self.postprocs.as_deref().unwrap_or("default");
+        TuneContext::from_specs(target.clone(), rules, mutators, postprocs)
+            .unwrap_or_else(|e| panic!("invalid tuning-context spec: {e}"))
     }
 }
 
@@ -69,29 +99,24 @@ pub fn open_db(cfg: &ExpConfig) -> Box<dyn Database> {
     }
 }
 
-/// Tune one program with MetaSchedule's generic space on the simulator.
+/// Tune one program with MetaSchedule's configured space on the
+/// simulator (the context comes from [`ExpConfig::context`]).
 pub fn tune_metaschedule(prog: &Program, target: &Target, cfg: &ExpConfig) -> TuneResult {
-    let composer = SpaceComposer::generic(target.clone());
-    tune_with_composer(prog, target, &composer, cfg)
+    tune_with_ctx(prog, &cfg.context(target), cfg)
 }
 
-/// Tune with an explicit composer (used by the fig10 ablations).
-pub fn tune_with_composer(
-    prog: &Program,
-    target: &Target,
-    composer: &SpaceComposer,
-    cfg: &ExpConfig,
-) -> TuneResult {
+/// Tune with an explicit tuning context (the fig10 ablations build
+/// theirs from registry specs).
+pub fn tune_with_ctx(prog: &Program, ctx: &TuneContext, cfg: &ExpConfig) -> TuneResult {
     let mut db = open_db(cfg);
-    tune_with_composer_db(prog, target, composer, cfg, db.as_mut())
+    tune_with_ctx_db(prog, ctx, cfg, db.as_mut())
 }
 
 /// Tune against an explicit database handle (shared across calls when
 /// the caller batches many workloads into one open).
-pub fn tune_with_composer_db(
+pub fn tune_with_ctx_db(
     prog: &Program,
-    target: &Target,
-    composer: &SpaceComposer,
+    ctx: &TuneContext,
     cfg: &ExpConfig,
     db: &mut dyn Database,
 ) -> TuneResult {
@@ -101,8 +126,8 @@ pub fn tune_with_composer_db(
         ..SearchConfig::default()
     });
     let mut model = GbtCostModel::new();
-    let mut measurer = SimMeasurer::new(target.clone());
-    search.tune_db(prog, composer, &mut model, &mut measurer, db, cfg.seed)
+    let mut measurer = SimMeasurer::new(ctx.target().clone());
+    search.tune_db(prog, ctx, &mut model, &mut measurer, db, cfg.seed)
 }
 
 /// The paper's "TVM" bars pick the best of AutoTVM and Ansor per setup.

@@ -10,11 +10,11 @@
 use std::time::Instant;
 
 use crate::baselines::Ansor;
+use crate::ctx::TuneContext;
 use crate::exp::{ExpConfig, Report};
 use crate::graph::{self, extract_tasks};
 use crate::search::{Measurer, SearchConfig, SimMeasurer, TaskScheduler};
 use crate::sim::Target;
-use crate::space::SpaceComposer;
 
 pub const TABLE1_MODELS: [&str; 5] = [
     "resnet50",
@@ -38,6 +38,12 @@ pub fn run(target: &Target, cfg: &ExpConfig, models: Option<&[&str]>) -> Report 
     if cfg.db_path.is_some() {
         report.notes.push("--db ignored: tuning-time comparison must run cold".into());
     }
+    if cfg.rules.is_some() {
+        report.notes.push("--rules ignored: both systems must tune the same fixed space".into());
+    }
+    if cfg.mutators.is_some() || cfg.postprocs.is_some() {
+        report.notes.push("--mutators/--postprocs ignored: both systems use the default policy".into());
+    }
     for m in models {
         let ops = graph::by_name(m).expect("unknown model");
         let tasks = extract_tasks(&ops);
@@ -53,15 +59,17 @@ pub fn run(target: &Target, cfg: &ExpConfig, models: Option<&[&str]>) -> Report 
         }
         let ansor_s = t0.elapsed().as_secs_f64() / ansor_measurements.max(1) as f64 * nominal;
 
-        // MetaSchedule: traces + task scheduler over the generic space.
-        let composer = SpaceComposer::generic(target.clone());
+        // MetaSchedule: traces + task scheduler over the generic space
+        // (always generic — a custom --rules spec would change the work
+        // measured and void the tuning-time comparison).
+        let ctx = TuneContext::generic(target.clone());
         let t1 = Instant::now();
         let mut meas = SimMeasurer::new(target.clone());
         let ts = TaskScheduler::new(SearchConfig {
             threads: cfg.threads,
             ..SearchConfig::default()
         });
-        let _ = ts.tune_tasks(&tasks, &composer, &mut meas, cfg.trials * tasks.len(), cfg.seed);
+        let _ = ts.tune_tasks(&tasks, &ctx, &mut meas, cfg.trials * tasks.len(), cfg.seed);
         let ms_s = t1.elapsed().as_secs_f64() / meas.count().max(1) as f64 * nominal;
 
         report.push(m, "TVM-Ansor", ansor_s);

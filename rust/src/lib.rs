@@ -4,7 +4,8 @@
 //! three-layer Rust + JAX + Pallas stack. The Rust layer implements the
 //! whole system: a TensorIR-style program representation ([`tir`]),
 //! stochastic schedule primitives ([`schedule`]), execution traces
-//! ([`trace`]), composable transformation modules ([`space`]), the
+//! ([`trace`]), composable schedule rules ([`space`]) resolved from a
+//! named rule registry into a pluggable tuning context ([`ctx`]), the
 //! learning-driven evolutionary search with a gradient-boosted-tree cost
 //! model ([`search`], [`cost_model`]), a persistent tuning-record
 //! database that warm-starts search and pretrains the cost model across
@@ -27,6 +28,7 @@
 
 pub mod baselines;
 pub mod cost_model;
+pub mod ctx;
 pub mod db;
 pub mod exp;
 pub mod graph;

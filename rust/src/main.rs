@@ -3,6 +3,7 @@
 //! ```text
 //! metaschedule list                              # workloads + models
 //! metaschedule tune --workload GMM [--target cpu] [--trials 64] [--threads N] [--db t.jsonl]
+//!                  [--rules default] [--mutators default] [--postprocs default] [--explain-space]
 //! metaschedule tune-model --model bert-base [--target cpu] [--trials 32] [--db t.jsonl]
 //! metaschedule exp <fig8|fig9|fig10a|fig10b|table1|all> [--target cpu]
 //!                  [--trials N] [--seed S] [--threads N] [--out results.jsonl] [--db t.jsonl]
@@ -10,6 +11,7 @@
 //! metaschedule db top --workload GMM -k 5 --db t.jsonl
 //! metaschedule db compact --db t.jsonl [-k 32] [--repair]  # GC: top-k + failures, atomic rewrite
 //! metaschedule serve GMM SFM --db t.jsonl [--target cpu] [--miss-trials 16]  # 0 = read-only
+//!                  [--watch [--poll-ms 500]]   # read-only; re-serve when the db file changes
 //! metaschedule pjrt-verify                       # artifact correctness gate
 //!
 //! `--threads` caps the OS threads of the search pipeline (0 = all
@@ -23,13 +25,22 @@
 //! the db (no JSONL replay per lookup), reports hit/miss + the replayed
 //! best latency per named workload, and falls back to a bounded
 //! tune-on-miss (`--miss-trials 0` = report-only) that commits back to
-//! the db (see README "Serving tuned programs").
+//! the db (see README "Serving tuned programs"). `--watch` keeps the
+//! process alive and re-serves whenever the db file's (len, mtime)
+//! signature changes — refresh on change, not on a timer.
+//!
+//! `--rules`/`--mutators`/`--postprocs` compose the search space from
+//! the named rule registry (`default` = the per-target generic set;
+//! `default-tc` adds Use-Tensor-Core). `--explain-space` prints per-rule
+//! applicability/error counters after tuning (see README "Extending the
+//! search space").
 //! ```
 
+use metaschedule::ctx::TuneContext;
 use metaschedule::db::{self, Database, DbStats, JsonFileDb};
 use metaschedule::exp::{self, ExpConfig};
 use metaschedule::graph;
-use metaschedule::serve::{serve_batch, serve_snapshot, ServeConfig, ServeOutcome, ServingCache};
+use metaschedule::serve::{serve_batch, serve_snapshot, serve_watch, ServeConfig, ServeOutcome, ServingCache};
 use metaschedule::sim::Target;
 use metaschedule::tir::{print_program, structural_hash, PrintOptions};
 use metaschedule::trace::serde::{text_to_trace, trace_to_text};
@@ -63,6 +74,24 @@ fn cfg_of(args: &Args) -> ExpConfig {
         seed: args.flag_u64("seed", 42),
         threads: args.flag_usize("threads", 0),
         db_path: args.flag("db").map(String::from),
+        rules: args.flag("rules").map(String::from),
+        mutators: args.flag("mutators").map(String::from),
+        postprocs: args.flag("postprocs").map(String::from),
+    }
+}
+
+/// Build the tuning context from the `--rules`/`--mutators`/`--postprocs`
+/// flags, exiting with a usage error (not a panic) on a bad spec.
+fn ctx_of(args: &Args, target: &metaschedule::sim::Target) -> TuneContext {
+    let rules = args.flag_or("rules", "default");
+    let mutators = args.flag_or("mutators", "default");
+    let postprocs = args.flag_or("postprocs", "default");
+    match TuneContext::from_specs(target.clone(), &rules, &mutators, &postprocs) {
+        Ok(ctx) => ctx,
+        Err(e) => {
+            eprintln!("invalid tuning-context spec: {e}");
+            std::process::exit(2);
+        }
     }
 }
 
@@ -104,13 +133,16 @@ fn tune(args: &Args) {
     let naive = metaschedule::sim::simulate(&prog, &target)
         .map(|r| r.total_s)
         .unwrap_or(f64::NAN);
+    // Validate the context spec BEFORE opening the db: a typo'd --rules
+    // must not create the file or append a registration line.
+    let ctx = ctx_of(args, &target);
+    println!("space: rules = {}", ctx.rule_set());
     let mut db = exp::open_db(&cfg);
     // Pre-register under the Figure-8 display name ("GMM", not the
     // program's internal "matmul") so `db top --workload GMM` finds it;
     // registration is idempotent and first name wins.
     db.register_workload(w.name, structural_hash(&prog), target.name);
-    let composer = metaschedule::space::SpaceComposer::generic(target.clone());
-    let r = exp::tune_with_composer_db(&prog, &target, &composer, &cfg, db.as_mut());
+    let r = exp::tune_with_ctx_db(&prog, &ctx, &cfg, db.as_mut());
     if r.warm_records > 0 {
         println!(
             "warm-start: resumed from {} db records (search continues from the recorded best)",
@@ -135,6 +167,9 @@ fn tune(args: &Args) {
     if args.has_switch("show-trace") {
         println!("{}", metaschedule::trace::serde::trace_to_text(&r.best_trace));
     }
+    if args.has_switch("explain-space") {
+        print!("{}", ctx.explain());
+    }
 }
 
 fn tune_model(args: &Args) {
@@ -145,6 +180,8 @@ fn tune_model(args: &Args) {
         eprintln!("unknown model {name}; see `metaschedule list`");
         std::process::exit(2);
     };
+    // Fail fast (exit 2, not a panic) on a bad spec before any tuning.
+    let _ = ctx_of(args, &target);
     println!("== tuning {name} on {} ({} trials/task)", target.name, cfg.trials);
     if let Some(path) = &cfg.db_path {
         println!("db: {path} (per-task records shared; killed runs resume from it)");
@@ -166,6 +203,12 @@ fn experiment(args: &Args) {
         .cloned()
         .unwrap_or_else(|| "all".into());
     let cfg = cfg_of(args);
+    // Validate context specs up front against both experiment targets so
+    // a typo exits 2 with a usage error instead of panicking mid-run
+    // (ExpConfig::context panics by contract — the CLI validates here).
+    for target in [Target::cpu_avx512(), Target::gpu()] {
+        let _ = ctx_of(args, &target);
+    }
     let out = args.flag("out").map(|s| s.to_string());
     let mut reports = Vec::new();
     match which.as_str() {
@@ -268,6 +311,11 @@ fn db_cmd(args: &Args) {
                         rec.round,
                         rec.cand_hash
                     );
+                    println!(
+                        "# provenance: sim {} | rules {}",
+                        rec.sim_version,
+                        if rec.rule_set.is_empty() { "-" } else { &rec.rule_set }
+                    );
                     let text = trace_to_text(&rec.trace);
                     print!("{text}");
                     // The printed trace must parse back — the db's whole
@@ -327,6 +375,39 @@ fn serve_cmd(args: &Args) {
         eprintln!("serve: {e}");
         std::process::exit(2);
     }
+    if args.has_switch("watch") {
+        // Watch mode is read-only by construction (reload + re-serve on
+        // change; tune-on-miss inside a watcher would tune in a loop).
+        if args.flag("miss-trials").is_some() && cfg.miss_trials > 0 {
+            eprintln!("serve: --watch is read-only; --miss-trials {} ignored (misses stay misses)", cfg.miss_trials);
+        }
+        let poll_ms = args.flag_u64("poll-ms", 500);
+        println!(
+            "== watching {path} on {} (read-only; poll {poll_ms} ms; re-serving on change)",
+            target.name
+        );
+        let res = serve_watch(
+            &names,
+            &target,
+            path,
+            cfg.top_k,
+            poll_ms,
+            None,
+            &mut |round, outcomes| {
+                if round == 0 {
+                    println!("-- initial serve");
+                } else {
+                    println!("-- db changed (refresh {round})");
+                }
+                print_outcomes(outcomes);
+            },
+        );
+        if let Err(e) = res {
+            eprintln!("serve: {e}");
+            std::process::exit(1);
+        }
+        return;
+    }
     let outcomes = if cfg.miss_trials == 0 {
         // Report-only: load the snapshot without ever opening the file
         // for writing, so serving works off a read-only mount.
@@ -364,8 +445,13 @@ fn serve_cmd(args: &Args) {
         );
         serve_batch(&names, &target, &mut db, &cfg).unwrap_or_else(serve_fail)
     };
+    print_outcomes(&outcomes);
+}
+
+/// Shared outcome rendering for one-shot and `--watch` serving.
+fn print_outcomes(outcomes: &[ServeOutcome]) {
     let mut hits = 0;
-    for o in &outcomes {
+    for o in outcomes {
         match (o.hit, o.latency_s) {
             (true, Some(lat)) => {
                 hits += 1;

@@ -21,7 +21,7 @@ use std::path::{Path, PathBuf};
 use crate::schedule::{LoopRv, SchResult, Schedule};
 use crate::search::Measurer;
 use crate::sim::Target;
-use crate::space::TransformModule;
+use crate::space::{RuleOutcome, ScheduleRule};
 use crate::tir::Program;
 use crate::trace::FactorArg;
 use crate::util::error::{Error, Result};
@@ -148,15 +148,23 @@ impl Default for PallasTileModule {
     }
 }
 
-impl TransformModule for PallasTileModule {
-    fn name(&self) -> &'static str {
+impl ScheduleRule for PallasTileModule {
+    fn name(&self) -> &str {
         "pallas-tile"
     }
 
-    fn apply(&self, sch: Schedule, block_name: &str, _target: &Target) -> Vec<Schedule> {
-        match crate::space::try_transform(&sch, |s| self.transform(s, block_name)) {
-            Some(out) => vec![out],
-            None => vec![sch],
+    fn describe(&self) -> String {
+        "sample (bm, bn, bk) Pallas block sizes realizable as AOT artifact variants".into()
+    }
+
+    fn params(&self) -> Vec<(String, String)> {
+        vec![("max-tile".into(), self.max_tile.to_string())]
+    }
+
+    fn apply(&self, sch: Schedule, block_name: &str, _target: &Target) -> RuleOutcome {
+        match crate::space::attempt(&sch, |s| self.transform(s, block_name)) {
+            Ok(out) => RuleOutcome::Applied(vec![out]),
+            Err(e) => RuleOutcome::Fail(sch, e),
         }
     }
 }

@@ -25,12 +25,11 @@
 use std::collections::HashSet;
 
 use crate::cost_model::CostModel;
+use crate::ctx::TuneContext;
 use crate::db::{pretrain_cost_model, Database, InMemoryDb, TuningRecord};
 use crate::schedule::Schedule;
-use crate::search::mutator::mutate;
 use crate::search::parallel::{parallel_map, BoundedQueue, SharedMeasurer};
 use crate::search::Measurer;
-use crate::space::SpaceComposer;
 use crate::tir::{structural_hash, Program};
 use crate::trace::replay::replay_fresh;
 use crate::trace::Trace;
@@ -145,61 +144,65 @@ impl EvolutionarySearch {
         EvolutionarySearch { cfg }
     }
 
-    /// Tune `prog` within the space generated by `composer`, measuring with
-    /// `measurer` and learning with `model`.
+    /// Tune `prog` within the space generated by `ctx`'s rule set,
+    /// measuring with `measurer` and learning with `model`.
     pub fn tune(
         &self,
         prog: &Program,
-        composer: &SpaceComposer,
+        ctx: &TuneContext,
         model: &mut dyn CostModel,
         measurer: &mut dyn Measurer,
         seed: u64,
     ) -> TuneResult {
-        let designs = composer.generate(prog, seed);
+        let designs = ctx.generate(prog, seed);
         let design_traces: Vec<Trace> = designs.into_iter().map(|d| d.trace).collect();
-        self.tune_with_designs_warm(prog, &design_traces, &[], model, measurer, seed)
+        self.tune_with_designs_warm(prog, ctx, &design_traces, &[], model, measurer, seed)
     }
 
     /// Like [`Self::tune`] but backed by a tuning database: prior records
     /// for this workload warm-start the search and pretrain the model,
     /// and every measurement is committed back (see [`Self::tune_with_db`]).
+    #[allow(clippy::too_many_arguments)]
     pub fn tune_db(
         &self,
         prog: &Program,
-        composer: &SpaceComposer,
+        ctx: &TuneContext,
         model: &mut dyn CostModel,
         measurer: &mut dyn Measurer,
         db: &mut dyn Database,
         seed: u64,
     ) -> TuneResult {
-        let designs = composer.generate(prog, seed);
+        let designs = ctx.generate(prog, seed);
         let design_traces: Vec<Trace> = designs.into_iter().map(|d| d.trace).collect();
-        self.tune_with_db(prog, &design_traces, &[], model, measurer, db, seed)
+        self.tune_with_db(prog, ctx, &design_traces, &[], model, measurer, db, seed)
     }
 
     /// Tune against a precomputed design space (the trace skeletons from a
-    /// previous `SpaceComposer::generate`). This is the §4 execution-
+    /// previous `TuneContext::generate`). This is the §4 execution-
     /// tracing payoff: across task-scheduler rounds the traces are simply
     /// re-executed instead of re-deriving the space — a measurable share
     /// of Table 1's tuning-time advantage.
     pub fn tune_with_designs(
         &self,
         prog: &Program,
+        ctx: &TuneContext,
         design_traces: &[Trace],
         model: &mut dyn CostModel,
         measurer: &mut dyn Measurer,
         seed: u64,
     ) -> TuneResult {
-        self.tune_with_designs_warm(prog, design_traces, &[], model, measurer, seed)
+        self.tune_with_designs_warm(prog, ctx, design_traces, &[], model, measurer, seed)
     }
 
     /// Like [`Self::tune_with_designs`] but seeding the elite pool with
     /// previously-found good traces (their *recorded* decisions are
     /// replayed into the initial population). The task scheduler uses this
     /// to carry progress across rounds.
+    #[allow(clippy::too_many_arguments)]
     pub fn tune_with_designs_warm(
         &self,
         prog: &Program,
+        ctx: &TuneContext,
         design_traces: &[Trace],
         warm_start: &[Trace],
         model: &mut dyn CostModel,
@@ -210,7 +213,7 @@ impl EvolutionarySearch {
         // pre-database search: no warm start, no pretraining, and the
         // committed records die with this call.
         let mut scratch = InMemoryDb::new();
-        self.tune_with_db(prog, design_traces, warm_start, model, measurer, &mut scratch, seed)
+        self.tune_with_db(prog, ctx, design_traces, warm_start, model, measurer, &mut scratch, seed)
     }
 
     /// The full database-backed search (paper §5: search <-> database <->
@@ -224,6 +227,7 @@ impl EvolutionarySearch {
     pub fn tune_with_db(
         &self,
         prog: &Program,
+        ctx: &TuneContext,
         design_traces: &[Trace],
         warm_start: &[Trace],
         model: &mut dyn CostModel,
@@ -272,7 +276,7 @@ impl EvolutionarySearch {
         // Round 0's fork-and-sample happens up front; every later round's
         // is prefetched while the previous round's batch is measuring.
         let mut prefetched =
-            Self::prefetch_all(prog, design_traces, chains, chain_pop, seed, 0, threads);
+            Self::prefetch_all(prog, ctx, design_traces, chains, chain_pop, seed, 0, threads);
 
         while trials < cfg.num_trials {
             // 2+3. Evolve the chains: initialize from elites + prefetched
@@ -285,6 +289,7 @@ impl EvolutionarySearch {
             let evolved: Vec<Vec<Member>> = parallel_map(fresh, threads, |c, fresh_c| {
                 self.evolve_chain(
                     prog,
+                    ctx,
                     elite_snapshot,
                     fresh_c,
                     model_ref,
@@ -341,6 +346,7 @@ impl EvolutionarySearch {
                 jobs,
                 measurer,
                 prog,
+                ctx,
                 design_traces,
                 chains,
                 chain_pop,
@@ -369,6 +375,8 @@ impl EvolutionarySearch {
                     seed,
                     round,
                     cand_hash,
+                    sim_version: crate::sim::SIM_VERSION.to_string(),
+                    rule_set: ctx.rule_set().to_string(),
                 });
                 // Invalid on hardware (e.g. scratchpad overflow) -> skipped,
                 // exactly like the paper's validator rejections.
@@ -413,6 +421,7 @@ impl EvolutionarySearch {
     fn evolve_chain(
         &self,
         prog: &Program,
+        ctx: &TuneContext,
         elites: &[Trace],
         fresh: Vec<Schedule>,
         model: &dyn CostModel,
@@ -435,8 +444,13 @@ impl EvolutionarySearch {
         let elite_quota = if elites.is_empty() { 0 } else { (chain_pop / 4).max(1) };
         let mut ei = chain as usize;
         while population.len() < elite_quota && ei < elites.len() {
+            // Elite replays pass the postproc gate like every other
+            // population member (with the default verify-integrity
+            // pipeline this never rejects a successful replay).
             if let Ok(sch) = crate::trace::replay(&elites[ei], prog, rng.next_u64()) {
-                population.push(Member { sch, score: 0.0 });
+                if ctx.postprocess(&sch) {
+                    population.push(Member { sch, score: 0.0 });
+                }
             }
             ei += chains.max(1);
         }
@@ -462,7 +476,7 @@ impl EvolutionarySearch {
                     continue;
                 }
                 let mseed = rng.next_u64();
-                if let Some(cand) = mutate(&m.sch.trace, prog, &mut rng, mseed) {
+                if let Some(cand) = ctx.mutate(&m.sch.trace, prog, &mut rng, mseed) {
                     proposals.push((i, cand));
                 }
             }
@@ -484,8 +498,10 @@ impl EvolutionarySearch {
 
     /// Fork-and-sample `chain_pop` fresh members per chain for `round`,
     /// across up to `threads` OS threads (chain order preserved).
+    #[allow(clippy::too_many_arguments)]
     fn prefetch_all(
         prog: &Program,
+        ctx: &TuneContext,
         design_traces: &[Trace],
         chains: usize,
         chain_pop: usize,
@@ -494,17 +510,26 @@ impl EvolutionarySearch {
         threads: usize,
     ) -> Vec<Vec<Schedule>> {
         parallel_map((0..chains).collect::<Vec<usize>>(), threads, |_, c| {
-            Self::prefetch_chain(prog, design_traces, chain_pop, seed, round, c as u64)
+            Self::prefetch_chain(prog, ctx, design_traces, chain_pop, seed, round, c as u64)
         })
     }
 
     /// One chain's fresh fork-and-samples for `round`: replay design
-    /// traces with fresh sampling decisions, keeping what validates.
-    /// Deliberately overprovisions a full `chain_pop` even though elite
-    /// replays take some slots — elite replay can fail, and fresh slack
-    /// is what keeps the population full when it does.
+    /// traces with fresh sampling decisions, keeping what replays AND
+    /// passes the context's postproc pipeline — so `--postprocs
+    /// sim-validity` really does reject target-invalid candidates before
+    /// a measurement is spent on them, for fresh samples and mutations
+    /// alike. Postprocs are pure and draw no RNG, so the filter is
+    /// thread-count-invariant; with the default verify-integrity
+    /// pipeline it accepts every successful fresh replay (fresh
+    /// decisions are drawn on-support), preserving pre-registry
+    /// behaviour. Deliberately overprovisions a full `chain_pop` even
+    /// though elite replays take some slots — elite replay can fail, and
+    /// fresh slack is what keeps the population full when it does.
+    #[allow(clippy::too_many_arguments)]
     fn prefetch_chain(
         prog: &Program,
+        ctx: &TuneContext,
         design_traces: &[Trace],
         chain_pop: usize,
         seed: u64,
@@ -518,7 +543,9 @@ impl EvolutionarySearch {
             attempts += 1;
             let t = &design_traces[rng.gen_range(design_traces.len())];
             if let Ok(sch) = replay_fresh(t, prog, rng.next_u64()) {
-                out.push(sch);
+                if ctx.postprocess(&sch) {
+                    out.push(sch);
+                }
             }
         }
         out
@@ -538,6 +565,7 @@ impl EvolutionarySearch {
         jobs: Vec<(usize, Program)>,
         measurer: &mut dyn Measurer,
         prog: &Program,
+        ctx: &TuneContext,
         design_traces: &[Trace],
         chains: usize,
         chain_pop: usize,
@@ -550,7 +578,7 @@ impl EvolutionarySearch {
         if threads <= 1 {
             let lats = jobs.into_iter().map(|(_, p)| measurer.measure(&p)).collect();
             let fresh = if prefetch {
-                Self::prefetch_all(prog, design_traces, chains, chain_pop, seed, next_round, 1)
+                Self::prefetch_all(prog, ctx, design_traces, chains, chain_pop, seed, next_round, 1)
             } else {
                 Vec::new()
             };
@@ -580,6 +608,7 @@ impl EvolutionarySearch {
                 s.spawn(move || {
                     Self::prefetch_all(
                         prog,
+                        ctx,
                         design_traces,
                         chains,
                         chain_pop,
@@ -625,12 +654,12 @@ impl ReplaySearch {
     pub fn tune(
         &self,
         prog: &Program,
-        composer: &SpaceComposer,
+        ctx: &TuneContext,
         measurer: &mut dyn Measurer,
         seed: u64,
     ) -> TuneResult {
         let mut rng = Rng::seed_from_u64(seed);
-        let designs = composer.generate(prog, seed);
+        let designs = ctx.generate(prog, seed);
         let traces: Vec<Trace> = designs.iter().map(|d| d.trace.clone()).collect();
         let mut best: Option<(f64, Schedule)> = None;
         let mut curve = Vec::new();
@@ -687,11 +716,11 @@ mod tests {
         let target = Target::cpu_avx512();
         let prog = workloads::matmul(1, 128, 128, 128);
         let naive = simulate(&prog, &target).unwrap().total_s;
-        let composer = SpaceComposer::generic(target.clone());
+        let ctx = TuneContext::generic(target.clone());
         let mut model = GbtCostModel::new();
         let mut measurer = SimMeasurer::new(target);
         let search = EvolutionarySearch::new(quick_cfg(48));
-        let r = search.tune(&prog, &composer, &mut model, &mut measurer, 1);
+        let r = search.tune(&prog, &ctx, &mut model, &mut measurer, 1);
         assert!(
             r.best_latency_s < naive * 0.2,
             "tuned {} vs naive {naive}",
@@ -708,11 +737,11 @@ mod tests {
         let target = Target::gpu();
         let prog = workloads::matmul(1, 128, 128, 128);
         let naive = simulate(&prog, &target).unwrap().total_s;
-        let composer = SpaceComposer::generic(target.clone());
+        let ctx = TuneContext::generic(target.clone());
         let mut model = GbtCostModel::new();
         let mut measurer = SimMeasurer::new(target);
         let search = EvolutionarySearch::new(quick_cfg(48));
-        let r = search.tune(&prog, &composer, &mut model, &mut measurer, 2);
+        let r = search.tune(&prog, &ctx, &mut model, &mut measurer, 2);
         assert!(r.best_latency_s < naive * 0.05);
     }
 
@@ -720,11 +749,11 @@ mod tests {
     fn best_trace_replays_to_best_prog() {
         let target = Target::cpu_avx512();
         let prog = workloads::fused_dense(64, 128, 64);
-        let composer = SpaceComposer::generic(target.clone());
+        let ctx = TuneContext::generic(target.clone());
         let mut model = GbtCostModel::new();
         let mut measurer = SimMeasurer::new(target);
         let search = EvolutionarySearch::new(quick_cfg(32));
-        let r = search.tune(&prog, &composer, &mut model, &mut measurer, 3);
+        let r = search.tune(&prog, &ctx, &mut model, &mut measurer, 3);
         let replayed = crate::trace::replay(&r.best_trace, &prog, 0).unwrap();
         assert_eq!(
             structural_hash(&replayed.prog),
@@ -738,7 +767,7 @@ mod tests {
         // the same trial budget (averaged over seeds to damp noise).
         let target = Target::cpu_avx512();
         let mk_prog = || workloads::matmul(1, 256, 256, 256);
-        let composer = SpaceComposer::generic(target.clone());
+        let ctx = TuneContext::generic(target.clone());
         let mut sum_gbt = 0.0;
         let mut sum_rand = 0.0;
         for seed in 0..4 {
@@ -746,11 +775,11 @@ mod tests {
             let search = EvolutionarySearch::new(quick_cfg(64));
             let mut gbt = GbtCostModel::new();
             sum_gbt += search
-                .tune(&mk_prog(), &composer, &mut gbt, &mut measurer, seed)
+                .tune(&mk_prog(), &ctx, &mut gbt, &mut measurer, seed)
                 .best_latency_s;
             let mut rnd = RandomModel::new(seed);
             sum_rand += search
-                .tune(&mk_prog(), &composer, &mut rnd, &mut measurer, seed)
+                .tune(&mk_prog(), &ctx, &mut rnd, &mut measurer, seed)
                 .best_latency_s;
         }
         // Averaged over seeds the learned model must be competitive (the
@@ -767,10 +796,10 @@ mod tests {
         let target = Target::cpu_avx512();
         let prog = workloads::matmul(1, 128, 128, 128);
         let naive = simulate(&prog, &target).unwrap().total_s;
-        let composer = SpaceComposer::generic(target.clone());
+        let ctx = TuneContext::generic(target.clone());
         let mut measurer = SimMeasurer::new(target);
         let rs = ReplaySearch { num_trials: 32 };
-        let r = rs.tune(&prog, &composer, &mut measurer, 5);
+        let r = rs.tune(&prog, &ctx, &mut measurer, 5);
         assert!(r.best_latency_s < naive);
     }
 
@@ -778,12 +807,12 @@ mod tests {
     fn second_run_warm_starts_from_database() {
         let target = Target::cpu_avx512();
         let prog = workloads::matmul(1, 128, 128, 128);
-        let composer = SpaceComposer::generic(target.clone());
+        let ctx = TuneContext::generic(target.clone());
         let mut db = crate::db::InMemoryDb::new();
         let run = |db: &mut dyn crate::db::Database| {
             let mut model = GbtCostModel::new();
             let mut measurer = SimMeasurer::new(target.clone());
-            EvolutionarySearch::new(quick_cfg(32)).tune_db(&prog, &composer, &mut model, &mut measurer, db, 4)
+            EvolutionarySearch::new(quick_cfg(32)).tune_db(&prog, &ctx, &mut model, &mut measurer, db, 4)
         };
         let cold = run(&mut db);
         assert_eq!(cold.warm_records, 0);
@@ -808,14 +837,14 @@ mod tests {
         // search must return the recorded best instead of panicking.
         let target = Target::cpu_avx512();
         let prog = workloads::matmul(1, 64, 64, 64);
-        let composer = SpaceComposer::generic(target.clone());
+        let ctx = TuneContext::generic(target.clone());
         let mut db = crate::db::InMemoryDb::new();
         let mut run = |trials: usize, seed: u64| {
             let mut model = GbtCostModel::new();
             let mut measurer = SimMeasurer::new(target.clone());
             EvolutionarySearch::new(quick_cfg(trials)).tune_db(
                 &prog,
-                &composer,
+                &ctx,
                 &mut model,
                 &mut measurer,
                 &mut db,

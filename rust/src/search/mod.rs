@@ -2,14 +2,20 @@
 //! annealed Metropolis–Hastings acceptance, trace mutation + validation,
 //! learned-cost-model candidate filtering, and a task scheduler for
 //! end-to-end models.
+//!
+//! The search consumes a [`crate::ctx::TuneContext`] — space generation,
+//! mutation, and candidate postprocessing all go through its pluggable
+//! component families. No concrete schedule rule is named anywhere in
+//! this layer; that compile-time inversion is what makes custom rules
+//! first-class (see `rust/tests/space_registry.rs`).
 
 pub mod evolutionary;
-pub mod mutator;
 pub mod parallel;
 pub mod task_scheduler;
 
+// Re-exported for benches/property tests that mutate traces standalone.
+pub use crate::ctx::mutate;
 pub use evolutionary::{EvolutionarySearch, ReplaySearch, SearchConfig, TuneResult};
-pub use mutator::mutate;
 pub use parallel::{BoundedQueue, MeasureRecord, SharedMeasurer};
 pub use task_scheduler::{Allocation, Task, TaskScheduler};
 

@@ -14,11 +14,11 @@
 //! measurement pipeline).
 
 use crate::cost_model::GbtCostModel;
+use crate::ctx::TuneContext;
 use crate::db::{Database, InMemoryDb, SharedDb};
 use crate::search::evolutionary::{EvolutionarySearch, SearchConfig, TuneResult};
 use crate::search::parallel::{parallel_map, SharedMeasurer};
 use crate::search::Measurer;
-use crate::space::SpaceComposer;
 use crate::tir::{structural_hash, Program};
 
 /// One tuning task: a deduplicated subgraph with its occurrence count.
@@ -70,13 +70,13 @@ impl TaskScheduler {
     pub fn tune_tasks(
         &self,
         tasks: &[Task],
-        composer: &SpaceComposer,
+        ctx: &TuneContext,
         measurer: &mut dyn Measurer,
         total_trials: usize,
         seed: u64,
     ) -> Vec<TuneResult> {
         let mut scratch = InMemoryDb::new();
-        self.tune_tasks_with_db(tasks, composer, measurer, &mut scratch, total_trials, seed)
+        self.tune_tasks_with_db(tasks, ctx, measurer, &mut scratch, total_trials, seed)
     }
 
     /// Like [`Self::tune_tasks`] but backed by a tuning database. Tasks
@@ -91,7 +91,7 @@ impl TaskScheduler {
     pub fn tune_tasks_with_db(
         &self,
         tasks: &[Task],
-        composer: &SpaceComposer,
+        ctx: &TuneContext,
         measurer: &mut dyn Measurer,
         db: &mut dyn Database,
         total_trials: usize,
@@ -116,8 +116,7 @@ impl TaskScheduler {
         let designs: Vec<Vec<crate::trace::Trace>> = tasks
             .iter()
             .map(|t| {
-                composer
-                    .generate(&t.prog, seed)
+                ctx.generate(&t.prog, seed)
                     .into_iter()
                     .map(|d| d.trace)
                     .collect()
@@ -149,6 +148,7 @@ impl TaskScheduler {
                 let mut local_db: &SharedDb = &shared_db;
                 let r = search.tune_with_db(
                     &tasks[ti].prog,
+                    ctx,
                     &designs[ti],
                     &[],
                     &mut model,
@@ -201,6 +201,7 @@ impl TaskScheduler {
             let mut local_db: &SharedDb = &shared_db;
             let r = search.tune_with_db(
                 &tasks[ti].prog,
+                ctx,
                 &designs[ti],
                 &warm,
                 &mut models[ti],
@@ -270,11 +271,11 @@ mod tests {
     #[test]
     fn all_tasks_get_tuned_within_budget() {
         let target = Target::cpu_avx512();
-        let composer = crate::space::SpaceComposer::generic(target.clone());
+        let ctx = TuneContext::generic(target.clone());
         let mut measurer = SimMeasurer::new(target);
         let ts = TaskScheduler::new(quick_cfg());
         let tasks = tiny_tasks();
-        let results = ts.tune_tasks(&tasks, &composer, &mut measurer, 64, 0);
+        let results = ts.tune_tasks(&tasks, &ctx, &mut measurer, 64, 0);
         assert_eq!(results.len(), 2);
         for r in &results {
             assert!(r.best_latency_s.is_finite() && r.best_latency_s > 0.0);
@@ -288,12 +289,12 @@ mod tests {
         // With gradient allocation the heavy task (weight x latency larger)
         // should receive at least as many trials as the light one.
         let target = Target::cpu_avx512();
-        let composer = crate::space::SpaceComposer::generic(target.clone());
+        let ctx = TuneContext::generic(target.clone());
         let mut measurer = SimMeasurer::new(target);
         let mut ts = TaskScheduler::new(quick_cfg());
         ts.round_trials = 16;
         let tasks = tiny_tasks();
-        let results = ts.tune_tasks(&tasks, &composer, &mut measurer, 96, 1);
+        let results = ts.tune_tasks(&tasks, &ctx, &mut measurer, 96, 1);
         assert!(results[0].trials >= results[1].trials);
     }
 
@@ -303,13 +304,13 @@ mod tests {
         // history, (b) not re-measure committed candidates, (c) end at
         // least as good per task.
         let target = Target::cpu_avx512();
-        let composer = crate::space::SpaceComposer::generic(target.clone());
+        let ctx = TuneContext::generic(target.clone());
         let tasks = tiny_tasks();
         let mut db = crate::db::InMemoryDb::new();
         let run = |db: &mut dyn crate::db::Database| {
             let mut measurer = SimMeasurer::new(target.clone());
             let ts = TaskScheduler::new(quick_cfg());
-            ts.tune_tasks_with_db(&tasks, &composer, &mut measurer, db, 48, 3)
+            ts.tune_tasks_with_db(&tasks, &ctx, &mut measurer, db, 48, 3)
         };
         let first = run(&mut db);
         let n_records = db.num_records();

@@ -185,6 +185,8 @@ mod tests {
             seed: 0,
             round: cand,
             cand_hash: cand,
+            sim_version: "simtest".into(),
+            rule_set: String::new(),
         }
     }
 
@@ -243,15 +245,15 @@ mod tests {
     fn apply_best_replays_real_traces() {
         use crate::search::{Measurer, SimMeasurer};
         use crate::sim::Target;
-        use crate::space::SpaceComposer;
+        use crate::ctx::TuneContext;
         let target = Target::cpu_avx512();
         let prog = crate::workloads::matmul(1, 64, 64, 64);
         let mut db = InMemoryDb::new();
         let wid = db.register_workload(&prog.name, structural_hash(&prog), target.name);
-        let composer = SpaceComposer::generic(target.clone());
+        let ctx = TuneContext::generic(target.clone());
         let mut measurer = SimMeasurer::new(target.clone());
         let mut committed = 0;
-        for (i, d) in composer.generate(&prog, 1).iter().cycle().take(64).enumerate() {
+        for (i, d) in ctx.generate(&prog, 1).iter().cycle().take(64).enumerate() {
             if committed >= 4 {
                 break;
             }
@@ -267,6 +269,8 @@ mod tests {
                 seed: 1,
                 round: i as u64,
                 cand_hash: structural_hash(&sch.prog),
+                sim_version: crate::sim::SIM_VERSION.to_string(),
+                rule_set: String::new(),
             });
             committed += 1;
         }

@@ -3,12 +3,14 @@
 //! tune-on-miss with a bounded budget, committing the new records and
 //! refreshing the snapshot so later requests in the batch hit.
 
+use std::path::PathBuf;
+
 use crate::cost_model::GbtCostModel;
-use crate::db::Database;
+use crate::ctx::TuneContext;
+use crate::db::{probe, Database, FileSignature};
 use crate::search::{EvolutionarySearch, Measurer, SearchConfig, SimMeasurer};
 use crate::serve::cache::ServingCache;
 use crate::sim::Target;
-use crate::space::SpaceComposer;
 use crate::tir::structural_hash;
 use crate::workloads;
 
@@ -135,7 +137,7 @@ pub fn serve_batch(
             threads: cfg.threads,
             ..SearchConfig::default()
         });
-        let composer = SpaceComposer::generic(target.clone());
+        let ctx = TuneContext::generic(target.clone());
         let mut model = GbtCostModel::new();
         let mut measurer = SimMeasurer::new(target.clone());
         // The search panics when not one candidate in the budget was
@@ -147,7 +149,7 @@ pub fn serve_batch(
         // what the next attempt's dedup wants), and the model/measurer
         // are this iteration's locals.
         let tuned = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            search.tune_db(&prog, &composer, &mut model, &mut measurer, db, cfg.seed)
+            search.tune_db(&prog, &ctx, &mut model, &mut measurer, db, cfg.seed)
         }));
         match tuned {
             Ok(r) => out.push(ServeOutcome {
@@ -186,6 +188,81 @@ pub fn serve_batch(
         cache = ServingCache::build(&*db, cfg.top_k);
     }
     Ok(out)
+}
+
+/// Change watcher over a database file: remembers the last
+/// [`FileSignature`] it saw and reports whether a fresh probe differs.
+/// The probe is one `stat` — cheap enough to poll at serving frequency —
+/// and the JSONL write path is append-only, so "signature changed" is a
+/// reliable "there are new records to index" signal (the in-process
+/// equivalent is [`crate::db::JsonFileDb::commit_counter`]).
+pub struct DbWatcher {
+    path: PathBuf,
+    last: Option<FileSignature>,
+}
+
+impl DbWatcher {
+    /// Start watching `path`, treating its current state as seen.
+    pub fn new(path: impl Into<PathBuf>) -> DbWatcher {
+        let path = path.into();
+        let last = probe(&path);
+        DbWatcher { path, last }
+    }
+
+    /// Whether the file changed since the last call (or construction);
+    /// updates the remembered signature.
+    pub fn changed(&mut self) -> bool {
+        let now = probe(&self.path);
+        if now != self.last {
+            self.last = now;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+/// Serve `names` read-only from `path`, then keep watching: whenever the
+/// file's signature changes, reload the snapshot and re-serve, invoking
+/// `on_serve(refresh_count, outcomes)` each time (round 0 is the initial
+/// serve). `max_refreshes = None` runs until the process is killed (the
+/// CLI `serve --watch` mode); tests bound it. Returns the number of
+/// refreshes performed.
+///
+/// This is refresh-on-change for the read path (ROADMAP "serving cache
+/// invalidation push"): a long-running server no longer rebuilds on a
+/// timer — it pays one `stat` per poll and a snapshot rebuild only when
+/// a tuner actually committed.
+pub fn serve_watch(
+    names: &[String],
+    target: &Target,
+    path: &str,
+    top_k: usize,
+    poll_ms: u64,
+    max_refreshes: Option<usize>,
+    on_serve: &mut dyn FnMut(usize, &[ServeOutcome]),
+) -> Result<usize, String> {
+    let serve_now = |names: &[String]| -> Result<Vec<ServeOutcome>, String> {
+        let (cache, _skipped) = ServingCache::load(path, top_k)?;
+        serve_snapshot(names, target, &cache)
+    };
+    let mut watcher = DbWatcher::new(path);
+    let outcomes = serve_now(names)?;
+    on_serve(0, &outcomes);
+    let mut refreshes = 0usize;
+    loop {
+        if let Some(max) = max_refreshes {
+            if refreshes >= max {
+                return Ok(refreshes);
+            }
+        }
+        std::thread::sleep(std::time::Duration::from_millis(poll_ms.max(1)));
+        if watcher.changed() {
+            let outcomes = serve_now(names)?;
+            refreshes += 1;
+            on_serve(refreshes, &outcomes);
+        }
+    }
 }
 
 #[cfg(test)]

@@ -28,9 +28,14 @@
 //! Snapshot lifecycle: tune into a JSONL db -> (optionally) `db compact`
 //! it -> build/load a [`ServingCache`] -> serve lookups -> on db growth,
 //! build a fresh cache and publish it through the [`SnapshotSlot`].
+//! *When* to rebuild is no longer timer-guesswork: [`DbWatcher`] probes
+//! the file's `(len, mtime)` signature ([`crate::db::probe`]) and
+//! [`serve_watch`] reloads on change (`serve --watch`); an in-process
+//! publisher can compare [`crate::db::JsonFileDb::commit_counter`]
+//! against the value captured at its last snapshot build.
 
 pub mod cache;
 pub mod front;
 
 pub use cache::{ServedWorkload, ServingCache, SnapshotSlot};
-pub use front::{serve_batch, serve_snapshot, ServeConfig, ServeOutcome};
+pub use front::{serve_batch, serve_snapshot, serve_watch, DbWatcher, ServeConfig, ServeOutcome};

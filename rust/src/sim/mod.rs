@@ -9,3 +9,11 @@ pub mod target;
 
 pub use model::{simulate, LatencyReport, SimError};
 pub use target::{CacheLevel, Target, TargetKind};
+
+/// Version stamp of the analytical latency model, written into every
+/// [`crate::db::TuningRecord`] at commit time. Bump this when the cost
+/// formulas change in a way that invalidates previously-recorded
+/// latencies: `db stats` reports the version mix, so stale generations
+/// are visible (and can be compacted away) instead of silently polluting
+/// warm starts. Records from before stamping parse back as `"v0"`.
+pub const SIM_VERSION: &str = "sim-v1";

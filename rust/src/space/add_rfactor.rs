@@ -4,7 +4,7 @@
 
 use crate::schedule::{SchResult, Schedule};
 use crate::sim::Target;
-use crate::space::{try_transform, TransformModule};
+use crate::space::{attempt, RuleOutcome, ScheduleRule};
 use crate::tir::analysis::{classify_loop, LoopClass};
 use crate::tir::LoopKind;
 use crate::trace::FactorArg;
@@ -51,12 +51,20 @@ impl Default for AddRfactor {
     }
 }
 
-impl TransformModule for AddRfactor {
-    fn name(&self) -> &'static str {
+impl ScheduleRule for AddRfactor {
+    fn name(&self) -> &str {
         "add-rfactor"
     }
 
-    fn apply(&self, sch: Schedule, block_name: &str, target: &Target) -> Vec<Schedule> {
+    fn describe(&self) -> String {
+        "rfactor reduction blocks with too little spatial parallelism across cores".into()
+    }
+
+    fn params(&self) -> Vec<(String, String)> {
+        vec![("jobs-per-core".into(), self.jobs_per_core.to_string())]
+    }
+
+    fn apply(&self, sch: Schedule, block_name: &str, target: &Target) -> RuleOutcome {
         let applicable = sch
             .prog
             .find_block(block_name)
@@ -67,13 +75,13 @@ impl TransformModule for AddRfactor {
             })
             .unwrap_or(false);
         if !applicable {
-            return vec![sch];
+            return RuleOutcome::Skip(sch);
         }
         // Fork the space: rfactored + original (rfactor costs an extra pass
         // over the partials; which wins depends on shape).
-        match try_transform(&sch, |s| self.transform(s, block_name)) {
-            Some(out) => vec![out, sch],
-            None => vec![sch],
+        match attempt(&sch, |s| self.transform(s, block_name)) {
+            Ok(out) => RuleOutcome::Applied(vec![out, sch]),
+            Err(e) => RuleOutcome::Fail(sch, e),
         }
     }
 }
@@ -118,7 +126,7 @@ mod tests {
         let prog = dot(1 << 16);
         let flops = program_flops(&prog);
         let m = AddRfactor::new();
-        let variants = m.apply(Schedule::new(prog, 1), "dot", &t);
+        let variants = m.apply(Schedule::new(prog, 1), "dot", &t).into_variants();
         assert_eq!(variants.len(), 2);
         let rf = &variants[0];
         rf.prog.check_integrity().unwrap();
@@ -132,7 +140,7 @@ mod tests {
         let t = Target::cpu_avx512();
         let prog = crate::workloads::matmul(1, 128, 128, 128);
         let m = AddRfactor::new();
-        let variants = m.apply(Schedule::new(prog, 1), "matmul", &t);
+        let variants = m.apply(Schedule::new(prog, 1), "matmul", &t).into_variants();
         assert_eq!(variants.len(), 1);
         assert!(variants[0].trace.is_empty());
     }

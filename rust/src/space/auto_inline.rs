@@ -4,7 +4,7 @@
 
 use crate::schedule::Schedule;
 use crate::sim::Target;
-use crate::space::{try_transform, TransformModule};
+use crate::space::{attempt, RuleOutcome, ScheduleRule};
 
 /// Deterministic module: no sampling. When the block is a trivially-written
 /// assignment it is inlined forward into its consumers; when it is the
@@ -26,29 +26,40 @@ impl Default for AutoInline {
     }
 }
 
-impl TransformModule for AutoInline {
-    fn name(&self) -> &'static str {
+impl ScheduleRule for AutoInline {
+    fn name(&self) -> &str {
         "auto-inline"
     }
 
-    fn apply(&self, sch: Schedule, block_name: &str, _target: &Target) -> Vec<Schedule> {
+    fn describe(&self) -> String {
+        "fold trivially-written elementwise blocks into their consumers (or producer)".into()
+    }
+
+    fn params(&self) -> Vec<(String, String)> {
+        vec![("into-producer".into(), self.into_producer.to_string())]
+    }
+
+    fn apply(&self, sch: Schedule, block_name: &str, _target: &Target) -> RuleOutcome {
+        // This is a probe rule: inline errors *are* the applicability
+        // analysis ("attempt the transformation"), so a block that cannot
+        // be inlined either way is a Skip, never a structural failure.
         // Forward inline into consumers.
-        if let Some(s) = try_transform(&sch, |s| {
+        if let Ok(s) = attempt(&sch, |s| {
             let b = s.get_block(block_name)?;
             s.compute_inline(b)
         }) {
-            return vec![s];
+            return RuleOutcome::Applied(vec![s]);
         }
         // Reverse inline into the single producer (output elementwise blocks).
         if self.into_producer {
-            if let Some(s) = try_transform(&sch, |s| {
+            if let Ok(s) = attempt(&sch, |s| {
                 let b = s.get_block(block_name)?;
                 s.reverse_compute_inline(b)
             }) {
-                return vec![s];
+                return RuleOutcome::Applied(vec![s]);
             }
         }
-        vec![sch]
+        RuleOutcome::Skip(sch)
     }
 }
 
@@ -67,7 +78,7 @@ mod tests {
         let t = crate::sim::Target::cpu_avx512();
         for n in names {
             if sch.prog.find_block(&n).is_some() {
-                sch = m.apply(sch, &n, &t).pop().unwrap();
+                sch = m.apply(sch, &n, &t).into_variants().pop().unwrap();
             }
         }
         sch

@@ -5,7 +5,7 @@
 
 use crate::schedule::{LoopRv, SchResult, Schedule};
 use crate::sim::Target;
-use crate::space::{try_transform, TransformModule};
+use crate::space::{attempt, RuleOutcome, ScheduleRule};
 use crate::tir::analysis::{classify_loop, LoopClass};
 use crate::tir::LoopKind;
 use crate::trace::FactorArg;
@@ -71,12 +71,16 @@ impl Default for CrossThreadReduction {
     }
 }
 
-impl TransformModule for CrossThreadReduction {
-    fn name(&self) -> &'static str {
+impl ScheduleRule for CrossThreadReduction {
+    fn name(&self) -> &str {
         "cross-thread-reduction"
     }
 
-    fn apply(&self, sch: Schedule, block_name: &str, _target: &Target) -> Vec<Schedule> {
+    fn describe(&self) -> String {
+        "bind plain reductions as a cross-thread tree (grid spatial, threadIdx slice)".into()
+    }
+
+    fn apply(&self, sch: Schedule, block_name: &str, _target: &Target) -> RuleOutcome {
         let applicable = sch
             .prog
             .find_block(block_name)
@@ -89,11 +93,11 @@ impl TransformModule for CrossThreadReduction {
             })
             .unwrap_or(false);
         if !applicable {
-            return vec![sch];
+            return RuleOutcome::Skip(sch);
         }
-        match try_transform(&sch, |s| self.transform(s, block_name)) {
-            Some(out) => vec![out, sch],
-            None => vec![sch],
+        match attempt(&sch, |s| self.transform(s, block_name)) {
+            Ok(out) => RuleOutcome::Applied(vec![out, sch]),
+            Err(e) => RuleOutcome::Fail(sch, e),
         }
     }
 }
@@ -109,7 +113,7 @@ mod tests {
         let t = Target::gpu();
         let m = CrossThreadReduction::new();
         let prog = workloads::softmax(1, 256, 256);
-        let variants = m.apply(Schedule::new(prog, 2), "row_sum", &t);
+        let variants = m.apply(Schedule::new(prog, 2), "row_sum", &t).into_variants();
         assert_eq!(variants.len(), 2);
         let xt = &variants[0];
         xt.prog.check_integrity().unwrap();
@@ -125,7 +129,7 @@ mod tests {
         // or rejected by sim — across seeds at least one must pass).
         let ok = (0..8).any(|seed| {
             let prog = workloads::softmax(1, 256, 256);
-            let v = m.apply(Schedule::new(prog, seed), "row_sum", &t);
+            let v = m.apply(Schedule::new(prog, seed), "row_sum", &t).into_variants();
             simulate(&v[0].prog, &t).is_ok()
         });
         assert!(ok);
@@ -136,7 +140,7 @@ mod tests {
         let t = Target::gpu();
         let m = CrossThreadReduction::new();
         let prog = workloads::matmul(1, 128, 128, 128);
-        let variants = m.apply(Schedule::new(prog, 2), "matmul", &t);
+        let variants = m.apply(Schedule::new(prog, 2), "matmul", &t).into_variants();
         assert_eq!(variants.len(), 1);
         assert!(variants[0].trace.is_empty());
     }

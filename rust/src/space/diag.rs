@@ -1,0 +1,98 @@
+//! Per-rule applicability/error counters (the data behind
+//! `tune --explain-space`).
+//!
+//! A [`RuleDiag`] accumulates across every `generate` call made through
+//! one [`crate::space::SpaceGenerator`] — atomics, because the task
+//! scheduler shares one generator across worker threads. The counters are
+//! diagnostics only: they never feed back into the search, so recording
+//! them cannot perturb the determinism contract.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Distinct error messages retained per rule (the count is always exact).
+const MAX_ERROR_NOTES: usize = 4;
+
+/// Counters for one rule: how often it applied, skipped (its own
+/// applicability analysis said no), or failed structurally (considered
+/// itself applicable but the transformation errored).
+#[derive(Debug)]
+pub struct RuleDiag {
+    name: String,
+    applied: AtomicUsize,
+    skipped: AtomicUsize,
+    failed: AtomicUsize,
+    errors: Mutex<Vec<String>>,
+}
+
+impl RuleDiag {
+    pub(crate) fn new(name: &str) -> RuleDiag {
+        RuleDiag {
+            name: name.to_string(),
+            applied: AtomicUsize::new(0),
+            skipped: AtomicUsize::new(0),
+            failed: AtomicUsize::new(0),
+            errors: Mutex::new(Vec::new()),
+        }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn applied(&self) -> usize {
+        self.applied.load(Ordering::Relaxed)
+    }
+
+    pub fn skipped(&self) -> usize {
+        self.skipped.load(Ordering::Relaxed)
+    }
+
+    pub fn failed(&self) -> usize {
+        self.failed.load(Ordering::Relaxed)
+    }
+
+    /// The first few *distinct* error messages seen (capped; the
+    /// `failed` count stays exact).
+    pub fn errors(&self) -> Vec<String> {
+        self.errors.lock().unwrap().clone()
+    }
+
+    pub(crate) fn count_applied(&self) {
+        self.applied.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(crate) fn count_skipped(&self) {
+        self.skipped.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(crate) fn count_failed(&self, msg: String) {
+        self.failed.fetch_add(1, Ordering::Relaxed);
+        let mut errs = self.errors.lock().unwrap();
+        if errs.len() < MAX_ERROR_NOTES && !errs.contains(&msg) {
+            errs.push(msg);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate_and_errors_dedup() {
+        let d = RuleDiag::new("r");
+        d.count_applied();
+        d.count_skipped();
+        d.count_skipped();
+        for _ in 0..10 {
+            d.count_failed("same error".into());
+        }
+        d.count_failed("other error".into());
+        assert_eq!(d.name(), "r");
+        assert_eq!(d.applied(), 1);
+        assert_eq!(d.skipped(), 2);
+        assert_eq!(d.failed(), 11, "count stays exact past the note cap");
+        assert_eq!(d.errors(), vec!["same error".to_string(), "other error".to_string()]);
+    }
+}

@@ -1,17 +1,27 @@
-//! Composable search-space construction: transformation modules (§3.2).
+//! Composable search-space construction: schedule rules (§3.2).
 //!
-//! A [`TransformModule`] is the paper's *transformation module*: a named,
-//! reusable unit of (program analysis + sampling + stochastic
-//! transformation). The [`SpaceComposer`] composes a list of modules over
+//! A [`ScheduleRule`] is the paper's *transformation module* (renamed to
+//! match its role in the [`crate::ctx::TuneContext`] rule registry): a
+//! named, reusable unit of (program analysis + sampling + stochastic
+//! transformation). The [`SpaceGenerator`] composes a list of rules over
 //! every block of the program (Figure 5's algorithm): visiting blocks in
-//! execution order and applying each module in turn, flat-mapping over the
+//! execution order and applying each rule in turn, flat-mapping over the
 //! design variants each application returns. The resulting schedules carry
 //! *design-space traces* — linearized probabilistic programs whose sampling
 //! decisions the search later re-draws and mutates.
+//!
+//! Rules report a tri-state [`RuleOutcome`] rather than a bare variant
+//! list, so a rule that *fails for a structural reason* is distinguishable
+//! from one that simply does not apply — the generator tallies both per
+//! rule into [`diag::RuleDiag`] counters surfaced by `tune
+//! --explain-space`. Which rules compose a space is no longer hardcoded
+//! here: per-target defaults live as data in [`crate::ctx::registry`], and
+//! custom rules register through the same [`crate::ctx::RegistrySet`] API.
 
 pub mod add_rfactor;
 pub mod auto_inline;
 pub mod cross_thread_reduction;
+pub mod diag;
 pub mod multi_level_tiling;
 pub mod parallel_vectorize_unroll;
 pub mod random_compute_location;
@@ -21,83 +31,139 @@ pub mod use_tensor_core;
 pub use add_rfactor::AddRfactor;
 pub use auto_inline::AutoInline;
 pub use cross_thread_reduction::CrossThreadReduction;
+pub use diag::RuleDiag;
 pub use multi_level_tiling::MultiLevelTiling;
 pub use parallel_vectorize_unroll::ParallelVectorizeUnroll;
 pub use random_compute_location::RandomComputeLocation;
 pub use thread_bind::ThreadBind;
 pub use use_tensor_core::UseTensorCore;
 
-use crate::schedule::{SchResult, Schedule};
-use crate::sim::{Target, TargetKind};
+use crate::schedule::{SchResult, Schedule, ScheduleError};
+use crate::sim::Target;
 use crate::tir::Program;
 
-/// A composable transformation module (paper §3.2, Figure 4).
+/// What one rule application did to one (schedule, block) pair.
+///
+/// The schedule always travels through: `Skip`/`Fail` return the input
+/// unchanged so the design space is identical to the pre-tri-state
+/// behaviour ("not applicable" used to be a silent pass-through), while
+/// the generator counts each arm separately for `--explain-space`.
+pub enum RuleOutcome {
+    /// The rule transformed the schedule into one or more design
+    /// variants (more than one forks the space, e.g. tensorized + plain).
+    Applied(Vec<Schedule>),
+    /// The rule's own applicability analysis said "not my block";
+    /// the input passes through untouched.
+    Skip(Schedule),
+    /// The rule considered the block applicable but the transformation
+    /// errored — a *structural* failure, previously indistinguishable
+    /// from `Skip` because `try_transform` swallowed the error. The
+    /// input passes through; the error is surfaced in the diagnostics.
+    Fail(Schedule, ScheduleError),
+}
+
+impl RuleOutcome {
+    /// Collapse to the variant list the generator flat-maps over (and
+    /// the shape the old `TransformModule::apply` returned): `Applied`
+    /// yields its variants, `Skip`/`Fail` yield the untouched input.
+    pub fn into_variants(self) -> Vec<Schedule> {
+        match self {
+            RuleOutcome::Applied(v) => v,
+            RuleOutcome::Skip(s) | RuleOutcome::Fail(s, _) => vec![s],
+        }
+    }
+}
+
+/// A composable schedule rule (paper §3.2, Figure 4; the former
+/// `TransformModule`, renamed and extended with a describe/params
+/// surface for the rule registry and `--explain-space`).
 ///
 /// `apply` receives one schedule state and the *name* of the block to
 /// consider (names are stable across design variants; RV handles are not)
-/// and returns the design variants it produces. Returning the input
-/// unchanged (one variant) means "not applicable here". Returning more
-/// than one variant forks the design space (e.g. tensorized + plain).
-pub trait TransformModule {
-    fn name(&self) -> &'static str;
-    fn apply(&self, sch: Schedule, block_name: &str, target: &Target) -> Vec<Schedule>;
+/// and reports a [`RuleOutcome`]. `Send + Sync` because a
+/// [`crate::ctx::TuneContext`] is shared across the search's worker
+/// threads; rules are immutable configuration, never mutable state.
+pub trait ScheduleRule: Send + Sync {
+    /// Registry name (kebab-case, unique within a rule set).
+    fn name(&self) -> &str;
+
+    /// One-line human description for `--explain-space` and docs.
+    fn describe(&self) -> String {
+        String::new()
+    }
+
+    /// Named parameters `(key, value)` for provenance and diagnostics.
+    fn params(&self) -> Vec<(String, String)> {
+        Vec::new()
+    }
+
+    fn apply(&self, sch: Schedule, block_name: &str, target: &Target) -> RuleOutcome;
 }
 
-/// Run `f` on a clone of `sch`; keep the transformed schedule if every
-/// primitive succeeded, otherwise discard it. This is the standard module
-/// idiom: probe applicability by attempting the transformation.
-pub fn try_transform(
-    sch: &Schedule,
-    f: impl FnOnce(&mut Schedule) -> SchResult<()>,
-) -> Option<Schedule> {
+/// Run `f` on a clone of `sch`; return the transformed schedule if every
+/// primitive succeeded, or the first error otherwise. This is the
+/// standard rule idiom — probe applicability by attempting the
+/// transformation — with the error *surfaced* instead of swallowed, so
+/// rules can report `RuleOutcome::Fail` for structural failures.
+pub fn attempt(sch: &Schedule, f: impl FnOnce(&mut Schedule) -> SchResult<()>) -> SchResult<Schedule> {
     let mut c = sch.clone();
-    match f(&mut c) {
-        Ok(()) => Some(c),
-        Err(_) => None,
-    }
+    f(&mut c).map(|()| c)
 }
 
-/// Composes transformation modules into a search space generator
-/// (Figure 5 left: `Compose([m1, ..., mk])`).
-pub struct SpaceComposer {
-    pub modules: Vec<Box<dyn TransformModule>>,
+/// Composes schedule rules into a search-space generator (Figure 5 left:
+/// `Compose([m1, ..., mk])`). Construct directly from rule instances, or
+/// — the normal path — through [`crate::ctx::TuneContext`], which
+/// resolves named rule sets against the registry.
+pub struct SpaceGenerator {
+    rules: Vec<Box<dyn ScheduleRule>>,
     pub target: Target,
+    /// Per-rule applicability/error counters, parallel to `rules`.
+    diag: Vec<RuleDiag>,
 }
 
-impl SpaceComposer {
-    pub fn new(modules: Vec<Box<dyn TransformModule>>, target: Target) -> SpaceComposer {
-        SpaceComposer { modules, target }
+impl SpaceGenerator {
+    pub fn new(rules: Vec<Box<dyn ScheduleRule>>, target: Target) -> SpaceGenerator {
+        let diag = rules.iter().map(|r| RuleDiag::new(r.name())).collect();
+        SpaceGenerator { rules, target, diag }
     }
 
-    /// The paper's generic per-target module composition (Figure 5 right,
-    /// minus hardware-specific modules).
-    pub fn generic(target: Target) -> SpaceComposer {
-        let modules: Vec<Box<dyn TransformModule>> = match target.kind {
-            TargetKind::Cpu => vec![
-                Box::new(AutoInline::new()),
-                Box::new(MultiLevelTiling::cpu()),
-                Box::new(AddRfactor::new()),
-                Box::new(RandomComputeLocation::new()),
-                Box::new(ParallelVectorizeUnroll::new()),
-            ],
-            TargetKind::Gpu => vec![
-                Box::new(AutoInline::new()),
-                Box::new(MultiLevelTiling::gpu()),
-                Box::new(CrossThreadReduction::new()),
-                Box::new(RandomComputeLocation::new()),
-                Box::new(ThreadBind::new()),
-            ],
+    /// The composed rules, in application order.
+    pub fn rules(&self) -> &[Box<dyn ScheduleRule>] {
+        &self.rules
+    }
+
+    /// Canonical rule-set label: the rule names joined with `,`, plus a
+    /// short FNV-1a digest of every rule's `(name, params)` sequence.
+    /// The names keep provenance human-readable; the digest keeps it
+    /// *precise* — two spaces that share family names but differ in
+    /// configuration (`mlt-cpu` resolved on a GPU target, WMMA vs MXU
+    /// tensor cores, a custom rule shadowing a builtin name with other
+    /// params) stamp different labels. `--rules default` and the
+    /// equivalent explicit list resolve to identical instances, hence
+    /// identical labels, digest included.
+    pub fn rule_set(&self) -> String {
+        let names = self.rules.iter().map(|r| r.name()).collect::<Vec<_>>().join(",");
+        // FNV-1a over the (name, params) sequence with field separators.
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        let mut eat = |bytes: &[u8]| {
+            for &b in bytes {
+                h = (h ^ b as u64).wrapping_mul(0x0100_0000_01b3);
+            }
+            h = (h ^ 0x1f).wrapping_mul(0x0100_0000_01b3);
         };
-        SpaceComposer::new(modules, target)
+        for r in &self.rules {
+            eat(r.name().as_bytes());
+            for (k, v) in r.params() {
+                eat(k.as_bytes());
+                eat(v.as_bytes());
+            }
+        }
+        format!("{names} #{:08x}", (h ^ (h >> 32)) as u32)
     }
 
-    /// Generic composition plus the hardware-specific `Use-Tensor-Core`
-    /// module (Figure 5 right / Figure 10). The module is inserted after
-    /// AutoInline so it claims matmul-like blocks before generic tiling.
-    pub fn with_tensor_core(target: Target) -> SpaceComposer {
-        let mut c = SpaceComposer::generic(target);
-        c.modules.insert(1, Box::new(UseTensorCore::wmma()));
-        c
+    /// Per-rule diagnostics accumulated across every `generate` call.
+    pub fn diag(&self) -> &[RuleDiag] {
+        &self.diag
     }
 
     /// Generate the design space for `prog`: one or more schedules whose
@@ -105,7 +171,7 @@ impl SpaceComposer {
     /// Sampling decisions inside are drawn with `seed`; the search re-draws
     /// them per population member via `replay_fresh`.
     pub fn generate(&self, prog: &Program, seed: u64) -> Vec<Schedule> {
-        // Blocks in execution (pre-)order by name. Modules look blocks up by
+        // Blocks in execution (pre-)order by name. Rules look blocks up by
         // name because inlining/fusion invalidates ids across variants.
         let block_names: Vec<String> = prog
             .blocks()
@@ -114,7 +180,7 @@ impl SpaceComposer {
             .collect();
         let mut states = vec![Schedule::new(prog.clone(), seed)];
         for name in &block_names {
-            for module in &self.modules {
+            for (rule, diag) in self.rules.iter().zip(&self.diag) {
                 let mut next = Vec::with_capacity(states.len());
                 for sch in states.drain(..) {
                     // The block may have been inlined away in this variant.
@@ -122,8 +188,20 @@ impl SpaceComposer {
                         next.push(sch);
                         continue;
                     }
-                    let variants = module.apply(sch, name, &self.target);
-                    next.extend(variants);
+                    match rule.apply(sch, name, &self.target) {
+                        RuleOutcome::Applied(variants) => {
+                            diag.count_applied();
+                            next.extend(variants);
+                        }
+                        RuleOutcome::Skip(s) => {
+                            diag.count_skipped();
+                            next.push(s);
+                        }
+                        RuleOutcome::Fail(s, e) => {
+                            diag.count_failed(format!("{e}"));
+                            next.push(s);
+                        }
+                    }
                 }
                 states = next;
             }
@@ -132,7 +210,7 @@ impl SpaceComposer {
     }
 }
 
-/// Block-level analyses shared by modules.
+/// Block-level analyses shared by rules.
 pub mod analysis {
     use crate::tir::{IterKind, ItemId, Program};
 
@@ -178,6 +256,7 @@ pub mod analysis {
 mod tests {
     use super::analysis::*;
     use super::*;
+    use crate::ctx::TuneContext;
     use crate::workloads;
 
     #[test]
@@ -202,12 +281,12 @@ mod tests {
     }
 
     #[test]
-    fn generic_composer_produces_valid_schedules() {
+    fn generic_space_produces_valid_schedules() {
         use crate::sim::simulate;
         for target in [Target::cpu_avx512(), Target::gpu()] {
             let prog = workloads::fused_dense(64, 128, 64);
-            let composer = SpaceComposer::generic(target.clone());
-            let states = composer.generate(&prog, 42);
+            let ctx = TuneContext::generic(target.clone());
+            let states = ctx.generate(&prog, 42);
             assert!(!states.is_empty());
             for s in &states {
                 s.prog.check_integrity().unwrap();
@@ -225,8 +304,8 @@ mod tests {
     fn composed_space_traces_replay() {
         use crate::trace::replay;
         let prog = workloads::fused_dense(64, 128, 64);
-        let composer = SpaceComposer::generic(Target::cpu_avx512());
-        for s in composer.generate(&prog, 7) {
+        let ctx = TuneContext::generic(Target::cpu_avx512());
+        for s in ctx.generate(&prog, 7) {
             let r = replay(&s.trace, &prog, 0).unwrap();
             assert_eq!(
                 crate::tir::structural_hash(&s.prog),
@@ -236,9 +315,36 @@ mod tests {
     }
 
     #[test]
-    fn with_tensor_core_extends_module_list() {
-        let c = SpaceComposer::with_tensor_core(Target::gpu());
-        assert!(c.modules.iter().any(|m| m.name() == "use-tensor-core"));
-        assert_eq!(c.modules.len(), SpaceComposer::generic(Target::gpu()).modules.len() + 1);
+    fn with_tensor_core_extends_rule_list() {
+        let tc = TuneContext::with_tensor_core(Target::gpu());
+        let generic = TuneContext::generic(Target::gpu());
+        assert!(tc.space().rules().iter().any(|m| m.name() == "use-tensor-core"));
+        assert_eq!(tc.space().rules().len(), generic.space().rules().len() + 1);
+        assert!(tc.rule_set().contains("use-tensor-core"));
+    }
+
+    #[test]
+    fn generator_counts_rule_outcomes() {
+        // On a matmul, auto-inline skips the reduction block while
+        // multi-level-tiling applies — the diag counters must say so.
+        let target = Target::cpu_avx512();
+        let ctx = TuneContext::generic(target);
+        let prog = workloads::matmul(1, 64, 64, 64);
+        let states = ctx.generate(&prog, 1);
+        assert!(!states.is_empty());
+        let diag = ctx.space().diag();
+        let by_name = |n: &str| diag.iter().find(|d| d.name() == n).unwrap();
+        assert!(by_name("auto-inline").skipped() > 0);
+        assert!(by_name("multi-level-tiling").applied() > 0);
+    }
+
+    #[test]
+    fn rule_outcome_into_variants_passes_input_through() {
+        let prog = workloads::matmul(1, 16, 16, 16);
+        let sch = Schedule::new(prog, 0);
+        let v = RuleOutcome::Skip(sch.clone()).into_variants();
+        assert_eq!(v.len(), 1);
+        let v = RuleOutcome::Fail(sch, ScheduleError::Unsupported("x".into())).into_variants();
+        assert_eq!(v.len(), 1);
     }
 }

@@ -9,7 +9,7 @@
 
 use crate::schedule::{LoopRv, SchResult, Schedule};
 use crate::sim::Target;
-use crate::space::{analysis::needs_multi_level_tiling, try_transform, TransformModule};
+use crate::space::{analysis::needs_multi_level_tiling, attempt, RuleOutcome, ScheduleRule};
 use crate::tir::analysis::{classify_loop, LoopClass};
 use crate::tir::LoopKind;
 use crate::trace::FactorArg;
@@ -138,23 +138,39 @@ impl MultiLevelTiling {
     }
 }
 
-impl TransformModule for MultiLevelTiling {
-    fn name(&self) -> &'static str {
+impl ScheduleRule for MultiLevelTiling {
+    fn name(&self) -> &str {
         "multi-level-tiling"
     }
 
-    fn apply(&self, sch: Schedule, block_name: &str, _target: &Target) -> Vec<Schedule> {
+    fn describe(&self) -> String {
+        format!(
+            "{} cache blocking with Sample-Tile factors on reuse-bearing reductions",
+            self.structure_name
+        )
+    }
+
+    fn params(&self) -> Vec<(String, String)> {
+        vec![
+            ("structure".into(), self.structure_name.to_string()),
+            ("spatial-parts".into(), self.spatial_parts.to_string()),
+            ("reduce-parts".into(), self.reduce_parts.to_string()),
+            ("max-innermost".into(), self.max_innermost.to_string()),
+        ]
+    }
+
+    fn apply(&self, sch: Schedule, block_name: &str, _target: &Target) -> RuleOutcome {
         let applicable = sch
             .prog
             .find_block(block_name)
             .map(|b| needs_multi_level_tiling(&sch.prog, b))
             .unwrap_or(false);
         if !applicable {
-            return vec![sch];
+            return RuleOutcome::Skip(sch);
         }
-        match try_transform(&sch, |s| self.tile(s, block_name)) {
-            Some(tiled) => vec![tiled],
-            None => vec![sch],
+        match attempt(&sch, |s| self.tile(s, block_name)) {
+            Ok(tiled) => RuleOutcome::Applied(vec![tiled]),
+            Err(e) => RuleOutcome::Fail(sch, e),
         }
     }
 }
@@ -173,6 +189,7 @@ mod tests {
         let m = MultiLevelTiling::cpu();
         let out = m
             .apply(Schedule::new(prog, 3), "matmul", &Target::cpu_avx512())
+            .into_variants()
             .pop()
             .unwrap();
         out.prog.check_integrity().unwrap();
@@ -189,6 +206,7 @@ mod tests {
         let m = MultiLevelTiling::gpu();
         let out = m
             .apply(Schedule::new(prog, 3), "matmul", &Target::gpu())
+            .into_variants()
             .pop()
             .unwrap();
         out.prog.check_integrity().unwrap();
@@ -212,6 +230,7 @@ mod tests {
         let m = MultiLevelTiling::cpu();
         let out = m
             .apply(Schedule::new(prog.clone(), 3), "relu", &Target::cpu_avx512())
+            .into_variants()
             .pop()
             .unwrap();
         assert_eq!(loop_count(&out.prog), 1); // untouched
@@ -223,7 +242,7 @@ mod tests {
         // Tiling alone pays loop-entry overhead without using more of the
         // machine; composed with parallel+vectorize (the realistic
         // pipeline) the best-of-seeds schedule must win big.
-        use crate::space::{ParallelVectorizeUnroll, TransformModule};
+        use crate::space::{ParallelVectorizeUnroll, ScheduleRule};
         let t = Target::cpu_avx512();
         let prog = workloads::matmul(1, 512, 512, 512);
         let naive = simulate(&prog, &t).unwrap().total_s;
@@ -233,9 +252,10 @@ mod tests {
             .filter_map(|seed| {
                 let out = mlt
                     .apply(Schedule::new(prog.clone(), seed), "matmul", &t)
+                    .into_variants()
                     .pop()
                     .unwrap();
-                let out = pvu.apply(out, "matmul", &t).pop().unwrap();
+                let out = pvu.apply(out, "matmul", &t).into_variants().pop().unwrap();
                 simulate(&out.prog, &t).ok().map(|r| r.total_s)
             })
             .fold(f64::INFINITY, f64::min);
@@ -245,6 +265,7 @@ mod tests {
             .filter_map(|seed| {
                 let out = mlt
                     .apply(Schedule::new(prog.clone(), seed), "matmul", &t)
+                    .into_variants()
                     .pop()
                     .unwrap();
                 simulate(&out.prog, &t).ok().map(|r| r.total_s)
@@ -261,7 +282,7 @@ mod tests {
             let w = workloads::by_name(name).unwrap();
             let prog = (w.build)();
             let bname = prog.blocks().first().map(|&b| prog.block_data(b).name.clone()).unwrap();
-            let out = m.apply(Schedule::new(prog, 5), &bname, &t).pop().unwrap();
+            let out = m.apply(Schedule::new(prog, 5), &bname, &t).into_variants().pop().unwrap();
             out.prog.check_integrity().unwrap();
             assert!(!out.trace.is_empty(), "{name} did not tile");
         }

@@ -5,7 +5,7 @@
 
 use crate::schedule::{LoopRv, SchResult, Schedule};
 use crate::sim::Target;
-use crate::space::{try_transform, TransformModule};
+use crate::space::{attempt, RuleOutcome, ScheduleRule};
 use crate::tir::analysis::{classify_loop, LoopClass};
 use crate::tir::LoopKind;
 
@@ -136,15 +136,30 @@ impl Default for ParallelVectorizeUnroll {
     }
 }
 
-impl TransformModule for ParallelVectorizeUnroll {
-    fn name(&self) -> &'static str {
+impl ScheduleRule for ParallelVectorizeUnroll {
+    fn name(&self) -> &str {
         "parallel-vectorize-unroll"
     }
 
-    fn apply(&self, sch: Schedule, block_name: &str, target: &Target) -> Vec<Schedule> {
-        match try_transform(&sch, |s| self.transform(s, block_name, target)) {
-            Some(out) => vec![out],
-            None => vec![sch],
+    fn describe(&self) -> String {
+        "parallelize outer spatial loops, vectorize the inner tile, sample auto-unroll".into()
+    }
+
+    fn params(&self) -> Vec<(String, String)> {
+        let steps: Vec<String> = self.unroll_steps.iter().map(|v| v.to_string()).collect();
+        vec![
+            ("max-jobs-per-core".into(), self.max_jobs_per_core.to_string()),
+            ("unroll-steps".into(), steps.join("/")),
+        ]
+    }
+
+    fn apply(&self, sch: Schedule, block_name: &str, target: &Target) -> RuleOutcome {
+        // No separate applicability gate: the transform itself no-ops on
+        // already-parallel nests (still `Applied` — it records state
+        // queries into the trace), so an Err here is always structural.
+        match attempt(&sch, |s| self.transform(s, block_name, target)) {
+            Ok(out) => RuleOutcome::Applied(vec![out]),
+            Err(e) => RuleOutcome::Fail(sch, e),
         }
     }
 }
@@ -169,7 +184,7 @@ mod tests {
         let t = Target::cpu_avx512();
         let prog = workloads::matmul(1, 256, 256, 256);
         let m = ParallelVectorizeUnroll::new();
-        let out = m.apply(Schedule::new(prog.clone(), 1), "matmul", &t).pop().unwrap();
+        let out = m.apply(Schedule::new(prog.clone(), 1), "matmul", &t).into_variants().pop().unwrap();
         let ks = kinds(&out);
         assert!(ks.contains(&LoopKind::Parallel));
         // Innermost loop of matmul is k (reduction) -> NOT vectorized.
@@ -184,7 +199,7 @@ mod tests {
         let t = Target::cpu_avx512();
         let prog = workloads::add2d(512, 512);
         let m = ParallelVectorizeUnroll::new();
-        let out = m.apply(Schedule::new(prog, 1), "add", &t).pop().unwrap();
+        let out = m.apply(Schedule::new(prog, 1), "add", &t).into_variants().pop().unwrap();
         let ks = kinds(&out);
         assert!(ks.contains(&LoopKind::Parallel));
         assert!(ks.contains(&LoopKind::Vectorized));
@@ -195,7 +210,7 @@ mod tests {
         let t = Target::cpu_avx512();
         let prog = workloads::matmul(1, 64, 64, 64);
         let m = ParallelVectorizeUnroll::new();
-        let out = m.apply(Schedule::new(prog, 9), "matmul", &t).pop().unwrap();
+        let out = m.apply(Schedule::new(prog, 9), "matmul", &t).into_variants().pop().unwrap();
         let has_pragma = out
             .prog
             .preorder()
@@ -221,7 +236,7 @@ mod tests {
         s.parallel(loops[1]).unwrap();
         let n_insts = s.trace.len();
         let m = ParallelVectorizeUnroll::new();
-        let out = m.apply(s, "matmul", &t).pop().unwrap();
+        let out = m.apply(s, "matmul", &t).into_variants().pop().unwrap();
         // Only the (re-recorded) state queries were added, no transforms.
         assert!(out
             .trace

@@ -5,7 +5,7 @@
 
 use crate::schedule::{LoopRef, SchResult, Schedule};
 use crate::sim::Target;
-use crate::space::{try_transform, TransformModule};
+use crate::space::{attempt, RuleOutcome, ScheduleRule};
 use crate::tir::BlockBody;
 
 pub struct RandomComputeLocation;
@@ -51,12 +51,16 @@ impl Default for RandomComputeLocation {
     }
 }
 
-impl TransformModule for RandomComputeLocation {
-    fn name(&self) -> &'static str {
+impl ScheduleRule for RandomComputeLocation {
+    fn name(&self) -> &str {
         "random-compute-location"
     }
 
-    fn apply(&self, sch: Schedule, block_name: &str, _target: &Target) -> Vec<Schedule> {
+    fn describe(&self) -> String {
+        "sample where a movable elementwise block computes (root / fused / inlined)".into()
+    }
+
+    fn apply(&self, sch: Schedule, block_name: &str, _target: &Target) -> RuleOutcome {
         // Only movable elementwise blocks.
         let movable = sch
             .prog
@@ -67,11 +71,11 @@ impl TransformModule for RandomComputeLocation {
             })
             .unwrap_or(false);
         if !movable {
-            return vec![sch];
+            return RuleOutcome::Skip(sch);
         }
-        match try_transform(&sch, |s| self.transform(s, block_name)) {
-            Some(out) => vec![out],
-            None => vec![sch],
+        match attempt(&sch, |s| self.transform(s, block_name)) {
+            Ok(out) => RuleOutcome::Applied(vec![out]),
+            Err(e) => RuleOutcome::Fail(sch, e),
         }
     }
 }
@@ -108,7 +112,7 @@ mod tests {
         let mut root = 0;
         for seed in 0..16 {
             let s = tiled_dense_relu(seed);
-            let out = m.apply(s, "relu", &t).pop().unwrap();
+            let out = m.apply(s, "relu", &t).into_variants().pop().unwrap();
             out.prog.check_integrity().unwrap();
             let relu = out.prog.find_block("relu").unwrap();
             let dense = out.prog.find_block("dense").unwrap();
@@ -133,7 +137,7 @@ mod tests {
         let m = RandomComputeLocation::new();
         let prog = workloads::matmul(1, 32, 32, 32);
         let s = Schedule::new(prog, 0);
-        let out = m.apply(s, "matmul", &t).pop().unwrap();
+        let out = m.apply(s, "matmul", &t).into_variants().pop().unwrap();
         assert!(out.trace.is_empty());
     }
 
@@ -144,7 +148,7 @@ mod tests {
         let m = RandomComputeLocation::new();
         let s = tiled_dense_relu(3);
         let prog0 = workloads::fused_dense(64, 64, 64);
-        let out = m.apply(s, "relu", &t).pop().unwrap();
+        let out = m.apply(s, "relu", &t).into_variants().pop().unwrap();
         let r = replay(&out.trace, &prog0, 0).unwrap();
         assert_eq!(
             crate::tir::structural_hash(&out.prog),

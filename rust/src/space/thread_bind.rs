@@ -6,7 +6,7 @@
 
 use crate::schedule::{LoopRv, SchResult, Schedule};
 use crate::sim::Target;
-use crate::space::{try_transform, TransformModule};
+use crate::space::{attempt, RuleOutcome, ScheduleRule};
 use crate::tir::analysis::{classify_loop, LoopClass};
 use crate::tir::LoopKind;
 use crate::trace::FactorArg;
@@ -61,12 +61,20 @@ impl Default for ThreadBind {
     }
 }
 
-impl TransformModule for ThreadBind {
-    fn name(&self) -> &'static str {
+impl ScheduleRule for ThreadBind {
+    fn name(&self) -> &str {
         "thread-bind"
     }
 
-    fn apply(&self, sch: Schedule, block_name: &str, _target: &Target) -> Vec<Schedule> {
+    fn describe(&self) -> String {
+        "fallback GPU binding: fuse + split leading spatial loops onto the grid".into()
+    }
+
+    fn params(&self) -> Vec<(String, String)> {
+        vec![("max-threads".into(), self.max_threads.to_string())]
+    }
+
+    fn apply(&self, sch: Schedule, block_name: &str, _target: &Target) -> RuleOutcome {
         // Skip blocks that already have any thread binding above them.
         let unbound = sch
             .prog
@@ -78,11 +86,11 @@ impl TransformModule for ThreadBind {
             })
             .unwrap_or(false);
         if !unbound {
-            return vec![sch];
+            return RuleOutcome::Skip(sch);
         }
-        match try_transform(&sch, |s| self.transform(s, block_name)) {
-            Some(out) => vec![out],
-            None => vec![sch],
+        match attempt(&sch, |s| self.transform(s, block_name)) {
+            Ok(out) => RuleOutcome::Applied(vec![out]),
+            Err(e) => RuleOutcome::Fail(sch, e),
         }
     }
 }
@@ -110,7 +118,7 @@ mod tests {
         let t = Target::gpu();
         let m = ThreadBind::new();
         let prog = workloads::relu(1 << 20);
-        let out = m.apply(Schedule::new(prog.clone(), 4), "relu", &t).pop().unwrap();
+        let out = m.apply(Schedule::new(prog.clone(), 4), "relu", &t).into_variants().pop().unwrap();
         let axes = bound_axes(&out);
         assert!(axes.contains(&"blockIdx.x".to_string()));
         // Bound kernel is far faster than the unbound one on the GPU model.
@@ -118,7 +126,7 @@ mod tests {
         let best = (0..8)
             .filter_map(|seed| {
                 let prog = workloads::relu(1 << 20);
-                let o = m.apply(Schedule::new(prog, seed), "relu", &t).pop().unwrap();
+                let o = m.apply(Schedule::new(prog, seed), "relu", &t).into_variants().pop().unwrap();
                 simulate(&o.prog, &t).ok().map(|r| r.total_s)
             })
             .fold(f64::INFINITY, f64::min);
@@ -135,7 +143,7 @@ mod tests {
         let loops = s.get_loops(b).unwrap();
         s.bind(loops[0], "threadIdx.x").unwrap();
         let len = s.trace.len();
-        let out = m.apply(s, "relu", &t).pop().unwrap();
+        let out = m.apply(s, "relu", &t).into_variants().pop().unwrap();
         assert_eq!(out.trace.len(), len); // untouched
     }
 }

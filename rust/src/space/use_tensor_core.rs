@@ -11,7 +11,7 @@
 use crate::schedule::{LoopRv, SchResult, Schedule};
 use crate::schedule::blockize::find_intrin;
 use crate::sim::Target;
-use crate::space::{analysis::is_matmul_like, try_transform, TransformModule};
+use crate::space::{analysis::is_matmul_like, attempt, RuleOutcome, ScheduleRule};
 use crate::tir::analysis::{classify_loop, LoopClass};
 use crate::tir::LoopKind;
 use crate::trace::FactorArg;
@@ -102,12 +102,20 @@ impl UseTensorCore {
     }
 }
 
-impl TransformModule for UseTensorCore {
-    fn name(&self) -> &'static str {
+impl ScheduleRule for UseTensorCore {
+    fn name(&self) -> &str {
         "use-tensor-core"
     }
 
-    fn apply(&self, sch: Schedule, block_name: &str, target: &Target) -> Vec<Schedule> {
+    fn describe(&self) -> String {
+        "map matmul-like blocks onto the tensor intrinsic, forking tensorized + plain".into()
+    }
+
+    fn params(&self) -> Vec<(String, String)> {
+        vec![("intrin".into(), self.intrin.to_string())]
+    }
+
+    fn apply(&self, sch: Schedule, block_name: &str, target: &Target) -> RuleOutcome {
         let supported = target.tensor_intrins.iter().any(|i| *i == self.intrin);
         let applicable = supported
             && sch
@@ -116,14 +124,17 @@ impl TransformModule for UseTensorCore {
                 .map(|b| is_matmul_like(&sch.prog, b))
                 .unwrap_or(false);
         if !applicable {
-            return vec![sch];
+            return RuleOutcome::Skip(sch);
         }
         // Fork the space: tensorized + generic (the paper composes
         // Use-Tensor-Core *with* the generic modules; non-tensorizable
-        // decisions fall back to multi-level tiling).
-        match try_transform(&sch, |s| self.transform(s, block_name)) {
-            Some(out) => vec![out, sch],
-            None => vec![sch],
+        // decisions fall back to multi-level tiling). A shape mismatch
+        // (extents not divisible by the fragment) is an expected fallback,
+        // but still surfaced as Fail so --explain-space can say *why* a
+        // space never tensorized.
+        match attempt(&sch, |s| self.transform(s, block_name)) {
+            Ok(out) => RuleOutcome::Applied(vec![out, sch]),
+            Err(e) => RuleOutcome::Fail(sch, e),
         }
     }
 }
@@ -141,7 +152,7 @@ mod tests {
         let m = UseTensorCore::wmma();
         let prog = workloads::matmul(1, 128, 128, 128);
         let flops = program_flops(&prog);
-        let variants = m.apply(Schedule::new(prog, 6), "matmul", &t);
+        let variants = m.apply(Schedule::new(prog, 6), "matmul", &t).into_variants();
         assert_eq!(variants.len(), 2);
         let tc = &variants[0];
         tc.prog.check_integrity().unwrap();
@@ -161,14 +172,14 @@ mod tests {
         let best_tc = (0..8)
             .filter_map(|seed| {
                 let prog = workloads::matmul(1, 512, 512, 512);
-                let v = m.apply(Schedule::new(prog, seed), "matmul", &t);
+                let v = m.apply(Schedule::new(prog, seed), "matmul", &t).into_variants();
                 simulate(&v[0].prog, &t).ok().map(|r| r.total_s)
             })
             .fold(f64::INFINITY, f64::min);
         let best_plain = (0..8)
             .filter_map(|seed| {
                 let prog = workloads::matmul(1, 512, 512, 512);
-                let v = tb.apply(Schedule::new(prog, seed), "matmul", &t);
+                let v = tb.apply(Schedule::new(prog, seed), "matmul", &t).into_variants();
                 simulate(&v[0].prog, &t).ok().map(|r| r.total_s)
             })
             .fold(f64::INFINITY, f64::min);
@@ -184,7 +195,7 @@ mod tests {
         let m = UseTensorCore::wmma();
         // 100 is not divisible by 16.
         let prog = workloads::matmul(1, 100, 100, 100);
-        let variants = m.apply(Schedule::new(prog, 6), "matmul", &t);
+        let variants = m.apply(Schedule::new(prog, 6), "matmul", &t).into_variants();
         assert_eq!(variants.len(), 1);
         assert!(variants[0].trace.is_empty());
     }
@@ -194,7 +205,7 @@ mod tests {
         let t = Target::cpu_avx512();
         let m = UseTensorCore::wmma();
         let prog = workloads::matmul(1, 128, 128, 128);
-        let variants = m.apply(Schedule::new(prog, 6), "matmul", &t);
+        let variants = m.apply(Schedule::new(prog, 6), "matmul", &t).into_variants();
         assert_eq!(variants.len(), 1);
         assert!(variants[0].trace.is_empty());
     }
@@ -205,7 +216,7 @@ mod tests {
         t.kind = crate::sim::TargetKind::Gpu;
         let m = UseTensorCore::mxu();
         let prog = workloads::matmul(1, 512, 512, 512);
-        let variants = m.apply(Schedule::new(prog, 6), "matmul", &t);
+        let variants = m.apply(Schedule::new(prog, 6), "matmul", &t).into_variants();
         assert_eq!(variants.len(), 2);
         let opaque = variants[0].prog.find_block("matmul_o").unwrap();
         assert_eq!(

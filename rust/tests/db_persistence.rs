@@ -7,10 +7,10 @@
 use std::path::{Path, PathBuf};
 
 use metaschedule::cost_model::GbtCostModel;
+use metaschedule::ctx::TuneContext;
 use metaschedule::db::{pretrain_cost_model, Database, DbStats, JsonFileDb};
 use metaschedule::search::{EvolutionarySearch, SearchConfig, SimMeasurer};
 use metaschedule::sim::Target;
-use metaschedule::space::SpaceComposer;
 use metaschedule::tir::structural_hash;
 use metaschedule::trace::serde::{text_to_trace, trace_to_text};
 use metaschedule::workloads;
@@ -43,11 +43,11 @@ fn quick_cfg(trials: usize) -> SearchConfig {
 fn tune_session(path: &Path, trials: usize, seed: u64) -> metaschedule::search::TuneResult {
     let target = Target::cpu_avx512();
     let prog = workloads::matmul(1, 128, 128, 128);
-    let composer = SpaceComposer::generic(target.clone());
+    let ctx = TuneContext::generic(target.clone());
     let mut db = JsonFileDb::open(path).expect("open db");
     let mut model = GbtCostModel::new();
     let mut measurer = SimMeasurer::new(target);
-    EvolutionarySearch::new(quick_cfg(trials)).tune_db(&prog, &composer, &mut model, &mut measurer, &mut db, seed)
+    EvolutionarySearch::new(quick_cfg(trials)).tune_db(&prog, &ctx, &mut model, &mut measurer, &mut db, seed)
 }
 
 #[test]
@@ -195,11 +195,11 @@ fn distinct_targets_do_not_share_records() {
     let (path, _g) = tmp("targets");
     let prog = workloads::matmul(1, 128, 128, 128);
     let tune_on = |path: &Path, target: Target, seed: u64| {
-        let composer = SpaceComposer::generic(target.clone());
+        let ctx = TuneContext::generic(target.clone());
         let mut db = JsonFileDb::open(path).expect("open db");
         let mut model = GbtCostModel::new();
         let mut measurer = SimMeasurer::new(target);
-        EvolutionarySearch::new(quick_cfg(16)).tune_db(&prog, &composer, &mut model, &mut measurer, &mut db, seed)
+        EvolutionarySearch::new(quick_cfg(16)).tune_db(&prog, &ctx, &mut model, &mut measurer, &mut db, seed)
     };
     let cpu = tune_on(&path, Target::cpu_avx512(), 1);
     // Same program on GPU: the cpu records must not leak into its warm set.

@@ -8,10 +8,10 @@
 //! and repeat-run reproducible.
 
 use metaschedule::cost_model::GbtCostModel;
+use metaschedule::ctx::TuneContext;
 use metaschedule::db::{Database, InMemoryDb};
 use metaschedule::search::{EvolutionarySearch, SearchConfig, SimMeasurer, TaskScheduler};
 use metaschedule::sim::Target;
-use metaschedule::space::SpaceComposer;
 use metaschedule::tir::structural_hash;
 use metaschedule::trace::serde::trace_to_text;
 use metaschedule::workloads;
@@ -31,13 +31,13 @@ fn cfg(trials: usize, threads: usize) -> SearchConfig {
 fn matmul_search_identical_across_thread_counts() {
     let target = Target::cpu_avx512();
     let prog = workloads::matmul(1, 128, 128, 128);
-    let composer = SpaceComposer::generic(target.clone());
+    let ctx = TuneContext::generic(target.clone());
     let run = |threads: usize| {
         let mut model = GbtCostModel::new();
         let mut measurer = SimMeasurer::new(target.clone());
         EvolutionarySearch::new(cfg(48, threads)).tune(
             &prog,
-            &composer,
+            &ctx,
             &mut model,
             &mut measurer,
             42,
@@ -71,13 +71,13 @@ fn gpu_space_identical_across_thread_counts() {
     // the traces, different mutation surface).
     let target = Target::gpu();
     let prog = workloads::matmul(1, 128, 128, 128);
-    let composer = SpaceComposer::generic(target.clone());
+    let ctx = TuneContext::generic(target.clone());
     let run = |threads: usize| {
         let mut model = GbtCostModel::new();
         let mut measurer = SimMeasurer::new(target.clone());
         EvolutionarySearch::new(cfg(32, threads)).tune(
             &prog,
-            &composer,
+            &ctx,
             &mut model,
             &mut measurer,
             7,
@@ -94,7 +94,7 @@ fn task_scheduler_identical_across_thread_counts() {
     // Warmup rounds run task-parallel; merged results must match the
     // serial schedule, per task, including trial accounting.
     let target = Target::cpu_avx512();
-    let composer = SpaceComposer::generic(target.clone());
+    let ctx = TuneContext::generic(target.clone());
     let tasks = vec![
         metaschedule::search::Task {
             name: "gmm".into(),
@@ -110,7 +110,7 @@ fn task_scheduler_identical_across_thread_counts() {
     let run = |threads: usize| {
         let mut measurer = SimMeasurer::new(target.clone());
         let ts = TaskScheduler::new(cfg(0, threads));
-        ts.tune_tasks(&tasks, &composer, &mut measurer, 64, 11)
+        ts.tune_tasks(&tasks, &ctx, &mut measurer, 64, 11)
     };
     let serial = run(1);
     let parallel = run(4);
@@ -132,11 +132,11 @@ fn warm_start_deterministic_across_thread_counts() {
     // thread counts and across repeat runs from the same starting DB.
     let target = Target::cpu_avx512();
     let prog = workloads::matmul(1, 128, 128, 128);
-    let composer = SpaceComposer::generic(target.clone());
+    let ctx = TuneContext::generic(target.clone());
     let run = |db: &mut dyn Database, threads: usize| {
         let mut model = GbtCostModel::new();
         let mut measurer = SimMeasurer::new(target.clone());
-        EvolutionarySearch::new(cfg(32, threads)).tune_db(&prog, &composer, &mut model, &mut measurer, db, 13)
+        EvolutionarySearch::new(cfg(32, threads)).tune_db(&prog, &ctx, &mut model, &mut measurer, db, 13)
     };
     // Cold phase, serial vs parallel: identical results AND identical
     // database contents (records are committed in fold order).
@@ -181,7 +181,7 @@ fn task_scheduler_with_shared_db_identical_across_thread_counts() {
     // per-task results must still match the serial schedule for a fixed
     // starting database — cold and warm.
     let target = Target::cpu_avx512();
-    let composer = SpaceComposer::generic(target.clone());
+    let ctx = TuneContext::generic(target.clone());
     let tasks = vec![
         metaschedule::search::Task {
             name: "gmm".into(),
@@ -197,7 +197,7 @@ fn task_scheduler_with_shared_db_identical_across_thread_counts() {
     let run = |db: &mut dyn Database, threads: usize| {
         let mut measurer = SimMeasurer::new(target.clone());
         let ts = TaskScheduler::new(cfg(0, threads));
-        ts.tune_tasks_with_db(&tasks, &composer, &mut measurer, db, 64, 17)
+        ts.tune_tasks_with_db(&tasks, &ctx, &mut measurer, db, 64, 17)
     };
     let mut cold = InMemoryDb::new();
     let serial = run(&mut cold.clone(), 1);
@@ -224,11 +224,11 @@ fn repeated_runs_are_reproducible() {
     // hidden global state, no time dependence).
     let target = Target::cpu_avx512();
     let prog = workloads::fused_dense(64, 128, 64);
-    let composer = SpaceComposer::generic(target.clone());
+    let ctx = TuneContext::generic(target.clone());
     let run = || {
         let mut model = GbtCostModel::new();
         let mut measurer = SimMeasurer::new(target.clone());
-        EvolutionarySearch::new(cfg(32, 4)).tune(&prog, &composer, &mut model, &mut measurer, 5)
+        EvolutionarySearch::new(cfg(32, 4)).tune(&prog, &ctx, &mut model, &mut measurer, 5)
     };
     let a = run();
     let b = run();

@@ -5,13 +5,13 @@
 
 use metaschedule::baselines::{Ansor, AutoTvm};
 use metaschedule::cost_model::GbtCostModel;
+use metaschedule::ctx::TuneContext;
 use metaschedule::exp::Report;
 use metaschedule::graph::{self, extract_tasks};
 use metaschedule::search::{
     EvolutionarySearch, Measurer, SearchConfig, SimMeasurer, TaskScheduler,
 };
 use metaschedule::sim::{simulate, Target};
-use metaschedule::space::SpaceComposer;
 use metaschedule::tir::{structural_hash, Program};
 use metaschedule::trace::replay;
 use metaschedule::trace::serde::{text_to_trace, trace_to_text};
@@ -31,7 +31,7 @@ fn quick_cfg(trials: usize) -> SearchConfig {
 fn full_pipeline_all_suite_workloads_cpu() {
     // Every A.2 workload must tune end-to-end and improve over naive.
     let target = Target::cpu_avx512();
-    let composer = SpaceComposer::generic(target.clone());
+    let ctx = TuneContext::generic(target.clone());
     for w in workloads::suite() {
         let prog = (w.build)();
         let naive = simulate(&prog, &target).unwrap().total_s;
@@ -39,7 +39,7 @@ fn full_pipeline_all_suite_workloads_cpu() {
         let mut measurer = SimMeasurer::new(target.clone());
         let r = EvolutionarySearch::new(quick_cfg(24)).tune(
             &prog,
-            &composer,
+            &ctx,
             &mut model,
             &mut measurer,
             9,
@@ -57,7 +57,7 @@ fn full_pipeline_all_suite_workloads_cpu() {
 #[test]
 fn full_pipeline_gpu_suite_subset() {
     let target = Target::gpu();
-    let composer = SpaceComposer::generic(target.clone());
+    let ctx = TuneContext::generic(target.clone());
     for name in ["GMM", "C2D", "SFM", "TBG"] {
         let w = workloads::by_name(name).unwrap();
         let prog = (w.build)();
@@ -66,7 +66,7 @@ fn full_pipeline_gpu_suite_subset() {
         let mut measurer = SimMeasurer::new(target.clone());
         let r = EvolutionarySearch::new(quick_cfg(24)).tune(
             &prog,
-            &composer,
+            &ctx,
             &mut model,
             &mut measurer,
             11,
@@ -84,13 +84,13 @@ fn best_trace_serializes_and_replays_everywhere() {
     // Search result traces must round-trip through the text format and
     // replay to the identical program — the artifact a user would save.
     let target = Target::cpu_avx512();
-    let composer = SpaceComposer::generic(target.clone());
+    let ctx = TuneContext::generic(target.clone());
     let prog = workloads::fused_dense(64, 256, 128);
     let mut model = GbtCostModel::new();
     let mut measurer = SimMeasurer::new(target.clone());
     let r = EvolutionarySearch::new(quick_cfg(16)).tune(
         &prog,
-        &composer,
+        &ctx,
         &mut model,
         &mut measurer,
         3,
@@ -125,13 +125,13 @@ fn all_rejected_measurements_fail_cleanly() {
     // Failure injection: if the hardware rejects everything the search
     // must terminate with a clear panic, not loop forever.
     let target = Target::cpu_avx512();
-    let composer = SpaceComposer::generic(target.clone());
+    let ctx = TuneContext::generic(target.clone());
     let prog = workloads::matmul(1, 64, 64, 64);
     let mut model = GbtCostModel::new();
     let mut measurer = RejectingMeasurer(0);
     let _ = EvolutionarySearch::new(quick_cfg(16)).tune(
         &prog,
-        &composer,
+        &ctx,
         &mut model,
         &mut measurer,
         1,
@@ -155,7 +155,7 @@ fn baselines_and_metaschedule_rank_sanely_on_gmm() {
     let ansor = Ansor { num_trials: trials, threads: 0 }
         .tune(&prog, &target, &mut m, 1)
         .best_latency_s;
-    let composer = SpaceComposer::generic(target.clone());
+    let ctx = TuneContext::generic(target.clone());
     // Same search hyperparameters as the Ansor baseline, so the comparison
     // isolates search-space construction; best-of-3 seeds damps the noise
     // of this deliberately tiny trial budget.
@@ -167,7 +167,7 @@ fn baselines_and_metaschedule_rank_sanely_on_gmm() {
                 num_trials: trials,
                 ..SearchConfig::default()
             })
-            .tune(&prog, &composer, &mut model, &mut m, seed)
+            .tune(&prog, &ctx, &mut model, &mut m, seed)
             .best_latency_s
         })
         .fold(f64::INFINITY, f64::min);
@@ -186,10 +186,10 @@ fn bert_base_task_scheduler_end_to_end() {
     let ops = graph::by_name("bert-base").unwrap();
     let tasks = extract_tasks(&ops);
     assert_eq!(tasks.len(), 8);
-    let composer = SpaceComposer::generic(target.clone());
+    let ctx = TuneContext::generic(target.clone());
     let mut measurer = SimMeasurer::new(target.clone());
     let ts = TaskScheduler::new(quick_cfg(16));
-    let results = ts.tune_tasks(&tasks, &composer, &mut measurer, 16 * tasks.len(), 5);
+    let results = ts.tune_tasks(&tasks, &ctx, &mut measurer, 16 * tasks.len(), 5);
     let e2e = TaskScheduler::e2e_latency(&tasks, &results);
     let naive: f64 = tasks
         .iter()

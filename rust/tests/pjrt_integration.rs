@@ -3,12 +3,12 @@
 //! note) when the artifacts are absent so `cargo test` works standalone.
 
 use metaschedule::cost_model::GbtCostModel;
+use metaschedule::ctx::TuneContext;
 use metaschedule::runtime::{
     scan_variants, PallasTileModule, PjrtGmmMeasurer, PjrtRunner, TileVariant,
 };
 use metaschedule::search::{EvolutionarySearch, Measurer, SearchConfig};
 use metaschedule::sim::Target;
-use metaschedule::space::SpaceComposer;
 use metaschedule::workloads;
 
 fn artifacts_dir() -> Option<std::path::PathBuf> {
@@ -66,7 +66,7 @@ fn search_over_real_pjrt_measurements() {
     let Some(dir) = artifacts_dir() else { return };
     let mut measurer = PjrtGmmMeasurer::new(dir, 128, 128, 128).unwrap();
     let prog = workloads::matmul(1, 128, 128, 128);
-    let composer = SpaceComposer::new(
+    let ctx = TuneContext::from_rules(
         vec![Box::new(PallasTileModule::new())],
         Target::cpu_avx512(),
     );
@@ -78,7 +78,7 @@ fn search_over_real_pjrt_measurements() {
         ..SearchConfig::default()
     };
     let mut model = GbtCostModel::new();
-    let r = EvolutionarySearch::new(cfg).tune(&prog, &composer, &mut model, &mut measurer, 7);
+    let r = EvolutionarySearch::new(cfg).tune(&prog, &ctx, &mut model, &mut measurer, 7);
     assert!(r.best_latency_s > 0.0 && r.best_latency_s < 1.0);
     assert!(measurer.count() > 0);
     // The chosen schedule's tile parses back out.

@@ -5,11 +5,11 @@
 //! and the simulator must be deterministic and monotone where physics
 //! says so.
 
+use metaschedule::ctx::TuneContext;
 use metaschedule::db::{compact_file, CompactionPolicy, Database, JsonFileDb, TuningRecord};
 use metaschedule::schedule::Schedule;
 use metaschedule::search::mutate;
 use metaschedule::sim::{simulate, Target};
-use metaschedule::space::SpaceComposer;
 use metaschedule::tir::analysis::program_flops;
 use metaschedule::tir::structural_hash;
 use metaschedule::trace::replay;
@@ -94,8 +94,8 @@ fn prop_traces_replay_deterministically() {
         |rng| rng.next_u64(),
         |&seed| {
             let prog = workloads::fused_dense(64, 128, 64);
-            let composer = SpaceComposer::generic(Target::cpu_avx512());
-            let designs = composer.generate(&prog, seed);
+            let ctx = TuneContext::generic(Target::cpu_avx512());
+            let designs = ctx.generate(&prog, seed);
             designs.iter().all(|d| {
                 let a = replay(&d.trace, &prog, 1).unwrap();
                 let b = replay(&d.trace, &prog, 2).unwrap();
@@ -116,8 +116,8 @@ fn prop_fresh_samples_stay_on_support() {
         |&seed| {
             let prog = workloads::matmul(1, 64, 64, 64);
             let flops = program_flops(&prog);
-            let composer = SpaceComposer::generic(Target::cpu_avx512());
-            let designs = composer.generate(&prog, 1);
+            let ctx = TuneContext::generic(Target::cpu_avx512());
+            let designs = ctx.generate(&prog, 1);
             designs.iter().all(|d| match replay_fresh(&d.trace, &prog, seed) {
                 Ok(s) => {
                     s.prog.check_integrity().is_ok()
@@ -137,8 +137,8 @@ fn prop_mutations_preserve_semantics() {
         |&seed| {
             let prog = workloads::fused_dense(64, 128, 64);
             let flops = program_flops(&prog);
-            let composer = SpaceComposer::generic(Target::cpu_avx512());
-            let designs = composer.generate(&prog, 3);
+            let ctx = TuneContext::generic(Target::cpu_avx512());
+            let designs = ctx.generate(&prog, 3);
             let mut rng = Rng::seed_from_u64(seed);
             designs.iter().all(|d| {
                 for _ in 0..4 {
@@ -214,8 +214,8 @@ fn prop_scheduled_programs_compute_identical_values() {
         |rng| rng.next_u64(),
         |&seed| {
             let prog = workloads::fused_dense(8, 16, 8);
-            let composer = SpaceComposer::generic(Target::cpu_avx512());
-            let designs = composer.generate(&prog, seed);
+            let ctx = TuneContext::generic(Target::cpu_avx512());
+            let designs = ctx.generate(&prog, seed);
             let mut rng = Rng::seed_from_u64(seed ^ 0xabcd);
             for d in &designs {
                 match semantic_distance(&prog, &d.prog, seed) {
@@ -397,6 +397,8 @@ fn check_compaction_case(n_workloads: usize, recs: &[RandRecord], top_k: usize) 
             seed: 1,
             round: i as u64,
             cand_hash: *cand,
+            sim_version: "simtest".into(),
+            rule_set: String::new(),
         });
     }
     // Reference answers from the uncompacted database.

@@ -9,11 +9,11 @@ use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
 use metaschedule::cost_model::GbtCostModel;
+use metaschedule::ctx::TuneContext;
 use metaschedule::db::{AutoGc, CompactionPolicy, Database, JsonFileDb, TuningRecord};
 use metaschedule::search::{EvolutionarySearch, SearchConfig, SimMeasurer};
-use metaschedule::serve::{serve_batch, ServeConfig, ServingCache, SnapshotSlot};
+use metaschedule::serve::{serve_batch, serve_watch, DbWatcher, ServeConfig, ServingCache, SnapshotSlot};
 use metaschedule::sim::Target;
-use metaschedule::space::SpaceComposer;
 use metaschedule::tir::structural_hash;
 use metaschedule::trace::{Inst, Trace};
 use metaschedule::workloads;
@@ -48,14 +48,14 @@ fn tune_gmm(path: &Path, trials: usize, seed: u64, auto_gc: Option<AutoGc>) -> (
     let target = Target::cpu_avx512();
     let w = workloads::by_name("GMM").unwrap();
     let prog = (w.build)();
-    let composer = SpaceComposer::generic(target.clone());
+    let ctx = TuneContext::generic(target.clone());
     let mut db = JsonFileDb::open(path).expect("open db");
     db.set_auto_gc(auto_gc);
     db.register_workload(w.name, structural_hash(&prog), target.name);
     let mut model = GbtCostModel::new();
     let mut measurer = SimMeasurer::new(target);
     let r = EvolutionarySearch::new(quick_cfg(trials))
-        .tune_db(&prog, &composer, &mut model, &mut measurer, &mut db, seed);
+        .tune_db(&prog, &ctx, &mut model, &mut measurer, &mut db, seed);
     (r.best_latency_s, r.warm_records)
 }
 
@@ -131,6 +131,72 @@ fn tuning_with_auto_gc_stays_resumable() {
     );
 }
 
+#[test]
+fn watcher_fires_on_append_and_watch_mode_reserves() {
+    let (path, _g) = tmp("watch");
+    let (first_best, _) = tune_gmm(&path, 16, 3, None);
+
+    // The watcher itself: quiet file -> no change; any append -> change.
+    let mut watcher = DbWatcher::new(&path);
+    assert!(!watcher.changed(), "no write, no change signal");
+    let target = Target::cpu_avx512();
+    let names = vec!["GMM".to_string()];
+
+    // Watch mode end-to-end: a concurrent tuning session appends to the
+    // file; serve_watch must notice, reload the snapshot, and re-serve.
+    // The writer synchronizes on the initial-serve flag rather than a
+    // sleep: serve_watch baselines its watcher BEFORE the round-0 serve,
+    // so an append that happens after round 0 is guaranteed to be a
+    // change the watcher sees — no lost race, no hang, on any scheduler.
+    let rounds = std::sync::Mutex::new(Vec::new());
+    let served_round0 = std::sync::atomic::AtomicBool::new(false);
+    std::thread::scope(|s| {
+        let path2 = path.clone();
+        let served_round0 = &served_round0;
+        s.spawn(move || {
+            while !served_round0.load(std::sync::atomic::Ordering::Acquire) {
+                std::thread::yield_now();
+            }
+            // A concurrent writer appends to the file — here a workload
+            // registration for another target (one guaranteed line, no
+            // effect on the cpu serving answer), which is exactly the
+            // signature change a tuner's commits would produce.
+            let prog = (workloads::by_name("GMM").unwrap().build)();
+            let mut db = JsonFileDb::open(&path2).unwrap();
+            db.register_workload("GMM", structural_hash(&prog), "gpu");
+            assert_eq!(db.commit_counter(), 1, "exactly one line appended");
+        });
+        let refreshes = serve_watch(
+            &names,
+            &target,
+            path.to_str().unwrap(),
+            8,
+            10,
+            Some(1),
+            &mut |round, outcomes| {
+                assert_eq!(outcomes.len(), 1);
+                rounds.lock().unwrap().push((round, outcomes[0].hit, outcomes[0].latency_s));
+                if round == 0 {
+                    served_round0.store(true, std::sync::atomic::Ordering::Release);
+                }
+            },
+        )
+        .expect("watch serve");
+        assert_eq!(refreshes, 1);
+    });
+    let observed = rounds.into_inner().unwrap();
+    assert_eq!(observed.len(), 2, "initial serve + one refresh");
+    assert_eq!(observed[0].0, 0);
+    assert_eq!(observed[1].0, 1);
+    assert!(observed[0].1 && observed[1].1, "both serves must hit");
+    assert_eq!(observed[0].2, Some(first_best));
+    // The refreshed snapshot's best can only match or improve (min over a
+    // superset of records).
+    assert!(observed[1].2.unwrap() <= first_best);
+    // And the watcher saw the append too.
+    assert!(watcher.changed(), "appends must flip the signature");
+}
+
 /// Synthetic record for the concurrency test (distinct cand hashes keep
 /// the dedup index honest).
 fn rec(workload: usize, cand: u64, lat: f64) -> TuningRecord {
@@ -144,6 +210,8 @@ fn rec(workload: usize, cand: u64, lat: f64) -> TuningRecord {
         seed: 0,
         round: cand,
         cand_hash: cand,
+        sim_version: "simtest".into(),
+        rule_set: String::new(),
     }
 }
 

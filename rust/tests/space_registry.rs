@@ -1,0 +1,260 @@
+//! Registry-equivalence suite: the `TuneContext` redesign must be a pure
+//! refactor of the default behaviour.
+//!
+//! 1. The registry-built default rule set reproduces the old hardcoded
+//!    `SpaceComposer::generic` design space *trace for trace* on every
+//!    workload x target in the suite (the legacy composition is
+//!    reconstructed here from concrete rule types via the public
+//!    `SpaceGenerator::new`).
+//! 2. A custom rule registered purely through the public API
+//!    (`RegistrySet` + `TuneContext::from_specs_in`) grows the space,
+//!    tunes deterministically, and shows up in `--explain-space` output
+//!    and tuned-record provenance.
+
+use metaschedule::cost_model::GbtCostModel;
+use metaschedule::ctx::{RegistrySet, TuneContext};
+use metaschedule::db::{Database, InMemoryDb};
+use metaschedule::schedule::Schedule;
+use metaschedule::search::{EvolutionarySearch, SearchConfig, SimMeasurer};
+use metaschedule::sim::{Target, TargetKind};
+use metaschedule::space::{
+    attempt, AddRfactor, AutoInline, CrossThreadReduction, MultiLevelTiling,
+    ParallelVectorizeUnroll, RandomComputeLocation, RuleOutcome, ScheduleRule, SpaceGenerator,
+    ThreadBind, UseTensorCore,
+};
+use metaschedule::tir::structural_hash;
+use metaschedule::trace::serde::trace_to_text;
+use metaschedule::workloads;
+
+/// The pre-registry hardcoded composition (the old
+/// `SpaceComposer::generic` match arms), rebuilt from concrete types.
+fn legacy_generic_rules(target: &Target) -> Vec<Box<dyn ScheduleRule>> {
+    match target.kind {
+        TargetKind::Cpu => vec![
+            Box::new(AutoInline::new()),
+            Box::new(MultiLevelTiling::cpu()),
+            Box::new(AddRfactor::new()),
+            Box::new(RandomComputeLocation::new()),
+            Box::new(ParallelVectorizeUnroll::new()),
+        ],
+        TargetKind::Gpu => vec![
+            Box::new(AutoInline::new()),
+            Box::new(MultiLevelTiling::gpu()),
+            Box::new(CrossThreadReduction::new()),
+            Box::new(RandomComputeLocation::new()),
+            Box::new(ThreadBind::new()),
+        ],
+    }
+}
+
+/// Assert two generated spaces are identical trace-for-trace (and
+/// program-for-program).
+fn assert_spaces_identical(a: &[Schedule], b: &[Schedule], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: space sizes differ");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(
+            trace_to_text(&x.trace),
+            trace_to_text(&y.trace),
+            "{what}: trace {i} differs"
+        );
+        assert_eq!(
+            structural_hash(&x.prog),
+            structural_hash(&y.prog),
+            "{what}: program {i} differs"
+        );
+    }
+}
+
+#[test]
+fn default_rule_set_reproduces_legacy_space_on_every_suite_workload() {
+    for target in [Target::cpu_avx512(), Target::gpu()] {
+        let registry_ctx = TuneContext::generic(target.clone());
+        let legacy = SpaceGenerator::new(legacy_generic_rules(&target), target.clone());
+        for w in workloads::suite() {
+            let prog = (w.build)();
+            let new_space = registry_ctx.generate(&prog, 42);
+            let old_space = legacy.generate(&prog, 42);
+            assert!(!new_space.is_empty(), "{}: empty space", w.name);
+            assert_spaces_identical(
+                &new_space,
+                &old_space,
+                &format!("{} on {}", w.name, target.name),
+            );
+        }
+        // The multi-block fusion workload exercises inlining variants;
+        // check a second seed there too.
+        let fused = workloads::fused_dense(64, 128, 64);
+        for seed in [7, 42] {
+            assert_spaces_identical(
+                &registry_ctx.generate(&fused, seed),
+                &legacy.generate(&fused, seed),
+                &format!("fused-dense seed {seed} on {}", target.name),
+            );
+        }
+    }
+}
+
+#[test]
+fn default_tc_rule_set_reproduces_legacy_tensor_core_insertion() {
+    // The old `with_tensor_core` inserted UseTensorCore at index 1.
+    let target = Target::gpu();
+    let mut rules = legacy_generic_rules(&target);
+    rules.insert(1, Box::new(UseTensorCore::wmma()));
+    let legacy = SpaceGenerator::new(rules, target.clone());
+    let registry_ctx = TuneContext::with_tensor_core(target);
+    for prog in [workloads::matmul(1, 128, 128, 128), workloads::fused_dense(64, 128, 64)] {
+        assert_spaces_identical(
+            &registry_ctx.generate(&prog, 11),
+            &legacy.generate(&prog, 11),
+            &prog.name,
+        );
+    }
+}
+
+/// A toy expert rule defined *outside* the crate: unroll the innermost
+/// loop of reduction blocks, forking unrolled + original. Deterministic
+/// (no sampling), so it keeps the search's reproducibility contract.
+struct ToyUnroll;
+
+impl ScheduleRule for ToyUnroll {
+    fn name(&self) -> &str {
+        "toy-unroll"
+    }
+
+    fn describe(&self) -> String {
+        "test rule: fork an unrolled-innermost variant of reduction blocks".into()
+    }
+
+    fn apply(&self, sch: Schedule, block_name: &str, _target: &Target) -> RuleOutcome {
+        let is_red = sch
+            .prog
+            .find_block(block_name)
+            .map(|b| sch.prog.block_data(b).is_reduction())
+            .unwrap_or(false);
+        if !is_red {
+            return RuleOutcome::Skip(sch);
+        }
+        match attempt(&sch, |s| {
+            let b = s.get_block(block_name)?;
+            let loops = s.get_loops(b)?;
+            let last =
+                *loops.last().ok_or(metaschedule::schedule::ScheduleError::Unsupported("no loops".into()))?;
+            s.unroll(last)
+        }) {
+            Ok(out) => RuleOutcome::Applied(vec![out, sch]),
+            Err(e) => RuleOutcome::Fail(sch, e),
+        }
+    }
+}
+
+#[test]
+fn custom_rule_registers_grows_the_space_and_tunes_deterministically() {
+    let target = Target::cpu_avx512();
+    let prog = workloads::matmul(1, 64, 64, 64);
+
+    // Register purely through the public API and address it from a spec.
+    let mut reg = RegistrySet::builtin();
+    reg.rules.register("toy-unroll", |_| Box::new(ToyUnroll) as Box<dyn ScheduleRule>);
+    let ctx = TuneContext::from_specs_in(
+        &reg,
+        target.clone(),
+        "toy-unroll,default",
+        "default",
+        "default",
+    )
+    .expect("custom rule must resolve by name");
+
+    // Provenance label carries the custom rule.
+    assert!(ctx.rule_set().starts_with("toy-unroll,auto-inline"), "{}", ctx.rule_set());
+
+    // The space strictly grows vs the generic context (the toy rule
+    // forks on the reduction block).
+    let generic = TuneContext::generic(target.clone());
+    let custom_space = ctx.generate(&prog, 5);
+    let generic_space = generic.generate(&prog, 5);
+    assert!(
+        custom_space.len() > generic_space.len(),
+        "custom rule did not grow the space: {} vs {}",
+        custom_space.len(),
+        generic_space.len()
+    );
+
+    // Tuning over the extended space stays deterministic: same seed,
+    // same database state => byte-identical results, and every record's
+    // provenance names the custom rule.
+    let cfg = SearchConfig {
+        population: 24,
+        generations: 3,
+        num_trials: 24,
+        measure_batch: 8,
+        ..SearchConfig::default()
+    };
+    let run = || {
+        let mut db = InMemoryDb::new();
+        let mut model = GbtCostModel::new();
+        let mut measurer = SimMeasurer::new(target.clone());
+        let r = EvolutionarySearch::new(cfg.clone())
+            .tune_db(&prog, &ctx, &mut model, &mut measurer, &mut db, 13);
+        let rule_sets: Vec<String> =
+            db.records_for(0).iter().map(|rec| rec.rule_set.clone()).collect();
+        (r, rule_sets)
+    };
+    let (a, rules_a) = run();
+    let (b, rules_b) = run();
+    assert_eq!(a.best_latency_s, b.best_latency_s);
+    assert_eq!(a.curve, b.curve);
+    assert_eq!(trace_to_text(&a.best_trace), trace_to_text(&b.best_trace));
+    assert!(!rules_a.is_empty());
+    assert_eq!(rules_a, rules_b);
+    for rs in &rules_a {
+        assert!(rs.contains("toy-unroll"), "record provenance lost the custom rule: {rs}");
+    }
+
+    // And --explain-space surfaces the rule with its counters.
+    let explain = ctx.explain();
+    assert!(explain.contains("rule toy-unroll:"), "{explain}");
+    assert!(explain.contains("applied"), "{explain}");
+}
+
+#[test]
+fn explain_space_surfaces_structural_failures() {
+    // A rule that claims applicability but always errors must be
+    // distinguishable from "not applicable" — the bugfix for the old
+    // try_transform error swallowing.
+    struct AlwaysFails;
+    impl ScheduleRule for AlwaysFails {
+        fn name(&self) -> &str {
+            "always-fails"
+        }
+        fn apply(&self, sch: Schedule, _block: &str, _t: &Target) -> RuleOutcome {
+            RuleOutcome::Fail(
+                sch,
+                metaschedule::schedule::ScheduleError::Unsupported("deliberate test failure".into()),
+            )
+        }
+    }
+    let mut reg = RegistrySet::builtin();
+    reg.rules.register("always-fails", |_| Box::new(AlwaysFails) as Box<dyn ScheduleRule>);
+    let ctx = TuneContext::from_specs_in(
+        &reg,
+        Target::cpu_avx512(),
+        "always-fails,default",
+        "default",
+        "default",
+    )
+    .unwrap();
+    let prog = workloads::matmul(1, 32, 32, 32);
+    let space = ctx.generate(&prog, 1);
+    assert!(!space.is_empty(), "failing rule must pass states through");
+    let diag = ctx
+        .space()
+        .diag()
+        .iter()
+        .find(|d| d.name() == "always-fails")
+        .expect("diag entry");
+    assert!(diag.failed() > 0);
+    assert_eq!(diag.applied(), 0);
+    assert!(diag.errors().iter().any(|e| e.contains("deliberate test failure")));
+    let explain = ctx.explain();
+    assert!(explain.contains("error: unsupported: deliberate test failure"), "{explain}");
+}
