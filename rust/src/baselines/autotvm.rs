@@ -251,6 +251,8 @@ impl AutoTvm {
             trials,
             curve,
             warm_records: 0,
+            transferred_records: 0,
+            stale_skipped: 0,
         }
     }
 }

@@ -43,6 +43,92 @@ impl Tree {
         Tree { nodes }
     }
 
+    /// Weighted-sample variant of [`Tree::fit`] (cross-target transfer
+    /// priors fit with a mismatch discount `w < 1`). Kept as a separate
+    /// code path so the uniform-weight fit stays bit-identical to the
+    /// historical one — determinism suites pin its exact float sequence.
+    fn fit_w(xs: &[Vec<f64>], ys: &[f64], ws: &[f64], idx: &[usize], depth: usize, min_leaf: usize) -> Tree {
+        let mut nodes = Vec::new();
+        Self::fit_node_w(xs, ys, ws, idx, depth, min_leaf, &mut nodes);
+        Tree { nodes }
+    }
+
+    /// Weighted greedy split search: weighted mean leaves, weighted SSE
+    /// `Σw·y² − (Σw·y)²/Σw` via prefix sums over the per-feature sorted
+    /// scan; `min_leaf` still counts *samples* (a heavily-discounted leaf
+    /// is still a leaf of real observations).
+    fn fit_node_w(
+        xs: &[Vec<f64>],
+        ys: &[f64],
+        ws: &[f64],
+        idx: &[usize],
+        depth: usize,
+        min_leaf: usize,
+        nodes: &mut Vec<Node>,
+    ) -> usize {
+        let n = idx.len();
+        let total_w: f64 = idx.iter().map(|&i| ws[i]).sum();
+        let total_wy: f64 = idx.iter().map(|&i| ws[i] * ys[i]).sum();
+        let mean = if total_w > 0.0 { total_wy / total_w } else { 0.0 };
+        if depth == 0 || n < 2 * min_leaf || total_w <= 0.0 {
+            nodes.push(Node::Leaf { value: mean });
+            return nodes.len() - 1;
+        }
+        let n_feat = xs[0].len();
+        let total_wy2: f64 = idx.iter().map(|&i| ws[i] * ys[i] * ys[i]).sum();
+        let base_sse = total_wy2 - total_wy * total_wy / total_w;
+        let mut best: Option<(usize, f64, f64)> = None; // (feature, threshold, sse)
+        let mut triples: Vec<(f64, f64, f64)> = Vec::with_capacity(n); // (x, y, w)
+        for f in 0..n_feat {
+            triples.clear();
+            triples.extend(idx.iter().map(|&i| (xs[i][f], ys[i], ws[i])));
+            triples.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            if triples[0].0 == triples[n - 1].0 {
+                continue; // constant feature
+            }
+            let mut lw = 0.0f64;
+            let mut lwy = 0.0f64;
+            let mut lwy2 = 0.0f64;
+            for (k, &(v, y, w)) in triples.iter().enumerate().take(n - 1) {
+                lw += w;
+                lwy += w * y;
+                lwy2 += w * y * y;
+                // Only cut between distinct values; respect min_leaf.
+                let nl = k + 1;
+                let nr = n - nl;
+                if v == triples[k + 1].0 || nl < min_leaf || nr < min_leaf {
+                    continue;
+                }
+                let rw = total_w - lw;
+                if lw <= 0.0 || rw <= 0.0 {
+                    continue; // a side of all-zero weight fits nothing
+                }
+                let rwy = total_wy - lwy;
+                let rwy2 = total_wy2 - lwy2;
+                let sse = (lwy2 - lwy * lwy / lw) + (rwy2 - rwy * rwy / rw);
+                if sse < base_sse - 1e-12 && best.map(|(_, _, b)| sse < b).unwrap_or(true) {
+                    best = Some((f, 0.5 * (v + triples[k + 1].0), sse));
+                }
+            }
+        }
+        match best {
+            None => {
+                nodes.push(Node::Leaf { value: mean });
+                nodes.len() - 1
+            }
+            Some((f, thr, _)) => {
+                let (li, ri): (Vec<usize>, Vec<usize>) =
+                    idx.iter().partition(|&&i| xs[i][f] <= thr);
+                let me = nodes.len();
+                nodes.push(Node::Leaf { value: mean }); // placeholder
+                let left = Self::fit_node_w(xs, ys, ws, &li, depth - 1, min_leaf, nodes);
+                let right = Self::fit_node_w(xs, ys, ws, &ri, depth - 1, min_leaf, nodes);
+                nodes[me] = Node::Split { feature: f, threshold: thr, left, right };
+                me
+            }
+        }
+    }
+
     fn fit_node(
         xs: &[Vec<f64>],
         ys: &[f64],
@@ -162,6 +248,36 @@ impl Gbt {
         }
     }
 
+    /// Fit with per-sample weights (the cross-target transfer discount).
+    /// Uniform all-1 weights delegate to the plain [`Gbt::fit`] so the
+    /// native path's float sequence is untouched; any other weighting
+    /// runs the weighted tree fit, where a sample's pull on leaf means
+    /// and split scores scales with its weight.
+    pub fn fit_weighted(&mut self, xs: &[Vec<f64>], ys: &[f64], ws: &[f64]) {
+        assert_eq!(xs.len(), ys.len());
+        assert_eq!(xs.len(), ws.len());
+        if ws.iter().all(|&w| w == 1.0) {
+            return self.fit(xs, ys);
+        }
+        self.trees.clear();
+        let total_w: f64 = ws.iter().sum();
+        if xs.is_empty() || total_w <= 0.0 {
+            self.base = 0.0;
+            return;
+        }
+        self.base = ys.iter().zip(ws).map(|(y, w)| y * w).sum::<f64>() / total_w;
+        let idx: Vec<usize> = (0..xs.len()).collect();
+        let mut pred: Vec<f64> = vec![self.base; xs.len()];
+        for _ in 0..self.n_trees {
+            let resid: Vec<f64> = ys.iter().zip(&pred).map(|(y, p)| y - p).collect();
+            let tree = Tree::fit_w(xs, &resid, ws, &idx, self.depth, self.min_leaf);
+            for (p, x) in pred.iter_mut().zip(xs.iter()) {
+                *p += self.learning_rate * tree.predict(x);
+            }
+            self.trees.push(tree);
+        }
+    }
+
     pub fn predict_one(&self, x: &[f64]) -> f64 {
         self.base
             + self
@@ -241,6 +357,60 @@ mod tests {
         }
         let tau = conc as f64 / total as f64;
         assert!(tau > 0.8, "concordance {tau}");
+    }
+
+    #[test]
+    fn weighted_fit_with_uniform_weights_matches_plain_fit() {
+        let (xs, ys) = synth(200, 7);
+        let mut a = Gbt::new(30, 4, 0.2);
+        a.fit(&xs, &ys);
+        let mut b = Gbt::new(30, 4, 0.2);
+        b.fit_weighted(&xs, &ys, &vec![1.0; ys.len()]);
+        let (xt, _) = synth(40, 8);
+        for x in &xt {
+            assert_eq!(a.predict_one(x), b.predict_one(x), "uniform weights must be the identity");
+        }
+    }
+
+    #[test]
+    fn discounted_samples_pull_less_than_native_ones() {
+        // Two populations disagree about y at the same x-region; the fit
+        // must land nearer whichever carries more weight.
+        let xs: Vec<Vec<f64>> = (0..40).map(|i| vec![(i % 4) as f64]).collect();
+        let native: Vec<f64> = xs.iter().map(|_| 10.0).collect();
+        let prior: Vec<f64> = xs.iter().map(|_| 0.0).collect();
+        let all_x: Vec<Vec<f64>> = xs.iter().chain(xs.iter()).cloned().collect();
+        let all_y: Vec<f64> = native.iter().chain(prior.iter()).copied().collect();
+        let mut ws = vec![1.0; native.len()];
+        ws.extend(vec![0.25; prior.len()]);
+        let mut m = Gbt::new(20, 3, 0.3);
+        m.fit_weighted(&all_x, &all_y, &ws);
+        let p = m.predict_one(&[1.0]);
+        // Weighted mean of 10 (w 1) and 0 (w 0.25) = 8; unweighted = 5.
+        assert!(p > 6.5, "discounted prior pulled too hard: {p}");
+        // Sanity: equal weights land in the middle.
+        let mut eq = Gbt::new(20, 3, 0.3);
+        eq.fit_weighted(&all_x, &all_y, &vec![1.0; all_y.len()]);
+        let pe = eq.predict_one(&[1.0]);
+        assert!((pe - 5.0).abs() < 1.0, "{pe}");
+        assert!(p > pe);
+    }
+
+    #[test]
+    fn weighted_fit_learns_nonlinear_structure_too() {
+        let (xs, ys) = synth(300, 11);
+        let ws: Vec<f64> = (0..ys.len()).map(|i| if i % 2 == 0 { 1.0 } else { 0.5 }).collect();
+        let mut m = Gbt::new(50, 4, 0.15);
+        m.fit_weighted(&xs, &ys, &ws);
+        let (xt, yt) = synth(80, 12);
+        let pred = m.predict(&xt);
+        let mse: f64 =
+            pred.iter().zip(&yt).map(|(p, y)| (p - y).powi(2)).sum::<f64>() / yt.len() as f64;
+        let var: f64 = {
+            let mean = yt.iter().sum::<f64>() / yt.len() as f64;
+            yt.iter().map(|y| (y - mean).powi(2)).sum::<f64>() / yt.len() as f64
+        };
+        assert!(mse < var * 0.3, "mse {mse} vs var {var}");
     }
 
     #[test]

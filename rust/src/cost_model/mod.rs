@@ -27,14 +27,30 @@ pub trait CostModel: Send + Sync {
     fn predict(&self, progs: &[&Program]) -> Vec<f64>;
     /// Feed back measured latencies (seconds) for the given programs.
     fn update(&mut self, progs: &[&Program], latencies_s: &[f64]);
+    /// Feed *prior* samples — e.g. latencies measured on a different
+    /// target during cross-target transfer — whose influence on the fit
+    /// is discounted by `weight` in `(0, 1]` relative to native samples.
+    /// The default delegates to [`CostModel::update`] (models without
+    /// sample weighting treat priors as full samples); weight-aware
+    /// models override it. `weight <= 0` must be a no-op.
+    fn update_prior(&mut self, progs: &[&Program], latencies_s: &[f64], weight: f64) {
+        if weight > 0.0 {
+            self.update(progs, latencies_s);
+        }
+    }
     fn name(&self) -> &'static str;
 }
 
-/// Tree-boosting cost model (default, as in the paper).
+/// Tree-boosting cost model (default, as in the paper). Samples carry a
+/// weight: native destination measurements weigh 1, transferred
+/// cross-target priors weigh their mismatch discount — so the prior
+/// shapes the early fit but native evidence outweighs it as it arrives.
 pub struct GbtCostModel {
     model: Gbt,
     xs: Vec<Vec<f64>>,
     ys: Vec<f64>,
+    /// Per-sample fit weights, parallel to `xs`/`ys` (1.0 = native).
+    ws: Vec<f64>,
     /// Retrain after this many new samples accumulate.
     pub retrain_every: usize,
     staged: usize,
@@ -46,6 +62,7 @@ impl GbtCostModel {
             model: Gbt::new(50, 5, 0.2),
             xs: Vec::new(),
             ys: Vec::new(),
+            ws: Vec::new(),
             retrain_every: 32,
             staged: 0,
         }
@@ -57,8 +74,23 @@ impl GbtCostModel {
 
     /// Force a retrain on all accumulated data.
     pub fn retrain(&mut self) {
-        self.model.fit(&self.xs, &self.ys);
+        self.model.fit_weighted(&self.xs, &self.ys, &self.ws);
         self.staged = 0;
+    }
+
+    fn push_samples(&mut self, progs: &[&Program], latencies_s: &[f64], weight: f64) {
+        for (p, &l) in progs.iter().zip(latencies_s) {
+            if !l.is_finite() || l <= 0.0 {
+                continue;
+            }
+            self.xs.push(extract(p));
+            self.ys.push(latency_to_score(l));
+            self.ws.push(weight);
+            self.staged += 1;
+        }
+        if self.staged >= self.retrain_every || !self.model.is_fit() {
+            self.retrain();
+        }
     }
 }
 
@@ -81,15 +113,22 @@ impl CostModel for GbtCostModel {
     }
 
     fn update(&mut self, progs: &[&Program], latencies_s: &[f64]) {
-        for (p, &l) in progs.iter().zip(latencies_s) {
-            if !l.is_finite() || l <= 0.0 {
-                continue;
-            }
-            self.xs.push(extract(p));
-            self.ys.push(latency_to_score(l));
-            self.staged += 1;
+        self.push_samples(progs, latencies_s, 1.0);
+    }
+
+    fn update_prior(&mut self, progs: &[&Program], latencies_s: &[f64], weight: f64) {
+        let w = if weight.is_finite() { weight.clamp(0.0, 1.0) } else { 0.0 };
+        if w == 0.0 {
+            return;
         }
-        if self.staged >= self.retrain_every || !self.model.is_fit() {
+        let before = self.xs.len();
+        self.push_samples(progs, latencies_s, w);
+        // Priors arrive once, before round 1 of a search — they must
+        // shape the very next prediction, not wait out the
+        // `retrain_every` batch an already-fit (warm-started) model
+        // would otherwise impose. `staged > 0` means push_samples did
+        // not already retrain.
+        if self.xs.len() > before && self.staged > 0 {
             self.retrain();
         }
     }
@@ -192,6 +231,48 @@ mod tests {
             .unwrap()
             .0;
         assert_eq!(best_true, best_pred);
+    }
+
+    #[test]
+    fn update_prior_discounts_against_native_evidence() {
+        let data = variants();
+        let progs: Vec<&Program> = data.iter().map(|(p, _)| p).collect();
+        let lats: Vec<f64> = data.iter().map(|(_, l)| *l).collect();
+        // Prior-only: the model fits (warm start), sample count grows.
+        let mut m = GbtCostModel::new();
+        m.update_prior(&progs, &lats, 0.5);
+        assert_eq!(m.n_samples(), progs.len());
+        assert!(m.predict(&[progs[0]])[0] != 0.0, "prior alone must warm the model");
+        // Zero/invalid weight is a no-op.
+        m.update_prior(&progs, &lats, 0.0);
+        m.update_prior(&progs, &lats, f64::NAN);
+        assert_eq!(m.n_samples(), progs.len());
+        // Conflicting native evidence outweighs the discounted prior:
+        // prior says program 0 is 100x slower than it is, native says
+        // the truth; the fitted score must land nearer the truth than
+        // the prior's claim.
+        let mut m2 = GbtCostModel::new();
+        m2.retrain_every = 1;
+        let wrong = vec![lats[0] * 100.0];
+        m2.update_prior(&[progs[0]], &wrong, 0.25);
+        m2.update(&[progs[0]], &[lats[0]]);
+        let score = m2.predict(&[progs[0]])[0];
+        let truth = latency_to_score(lats[0]);
+        let claim = latency_to_score(wrong[0]);
+        assert!(
+            (score - truth).abs() < (score - claim).abs(),
+            "score {score} nearer prior claim {claim} than truth {truth}"
+        );
+        // A model already fit on native data must incorporate a later
+        // prior batch immediately, not wait out the retrain_every
+        // threshold (the warm-destination transfer path).
+        let mut m3 = GbtCostModel::new();
+        m3.update(&progs, &lats); // cold -> fits
+        let before = m3.predict(&[progs[0]])[0];
+        let shifted: Vec<f64> = lats.iter().map(|l| l * 1000.0).collect();
+        m3.update_prior(&progs, &shifted, 0.5);
+        let after = m3.predict(&[progs[0]])[0];
+        assert!(after != before, "prior batch left unfitted on a warm model");
     }
 
     #[test]

@@ -36,8 +36,9 @@ pub mod registry;
 pub use mutators::{mutate, CategoricalRedraw, ComputeLocationMove, Mutator, MutatorSet, TileTransfer};
 pub use postproc::{Postproc, SimValidity, VerifyIntegrity};
 pub use registry::{
-    default_rule_names, expand_rule_spec, parse_mutators, parse_postprocs, parse_rules, Registry,
-    RegistrySet, DEFAULT_MUTATORS, DEFAULT_POSTPROCS, DEFAULT_RULES_CPU, DEFAULT_RULES_GPU,
+    builtin_rule_names, default_rule_names, expand_rule_spec, parse_mutators, parse_postprocs,
+    parse_rules, Registry, RegistrySet, DEFAULT_MUTATORS, DEFAULT_POSTPROCS, DEFAULT_RULES_CPU,
+    DEFAULT_RULES_GPU,
 };
 
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -79,6 +80,19 @@ pub struct TuneContext {
     postproc_stats: Vec<PostprocStat>,
     mutations_accepted: AtomicUsize,
     rule_set: String,
+    /// Rule names this context can vouch for when judging donor
+    /// provenance: the resolving registry's full name list when the
+    /// context came from specs, plus this context's own instance names.
+    /// See [`TuneContext::transfer_compatible`].
+    known_rules: Vec<String>,
+}
+
+/// Parse the rule-name list out of a canonical rule-set label
+/// (`"name1,name2 #digest"` — see [`SpaceGenerator::rule_set`]). The
+/// digest suffix is ignored; an empty label yields no names.
+pub fn rule_set_names(label: &str) -> Vec<&str> {
+    let names = label.split_once(" #").map(|(n, _)| n).unwrap_or(label);
+    names.split(',').map(str::trim).filter(|s| !s.is_empty()).collect()
 }
 
 impl TuneContext {
@@ -97,6 +111,15 @@ impl TuneContext {
         let space = SpaceGenerator::new(rules, target.clone());
         let rule_set = space.rule_set();
         let postproc_stats = postprocs.iter().map(|_| PostprocStat::new()).collect();
+        // Every builtin name is always vouched for; contexts resolved
+        // through `from_specs_in` extend this with their registry's
+        // custom names.
+        let mut known_rules: Vec<String> = registry::builtin_rule_names().to_vec();
+        for r in space.rules() {
+            if !known_rules.iter().any(|k| k == r.name()) {
+                known_rules.push(r.name().to_string());
+            }
+        }
         TuneContext {
             target,
             space,
@@ -105,6 +128,7 @@ impl TuneContext {
             postproc_stats,
             mutations_accepted: AtomicUsize::new(0),
             rule_set,
+            known_rules,
         }
     }
 
@@ -150,7 +174,16 @@ impl TuneContext {
         let rules = parse_rules(reg, rules, &target)?;
         let mutators = parse_mutators(reg, mutators, &target)?;
         let postprocs = parse_postprocs(reg, postprocs, &target)?;
-        Ok(TuneContext::new(rules, mutators, postprocs, target))
+        let mut ctx = TuneContext::new(rules, mutators, postprocs, target);
+        // The resolving registry's names (builtins + caller-registered
+        // customs) are exactly the spaces this build can still express —
+        // the vocabulary `transfer_compatible` judges donors against.
+        for name in reg.rules.names() {
+            if !ctx.known_rules.iter().any(|k| k == name) {
+                ctx.known_rules.push(name.to_string());
+            }
+        }
+        Ok(ctx)
     }
 
     pub fn target(&self) -> &Target {
@@ -168,6 +201,26 @@ impl TuneContext {
     /// Canonical rule-set label, stamped into tuning-record provenance.
     pub fn rule_set(&self) -> &str {
         &self.rule_set
+    }
+
+    /// Transfer-compatibility predicate over rule-set labels (the gate
+    /// [`crate::transfer::TransferPool::collect`] applies before a donor
+    /// record from another target may be injected as a prior): a donor's
+    /// space is compatible when every rule name in its provenance label
+    /// still resolves in the registry this context was built against.
+    /// Pre-provenance records (empty label) are *not* compatible — a
+    /// space we cannot even name is a space we cannot vouch for — and
+    /// neither is a label naming a rule that no longer exists (e.g. a
+    /// custom rule from a retired build). The donor's label does not
+    /// have to equal this context's own: cross-target transfer is
+    /// exactly the case where source and destination spaces differ.
+    pub fn transfer_compatible(&self, donor_rule_set: &str) -> bool {
+        if donor_rule_set.is_empty() {
+            return false;
+        }
+        rule_set_names(donor_rule_set)
+            .iter()
+            .all(|n| self.known_rules.iter().any(|k| k == n))
     }
 
     /// Generate the design space for `prog` (see
@@ -314,6 +367,43 @@ mod tests {
         let wmma = TuneContext::from_specs(Target::gpu(), "use-tensor-core", "default", "default").unwrap();
         let mxu = TuneContext::from_specs(Target::gpu(), "use-tensor-core-mxu", "default", "default").unwrap();
         assert_ne!(wmma.rule_set(), mxu.rule_set());
+    }
+
+    #[test]
+    fn transfer_compatibility_judges_rule_set_labels() {
+        let gpu = TuneContext::generic(Target::gpu());
+        let cpu = TuneContext::generic(Target::cpu_avx512());
+        // A donor from the *other* target's default space is compatible:
+        // every rule name is a builtin this build still knows.
+        assert!(gpu.transfer_compatible(cpu.rule_set()));
+        assert!(cpu.transfer_compatible(gpu.rule_set()));
+        // Own label trivially compatible.
+        assert!(gpu.transfer_compatible(gpu.rule_set()));
+        // Pre-provenance (empty) and retired-rule labels are not.
+        assert!(!gpu.transfer_compatible(""));
+        assert!(!gpu.transfer_compatible("auto-inline,ghost-rule #00000000"));
+        // Digest differences alone do not break compatibility (same
+        // names, other params = still an expressible space).
+        assert!(gpu.transfer_compatible("auto-inline,multi-level-tiling #deadbeef"));
+        // A custom rule registered with the resolving registry IS
+        // vouched for by contexts built from that registry.
+        let mut reg = RegistrySet::builtin();
+        reg.rules.register("toy-unroll", |_| {
+            Box::new(crate::space::AutoInline::new()) as Box<dyn crate::space::ScheduleRule>
+        });
+        let custom =
+            TuneContext::from_specs_in(&reg, Target::cpu_avx512(), "default", "default", "default")
+                .unwrap();
+        assert!(custom.transfer_compatible("toy-unroll #12345678"));
+        assert!(!cpu.transfer_compatible("toy-unroll #12345678"));
+    }
+
+    #[test]
+    fn rule_set_names_parse_labels() {
+        assert_eq!(rule_set_names("a,b #1234"), vec!["a", "b"]);
+        assert_eq!(rule_set_names("a , b"), vec!["a", "b"]);
+        assert!(rule_set_names("").is_empty());
+        assert_eq!(rule_set_names("solo #ff"), vec!["solo"]);
     }
 
     #[test]

@@ -150,6 +150,17 @@ impl RegistrySet {
     }
 }
 
+/// Names of every builtin rule, computed once (the builtin set is
+/// immutable at runtime). [`crate::ctx::TuneContext`] seeds its
+/// transfer-compatibility vocabulary from this without paying a full
+/// [`RegistrySet::builtin`] construction per context.
+pub fn builtin_rule_names() -> &'static [String] {
+    static NAMES: std::sync::OnceLock<Vec<String>> = std::sync::OnceLock::new();
+    NAMES.get_or_init(|| {
+        RegistrySet::builtin().rules.names().iter().map(|s| s.to_string()).collect()
+    })
+}
+
 /// Split a comma-separated spec into trimmed, non-empty tokens.
 fn tokens(spec: &str) -> Vec<&str> {
     spec.split(',').map(str::trim).filter(|t| !t.is_empty()).collect()

@@ -28,6 +28,14 @@ pub struct CompactionPolicy {
     /// Successful records kept per workload (best-first). Failed records
     /// are always kept for dedup.
     pub top_k: usize,
+    /// Rule-set specs whose records are dropped outright — successes
+    /// *and* failures — because the space they were drawn from no longer
+    /// exists (ROADMAP "registry-driven space invalidation"). Each spec
+    /// matches per [`rule_set_matches`]: a full canonical label, its
+    /// name-list part, its `#digest` part, or the empty string for
+    /// pre-provenance records. Destructive, so [`compact_file`] refuses
+    /// a non-empty match set without `repair`.
+    pub stale_rule_sets: Vec<String>,
 }
 
 /// Default `top_k`: comfortably above the search's warm-start replay
@@ -35,10 +43,42 @@ pub struct CompactionPolicy {
 /// bounding the file.
 pub const DEFAULT_TOP_K: usize = 32;
 
+impl CompactionPolicy {
+    /// The plain size-bounding policy: keep the best `top_k` per
+    /// workload, drop nothing for provenance reasons.
+    pub fn keep_top(top_k: usize) -> CompactionPolicy {
+        CompactionPolicy { top_k, stale_rule_sets: Vec::new() }
+    }
+}
+
 impl Default for CompactionPolicy {
     fn default() -> Self {
-        CompactionPolicy { top_k: DEFAULT_TOP_K }
+        CompactionPolicy::keep_top(DEFAULT_TOP_K)
     }
+}
+
+/// Whether a stale-rules `spec` matches a record's canonical rule-set
+/// `label` (`"name1,name2 #digest"`). Accepted spellings, so the CLI
+/// value can be copied from `db stats` without shell-quoting the space:
+/// the full label, the name-list part alone, or the `#digest` part
+/// alone. The empty spec matches only pre-provenance records (empty
+/// label) — `db compact --stale-rules -` spells it.
+pub fn rule_set_matches(spec: &str, label: &str) -> bool {
+    if spec == label {
+        return true;
+    }
+    match label.split_once(" #") {
+        Some((names, digest)) => match spec.strip_prefix('#') {
+            Some(d) => d == digest,
+            None => spec == names,
+        },
+        None => false,
+    }
+}
+
+/// Whether `policy` marks a record's rule set stale.
+pub(crate) fn is_stale(rec: &TuningRecord, policy: &CompactionPolicy) -> bool {
+    policy.stale_rule_sets.iter().any(|s| rule_set_matches(s, &rec.rule_set))
 }
 
 /// Outcome of one compaction pass.
@@ -50,6 +90,9 @@ pub struct CompactionReport {
     pub dropped: usize,
     /// Failed records kept for cross-session dedup.
     pub kept_failures: usize,
+    /// Records dropped because their rule set matched
+    /// [`CompactionPolicy::stale_rule_sets`] (included in `dropped`).
+    pub stale_dropped: usize,
     /// Corrupt lines the open had recovered over, now gone for good (the
     /// canonical rewrite does not carry unparseable bytes forward).
     pub corrupt_dropped: usize,
@@ -64,6 +107,12 @@ impl CompactionReport {
             "compacted {path}: kept {} records ({} failures for dedup), dropped {}; {} -> {} bytes",
             self.kept, self.kept_failures, self.dropped, self.bytes_before, self.bytes_after
         );
+        if self.stale_dropped > 0 {
+            out.push_str(&format!(
+                "\nstale_dropped: {} record(s) from retired rule set(s)",
+                self.stale_dropped
+            ));
+        }
         if self.corrupt_dropped > 0 {
             out.push_str(&format!(
                 "\nwarning: {} corrupt line(s) were dropped permanently",
@@ -83,6 +132,12 @@ pub fn keep_mask(records: &[TuningRecord], policy: &CompactionPolicy) -> Vec<boo
     // Group successful record indices per workload, in commit order.
     let mut by_workload: Vec<(usize, Vec<usize>)> = Vec::new();
     for (i, r) in records.iter().enumerate() {
+        if is_stale(r, policy) {
+            // Stale-space records drop outright — failures included:
+            // "always keep failures" protects the dedup set, but a dedup
+            // set for a space that no longer exists protects nothing.
+            continue;
+        }
         if r.is_failed() {
             mask[i] = true; // failures always survive (dedup set)
             continue;
@@ -111,10 +166,13 @@ pub fn keep_mask(records: &[TuningRecord], policy: &CompactionPolicy) -> Vec<boo
 /// with the [`keep_mask`] survivors, rename over the original. Returns
 /// the report; the file is untouched on error.
 ///
-/// When the open recovered over corrupt lines, the rewrite would drop
-/// them *permanently* — that destruction is refused unless `repair` is
-/// set (the CLI's `--repair` switch), so a user always sees what they
-/// are about to lose before losing it.
+/// When the open recovered over corrupt lines, or when
+/// `policy.stale_rule_sets` actually matches records, the rewrite would
+/// drop data *permanently* — that destruction is refused unless `repair`
+/// is set (the CLI's `--repair` switch), so a user always sees what they
+/// are about to lose before losing it. A stale-rules spec that matches
+/// nothing (e.g. a second pass over an already-cleaned file) needs no
+/// confirmation, which keeps stale-rules compaction idempotent.
 pub fn compact_file(
     path: impl AsRef<std::path::Path>,
     policy: &CompactionPolicy,
@@ -133,12 +191,23 @@ pub fn compact_file(
             db.skip_notes().join("\n  ")
         ));
     }
+    if !repair {
+        let stale_matches = db.records().iter().filter(|r| is_stale(r, policy)).count();
+        if stale_matches > 0 {
+            return Err(format!(
+                "{}: --stale-rules would permanently drop {stale_matches} record(s) matching {:?}\nre-run with --repair to drop them",
+                path.display(),
+                policy.stale_rule_sets
+            ));
+        }
+    }
     db.compact(policy)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::db::Database;
     use crate::trace::Trace;
 
     fn rec(workload: usize, cand: u64, lat: Option<f64>) -> TuningRecord {
@@ -164,7 +233,7 @@ mod tests {
             rec(0, 4, Some(2.0)),
             rec(1, 5, Some(9.0)),
         ];
-        let mask = keep_mask(&records, &CompactionPolicy { top_k: 2 });
+        let mask = keep_mask(&records, &CompactionPolicy::keep_top(2));
         // Workload 0 keeps its two best (1.0, 2.0) + the failure; the 3.0
         // record is dominated and dropped. Workload 1 keeps its only record.
         assert_eq!(mask, vec![false, true, true, true, true]);
@@ -173,7 +242,7 @@ mod tests {
     #[test]
     fn keep_mask_breaks_latency_ties_by_commit_order() {
         let records = vec![rec(0, 1, Some(2.0)), rec(0, 2, Some(2.0)), rec(0, 3, Some(2.0))];
-        let mask = keep_mask(&records, &CompactionPolicy { top_k: 2 });
+        let mask = keep_mask(&records, &CompactionPolicy::keep_top(2));
         assert_eq!(mask, vec![true, true, false], "earliest committed ties must win");
     }
 
@@ -186,12 +255,91 @@ mod tests {
             rec(1, 4, Some(5.0)),
             rec(1, 5, Some(4.0)),
         ];
-        let policy = CompactionPolicy { top_k: 1 };
+        let policy = CompactionPolicy::keep_top(1);
         let mask = keep_mask(&records, &policy);
         let survivors: Vec<TuningRecord> =
             records.into_iter().zip(&mask).filter(|(_, k)| **k).map(|(r, _)| r).collect();
         let mask2 = keep_mask(&survivors, &policy);
         assert!(mask2.iter().all(|&k| k), "compaction must be idempotent");
+    }
+
+    #[test]
+    fn rule_set_matches_accepts_label_names_and_digest_spellings() {
+        let label = "auto-inline,multi-level-tiling #1a2b3c4d";
+        assert!(rule_set_matches(label, label));
+        assert!(rule_set_matches("auto-inline,multi-level-tiling", label));
+        assert!(rule_set_matches("#1a2b3c4d", label));
+        assert!(!rule_set_matches("auto-inline", label));
+        assert!(!rule_set_matches("#ffffffff", label));
+        // Empty spec matches only pre-provenance (empty) labels.
+        assert!(rule_set_matches("", ""));
+        assert!(!rule_set_matches("", label));
+        assert!(!rule_set_matches("auto-inline,multi-level-tiling", ""));
+    }
+
+    #[test]
+    fn keep_mask_drops_stale_rule_sets_including_failures() {
+        let with_rules = |mut r: TuningRecord, rules: &str| {
+            r.rule_set = rules.to_string();
+            r
+        };
+        let records = vec![
+            with_rules(rec(0, 1, Some(1.0)), "live-rule #aaaaaaaa"),
+            with_rules(rec(0, 2, Some(0.5)), "ghost-rule #bbbbbbbb"), // stale best
+            with_rules(rec(0, 3, None), "ghost-rule #bbbbbbbb"),      // stale failure
+            with_rules(rec(0, 4, None), "live-rule #aaaaaaaa"),       // live failure
+        ];
+        let policy = CompactionPolicy {
+            top_k: 8,
+            stale_rule_sets: vec!["ghost-rule".to_string()],
+        };
+        let mask = keep_mask(&records, &policy);
+        assert_eq!(mask, vec![true, false, false, true]);
+        // Idempotent: the survivors contain no stale records.
+        let survivors: Vec<TuningRecord> =
+            records.into_iter().zip(&mask).filter(|(_, k)| **k).map(|(r, _)| r).collect();
+        assert!(keep_mask(&survivors, &policy).iter().all(|&k| k));
+        // Default policy (no stale sets) keeps everything here.
+        assert_eq!(
+            keep_mask(&survivors, &CompactionPolicy::keep_top(8)),
+            vec![true, true]
+        );
+    }
+
+    #[test]
+    fn compact_file_refuses_stale_drop_without_repair() {
+        let path = std::env::temp_dir()
+            .join(format!("ms-stale-compact-{}.jsonl", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        {
+            let mut db = crate::db::JsonFileDb::open(&path).unwrap();
+            let w = db.register_workload("w", 1, "cpu");
+            let mut live = rec(w, 1, Some(1.0));
+            live.rule_set = "live-rule #aaaaaaaa".into();
+            let mut ghost = rec(w, 2, Some(0.5));
+            ghost.rule_set = "ghost-rule #bbbbbbbb".into();
+            db.commit_record(live);
+            db.commit_record(ghost);
+        }
+        let policy = CompactionPolicy {
+            top_k: 8,
+            stale_rule_sets: vec!["ghost-rule".to_string()],
+        };
+        let err = compact_file(&path, &policy, false).unwrap_err();
+        assert!(err.contains("--repair") && err.contains("1 record"), "{err}");
+        // Refusal left the file untouched.
+        assert_eq!(crate::db::JsonFileDb::open(&path).unwrap().num_records(), 2);
+        let report = compact_file(&path, &policy, true).unwrap();
+        assert_eq!(report.stale_dropped, 1);
+        assert_eq!(report.kept, 1);
+        assert!(report.render("x").contains("stale_dropped: 1"), "{}", report.render("x"));
+        let bytes_once = std::fs::read(&path).unwrap();
+        // Second pass: nothing matches any more, so no --repair is
+        // needed and the file is byte-identical (idempotence).
+        let again = compact_file(&path, &policy, false).unwrap();
+        assert_eq!(again.stale_dropped, 0);
+        assert_eq!(std::fs::read(&path).unwrap(), bytes_once);
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

@@ -37,7 +37,7 @@ use std::fs::{File, OpenOptions};
 use std::io::Write as _;
 use std::path::{Path, PathBuf};
 
-use crate::db::compact::{keep_mask, CompactionPolicy, CompactionReport};
+use crate::db::compact::{is_stale, keep_mask, CompactionPolicy, CompactionReport};
 use crate::db::memory::InMemoryDb;
 use crate::db::record::TuningRecord;
 use crate::db::{Database, WorkloadEntry, WorkloadId};
@@ -163,31 +163,102 @@ pub(crate) fn read_index(path: &Path) -> Result<LoadedIndex, String> {
     Ok(out)
 }
 
-/// A cheap change signature for a database file: `(length, mtime)`.
-/// The JSONL write path is append-only (and compaction rewrites change
-/// both fields in practice), so an unchanged signature means "nothing
-/// new to index" for a cross-process watcher — the probe costs one
-/// `stat`, no open, no parse.
+/// A cheap change signature for a database file: `(length, mtime,
+/// content fingerprint)`. The JSONL write path is append-only (and
+/// compaction rewrites change length in practice), so an unchanged
+/// signature means "nothing to re-index" for a cross-process watcher —
+/// the probe costs one `stat` plus three bounded reads, no parse.
+///
+/// `(len, mtime)` alone is not enough: a compaction's atomic rename can
+/// land a same-length rewrite inside the same mtime tick on coarse-mtime
+/// filesystems, and a watcher keyed on those two fields would serve the
+/// stale snapshot forever. The content fingerprint (an FNV-1a hash over
+/// the head, middle, and tail [`PROBE_CHUNK`]-byte windows) discriminates
+/// that case.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct FileSignature {
     pub len: u64,
     /// Modification time as nanoseconds since the epoch (0 when the
-    /// platform reports a pre-epoch or unavailable mtime — `len` still
-    /// catches every append).
+    /// platform reports a pre-epoch or unavailable mtime — `len` and the
+    /// fingerprint still catch every append and rewrite).
     pub mtime_nanos: u128,
+    /// FNV-1a over the head/middle/tail windows of the file (0 when the
+    /// file cannot be opened between the `stat` and the read).
+    pub content_fp: u64,
+}
+
+/// Bytes sampled per window (head, middle, tail) by the probe
+/// fingerprint. Large enough that any realistic JSONL rewrite perturbs
+/// at least one window — record lines are ~150 bytes — while keeping a
+/// probe three small reads.
+pub const PROBE_CHUNK: u64 = 1024;
+
+fn fnv1a_eat(h: &mut u64, bytes: &[u8]) {
+    for &b in bytes {
+        *h = (*h ^ b as u64).wrapping_mul(0x0100_0000_01b3);
+    }
+}
+
+/// Hash the head/middle/tail windows of the file at `path`. Best-effort:
+/// a file that vanishes between `stat` and read fingerprints as 0, and
+/// the next poll re-probes.
+fn content_fingerprint(path: &Path, len: u64) -> u64 {
+    use std::io::{Read as _, Seek as _, SeekFrom};
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let Ok(mut f) = File::open(path) else {
+        return 0;
+    };
+    let mut window = |f: &mut File, start: u64, h: &mut u64| {
+        let mut buf = Vec::with_capacity(PROBE_CHUNK as usize);
+        if f.seek(SeekFrom::Start(start)).is_ok() {
+            let _ = f.by_ref().take(PROBE_CHUNK).read_to_end(&mut buf);
+            fnv1a_eat(h, &buf);
+        }
+        // Window separator, so shifted content cannot alias.
+        fnv1a_eat(h, &[0x1f]);
+    };
+    window(&mut f, 0, &mut h);
+    if len > PROBE_CHUNK {
+        window(&mut f, len - PROBE_CHUNK, &mut h);
+    }
+    if len > 2 * PROBE_CHUNK {
+        window(&mut f, len / 2 - PROBE_CHUNK / 2, &mut h);
+    }
+    // Head + tail + middle cover every byte of files up to
+    // 3 * PROBE_CHUNK; larger files are sampled (any realistic JSONL
+    // rewrite moves bytes in at least one window, and `len` is a
+    // separate signature field anyway).
+    h
 }
 
 /// Probe the change signature of `path`; `None` when the file is absent
 /// or unreadable.
 pub fn probe(path: impl AsRef<Path>) -> Option<FileSignature> {
-    let md = std::fs::metadata(path.as_ref()).ok()?;
+    let path = path.as_ref();
+    let md = std::fs::metadata(path).ok()?;
     let mtime_nanos = md
         .modified()
         .ok()
         .and_then(|t| t.duration_since(std::time::UNIX_EPOCH).ok())
         .map(|d| d.as_nanos())
         .unwrap_or(0);
-    Some(FileSignature { len: md.len(), mtime_nanos })
+    Some(FileSignature {
+        len: md.len(),
+        mtime_nanos,
+        content_fp: content_fingerprint(path, md.len()),
+    })
+}
+
+/// Load a JSONL database file into a read-only in-memory index: no
+/// append handle is opened and the file is never created or modified
+/// (works off a read-only mount). Returns the index plus the number of
+/// corrupt lines recovered over; a missing file loads as an empty index.
+/// This is how a *donor* database is opened for cross-target transfer —
+/// reading priors from an archive must never register the destination
+/// workload into it.
+pub fn load_readonly(path: impl AsRef<Path>) -> Result<(InMemoryDb, usize), String> {
+    let loaded = read_index(path.as_ref())?;
+    Ok((loaded.mem, loaded.skipped))
 }
 
 /// File-backed tuning database (`--db path.jsonl`).
@@ -272,6 +343,12 @@ impl JsonFileDb {
         std::fs::metadata(&self.path).map(|m| m.len()).unwrap_or(0)
     }
 
+    /// All records across workloads in commit order (the compaction
+    /// planner's view; also backs the stale-rules refusal gate).
+    pub(crate) fn records(&self) -> &[TuningRecord] {
+        self.mem.records()
+    }
+
     /// Rewrite the file atomically with only the [`keep_mask`] survivors
     /// (top-k successful records per workload + every failure), in
     /// canonical serialization: temp file in the same directory, fsync,
@@ -291,6 +368,7 @@ impl JsonFileDb {
             .collect();
         let dropped = mask.len() - kept.len();
         let kept_failures = kept.iter().filter(|r| r.is_failed()).count();
+        let stale_dropped = self.mem.records().iter().filter(|r| is_stale(r, policy)).count();
 
         let mut tmp_name = self.path.file_name().unwrap_or_default().to_os_string();
         tmp_name.push(".compact-tmp");
@@ -326,6 +404,7 @@ impl JsonFileDb {
             kept: self.mem.num_records(),
             dropped,
             kept_failures,
+            stale_dropped,
             corrupt_dropped,
             bytes_before,
             bytes_after: self.file_len(),
@@ -625,7 +704,7 @@ mod tests {
         db.commit_record(rec(a, 1, Some(2.0)));
         db.commit_record(rec(a, 2, Some(1.0)));
         assert_eq!(db.commit_counter(), 3, "registration + 2 commits");
-        db.compact(&CompactionPolicy { top_k: 1 }).unwrap();
+        db.compact(&CompactionPolicy::keep_top(1)).unwrap();
         db.commit_record(rec(a, 3, Some(0.5)));
         assert_eq!(db.commit_counter(), 4, "monotonic across compaction");
     }
@@ -643,6 +722,65 @@ mod tests {
         let s2 = probe(&path).unwrap();
         assert_ne!(s1, s2, "append must change the signature");
         assert!(s2.len > s1.len);
+    }
+
+    #[test]
+    fn probe_detects_same_length_rewrite() {
+        // A compaction rename can land a same-length rewrite in the same
+        // mtime tick on coarse-mtime filesystems; the content fingerprint
+        // must still change (this is the `serve --watch` staleness fix).
+        let (path, _g) = tmp("probe-rewrite");
+        std::fs::write(&path, "abcdefghij\n").unwrap();
+        let s1 = probe(&path).unwrap();
+        std::fs::write(&path, "jihgfedcba\n").unwrap();
+        let s2 = probe(&path).unwrap();
+        assert_eq!(s1.len, s2.len, "test premise: same length");
+        assert_ne!(s1.content_fp, s2.content_fp, "fingerprint missed a same-length rewrite");
+        assert_ne!(s1, s2);
+        // Files larger than one probe window: a tail-only change is seen.
+        let big = "x".repeat(3 * PROBE_CHUNK as usize);
+        std::fs::write(&path, format!("{big}A")).unwrap();
+        let s3 = probe(&path).unwrap();
+        std::fs::write(&path, format!("{big}B")).unwrap();
+        let s4 = probe(&path).unwrap();
+        assert_eq!(s3.len, s4.len);
+        assert_ne!(s3.content_fp, s4.content_fp, "tail window change missed");
+        // ...and a middle-window change too.
+        let mut mid = format!("{big}{big}");
+        let split = mid.len() / 2;
+        mid.replace_range(split..split + 1, "Y");
+        std::fs::write(&path, format!("{big}{big}")).unwrap();
+        let s5 = probe(&path).unwrap();
+        std::fs::write(&path, &mid).unwrap();
+        let s6 = probe(&path).unwrap();
+        assert_eq!(s5.len, s6.len);
+        assert_ne!(s5.content_fp, s6.content_fp, "middle window change missed");
+        // Identical bytes fingerprint identically (mtime may differ, but
+        // the fingerprint itself is a pure function of content).
+        std::fs::write(&path, "abcdefghij\n").unwrap();
+        let s7 = probe(&path).unwrap();
+        assert_eq!(s1.content_fp, s7.content_fp);
+    }
+
+    #[test]
+    fn load_readonly_never_creates_or_touches_the_file() {
+        let (path, _g) = tmp("readonly");
+        // Missing file: empty index, file still absent.
+        let (mem, skipped) = load_readonly(&path).unwrap();
+        assert_eq!(mem.num_records(), 0);
+        assert_eq!(skipped, 0);
+        assert!(!path.exists(), "read-only load must not create the file");
+        {
+            let mut db = JsonFileDb::open(&path).unwrap();
+            let a = db.register_workload("A", 7, "cpu");
+            db.commit_record(rec(a, 1, Some(2.0)));
+        }
+        let before = std::fs::read(&path).unwrap();
+        let (mem, skipped) = load_readonly(&path).unwrap();
+        assert_eq!(skipped, 0);
+        assert_eq!(mem.num_records(), 1);
+        assert_eq!(mem.find_workload(7, "cpu"), Some(0));
+        assert_eq!(std::fs::read(&path).unwrap(), before, "read-only load modified the file");
     }
 
     #[test]
@@ -670,7 +808,7 @@ mod tests {
         }
         db.commit_record(rec(a, 100, None)); // failure: must survive
         let before = db.file_len();
-        let report = db.compact(&CompactionPolicy { top_k: 3 }).unwrap();
+        let report = db.compact(&CompactionPolicy::keep_top(3)).unwrap();
         assert_eq!(report.kept, 4, "3 best + 1 failure");
         assert_eq!(report.dropped, 7);
         assert_eq!(report.kept_failures, 1);
@@ -697,7 +835,7 @@ mod tests {
         for i in 0..6u64 {
             db.commit_record(rec(a, i, Some((i + 1) as f64)));
         }
-        db.compact(&CompactionPolicy { top_k: 2 }).unwrap();
+        db.compact(&CompactionPolicy::keep_top(2)).unwrap();
         db.commit_record(rec(a, 50, Some(0.25)));
         let reopened = JsonFileDb::open(&path).unwrap();
         assert_eq!(reopened.num_records(), 3);
@@ -711,7 +849,7 @@ mod tests {
         let a = db.register_workload("A", 1, "cpu");
         db.set_auto_gc(Some(AutoGc {
             max_bytes: 2048,
-            policy: CompactionPolicy { top_k: 4 },
+            policy: CompactionPolicy::keep_top(4),
         }));
         for i in 0..200u64 {
             db.commit_record(rec(a, i, Some((i + 1) as f64)));

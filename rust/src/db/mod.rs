@@ -37,8 +37,8 @@ pub mod record;
 pub mod shared;
 pub mod stats;
 
-pub use compact::{compact_file, CompactionPolicy, CompactionReport};
-pub use json_file::{probe, AutoGc, FileSignature, JsonFileDb};
+pub use compact::{compact_file, keep_mask, rule_set_matches, CompactionPolicy, CompactionReport};
+pub use json_file::{load_readonly, probe, AutoGc, FileSignature, JsonFileDb};
 pub use memory::InMemoryDb;
 pub use record::TuningRecord;
 pub use shared::SharedDb;
@@ -53,8 +53,11 @@ pub type WorkloadId = usize;
 
 /// One registry entry: a workload is identified by the structural hash of
 /// its base (unscheduled) program plus the target it is tuned for —
-/// records never transfer across targets implicitly (cross-target
-/// transfer is an explicit, future feature; see ROADMAP).
+/// records never transfer across targets implicitly. Explicit transfer
+/// goes through [`Database::query_transfer_candidates`] and the
+/// [`crate::transfer`] module, which injects another target's records as
+/// *priors* (re-measured on the destination before anything is
+/// committed), never as truth.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct WorkloadEntry {
     pub id: WorkloadId,
@@ -159,24 +162,85 @@ pub trait Database: Send {
     fn has_candidate(&self, workload: WorkloadId, cand_hash: u64) -> bool {
         self.candidate_hashes(workload).contains(&cand_hash)
     }
+
+    /// Every registry entry whose structural hash matches, regardless of
+    /// target, in registration order — the cross-target view of one
+    /// workload (the same program registered per target it was tuned on).
+    fn find_workload_any_target(&self, shash: u64) -> Vec<WorkloadEntry> {
+        self.workload_entries().into_iter().filter(|e| e.shash == shash).collect()
+    }
+
+    /// Cross-target transfer candidates for the workload `shash` tuned
+    /// for `dest_target`: the `k` best successful records of every
+    /// *other* target's registration of the same program (optionally
+    /// restricted to `source_target`), grouped by donor registration
+    /// order and best-first within each donor. Latencies from different
+    /// sources are not comparable with each other — callers rank within
+    /// a source, never across. Provenance compatibility
+    /// ([`crate::ctx::TuneContext::transfer_compatible`], `sim_version`)
+    /// is the [`crate::transfer`] layer's job, not the database's.
+    fn query_transfer_candidates(
+        &self,
+        shash: u64,
+        dest_target: &str,
+        source_target: Option<&str>,
+        k: usize,
+    ) -> Vec<TuningRecord> {
+        let mut out = Vec::new();
+        for e in self.find_workload_any_target(shash) {
+            if e.target == dest_target {
+                continue;
+            }
+            if let Some(src) = source_target {
+                if e.target != src {
+                    continue;
+                }
+            }
+            out.extend(self.query_top_k(e.id, k));
+        }
+        out
+    }
+}
+
+/// What [`pretrain_cost_model`] did: samples fed vs records it refused.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PretrainStats {
+    /// `(program, latency)` samples fed to the model.
+    pub fed: usize,
+    /// Successful records skipped because their `sim_version` does not
+    /// match [`crate::sim::SIM_VERSION`] — latencies measured under an
+    /// older simulator model would silently poison the fit.
+    pub stale_skipped: usize,
 }
 
 /// Replay up to `limit` of a workload's best records against its base
 /// program and feed the `(program, latency)` pairs to the cost model as
 /// one training batch — so the model is fit *before* round 1 of a
 /// warm-started search instead of starting cold. Records whose traces no
-/// longer replay (e.g. after a schedule-primitive change) are skipped.
-/// Returns the number of samples fed.
+/// longer replay (e.g. after a schedule-primitive change) are skipped,
+/// and so are records measured under a different `sim_version` (their
+/// latencies are not commensurable with the current simulator model;
+/// they are counted in [`PretrainStats::stale_skipped`] instead of fed).
 pub fn pretrain_cost_model(
     model: &mut dyn CostModel,
     db: &dyn Database,
     workload: WorkloadId,
     prog: &Program,
     limit: usize,
-) -> usize {
+) -> PretrainStats {
     let mut progs: Vec<Program> = Vec::new();
     let mut lats: Vec<f64> = Vec::new();
-    for rec in db.query_top_k(workload, limit) {
+    let mut stale_skipped = 0usize;
+    // Fetch everything and filter *before* truncating to `limit`: a
+    // stale record in the top-k must not crowd a current one out.
+    for rec in db.query_top_k(workload, usize::MAX) {
+        if rec.sim_version != crate::sim::SIM_VERSION {
+            stale_skipped += 1;
+            continue;
+        }
+        if progs.len() >= limit {
+            continue;
+        }
         let Some(lat) = rec.best_latency() else {
             continue;
         };
@@ -186,11 +250,11 @@ pub fn pretrain_cost_model(
         }
     }
     if progs.is_empty() {
-        return 0;
+        return PretrainStats { fed: 0, stale_skipped };
     }
     let refs: Vec<&Program> = progs.iter().collect();
     model.update(&refs, &lats);
-    progs.len()
+    PretrainStats { fed: progs.len(), stale_skipped }
 }
 
 #[cfg(test)]
@@ -260,9 +324,10 @@ mod tests {
         let (db, wid) = seeded_db(&prog, &target, 8);
         assert!(db.best_latency(wid).is_some());
         let mut model = GbtCostModel::new();
-        let fed = pretrain_cost_model(&mut model, &db, wid, &prog, 64);
-        assert!(fed > 0, "no samples fed");
-        assert_eq!(model.n_samples(), fed);
+        let stats = pretrain_cost_model(&mut model, &db, wid, &prog, 64);
+        assert!(stats.fed > 0, "no samples fed");
+        assert_eq!(stats.stale_skipped, 0);
+        assert_eq!(model.n_samples(), stats.fed);
         // A fit model no longer returns the cold neutral score for every
         // input (scores are -ln(latency), strictly positive here).
         let preds = model.predict(&[&prog]);
@@ -276,8 +341,62 @@ mod tests {
         let mut db = InMemoryDb::new();
         let wid = db.register_workload(&prog.name, structural_hash(&prog), target.name);
         let mut model = GbtCostModel::new();
-        assert_eq!(pretrain_cost_model(&mut model, &db, wid, &prog, 64), 0);
+        assert_eq!(pretrain_cost_model(&mut model, &db, wid, &prog, 64), PretrainStats::default());
         assert_eq!(model.n_samples(), 0);
+    }
+
+    #[test]
+    fn pretrain_skips_and_counts_stale_sim_versions() {
+        // A record measured under an older simulator model must not feed
+        // the fit — even when it is the best record on file.
+        let target = Target::cpu_avx512();
+        let prog = workloads::matmul(1, 64, 64, 64);
+        let (mut db, wid) = seeded_db(&prog, &target, 4);
+        let mut stale = db.query_top_k(wid, 1).remove(0);
+        stale.sim_version = "sim-v0-retired".into();
+        stale.latencies = vec![1e-15]; // absurdly good: would dominate the fit
+        stale.cand_hash = stale.cand_hash.wrapping_add(1);
+        db.commit_record(stale);
+        let mut model = GbtCostModel::new();
+        let stats = pretrain_cost_model(&mut model, &db, wid, &prog, 64);
+        assert_eq!(stats.stale_skipped, 1);
+        assert!(stats.fed > 0, "compatible records must still feed the fit");
+        assert_eq!(model.n_samples(), stats.fed, "stale sample leaked into the model");
+    }
+
+    #[test]
+    fn cross_target_queries_see_other_targets_only() {
+        let mut db = InMemoryDb::new();
+        let cpu = db.register_workload("w", 42, "cpu");
+        let gpu = db.register_workload("w", 42, "gpu");
+        let other = db.register_workload("x", 43, "cpu");
+        let mk = |w: usize, lat: f64, cand: u64| TuningRecord {
+            workload: w,
+            trace: crate::trace::Trace { insts: vec![] },
+            latencies: vec![lat],
+            target: "?".into(),
+            seed: 0,
+            round: 0,
+            cand_hash: cand,
+            sim_version: "simtest".into(),
+            rule_set: String::new(),
+        };
+        db.commit_record(mk(cpu, 2.0, 1));
+        db.commit_record(mk(cpu, 1.0, 2));
+        db.commit_record(mk(gpu, 5.0, 3));
+        db.commit_record(mk(other, 9.0, 4));
+        let entries = db.find_workload_any_target(42);
+        assert_eq!(entries.len(), 2);
+        assert_eq!((entries[0].target.as_str(), entries[1].target.as_str()), ("cpu", "gpu"));
+        // Tuning for gpu: donors are the cpu records, best-first.
+        let donors = db.query_transfer_candidates(42, "gpu", None, 8);
+        assert_eq!(donors.iter().map(|r| r.cand_hash).collect::<Vec<_>>(), vec![2, 1]);
+        // Source restriction and self-exclusion.
+        assert!(db.query_transfer_candidates(42, "gpu", Some("tpu"), 8).is_empty());
+        let donors_cpu = db.query_transfer_candidates(42, "cpu", None, 8);
+        assert_eq!(donors_cpu.iter().map(|r| r.cand_hash).collect::<Vec<_>>(), vec![3]);
+        // Unrelated shash never leaks in.
+        assert!(db.query_transfer_candidates(999, "gpu", None, 8).is_empty());
     }
 
     #[test]

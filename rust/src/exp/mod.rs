@@ -20,7 +20,8 @@ use crate::ctx::TuneContext;
 use crate::db::{Database, InMemoryDb, JsonFileDb};
 use crate::search::{EvolutionarySearch, SearchConfig, SimMeasurer, TuneResult};
 use crate::sim::Target;
-use crate::tir::Program;
+use crate::tir::{structural_hash, Program};
+use crate::transfer::{TransferConfig, TransferPool};
 use crate::util::json::Json;
 
 /// Shared experiment knobs.
@@ -45,6 +46,13 @@ pub struct ExpConfig {
     pub mutators: Option<String>,
     /// `--postprocs` spec (None = `default`).
     pub postprocs: Option<String>,
+    /// `--transfer-from` source target name: inject that target's
+    /// records for the same workload as cross-target priors (elite
+    /// seeding re-measured on the destination + discounted cost-model
+    /// samples; see [`crate::transfer`]). `None` (the default, and what
+    /// `--no-transfer` forces) reproduces the cold-start behaviour
+    /// byte for byte.
+    pub transfer_from: Option<String>,
 }
 
 impl Default for ExpConfig {
@@ -57,6 +65,7 @@ impl Default for ExpConfig {
             rules: None,
             mutators: None,
             postprocs: None,
+            transfer_from: None,
         }
     }
 }
@@ -113,12 +122,40 @@ pub fn tune_with_ctx(prog: &Program, ctx: &TuneContext, cfg: &ExpConfig) -> Tune
 }
 
 /// Tune against an explicit database handle (shared across calls when
-/// the caller batches many workloads into one open).
+/// the caller batches many workloads into one open). When
+/// `cfg.transfer_from` names a source target, that target's records for
+/// this workload *in the same database* become the transfer pool; use
+/// [`tune_with_ctx_db_pool`] to supply a pool from elsewhere (e.g. a
+/// read-only donor archive).
 pub fn tune_with_ctx_db(
     prog: &Program,
     ctx: &TuneContext,
     cfg: &ExpConfig,
     db: &mut dyn Database,
+) -> TuneResult {
+    let pool = cfg.transfer_from.as_deref().map(|src| {
+        let source = Target::by_name(src)
+            .unwrap_or_else(|| panic!("unknown transfer source target {src} (cpu|gpu|tpu)"));
+        TransferPool::collect(
+            &*db,
+            structural_hash(prog),
+            ctx.target().name,
+            Some(source.name),
+            ctx,
+            TransferConfig::default(),
+        )
+    });
+    tune_with_ctx_db_pool(prog, ctx, cfg, db, pool.as_ref())
+}
+
+/// Tune with an explicit (possibly externally-sourced) transfer pool;
+/// `None` is the plain database-backed search.
+pub fn tune_with_ctx_db_pool(
+    prog: &Program,
+    ctx: &TuneContext,
+    cfg: &ExpConfig,
+    db: &mut dyn Database,
+    pool: Option<&TransferPool>,
 ) -> TuneResult {
     let search = EvolutionarySearch::new(SearchConfig {
         num_trials: cfg.trials,
@@ -127,7 +164,7 @@ pub fn tune_with_ctx_db(
     });
     let mut model = GbtCostModel::new();
     let mut measurer = SimMeasurer::new(ctx.target().clone());
-    search.tune_db(prog, ctx, &mut model, &mut measurer, db, cfg.seed)
+    search.tune_db_transfer(prog, ctx, &mut model, &mut measurer, db, pool, cfg.seed)
 }
 
 /// The paper's "TVM" bars pick the best of AutoTVM and Ansor per setup.

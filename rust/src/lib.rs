@@ -9,8 +9,10 @@
 //! learning-driven evolutionary search with a gradient-boosted-tree cost
 //! model ([`search`], [`cost_model`]), a persistent tuning-record
 //! database that warm-starts search and pretrains the cost model across
-//! sessions ([`db`]), a read-optimized serving layer with compaction and
-//! indexed snapshots over that database ([`serve`]), a deterministic
+//! sessions ([`db`]), cross-target transfer priors that re-use another
+//! target's records as re-measured seeds and discounted cost-model
+//! samples ([`transfer`]), a read-optimized serving layer with compaction
+//! and indexed snapshots over that database ([`serve`]), a deterministic
 //! hardware latency
 //! simulator standing in for the paper's testbeds ([`sim`]), baseline
 //! tuners ([`baselines`]), graph-level task extraction and end-to-end model
@@ -40,5 +42,6 @@ pub mod sim;
 pub mod space;
 pub mod tir;
 pub mod trace;
+pub mod transfer;
 pub mod util;
 pub mod workloads;

@@ -4,12 +4,15 @@
 //! metaschedule list                              # workloads + models
 //! metaschedule tune --workload GMM [--target cpu] [--trials 64] [--threads N] [--db t.jsonl]
 //!                  [--rules default] [--mutators default] [--postprocs default] [--explain-space]
+//!                  [--transfer-from cpu [--transfer-db donor.jsonl]] [--no-transfer]
 //! metaschedule tune-model --model bert-base [--target cpu] [--trials 32] [--db t.jsonl]
 //! metaschedule exp <fig8|fig9|fig10a|fig10b|table1|all> [--target cpu]
 //!                  [--trials N] [--seed S] [--threads N] [--out results.jsonl] [--db t.jsonl]
 //! metaschedule db stats --db t.jsonl             # tuning-database summary
 //! metaschedule db top --workload GMM -k 5 --db t.jsonl
 //! metaschedule db compact --db t.jsonl [-k 32] [--repair]  # GC: top-k + failures, atomic rewrite
+//!                  [--stale-rules <label|names|#digest|->]  # also drop a retired rule set's records
+//! metaschedule db transfer-candidates --db t.jsonl --workload GMM --target gpu [--from cpu]
 //! metaschedule serve GMM SFM --db t.jsonl [--target cpu] [--miss-trials 16]  # 0 = read-only
 //!                  [--watch [--poll-ms 500]]   # read-only; re-serve when the db file changes
 //! metaschedule pjrt-verify                       # artifact correctness gate
@@ -26,8 +29,17 @@
 //! best latency per named workload, and falls back to a bounded
 //! tune-on-miss (`--miss-trials 0` = report-only) that commits back to
 //! the db (see README "Serving tuned programs"). `--watch` keeps the
-//! process alive and re-serves whenever the db file's (len, mtime)
-//! signature changes — refresh on change, not on a timer.
+//! process alive and re-serves whenever the db file's (len, mtime,
+//! content fingerprint) signature changes — refresh on change, not on a
+//! timer.
+//!
+//! `--transfer-from <target>` injects the named target's records for the
+//! same workload as cross-target priors: the best compatible donors are
+//! re-measured on the destination target (never trusted as-is) and the
+//! cost model pretrains on their features with a mismatch discount (see
+//! README "Cross-target transfer"). Donors come from `--db`, or from a
+//! separate read-only `--transfer-db` archive; `--no-transfer` disables
+//! everything and byte-reproduces the cold-start run.
 //!
 //! `--rules`/`--mutators`/`--postprocs` compose the search space from
 //! the named rule registry (`default` = the per-target generic set;
@@ -44,6 +56,7 @@ use metaschedule::serve::{serve_batch, serve_snapshot, serve_watch, ServeConfig,
 use metaschedule::sim::Target;
 use metaschedule::tir::{print_program, structural_hash, PrintOptions};
 use metaschedule::trace::serde::{text_to_trace, trace_to_text};
+use metaschedule::transfer::{TransferConfig, TransferPool};
 use metaschedule::util::cli::Args;
 use metaschedule::workloads;
 
@@ -77,6 +90,14 @@ fn cfg_of(args: &Args) -> ExpConfig {
         rules: args.flag("rules").map(String::from),
         mutators: args.flag("mutators").map(String::from),
         postprocs: args.flag("postprocs").map(String::from),
+        // --no-transfer is the escape hatch: it wins over --transfer-from
+        // so a scripted flag can be neutralized without editing the rest
+        // of the command line.
+        transfer_from: if args.has_switch("no-transfer") {
+            None
+        } else {
+            args.flag("transfer-from").map(String::from)
+        },
     }
 }
 
@@ -103,6 +124,29 @@ fn target_of(args: &Args) -> Target {
     })
 }
 
+/// Resolve `--transfer-from` against `--no-transfer` and the destination
+/// target, exiting with a usage error (not mid-tune) on a bad source.
+/// Returns the canonical source target name.
+fn transfer_source_of(args: &Args, dest: &Target) -> Option<String> {
+    if args.has_switch("no-transfer") {
+        return None;
+    }
+    let src = args.flag("transfer-from")?;
+    let Some(source) = Target::by_name(src) else {
+        eprintln!("unknown transfer source target {src} (cpu|gpu|tpu)");
+        std::process::exit(2);
+    };
+    if source.name == dest.name {
+        eprintln!(
+            "--transfer-from {src}: source resolves to the destination target {} — \
+             a target cannot donate priors to itself",
+            dest.name
+        );
+        std::process::exit(2);
+    }
+    Some(source.name.to_string())
+}
+
 fn list() {
     println!("operator workloads (Appendix A.2):");
     for w in workloads::suite() {
@@ -127,7 +171,7 @@ fn tune(args: &Args) {
         std::process::exit(2);
     };
     let target = target_of(args);
-    let cfg = cfg_of(args);
+    let mut cfg = cfg_of(args);
     let prog = (w.build)();
     println!("== tuning {} on {} ({} trials)", w.name, target.name, cfg.trials);
     let naive = metaschedule::sim::simulate(&prog, &target)
@@ -137,12 +181,62 @@ fn tune(args: &Args) {
     // must not create the file or append a registration line.
     let ctx = ctx_of(args, &target);
     println!("space: rules = {}", ctx.rule_set());
+    // Same for the transfer flags: bad source names fail fast.
+    let transfer_src = transfer_source_of(args, &target);
+    // A donor archive without a source target is a mistake, not a cold
+    // start — fail fast instead of silently ignoring the archive
+    // (--no-transfer legitimately neutralizes the whole flag group).
+    if args.flag("transfer-db").is_some() && transfer_src.is_none() && !args.has_switch("no-transfer") {
+        eprintln!("tune: --transfer-db requires --transfer-from <target> (the archive alone names no source)");
+        std::process::exit(2);
+    }
     let mut db = exp::open_db(&cfg);
     // Pre-register under the Figure-8 display name ("GMM", not the
     // program's internal "matmul") so `db top --workload GMM` finds it;
     // registration is idempotent and first name wins.
-    db.register_workload(w.name, structural_hash(&prog), target.name);
-    let r = exp::tune_with_ctx_db(&prog, &ctx, &cfg, db.as_mut());
+    let shash = structural_hash(&prog);
+    db.register_workload(w.name, shash, target.name);
+    // Build the transfer pool up front (from the read-only donor archive
+    // when --transfer-db names one, otherwise from the tuning db itself)
+    // so its selection stats can be reported next to the result.
+    let pool = transfer_src.as_ref().map(|src| {
+        let donors = args.flag("transfer-db");
+        match donors {
+            Some(dpath) => {
+                if !std::path::Path::new(dpath).exists() {
+                    eprintln!("tune: no donor database at {dpath}");
+                    std::process::exit(2);
+                }
+                let (mem, skipped) = match metaschedule::db::load_readonly(dpath) {
+                    Ok(x) => x,
+                    Err(e) => {
+                        eprintln!("tune: donor db: {e}");
+                        std::process::exit(2);
+                    }
+                };
+                if skipped > 0 {
+                    eprintln!("tune: donor db {dpath}: recovered over {skipped} corrupt line(s)");
+                }
+                TransferPool::collect(&mem, shash, target.name, Some(src.as_str()), &ctx, TransferConfig::default())
+            }
+            None => TransferPool::collect(
+                db.as_ref(),
+                shash,
+                target.name,
+                Some(src.as_str()),
+                &ctx,
+                TransferConfig::default(),
+            ),
+        }
+    });
+    if args.has_switch("no-transfer") && args.flag("transfer-from").is_some() {
+        println!("transfer disabled by --no-transfer (cold-start behaviour, bit-identical)");
+    }
+    // The pool above is THE transfer source for this run; clear the cfg
+    // copy of the flag so no layer below can ever re-collect a second
+    // pool from a different database.
+    cfg.transfer_from = None;
+    let r = exp::tune_with_ctx_db_pool(&prog, &ctx, &cfg, db.as_mut(), pool.as_ref());
     if r.warm_records > 0 {
         println!(
             "warm-start: resumed from {} db records (search continues from the recorded best)",
@@ -150,6 +244,30 @@ fn tune(args: &Args) {
         );
     } else if cfg.db_path.is_some() {
         println!("cold start: no prior records for this workload in the db");
+    }
+    if r.stale_skipped > 0 {
+        println!(
+            "warm-start: skipped {} record(s) whose sim_version != {} (stale latencies are never replayed)",
+            r.stale_skipped,
+            metaschedule::sim::SIM_VERSION
+        );
+    }
+    if let Some(pool) = &pool {
+        let sources = if pool.source_targets.is_empty() {
+            "none".to_string()
+        } else {
+            pool.source_targets.join(",")
+        };
+        println!(
+            "transferred_records: {} re-measured on {} (pool: {} compatible donor record(s) from {}; {} incompatible skipped: {} sim, {} rules)",
+            r.transferred_records,
+            target.name,
+            pool.len(),
+            sources,
+            pool.incompatible(),
+            pool.incompatible_sim,
+            pool.incompatible_rules
+        );
     }
     println!(
         "naive {:.2} us -> tuned {:.2} us ({:.1}x) in {} trials",
@@ -175,13 +293,20 @@ fn tune(args: &Args) {
 fn tune_model(args: &Args) {
     let name = args.flag_or("model", "bert-base");
     let target = target_of(args);
-    let cfg = cfg_of(args);
+    let mut cfg = cfg_of(args);
+    cfg.transfer_from = None; // scheduler path; see the note below
     let Some(ops) = graph::by_name(&name) else {
         eprintln!("unknown model {name}; see `metaschedule list`");
         std::process::exit(2);
     };
     // Fail fast (exit 2, not a panic) on a bad spec before any tuning.
     let _ = ctx_of(args, &target);
+    if args.flag("transfer-from").is_some() {
+        // The task scheduler tunes many extracted tasks; per-task donor
+        // pools are a future extension. Say so instead of silently
+        // accepting the flag (cfg.transfer_from is cleared above).
+        eprintln!("tune-model: --transfer-from applies to single-workload `tune` only; ignored here");
+    }
     println!("== tuning {name} on {} ({} trials/task)", target.name, cfg.trials);
     if let Some(path) = &cfg.db_path {
         println!("db: {path} (per-task records shared; killed runs resume from it)");
@@ -208,6 +333,15 @@ fn experiment(args: &Args) {
     // (ExpConfig::context panics by contract — the CLI validates here).
     for target in [Target::cpu_avx512(), Target::gpu()] {
         let _ = ctx_of(args, &target);
+    }
+    // Same for a transfer source: validate the name only (experiments
+    // span both targets, so source == destination arms simply collect an
+    // empty pool rather than erroring).
+    if let Some(src) = args.flag("transfer-from") {
+        if Target::by_name(src).is_none() {
+            eprintln!("unknown transfer source target {src} (cpu|gpu|tpu)");
+            std::process::exit(2);
+        }
     }
     let out = args.flag("out").map(|s| s.to_string());
     let mut reports = Vec::new();
@@ -256,11 +390,22 @@ fn db_cmd(args: &Args) {
         std::process::exit(2);
     };
     if sub == "compact" {
+        // --stale-rules drops every record of a retired rule set (the
+        // ROADMAP "registry-driven space invalidation" item): pass the
+        // full label from `db stats`, its name-list part, its #digest
+        // part, or `-` for pre-provenance records.
+        let stale_rule_sets: Vec<String> = args
+            .flag("stale-rules")
+            .map(|s| if s == "-" { String::new() } else { s.to_string() })
+            .into_iter()
+            .collect();
         let policy = db::CompactionPolicy {
             top_k: args.flag_usize("k", db::compact::DEFAULT_TOP_K),
+            stale_rule_sets,
         };
-        // --repair: also drop corrupt lines recovered over at open
-        // (refused otherwise, so data loss is never a surprise).
+        // --repair: also drop corrupt lines recovered over at open and
+        // confirm --stale-rules destruction (refused otherwise, so data
+        // loss is never a surprise).
         match db::compact_file(path, &policy, args.has_switch("repair")) {
             Ok(report) => println!("{}", report.render(path)),
             Err(e) => {
@@ -268,6 +413,10 @@ fn db_cmd(args: &Args) {
                 std::process::exit(1);
             }
         }
+        return;
+    }
+    if sub == "transfer-candidates" {
+        transfer_candidates_cmd(args, path);
         return;
     }
     let db = match JsonFileDb::open(path) {
@@ -330,10 +479,123 @@ fn db_cmd(args: &Args) {
         }
         other => {
             eprintln!(
-                "usage: metaschedule db <stats|top|compact> --db <path.jsonl> [--workload W] [-k N] (got {other})"
+                "usage: metaschedule db <stats|top|compact|transfer-candidates> --db <path.jsonl> [--workload W] [-k N] (got {other})"
             );
             std::process::exit(2);
         }
+    }
+}
+
+/// `db transfer-candidates`: what would `tune --target <dest>
+/// --transfer-from <src>` inject? Lists every donor registration of the
+/// workload and each donor record's compatibility verdict. The archive
+/// is loaded read-only (never created, never opened for append) — an
+/// inspection must work off a read-only mount, and a typo'd path must
+/// error instead of leaving an empty file behind.
+fn transfer_candidates_cmd(args: &Args, path: &str) {
+    let wname = args.flag_or("workload", "GMM");
+    let Some(w) = workloads::by_name(&wname) else {
+        eprintln!("db: unknown workload {wname}; see `metaschedule list`");
+        std::process::exit(1);
+    };
+    let dest = target_of(args);
+    let from = args.flag("from").map(|src| match Target::by_name(src) {
+        Some(t) => t.name.to_string(),
+        None => {
+            eprintln!("db: unknown source target {src} (cpu|gpu|tpu)");
+            std::process::exit(2);
+        }
+    });
+    let ctx = ctx_of(args, &dest);
+    if !std::path::Path::new(path).exists() {
+        eprintln!("db: no database at {path}");
+        std::process::exit(1);
+    }
+    let (db, skipped) = match metaschedule::db::load_readonly(path) {
+        Ok(x) => x,
+        Err(e) => {
+            eprintln!("db: {e}");
+            std::process::exit(1);
+        }
+    };
+    if skipped > 0 {
+        eprintln!("db: recovered over {skipped} corrupt line(s); `db compact --repair` drops them");
+    }
+    let prog = (w.build)();
+    let shash = structural_hash(&prog);
+    // One `k` drives both the per-record listing and the pool summary
+    // below, with the same semantics as `TransferPool::collect`: `k`
+    // caps *compatible* records per donor (incompatible ones are always
+    // listed with their reason — they are the diagnostic payload), so
+    // the listing and the pool counts never disagree about what is in
+    // play.
+    let k = args.flag_usize("k", TransferConfig::default().per_source_top_k);
+    println!("== transfer candidates for {} -> {} (shash {:016x})", wname, dest.name, shash);
+    let donors = db.find_workload_any_target(shash);
+    let mut shown = 0usize;
+    for entry in donors {
+        if entry.target == dest.name {
+            continue;
+        }
+        if let Some(src) = &from {
+            if &entry.target != src {
+                continue;
+            }
+        }
+        let all = db.query_top_k(entry.id, usize::MAX);
+        println!(
+            "donor [{}] {} on {}: {} successful record(s)",
+            entry.id,
+            entry.name,
+            entry.target,
+            all.len()
+        );
+        let mut compat_listed = 0usize;
+        let mut over_cap = 0usize;
+        for rec in all {
+            let incompatible_sim = rec.sim_version != metaschedule::sim::SIM_VERSION;
+            let incompatible_rules = !incompatible_sim && !ctx.transfer_compatible(&rec.rule_set);
+            let verdict = if incompatible_sim {
+                format!("INCOMPATIBLE (sim {} != {})", rec.sim_version, metaschedule::sim::SIM_VERSION)
+            } else if incompatible_rules {
+                "INCOMPATIBLE (rule set not expressible here)".to_string()
+            } else if compat_listed >= k {
+                over_cap += 1;
+                continue; // compatible but beyond the per-source cap: not in the pool
+            } else {
+                compat_listed += 1;
+                "compatible (in pool)".to_string()
+            };
+            println!(
+                "  {:.3} us | rules {} | {}",
+                rec.best_latency().unwrap_or(f64::NAN) * 1e6,
+                if rec.rule_set.is_empty() { "-" } else { &rec.rule_set },
+                verdict
+            );
+            shown += 1;
+        }
+        if over_cap > 0 {
+            println!("  (+{over_cap} compatible record(s) beyond the per-source cap -k {k}; not in the pool)");
+        }
+    }
+    let pool = TransferPool::collect(
+        &db,
+        shash,
+        dest.name,
+        from.as_deref(),
+        &ctx,
+        TransferConfig { per_source_top_k: k, ..TransferConfig::default() },
+    );
+    println!(
+        "pool: {} compatible donor record(s) from [{}]; {} incompatible ({} sim, {} rules)",
+        pool.len(),
+        pool.source_targets.join(","),
+        pool.incompatible(),
+        pool.incompatible_sim,
+        pool.incompatible_rules
+    );
+    if shown == 0 {
+        println!("(no donor records — tune this workload on another target first)");
     }
 }
 

@@ -26,8 +26,9 @@ use std::collections::HashSet;
 
 use crate::cost_model::CostModel;
 use crate::ctx::TuneContext;
-use crate::db::{pretrain_cost_model, Database, InMemoryDb, TuningRecord};
+use crate::db::{Database, InMemoryDb, TuningRecord};
 use crate::schedule::Schedule;
+use crate::transfer::TransferPool;
 use crate::search::parallel::{parallel_map, BoundedQueue, SharedMeasurer};
 use crate::search::Measurer;
 use crate::tir::{structural_hash, Program};
@@ -126,6 +127,15 @@ pub struct TuneResult {
     pub curve: Vec<(usize, f64)>,
     /// Database records that warm-started this run (0 = cold start).
     pub warm_records: usize,
+    /// Cross-target donor candidates re-measured on this run's target
+    /// and committed (0 = no transfer pool, or nothing survived the
+    /// replay/postproc/dedup gates). Every one of these is a *destination*
+    /// measurement — donor latencies are never committed or reported.
+    pub transferred_records: usize,
+    /// Workload records ignored by the warm start (dedup set, elite
+    /// pool, best-so-far) and by pretraining because their `sim_version`
+    /// does not match the current simulator model.
+    pub stale_skipped: usize,
 }
 
 /// One population member: a validated schedule plus its model score.
@@ -172,9 +182,28 @@ impl EvolutionarySearch {
         db: &mut dyn Database,
         seed: u64,
     ) -> TuneResult {
+        self.tune_db_transfer(prog, ctx, model, measurer, db, None, seed)
+    }
+
+    /// [`Self::tune_db`] plus an optional cross-target transfer pool:
+    /// compatible donor records from another target seed the search as
+    /// re-measured candidates and pretrain the model as discounted
+    /// samples (see [`crate::transfer`]). `None` is byte-identical to
+    /// [`Self::tune_db`] — the `--no-transfer` escape hatch.
+    #[allow(clippy::too_many_arguments)]
+    pub fn tune_db_transfer(
+        &self,
+        prog: &Program,
+        ctx: &TuneContext,
+        model: &mut dyn CostModel,
+        measurer: &mut dyn Measurer,
+        db: &mut dyn Database,
+        transfer: Option<&TransferPool>,
+        seed: u64,
+    ) -> TuneResult {
         let designs = ctx.generate(prog, seed);
         let design_traces: Vec<Trace> = designs.into_iter().map(|d| d.trace).collect();
-        self.tune_with_db(prog, ctx, &design_traces, &[], model, measurer, db, seed)
+        self.tune_with_db(prog, ctx, &design_traces, &[], model, measurer, db, transfer, seed)
     }
 
     /// Tune against a precomputed design space (the trace skeletons from a
@@ -213,7 +242,7 @@ impl EvolutionarySearch {
         // pre-database search: no warm start, no pretraining, and the
         // committed records die with this call.
         let mut scratch = InMemoryDb::new();
-        self.tune_with_db(prog, ctx, design_traces, warm_start, model, measurer, &mut scratch, seed)
+        self.tune_with_db(prog, ctx, design_traces, warm_start, model, measurer, &mut scratch, None, seed)
     }
 
     /// The full database-backed search (paper §5: search <-> database <->
@@ -223,6 +252,23 @@ impl EvolutionarySearch {
     /// (including validator rejections) is committed back so the next run
     /// — same process or a later session re-opening a
     /// [`crate::db::JsonFileDb`] — resumes instead of restarting.
+    ///
+    /// Only records stamped with the current [`crate::sim::SIM_VERSION`]
+    /// participate in the warm start: a record measured under an older
+    /// simulator model is excluded from the elite pool and best-so-far
+    /// (its latency is not commensurable) *and* from the dedup set (its
+    /// candidate deserves a fresh measurement under the current model —
+    /// keeping it deduplicated would freeze the stale latency in
+    /// forever). Excluded records are counted in
+    /// [`TuneResult::stale_skipped`].
+    ///
+    /// `transfer` optionally injects another target's records as priors
+    /// — see [`crate::transfer`] for the selection rules. Priors are
+    /// never truth: donor-derived seed candidates are measured on
+    /// *this* run's target (inside the trial budget, serially before
+    /// round 0 so the thread count stays irrelevant) before anything is
+    /// committed, reported, or allowed to update best-so-far; donor
+    /// latencies reach only the cost model, discounted.
     #[allow(clippy::too_many_arguments)]
     pub fn tune_with_db(
         &self,
@@ -233,6 +279,7 @@ impl EvolutionarySearch {
         model: &mut dyn CostModel,
         measurer: &mut dyn Measurer,
         db: &mut dyn Database,
+        transfer: Option<&TransferPool>,
         seed: u64,
     ) -> TuneResult {
         let cfg = &self.cfg;
@@ -241,14 +288,36 @@ impl EvolutionarySearch {
         let threads = cfg.resolved_threads();
         let chain_pop = (cfg.population / chains).max(1);
 
-        // Database warm start: prior candidates must not be re-measured
-        // (they seed the dedup set), the best recorded traces join the
-        // elite pool, and the best record becomes the starting
-        // best-so-far — so a warm run can only improve on its history.
+        // Database warm start: prior sim-compatible candidates must not
+        // be re-measured (they seed the dedup set), the best recorded
+        // traces join the elite pool, and the best record becomes the
+        // starting best-so-far — so a warm run can only improve on its
+        // history.
         let target_name = measurer.target_name();
         let wid = db.register_workload(&prog.name, structural_hash(prog), &target_name);
-        let mut measured_hashes: HashSet<u64> = db.candidate_hashes(wid).into_iter().collect();
-        let db_top = db.query_top_k(wid, WARM_TOP_K);
+        let all_records = db.records_for(wid);
+        let mut stale_skipped = 0usize;
+        let mut measured_hashes: HashSet<u64> = HashSet::new();
+        let mut compat_success: Vec<&TuningRecord> = Vec::new();
+        for r in &all_records {
+            if r.sim_version != crate::sim::SIM_VERSION {
+                stale_skipped += 1;
+                continue;
+            }
+            measured_hashes.insert(r.cand_hash);
+            if !r.is_failed() {
+                compat_success.push(r);
+            }
+        }
+        // Same criterion as `query_top_k`: ascending best latency,
+        // stable sort so commit order breaks ties.
+        compat_success.sort_by(|a, b| {
+            let (Some(la), Some(lb)) = (a.best_latency(), b.best_latency()) else {
+                unreachable!("failed records filtered above");
+            };
+            la.total_cmp(&lb)
+        });
+        let db_top: Vec<&TuningRecord> = compat_success.iter().take(WARM_TOP_K).copied().collect();
         let warm_records = db_top.len();
         // Seed best-so-far from the best record that still replays (a
         // schedule-primitive change can invalidate old traces; falling
@@ -263,15 +332,90 @@ impl EvolutionarySearch {
             }
         }
         let mut elites: Vec<Trace> = warm_start.to_vec();
-        elites.extend(db_top.into_iter().map(|r| r.trace));
+        elites.extend(db_top.iter().map(|r| r.trace.clone()));
         elites.truncate(ELITE_POOL);
+        drop(db_top);
         // Pretrain the cost model from history so round 1 scores with a
-        // fit model instead of the cold neutral prior.
-        pretrain_cost_model(model, &*db, wid, prog, PRETRAIN_RECORDS);
+        // fit model instead of the cold neutral prior. Inlined over the
+        // compatible records already fetched and sorted above (same gate
+        // and order as [`pretrain_cost_model`]) — a second call would
+        // re-clone and re-sort the whole record set.
+        let mut pt_progs: Vec<Program> = Vec::new();
+        let mut pt_lats: Vec<f64> = Vec::new();
+        for rec in &compat_success {
+            if pt_progs.len() >= PRETRAIN_RECORDS {
+                break;
+            }
+            let Some(lat) = rec.best_latency() else {
+                continue;
+            };
+            if let Ok(sch) = crate::trace::replay(&rec.trace, prog, 0) {
+                pt_progs.push(sch.prog);
+                pt_lats.push(lat);
+            }
+        }
+        if !pt_progs.is_empty() {
+            let refs: Vec<&Program> = pt_progs.iter().collect();
+            model.update(&refs, &pt_lats);
+        }
+        drop(pt_progs);
+        drop(compat_success);
+        drop(all_records);
 
         let mut curve = Vec::new();
         let mut trials = 0usize;
         let mut round: u64 = 0;
+
+        // Cross-target transfer: inject the pool's priors. Runs strictly
+        // serially and before any parallel work, so `(seed, threads=1)
+        // == (seed, threads=N)` holds for transfer runs too.
+        let mut transferred_records = 0usize;
+        if let Some(pool) = transfer.filter(|p| !p.is_empty()) {
+            // (a) Feature-space model transfer: donor latencies become
+            // discounted training samples.
+            pool.pretrain(model, prog);
+            // (b) Elite seeding with mandatory destination re-measurement:
+            // at most half the trial budget, so seeding can never starve
+            // the evolutionary rounds that follow.
+            let seed_cap = pool.cfg.max_seeds.min(cfg.num_trials / 2);
+            let seeds = pool.seed_schedules(prog, ctx, &measured_hashes, seed_cap);
+            let mut progs = Vec::new();
+            let mut lats = Vec::new();
+            for (sch, cand_hash) in seeds {
+                let lat = measurer.measure(&sch.prog);
+                trials += 1;
+                measured_hashes.insert(cand_hash);
+                db.commit_record(TuningRecord {
+                    workload: wid,
+                    trace: sch.trace.clone(),
+                    latencies: lat.into_iter().collect(),
+                    target: target_name.clone(),
+                    seed,
+                    round: 0,
+                    cand_hash,
+                    sim_version: crate::sim::SIM_VERSION.to_string(),
+                    rule_set: ctx.rule_set().to_string(),
+                });
+                transferred_records += 1;
+                // Invalid on this target: recorded (so nothing retries
+                // it), but it contributes no latency anywhere.
+                let Some(lat) = lat else {
+                    continue;
+                };
+                progs.push(sch.prog.clone());
+                lats.push(lat);
+                let better = best.as_ref().map(|(b, _)| lat < *b).unwrap_or(true);
+                if better {
+                    best = Some((lat, sch.clone()));
+                    elites.insert(0, sch.trace.clone());
+                    elites.truncate(ELITE_POOL);
+                }
+                curve.push((trials, best.as_ref().unwrap().0));
+            }
+            // The destination re-measurements are full-weight samples.
+            let prog_refs: Vec<&Program> = progs.iter().collect();
+            model.update(&prog_refs, &lats);
+        }
 
         // Round 0's fork-and-sample happens up front; every later round's
         // is prefetched while the previous round's batch is measuring.
@@ -410,6 +554,8 @@ impl EvolutionarySearch {
             trials,
             curve,
             warm_records,
+            transferred_records,
+            stale_skipped,
         }
     }
 
@@ -689,6 +835,8 @@ impl ReplaySearch {
             trials,
             curve,
             warm_records: 0,
+            transferred_records: 0,
+            stale_skipped: 0,
         }
     }
 }

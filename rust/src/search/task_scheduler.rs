@@ -154,6 +154,7 @@ impl TaskScheduler {
                     &mut model,
                     &mut local,
                     &mut local_db,
+                    None,
                     seed.wrapping_add(ti as u64 * 7919),
                 );
                 (r, model)
@@ -207,6 +208,7 @@ impl TaskScheduler {
                 &mut models[ti],
                 &mut local,
                 &mut local_db,
+                None,
                 seed.wrapping_add(round as u64 * 7919),
             );
             spent += r.trials.max(1);

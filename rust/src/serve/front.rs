@@ -192,10 +192,12 @@ pub fn serve_batch(
 
 /// Change watcher over a database file: remembers the last
 /// [`FileSignature`] it saw and reports whether a fresh probe differs.
-/// The probe is one `stat` — cheap enough to poll at serving frequency —
-/// and the JSONL write path is append-only, so "signature changed" is a
-/// reliable "there are new records to index" signal (the in-process
-/// equivalent is [`crate::db::JsonFileDb::commit_counter`]).
+/// The probe is one `stat` plus three bounded reads — cheap enough to
+/// poll at serving frequency — and its content fingerprint catches even
+/// a same-length compaction rewrite landing in the same mtime tick, so
+/// "signature changed" is a reliable "there is something new to index"
+/// signal (the in-process equivalent is
+/// [`crate::db::JsonFileDb::commit_counter`]).
 pub struct DbWatcher {
     path: PathBuf,
     last: Option<FileSignature>,
@@ -296,6 +298,22 @@ mod tests {
         // simulator, same program).
         assert_eq!(out[1].latency_s, out[0].latency_s);
         assert!(db.num_records() > 0, "miss fallback must commit its records");
+    }
+
+    #[test]
+    fn watcher_sees_same_length_rewrite() {
+        // The serve --watch staleness bug: a rewrite that preserves the
+        // byte length (and, on coarse-mtime filesystems, the mtime tick)
+        // must still register as a change via the content fingerprint.
+        let path = std::env::temp_dir()
+            .join(format!("ms-watcher-rewrite-{}.jsonl", std::process::id()));
+        std::fs::write(&path, "abcdef\n").unwrap();
+        let mut w = DbWatcher::new(&path);
+        assert!(!w.changed(), "no write, no change");
+        std::fs::write(&path, "fedcba\n").unwrap();
+        assert!(w.changed(), "same-length rewrite not detected");
+        assert!(!w.changed(), "change must latch");
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

@@ -1,0 +1,396 @@
+//! Cross-target transfer priors (ROADMAP "cross-target transfer").
+//!
+//! The database keys every workload by `(structural hash, target)`, so a
+//! program tuned for target A starts *cold* on target B even though the
+//! two searches share most of their structure — and "Learning to
+//! Optimize Tensor Programs" (Chen et al.) showed exactly this kind of
+//! experience transfers. This module is the explicit bridge, built on
+//! the provenance stamps PR 4 put into every record (`sim_version` +
+//! canonical rule-set label) — the first feature that *reads* provenance
+//! instead of just writing it.
+//!
+//! The contract is **priors, never truth**:
+//!
+//! - A donor record's latency was measured on another target. It never
+//!   becomes a destination best, a curve point, or a committed record.
+//! - **Elite seeding**: the best compatible donor traces are replayed
+//!   against the destination space's postprocessor gate and then
+//!   *re-measured on the destination target* inside the normal trial
+//!   budget; only those destination measurements are committed (stamped
+//!   with the destination target and the current `sim_version`).
+//! - **Feature-space cost-model transfer**: donor `(program features,
+//!   latency)` pairs pretrain the cost model as *discounted* samples
+//!   ([`crate::cost_model::CostModel::update_prior`]) so round 1 ranks
+//!   with a warm prior instead of the cold neutral score, while native
+//!   destination measurements (weight 1) dominate as they accumulate.
+//!
+//! Compatibility is judged per donor record, not per donor database:
+//! the record's `sim_version` must match [`crate::sim::SIM_VERSION`]
+//! (latencies from an older simulator model are not commensurable), and
+//! its rule-set label must pass the destination context's
+//! [`crate::ctx::TuneContext::transfer_compatible`] predicate (a space
+//! this build cannot even express is a space it cannot vouch for).
+//! Incompatible donors are counted, never silently blended in.
+
+use std::collections::HashSet;
+
+use crate::cost_model::CostModel;
+use crate::ctx::TuneContext;
+use crate::db::{Database, TuningRecord};
+use crate::schedule::Schedule;
+use crate::tir::{structural_hash, Program};
+
+/// Knobs for donor selection and prior injection.
+#[derive(Debug, Clone)]
+pub struct TransferConfig {
+    /// *Compatible* donor records kept per source workload (best-first
+    /// by *source* latency — latencies are only comparable within one
+    /// source). The cap applies after compatibility filtering, so
+    /// incompatible records can never crowd compatible ones out of the
+    /// pool (the same crowd-out rule `pretrain_cost_model` follows).
+    pub per_source_top_k: usize,
+    /// Max donor-derived seed candidates eagerly re-measured on the
+    /// destination target (also capped at half the trial budget by the
+    /// search, so seeding can never starve the evolutionary rounds).
+    pub max_seeds: usize,
+    /// Max donor records replayed into cost-model prior samples.
+    pub max_model_records: usize,
+    /// Weight of a donor sample relative to a native destination
+    /// measurement, in `(0, 1]` — the source-target mismatch discount.
+    pub model_discount: f64,
+}
+
+impl Default for TransferConfig {
+    fn default() -> Self {
+        TransferConfig {
+            per_source_top_k: 32,
+            max_seeds: 4,
+            max_model_records: 256,
+            model_discount: 0.5,
+        }
+    }
+}
+
+/// Compatible donor records for one `(workload, destination target)`
+/// pair, plus the bookkeeping of what was refused. Built once per tuning
+/// call by [`TransferPool::collect`] and handed to
+/// [`crate::search::EvolutionarySearch::tune_with_db`] as an optional
+/// prior source.
+#[derive(Debug, Clone)]
+pub struct TransferPool {
+    pub cfg: TransferConfig,
+    /// Distinct donor target names, in registration order.
+    pub source_targets: Vec<String>,
+    /// Compatible donor records: grouped by donor registration order,
+    /// best-first within each donor (the deterministic order every
+    /// consumer iterates in).
+    pub records: Vec<TuningRecord>,
+    /// Donor records refused for a `sim_version` mismatch.
+    pub incompatible_sim: usize,
+    /// Donor records refused by the rule-set compatibility predicate
+    /// (unknown/retired rules, or pre-provenance records).
+    pub incompatible_rules: usize,
+}
+
+impl TransferPool {
+    /// Select compatible donor records for the workload `shash` about to
+    /// be tuned on `dest_target`. `source_target` restricts donors to
+    /// one named target (`tune --transfer-from`); `None` pools every
+    /// other target's records. `ctx` is the **destination** tuning
+    /// context — its registry vocabulary judges donor rule-set labels.
+    pub fn collect(
+        db: &dyn Database,
+        shash: u64,
+        dest_target: &str,
+        source_target: Option<&str>,
+        ctx: &TuneContext,
+        cfg: TransferConfig,
+    ) -> TransferPool {
+        let mut pool = TransferPool {
+            source_targets: Vec::new(),
+            records: Vec::new(),
+            incompatible_sim: 0,
+            incompatible_rules: 0,
+            cfg,
+        };
+        // Fetch every donor record and filter *before* applying the
+        // per-source cap: truncating first would let incompatible
+        // records crowd compatible ones out of the pool entirely.
+        let candidates = db.query_transfer_candidates(shash, dest_target, source_target, usize::MAX);
+        let mut kept_per_source: Vec<(String, usize)> = Vec::new();
+        for rec in candidates {
+            if rec.sim_version != crate::sim::SIM_VERSION {
+                pool.incompatible_sim += 1;
+                continue;
+            }
+            if !ctx.transfer_compatible(&rec.rule_set) {
+                pool.incompatible_rules += 1;
+                continue;
+            }
+            let idx = match kept_per_source.iter().position(|(t, _)| t == &rec.target) {
+                Some(i) => i,
+                None => {
+                    kept_per_source.push((rec.target.clone(), 0));
+                    kept_per_source.len() - 1
+                }
+            };
+            if kept_per_source[idx].1 >= pool.cfg.per_source_top_k {
+                continue; // cap compatible records per source (best-first order)
+            }
+            kept_per_source[idx].1 += 1;
+            if !pool.source_targets.contains(&rec.target) {
+                pool.source_targets.push(rec.target.clone());
+            }
+            pool.records.push(rec);
+        }
+        pool
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    /// Donor records refused during [`TransferPool::collect`].
+    pub fn incompatible(&self) -> usize {
+        self.incompatible_sim + self.incompatible_rules
+    }
+
+    /// Feature-space cost-model transfer: replay up to
+    /// `max_model_records` donors against the destination base program
+    /// and feed `(program, donor latency)` pairs to the model as one
+    /// discounted prior batch. Donor latencies carry cross-target scale
+    /// error — the discount (plus the model's preference for ranking
+    /// over absolute error) is what keeps them a prior rather than
+    /// truth. Returns the number of samples fed.
+    pub fn pretrain(&self, model: &mut dyn CostModel, prog: &Program) -> usize {
+        let mut progs: Vec<Program> = Vec::new();
+        let mut lats: Vec<f64> = Vec::new();
+        for rec in self.records.iter().take(self.cfg.max_model_records) {
+            let Some(lat) = rec.best_latency() else {
+                continue;
+            };
+            if let Ok(sch) = crate::trace::replay(&rec.trace, prog, 0) {
+                progs.push(sch.prog);
+                lats.push(lat);
+            }
+        }
+        if progs.is_empty() {
+            return 0;
+        }
+        let refs: Vec<&Program> = progs.iter().collect();
+        model.update_prior(&refs, &lats, self.cfg.model_discount);
+        progs.len()
+    }
+
+    /// Elite seeding: replay the best donors into destination candidate
+    /// schedules — gated by the destination context's postprocessor
+    /// pipeline, deduplicated against `already_measured` (candidates the
+    /// destination has already paid for) and against each other — for
+    /// the search to re-measure on the destination target. Returns at
+    /// most `max` `(schedule, candidate hash)` pairs, in donor order.
+    /// Nothing here touches a database or a result: committing is the
+    /// search's job, *after* the destination measurement.
+    pub fn seed_schedules(
+        &self,
+        prog: &Program,
+        ctx: &TuneContext,
+        already_measured: &HashSet<u64>,
+        max: usize,
+    ) -> Vec<(Schedule, u64)> {
+        let mut out: Vec<(Schedule, u64)> = Vec::with_capacity(max.min(self.records.len()));
+        let mut picked: HashSet<u64> = HashSet::new();
+        for rec in &self.records {
+            if out.len() >= max {
+                break;
+            }
+            let Ok(sch) = crate::trace::replay(&rec.trace, prog, 0) else {
+                continue;
+            };
+            if !ctx.postprocess(&sch) {
+                continue;
+            }
+            let h = structural_hash(&sch.prog);
+            if already_measured.contains(&h) || !picked.insert(h) {
+                continue;
+            }
+            out.push((sch, h));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost_model::GbtCostModel;
+    use crate::db::InMemoryDb;
+    use crate::sim::Target;
+    use crate::trace::replay::replay_fresh;
+    use crate::trace::Trace;
+    use crate::workloads;
+
+    fn prog() -> Program {
+        workloads::matmul(1, 64, 64, 64)
+    }
+
+    /// A replayable trace for the program, drawn from the cpu space.
+    fn cpu_trace(seed: u64) -> Trace {
+        let ctx = TuneContext::generic(Target::cpu_avx512());
+        let designs = ctx.generate(&prog(), 1);
+        for d in &designs {
+            if let Ok(sch) = replay_fresh(&d.trace, &prog(), seed) {
+                return sch.trace;
+            }
+        }
+        panic!("no design replays");
+    }
+
+    fn donor_db(records: Vec<TuningRecord>) -> InMemoryDb {
+        let mut db = InMemoryDb::new();
+        let wid = db.register_workload("w", structural_hash(&prog()), "cpu-avx512");
+        assert_eq!(wid, 0);
+        for r in records {
+            db.commit_record(r);
+        }
+        db
+    }
+
+    fn donor_rec(trace: Trace, lat: f64, sim: &str, rules: &str, cand: u64) -> TuningRecord {
+        TuningRecord {
+            workload: 0,
+            trace,
+            latencies: vec![lat],
+            target: "cpu-avx512".into(),
+            seed: 1,
+            round: 0,
+            cand_hash: cand,
+            sim_version: sim.into(),
+            rule_set: rules.into(),
+        }
+    }
+
+    #[test]
+    fn collect_filters_incompatible_donors() {
+        let cpu_rules = TuneContext::generic(Target::cpu_avx512()).rule_set().to_string();
+        let db = donor_db(vec![
+            donor_rec(cpu_trace(1), 2e-6, crate::sim::SIM_VERSION, &cpu_rules, 1),
+            donor_rec(cpu_trace(2), 1e-6, "sim-v0-retired", &cpu_rules, 2),
+            donor_rec(cpu_trace(3), 3e-6, crate::sim::SIM_VERSION, "ghost-rule #00000000", 3),
+            donor_rec(cpu_trace(4), 4e-6, crate::sim::SIM_VERSION, "", 4), // pre-provenance
+        ]);
+        let gpu_ctx = TuneContext::generic(Target::gpu());
+        let pool = TransferPool::collect(
+            &db,
+            structural_hash(&prog()),
+            "gpu-rtx3070",
+            Some("cpu-avx512"),
+            &gpu_ctx,
+            TransferConfig::default(),
+        );
+        assert_eq!(pool.len(), 1, "only the fully compatible donor survives");
+        assert_eq!(pool.records[0].cand_hash, 1);
+        assert_eq!(pool.incompatible_sim, 1);
+        assert_eq!(pool.incompatible_rules, 2);
+        assert_eq!(pool.source_targets, vec!["cpu-avx512".to_string()]);
+        // The same db offers nothing when the destination IS the source.
+        let cpu_ctx = TuneContext::generic(Target::cpu_avx512());
+        let self_pool = TransferPool::collect(
+            &db,
+            structural_hash(&prog()),
+            "cpu-avx512",
+            None,
+            &cpu_ctx,
+            TransferConfig::default(),
+        );
+        assert!(self_pool.is_empty(), "a target must never donate to itself");
+        assert_eq!(self_pool.incompatible(), 0);
+    }
+
+    #[test]
+    fn incompatible_donors_never_crowd_out_compatible_ones() {
+        // The donor's BEST record is stale; with a per-source cap of 1,
+        // the pool must still contain the (worse-ranked) compatible
+        // record — filtering happens before the cap, not after.
+        let cpu_rules = TuneContext::generic(Target::cpu_avx512()).rule_set().to_string();
+        let db = donor_db(vec![
+            donor_rec(cpu_trace(1), 1e-6, "sim-v0-retired", &cpu_rules, 1), // stale best
+            donor_rec(cpu_trace(2), 2e-6, crate::sim::SIM_VERSION, &cpu_rules, 2),
+        ]);
+        let gpu_ctx = TuneContext::generic(Target::gpu());
+        let cfg = TransferConfig { per_source_top_k: 1, ..TransferConfig::default() };
+        let pool =
+            TransferPool::collect(&db, structural_hash(&prog()), "gpu-rtx3070", None, &gpu_ctx, cfg);
+        assert_eq!(pool.len(), 1, "compatible donor crowded out by a stale one");
+        assert_eq!(pool.records[0].cand_hash, 2);
+        assert_eq!(pool.incompatible_sim, 1);
+        // And the cap itself still binds: two compatible records, cap 1.
+        let db2 = donor_db(vec![
+            donor_rec(cpu_trace(3), 1e-6, crate::sim::SIM_VERSION, &cpu_rules, 3),
+            donor_rec(cpu_trace(4), 2e-6, crate::sim::SIM_VERSION, &cpu_rules, 4),
+        ]);
+        let cfg = TransferConfig { per_source_top_k: 1, ..TransferConfig::default() };
+        let pool2 =
+            TransferPool::collect(&db2, structural_hash(&prog()), "gpu-rtx3070", None, &gpu_ctx, cfg);
+        assert_eq!(pool2.len(), 1);
+        assert_eq!(pool2.records[0].cand_hash, 3, "cap must keep the best-ranked compatible record");
+    }
+
+    #[test]
+    fn pretrain_feeds_discounted_donor_samples() {
+        let cpu_rules = TuneContext::generic(Target::cpu_avx512()).rule_set().to_string();
+        let db = donor_db(vec![
+            donor_rec(cpu_trace(1), 2e-6, crate::sim::SIM_VERSION, &cpu_rules, 1),
+            donor_rec(cpu_trace(2), 3e-6, crate::sim::SIM_VERSION, &cpu_rules, 2),
+        ]);
+        let gpu_ctx = TuneContext::generic(Target::gpu());
+        let pool = TransferPool::collect(
+            &db,
+            structural_hash(&prog()),
+            "gpu-rtx3070",
+            None,
+            &gpu_ctx,
+            TransferConfig::default(),
+        );
+        let mut model = GbtCostModel::new();
+        let fed = pool.pretrain(&mut model, &prog());
+        assert_eq!(fed, 2);
+        assert_eq!(model.n_samples(), 2);
+        let p = prog();
+        assert!(model.predict(&[&p])[0] != 0.0, "model still cold after donor pretraining");
+    }
+
+    #[test]
+    fn seed_schedules_dedup_and_respect_caps() {
+        let cpu_rules = TuneContext::generic(Target::cpu_avx512()).rule_set().to_string();
+        let t = cpu_trace(1);
+        let db = donor_db(vec![
+            donor_rec(t.clone(), 2e-6, crate::sim::SIM_VERSION, &cpu_rules, 1),
+            // Same trace again: replays to the same candidate, must dedup.
+            donor_rec(t, 2.5e-6, crate::sim::SIM_VERSION, &cpu_rules, 1),
+            donor_rec(cpu_trace(9), 3e-6, crate::sim::SIM_VERSION, &cpu_rules, 2),
+        ]);
+        let gpu_ctx = TuneContext::generic(Target::gpu());
+        let pool = TransferPool::collect(
+            &db,
+            structural_hash(&prog()),
+            "gpu-rtx3070",
+            None,
+            &gpu_ctx,
+            TransferConfig::default(),
+        );
+        let seeds = pool.seed_schedules(&prog(), &gpu_ctx, &HashSet::new(), 8);
+        let hashes: Vec<u64> = seeds.iter().map(|(_, h)| *h).collect();
+        let unique: HashSet<u64> = hashes.iter().copied().collect();
+        assert_eq!(unique.len(), hashes.len(), "duplicate seed candidates");
+        assert!(!seeds.is_empty());
+        // Already-measured candidates are skipped...
+        let all: HashSet<u64> = hashes.iter().copied().collect();
+        assert!(pool.seed_schedules(&prog(), &gpu_ctx, &all, 8).is_empty());
+        // ...and the cap bounds the output.
+        assert!(pool.seed_schedules(&prog(), &gpu_ctx, &HashSet::new(), 1).len() <= 1);
+    }
+}

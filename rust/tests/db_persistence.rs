@@ -105,9 +105,10 @@ fn pretraining_from_file_fits_the_model() {
     let prog = workloads::matmul(1, 128, 128, 128);
     let mut model = GbtCostModel::new();
     assert_eq!(model.n_samples(), 0);
-    let fed = pretrain_cost_model(&mut model, &db, 0, &prog, 256);
-    assert!(fed > 0);
-    assert_eq!(model.n_samples(), fed);
+    let stats = pretrain_cost_model(&mut model, &db, 0, &prog, 256);
+    assert!(stats.fed > 0);
+    assert_eq!(stats.stale_skipped, 0, "fresh records must all be sim-compatible");
+    assert_eq!(model.n_samples(), stats.fed);
     assert!(model.predict(&[&prog])[0] != 0.0, "model still cold after file pretrain");
 }
 

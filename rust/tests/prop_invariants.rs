@@ -408,7 +408,7 @@ fn check_compaction_case(n_workloads: usize, recs: &[RandRecord], top_k: usize) 
         .collect();
     drop(db);
 
-    let policy = CompactionPolicy { top_k };
+    let policy = CompactionPolicy::keep_top(top_k);
     compact_file(&path, &policy, false)?;
     let bytes_once = std::fs::read(&path).map_err(|e| e.to_string())?;
     let db = JsonFileDb::open(&path)?;
@@ -466,6 +466,128 @@ fn prop_compaction_preserves_queries_dedup_and_is_idempotent() {
         },
         |(n_workloads, recs)| check_compaction_case(*n_workloads, recs, TOP_K),
     );
+}
+
+#[test]
+fn prop_stale_rules_compaction_partitions_exactly() {
+    // Random records over a handful of rule-set labels: compacting with
+    // one label marked stale must (a) drop every record with that label,
+    // failures included, (b) answer the per-workload queries identically
+    // to first deleting those records and then compacting without the
+    // stale set (drop-then-gc == gc-with-stale-set), and (c) stay
+    // idempotent.
+    use metaschedule::db::keep_mask;
+    const LABELS: [&str; 3] =
+        ["live-a #aaaaaaaa", "live-b #bbbbbbbb", "ghost #cccccccc"];
+    check(
+        cfg(40),
+        |rng| {
+            let recs: Vec<(usize, Vec<f64>, u64, usize)> = vec_of(rng, 1, 24, |rng| {
+                let w = rng.gen_range(2);
+                let n_lat = rng.gen_range(3);
+                let lats: Vec<f64> =
+                    (0..n_lat).map(|_| (1 + rng.gen_range(8)) as f64 * 0.5e-6).collect();
+                (w, lats, rng.next_u64(), rng.gen_range(LABELS.len()))
+            });
+            recs
+        },
+        |recs| {
+            let mk = |(w, lats, cand, label): &(usize, Vec<f64>, u64, usize)| TuningRecord {
+                workload: *w,
+                trace: Trace { insts: vec![] },
+                latencies: lats.clone(),
+                target: "cpu".into(),
+                seed: 1,
+                round: *cand,
+                cand_hash: *cand,
+                sim_version: "simtest".into(),
+                rule_set: LABELS[*label].to_string(),
+            };
+            let records: Vec<TuningRecord> = recs.iter().map(mk).collect();
+            let stale_policy = CompactionPolicy {
+                top_k: 2,
+                stale_rule_sets: vec!["ghost #cccccccc".to_string()],
+            };
+            let mask = keep_mask(&records, &stale_policy);
+            // (a) no ghost survives; all live failures survive.
+            for (r, &keep) in records.iter().zip(&mask) {
+                if r.rule_set.starts_with("ghost") && keep {
+                    return Err("stale record survived".to_string());
+                }
+                if !r.rule_set.starts_with("ghost") && r.is_failed() && !keep {
+                    return Err("live failure dropped".to_string());
+                }
+            }
+            // (b) equivalence with delete-then-plain-gc.
+            let pre_deleted: Vec<TuningRecord> = records
+                .iter()
+                .filter(|r| !r.rule_set.starts_with("ghost"))
+                .cloned()
+                .collect();
+            let plain = CompactionPolicy::keep_top(2);
+            let expected: Vec<&TuningRecord> = pre_deleted
+                .iter()
+                .zip(keep_mask(&pre_deleted, &plain))
+                .filter(|(_, k)| *k)
+                .map(|(r, _)| r)
+                .collect();
+            let got: Vec<&TuningRecord> = records
+                .iter()
+                .zip(&mask)
+                .filter(|(_, k)| **k)
+                .map(|(r, _)| r)
+                .collect();
+            if got.len() != expected.len() || got.iter().zip(&expected).any(|(a, b)| **a != **b) {
+                return Err("stale-set gc differs from delete-then-gc".to_string());
+            }
+            // (c) idempotence.
+            let survivors: Vec<TuningRecord> = got.into_iter().cloned().collect();
+            if !keep_mask(&survivors, &stale_policy).iter().all(|&k| k) {
+                return Err("stale-rules compaction not idempotent".to_string());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_probe_fingerprint_is_content_function() {
+    // The watcher signature must change whenever bytes change (head,
+    // middle, or tail of the file) and must be a pure function of the
+    // content — same bytes, same fingerprint — regardless of length.
+    use metaschedule::db::probe;
+    let path = std::env::temp_dir().join(format!("ms-prop-probe-{}.jsonl", std::process::id()));
+    check(
+        cfg(30),
+        |rng| {
+            // Up to 3 probe windows' worth of bytes: the range over which
+            // the fingerprint guarantees full coverage (beyond that it
+            // samples).
+            let len = 1 + rng.gen_range(3000);
+            let flip = rng.gen_range(len);
+            (len, flip, rng.next_u64())
+        },
+        |&(len, flip, seed)| {
+            let mut bytes: Vec<u8> =
+                (0..len).map(|i| b'a' + ((i as u64 ^ seed) % 23) as u8).collect();
+            std::fs::write(&path, &bytes).map_err(|e| e.to_string())?;
+            let s1 = probe(&path).ok_or("probe failed")?;
+            let s1b = probe(&path).ok_or("probe failed")?;
+            if s1.content_fp != s1b.content_fp {
+                return Err("fingerprint not deterministic".into());
+            }
+            bytes[flip] = if bytes[flip] == b'z' { b'y' } else { b'z' };
+            std::fs::write(&path, &bytes).map_err(|e| e.to_string())?;
+            let s2 = probe(&path).ok_or("probe failed")?;
+            if s1.content_fp == s2.content_fp {
+                return Err(format!(
+                    "same-length rewrite at byte {flip}/{len} not detected"
+                ));
+            }
+            Ok(())
+        },
+    );
+    let _ = std::fs::remove_file(&path);
 }
 
 #[test]

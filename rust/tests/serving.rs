@@ -100,7 +100,7 @@ fn serve_batch_hits_identically_before_and_after_compaction() {
     assert_eq!(pre[0].latency_s, Some(best));
 
     let report =
-        metaschedule::db::compact_file(&path, &CompactionPolicy { top_k: 4 }, false).expect("compact");
+        metaschedule::db::compact_file(&path, &CompactionPolicy::keep_top(4), false).expect("compact");
     assert!(report.kept <= 4 + report.kept_failures);
     let post = serve_once(&path);
     assert!(post[0].hit, "compaction must not lose the served best");
@@ -114,7 +114,7 @@ fn tuning_with_auto_gc_stays_resumable() {
     let gc = || {
         Some(AutoGc {
             max_bytes: 4096,
-            policy: CompactionPolicy { top_k: 8 },
+            policy: CompactionPolicy::keep_top(8),
         })
     };
     let (first_best, warm0) = tune_gmm(&path, 24, 5, gc());
@@ -234,7 +234,7 @@ fn readers_observe_whole_snapshots_while_writer_commits_and_gcs() {
     let slot = Arc::new(SnapshotSlot::new(ServingCache::build(&db, 8)));
     db.set_auto_gc(Some(AutoGc {
         max_bytes: 2048,
-        policy: CompactionPolicy { top_k: 4 },
+        policy: CompactionPolicy::keep_top(4),
     }));
 
     fn observe(cache: &ServingCache) -> (Option<f64>, Option<f64>) {

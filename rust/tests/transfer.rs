@@ -1,0 +1,295 @@
+//! Cross-target transfer priors: the never-truth guarantee (nothing is
+//! committed or reported without a destination-target re-measurement),
+//! determinism of transfer runs (seed-reproducible, thread-count
+//! invariant), the `--no-transfer` escape hatch (pool `None` is
+//! byte-identical to the plain database search), and donor
+//! incompatibility handling (mismatched rule set / `sim_version`).
+
+use std::collections::HashSet;
+
+use metaschedule::cost_model::GbtCostModel;
+use metaschedule::ctx::TuneContext;
+use metaschedule::db::{Database, InMemoryDb, TuningRecord};
+use metaschedule::search::{EvolutionarySearch, Measurer, SearchConfig, SimMeasurer};
+use metaschedule::sim::Target;
+use metaschedule::tir::{structural_hash, Program};
+use metaschedule::trace::serde::trace_to_text;
+use metaschedule::transfer::{TransferConfig, TransferPool};
+use metaschedule::workloads;
+
+fn cfg(trials: usize, threads: usize) -> SearchConfig {
+    SearchConfig {
+        population: 24,
+        generations: 3,
+        num_trials: trials,
+        measure_batch: 8,
+        threads,
+        ..SearchConfig::default()
+    }
+}
+
+fn prog() -> Program {
+    workloads::matmul(1, 128, 128, 128)
+}
+
+/// Tune `prog()` on `target` into `db` (the donor-seeding and the
+/// destination runs share this helper).
+fn tune_on(
+    db: &mut dyn Database,
+    target: &Target,
+    pool: Option<&TransferPool>,
+    trials: usize,
+    threads: usize,
+    seed: u64,
+) -> metaschedule::search::TuneResult {
+    let ctx = TuneContext::generic(target.clone());
+    let mut model = GbtCostModel::new();
+    let mut measurer = SimMeasurer::new(target.clone());
+    EvolutionarySearch::new(cfg(trials, threads)).tune_db_transfer(
+        &prog(),
+        &ctx,
+        &mut model,
+        &mut measurer,
+        db,
+        pool,
+        seed,
+    )
+}
+
+/// A database seeded with cpu records for `prog()` (the donor side).
+fn cpu_seeded_db(seed: u64) -> InMemoryDb {
+    let mut db = InMemoryDb::new();
+    let r = tune_on(&mut db, &Target::cpu_avx512(), None, 32, 1, seed);
+    assert!(r.trials > 0);
+    db
+}
+
+fn gpu_pool(db: &dyn Database) -> TransferPool {
+    let ctx = TuneContext::generic(Target::gpu());
+    TransferPool::collect(
+        db,
+        structural_hash(&prog()),
+        Target::gpu().name,
+        Some(Target::cpu_avx512().name),
+        &ctx,
+        TransferConfig::default(),
+    )
+}
+
+fn dump(db: &dyn Database, wid: usize) -> Vec<String> {
+    db.records_for(wid).iter().map(|r| r.to_json().to_string()).collect()
+}
+
+#[test]
+fn transfer_injects_priors_and_commits_only_destination_records() {
+    let mut db = cpu_seeded_db(1);
+    let cpu_wid = db.find_workload(structural_hash(&prog()), "cpu-avx512").unwrap();
+    let cpu_records_before = dump(&db, cpu_wid);
+    let pool = gpu_pool(&db);
+    assert!(!pool.is_empty(), "cpu-seeded db must offer donors");
+    assert_eq!(pool.source_targets, vec!["cpu-avx512".to_string()]);
+
+    let r = tune_on(&mut db, &Target::gpu(), Some(&pool), 24, 1, 2);
+    assert!(r.transferred_records > 0, "no donor was re-measured");
+    assert!(r.transferred_records <= pool.cfg.max_seeds);
+    assert_eq!(r.warm_records, 0, "transfer must not masquerade as a native warm start");
+
+    // Everything committed for the gpu workload carries the destination
+    // target and the current sim version — donor records are priors,
+    // never truth.
+    let gpu_wid = db.find_workload(structural_hash(&prog()), "gpu-rtx3070").unwrap();
+    let gpu_records = db.records_for(gpu_wid);
+    assert_eq!(gpu_records.len(), r.trials, "every trial commits exactly one record");
+    for rec in &gpu_records {
+        assert_eq!(rec.target, "gpu-rtx3070", "foreign-target record committed");
+        assert_eq!(rec.sim_version, metaschedule::sim::SIM_VERSION);
+    }
+    // The donor side is untouched.
+    assert_eq!(dump(&db, cpu_wid), cpu_records_before, "transfer modified the donor records");
+}
+
+#[test]
+fn transfer_is_deterministic_across_threads_and_repeats() {
+    let donor = cpu_seeded_db(3);
+    let pool = gpu_pool(&donor);
+    assert!(!pool.is_empty());
+    let run = |threads: usize| {
+        let mut db = donor.clone();
+        let r = tune_on(&mut db, &Target::gpu(), Some(&pool), 24, threads, 4);
+        let gpu_wid = db.find_workload(structural_hash(&prog()), "gpu-rtx3070").unwrap();
+        (r, dump(&db, gpu_wid))
+    };
+    let (a, recs_a) = run(1);
+    for threads in [2, 4] {
+        let (b, recs_b) = run(threads);
+        assert_eq!(a.best_latency_s, b.best_latency_s, "diverged at {threads} threads");
+        assert_eq!(a.curve, b.curve);
+        assert_eq!(a.trials, b.trials);
+        assert_eq!(a.transferred_records, b.transferred_records);
+        assert_eq!(trace_to_text(&a.best_trace), trace_to_text(&b.best_trace));
+        assert_eq!(recs_a, recs_b, "committed records diverged with threads");
+    }
+    // Repeat run from the same snapshot: byte-identical.
+    let (c, recs_c) = run(1);
+    assert_eq!(a.best_latency_s, c.best_latency_s);
+    assert_eq!(a.curve, c.curve);
+    assert_eq!(recs_a, recs_c);
+}
+
+#[test]
+fn no_transfer_is_byte_identical_to_cold_start() {
+    // Pool `None` (what the CLI's --no-transfer resolves to) must
+    // reproduce the plain tune_db run exactly — same result, same
+    // committed bytes.
+    let donor = cpu_seeded_db(5);
+    let run = |pool: Option<&TransferPool>| {
+        let mut db = donor.clone();
+        let r = tune_on(&mut db, &Target::gpu(), pool, 24, 1, 6);
+        let gpu_wid = db.find_workload(structural_hash(&prog()), "gpu-rtx3070").unwrap();
+        (r, dump(&db, gpu_wid))
+    };
+    let (plain, plain_recs) = {
+        let mut db = donor.clone();
+        let ctx = TuneContext::generic(Target::gpu());
+        let mut model = GbtCostModel::new();
+        let mut measurer = SimMeasurer::new(Target::gpu());
+        let r = EvolutionarySearch::new(cfg(24, 1)).tune_db(
+            &prog(),
+            &ctx,
+            &mut model,
+            &mut measurer,
+            &mut db,
+            6,
+        );
+        let gpu_wid = db.find_workload(structural_hash(&prog()), "gpu-rtx3070").unwrap();
+        (r, dump(&db, gpu_wid))
+    };
+    let (none, none_recs) = run(None);
+    assert_eq!(plain.best_latency_s, none.best_latency_s);
+    assert_eq!(plain.curve, none.curve);
+    assert_eq!(none.transferred_records, 0);
+    assert_eq!(plain_recs, none_recs, "pool None must be byte-identical to tune_db");
+    // And a transfer run really is a *different* search (sanity that the
+    // escape hatch is escaping something).
+    let pool = gpu_pool(&donor);
+    let (with, _) = run(Some(&pool));
+    assert!(with.transferred_records > 0);
+}
+
+#[test]
+fn priors_are_never_reported_without_destination_measurement() {
+    // Property over seeds: the reported best is always a latency the
+    // destination simulator actually produced for the best program, the
+    // curve is monotone, and every committed record's latency set came
+    // from the destination target.
+    for seed in 0..4u64 {
+        let mut db = cpu_seeded_db(10 + seed);
+        let pool = gpu_pool(&db);
+        let r = tune_on(&mut db, &Target::gpu(), Some(&pool), 16, 1, 20 + seed);
+        let mut measurer = SimMeasurer::new(Target::gpu());
+        assert_eq!(
+            measurer.measure(&r.best_prog),
+            Some(r.best_latency_s),
+            "seed {seed}: reported best is not a destination measurement"
+        );
+        for w in r.curve.windows(2) {
+            assert!(w[1].1 <= w[0].1, "seed {seed}: curve not monotone");
+        }
+        let gpu_wid = db.find_workload(structural_hash(&prog()), "gpu-rtx3070").unwrap();
+        let recs = db.records_for(gpu_wid);
+        let best_committed = recs
+            .iter()
+            .filter_map(TuningRecord::best_latency)
+            .fold(f64::INFINITY, f64::min);
+        assert_eq!(best_committed, r.best_latency_s, "seed {seed}: best not committed");
+        // No candidate was measured twice (transferred seeds share the
+        // dedup set with the evolutionary rounds).
+        let hashes: Vec<u64> = recs.iter().map(|rec| rec.cand_hash).collect();
+        let unique: HashSet<u64> = hashes.iter().copied().collect();
+        assert_eq!(unique.len(), hashes.len(), "seed {seed}: candidate measured twice");
+    }
+}
+
+/// Build a donor db by hand so incompatible provenance can be injected.
+fn crafted_donor(records: Vec<(f64, String, String)>) -> InMemoryDb {
+    let ctx = TuneContext::generic(Target::cpu_avx512());
+    let designs = ctx.generate(&prog(), 1);
+    let sch = metaschedule::trace::replay::replay_fresh(&designs[0].trace, &prog(), 7)
+        .expect("design replays");
+    let mut db = InMemoryDb::new();
+    let wid = db.register_workload("w", structural_hash(&prog()), "cpu-avx512");
+    for (i, (lat, sim, rules)) in records.into_iter().enumerate() {
+        db.commit_record(TuningRecord {
+            workload: wid,
+            trace: sch.trace.clone(),
+            latencies: vec![lat],
+            target: "cpu-avx512".into(),
+            seed: 1,
+            round: i as u64,
+            cand_hash: i as u64 + 1,
+            sim_version: sim,
+            rule_set: rules,
+        });
+    }
+    db
+}
+
+#[test]
+fn incompatible_donors_are_refused_and_counted() {
+    let cpu_rules = TuneContext::generic(Target::cpu_avx512()).rule_set().to_string();
+    let db = crafted_donor(vec![
+        (2e-6, metaschedule::sim::SIM_VERSION.into(), cpu_rules.clone()),
+        (1e-6, "sim-v0-retired".into(), cpu_rules.clone()), // stale sim
+        (3e-6, metaschedule::sim::SIM_VERSION.into(), "ghost-rule #00000000".into()),
+        (4e-6, metaschedule::sim::SIM_VERSION.into(), String::new()), // pre-provenance
+    ]);
+    let pool = gpu_pool(&db);
+    assert_eq!(pool.len(), 1, "exactly one donor is fully compatible");
+    assert_eq!(pool.incompatible_sim, 1);
+    assert_eq!(pool.incompatible_rules, 2);
+    assert_eq!(pool.incompatible(), 3);
+}
+
+#[test]
+fn warm_start_skips_stale_sim_records() {
+    // A stale-version record with an impossibly good latency must not
+    // seed best-so-far, the elite pool, or the dedup set — and the run
+    // must report how many records it refused.
+    let target = Target::cpu_avx512();
+    let mut db = InMemoryDb::new();
+    let cold = tune_on(&mut db, &target, None, 24, 1, 7);
+    assert_eq!(cold.stale_skipped, 0);
+    let wid = db.find_workload(structural_hash(&prog()), target.name).unwrap();
+    // Inject a stale record claiming a latency nothing real can beat.
+    let mut stale = db.query_top_k(wid, 1).remove(0);
+    stale.sim_version = "sim-v0-retired".into();
+    stale.latencies = vec![1e-15];
+    stale.cand_hash = u64::MAX; // unique candidate
+    db.commit_record(stale);
+
+    let warm = tune_on(&mut db, &target, None, 16, 1, 7);
+    assert!(warm.stale_skipped >= 1, "stale record not counted");
+    assert!(
+        warm.best_latency_s > 1e-14,
+        "stale latency {} adopted as truth",
+        warm.best_latency_s
+    );
+    // The reported best is a real destination measurement.
+    let mut measurer = SimMeasurer::new(target.clone());
+    assert_eq!(measurer.measure(&warm.best_prog), Some(warm.best_latency_s));
+    // Warm start still works off the compatible records.
+    assert!(warm.warm_records > 0);
+}
+
+#[test]
+fn transfer_pool_respects_trial_budget() {
+    // Seeding is capped at half the budget: a tiny-budget run must keep
+    // most of its trials for the evolutionary rounds.
+    let donor = cpu_seeded_db(9);
+    let pool = gpu_pool(&donor);
+    assert!(!pool.is_empty());
+    let mut db = donor.clone();
+    let r = tune_on(&mut db, &Target::gpu(), Some(&pool), 8, 1, 11);
+    assert!(r.transferred_records <= 4, "seeding overran the cap: {}", r.transferred_records);
+    assert!(r.trials <= 8, "budget overrun: {}", r.trials);
+}
