@@ -1,0 +1,242 @@
+//! Traffic replay against a *sharded* tuning database: ≥1M lookups at
+//! mixed hit/miss ratios through the same per-shard snapshot path the
+//! HTTP front serves from ([`metaschedule::serve::ShardedSnapshots`]),
+//! with per-operation latency percentiles (p50/p99) split by hit vs
+//! miss, written to `BENCH_serving.json` for CI artifact upload.
+//!
+//! ```sh
+//! cargo bench --bench serving_traffic             # full run (1.2M lookups)
+//! cargo bench --bench serving_traffic -- --smoke  # CI: tiny replay, same shape
+//! ```
+//!
+//! The replay measures the read path only — a "miss" here is a snapshot
+//! probe that answers `None` (the server would then consult admission
+//! control and possibly tune); tune-on-miss cost is a search benchmark,
+//! not a serving one, and would drown the lookup numbers.
+
+use std::collections::HashSet;
+use std::time::Instant;
+
+use metaschedule::db::{AnyDb, Database, ShardedDb, TuningRecord};
+use metaschedule::serve::ShardedSnapshots;
+use metaschedule::trace::{Inst, Trace};
+use metaschedule::util::json::Json;
+use metaschedule::util::rng::Rng;
+
+/// Scratch directory holding the sharded db, removed on drop so repeat
+/// runs start clean even after a panic.
+struct DirGuard(std::path::PathBuf);
+impl Drop for DirGuard {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.0);
+    }
+}
+
+/// Build a sharded on-disk db: `workloads` workloads x `records` records,
+/// batch-committed the way the group-commit writer would.
+fn synthetic_sharded_db(
+    dir: &std::path::Path,
+    shards: usize,
+    workloads: usize,
+    records: usize,
+) -> (ShardedDb, Vec<(u64, &'static str)>) {
+    let mut db = ShardedDb::create(dir, shards).expect("create sharded db");
+    let mut rng = Rng::seed_from_u64(7);
+    let mut keys = Vec::with_capacity(workloads);
+    let mut batch = Vec::with_capacity(workloads * records);
+    for w in 0..workloads {
+        let shash = rng.next_u64();
+        let target = if w % 2 == 0 { "cpu" } else { "gpu" };
+        let wid = db.register_workload(&format!("w{w}"), shash, target);
+        keys.push((shash, target));
+        for r in 0..records {
+            let lat = if r % 7 == 6 { None } else { Some((1.0 + rng.gen_f64()) * 1e-5) };
+            batch.push(TuningRecord {
+                workload: wid,
+                trace: Trace {
+                    insts: vec![Inst::GetBlock { name: format!("blk{w}"), out: 0 }],
+                },
+                latencies: lat.into_iter().collect(),
+                target: target.to_string(),
+                seed: 1,
+                round: r as u64,
+                cand_hash: rng.next_u64(),
+                sim_version: "simtest".into(),
+                rule_set: String::new(),
+            });
+        }
+    }
+    db.commit_batch(batch);
+    (db, keys)
+}
+
+/// Nearest-rank percentile over a sorted sample.
+fn pct(sorted_ns: &[u64], p: f64) -> f64 {
+    if sorted_ns.is_empty() {
+        return f64::NAN;
+    }
+    let idx = ((sorted_ns.len() - 1) as f64 * p).round() as usize;
+    sorted_ns[idx] as f64
+}
+
+struct MixResult {
+    name: String,
+    hit_ratio: f64,
+    lookups: usize,
+    hits: usize,
+    hit_p50: f64,
+    hit_p99: f64,
+    miss_p50: f64,
+    miss_p99: f64,
+    mops: f64,
+}
+
+/// Replay `lookups` requests at `hit_ratio` against the per-shard
+/// snapshots, timing every operation individually.
+fn replay(
+    name: &str,
+    snaps: &ShardedSnapshots,
+    keys: &[(u64, &'static str)],
+    known: &HashSet<u64>,
+    hit_ratio: f64,
+    lookups: usize,
+    seed: u64,
+) -> MixResult {
+    let mut rng = Rng::seed_from_u64(seed);
+    // Pre-generate the request stream so rng cost stays out of the
+    // timed region.
+    let mut reqs: Vec<(u64, &'static str, bool)> = Vec::with_capacity(lookups);
+    for _ in 0..lookups {
+        if rng.gen_f64() < hit_ratio {
+            let (shash, target) = keys[(rng.next_u64() as usize) % keys.len()];
+            reqs.push((shash, target, true));
+        } else {
+            // A shash outside the registered set: guaranteed miss.
+            let mut shash = rng.next_u64();
+            while known.contains(&shash) {
+                shash = rng.next_u64();
+            }
+            reqs.push((shash, "cpu", false));
+        }
+    }
+    let mut hit_ns: Vec<u64> = Vec::with_capacity(lookups);
+    let mut miss_ns: Vec<u64> = Vec::with_capacity(lookups);
+    let wall = Instant::now();
+    for &(shash, target, expect_hit) in &reqs {
+        let t = Instant::now();
+        let found = snaps.get(shash).lookup(shash, target).is_some();
+        let ns = t.elapsed().as_nanos() as u64;
+        assert_eq!(found, expect_hit, "snapshot disagreed with the request plan");
+        if found {
+            hit_ns.push(ns);
+        } else {
+            miss_ns.push(ns);
+        }
+    }
+    let wall_s = wall.elapsed().as_secs_f64();
+    hit_ns.sort_unstable();
+    miss_ns.sort_unstable();
+    MixResult {
+        name: name.into(),
+        hit_ratio,
+        lookups,
+        hits: hit_ns.len(),
+        hit_p50: pct(&hit_ns, 0.50),
+        hit_p99: pct(&hit_ns, 0.99),
+        miss_p50: pct(&miss_ns, 0.50),
+        miss_p99: pct(&miss_ns, 0.99),
+        mops: lookups as f64 / wall_s / 1e6,
+    }
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let (workloads, records, per_mix) = if smoke { (16, 8, 5_000) } else { (256, 32, 600_000) };
+    const SHARDS: usize = 8;
+
+    let dir = std::env::temp_dir().join(format!("ms-bench-serving-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let guard = DirGuard(dir.clone());
+    let (db, keys) = synthetic_sharded_db(&dir, SHARDS, workloads, records);
+    let known: HashSet<u64> = keys.iter().map(|&(h, _)| h).collect();
+
+    // Serve through the same reopened handle the server would use, so
+    // the replay covers the on-disk round trip, not just in-memory state.
+    drop(db);
+    let db = AnyDb::open(&dir).expect("reopen sharded db");
+    let snaps = ShardedSnapshots::build(&db, 8);
+    println!(
+        "serving traffic replay: {} workloads x {} records across {} shard(s), {} indexed{}",
+        workloads,
+        records,
+        db.num_shards(),
+        snaps.num_records(),
+        if smoke { " [smoke mode]" } else { "" }
+    );
+
+    let mixes = [("hit90", 0.90), ("hit50", 0.50)];
+    let mut results = Vec::new();
+    for (i, &(name, ratio)) in mixes.iter().enumerate() {
+        results.push(replay(name, &snaps, &keys, &known, ratio, per_mix, 1000 + i as u64));
+    }
+    let total: usize = results.iter().map(|r| r.lookups).sum();
+    if !smoke {
+        assert!(total >= 1_000_000, "full replay must cover >=1M lookups, got {total}");
+    }
+
+    let mut rows = Vec::new();
+    for r in &results {
+        rows.push(vec![
+            format!("{} ({:.0}% hit)", r.name, r.hit_ratio * 100.0),
+            format!("{}", r.lookups),
+            format!("{:.0} / {:.0}", r.hit_p50, r.hit_p99),
+            format!("{:.0} / {:.0}", r.miss_p50, r.miss_p99),
+            format!("{:.1}M/s", r.mops),
+        ]);
+    }
+    metaschedule::util::bench::print_table(
+        "sharded serving traffic replay (per-op ns)",
+        &["mix", "lookups", "hit p50/p99", "miss p50/p99", "throughput"],
+        &rows,
+    );
+
+    let json = Json::obj(vec![
+        ("bench", Json::str("serving_traffic")),
+        ("smoke", Json::Bool(smoke)),
+        ("shards", Json::num(SHARDS as f64)),
+        ("workloads", Json::num(workloads as f64)),
+        ("records_per_workload", Json::num(records as f64)),
+        ("total_lookups", Json::num(total as f64)),
+        (
+            "mixes",
+            Json::arr(results.iter().map(|r| {
+                Json::obj(vec![
+                    ("name", Json::str(r.name.clone())),
+                    ("hit_ratio", Json::num(r.hit_ratio)),
+                    ("lookups", Json::num(r.lookups as f64)),
+                    ("hits", Json::num(r.hits as f64)),
+                    ("misses", Json::num((r.lookups - r.hits) as f64)),
+                    (
+                        "hit_ns",
+                        Json::obj(vec![
+                            ("p50", Json::num(r.hit_p50)),
+                            ("p99", Json::num(r.hit_p99)),
+                        ]),
+                    ),
+                    (
+                        "miss_ns",
+                        Json::obj(vec![
+                            ("p50", Json::num(r.miss_p50)),
+                            ("p99", Json::num(r.miss_p99)),
+                        ]),
+                    ),
+                    ("throughput_mops", Json::num(r.mops)),
+                ])
+            })),
+        ),
+    ]);
+    let out = "BENCH_serving.json";
+    std::fs::write(out, format!("{}\n", json.to_string())).expect("write BENCH_serving.json");
+    println!("wrote {out}");
+    drop(guard);
+}

@@ -430,6 +430,40 @@ impl JsonFileDb {
             .unwrap_or_else(|e| panic!("tuning db append to {} failed: {e}", self.path.display()));
         self.commit_counter += 1;
     }
+
+    /// Group commit: append a whole batch of records with a single write
+    /// and a single flush, then run the auto-GC check once for the batch.
+    /// Equivalent to committing each record in order (same bytes, same
+    /// index state, same crash-recovery properties — every line is still
+    /// a self-contained record), but one syscall pair instead of one per
+    /// record. This is the write amplification fix behind the sharded
+    /// database's dedicated writer
+    /// ([`crate::db::sharded::group_commit_writer`]).
+    pub fn commit_batch(&mut self, recs: Vec<TuningRecord>) {
+        if recs.is_empty() {
+            return;
+        }
+        let mut buf = String::new();
+        if self.needs_newline {
+            self.needs_newline = false;
+            buf.push('\n');
+        }
+        for r in &recs {
+            let line = r.to_json().to_string();
+            debug_assert!(!line.contains('\n'), "JSONL line must be newline-free");
+            buf.push_str(&line);
+            buf.push('\n');
+        }
+        self.file
+            .write_all(buf.as_bytes())
+            .and_then(|()| self.file.flush())
+            .unwrap_or_else(|e| panic!("tuning db append to {} failed: {e}", self.path.display()));
+        self.commit_counter += recs.len() as u64;
+        for r in recs {
+            self.mem.commit_record(r);
+        }
+        self.maybe_auto_gc();
+    }
 }
 
 impl Database for JsonFileDb {
@@ -459,6 +493,30 @@ impl Database for JsonFileDb {
     fn commit_record(&mut self, rec: TuningRecord) {
         self.append_line(&rec.to_json());
         self.mem.commit_record(rec);
+        self.maybe_auto_gc();
+    }
+
+    fn records_for(&self, workload: WorkloadId) -> Vec<TuningRecord> {
+        self.mem.records_for(workload)
+    }
+
+    fn candidate_hashes(&self, workload: WorkloadId) -> Vec<u64> {
+        self.mem.candidate_hashes(workload)
+    }
+
+    fn num_records(&self) -> usize {
+        self.mem.num_records()
+    }
+
+    fn has_candidate(&self, workload: WorkloadId, cand_hash: u64) -> bool {
+        self.mem.has_candidate(workload, cand_hash)
+    }
+}
+
+impl JsonFileDb {
+    /// Size-triggered auto-GC check, run after every commit (single or
+    /// batched). See [`Self::set_auto_gc`] for the policy discussion.
+    fn maybe_auto_gc(&mut self) {
         if let Some(gc) = self.auto_gc.clone() {
             if self.file_len() > gc.max_bytes {
                 if self.skipped > 0 {
@@ -510,22 +568,6 @@ impl Database for JsonFileDb {
                 }
             }
         }
-    }
-
-    fn records_for(&self, workload: WorkloadId) -> Vec<TuningRecord> {
-        self.mem.records_for(workload)
-    }
-
-    fn candidate_hashes(&self, workload: WorkloadId) -> Vec<u64> {
-        self.mem.candidate_hashes(workload)
-    }
-
-    fn num_records(&self) -> usize {
-        self.mem.num_records()
-    }
-
-    fn has_candidate(&self, workload: WorkloadId, cand_hash: u64) -> bool {
-        self.mem.has_candidate(workload, cand_hash)
     }
 }
 
@@ -692,6 +734,58 @@ mod tests {
         let db = JsonFileDb::open(&path).unwrap();
         assert_eq!(db.num_records(), 2);
         assert_eq!(db.skipped_lines(), 1, "partial tail lingers until compaction");
+        assert_eq!(db.best_latency(0), Some(0.5));
+    }
+
+    #[test]
+    fn commit_batch_matches_per_record_commits_byte_for_byte() {
+        let (path_a, _ga) = tmp("batch-a");
+        let (path_b, _gb) = tmp("batch-b");
+        let recs: Vec<TuningRecord> =
+            (0..5u64).map(|i| rec(0, i, if i == 3 { None } else { Some(i as f64 + 1.0) })).collect();
+        {
+            let mut a = JsonFileDb::open(&path_a).unwrap();
+            a.register_workload("A", 1, "cpu");
+            for r in recs.clone() {
+                a.commit_record(r);
+            }
+            let mut b = JsonFileDb::open(&path_b).unwrap();
+            b.register_workload("A", 1, "cpu");
+            b.commit_batch(recs.clone());
+            assert_eq!(b.commit_counter(), a.commit_counter(), "batch counts every record");
+            assert_eq!(b.num_records(), 5);
+            assert_eq!(b.best_latency(0), Some(1.0));
+            assert!(b.has_candidate(0, 3), "failure in the batch indexed for dedup");
+        }
+        assert_eq!(
+            std::fs::read(&path_a).unwrap(),
+            std::fs::read(&path_b).unwrap(),
+            "group commit must write the same bytes as per-record commits"
+        );
+        // Empty batch: no write, no counter movement.
+        let mut b = JsonFileDb::open(&path_b).unwrap();
+        let len = b.file_len();
+        b.commit_batch(Vec::new());
+        assert_eq!(b.commit_counter(), 0);
+        assert_eq!(b.file_len(), len);
+    }
+
+    #[test]
+    fn commit_batch_after_truncated_tail_starts_fresh_line() {
+        let (path, _g) = tmp("batch-truncated");
+        {
+            let mut db = JsonFileDb::open(&path).unwrap();
+            let a = db.register_workload("A", 9, "cpu");
+            db.commit_record(rec(a, 1, Some(2.0)));
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::write(&path, &text[..text.len() - 4]).unwrap();
+        {
+            let mut db = JsonFileDb::open(&path).unwrap();
+            db.commit_batch(vec![rec(0, 2, Some(1.0)), rec(0, 3, Some(0.5))]);
+        }
+        let db = JsonFileDb::open(&path).unwrap();
+        assert_eq!(db.num_records(), 2, "batch records parse back past the partial tail");
         assert_eq!(db.best_latency(0), Some(0.5));
     }
 

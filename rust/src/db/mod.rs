@@ -16,6 +16,11 @@
 //!   format; re-opening the file warm-starts the next run.
 //! - [`SharedDb`] — mutex adapter so task-parallel scheduler rounds can
 //!   commit through one handle.
+//! - [`ShardedDb`] — the same JSONL format spread over per-shard files
+//!   routed by structural hash ([`sharded::shard_of`]): parallel
+//!   compaction, batched group commit ([`group_commit_writer`]), and
+//!   per-shard serving snapshots. [`AnyDb`] auto-detects which layout a
+//!   `--db` path holds.
 //! - [`compact`] — record GC: atomic top-k-per-workload rewrite of the
 //!   JSONL file (plus the size-triggered auto-GC hook inside
 //!   [`JsonFileDb`]); failures always survive for cross-session dedup.
@@ -24,6 +29,31 @@
 //!
 //! Iteration order everywhere is registration/commit order, never hash
 //! order, so warm-started runs stay bit-reproducible.
+//!
+//! The on-disk format is specified normatively in `docs/DB_FORMAT.md`.
+//!
+//! # Example
+//!
+//! ```
+//! use metaschedule::db::{Database, InMemoryDb, TuningRecord};
+//! use metaschedule::trace::Trace;
+//!
+//! let mut db = InMemoryDb::new();
+//! let wid = db.register_workload("GMM", 0x42, "cpu");
+//! db.commit_record(TuningRecord {
+//!     workload: wid,
+//!     trace: Trace { insts: vec![] },
+//!     latencies: vec![2.0e-5, 1.0e-5],
+//!     target: "cpu".into(),
+//!     seed: 7,
+//!     round: 0,
+//!     cand_hash: 1,
+//!     sim_version: "sim".into(),
+//!     rule_set: String::new(),
+//! });
+//! assert_eq!(db.best_latency(wid), Some(1.0e-5));
+//! assert!(db.has_candidate(wid, 1), "failed or not, a commit dedups");
+//! ```
 //!
 //! [`register_workload`]: Database::register_workload
 //! [`commit_record`]: Database::commit_record
@@ -35,6 +65,7 @@ pub mod json_file;
 pub mod memory;
 pub mod record;
 pub mod shared;
+pub mod sharded;
 pub mod stats;
 
 pub use compact::{compact_file, keep_mask, rule_set_matches, CompactionPolicy, CompactionReport};
@@ -42,6 +73,10 @@ pub use json_file::{load_readonly, probe, AutoGc, FileSignature, JsonFileDb};
 pub use memory::InMemoryDb;
 pub use record::TuningRecord;
 pub use shared::SharedDb;
+pub use sharded::{
+    compact_any, group_commit_writer, is_sharded, load_readonly_any, migrate_from_file, probe_db,
+    shard_file_name, shard_of, AnyDb, Manifest, ShardedDb, DEFAULT_SHARDS,
+};
 pub use stats::{DbStats, WorkloadStats};
 
 use crate::cost_model::CostModel;

@@ -1,0 +1,1183 @@
+//! Sharded JSONL persistence: one database spread over
+//! `shard-NN.jsonl` files in a directory, routed by structural hash.
+//!
+//! A single append-only file serializes every writer behind one flush
+//! path and makes compaction a stop-the-world rewrite of the whole
+//! history. Sharding fixes both without changing a byte of the record
+//! format: each shard file is itself a complete, standalone
+//! [`JsonFileDb`] (workload registrations + records, local ids starting
+//! at 0), and a workload lives in exactly the shard its structural hash
+//! routes to ([`shard_of`]). Shards therefore never share a workload,
+//! which is what makes per-shard compaction safe to run in parallel
+//! ([`ShardedDb::compact_parallel`]) and per-shard serving snapshots
+//! safe to refresh independently
+//! ([`crate::serve::ShardedSnapshots`]).
+//!
+//! # Directory layout
+//!
+//! ```text
+//! db/
+//!   MANIFEST.json      {"kind":"manifest","shards":8,"version":1}
+//!   shard-00.jsonl     standalone JSONL db (workloads with shash % 8 == 0)
+//!   shard-01.jsonl     ...
+//! ```
+//!
+//! The manifest pins the shard count — routing is `shash % shards`, so
+//! the count can never change silently without orphaning records (a
+//! re-shard is a [`migrate_from_file`]-style rewrite, never an in-place
+//! reinterpretation). See `docs/DB_FORMAT.md` for the normative spec.
+//!
+//! # Global ids
+//!
+//! [`ShardedDb`] presents the same [`Database`] trait as every other
+//! backend: callers see one registry with dense global
+//! [`WorkloadId`]s. Globals are assigned in discovery order — on open,
+//! shard-major (every workload of shard 0 in its local order, then
+//! shard 1, ...); within a session, registration order. Records inside
+//! a shard file carry that shard's *local* ids (each file stays a valid
+//! standalone db); the mapping is translated at the trait boundary in
+//! both directions. Per-workload record order — the order every
+//! determinism contract is written against — is exactly the shard
+//! file's commit order, unchanged by the mapping.
+//!
+//! # Group commit
+//!
+//! [`group_commit_writer`] is the dedicated writer: producers push
+//! [`TuningRecord`]s (global ids) into a
+//! [`crate::search::parallel::BoundedQueue`] and one writer thread
+//! drains it in opportunistic batches, paying one write+flush per shard
+//! per batch ([`ShardedDb::commit_batch`]) instead of one per record.
+//! Commit order within the queue is preserved, so the on-disk bytes are
+//! identical to per-record commits of the same sequence.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::db::compact::{is_stale, CompactionPolicy, CompactionReport};
+use crate::db::json_file::{probe, read_index, FileSignature, JsonFileDb};
+use crate::db::memory::InMemoryDb;
+use crate::db::record::TuningRecord;
+use crate::db::{Database, WorkloadEntry, WorkloadId};
+use crate::search::parallel::{parallel_map, BoundedQueue};
+use crate::util::json::Json;
+
+/// Shard count used when a new sharded database is created without an
+/// explicit `--shards`: small enough that a fresh db is not 64 empty
+/// files, large enough that parallel compaction has real work units.
+pub const DEFAULT_SHARDS: usize = 8;
+
+/// Hard cap on the manifest shard count (a typo'd `--shards 100000`
+/// must not create a hundred thousand files).
+pub const MAX_SHARDS: usize = 256;
+
+/// Manifest file name inside a sharded database directory. Its presence
+/// is what [`is_sharded`] keys on.
+pub const MANIFEST_FILE: &str = "MANIFEST.json";
+
+/// Route a structural hash to its shard index: `shash % num_shards`.
+/// Pure and stable across sessions — the property tests pin that the
+/// same record always lands in the same shard file no matter which
+/// process (or how many reopens) committed it.
+///
+/// # Examples
+///
+/// ```
+/// use metaschedule::db::shard_of;
+///
+/// assert_eq!(shard_of(13, 4), 1);
+/// // Stable: the route is a pure function of (hash, shard count).
+/// assert_eq!(shard_of(13, 4), shard_of(13, 4));
+/// // A shard count of 0 is treated as 1 — everything routes to shard 0.
+/// assert_eq!(shard_of(13, 0), 0);
+/// ```
+pub fn shard_of(shash: u64, num_shards: usize) -> usize {
+    (shash % num_shards.max(1) as u64) as usize
+}
+
+/// File name of shard `i` (`shard-00.jsonl`, `shard-01.jsonl`, ...).
+///
+/// ```
+/// assert_eq!(metaschedule::db::shard_file_name(3), "shard-03.jsonl");
+/// ```
+pub fn shard_file_name(i: usize) -> String {
+    format!("shard-{i:02}.jsonl")
+}
+
+/// Whether `path` looks like a sharded database directory (a directory
+/// containing a [`MANIFEST_FILE`]).
+pub fn is_sharded(path: impl AsRef<Path>) -> bool {
+    path.as_ref().join(MANIFEST_FILE).is_file()
+}
+
+/// The sharded database's manifest: the shard count, pinned on disk.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Manifest {
+    /// Format version (currently 1).
+    pub version: u64,
+    /// Number of shard files; routing is `shash % shards`.
+    pub shards: usize,
+}
+
+impl Manifest {
+    /// Serialize to the manifest JSON object (`kind: "manifest"`).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("kind", Json::str("manifest")),
+            ("version", Json::num(self.version as f64)),
+            ("shards", Json::num(self.shards as f64)),
+        ])
+    }
+
+    /// Parse back from the manifest JSON object.
+    pub fn from_json(j: &Json) -> Result<Manifest, String> {
+        if j.get("kind").and_then(Json::as_str) != Some("manifest") {
+            return Err("not a manifest object".into());
+        }
+        let version = crate::db::record::usize_field(j, "version")? as u64;
+        let shards = crate::db::record::usize_field(j, "shards")?;
+        if !(1..=MAX_SHARDS).contains(&shards) {
+            return Err(format!("shard count {shards} out of range 1..={MAX_SHARDS}"));
+        }
+        Ok(Manifest { version, shards })
+    }
+
+    /// Read the manifest of the sharded db at `dir`.
+    pub fn read(dir: &Path) -> Result<Manifest, String> {
+        let path = dir.join(MANIFEST_FILE);
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("read {}: {e}", path.display()))?;
+        let j = Json::parse(text.trim())
+            .map_err(|e| format!("{}: {e}", path.display()))?;
+        Manifest::from_json(&j).map_err(|e| format!("{}: {e}", path.display()))
+    }
+
+    /// Write the manifest atomically (temp file + fsync + rename), same
+    /// discipline as record compaction: a crash mid-write must never
+    /// leave a half-manifest that mis-routes every later lookup.
+    pub fn write(&self, dir: &Path) -> Result<(), String> {
+        use std::io::Write as _;
+        let path = dir.join(MANIFEST_FILE);
+        let tmp = dir.join(format!("{MANIFEST_FILE}.tmp"));
+        let write_all = || -> std::io::Result<()> {
+            let mut f = std::fs::File::create(&tmp)?;
+            writeln!(f, "{}", self.to_json().to_string())?;
+            f.sync_all()
+        };
+        if let Err(e) = write_all() {
+            let _ = std::fs::remove_file(&tmp);
+            return Err(format!("write {}: {e}", tmp.display()));
+        }
+        std::fs::rename(&tmp, &path)
+            .map_err(|e| format!("rename {} -> {}: {e}", tmp.display(), path.display()))
+    }
+}
+
+/// File-backed tuning database sharded by structural hash (`--db dir/`).
+/// Implements [`Database`] with global workload ids; see the module docs
+/// for the layout and id-mapping rules.
+pub struct ShardedDb {
+    dir: PathBuf,
+    manifest: Manifest,
+    shards: Vec<JsonFileDb>,
+    /// Global registry view (entries carry *global* ids).
+    entries: Vec<WorkloadEntry>,
+    /// Global id -> (shard index, shard-local id).
+    global: Vec<(usize, usize)>,
+    /// `(shash, target)` -> global id lookup accelerator.
+    by_key: HashMap<(u64, String), WorkloadId>,
+}
+
+/// Refuse to claim a non-empty directory that is clearly not a sharded
+/// tuning db (the directory-level analog of [`JsonFileDb`]'s
+/// foreign-file refusal: opening the wrong path must never scatter
+/// shard files into someone's unrelated directory).
+fn validate_foreign_dir(dir: &Path) -> Result<(), String> {
+    let Ok(read) = std::fs::read_dir(dir) else {
+        return Ok(()); // unreadable dirs fail later with a better error
+    };
+    for entry in read.flatten() {
+        let name = entry.file_name().to_string_lossy().to_string();
+        let is_ours = name == MANIFEST_FILE
+            || name == format!("{MANIFEST_FILE}.tmp")
+            || (name.starts_with("shard-")
+                && (name.ends_with(".jsonl") || name.ends_with(".compact-tmp")));
+        if !is_ours {
+            return Err(format!(
+                "{}: directory contains {name}, which is not part of a sharded tuning db — \
+                 refusing to claim it",
+                dir.display()
+            ));
+        }
+    }
+    Ok(())
+}
+
+impl ShardedDb {
+    /// Open (or create) a sharded database directory. A missing or empty
+    /// directory is initialized with `DEFAULT_SHARDS`; an existing
+    /// manifest pins the shard count. Per-shard corruption recovery is
+    /// [`JsonFileDb::open`]'s: corrupt record lines are skipped and
+    /// counted, registry damage in any shard fails the whole open.
+    pub fn open(dir: impl AsRef<Path>) -> Result<ShardedDb, String> {
+        ShardedDb::open_with(dir, None)
+    }
+
+    /// Create a new sharded database with an explicit shard count.
+    /// Errors if the directory already holds a manifest (the count is
+    /// pinned at creation; re-sharding is a migration, not a reopen).
+    pub fn create(dir: impl AsRef<Path>, shards: usize) -> Result<ShardedDb, String> {
+        let dir = dir.as_ref();
+        if is_sharded(dir) {
+            return Err(format!(
+                "{}: already a sharded db (manifest present); the shard count cannot be changed in place",
+                dir.display()
+            ));
+        }
+        ShardedDb::open_with(dir, Some(shards))
+    }
+
+    fn open_with(dir: impl AsRef<Path>, shards: Option<usize>) -> Result<ShardedDb, String> {
+        let dir = dir.as_ref().to_path_buf();
+        if dir.is_file() {
+            return Err(format!(
+                "{}: is a single-file db; serve it directly or convert with `db migrate --out <dir>`",
+                dir.display()
+            ));
+        }
+        std::fs::create_dir_all(&dir).map_err(|e| format!("mkdir {}: {e}", dir.display()))?;
+        let manifest = if is_sharded(&dir) {
+            let m = Manifest::read(&dir)?;
+            if let Some(n) = shards {
+                if n != m.shards {
+                    return Err(format!(
+                        "{}: manifest pins {} shard(s); requested {n} (re-shard via `db migrate`)",
+                        dir.display(),
+                        m.shards
+                    ));
+                }
+            }
+            m
+        } else {
+            validate_foreign_dir(&dir)?;
+            let n = shards.unwrap_or(DEFAULT_SHARDS);
+            if !(1..=MAX_SHARDS).contains(&n) {
+                return Err(format!("shard count {n} out of range 1..={MAX_SHARDS}"));
+            }
+            let m = Manifest { version: 1, shards: n };
+            m.write(&dir)?;
+            m
+        };
+        let mut shard_dbs = Vec::with_capacity(manifest.shards);
+        for i in 0..manifest.shards {
+            shard_dbs.push(JsonFileDb::open(dir.join(shard_file_name(i)))?);
+        }
+        let mut db = ShardedDb {
+            dir,
+            manifest,
+            shards: shard_dbs,
+            entries: Vec::new(),
+            global: Vec::new(),
+            by_key: HashMap::new(),
+        };
+        // Rebuild the global registry in shard-major discovery order,
+        // verifying routing as we go: an intact workload line sitting in
+        // the wrong shard file proves the layout was tampered with
+        // (moved files, hand-edited manifest) and every later lookup
+        // would silently miss it — registry damage, so the open refuses.
+        for s in 0..db.manifest.shards {
+            for e in db.shards[s].workload_entries() {
+                let expect = shard_of(e.shash, db.manifest.shards);
+                if expect != s {
+                    return Err(format!(
+                        "{}: workload {:016x} found in shard {s} but routes to shard {expect}; \
+                         shard layout damaged, refusing lossy recovery",
+                        db.dir.display(),
+                        e.shash
+                    ));
+                }
+                let gid = db.entries.len();
+                db.by_key.insert((e.shash, e.target.clone()), gid);
+                db.global.push((s, e.id));
+                db.entries.push(WorkloadEntry { id: gid, ..e });
+            }
+        }
+        Ok(db)
+    }
+
+    /// The database directory.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Shard count pinned by the manifest.
+    pub fn num_shards(&self) -> usize {
+        self.manifest.shards
+    }
+
+    /// Direct (read) access to one shard's standalone [`JsonFileDb`] —
+    /// the per-shard serving snapshot builds from this. Workload ids in
+    /// the returned handle are shard-local.
+    pub fn shard(&self, i: usize) -> &JsonFileDb {
+        &self.shards[i]
+    }
+
+    /// Corrupt lines recovered over across all shards at open time.
+    pub fn skipped_lines(&self) -> usize {
+        self.shards.iter().map(JsonFileDb::skipped_lines).sum()
+    }
+
+    /// `file:line: error` diagnostics across all shards.
+    pub fn skip_notes(&self) -> Vec<String> {
+        self.shards.iter().flat_map(|s| s.skip_notes().iter().cloned()).collect()
+    }
+
+    /// Total bytes across shard files (manifest excluded).
+    pub fn file_len(&self) -> u64 {
+        self.shards.iter().map(JsonFileDb::file_len).sum()
+    }
+
+    /// Lines appended through this handle across all shards since open.
+    pub fn commit_counter(&self) -> u64 {
+        self.shards.iter().map(JsonFileDb::commit_counter).sum()
+    }
+
+    /// All records across shards in shard-major order, with global
+    /// workload ids (the stale-rules refusal gate's view).
+    pub(crate) fn all_records(&self) -> Vec<TuningRecord> {
+        let mut out = Vec::new();
+        for (s, shard) in self.shards.iter().enumerate() {
+            for r in shard.records() {
+                let mut r = r.clone();
+                r.workload = self.global_id_of(s, r.workload);
+                out.push(r);
+            }
+        }
+        out
+    }
+
+    fn global_id_of(&self, shard: usize, local: usize) -> WorkloadId {
+        // `global` is small (one entry per workload); a linear scan is
+        // fine off the hot path (records_for translates per call, not
+        // per record — see below).
+        self.global
+            .iter()
+            .position(|&(s, l)| s == shard && l == local)
+            .expect("shard-local id registered at open or registration")
+    }
+
+    /// Group commit: split the batch by shard and pay one write + one
+    /// flush per shard with records ([`JsonFileDb::commit_batch`]).
+    /// Record order within each shard is batch order, so the resulting
+    /// bytes match committing the same sequence record-by-record.
+    /// `recs` carry global workload ids, like every [`Database`] call.
+    pub fn commit_batch(&mut self, recs: Vec<TuningRecord>) {
+        let mut per_shard: Vec<Vec<TuningRecord>> = vec![Vec::new(); self.manifest.shards];
+        for mut r in recs {
+            let (s, local) = *self
+                .global
+                .get(r.workload)
+                .unwrap_or_else(|| panic!("record for unregistered workload {}", r.workload));
+            r.workload = local;
+            per_shard[s].push(r);
+        }
+        for (s, batch) in per_shard.into_iter().enumerate() {
+            if !batch.is_empty() {
+                self.shards[s].commit_batch(batch);
+            }
+        }
+    }
+
+    /// Compact every shard sequentially; the aggregate report sums the
+    /// per-shard reports. Each shard rewrite is individually atomic
+    /// (temp + fsync + rename), so a crash between shards leaves every
+    /// shard either fully old or fully new — never torn.
+    pub fn compact(&mut self, policy: &CompactionPolicy) -> Result<CompactionReport, String> {
+        self.compact_parallel(policy, 1)
+    }
+
+    /// Compact shards on up to `threads` OS threads (0 = one per shard).
+    /// Safe because shards never share a workload: each rewrite is an
+    /// independent [`JsonFileDb::compact`] with the same policy, and the
+    /// thread count can never change what survives — only wall-clock.
+    pub fn compact_parallel(
+        &mut self,
+        policy: &CompactionPolicy,
+        threads: usize,
+    ) -> Result<CompactionReport, String> {
+        let shards = std::mem::take(&mut self.shards);
+        let threads = if threads == 0 { shards.len() } else { threads };
+        let results = parallel_map(shards, threads, |_, mut shard| {
+            let report = shard.compact(policy);
+            (shard, report)
+        });
+        let mut total = CompactionReport {
+            kept: 0,
+            dropped: 0,
+            kept_failures: 0,
+            stale_dropped: 0,
+            corrupt_dropped: 0,
+            bytes_before: 0,
+            bytes_after: 0,
+        };
+        let mut first_err = None;
+        for (shard, report) in results {
+            // Always restore every shard handle, even past an error —
+            // dropping one would orphan its records for this process.
+            self.shards.push(shard);
+            match report {
+                Ok(r) => {
+                    total.kept += r.kept;
+                    total.dropped += r.dropped;
+                    total.kept_failures += r.kept_failures;
+                    total.stale_dropped += r.stale_dropped;
+                    total.corrupt_dropped += r.corrupt_dropped;
+                    total.bytes_before += r.bytes_before;
+                    total.bytes_after += r.bytes_after;
+                }
+                Err(e) => first_err = first_err.or(Some(e)),
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(total),
+        }
+    }
+}
+
+impl Database for ShardedDb {
+    fn register_workload(&mut self, name: &str, shash: u64, target: &str) -> WorkloadId {
+        if let Some(&gid) = self.by_key.get(&(shash, target.to_string())) {
+            return gid;
+        }
+        let s = shard_of(shash, self.manifest.shards);
+        let local = self.shards[s].register_workload(name, shash, target);
+        let gid = self.entries.len();
+        self.by_key.insert((shash, target.to_string()), gid);
+        self.global.push((s, local));
+        self.entries.push(WorkloadEntry {
+            id: gid,
+            name: name.to_string(),
+            shash,
+            target: target.to_string(),
+        });
+        gid
+    }
+
+    fn find_workload(&self, shash: u64, target: &str) -> Option<WorkloadId> {
+        self.by_key.get(&(shash, target.to_string())).copied()
+    }
+
+    fn workload_entries(&self) -> Vec<WorkloadEntry> {
+        self.entries.clone()
+    }
+
+    fn commit_record(&mut self, mut rec: TuningRecord) {
+        let (s, local) = *self
+            .global
+            .get(rec.workload)
+            .unwrap_or_else(|| panic!("record for unregistered workload {}", rec.workload));
+        rec.workload = local;
+        self.shards[s].commit_record(rec);
+    }
+
+    fn records_for(&self, workload: WorkloadId) -> Vec<TuningRecord> {
+        let Some(&(s, local)) = self.global.get(workload) else {
+            return Vec::new();
+        };
+        let mut recs = self.shards[s].records_for(local);
+        for r in &mut recs {
+            r.workload = workload;
+        }
+        recs
+    }
+
+    fn candidate_hashes(&self, workload: WorkloadId) -> Vec<u64> {
+        match self.global.get(workload) {
+            Some(&(s, local)) => self.shards[s].candidate_hashes(local),
+            None => Vec::new(),
+        }
+    }
+
+    fn num_records(&self) -> usize {
+        self.shards.iter().map(|s| s.num_records()).sum()
+    }
+
+    fn has_candidate(&self, workload: WorkloadId, cand_hash: u64) -> bool {
+        match self.global.get(workload) {
+            Some(&(s, local)) => self.shards[s].has_candidate(local, cand_hash),
+            None => false,
+        }
+    }
+}
+
+/// Migrate a single-file JSONL db into a fresh sharded directory.
+/// Workloads keep their registration order (so global ids match the
+/// source) and every workload's records keep their commit order, which
+/// is why the migrated db answers `query_top_k`/`best_latency`
+/// byte-identically — the property tests pin that. The source file is
+/// read-only here; corrupt lines it carried are recovered over (and
+/// reported in the returned count) but never copied.
+pub fn migrate_from_file(
+    src: impl AsRef<Path>,
+    dest_dir: impl AsRef<Path>,
+    shards: usize,
+) -> Result<(ShardedDb, usize), String> {
+    let src = src.as_ref();
+    if !src.is_file() {
+        return Err(format!("no single-file database at {}", src.display()));
+    }
+    let loaded = read_index(src)?;
+    let mut out = ShardedDb::create(dest_dir, shards)?;
+    if out.num_records() > 0 || !out.workload_entries().is_empty() {
+        return Err(format!(
+            "{}: destination is not empty; migrate into a fresh directory",
+            out.dir().display()
+        ));
+    }
+    let mut id_map = Vec::with_capacity(loaded.mem.num_workloads());
+    for e in loaded.mem.workload_entries() {
+        id_map.push(out.register_workload(&e.name, e.shash, &e.target));
+    }
+    let recs: Vec<TuningRecord> = loaded
+        .mem
+        .records()
+        .iter()
+        .map(|r| {
+            let mut r = r.clone();
+            r.workload = id_map[r.workload];
+            r
+        })
+        .collect();
+    out.commit_batch(recs);
+    Ok((out, loaded.skipped))
+}
+
+/// The dedicated group-commit writer loop: drain `queue` until it is
+/// closed, committing opportunistic batches of up to `max_batch` records
+/// through [`ShardedDb::commit_batch`]. Blocks on the first record of a
+/// batch ([`BoundedQueue::pop`]), then extends without blocking
+/// ([`BoundedQueue::try_pop`]) — under load the batch fills and the
+/// flush amortizes; idle, every record still commits immediately.
+/// Returns the number of records committed. Run it on its own (scoped)
+/// thread; producers push records carrying global workload ids.
+pub fn group_commit_writer(
+    db: &mut ShardedDb,
+    queue: &BoundedQueue<TuningRecord>,
+    max_batch: usize,
+) -> usize {
+    let max_batch = max_batch.max(1);
+    let mut committed = 0usize;
+    while let Some(first) = queue.pop() {
+        let mut batch = vec![first];
+        while batch.len() < max_batch {
+            match queue.try_pop() {
+                Some(r) => batch.push(r),
+                None => break,
+            }
+        }
+        committed += batch.len();
+        db.commit_batch(batch);
+    }
+    committed
+}
+
+/// A file-backed database of either layout, auto-detected from the path:
+/// a directory (or a path whose [`MANIFEST_FILE`] exists) opens sharded,
+/// anything else opens as the classic single file. This is what the CLI
+/// (`--db`) constructs, so every subcommand — `tune`, `db stats`,
+/// `db top`, `serve` — works on both layouts through one handle.
+///
+/// ```no_run
+/// use metaschedule::db::{AnyDb, Database};
+///
+/// // A directory (with MANIFEST.json) opens sharded; a file opens as
+/// // single JSONL. Both answer the same `Database` queries.
+/// let mut db = AnyDb::open("tune-db")?;
+/// let wid = db.register_workload("GMM", 0xfeed_beef, "cpu");
+/// println!("{} record(s) across {} shard(s)", db.num_records(), db.num_shards());
+/// # let _ = wid;
+/// # Ok::<(), String>(())
+/// ```
+pub enum AnyDb {
+    /// Classic single-file JSONL db.
+    Single(JsonFileDb),
+    /// Sharded directory db.
+    Sharded(ShardedDb),
+}
+
+impl AnyDb {
+    /// Open `path`, auto-detecting the layout. A missing path creates a
+    /// single-file db (the backward-compatible default); pre-create a
+    /// directory (or `db migrate`) to get a sharded one.
+    pub fn open(path: impl AsRef<Path>) -> Result<AnyDb, String> {
+        let p = path.as_ref();
+        if is_sharded(p) || p.is_dir() {
+            Ok(AnyDb::Sharded(ShardedDb::open(p)?))
+        } else {
+            Ok(AnyDb::Single(JsonFileDb::open(p)?))
+        }
+    }
+
+    /// Shard count: 1 for a single-file db.
+    pub fn num_shards(&self) -> usize {
+        match self {
+            AnyDb::Single(_) => 1,
+            AnyDb::Sharded(s) => s.num_shards(),
+        }
+    }
+
+    /// Corrupt lines recovered over at open time (all shards).
+    pub fn skipped_lines(&self) -> usize {
+        match self {
+            AnyDb::Single(f) => f.skipped_lines(),
+            AnyDb::Sharded(s) => s.skipped_lines(),
+        }
+    }
+
+    /// `file:line: error` diagnostics for the first few skipped lines.
+    pub fn skip_notes(&self) -> Vec<String> {
+        match self {
+            AnyDb::Single(f) => f.skip_notes().to_vec(),
+            AnyDb::Sharded(s) => s.skip_notes(),
+        }
+    }
+
+    /// Total record bytes on disk (shard files summed; manifest excluded).
+    pub fn file_len(&self) -> u64 {
+        match self {
+            AnyDb::Single(f) => f.file_len(),
+            AnyDb::Sharded(s) => s.file_len(),
+        }
+    }
+
+    /// The sharded backend, when that is what the path held.
+    pub fn as_sharded(&self) -> Option<&ShardedDb> {
+        match self {
+            AnyDb::Single(_) => None,
+            AnyDb::Sharded(s) => Some(s),
+        }
+    }
+}
+
+impl Database for AnyDb {
+    fn register_workload(&mut self, name: &str, shash: u64, target: &str) -> WorkloadId {
+        match self {
+            AnyDb::Single(f) => f.register_workload(name, shash, target),
+            AnyDb::Sharded(s) => s.register_workload(name, shash, target),
+        }
+    }
+
+    fn find_workload(&self, shash: u64, target: &str) -> Option<WorkloadId> {
+        match self {
+            AnyDb::Single(f) => f.find_workload(shash, target),
+            AnyDb::Sharded(s) => s.find_workload(shash, target),
+        }
+    }
+
+    fn workload_entries(&self) -> Vec<WorkloadEntry> {
+        match self {
+            AnyDb::Single(f) => f.workload_entries(),
+            AnyDb::Sharded(s) => s.workload_entries(),
+        }
+    }
+
+    fn commit_record(&mut self, rec: TuningRecord) {
+        match self {
+            AnyDb::Single(f) => f.commit_record(rec),
+            AnyDb::Sharded(s) => s.commit_record(rec),
+        }
+    }
+
+    fn records_for(&self, workload: WorkloadId) -> Vec<TuningRecord> {
+        match self {
+            AnyDb::Single(f) => f.records_for(workload),
+            AnyDb::Sharded(s) => s.records_for(workload),
+        }
+    }
+
+    fn candidate_hashes(&self, workload: WorkloadId) -> Vec<u64> {
+        match self {
+            AnyDb::Single(f) => f.candidate_hashes(workload),
+            AnyDb::Sharded(s) => s.candidate_hashes(workload),
+        }
+    }
+
+    fn num_records(&self) -> usize {
+        match self {
+            AnyDb::Single(f) => f.num_records(),
+            AnyDb::Sharded(s) => s.num_records(),
+        }
+    }
+
+    fn has_candidate(&self, workload: WorkloadId, cand_hash: u64) -> bool {
+        match self {
+            AnyDb::Single(f) => f.has_candidate(workload, cand_hash),
+            AnyDb::Sharded(s) => s.has_candidate(workload, cand_hash),
+        }
+    }
+}
+
+/// Compact a database path of either layout, with [`crate::db::compact_file`]'s
+/// refusal semantics extended db-wide: corrupt lines recovered anywhere,
+/// or a stale-rules spec matching any record in any shard, refuse
+/// without `repair`. Sharded dbs compact their shards on up to
+/// `threads` OS threads (0 = one per shard); single files ignore
+/// `threads`.
+pub fn compact_any(
+    path: impl AsRef<Path>,
+    policy: &CompactionPolicy,
+    repair: bool,
+    threads: usize,
+) -> Result<CompactionReport, String> {
+    let path = path.as_ref();
+    if !is_sharded(path) && !path.is_dir() {
+        return crate::db::compact::compact_file(path, policy, repair);
+    }
+    let mut db = ShardedDb::open(path)?;
+    if db.skipped_lines() > 0 && !repair {
+        return Err(format!(
+            "{}: {} corrupt line(s) would be dropped permanently:\n  {}\nre-run with --repair to drop them",
+            path.display(),
+            db.skipped_lines(),
+            db.skip_notes().join("\n  ")
+        ));
+    }
+    if !repair {
+        let stale_matches = db.all_records().iter().filter(|r| is_stale(r, policy)).count();
+        if stale_matches > 0 {
+            return Err(format!(
+                "{}: --stale-rules would permanently drop {stale_matches} record(s) matching {:?}\nre-run with --repair to drop them",
+                path.display(),
+                policy.stale_rule_sets
+            ));
+        }
+    }
+    db.compact_parallel(policy, threads)
+}
+
+/// Load a database path of either layout into a read-only in-memory
+/// index with *global* ids (shard-major discovery order) — nothing is
+/// created or modified, so this works off a read-only mount. Returns the
+/// index plus the number of corrupt lines recovered over. The serving
+/// loader ([`crate::serve::ServingCache::load`]) is built on this.
+pub fn load_readonly_any(path: impl AsRef<Path>) -> Result<(InMemoryDb, usize), String> {
+    let path = path.as_ref();
+    if !is_sharded(path) && !path.is_dir() {
+        return crate::db::json_file::load_readonly(path);
+    }
+    let manifest = Manifest::read(path)?;
+    let mut mem = InMemoryDb::new();
+    let mut skipped = 0usize;
+    for i in 0..manifest.shards {
+        let loaded = read_index(&path.join(shard_file_name(i)))?;
+        skipped += loaded.skipped;
+        let mut id_map = Vec::with_capacity(loaded.mem.num_workloads());
+        for e in loaded.mem.workload_entries() {
+            id_map.push(mem.register_workload(&e.name, e.shash, &e.target));
+        }
+        for r in loaded.mem.records() {
+            let mut r = r.clone();
+            r.workload = id_map[r.workload];
+            mem.commit_record(r);
+        }
+    }
+    Ok((mem, skipped))
+}
+
+/// Change signature of a whole database path: one entry per constituent
+/// file. Single file: `[probe(file)]`. Sharded: the manifest's
+/// signature followed by every shard file's, in shard order — so a
+/// write to shard 7 changes the signature even when shard 0 is
+/// untouched, and a shard file appearing or vanishing changes it too
+/// (`None` holds the place of an absent file). `None` overall when the
+/// path does not exist at all. This is what `serve --watch` polls
+/// ([`crate::serve::DbWatcher`]).
+pub fn probe_db(path: impl AsRef<Path>) -> Option<Vec<Option<FileSignature>>> {
+    let path = path.as_ref();
+    if is_sharded(path) {
+        let mut sigs = vec![probe(path.join(MANIFEST_FILE))];
+        if let Ok(m) = Manifest::read(path) {
+            for i in 0..m.shards {
+                sigs.push(probe(path.join(shard_file_name(i))));
+            }
+        }
+        return Some(sigs);
+    }
+    if path.is_file() {
+        return Some(vec![probe(path)]);
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{Inst, Trace};
+
+    /// Unique temp dir per test, removed recursively on drop.
+    fn tmp_dir(name: &str) -> (PathBuf, DirGuard) {
+        let p = std::env::temp_dir().join(format!("ms-sharddb-{}-{name}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&p);
+        (p.clone(), DirGuard(p))
+    }
+
+    struct DirGuard(PathBuf);
+    impl Drop for DirGuard {
+        fn drop(&mut self) {
+            let _ = std::fs::remove_dir_all(&self.0);
+        }
+    }
+
+    fn rec(workload: WorkloadId, cand: u64, lat: Option<f64>) -> TuningRecord {
+        TuningRecord {
+            workload,
+            trace: Trace {
+                insts: vec![Inst::GetBlock { name: format!("b{cand}"), out: 0 }],
+            },
+            latencies: lat.into_iter().collect(),
+            target: "cpu".into(),
+            seed: 7,
+            round: cand,
+            cand_hash: cand,
+            sim_version: "simtest".into(),
+            rule_set: String::new(),
+        }
+    }
+
+    #[test]
+    fn manifest_roundtrips_and_validates() {
+        let m = Manifest { version: 1, shards: 8 };
+        let back = Manifest::from_json(&Json::parse(&m.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back, m);
+        let bad = Json::parse("{\"kind\":\"manifest\",\"version\":1,\"shards\":0}").unwrap();
+        assert!(Manifest::from_json(&bad).is_err(), "0 shards rejected");
+        let huge = Json::parse("{\"kind\":\"manifest\",\"version\":1,\"shards\":100000}").unwrap();
+        assert!(Manifest::from_json(&huge).is_err(), "absurd shard count rejected");
+    }
+
+    #[test]
+    fn routing_is_stable_and_partitioned() {
+        for n in [1usize, 2, 7, 8, 64] {
+            for shash in [0u64, 1, 7, 8, u64::MAX, 0xdead_beef] {
+                let s = shard_of(shash, n);
+                assert!(s < n);
+                assert_eq!(s, shard_of(shash, n), "routing must be a pure function");
+            }
+        }
+    }
+
+    #[test]
+    fn register_commit_reopen_across_shards() {
+        let (dir, _g) = tmp_dir("reopen");
+        {
+            let mut db = ShardedDb::create(&dir, 4).unwrap();
+            // shash 0..6 spread over shards 0..3 (mod 4).
+            let ids: Vec<_> =
+                (0..6u64).map(|h| db.register_workload(&format!("w{h}"), h, "cpu")).collect();
+            assert_eq!(ids, (0..6).collect::<Vec<_>>(), "global ids are dense");
+            for (i, &id) in ids.iter().enumerate() {
+                db.commit_record(rec(id, 100 + i as u64, Some(1.0 + i as f64)));
+                db.commit_record(rec(id, 200 + i as u64, None));
+            }
+            assert_eq!(db.num_records(), 12);
+            // Re-registration is idempotent across the shard mapping.
+            assert_eq!(db.register_workload("w3-again", 3, "cpu"), ids[3]);
+        }
+        let db = ShardedDb::open(&dir).unwrap();
+        assert_eq!(db.num_shards(), 4, "manifest pins the count");
+        assert_eq!(db.workload_entries().len(), 6);
+        assert_eq!(db.num_records(), 12);
+        assert_eq!(db.skipped_lines(), 0);
+        for h in 0..6u64 {
+            let id = db.find_workload(h, "cpu").expect("registered workload found");
+            assert_eq!(db.best_latency(id), Some(1.0 + h as f64));
+            assert!(db.has_candidate(id, 200 + h), "failure hash survives for dedup");
+            let recs = db.records_for(id);
+            assert_eq!(recs.len(), 2);
+            assert!(recs.iter().all(|r| r.workload == id), "records carry global ids");
+        }
+        // The workload actually lives in the shard its hash routes to.
+        for e in db.workload_entries() {
+            let s = shard_of(e.shash, db.num_shards());
+            assert!(db.shard(s).find_workload(e.shash, "cpu").is_some());
+        }
+    }
+
+    #[test]
+    fn shard_files_are_standalone_dbs() {
+        let (dir, _g) = tmp_dir("standalone");
+        {
+            let mut db = ShardedDb::create(&dir, 2).unwrap();
+            let a = db.register_workload("A", 2, "cpu"); // shard 0
+            let b = db.register_workload("B", 3, "cpu"); // shard 1
+            db.commit_record(rec(a, 1, Some(2.0)));
+            db.commit_record(rec(b, 2, Some(1.0)));
+        }
+        // Each shard file opens as a plain JsonFileDb with local ids.
+        let s0 = JsonFileDb::open(dir.join(shard_file_name(0))).unwrap();
+        assert_eq!(s0.workload_entries().len(), 1);
+        assert_eq!(s0.find_workload(2, "cpu"), Some(0), "local ids start at 0 per shard");
+        let s1 = JsonFileDb::open(dir.join(shard_file_name(1))).unwrap();
+        assert_eq!(s1.find_workload(3, "cpu"), Some(0));
+        assert_eq!(s1.best_latency(0), Some(1.0));
+    }
+
+    #[test]
+    fn misrouted_workload_fails_open() {
+        let (dir, _g) = tmp_dir("misrouted");
+        {
+            let mut db = ShardedDb::create(&dir, 2).unwrap();
+            db.register_workload("A", 2, "cpu");
+        }
+        // Simulate layout damage: move shard 0's content into shard 1.
+        let s0 = dir.join(shard_file_name(0));
+        let s1 = dir.join(shard_file_name(1));
+        std::fs::rename(&s0, &s1).unwrap();
+        let err = ShardedDb::open(&dir).unwrap_err();
+        assert!(err.contains("routes to shard"), "{err}");
+    }
+
+    #[test]
+    fn foreign_directory_refused() {
+        let (dir, _g) = tmp_dir("foreign");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("notes.txt"), "hello").unwrap();
+        let err = ShardedDb::open(&dir).unwrap_err();
+        assert!(err.contains("refusing to claim"), "{err}");
+        assert!(!is_sharded(&dir), "refusal must not drop a manifest into the dir");
+    }
+
+    #[test]
+    fn create_refuses_existing_and_open_refuses_count_change() {
+        let (dir, _g) = tmp_dir("pinned");
+        let _ = ShardedDb::create(&dir, 2).unwrap();
+        assert!(ShardedDb::create(&dir, 2).unwrap_err().contains("already"), "create is create-only");
+        let err = ShardedDb::open_with(&dir, Some(4)).unwrap_err();
+        assert!(err.contains("pins 2 shard"), "{err}");
+        assert!(ShardedDb::open(&dir).is_ok(), "plain open accepts the pinned count");
+    }
+
+    #[test]
+    fn commit_batch_groups_by_shard_and_matches_per_record_bytes() {
+        let (dir_a, _ga) = tmp_dir("batch-a");
+        let (dir_b, _gb) = tmp_dir("batch-b");
+        let mut a = ShardedDb::create(&dir_a, 3).unwrap();
+        let mut b = ShardedDb::create(&dir_b, 3).unwrap();
+        for h in 0..5u64 {
+            a.register_workload(&format!("w{h}"), h, "cpu");
+            b.register_workload(&format!("w{h}"), h, "cpu");
+        }
+        let recs: Vec<TuningRecord> = (0..20u64)
+            .map(|i| rec((i % 5) as usize, i, if i % 4 == 0 { None } else { Some(i as f64) }))
+            .collect();
+        for r in recs.clone() {
+            a.commit_record(r);
+        }
+        b.commit_batch(recs);
+        assert_eq!(a.num_records(), b.num_records());
+        for i in 0..3 {
+            let fa = std::fs::read(dir_a.join(shard_file_name(i))).unwrap();
+            let fb = std::fs::read(dir_b.join(shard_file_name(i))).unwrap();
+            assert_eq!(fa, fb, "shard {i}: group commit bytes differ from per-record commits");
+        }
+    }
+
+    #[test]
+    fn group_commit_writer_drains_concurrent_producers() {
+        let (dir, _g) = tmp_dir("writer");
+        let mut db = ShardedDb::create(&dir, 4).unwrap();
+        for h in 0..8u64 {
+            db.register_workload(&format!("w{h}"), h, "cpu");
+        }
+        let queue: BoundedQueue<TuningRecord> = BoundedQueue::new(16);
+        let committed = std::thread::scope(|s| {
+            let producer = |base: u64| {
+                let queue = &queue;
+                move || {
+                    for i in 0..50u64 {
+                        assert!(queue.push(rec(
+                            ((base + i) % 8) as usize,
+                            base * 1000 + i,
+                            Some(1.0),
+                        )));
+                    }
+                }
+            };
+            let p1 = s.spawn(producer(1));
+            let p2 = s.spawn(producer(2));
+            let writer = s.spawn(|| group_commit_writer(&mut db, &queue, 32));
+            p1.join().unwrap();
+            p2.join().unwrap();
+            queue.close();
+            writer.join().unwrap()
+        });
+        assert_eq!(committed, 100);
+        assert_eq!(db.num_records(), 100);
+        // Every record reached the shard its workload's hash routes to.
+        for h in 0..8u64 {
+            let s = shard_of(h, 4);
+            let local = db.shard(s).find_workload(h, "cpu").expect("routed workload");
+            assert!(!db.shard(s).records_for(local).is_empty());
+        }
+        // A reopen sees everything the writer flushed.
+        drop(db);
+        let back = ShardedDb::open(&dir).unwrap();
+        assert_eq!(back.num_records(), 100);
+        assert_eq!(back.skipped_lines(), 0);
+    }
+
+    #[test]
+    fn migrate_preserves_ids_and_answers() {
+        let (dir, _g) = tmp_dir("migrate");
+        std::fs::create_dir_all(&dir).unwrap();
+        let src = dir.join("single.jsonl");
+        {
+            let mut db = JsonFileDb::open(&src).unwrap();
+            for h in 0..6u64 {
+                let id = db.register_workload(&format!("w{h}"), h, "cpu");
+                db.commit_record(rec(id, 10 + h, Some(2.0 + h as f64)));
+                db.commit_record(rec(id, 20 + h, Some(1.0 + h as f64)));
+                db.commit_record(rec(id, 30 + h, None));
+            }
+        }
+        let out_dir = dir.join("sharded");
+        let (migrated, skipped) = migrate_from_file(&src, &out_dir, 4).unwrap();
+        assert_eq!(skipped, 0);
+        let src_db = JsonFileDb::open(&src).unwrap();
+        assert_eq!(migrated.workload_entries().len(), src_db.workload_entries().len());
+        for e in src_db.workload_entries() {
+            let gid = migrated.find_workload(e.shash, &e.target).expect("workload migrated");
+            assert_eq!(gid, e.id, "registration order preserved => ids match");
+            assert_eq!(migrated.best_latency(gid), src_db.best_latency(e.id));
+            let a = src_db.query_top_k(e.id, 8);
+            let b = migrated.query_top_k(gid, 8);
+            assert_eq!(a.len(), b.len());
+            for (ra, rb) in a.iter().zip(&b) {
+                assert_eq!(ra.to_json().to_string(), rb.to_json().to_string());
+            }
+        }
+        // Migrating into a non-empty destination refuses.
+        let err = migrate_from_file(&src, &out_dir, 4).unwrap_err();
+        assert!(err.contains("already") || err.contains("not empty"), "{err}");
+    }
+
+    #[test]
+    fn compact_parallel_matches_sequential_and_is_idempotent() {
+        let (dir_a, _ga) = tmp_dir("cpar-a");
+        let (dir_b, _gb) = tmp_dir("cpar-b");
+        let policy = CompactionPolicy::keep_top(2);
+        let fill = |dir: &Path| {
+            let mut db = ShardedDb::create(dir, 4).unwrap();
+            for h in 0..8u64 {
+                let id = db.register_workload(&format!("w{h}"), h, "cpu");
+                for i in 0..6u64 {
+                    db.commit_record(rec(id, h * 100 + i, Some((i + 1) as f64)));
+                }
+                db.commit_record(rec(id, h * 100 + 99, None));
+            }
+            db
+        };
+        let mut a = fill(&dir_a);
+        let mut b = fill(&dir_b);
+        let ra = a.compact(&policy).unwrap();
+        let rb = b.compact_parallel(&policy, 0).unwrap();
+        assert_eq!(ra.kept, rb.kept);
+        assert_eq!(ra.dropped, rb.dropped);
+        assert_eq!(ra.kept_failures, rb.kept_failures);
+        for i in 0..4 {
+            let fa = std::fs::read(dir_a.join(shard_file_name(i))).unwrap();
+            let fb = std::fs::read(dir_b.join(shard_file_name(i))).unwrap();
+            assert_eq!(fa, fb, "shard {i}: thread count changed compaction output");
+        }
+        // Second pass is byte-idempotent per shard.
+        let before: Vec<Vec<u8>> =
+            (0..4).map(|i| std::fs::read(dir_b.join(shard_file_name(i))).unwrap()).collect();
+        b.compact_parallel(&policy, 2).unwrap();
+        for (i, prev) in before.iter().enumerate() {
+            let now = std::fs::read(dir_b.join(shard_file_name(i))).unwrap();
+            assert_eq!(&now, prev, "shard {i}: compaction not idempotent");
+        }
+        // Queries survive: top-2 per workload plus failure hash for dedup.
+        for h in 0..8u64 {
+            let id = b.find_workload(h, "cpu").unwrap();
+            assert_eq!(b.query_top_k(id, 8).len(), 2);
+            assert!(b.has_candidate(id, h * 100 + 99));
+        }
+    }
+
+    #[test]
+    fn any_db_autodetects_layout() {
+        let (dir, _g) = tmp_dir("anydb");
+        std::fs::create_dir_all(&dir).unwrap();
+        let single = dir.join("one.jsonl");
+        {
+            let mut db = AnyDb::open(&single).unwrap();
+            assert_eq!(db.num_shards(), 1);
+            let id = db.register_workload("A", 5, "cpu");
+            db.commit_record(rec(id, 1, Some(1.5)));
+        }
+        assert!(matches!(AnyDb::open(&single).unwrap(), AnyDb::Single(_)));
+        let sharded_dir = dir.join("sharded");
+        std::fs::create_dir_all(&sharded_dir).unwrap();
+        {
+            let mut db = AnyDb::open(&sharded_dir).unwrap();
+            assert!(db.as_sharded().is_some(), "existing directory opens sharded");
+            assert_eq!(db.num_shards(), DEFAULT_SHARDS);
+            let id = db.register_workload("A", 5, "cpu");
+            db.commit_record(rec(id, 1, Some(1.5)));
+        }
+        let back = AnyDb::open(&sharded_dir).unwrap();
+        assert_eq!(back.num_records(), 1);
+        assert_eq!(back.find_workload(5, "cpu"), Some(0));
+        assert!(back.file_len() > 0);
+    }
+
+    #[test]
+    fn load_readonly_any_merges_shards_with_global_ids() {
+        let (dir, _g) = tmp_dir("ro");
+        {
+            let mut db = ShardedDb::create(&dir, 3).unwrap();
+            for h in 0..5u64 {
+                let id = db.register_workload(&format!("w{h}"), h, "cpu");
+                db.commit_record(rec(id, h, Some(1.0 + h as f64)));
+            }
+        }
+        let (mem, skipped) = load_readonly_any(&dir).unwrap();
+        assert_eq!(skipped, 0);
+        assert_eq!(mem.num_workloads(), 5);
+        assert_eq!(mem.num_records(), 5);
+        for h in 0..5u64 {
+            let id = mem.find_workload(h, "cpu").expect("merged workload");
+            assert_eq!(mem.best_latency(id), Some(1.0 + h as f64));
+        }
+        // Single-file paths go through the classic loader unchanged.
+        let single = std::env::temp_dir()
+            .join(format!("ms-sharddb-{}-ro-single.jsonl", std::process::id()));
+        let _ = std::fs::remove_file(&single);
+        {
+            let mut db = JsonFileDb::open(&single).unwrap();
+            let id = db.register_workload("A", 9, "cpu");
+            db.commit_record(rec(id, 3, Some(0.5)));
+        }
+        let (mem, _) = load_readonly_any(&single).unwrap();
+        assert_eq!(mem.num_records(), 1);
+        let _ = std::fs::remove_file(&single);
+    }
+
+    #[test]
+    fn probe_db_sees_writes_to_any_shard() {
+        let (dir, _g) = tmp_dir("probe");
+        let mut db = ShardedDb::create(&dir, 8).unwrap();
+        let before = probe_db(&dir).expect("sharded db probes");
+        assert_eq!(before.len(), 9, "manifest + one signature per shard");
+        // Route a workload to a specific late shard and write to it.
+        let id = db.register_workload("late", 7, "cpu"); // 7 % 8 == shard 7
+        db.commit_record(rec(id, 1, Some(1.0)));
+        let after = probe_db(&dir).expect("sharded db probes");
+        assert_ne!(before, after, "a write to shard 7 must change the signature");
+        assert_eq!(before[1], after[1], "shard 0 untouched");
+        assert_ne!(before[8], after[8], "shard 7 changed");
+        // Missing path probes as None; single file as a one-element vec.
+        assert!(probe_db(dir.join("nope.jsonl")).is_none());
+    }
+}

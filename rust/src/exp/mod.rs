@@ -17,7 +17,7 @@ pub mod table1;
 
 use crate::cost_model::GbtCostModel;
 use crate::ctx::TuneContext;
-use crate::db::{Database, InMemoryDb, JsonFileDb};
+use crate::db::{Database, InMemoryDb};
 use crate::search::{EvolutionarySearch, SearchConfig, SimMeasurer, TuneResult};
 use crate::sim::Target;
 use crate::tir::{structural_hash, Program};
@@ -85,14 +85,16 @@ impl ExpConfig {
     }
 }
 
-/// Open the configured tuning database: the JSONL file when `--db` was
-/// given, a run-local in-memory store otherwise. Corrupt lines are
-/// recovered over with a warning (see [`JsonFileDb::skipped_lines`]);
-/// only an unreadable or entirely unrecognizable file panics — silently
-/// ignoring recorded history would be worse.
+/// Open the configured tuning database: the path when `--db` was given
+/// (layout auto-detected — a single JSONL file or a sharded directory,
+/// see [`crate::db::AnyDb`]), a run-local in-memory store otherwise.
+/// Corrupt lines are recovered over with a warning (see
+/// [`crate::db::JsonFileDb::skipped_lines`]); only an unreadable or entirely
+/// unrecognizable path panics — silently ignoring recorded history would
+/// be worse.
 pub fn open_db(cfg: &ExpConfig) -> Box<dyn Database> {
     match &cfg.db_path {
-        Some(path) => match JsonFileDb::open(path) {
+        Some(path) => match crate::db::AnyDb::open(path) {
             Ok(db) => {
                 if db.skipped_lines() > 0 {
                     eprintln!(

@@ -8,21 +8,27 @@
 //! metaschedule tune-model --model bert-base [--target cpu] [--trials 32] [--db t.jsonl]
 //! metaschedule exp <fig8|fig9|fig10a|fig10b|table1|all> [--target cpu]
 //!                  [--trials N] [--seed S] [--threads N] [--out results.jsonl] [--db t.jsonl]
-//! metaschedule db stats --db t.jsonl             # tuning-database summary
+//! metaschedule db stats --db t.jsonl             # tuning-database summary (file or sharded dir)
 //! metaschedule db top --workload GMM -k 5 --db t.jsonl
-//! metaschedule db compact --db t.jsonl [-k 32] [--repair]  # GC: top-k + failures, atomic rewrite
+//! metaschedule db compact --db t.jsonl [-k 32] [--repair] [--threads N]  # GC: top-k + failures
 //!                  [--stale-rules <label|names|#digest|->]  # also drop a retired rule set's records
+//! metaschedule db migrate --db t.jsonl --out db-dir [--shards 8]  # single file -> sharded dir
 //! metaschedule db transfer-candidates --db t.jsonl --workload GMM --target gpu [--from cpu]
 //! metaschedule serve GMM SFM --db t.jsonl [--target cpu] [--miss-trials 16]  # 0 = read-only
 //!                  [--watch [--poll-ms 500]]   # read-only; re-serve when the db file changes
+//! metaschedule serve --listen 127.0.0.1:8080 --db db-dir [--workers 4] [--max-pending 64]
+//!                  [--max-inflight 1]          # zero-dep HTTP/1.1 front; GET /shutdown to stop
 //! metaschedule pjrt-verify                       # artifact correctness gate
 //!
 //! `--threads` caps the OS threads of the search pipeline (0 = all
 //! cores); it never changes tuning results, only wall-clock.
 //!
-//! `--db` points tuning at a persistent JSONL record database: runs
-//! warm-start from it, commit every measurement back to it, and are
-//! therefore resumable across sessions (see README "Tuning database").
+//! `--db` points tuning at a persistent record database: a `.jsonl`
+//! path is the classic single file, a directory is the sharded layout
+//! (`MANIFEST.json` + `shard-NN.jsonl`, see docs/DB_FORMAT.md); either
+//! way runs warm-start from it, commit every measurement back to it,
+//! and are therefore resumable across sessions (see README "Tuning
+//! database").
 //!
 //! `serve` is the read path: it builds an indexed in-memory snapshot of
 //! the db (no JSONL replay per lookup), reports hit/miss + the replayed
@@ -49,10 +55,13 @@
 //! ```
 
 use metaschedule::ctx::TuneContext;
-use metaschedule::db::{self, Database, DbStats, JsonFileDb};
+use metaschedule::db::{self, AnyDb, Database, DbStats};
 use metaschedule::exp::{self, ExpConfig};
 use metaschedule::graph;
-use metaschedule::serve::{serve_batch, serve_snapshot, serve_watch, ServeConfig, ServeOutcome, ServingCache};
+use metaschedule::serve::{
+    serve_batch, serve_snapshot, serve_watch, HttpConfig, HttpServer, ServeConfig, ServeOutcome,
+    ServingCache,
+};
 use metaschedule::sim::Target;
 use metaschedule::tir::{print_program, structural_hash, PrintOptions};
 use metaschedule::trace::serde::{text_to_trace, trace_to_text};
@@ -207,7 +216,7 @@ fn tune(args: &Args) {
                     eprintln!("tune: no donor database at {dpath}");
                     std::process::exit(2);
                 }
-                let (mem, skipped) = match metaschedule::db::load_readonly(dpath) {
+                let (mem, skipped) = match metaschedule::db::load_readonly_any(dpath) {
                     Ok(x) => x,
                     Err(e) => {
                         eprintln!("tune: donor db: {e}");
@@ -405,11 +414,39 @@ fn db_cmd(args: &Args) {
         };
         // --repair: also drop corrupt lines recovered over at open and
         // confirm --stale-rules destruction (refused otherwise, so data
-        // loss is never a surprise).
-        match db::compact_file(path, &policy, args.has_switch("repair")) {
+        // loss is never a surprise). Sharded dirs compact their shards
+        // in parallel (--threads 0 = one per shard).
+        match db::compact_any(path, &policy, args.has_switch("repair"), args.flag_usize("threads", 0)) {
             Ok(report) => println!("{}", report.render(path)),
             Err(e) => {
                 eprintln!("db compact: {e}");
+                std::process::exit(1);
+            }
+        }
+        return;
+    }
+    if sub == "migrate" {
+        // Single-file -> sharded conversion; the source is read-only
+        // (kept as a backup until the operator deletes it).
+        let Some(out) = args.flag("out") else {
+            eprintln!("db migrate: --out <dir> required (the sharded directory to create)");
+            std::process::exit(2);
+        };
+        let shards = args.flag_usize("shards", db::DEFAULT_SHARDS);
+        match db::migrate_from_file(path, out, shards) {
+            Ok((sdb, skipped)) => {
+                if skipped > 0 {
+                    eprintln!("db migrate: source carried {skipped} corrupt line(s); not copied");
+                }
+                println!(
+                    "migrated {path} -> {out}: {} workload(s), {} record(s) across {} shard(s)",
+                    sdb.workload_entries().len(),
+                    sdb.num_records(),
+                    sdb.num_shards()
+                );
+            }
+            Err(e) => {
+                eprintln!("db migrate: {e}");
                 std::process::exit(1);
             }
         }
@@ -419,7 +456,7 @@ fn db_cmd(args: &Args) {
         transfer_candidates_cmd(args, path);
         return;
     }
-    let db = match JsonFileDb::open(path) {
+    let db = match AnyDb::open(path) {
         Ok(db) => db,
         Err(e) => {
             eprintln!("db: {e}");
@@ -429,7 +466,7 @@ fn db_cmd(args: &Args) {
     report_skipped(&db);
     match sub.as_str() {
         "stats" => {
-            println!("db: {} ({} bytes)", path, db.file_len());
+            println!("db: {} ({} bytes, {} shard(s))", path, db.file_len(), db.num_shards());
             print!("{}", DbStats::compute(&db).render());
         }
         "top" => {
@@ -479,7 +516,7 @@ fn db_cmd(args: &Args) {
         }
         other => {
             eprintln!(
-                "usage: metaschedule db <stats|top|compact|transfer-candidates> --db <path.jsonl> [--workload W] [-k N] (got {other})"
+                "usage: metaschedule db <stats|top|compact|migrate|transfer-candidates> --db <path> [--workload W] [-k N] (got {other})"
             );
             std::process::exit(2);
         }
@@ -511,7 +548,7 @@ fn transfer_candidates_cmd(args: &Args, path: &str) {
         eprintln!("db: no database at {path}");
         std::process::exit(1);
     }
-    let (db, skipped) = match metaschedule::db::load_readonly(path) {
+    let (db, skipped) = match metaschedule::db::load_readonly_any(path) {
         Ok(x) => x,
         Err(e) => {
             eprintln!("db: {e}");
@@ -600,8 +637,8 @@ fn transfer_candidates_cmd(args: &Args, path: &str) {
 }
 
 /// Warn (to stderr, so greppable stdout stays clean) when an open
-/// recovered over corrupt lines.
-fn report_skipped(db: &JsonFileDb) {
+/// recovered over corrupt lines (any shard, for a sharded db).
+fn report_skipped(db: &AnyDb) {
     if db.skipped_lines() > 0 {
         eprintln!(
             "db: recovered over {} corrupt line(s); `db compact` will drop them",
@@ -616,23 +653,63 @@ fn report_skipped(db: &JsonFileDb) {
 /// `serve`: answer workload lookups from an indexed snapshot of the db.
 fn serve_cmd(args: &Args) {
     let Some(path) = args.flag("db") else {
-        eprintln!("serve: --db <path.jsonl> required");
+        eprintln!("serve: --db <path> required (a .jsonl file or a sharded directory)");
         std::process::exit(2);
     };
     let target = target_of(args);
-    // Batch mode: positional names after `serve`, plus `--workloads A,B`.
-    let mut names: Vec<String> = args.positional.iter().skip(1).cloned().collect();
-    names.extend(args.flag_csv("workloads"));
-    if names.is_empty() {
-        eprintln!("serve: name at least one workload (positional or --workloads GMM,SFM)");
-        std::process::exit(2);
-    }
     let cfg = ServeConfig {
         miss_trials: args.flag_usize("miss-trials", 16),
         threads: args.flag_usize("threads", 0),
         seed: args.flag_u64("seed", 42),
         top_k: args.flag_usize("k", ServingCache::DEFAULT_TOP_K),
     };
+    // Network mode: serve over HTTP until a GET /shutdown arrives. Needs
+    // no workload names — clients name workloads per request.
+    if let Some(addr) = args.flag("listen") {
+        let db = match AnyDb::open(path) {
+            Ok(db) => db,
+            Err(e) => {
+                eprintln!("serve: {e}");
+                std::process::exit(1);
+            }
+        };
+        report_skipped(&db);
+        let http = HttpConfig {
+            addr: addr.to_string(),
+            workers: args.flag_usize("workers", 4),
+            max_pending: args.flag_usize("max-pending", 64),
+            max_inflight_tunes: args.flag_usize("max-inflight", 1),
+            serve: cfg,
+        };
+        let server = match HttpServer::bind(http, target.clone()) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("serve: {e}");
+                std::process::exit(1);
+            }
+        };
+        println!(
+            "== listening on http://{} ({} record(s), {} shard(s) from {path}, target {})",
+            server.local_addr(),
+            db.num_records(),
+            db.num_shards(),
+            target.name
+        );
+        println!("   routes: GET /lookup?workload=NAME[&target=T] | POST /batch | GET /stats | GET /healthz | GET /shutdown");
+        let r = server.run(db);
+        println!(
+            "served {} request(s): {} hit(s), {} miss(es), {} tuned, {} tune(s) rejected, {} bad request(s)",
+            r.requests, r.hits, r.misses, r.tuned, r.tune_rejected, r.bad_requests
+        );
+        return;
+    }
+    // Batch mode: positional names after `serve`, plus `--workloads A,B`.
+    let mut names: Vec<String> = args.positional.iter().skip(1).cloned().collect();
+    names.extend(args.flag_csv("workloads"));
+    if names.is_empty() {
+        eprintln!("serve: name at least one workload (positional or --workloads GMM,SFM), or --listen <addr>");
+        std::process::exit(2);
+    }
     fn serve_fail(e: String) -> Vec<ServeOutcome> {
         eprintln!("serve: {e}");
         std::process::exit(2);
@@ -691,7 +768,7 @@ fn serve_cmd(args: &Args) {
         );
         serve_snapshot(&names, &target, &cache).unwrap_or_else(serve_fail)
     } else {
-        let mut db = match JsonFileDb::open(path) {
+        let mut db = match AnyDb::open(path) {
             Ok(db) => db,
             Err(e) => {
                 eprintln!("serve: {e}");

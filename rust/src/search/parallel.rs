@@ -72,6 +72,22 @@ impl<T> BoundedQueue<T> {
         }
     }
 
+    /// Non-blocking dequeue: `Some` if an item is ready right now, `None`
+    /// when the queue is momentarily empty (closed or not). This is how a
+    /// batching consumer — e.g. the sharded database's group-commit
+    /// writer ([`crate::db::sharded::group_commit_writer`]) — opportunistically
+    /// extends a batch: one blocking [`Self::pop`] for the first item,
+    /// then `try_pop` until the queue runs dry, then one flush for the
+    /// whole batch.
+    pub fn try_pop(&self) -> Option<T> {
+        let mut st = self.state.lock().unwrap();
+        let item = st.items.pop_front();
+        if item.is_some() {
+            self.not_full.notify_one();
+        }
+        item
+    }
+
     /// Close the queue: blocked producers give up, consumers drain what
     /// remains and then see `None`.
     pub fn close(&self) {
@@ -221,6 +237,19 @@ mod tests {
         assert_eq!(q.pop(), Some(1));
         assert_eq!(q.pop(), Some(2));
         assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn bounded_queue_try_pop_never_blocks() {
+        let q = BoundedQueue::new(4);
+        assert_eq!(q.try_pop(), None, "empty queue answers None immediately");
+        assert!(q.push(1));
+        assert!(q.push(2));
+        assert_eq!(q.try_pop(), Some(1), "FIFO order");
+        assert_eq!(q.try_pop(), Some(2));
+        assert_eq!(q.try_pop(), None);
+        q.close();
+        assert_eq!(q.try_pop(), None, "closed + drained is None, not a hang");
     }
 
     #[test]

@@ -36,6 +36,32 @@ impl ServedWorkload {
 /// targets sharing it — no file I/O, no JSONL parsing, no allocation,
 /// no lock. All data is owned, so the cache is `Send + Sync` and shares
 /// across threads as a plain `Arc<ServingCache>`.
+///
+/// # Examples
+///
+/// ```
+/// use metaschedule::db::{Database, InMemoryDb, TuningRecord};
+/// use metaschedule::serve::ServingCache;
+/// use metaschedule::trace::Trace;
+///
+/// let mut db = InMemoryDb::new();
+/// let wid = db.register_workload("GMM", 0xab, "cpu");
+/// db.commit_record(TuningRecord {
+///     workload: wid,
+///     trace: Trace { insts: vec![] },
+///     latencies: vec![1.5e-5],
+///     target: "cpu".into(),
+///     seed: 1,
+///     round: 0,
+///     cand_hash: 7,
+///     sim_version: "sim".into(),
+///     rule_set: String::new(),
+/// });
+///
+/// let cache = ServingCache::build(&db, ServingCache::DEFAULT_TOP_K);
+/// assert_eq!(cache.best_latency(0xab, "cpu"), Some(1.5e-5));
+/// assert_eq!(cache.lookup(0xab, "gpu"), None); // targets never pool
+/// ```
 #[derive(Debug, Clone)]
 pub struct ServingCache {
     /// Served workloads in registration order.
@@ -69,19 +95,21 @@ impl ServingCache {
         ServingCache { slots, by_hash, records }
     }
 
-    /// Load a snapshot read-only from a JSONL database file: the file is
-    /// parsed once here (with the same corruption recovery as
+    /// Load a snapshot read-only from a database path of either layout —
+    /// a single JSONL file or a sharded directory
+    /// ([`crate::db::ShardedDb`]), auto-detected. The records are parsed
+    /// once here (with the same corruption recovery as
     /// [`crate::db::JsonFileDb::open`]) and never touched again — no
     /// append handle is opened, so a serving process can load from a
-    /// file it has no write permission on. Returns the cache plus the
+    /// path it has no write permission on. Returns the cache plus the
     /// number of corrupt lines skipped.
     pub fn load(path: impl AsRef<Path>, top_k: usize) -> Result<(ServingCache, usize), String> {
         let path = path.as_ref();
         if !path.exists() {
             return Err(format!("no database at {}", path.display()));
         }
-        let loaded = crate::db::json_file::read_index(path)?;
-        Ok((ServingCache::build(&loaded.mem, top_k), loaded.skipped))
+        let (mem, skipped) = crate::db::sharded::load_readonly_any(path)?;
+        Ok((ServingCache::build(&mem, top_k), skipped))
     }
 
     /// The served workload for `(shash, target)`, if registered.
@@ -137,6 +165,24 @@ impl ServingCache {
 /// on an immutable snapshot, so a reader mid-batch keeps one consistent
 /// view no matter how many publishes happen meanwhile — pre- or
 /// post-publish state, never a torn mix.
+///
+/// # Examples
+///
+/// ```
+/// use metaschedule::db::{Database, InMemoryDb};
+/// use metaschedule::serve::{ServingCache, SnapshotSlot};
+///
+/// let mut db = InMemoryDb::new();
+/// db.register_workload("GMM", 1, "cpu");
+/// let slot = SnapshotSlot::new(ServingCache::build(&db, 8));
+///
+/// let held = slot.get(); // a reader pins the current snapshot...
+/// db.register_workload("SFM", 2, "cpu");
+/// slot.publish(ServingCache::build(&db, 8)); // ...while a writer swaps
+///
+/// assert_eq!(held.num_workloads(), 1); // the pinned view is unchanged
+/// assert_eq!(slot.get().num_workloads(), 2); // a re-get sees the new one
+/// ```
 pub struct SnapshotSlot {
     current: Mutex<Arc<ServingCache>>,
 }
@@ -159,6 +205,79 @@ impl SnapshotSlot {
         let next = Arc::new(cache);
         *self.current.lock().unwrap() = next.clone();
         next
+    }
+}
+
+/// One [`SnapshotSlot`] per database shard, routed by the same
+/// structural-hash function the shards themselves use
+/// ([`crate::db::shard_of`]). This is what keeps the network front's
+/// read path lock-free *and* cheap to refresh: a tune-on-miss only
+/// rebuilds and republishes the one shard it wrote to
+/// ([`Self::refresh`]), while readers of every other shard keep their
+/// snapshots without ever touching the writer mutex. A single-file
+/// database degenerates to one slot — same code path, shard count 1.
+///
+/// Each per-shard [`ServingCache`] is built from that shard's standalone
+/// [`crate::db::JsonFileDb`], so the workload ids inside it are
+/// shard-local; serving lookups are by `(shash, target)` and never see
+/// an id, which is why that is harmless.
+pub struct ShardedSnapshots {
+    slots: Vec<SnapshotSlot>,
+}
+
+impl ShardedSnapshots {
+    /// Build one published snapshot per shard of `db`.
+    pub fn build(db: &crate::db::AnyDb, top_k: usize) -> ShardedSnapshots {
+        use crate::db::AnyDb;
+        let slots = match db {
+            AnyDb::Single(f) => vec![SnapshotSlot::new(ServingCache::build(f, top_k))],
+            AnyDb::Sharded(s) => (0..s.num_shards())
+                .map(|i| SnapshotSlot::new(ServingCache::build(s.shard(i), top_k)))
+                .collect(),
+        };
+        ShardedSnapshots { slots }
+    }
+
+    /// Number of slots (the database's shard count; 1 for single-file).
+    pub fn num_shards(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// The slot index a structural hash routes to.
+    pub fn shard_for(&self, shash: u64) -> usize {
+        crate::db::shard_of(shash, self.slots.len())
+    }
+
+    /// The currently-published snapshot covering `shash` — a clone of
+    /// one `Arc`, after which every lookup is lock-free.
+    pub fn get(&self, shash: u64) -> Arc<ServingCache> {
+        self.slots[self.shard_for(shash)].get()
+    }
+
+    /// Rebuild and republish only the shard that `shash` routes to —
+    /// the after-a-tune refresh. `db` must be the database these
+    /// snapshots were built from (same shard count).
+    pub fn refresh(&self, db: &crate::db::AnyDb, shash: u64, top_k: usize) {
+        use crate::db::AnyDb;
+        match db {
+            AnyDb::Single(f) => {
+                self.slots[0].publish(ServingCache::build(f, top_k));
+            }
+            AnyDb::Sharded(s) => {
+                let i = crate::db::shard_of(shash, s.num_shards());
+                self.slots[i].publish(ServingCache::build(s.shard(i), top_k));
+            }
+        }
+    }
+
+    /// Workloads indexed across all shards (sums a `get` per slot).
+    pub fn num_workloads(&self) -> usize {
+        self.slots.iter().map(|s| s.get().num_workloads()).sum()
+    }
+
+    /// Successful records indexed across all shards.
+    pub fn num_records(&self) -> usize {
+        self.slots.iter().map(|s| s.get().num_records()).sum()
     }
 }
 
@@ -239,6 +358,51 @@ mod tests {
         // The reader's held snapshot is unchanged; a re-get sees the new one.
         assert_eq!(held.best_latency(1, "cpu"), Some(2.0));
         assert_eq!(slot.get().best_latency(1, "cpu"), Some(1.0));
+    }
+
+    #[test]
+    fn sharded_snapshots_refresh_only_the_touched_shard() {
+        use crate::db::{AnyDb, ShardedDb};
+        struct DirGuard(std::path::PathBuf);
+        impl Drop for DirGuard {
+            fn drop(&mut self) {
+                let _ = std::fs::remove_dir_all(&self.0);
+            }
+        }
+        let dir = std::env::temp_dir().join(format!("ms-snapshard-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let _g = DirGuard(dir.clone());
+        let mut db = AnyDb::Sharded(ShardedDb::create(&dir, 4).unwrap());
+        let a = db.register_workload("A", 5, "cpu"); // 5 % 4 == shard 1
+        let b = db.register_workload("B", 6, "cpu"); // 6 % 4 == shard 2
+        db.commit_record(rec(a, 1, Some(2.0)));
+        db.commit_record(rec(b, 2, Some(3.0)));
+        let snaps = ShardedSnapshots::build(&db, 8);
+        assert_eq!(snaps.num_shards(), 4);
+        assert_eq!(snaps.num_workloads(), 2);
+        assert_eq!(snaps.get(5).best_latency(5, "cpu"), Some(2.0));
+        assert_eq!(snaps.get(6).best_latency(6, "cpu"), Some(3.0));
+        // A write to workload A only republishes shard 1: shard 2's
+        // published Arc must be pointer-identical afterwards.
+        let shard2_before = snaps.get(6);
+        db.commit_record(rec(a, 3, Some(1.0)));
+        snaps.refresh(&db, 5, 8);
+        assert_eq!(snaps.get(5).best_latency(5, "cpu"), Some(1.0));
+        assert!(
+            Arc::ptr_eq(&shard2_before, &snaps.get(6)),
+            "untouched shard must keep its published snapshot"
+        );
+        // Single-file databases get the same interface with one slot.
+        let single = std::env::temp_dir()
+            .join(format!("ms-snapshard-{}-one.jsonl", std::process::id()));
+        let _ = std::fs::remove_file(&single);
+        let mut one = AnyDb::open(&single).unwrap();
+        let w = one.register_workload("A", 5, "cpu");
+        one.commit_record(rec(w, 1, Some(4.0)));
+        let snaps = ShardedSnapshots::build(&one, 8);
+        assert_eq!(snaps.num_shards(), 1);
+        assert_eq!(snaps.get(5).best_latency(5, "cpu"), Some(4.0));
+        let _ = std::fs::remove_file(&single);
     }
 
     #[test]

@@ -7,7 +7,7 @@ use std::path::PathBuf;
 
 use crate::cost_model::GbtCostModel;
 use crate::ctx::TuneContext;
-use crate::db::{probe, Database, FileSignature};
+use crate::db::{probe_db, Database, FileSignature};
 use crate::search::{EvolutionarySearch, Measurer, SearchConfig, SimMeasurer};
 use crate::serve::cache::ServingCache;
 use crate::sim::Target;
@@ -190,31 +190,34 @@ pub fn serve_batch(
     Ok(out)
 }
 
-/// Change watcher over a database file: remembers the last
-/// [`FileSignature`] it saw and reports whether a fresh probe differs.
-/// The probe is one `stat` plus three bounded reads — cheap enough to
-/// poll at serving frequency — and its content fingerprint catches even
-/// a same-length compaction rewrite landing in the same mtime tick, so
-/// "signature changed" is a reliable "there is something new to index"
-/// signal (the in-process equivalent is
-/// [`crate::db::JsonFileDb::commit_counter`]).
+/// Change watcher over a database path of either layout: remembers the
+/// last signature set it saw ([`crate::db::probe_db`] — one
+/// [`FileSignature`] per constituent file) and reports whether a fresh
+/// probe differs. Each per-file probe is one `stat` plus three bounded
+/// reads — cheap enough to poll at serving frequency — and the content
+/// fingerprint catches even a same-length compaction rewrite landing in
+/// the same mtime tick. For a sharded db every shard is probed, so a
+/// write to `shard-07.jsonl` registers as a change even when
+/// `shard-00.jsonl` is untouched; "signature changed" is a reliable
+/// "there is something new to index" signal (the in-process equivalent
+/// is [`crate::db::JsonFileDb::commit_counter`]).
 pub struct DbWatcher {
     path: PathBuf,
-    last: Option<FileSignature>,
+    last: Option<Vec<Option<FileSignature>>>,
 }
 
 impl DbWatcher {
     /// Start watching `path`, treating its current state as seen.
     pub fn new(path: impl Into<PathBuf>) -> DbWatcher {
         let path = path.into();
-        let last = probe(&path);
+        let last = probe_db(&path);
         DbWatcher { path, last }
     }
 
-    /// Whether the file changed since the last call (or construction);
-    /// updates the remembered signature.
+    /// Whether any constituent file changed since the last call (or
+    /// construction); updates the remembered signatures.
     pub fn changed(&mut self) -> bool {
-        let now = probe(&self.path);
+        let now = probe_db(&self.path);
         if now != self.last {
             self.last = now;
             true
@@ -314,6 +317,40 @@ mod tests {
         assert!(w.changed(), "same-length rewrite not detected");
         assert!(!w.changed(), "change must latch");
         let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn watcher_covers_every_shard() {
+        use crate::db::{ShardedDb, TuningRecord};
+        use crate::trace::Trace;
+        struct DirGuard(std::path::PathBuf);
+        impl Drop for DirGuard {
+            fn drop(&mut self) {
+                let _ = std::fs::remove_dir_all(&self.0);
+            }
+        }
+        let dir = std::env::temp_dir().join(format!("ms-watcher-shards-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let _g = DirGuard(dir.clone());
+        let mut db = ShardedDb::create(&dir, 8).unwrap();
+        let mut w = DbWatcher::new(&dir);
+        assert!(!w.changed(), "no write, no change");
+        // Write to the LAST shard only (7 % 8 == 7): the watcher must
+        // still see it even though shard 0 is untouched.
+        let id = db.register_workload("late", 7, "cpu");
+        db.commit_record(TuningRecord {
+            workload: id,
+            trace: Trace { insts: vec![] },
+            latencies: vec![1.0],
+            target: "cpu".into(),
+            seed: 0,
+            round: 0,
+            cand_hash: 1,
+            sim_version: "simtest".into(),
+            rule_set: String::new(),
+        });
+        assert!(w.changed(), "a write to shard 7 must invalidate the watcher");
+        assert!(!w.changed(), "change must latch");
     }
 
     #[test]

@@ -19,23 +19,36 @@
 //!   `Arc` and do every subsequent lookup lock-free on a consistent
 //!   snapshot. Readers see either the pre- or post-publish cache in its
 //!   entirety, never a torn mix.
+//! - [`ShardedSnapshots`] — one [`SnapshotSlot`] per shard of a
+//!   [`crate::db::ShardedDb`], routed by the same structural-hash
+//!   function as the shards themselves: a tune-on-miss republishes only
+//!   the shard it wrote, readers of every other shard are untouched.
 //! - [`serve_batch`] — the batch front-end behind the `serve` CLI
 //!   subcommand: resolve workload names, report hit/miss + the replayed
 //!   best latency, and fall back to a bounded tune-on-miss (reusing
 //!   [`crate::search::EvolutionarySearch`]'s database path) that commits
 //!   its records and refreshes the snapshot.
+//! - [`HttpServer`] — the zero-dependency HTTP/1.1 network front
+//!   (`serve --listen <addr>`) over the same pieces: lock-free snapshot
+//!   hits, admission-controlled tune-on-miss, request batching through a
+//!   bounded connection queue, graceful shutdown. See [`net`] for the
+//!   wire protocol.
 //!
 //! Snapshot lifecycle: tune into a JSONL db -> (optionally) `db compact`
 //! it -> build/load a [`ServingCache`] -> serve lookups -> on db growth,
 //! build a fresh cache and publish it through the [`SnapshotSlot`].
 //! *When* to rebuild is no longer timer-guesswork: [`DbWatcher`] probes
-//! the file's `(len, mtime)` signature ([`crate::db::probe`]) and
+//! every constituent file's signature ([`crate::db::probe_db`] — for a
+//! sharded db that covers each shard, so a write to `shard-07.jsonl`
+//! invalidates even when `shard-00.jsonl` is untouched) and
 //! [`serve_watch`] reloads on change (`serve --watch`); an in-process
 //! publisher can compare [`crate::db::JsonFileDb::commit_counter`]
 //! against the value captured at its last snapshot build.
 
 pub mod cache;
 pub mod front;
+pub mod net;
 
-pub use cache::{ServedWorkload, ServingCache, SnapshotSlot};
+pub use cache::{ServedWorkload, ServingCache, ShardedSnapshots, SnapshotSlot};
 pub use front::{serve_batch, serve_snapshot, serve_watch, DbWatcher, ServeConfig, ServeOutcome};
+pub use net::{HttpConfig, HttpReport, HttpServer};

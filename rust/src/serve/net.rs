@@ -1,0 +1,700 @@
+//! Zero-dependency HTTP/1.1 serving front (`serve --listen <addr>`).
+//!
+//! A thin network skin over the same serving pipeline the CLI batch mode
+//! uses: the read path answers from per-shard lock-free snapshots
+//! ([`crate::serve::ShardedSnapshots`] — a hit never takes the writer
+//! mutex), and a miss falls back to bounded tune-on-miss through
+//! [`crate::serve::serve_batch`] behind admission control, committing to
+//! the shared database and republishing only the shard it wrote.
+//!
+//! Everything is `std::net` + scoped threads — no async runtime, no
+//! HTTP library. Requests are parsed line-by-line (request line, then
+//! headers until the blank line); responses are `Connection: close` with
+//! an explicit `Content-Length`, and every body — including every error
+//! — is a single JSON line, so a scripted client can always read exactly
+//! one line and move on. A malformed request earns a `400` error line
+//! and costs that connection only; the server keeps serving.
+//!
+//! # Protocol
+//!
+//! ```text
+//! GET /lookup?workload=NAME[&target=NAME]   one workload: hit from the
+//!                                           snapshot, else tune-on-miss
+//!                                           (429 when over the inflight
+//!                                           budget; "tune":"disabled"
+//!                                           when miss_trials == 0)
+//! POST /batch                               body = one workload name per
+//!                                           line; report-only lookups,
+//!                                           one JSON line each
+//! GET /healthz                              liveness probe
+//! GET /stats                                counters + snapshot sizes
+//! GET /shutdown                             graceful shutdown: stop
+//!                                           accepting, drain, exit
+//! ```
+//!
+//! # Concurrency shape
+//!
+//! The accept loop is nonblocking and pushes connections into a bounded
+//! [`crate::search::parallel::BoundedQueue`] drained by a fixed pool of
+//! worker threads — the queue is both the request batching buffer and
+//! the backpressure valve (a full queue blocks accepting, it never grows
+//! an unbounded backlog). Tune-on-miss admission is a single atomic
+//! inflight counter checked before the (serialized) tuning section, so
+//! at most [`HttpConfig::max_inflight_tunes`] requests can be paying for
+//! search at once; everyone else gets an immediate `429` instead of
+//! queueing behind a long tune.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::db::AnyDb;
+use crate::search::parallel::BoundedQueue;
+use crate::serve::cache::{ServingCache, ShardedSnapshots};
+use crate::serve::front::{serve_batch, ServeConfig};
+use crate::sim::Target;
+use crate::tir::structural_hash;
+use crate::util::json::Json;
+use crate::workloads;
+
+/// Network-front knobs (wrapping the serving knobs in
+/// [`ServeConfig`]).
+#[derive(Debug, Clone)]
+pub struct HttpConfig {
+    /// Listen address, e.g. `127.0.0.1:8080` (port 0 picks a free port;
+    /// see [`HttpServer::local_addr`]).
+    pub addr: String,
+    /// Worker threads draining the connection queue.
+    pub workers: usize,
+    /// Connection-queue capacity — the request batching window and the
+    /// backpressure bound (accepting blocks when full).
+    pub max_pending: usize,
+    /// Tune-on-miss admission budget: misses beyond this many concurrent
+    /// tunes are answered `429` instead of queueing behind a search.
+    pub max_inflight_tunes: usize,
+    /// The serving knobs shared with the CLI front (trial budget, seed,
+    /// snapshot top-k).
+    pub serve: ServeConfig,
+}
+
+impl Default for HttpConfig {
+    fn default() -> Self {
+        HttpConfig {
+            addr: "127.0.0.1:0".into(),
+            workers: 4,
+            max_pending: 64,
+            max_inflight_tunes: 1,
+            serve: ServeConfig::default(),
+        }
+    }
+}
+
+/// What a finished [`HttpServer::run`] saw, for the CLI summary line and
+/// the integration tests.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct HttpReport {
+    /// Requests that parsed well enough to be routed.
+    pub requests: usize,
+    /// `/lookup`s answered from a snapshot.
+    pub hits: usize,
+    /// `/lookup`s that missed every snapshot record.
+    pub misses: usize,
+    /// Misses that ran the tune-on-miss fallback.
+    pub tuned: usize,
+    /// Misses bounced by admission control (`429`).
+    pub tune_rejected: usize,
+    /// Connections dropped with a `4xx` error line (malformed request,
+    /// unknown route/workload).
+    pub bad_requests: usize,
+}
+
+/// Live counters shared across workers; folded into an [`HttpReport`]
+/// when the server drains.
+#[derive(Default)]
+struct Stats {
+    requests: AtomicUsize,
+    hits: AtomicUsize,
+    misses: AtomicUsize,
+    tuned: AtomicUsize,
+    tune_rejected: AtomicUsize,
+    bad_requests: AtomicUsize,
+}
+
+impl Stats {
+    fn report(&self) -> HttpReport {
+        HttpReport {
+            requests: self.requests.load(Ordering::SeqCst),
+            hits: self.hits.load(Ordering::SeqCst),
+            misses: self.misses.load(Ordering::SeqCst),
+            tuned: self.tuned.load(Ordering::SeqCst),
+            tune_rejected: self.tune_rejected.load(Ordering::SeqCst),
+            bad_requests: self.bad_requests.load(Ordering::SeqCst),
+        }
+    }
+}
+
+/// A parsed request: method + path + decoded query pairs + body.
+#[derive(Debug, Clone, PartialEq, Eq)]
+struct Request {
+    method: String,
+    path: String,
+    query: Vec<(String, String)>,
+    body: String,
+}
+
+impl Request {
+    fn query_get(&self, key: &str) -> Option<&str> {
+        self.query.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+    }
+}
+
+/// One response: status + single-JSON-line body (NDJSON for `/batch`).
+struct Response {
+    status: u16,
+    content_type: &'static str,
+    body: String,
+}
+
+impl Response {
+    /// A one-JSON-line response; the trailing newline is the line
+    /// delimiter scripted clients read to.
+    fn json(status: u16, j: Json) -> Response {
+        Response { status, content_type: "application/json", body: format!("{}\n", j.to_string()) }
+    }
+
+    fn error(status: u16, msg: &str) -> Response {
+        Response::json(status, Json::obj(vec![("error", Json::str(msg))]))
+    }
+}
+
+/// Largest request body `/batch` accepts — a denial-of-service guard,
+/// far above any realistic workload list.
+const MAX_BODY_BYTES: usize = 1 << 20;
+
+/// Decode `%XX` sequences and `+`-for-space in a query component.
+/// Lenient: a malformed escape passes through literally (the workload
+/// name lookup will reject it with a clean 404).
+fn percent_decode(s: &str) -> String {
+    let bytes = s.as_bytes();
+    let mut out = Vec::with_capacity(bytes.len());
+    let mut i = 0;
+    while i < bytes.len() {
+        match bytes[i] {
+            b'+' => {
+                out.push(b' ');
+                i += 1;
+            }
+            b'%' => {
+                let hex = bytes.get(i + 1..i + 3).and_then(|h| {
+                    std::str::from_utf8(h).ok().and_then(|h| u8::from_str_radix(h, 16).ok())
+                });
+                match hex {
+                    Some(b) => {
+                        out.push(b);
+                        i += 3;
+                    }
+                    None => {
+                        out.push(b'%');
+                        i += 1;
+                    }
+                }
+            }
+            b => {
+                out.push(b);
+                i += 1;
+            }
+        }
+    }
+    String::from_utf8_lossy(&out).into_owned()
+}
+
+/// Split `/path?a=1&b=2` into the path and decoded query pairs.
+fn split_query(target: &str) -> (String, Vec<(String, String)>) {
+    match target.split_once('?') {
+        None => (target.to_string(), Vec::new()),
+        Some((path, qs)) => {
+            let pairs = qs
+                .split('&')
+                .filter(|kv| !kv.is_empty())
+                .map(|kv| match kv.split_once('=') {
+                    Some((k, v)) => (percent_decode(k), percent_decode(v)),
+                    None => (percent_decode(kv), String::new()),
+                })
+                .collect();
+            (path.to_string(), pairs)
+        }
+    }
+}
+
+/// Parse one HTTP/1.1 request line-by-line from `r`: request line,
+/// headers until the blank line, then `Content-Length` bytes of body for
+/// `POST`. Errors are protocol violations the caller answers with a
+/// `400` error line.
+fn read_request<R: BufRead>(r: &mut R) -> Result<Request, String> {
+    let mut line = String::new();
+    if r.read_line(&mut line).map_err(|e| format!("read request line: {e}"))? == 0 {
+        return Err("empty request (connection closed before a request line)".into());
+    }
+    let line = line.trim_end_matches(['\r', '\n']);
+    let mut parts = line.split_whitespace();
+    let (method, target, version) = match (parts.next(), parts.next(), parts.next(), parts.next()) {
+        (Some(m), Some(t), Some(v), None) => (m, t, v),
+        _ => return Err(format!("malformed request line {line:?}")),
+    };
+    if !version.starts_with("HTTP/1.") {
+        return Err(format!("unsupported protocol version {version:?}"));
+    }
+    if method != "GET" && method != "POST" {
+        return Err(format!("unsupported method {method:?}"));
+    }
+    let mut content_length = 0usize;
+    loop {
+        let mut header = String::new();
+        if r.read_line(&mut header).map_err(|e| format!("read header: {e}"))? == 0 {
+            return Err("connection closed inside the header block".into());
+        }
+        let header = header.trim_end_matches(['\r', '\n']);
+        if header.is_empty() {
+            break;
+        }
+        let Some((name, value)) = header.split_once(':') else {
+            return Err(format!("malformed header line {header:?}"));
+        };
+        if name.trim().eq_ignore_ascii_case("content-length") {
+            content_length = value
+                .trim()
+                .parse::<usize>()
+                .map_err(|_| format!("bad Content-Length {:?}", value.trim()))?;
+        }
+    }
+    if content_length > MAX_BODY_BYTES {
+        return Err(format!("body of {content_length} bytes exceeds the {MAX_BODY_BYTES} cap"));
+    }
+    let mut body = String::new();
+    if method == "POST" && content_length > 0 {
+        let mut buf = vec![0u8; content_length];
+        r.read_exact(&mut buf).map_err(|e| format!("read body: {e}"))?;
+        body = String::from_utf8_lossy(&buf).into_owned();
+    }
+    let (path, query) = split_query(target);
+    Ok(Request { method: method.to_string(), path, query, body })
+}
+
+fn write_response(stream: &mut TcpStream, resp: &Response) -> std::io::Result<()> {
+    let reason = match resp.status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        429 => "Too Many Requests",
+        _ => "Internal Server Error",
+    };
+    let head = format!(
+        "HTTP/1.1 {} {reason}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        resp.status,
+        resp.content_type,
+        resp.body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(resp.body.as_bytes())?;
+    stream.flush()
+}
+
+/// Everything a worker needs, borrowed for the scope of one `run`.
+struct ServerCtx<'a> {
+    cfg: &'a HttpConfig,
+    target: &'a Target,
+    snapshots: &'a ShardedSnapshots,
+    db: &'a Mutex<AnyDb>,
+    shutdown: &'a AtomicBool,
+    inflight: &'a AtomicUsize,
+    stats: &'a Stats,
+}
+
+/// The zero-dep HTTP server. [`Self::bind`], then [`Self::run`] with the
+/// database to serve; `run` blocks until a `/shutdown` request and
+/// returns the traffic report.
+pub struct HttpServer {
+    listener: TcpListener,
+    cfg: HttpConfig,
+    target: Target,
+}
+
+impl HttpServer {
+    /// Bind the listen address (nonblocking, so shutdown can interrupt
+    /// the accept loop without signal handling).
+    pub fn bind(cfg: HttpConfig, target: Target) -> Result<HttpServer, String> {
+        let listener =
+            TcpListener::bind(&cfg.addr).map_err(|e| format!("bind {}: {e}", cfg.addr))?;
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| format!("set_nonblocking on {}: {e}", cfg.addr))?;
+        Ok(HttpServer { listener, cfg, target })
+    }
+
+    /// The bound address (resolves a `:0` port request).
+    pub fn local_addr(&self) -> String {
+        self.listener.local_addr().map(|a| a.to_string()).unwrap_or_default()
+    }
+
+    /// Serve `db` until a `/shutdown` request: accept loop in the calling
+    /// thread, workers on scoped threads, graceful drain on exit. The
+    /// accept loop stops first, then the connection queue closes, then
+    /// every queued connection is still answered before the workers
+    /// join — no request that made it into the queue is dropped.
+    pub fn run(self, db: AnyDb) -> HttpReport {
+        let snapshots = ShardedSnapshots::build(&db, self.cfg.serve.top_k);
+        let db = Mutex::new(db);
+        let shutdown = AtomicBool::new(false);
+        let inflight = AtomicUsize::new(0);
+        let stats = Stats::default();
+        let queue: BoundedQueue<TcpStream> = BoundedQueue::new(self.cfg.max_pending.max(1));
+        let ctx = ServerCtx {
+            cfg: &self.cfg,
+            target: &self.target,
+            snapshots: &snapshots,
+            db: &db,
+            shutdown: &shutdown,
+            inflight: &inflight,
+            stats: &stats,
+        };
+        std::thread::scope(|s| {
+            for _ in 0..self.cfg.workers.max(1) {
+                let ctx = &ctx;
+                let queue = &queue;
+                s.spawn(move || {
+                    while let Some(stream) = queue.pop() {
+                        handle_conn(stream, ctx);
+                    }
+                });
+            }
+            loop {
+                if shutdown.load(Ordering::SeqCst) {
+                    break;
+                }
+                match self.listener.accept() {
+                    Ok((stream, _peer)) => {
+                        // Workers read blocking with a timeout, so a
+                        // stalled client cannot pin a worker forever.
+                        let _ = stream.set_nonblocking(false);
+                        let _ = stream.set_read_timeout(Some(Duration::from_secs(10)));
+                        if !queue.push(stream) {
+                            break;
+                        }
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(2));
+                    }
+                    Err(_) => std::thread::sleep(Duration::from_millis(2)),
+                }
+            }
+            queue.close();
+        });
+        stats.report()
+    }
+}
+
+/// Serve one connection: parse, route, answer, close. Every failure mode
+/// becomes an error line on this connection; nothing here can take the
+/// server down.
+fn handle_conn(mut stream: TcpStream, ctx: &ServerCtx) {
+    let parsed = {
+        let mut reader = BufReader::new(&mut stream);
+        read_request(&mut reader)
+    };
+    let response = match parsed {
+        Ok(req) => {
+            ctx.stats.requests.fetch_add(1, Ordering::SeqCst);
+            route(ctx, &req)
+        }
+        Err(e) => Response::error(400, &e),
+    };
+    if response.status >= 400 && response.status != 429 {
+        ctx.stats.bad_requests.fetch_add(1, Ordering::SeqCst);
+    }
+    let _ = write_response(&mut stream, &response);
+}
+
+fn route(ctx: &ServerCtx, req: &Request) -> Response {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => Response::json(200, Json::obj(vec![("ok", Json::Bool(true))])),
+        ("GET", "/stats") => {
+            let r = ctx.stats.report();
+            Response::json(
+                200,
+                Json::obj(vec![
+                    ("requests", Json::num(r.requests as f64)),
+                    ("hits", Json::num(r.hits as f64)),
+                    ("misses", Json::num(r.misses as f64)),
+                    ("tuned", Json::num(r.tuned as f64)),
+                    ("tune_rejected", Json::num(r.tune_rejected as f64)),
+                    ("bad_requests", Json::num(r.bad_requests as f64)),
+                    ("shards", Json::num(ctx.snapshots.num_shards() as f64)),
+                    ("workloads", Json::num(ctx.snapshots.num_workloads() as f64)),
+                    ("records", Json::num(ctx.snapshots.num_records() as f64)),
+                ]),
+            )
+        }
+        ("GET", "/shutdown") => {
+            ctx.shutdown.store(true, Ordering::SeqCst);
+            Response::json(
+                200,
+                Json::obj(vec![("ok", Json::Bool(true)), ("shutdown", Json::Bool(true))]),
+            )
+        }
+        ("GET", "/lookup") => lookup(ctx, req),
+        ("POST", "/batch") => batch(ctx, req),
+        (m, p) => Response::error(404, &format!("no route {m} {p}")),
+    }
+}
+
+/// The hit path of `/lookup`: snapshot probe only, no locks. Returns
+/// `None` when the snapshot has nothing served for this workload.
+fn snapshot_hit(cache: &ServingCache, name: &str, shash: u64, target: &Target) -> Option<Response> {
+    let served = cache.lookup_workload(shash, target.name)?;
+    let best = served.top.first()?;
+    Some(Response::json(
+        200,
+        Json::obj(vec![
+            ("workload", Json::str(name)),
+            ("target", Json::str(target.name)),
+            ("hit", Json::Bool(true)),
+            ("latency_s", best.best_latency().map_or(Json::Null, Json::num)),
+            ("records", Json::num(served.top.len() as f64)),
+        ]),
+    ))
+}
+
+fn lookup(ctx: &ServerCtx, req: &Request) -> Response {
+    let Some(name) = req.query_get("workload") else {
+        return Response::error(400, "missing ?workload= parameter");
+    };
+    let target = match req.query_get("target") {
+        None => ctx.target.clone(),
+        Some(t) => match Target::by_name(t) {
+            Some(t) => t,
+            None => return Response::error(400, &format!("unknown target {t}")),
+        },
+    };
+    let Some(w) = workloads::by_name(name) else {
+        return Response::error(404, &format!("unknown workload {name}"));
+    };
+    let prog = (w.build)();
+    let shash = structural_hash(&prog);
+    if let Some(hit) = snapshot_hit(&ctx.snapshots.get(shash), name, shash, &target) {
+        ctx.stats.hits.fetch_add(1, Ordering::SeqCst);
+        return hit;
+    }
+    ctx.stats.misses.fetch_add(1, Ordering::SeqCst);
+    if ctx.cfg.serve.miss_trials == 0 {
+        return Response::json(
+            200,
+            Json::obj(vec![
+                ("workload", Json::str(name)),
+                ("target", Json::str(target.name)),
+                ("hit", Json::Bool(false)),
+                ("tune", Json::str("disabled")),
+            ]),
+        );
+    }
+    // Admission control: reserve an inflight slot or bounce. The
+    // fetch_add/check/fetch_sub dance is race-free because every path
+    // out of this function releases exactly the slot it took.
+    let slot = ctx.inflight.fetch_add(1, Ordering::SeqCst);
+    if slot >= ctx.cfg.max_inflight_tunes {
+        ctx.inflight.fetch_sub(1, Ordering::SeqCst);
+        ctx.stats.tune_rejected.fetch_add(1, Ordering::SeqCst);
+        return Response::json(
+            429,
+            Json::obj(vec![
+                ("workload", Json::str(name)),
+                ("target", Json::str(target.name)),
+                ("hit", Json::Bool(false)),
+                ("error", Json::str("tune-on-miss budget exhausted, retry later")),
+            ]),
+        );
+    }
+    let tuned = {
+        let mut db = ctx.db.lock().unwrap();
+        let result = serve_batch(&[name.to_string()], &target, &mut *db, &ctx.cfg.serve);
+        if result.is_ok() {
+            // Republish only the shard this tune wrote, while we still
+            // hold the writer lock (readers of other shards are
+            // untouched either way).
+            ctx.snapshots.refresh(&db, shash, ctx.cfg.serve.top_k);
+        }
+        result
+    };
+    ctx.inflight.fetch_sub(1, Ordering::SeqCst);
+    match tuned {
+        Err(e) => Response::error(400, &e),
+        Ok(outcomes) => {
+            ctx.stats.tuned.fetch_add(1, Ordering::SeqCst);
+            let o = outcomes.into_iter().next();
+            Response::json(
+                200,
+                Json::obj(vec![
+                    ("workload", Json::str(name)),
+                    ("target", Json::str(target.name)),
+                    ("hit", Json::Bool(false)),
+                    ("tuned", Json::Bool(true)),
+                    (
+                        "latency_s",
+                        o.as_ref().and_then(|o| o.latency_s).map_or(Json::Null, Json::num),
+                    ),
+                    ("trials", Json::num(o.map_or(0, |o| o.trials) as f64)),
+                ]),
+            )
+        }
+    }
+}
+
+/// `POST /batch`: one workload name per body line, answered report-only
+/// (no tuning) with one JSON line per name — the batched read path for
+/// scripted clients replaying traffic.
+fn batch(ctx: &ServerCtx, req: &Request) -> Response {
+    let mut lines = Vec::new();
+    for name in req.body.lines().map(str::trim).filter(|l| !l.is_empty()) {
+        let line = match workloads::by_name(name) {
+            None => Json::obj(vec![
+                ("workload", Json::str(name)),
+                ("error", Json::str("unknown workload")),
+            ]),
+            Some(w) => {
+                let prog = (w.build)();
+                let shash = structural_hash(&prog);
+                let cache = ctx.snapshots.get(shash);
+                match cache.lookup(shash, ctx.target.name).and_then(|r| r.best_latency()) {
+                    Some(lat) => {
+                        ctx.stats.hits.fetch_add(1, Ordering::SeqCst);
+                        Json::obj(vec![
+                            ("workload", Json::str(name)),
+                            ("hit", Json::Bool(true)),
+                            ("latency_s", Json::num(lat)),
+                        ])
+                    }
+                    None => {
+                        ctx.stats.misses.fetch_add(1, Ordering::SeqCst);
+                        Json::obj(vec![("workload", Json::str(name)), ("hit", Json::Bool(false))])
+                    }
+                }
+            }
+        };
+        lines.push(line.to_string());
+    }
+    let mut body = lines.join("\n");
+    body.push('\n');
+    Response { status: 200, content_type: "application/x-ndjson", body }
+}
+
+/// Blocking one-shot HTTP client for tests and the traffic bench: send
+/// `request_bytes` to `addr`, return the raw response. Deliberately dumb
+/// — it writes whatever it is given, which is how the malformed-request
+/// tests speak raw bytes.
+pub fn http_roundtrip(addr: &str, request_bytes: &[u8]) -> Result<String, String> {
+    let mut stream = TcpStream::connect(addr).map_err(|e| format!("connect {addr}: {e}"))?;
+    stream
+        .set_read_timeout(Some(Duration::from_secs(30)))
+        .map_err(|e| format!("timeout: {e}"))?;
+    stream.write_all(request_bytes).map_err(|e| format!("send: {e}"))?;
+    let mut out = String::new();
+    stream.read_to_string(&mut out).map_err(|e| format!("recv: {e}"))?;
+    Ok(out)
+}
+
+/// Build a plain `GET` request for [`http_roundtrip`].
+pub fn get_request(path_and_query: &str) -> Vec<u8> {
+    format!("GET {path_and_query} HTTP/1.1\r\nHost: metaschedule\r\nConnection: close\r\n\r\n")
+        .into_bytes()
+}
+
+/// The body of a response returned by [`http_roundtrip`] (everything
+/// after the header block), plus the status code.
+pub fn split_response(raw: &str) -> Result<(u16, &str), String> {
+    let status = raw
+        .strip_prefix("HTTP/1.1 ")
+        .and_then(|r| r.split_whitespace().next())
+        .and_then(|s| s.parse::<u16>().ok())
+        .ok_or_else(|| format!("unparseable status line in {raw:?}"))?;
+    let body = raw
+        .split_once("\r\n\r\n")
+        .map(|(_, b)| b)
+        .ok_or_else(|| format!("no header/body separator in {raw:?}"))?;
+    Ok((status, body))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(raw: &str) -> Request {
+        let mut r = std::io::Cursor::new(raw.as_bytes());
+        read_request(&mut r).unwrap()
+    }
+
+    #[test]
+    fn parses_request_line_query_and_headers() {
+        let req = parse(
+            "GET /lookup?workload=GMM&target=cpu-avx512 HTTP/1.1\r\nHost: x\r\nX-Extra: 1\r\n\r\n",
+        );
+        assert_eq!(req.method, "GET");
+        assert_eq!(req.path, "/lookup");
+        assert_eq!(req.query_get("workload"), Some("GMM"));
+        assert_eq!(req.query_get("target"), Some("cpu-avx512"));
+        assert_eq!(req.query_get("absent"), None);
+        assert!(req.body.is_empty());
+    }
+
+    #[test]
+    fn parses_post_body_by_content_length() {
+        let req = parse(
+            "POST /batch HTTP/1.1\r\nContent-Length: 8\r\n\r\nGMM\nC1D\n",
+        );
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.body, "GMM\nC1D\n");
+    }
+
+    #[test]
+    fn percent_decoding_handles_escapes_and_plus() {
+        assert_eq!(percent_decode("a+b"), "a b");
+        assert_eq!(percent_decode("a%2Fb"), "a/b");
+        assert_eq!(percent_decode("a%2fb"), "a/b");
+        assert_eq!(percent_decode("a%zzb"), "a%zzb", "bad escape passes through");
+        assert_eq!(percent_decode("trailing%2"), "trailing%2");
+    }
+
+    #[test]
+    fn malformed_requests_error_cleanly() {
+        let cases: &[&str] = &[
+            "",                                        // closed before a request line
+            "BOGUS\r\n\r\n",                           // not a request line
+            "GET /x\r\n\r\n",                          // missing version
+            "GET /x SPDY/3\r\n\r\n",                   // wrong protocol
+            "PUT /x HTTP/1.1\r\n\r\n",                 // unsupported method
+            "GET /x HTTP/1.1\r\nno-colon-here\r\n\r\n", // malformed header
+            "POST /x HTTP/1.1\r\nContent-Length: nope\r\n\r\n", // bad length
+        ];
+        for raw in cases {
+            let mut r = std::io::Cursor::new(raw.as_bytes());
+            assert!(read_request(&mut r).is_err(), "{raw:?} must not parse");
+        }
+        let huge = format!("POST /x HTTP/1.1\r\nContent-Length: {}\r\n\r\n", MAX_BODY_BYTES + 1);
+        let mut r = std::io::Cursor::new(huge.as_bytes());
+        assert!(read_request(&mut r).unwrap_err().contains("cap"));
+    }
+
+    #[test]
+    fn response_helpers_frame_one_json_line() {
+        let resp = Response::error(404, "nope");
+        assert!(resp.body.ends_with('\n'));
+        assert_eq!(resp.body.lines().count(), 1);
+        let j = Json::parse(resp.body.trim()).unwrap();
+        assert_eq!(j.get("error").and_then(Json::as_str), Some("nope"));
+        let (status, body) =
+            split_response("HTTP/1.1 429 Too Many Requests\r\nContent-Length: 3\r\n\r\nabc")
+                .unwrap();
+        assert_eq!(status, 429);
+        assert_eq!(body, "abc");
+    }
+}

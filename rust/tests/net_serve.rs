@@ -1,0 +1,228 @@
+//! Integration tests for the zero-dep HTTP serving front
+//! (`serve --listen`): a real `HttpServer` bound to an ephemeral port on
+//! a sharded database, exercised by real `TcpStream` clients —
+//! concurrent hits, misses, malformed requests, admission control, and
+//! graceful shutdown with an accurate traffic report.
+
+use std::path::PathBuf;
+
+use metaschedule::db::{AnyDb, Database, ShardedDb, TuningRecord};
+use metaschedule::serve::net::{get_request, http_roundtrip, split_response};
+use metaschedule::serve::{HttpConfig, HttpReport, HttpServer, ServeConfig};
+use metaschedule::sim::Target;
+use metaschedule::tir::structural_hash;
+use metaschedule::trace::{Inst, Trace};
+use metaschedule::util::json::Json;
+use metaschedule::workloads;
+
+/// Scratch directory removed on drop, panic included.
+struct DirGuard(PathBuf);
+impl Drop for DirGuard {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.0);
+    }
+}
+
+fn tmp_dir(name: &str) -> (PathBuf, DirGuard) {
+    let dir = std::env::temp_dir().join(format!("ms-net-serve-{name}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    (dir.clone(), DirGuard(dir))
+}
+
+/// A sharded db holding one committed record for the real `GMM` workload
+/// (its true structural hash, so `/lookup?workload=GMM` hits).
+fn db_with_gmm(dir: &PathBuf) -> AnyDb {
+    let w = workloads::by_name("GMM").expect("GMM is a built-in workload");
+    let shash = structural_hash(&(w.build)());
+    let mut db = ShardedDb::create(dir, 4).unwrap();
+    let wid = db.register_workload("GMM", shash, "cpu");
+    db.commit_record(TuningRecord {
+        workload: wid,
+        trace: Trace { insts: vec![Inst::GetBlock { name: "root".into(), out: 0 }] },
+        latencies: vec![1.25e-5],
+        target: "cpu".into(),
+        seed: 1,
+        round: 0,
+        cand_hash: 7,
+        sim_version: "simtest".into(),
+        rule_set: String::new(),
+    });
+    drop(db);
+    AnyDb::open(dir).unwrap()
+}
+
+/// Bind on an ephemeral port and run the server on its own thread;
+/// returns the resolved address and the join handle yielding the report.
+fn start_server(cfg: HttpConfig, db: AnyDb) -> (String, std::thread::JoinHandle<HttpReport>) {
+    let server = HttpServer::bind(cfg, Target::by_name("cpu").unwrap()).expect("bind :0");
+    let addr = server.local_addr();
+    let handle = std::thread::spawn(move || server.run(db));
+    (addr, handle)
+}
+
+fn read_only_cfg() -> HttpConfig {
+    HttpConfig {
+        addr: "127.0.0.1:0".into(),
+        workers: 3,
+        max_pending: 16,
+        max_inflight_tunes: 1,
+        serve: ServeConfig { miss_trials: 0, ..ServeConfig::default() },
+    }
+}
+
+#[test]
+fn concurrent_clients_get_correct_answers_and_malformed_requests_do_not_kill_the_server() {
+    let (dir, _guard) = tmp_dir("concurrent");
+    let (addr, handle) = start_server(read_only_cfg(), db_with_gmm(&dir));
+
+    // A malformed request first: it must cost its connection a 400 line
+    // and nothing else.
+    let raw = http_roundtrip(&addr, b"BOGUS\r\n\r\n").unwrap();
+    let (status, body) = split_response(&raw).unwrap();
+    assert_eq!(status, 400);
+    assert!(Json::parse(body.trim()).unwrap().get("error").is_some(), "400 carries an error line");
+
+    // Concurrent clients after the malformed one: hits, a read-only
+    // miss, and an unknown workload, all answered correctly.
+    let hits = 6;
+    let results: Vec<(u16, String)> = std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for _ in 0..hits {
+            let addr = addr.clone();
+            handles.push(s.spawn(move || {
+                let raw = http_roundtrip(&addr, &get_request("/lookup?workload=GMM")).unwrap();
+                let (status, body) = split_response(&raw).unwrap();
+                (status, body.to_string())
+            }));
+        }
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    for (status, body) in &results {
+        assert_eq!(*status, 200);
+        let j = Json::parse(body.trim()).unwrap();
+        assert_eq!(j.get("hit").and_then(Json::as_bool), Some(true));
+        let lat = j.get("latency_s").and_then(Json::as_f64).unwrap();
+        assert!((lat - 1.25e-5).abs() < 1e-12, "served the committed best latency");
+    }
+
+    // Read-only miss: SFM is a real workload with no records.
+    let raw = http_roundtrip(&addr, &get_request("/lookup?workload=SFM")).unwrap();
+    let (status, body) = split_response(&raw).unwrap();
+    assert_eq!(status, 200);
+    let j = Json::parse(body.trim()).unwrap();
+    assert_eq!(j.get("hit").and_then(Json::as_bool), Some(false));
+    assert_eq!(j.get("tune").and_then(Json::as_str), Some("disabled"));
+
+    // Unknown workload: 404 error line.
+    let raw = http_roundtrip(&addr, &get_request("/lookup?workload=NOPE")).unwrap();
+    assert_eq!(split_response(&raw).unwrap().0, 404);
+
+    // Batched report-only lookups: one NDJSON line per name.
+    let body = "GMM\nSFM\nNOPE\n";
+    let req = format!(
+        "POST /batch HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    let raw = http_roundtrip(&addr, req.as_bytes()).unwrap();
+    let (status, ndjson) = split_response(&raw).unwrap();
+    assert_eq!(status, 200);
+    let lines: Vec<Json> = ndjson.lines().map(|l| Json::parse(l).unwrap()).collect();
+    assert_eq!(lines.len(), 3);
+    assert_eq!(lines[0].get("hit").and_then(Json::as_bool), Some(true));
+    assert_eq!(lines[1].get("hit").and_then(Json::as_bool), Some(false));
+    assert!(lines[2].get("error").is_some());
+
+    // Liveness + stats still answer after all of the above.
+    let raw = http_roundtrip(&addr, &get_request("/healthz")).unwrap();
+    assert_eq!(split_response(&raw).unwrap().0, 200);
+    let raw = http_roundtrip(&addr, &get_request("/stats")).unwrap();
+    let (status, body) = split_response(&raw).unwrap();
+    assert_eq!(status, 200);
+    let j = Json::parse(body.trim()).unwrap();
+    assert_eq!(j.get("shards").and_then(Json::as_f64), Some(4.0));
+
+    // Graceful shutdown: answered, then `run` returns the report.
+    let raw = http_roundtrip(&addr, &get_request("/shutdown")).unwrap();
+    assert_eq!(split_response(&raw).unwrap().0, 200);
+    let report = handle.join().unwrap();
+    assert!(report.requests >= hits + 6, "parseable requests all counted: {report:?}");
+    assert!(report.hits >= hits + 1, "lookup + batch hits counted: {report:?}");
+    assert!(report.misses >= 1, "{report:?}");
+    assert!(report.bad_requests >= 2, "malformed + unknown workload/name: {report:?}");
+    assert_eq!(report.tuned, 0, "read-only server never tunes: {report:?}");
+}
+
+#[test]
+fn admission_control_bounces_tune_on_miss_with_429() {
+    let (dir, _guard) = tmp_dir("admission");
+    // Tuning enabled but an inflight budget of zero: every miss must be
+    // bounced immediately instead of queueing behind a search.
+    let cfg = HttpConfig {
+        addr: "127.0.0.1:0".into(),
+        workers: 2,
+        max_pending: 8,
+        max_inflight_tunes: 0,
+        serve: ServeConfig { miss_trials: 4, ..ServeConfig::default() },
+    };
+    let (addr, handle) = start_server(cfg, db_with_gmm(&dir));
+
+    // Hits are unaffected by the zero tune budget.
+    let raw = http_roundtrip(&addr, &get_request("/lookup?workload=GMM")).unwrap();
+    assert_eq!(split_response(&raw).unwrap().0, 200);
+
+    for _ in 0..3 {
+        let raw = http_roundtrip(&addr, &get_request("/lookup?workload=SFM")).unwrap();
+        let (status, body) = split_response(&raw).unwrap();
+        assert_eq!(status, 429);
+        let j = Json::parse(body.trim()).unwrap();
+        assert!(j.get("error").and_then(Json::as_str).unwrap().contains("budget"));
+    }
+
+    let raw = http_roundtrip(&addr, &get_request("/shutdown")).unwrap();
+    assert_eq!(split_response(&raw).unwrap().0, 200);
+    let report = handle.join().unwrap();
+    assert_eq!(report.tune_rejected, 3, "{report:?}");
+    assert_eq!(report.tuned, 0, "{report:?}");
+    assert!(report.hits >= 1, "{report:?}");
+    // 429 is load shedding, not a client error.
+    assert_eq!(report.bad_requests, 0, "{report:?}");
+}
+
+#[test]
+fn tune_on_miss_commits_and_subsequent_lookups_hit_the_refreshed_shard() {
+    let (dir, _guard) = tmp_dir("tune");
+    let cfg = HttpConfig {
+        addr: "127.0.0.1:0".into(),
+        workers: 2,
+        max_pending: 8,
+        max_inflight_tunes: 1,
+        serve: ServeConfig { miss_trials: 4, threads: 1, ..ServeConfig::default() },
+    };
+    let (addr, handle) = start_server(cfg, db_with_gmm(&dir));
+
+    // First SFM lookup misses and tunes (4 trials keeps it fast).
+    let raw = http_roundtrip(&addr, &get_request("/lookup?workload=SFM")).unwrap();
+    let (status, body) = split_response(&raw).unwrap();
+    assert_eq!(status, 200, "{body}");
+    let j = Json::parse(body.trim()).unwrap();
+    assert_eq!(j.get("hit").and_then(Json::as_bool), Some(false));
+    assert_eq!(j.get("tuned").and_then(Json::as_bool), Some(true));
+
+    // The tune republished its shard: the next lookup is a snapshot hit.
+    let raw = http_roundtrip(&addr, &get_request("/lookup?workload=SFM")).unwrap();
+    let (status, body) = split_response(&raw).unwrap();
+    assert_eq!(status, 200);
+    let j = Json::parse(body.trim()).unwrap();
+    assert_eq!(j.get("hit").and_then(Json::as_bool), Some(true), "{body}");
+
+    let raw = http_roundtrip(&addr, &get_request("/shutdown")).unwrap();
+    assert_eq!(split_response(&raw).unwrap().0, 200);
+    let report = handle.join().unwrap();
+    assert_eq!(report.tuned, 1, "{report:?}");
+    assert!(report.hits >= 1, "{report:?}");
+
+    // The commit is durable: reopening the directory shows SFM on disk.
+    let db = AnyDb::open(&dir).unwrap();
+    let sfm_hash = structural_hash(&(workloads::by_name("SFM").unwrap().build)());
+    assert!(db.find_workload(sfm_hash, "cpu").is_some(), "tuned records reached the shard file");
+}

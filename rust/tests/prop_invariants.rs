@@ -590,6 +590,203 @@ fn prop_probe_fingerprint_is_content_function() {
     let _ = std::fs::remove_file(&path);
 }
 
+/// A tuning record for the sharding properties below: real trace, one
+/// latency, hash-distinct candidates.
+fn shard_rec(workload: usize, i: usize, lat: Option<f64>) -> TuningRecord {
+    TuningRecord {
+        workload,
+        trace: Trace { insts: vec![Inst::GetBlock { name: format!("b{i}"), out: 0 }] },
+        latencies: lat.into_iter().collect(),
+        target: "cpu".into(),
+        seed: 1,
+        round: i as u64,
+        cand_hash: ((workload as u64) << 32) | i as u64,
+        sim_version: "simtest".into(),
+        rule_set: String::new(),
+    }
+}
+
+/// Scratch dir helper for the sharding properties: one dir per test,
+/// wiped between cases.
+fn fresh_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("ms-prop-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+#[test]
+fn prop_shard_routing_is_stable_across_sessions() {
+    // For any shard count and any workload hash: the workload's records
+    // land in exactly the `shard_of` file, stay there across a close +
+    // reopen, and later commits through the reopened handle route to the
+    // same shard — a record never migrates between shards behind the
+    // operator's back.
+    use metaschedule::db::{shard_of, ShardedDb};
+    check(
+        cfg(15),
+        |rng| {
+            let shards = 1 + rng.gen_range(8);
+            let mut hashes: Vec<u64> = (0..1 + rng.gen_range(5)).map(|_| rng.next_u64()).collect();
+            hashes.sort_unstable();
+            hashes.dedup();
+            (shards, hashes)
+        },
+        |(shards, hashes)| {
+            let dir = fresh_dir("route");
+            let mut db = ShardedDb::create(&dir, *shards).map_err(|e| e.to_string())?;
+            for (w, &h) in hashes.iter().enumerate() {
+                let wid = db.register_workload(&format!("w{w}"), h, "cpu");
+                db.commit_record(shard_rec(wid, w, Some(1e-5)));
+            }
+            drop(db);
+            let mut db = ShardedDb::open(&dir).map_err(|e| e.to_string())?;
+            for (w, &h) in hashes.iter().enumerate() {
+                let home = shard_of(h, *shards);
+                for s in 0..*shards {
+                    let found = db.shard(s).find_workload(h, "cpu").is_some();
+                    if found != (s == home) {
+                        return Err(format!(
+                            "hash {h:016x} with {shards} shard(s): found={found} in shard {s}, home {home}"
+                        ));
+                    }
+                }
+                // A post-reopen commit must grow the home shard only.
+                let before: Vec<usize> = (0..*shards).map(|s| db.shard(s).num_records()).collect();
+                let wid = db.find_workload(h, "cpu").ok_or("workload lost on reopen")?;
+                db.commit_record(shard_rec(wid, 1000 + w, Some(2e-5)));
+                for s in 0..*shards {
+                    let grew = db.shard(s).num_records() - before[s];
+                    if grew != usize::from(s == home) {
+                        return Err(format!("commit for {h:016x} changed shard {s} (home {home})"));
+                    }
+                }
+            }
+            let _ = std::fs::remove_dir_all(&dir);
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_sharded_compaction_idempotent_per_shard_byte_for_byte() {
+    // Parallel per-shard compaction must be idempotent exactly like the
+    // single-file compactor: a second pass changes no shard file by even
+    // one byte, and best-latency answers survive the first pass.
+    use metaschedule::db::{shard_file_name, ShardedDb};
+    check(
+        cfg(12),
+        |rng| {
+            let shards = 1 + rng.gen_range(6);
+            let n_workloads = 1 + rng.gen_range(4);
+            let recs: Vec<RandRecord> = vec_of(rng, 0, 24, |rng| {
+                let w = rng.gen_range(n_workloads);
+                let n_lat = rng.gen_range(3);
+                let lats: Vec<f64> =
+                    (0..n_lat).map(|_| (1 + rng.gen_range(8)) as f64 * 0.5e-6).collect();
+                (w, lats, rng.next_u64())
+            });
+            (shards, n_workloads, recs)
+        },
+        |(shards, n_workloads, recs)| {
+            let dir = fresh_dir("shard-compact");
+            let mut db = ShardedDb::create(&dir, *shards).map_err(|e| e.to_string())?;
+            for w in 0..*n_workloads {
+                db.register_workload(&format!("w{w}"), w as u64 + 1, "cpu");
+            }
+            for (i, (w, lats, cand)) in recs.iter().enumerate() {
+                let mut r = shard_rec(*w, i, None);
+                r.latencies = lats.clone();
+                r.cand_hash = *cand;
+                db.commit_record(r);
+            }
+            let ref_best: Vec<Option<f64>> =
+                (0..*n_workloads).map(|w| db.best_latency(w)).collect();
+            let policy = CompactionPolicy::keep_top(3);
+            db.compact_parallel(&policy, 2).map_err(|e| e.to_string())?;
+            let bytes_once: Vec<Vec<u8>> = (0..*shards)
+                .map(|s| std::fs::read(dir.join(shard_file_name(s))).unwrap_or_default())
+                .collect();
+            for w in 0..*n_workloads {
+                if db.best_latency(w) != ref_best[w] {
+                    return Err(format!("workload {w}: best latency changed by compaction"));
+                }
+            }
+            let _ = db.compact_parallel(&policy, 2).map_err(|e| e.to_string())?;
+            for s in 0..*shards {
+                let again = std::fs::read(dir.join(shard_file_name(s))).unwrap_or_default();
+                if again != bytes_once[s] {
+                    return Err(format!("second compaction changed shard {s}"));
+                }
+            }
+            let _ = std::fs::remove_dir_all(&dir);
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_migration_preserves_every_answer_byte_for_byte() {
+    // Migrating a single-file db to any shard count is invisible to
+    // readers: workload ids survive, and `query_top_k` returns records
+    // whose JSON serialization is byte-identical to the source's.
+    use metaschedule::db::migrate_from_file;
+    check(
+        cfg(12),
+        |rng| {
+            let shards = 1 + rng.gen_range(8);
+            let n_workloads = 1 + rng.gen_range(4);
+            let recs: Vec<RandRecord> = vec_of(rng, 0, 20, |rng| {
+                let w = rng.gen_range(n_workloads);
+                let n_lat = rng.gen_range(3);
+                let lats: Vec<f64> =
+                    (0..n_lat).map(|_| (1 + rng.gen_range(8)) as f64 * 0.5e-6).collect();
+                (w, lats, rng.next_u64())
+            });
+            (shards, n_workloads, recs)
+        },
+        |(shards, n_workloads, recs)| {
+            let src = std::env::temp_dir()
+                .join(format!("ms-prop-migrate-src-{}.jsonl", std::process::id()));
+            let dest = fresh_dir("migrate-dest");
+            let _ = std::fs::remove_file(&src);
+            let mut db = JsonFileDb::open(&src).map_err(|e| e.to_string())?;
+            for w in 0..*n_workloads {
+                db.register_workload(&format!("w{w}"), (w as u64 + 1) * 7, "cpu");
+            }
+            for (i, (w, lats, cand)) in recs.iter().enumerate() {
+                let mut r = shard_rec(*w, i, None);
+                r.latencies = lats.clone();
+                r.cand_hash = *cand;
+                db.commit_record(r);
+            }
+            drop(db);
+            let (sharded, skipped) =
+                migrate_from_file(&src, &dest, *shards).map_err(|e| e.to_string())?;
+            if skipped != 0 {
+                return Err("clean source reported skipped lines".into());
+            }
+            let source = JsonFileDb::open(&src).map_err(|e| e.to_string())?;
+            for w in 0..*n_workloads {
+                let a = source.query_top_k(w, 8);
+                let b = sharded.query_top_k(w, 8);
+                let aj: Vec<String> = a.iter().map(|r| r.to_json().to_string()).collect();
+                let bj: Vec<String> = b.iter().map(|r| r.to_json().to_string()).collect();
+                if aj != bj {
+                    return Err(format!(
+                        "workload {w}: top-k diverged after migration to {shards} shard(s)"
+                    ));
+                }
+                if source.has_candidate(w, 12345) != sharded.has_candidate(w, 12345) {
+                    return Err(format!("workload {w}: has_candidate diverged"));
+                }
+            }
+            let _ = std::fs::remove_file(&src);
+            let _ = std::fs::remove_dir_all(&dest);
+            Ok(())
+        },
+    );
+}
+
 #[test]
 fn prop_vendor_latency_scale_invariance() {
     // Vendor model: scaling a GEMM's flops scales its compute-bound
