@@ -2,7 +2,10 @@
 //! mixed hit/miss ratios through the same per-shard snapshot path the
 //! HTTP front serves from ([`metaschedule::serve::ShardedSnapshots`]),
 //! with per-operation latency percentiles (p50/p99) split by hit vs
-//! miss, written to `BENCH_serving.json` for CI artifact upload.
+//! miss, written to `BENCH_serving.json` for CI artifact upload. Also
+//! gates telemetry cost: the instrumented lookup path (one cached
+//! relaxed-atomic counter increment per op) must stay within 5% of the
+//! bare path, and the measured `overhead_pct` lands in the JSON.
 //!
 //! ```sh
 //! cargo bench --bench serving_traffic             # full run (1.2M lookups)
@@ -89,6 +92,71 @@ struct MixResult {
     miss_p50: f64,
     miss_p99: f64,
     mops: f64,
+}
+
+/// Measure the cost the instrumented serving path adds per operation:
+/// the same pre-generated lookup stream replayed bare ("metrics off")
+/// and with the cached-`Arc<Counter>` increment the server pays per
+/// request ("metrics on" — registry lookups happen at startup, the hot
+/// path is one relaxed atomic add). Best-of-`reps` wall time per
+/// variant so scheduler noise cannot fail the overhead gate spuriously.
+/// Returns (off_ns_per_op, on_ns_per_op, overhead_pct).
+fn telemetry_overhead(
+    snaps: &ShardedSnapshots,
+    keys: &[(u64, &'static str)],
+    known: &HashSet<u64>,
+    lookups: usize,
+    reps: usize,
+) -> (f64, f64, f64) {
+    let mut rng = Rng::seed_from_u64(4242);
+    let mut reqs: Vec<(u64, &'static str)> = Vec::with_capacity(lookups);
+    for _ in 0..lookups {
+        if rng.gen_f64() < 0.90 {
+            let (shash, target) = keys[(rng.next_u64() as usize) % keys.len()];
+            reqs.push((shash, target));
+        } else {
+            let mut shash = rng.next_u64();
+            while known.contains(&shash) {
+                shash = rng.next_u64();
+            }
+            reqs.push((shash, "cpu"));
+        }
+    }
+    let counter = metaschedule::telemetry::global()
+        .counter("bench_serving_lookups_total", "lookups replayed by the overhead bench");
+    let mut best_off = u64::MAX;
+    let mut best_on = u64::MAX;
+    let mut hits_off = 0usize;
+    let mut hits_on = 0usize;
+    for _ in 0..reps {
+        // Bare replay: identical loop body minus the counter increment.
+        let t = Instant::now();
+        let mut hits = 0usize;
+        for &(shash, target) in &reqs {
+            if snaps.get(shash).lookup(shash, target).is_some() {
+                hits += 1;
+            }
+        }
+        best_off = best_off.min(t.elapsed().as_nanos() as u64);
+        hits_off = hits;
+
+        // Instrumented replay.
+        let t = Instant::now();
+        let mut hits = 0usize;
+        for &(shash, target) in &reqs {
+            counter.inc();
+            if snaps.get(shash).lookup(shash, target).is_some() {
+                hits += 1;
+            }
+        }
+        best_on = best_on.min(t.elapsed().as_nanos() as u64);
+        hits_on = hits;
+    }
+    assert_eq!(hits_off, hits_on, "variants must do identical work");
+    let off = best_off as f64 / lookups as f64;
+    let on = best_on as f64 / lookups as f64;
+    let overhead_pct = ((on - off) / off * 100.0).max(0.0);
+    (off, on, overhead_pct)
 }
 
 /// Replay `lookups` requests at `hit_ratio` against the per-shard
@@ -184,6 +252,18 @@ fn main() {
         assert!(total >= 1_000_000, "full replay must cover >=1M lookups, got {total}");
     }
 
+    // Telemetry overhead gate: the instrumented hot path must stay
+    // within 5% of the bare one. The op count is fixed (not scaled by
+    // --smoke) so the CI smoke run measures the same thing as full runs.
+    let (off_ns, on_ns, overhead_pct) = telemetry_overhead(&snaps, &keys, &known, 200_000, 5);
+    println!(
+        "telemetry overhead: {off_ns:.1} ns/op off, {on_ns:.1} ns/op on ({overhead_pct:.2}% overhead)"
+    );
+    assert!(
+        overhead_pct <= 5.0,
+        "instrumented serving path exceeds the 5% overhead budget: {overhead_pct:.2}%"
+    );
+
     let mut rows = Vec::new();
     for r in &results {
         rows.push(vec![
@@ -207,6 +287,14 @@ fn main() {
         ("workloads", Json::num(workloads as f64)),
         ("records_per_workload", Json::num(records as f64)),
         ("total_lookups", Json::num(total as f64)),
+        (
+            "telemetry_overhead",
+            Json::obj(vec![
+                ("off_ns_per_op", Json::num(off_ns)),
+                ("on_ns_per_op", Json::num(on_ns)),
+                ("overhead_pct", Json::num(overhead_pct)),
+            ]),
+        ),
         (
             "mixes",
             Json::arr(results.iter().map(|r| {

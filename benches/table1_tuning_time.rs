@@ -1,13 +1,18 @@
 //! Table 1 reproduction: tuning time for 5 end-to-end models, TVM-Ansor
-//! vs MetaSchedule at equal trial budgets (wall-clock seconds).
+//! vs MetaSchedule at equal trial budgets (wall-clock seconds), plus a
+//! time-to-quality curve per model (trials / best latency / wall-clock
+//! milliseconds, from [`metaschedule::search::QualityPoint`]) written to
+//! `BENCH_table1.json` for CI artifact upload.
 //!
 //! ```sh
 //! cargo bench --bench table1_tuning_time -- --trials 16
 //! ```
 
-use metaschedule::exp::{table1, ExpConfig};
+use metaschedule::exp::{self, table1, ExpConfig};
+use metaschedule::graph::{self, extract_tasks};
 use metaschedule::sim::Target;
 use metaschedule::util::cli::Args;
+use metaschedule::util::json::Json;
 
 fn main() {
     let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
@@ -18,9 +23,55 @@ fn main() {
         db_path: args.flag("db").map(String::from),
         ..ExpConfig::default()
     };
-    let report = table1::run(&Target::cpu_avx512(), &cfg, None);
+    let target = Target::cpu_avx512();
+    let report = table1::run(&target, &cfg, None);
     // Values are seconds of tuning wall-clock, not operator latency.
     report.print();
     let _ = report.write("bench_results.jsonl");
+
+    // Time-to-quality: tune each model's heaviest task once and keep the
+    // full (trials, best_latency_s, wall_ms) curve the search emits.
+    let quality_cfg = ExpConfig { db_path: None, ..cfg.clone() };
+    let mut curves = Vec::new();
+    for m in table1::TABLE1_MODELS {
+        let ops = graph::by_name(m).expect("unknown model");
+        let tasks = extract_tasks(&ops);
+        let task = tasks
+            .iter()
+            .max_by_key(|t| t.weight)
+            .expect("model extracts at least one task");
+        let res = exp::tune_metaschedule(&task.prog, &target, &quality_cfg);
+        println!(
+            "time-to-quality: {m} ({}): {} point(s), final {:.2}us",
+            task.name,
+            res.quality.len(),
+            res.best_latency_s * 1e6
+        );
+        curves.push(Json::obj(vec![
+            ("model", Json::str(m)),
+            ("task", Json::str(task.name.clone())),
+            (
+                "points",
+                Json::arr(res.quality.iter().map(|q| {
+                    Json::obj(vec![
+                        ("trials", Json::num(q.trials as f64)),
+                        ("best_latency_s", Json::num(q.best_latency_s)),
+                        ("wall_ms", Json::num(q.wall_ms)),
+                    ])
+                })),
+            ),
+        ]));
+    }
+
+    let json = Json::obj(vec![
+        ("bench", Json::str("table1_tuning_time")),
+        ("trials", Json::num(cfg.trials as f64)),
+        ("seed", Json::num(cfg.seed as f64)),
+        ("report", report.to_json()),
+        ("time_to_quality", Json::arr(curves.into_iter())),
+    ]);
+    let out = "BENCH_table1.json";
+    std::fs::write(out, format!("{}\n", json.to_string())).expect("write BENCH_table1.json");
+    println!("wrote {out}");
     println!("(columns are tuning seconds; rows appended to bench_results.jsonl)");
 }

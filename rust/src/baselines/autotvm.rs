@@ -221,9 +221,11 @@ impl AutoTvm {
         measurer: &mut dyn Measurer,
         seed: u64,
     ) -> TuneResult {
+        let t0 = std::time::Instant::now();
         let mut rng = Rng::seed_from_u64(seed);
         let mut best: Option<(f64, Schedule)> = None;
         let mut curve = Vec::new();
+        let mut quality = Vec::new();
         let mut trials = 0;
         let mut attempts = 0;
         while trials < self.num_trials && attempts < self.num_trials * 16 {
@@ -239,7 +241,13 @@ impl AutoTvm {
             if best.as_ref().map(|(b, _)| lat < *b).unwrap_or(true) {
                 best = Some((lat, sch));
             }
-            curve.push((trials, best.as_ref().unwrap().0));
+            let best_now = best.as_ref().unwrap().0;
+            curve.push((trials, best_now));
+            quality.push(crate::search::QualityPoint {
+                trials,
+                best_latency_s: best_now,
+                wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+            });
         }
         let (best_latency_s, best_sch) =
             best.expect("autotvm: no valid config found within budget");
@@ -250,6 +258,7 @@ impl AutoTvm {
             best_prog: best_sch.prog,
             trials,
             curve,
+            quality,
             warm_records: 0,
             transferred_records: 0,
             stale_skipped: 0,

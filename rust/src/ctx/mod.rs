@@ -41,28 +41,37 @@ pub use registry::{
     DEFAULT_RULES_GPU,
 };
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::schedule::Schedule;
 use crate::sim::Target;
 use crate::space::{ScheduleRule, SpaceGenerator};
+use crate::telemetry::{maybe_span, sanitize_name, Counter, Metrics, Span, TraceSink};
 use crate::tir::Program;
 use crate::trace::Trace;
 use crate::util::rng::Rng;
 
-/// Pass/reject counters for one postprocessor (diagnostics only).
+/// Pass/reject counters for one postprocessor (diagnostics only),
+/// registered in the context's metrics registry as
+/// `postproc_<name>_{pass,reject}_total`.
 struct PostprocStat {
-    pass: AtomicUsize,
-    reject: AtomicUsize,
+    pass: Arc<Counter>,
+    reject: Arc<Counter>,
     notes: Mutex<Vec<String>>,
 }
 
 impl PostprocStat {
-    fn new() -> PostprocStat {
+    fn new(name: &str, metrics: &Metrics) -> PostprocStat {
+        let frag = sanitize_name(name);
         PostprocStat {
-            pass: AtomicUsize::new(0),
-            reject: AtomicUsize::new(0),
+            pass: metrics.counter_unique(
+                &format!("postproc_{frag}_pass_total"),
+                "candidates this postprocessor accepted",
+            ),
+            reject: metrics.counter_unique(
+                &format!("postproc_{frag}_reject_total"),
+                "candidates this postprocessor rejected",
+            ),
             notes: Mutex::new(Vec::new()),
         }
     }
@@ -78,7 +87,15 @@ pub struct TuneContext {
     mutators: MutatorSet,
     postprocs: Vec<Box<dyn Postproc>>,
     postproc_stats: Vec<PostprocStat>,
-    mutations_accepted: AtomicUsize,
+    mutations_accepted: Arc<Counter>,
+    /// This context's metrics registry — the space generator's, adopted,
+    /// so rule, postproc, and mutation counters all live in one place.
+    /// Per-context (not process-global): `--explain-space` reports exact
+    /// counts for *this* context.
+    metrics: Arc<Metrics>,
+    /// Optional trace sink (`tune --profile`); search layers open spans
+    /// through [`TuneContext::span`], which is free when unset.
+    trace_sink: OnceLock<Arc<TraceSink>>,
     rule_set: String,
     /// Rule names this context can vouch for when judging donor
     /// provenance: the resolving registry's full name list when the
@@ -110,7 +127,10 @@ impl TuneContext {
     ) -> TuneContext {
         let space = SpaceGenerator::new(rules, target.clone());
         let rule_set = space.rule_set();
-        let postproc_stats = postprocs.iter().map(|_| PostprocStat::new()).collect();
+        let metrics = Arc::clone(space.metrics());
+        let postproc_stats = postprocs.iter().map(|p| PostprocStat::new(p.name(), &metrics)).collect();
+        let mutations_accepted =
+            metrics.counter("ctx_mutations_accepted_total", "trace mutations that validated");
         // Every builtin name is always vouched for; contexts resolved
         // through `from_specs_in` extend this with their registry's
         // custom names.
@@ -126,7 +146,9 @@ impl TuneContext {
             mutators,
             postprocs,
             postproc_stats,
-            mutations_accepted: AtomicUsize::new(0),
+            mutations_accepted,
+            metrics,
+            trace_sink: OnceLock::new(),
             rule_set,
             known_rules,
         }
@@ -198,6 +220,30 @@ impl TuneContext {
         &self.mutators
     }
 
+    /// This context's metrics registry: rule-diag, postproc, and
+    /// mutation counters, addressable by name (see
+    /// `docs/OBSERVABILITY.md` for the families).
+    pub fn metrics(&self) -> &Arc<Metrics> {
+        &self.metrics
+    }
+
+    /// Attach a trace sink (`tune --profile`). First call wins; later
+    /// calls are ignored — a context profiles into at most one file.
+    pub fn set_trace_sink(&self, sink: Arc<TraceSink>) {
+        let _ = self.trace_sink.set(sink);
+    }
+
+    /// The attached trace sink, if profiling is on.
+    pub fn trace_sink(&self) -> Option<&Arc<TraceSink>> {
+        self.trace_sink.get()
+    }
+
+    /// Open a trace span against this context's sink — a disabled,
+    /// free span when profiling is off.
+    pub fn span(&self, name: impl Into<String>, cat: &'static str) -> Span {
+        maybe_span(self.trace_sink.get(), name, cat)
+    }
+
     /// Canonical rule-set label, stamped into tuning-record provenance.
     pub fn rule_set(&self) -> &str {
         &self.rule_set
@@ -234,7 +280,7 @@ impl TuneContext {
     pub fn mutate(&self, trace: &Trace, prog: &Program, rng: &mut Rng, seed: u64) -> Option<Schedule> {
         let out = self.mutators.mutate_with(trace, prog, rng, seed, |sch| self.postprocess(sch));
         if out.is_some() {
-            self.mutations_accepted.fetch_add(1, Ordering::Relaxed);
+            self.mutations_accepted.inc();
         }
         out
     }
@@ -244,10 +290,10 @@ impl TuneContext {
         for (p, stat) in self.postprocs.iter().zip(&self.postproc_stats) {
             match p.check(sch, &self.target) {
                 Ok(()) => {
-                    stat.pass.fetch_add(1, Ordering::Relaxed);
+                    stat.pass.inc();
                 }
                 Err(e) => {
-                    stat.reject.fetch_add(1, Ordering::Relaxed);
+                    stat.reject.inc();
                     let mut notes = stat.notes.lock().unwrap();
                     if notes.len() < 2 && !notes.contains(&e) {
                         notes.push(e);
@@ -291,8 +337,8 @@ impl TuneContext {
             out.push_str(&format!(
                 "postproc {}: pass {}, reject {}\n",
                 p.name(),
-                stat.pass.load(Ordering::Relaxed),
-                stat.reject.load(Ordering::Relaxed)
+                stat.pass.get(),
+                stat.reject.get()
             ));
             let desc = p.describe();
             if !desc.is_empty() {
@@ -305,10 +351,7 @@ impl TuneContext {
         for (name, weight, proposed) in self.mutators.stats() {
             out.push_str(&format!("mutator {name} (weight {weight}): {proposed} proposals\n"));
         }
-        out.push_str(&format!(
-            "mutations accepted: {}\n",
-            self.mutations_accepted.load(Ordering::Relaxed)
-        ));
+        out.push_str(&format!("mutations accepted: {}\n", self.mutations_accepted.get()));
         out
     }
 }
@@ -425,6 +468,22 @@ mod tests {
         assert!(text.contains("mutator tile-transfer"), "{text}");
         assert!(text.contains("rules: auto-inline,"), "{text}");
         assert!(text.contains("mutators: tile-transfer,categorical-redraw,compute-location-move"), "{text}");
+    }
+
+    #[test]
+    fn context_metrics_registry_tracks_diagnostics() {
+        let ctx = TuneContext::generic(Target::cpu_avx512());
+        let prog = workloads::matmul(1, 64, 64, 64);
+        let states = ctx.generate(&prog, 1);
+        let m = ctx.metrics();
+        assert_eq!(m.counter_value("space_generations_total"), Some(1));
+        assert_eq!(m.counter_value("space_states_total"), Some(states.len() as u64));
+        assert!(m.counter_value("space_rule_auto_inline_skipped_total").unwrap_or(0) > 0);
+        assert_eq!(m.counter_value("ctx_mutations_accepted_total"), Some(0));
+        crate::telemetry::parse_exposition(&m.render()).expect("registry renders valid exposition");
+        // No sink attached: spans are disabled and free.
+        assert!(ctx.trace_sink().is_none());
+        assert!(!ctx.span("x", "test").is_enabled());
     }
 
     #[test]

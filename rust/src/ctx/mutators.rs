@@ -13,9 +13,9 @@
 //! the same instruction.
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicUsize, Ordering};
 
 use crate::schedule::Schedule;
+use crate::telemetry::Counter;
 use crate::tir::Program;
 use crate::trace::replay::{replay_with_decisions, Decision};
 use crate::trace::{Inst, Trace};
@@ -167,7 +167,10 @@ impl Mutator for ComputeLocationMove {
 struct Entry {
     mutator: Box<dyn Mutator>,
     weight: f64,
-    proposed: AtomicUsize,
+    /// Proposals dispatched to this mutator (diagnostics only; a
+    /// standalone telemetry counter — the set outlives no registry, so
+    /// the instrument is unregistered).
+    proposed: Counter,
 }
 
 /// A weighted, ordered set of mutators — the mutation half of a
@@ -195,7 +198,7 @@ impl MutatorSet {
         self.entries.push(Entry {
             mutator,
             weight: weight.max(0.0),
-            proposed: AtomicUsize::new(0),
+            proposed: Counter::new(),
         });
     }
 
@@ -227,7 +230,7 @@ impl MutatorSet {
     pub fn stats(&self) -> Vec<(String, f64, usize)> {
         self.entries
             .iter()
-            .map(|e| (e.mutator.name().to_string(), e.weight, e.proposed.load(Ordering::Relaxed)))
+            .map(|e| (e.mutator.name().to_string(), e.weight, e.proposed.get() as usize))
             .collect()
     }
 
@@ -269,7 +272,7 @@ impl MutatorSet {
             }
         };
         let e = &self.entries[pick];
-        e.proposed.fetch_add(1, Ordering::Relaxed);
+        e.proposed.inc();
         e.mutator.propose(trace, idx, prog, rng)
     }
 

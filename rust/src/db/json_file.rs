@@ -36,11 +36,13 @@
 use std::fs::{File, OpenOptions};
 use std::io::Write as _;
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 use crate::db::compact::{is_stale, keep_mask, CompactionPolicy, CompactionReport};
 use crate::db::memory::InMemoryDb;
 use crate::db::record::TuningRecord;
 use crate::db::{Database, WorkloadEntry, WorkloadId};
+use crate::telemetry::{self, Counter};
 use crate::util::json::Json;
 
 /// Size-triggered GC configuration (see [`JsonFileDb::set_auto_gc`]).
@@ -279,6 +281,12 @@ pub struct JsonFileDb {
     /// last snapshot build to refresh on change instead of on a timer;
     /// cross-process watchers use [`probe`] instead.
     commit_counter: u64,
+    /// Process-wide telemetry handles ([`telemetry::global`]), cached at
+    /// open so the commit hot path pays one relaxed atomic increment and
+    /// never touches the registry mutex. Cumulative across every handle
+    /// in the process — `/metrics` observability, not per-file state.
+    tel_commits: Arc<Counter>,
+    tel_compactions: Arc<Counter>,
 }
 
 impl JsonFileDb {
@@ -300,6 +308,7 @@ impl JsonFileDb {
             .append(true)
             .open(&path)
             .map_err(|e| format!("open {}: {e}", path.display()))?;
+        let m = telemetry::global();
         Ok(JsonFileDb {
             path,
             file,
@@ -309,6 +318,11 @@ impl JsonFileDb {
             needs_newline: !loaded.ends_with_newline,
             auto_gc: None,
             commit_counter: 0,
+            tel_commits: m.counter(
+                "db_commits_total",
+                "lines appended to tuning databases (registrations + record commits)",
+            ),
+            tel_compactions: m.counter("db_compactions_total", "database compaction rewrites"),
         })
     }
 
@@ -400,6 +414,7 @@ impl JsonFileDb {
         let corrupt_dropped = std::mem::take(&mut self.skipped);
         self.skip_notes.clear();
         self.mem.replace_records(kept);
+        self.tel_compactions.inc();
         Ok(CompactionReport {
             kept: self.mem.num_records(),
             dropped,
@@ -429,6 +444,7 @@ impl JsonFileDb {
         res.and_then(|()| self.file.flush())
             .unwrap_or_else(|e| panic!("tuning db append to {} failed: {e}", self.path.display()));
         self.commit_counter += 1;
+        self.tel_commits.inc();
     }
 
     /// Group commit: append a whole batch of records with a single write
@@ -459,6 +475,7 @@ impl JsonFileDb {
             .and_then(|()| self.file.flush())
             .unwrap_or_else(|e| panic!("tuning db append to {} failed: {e}", self.path.display()));
         self.commit_counter += recs.len() as u64;
+        self.tel_commits.add(recs.len() as u64);
         for r in recs {
             self.mem.commit_record(r);
         }
@@ -524,7 +541,7 @@ impl JsonFileDb {
                     // lines the open recovered over — the CLI refuses
                     // that without `--repair`, and auto-GC must not be
                     // the back door. Stand down for this run.
-                    eprintln!(
+                    crate::log_warn!(
                         "tuning db auto-GC paused: {} corrupt line(s) recovered at open; \
                          run `db compact --repair` first",
                         self.skipped
@@ -554,7 +571,7 @@ impl JsonFileDb {
                             // file untouched — recoverable, but retrying
                             // every commit would spam the same failure,
                             // so GC stands down.
-                            eprintln!("tuning db auto-GC failed (disabled for this run): {e}");
+                            crate::log_warn!("tuning db auto-GC failed (disabled for this run): {e}");
                             self.auto_gc = None;
                         }
                     }

@@ -52,6 +52,7 @@
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 use crate::db::compact::{is_stale, CompactionPolicy, CompactionReport};
 use crate::db::json_file::{probe, read_index, FileSignature, JsonFileDb};
@@ -59,6 +60,7 @@ use crate::db::memory::InMemoryDb;
 use crate::db::record::TuningRecord;
 use crate::db::{Database, WorkloadEntry, WorkloadId};
 use crate::search::parallel::{parallel_map, BoundedQueue};
+use crate::telemetry::{self, Counter};
 use crate::util::json::Json;
 
 /// Shard count used when a new sharded database is created without an
@@ -185,6 +187,10 @@ pub struct ShardedDb {
     global: Vec<(usize, usize)>,
     /// `(shash, target)` -> global id lookup accelerator.
     by_key: HashMap<(u64, String), WorkloadId>,
+    /// Process-wide count of records routed to a shard by structural
+    /// hash (cached [`telemetry::global`] handle — one relaxed increment
+    /// per routed record, no registry lock on the commit path).
+    tel_routed: Arc<Counter>,
 }
 
 /// Refuse to claim a non-empty directory that is clearly not a sharded
@@ -278,6 +284,10 @@ impl ShardedDb {
             entries: Vec::new(),
             global: Vec::new(),
             by_key: HashMap::new(),
+            tel_routed: telemetry::global().counter(
+                "db_shard_routed_total",
+                "records routed to a shard file by structural hash",
+            ),
         };
         // Rebuild the global registry in shard-major discovery order,
         // verifying routing as we go: an intact workload line sitting in
@@ -379,6 +389,7 @@ impl ShardedDb {
                 .unwrap_or_else(|| panic!("record for unregistered workload {}", r.workload));
             r.workload = local;
             per_shard[s].push(r);
+            self.tel_routed.inc();
         }
         for (s, batch) in per_shard.into_iter().enumerate() {
             if !batch.is_empty() {
@@ -477,6 +488,7 @@ impl Database for ShardedDb {
             .get(rec.workload)
             .unwrap_or_else(|| panic!("record for unregistered workload {}", rec.workload));
         rec.workload = local;
+        self.tel_routed.inc();
         self.shards[s].commit_record(rec);
     }
 

@@ -97,7 +97,7 @@ pub fn open_db(cfg: &ExpConfig) -> Box<dyn Database> {
         Some(path) => match crate::db::AnyDb::open(path) {
             Ok(db) => {
                 if db.skipped_lines() > 0 {
-                    eprintln!(
+                    crate::log_warn!(
                         "tuning db {path}: recovered over {} corrupt line(s); `db compact` will drop them",
                         db.skipped_lines()
                     );

@@ -18,8 +18,10 @@
 //! tuners ([`baselines`]), graph-level task extraction and end-to-end model
 //! tuning ([`graph`]), the Appendix A.2 workload suite ([`workloads`]), a
 //! PJRT runtime for real-hardware measurement of AOT-compiled Pallas
-//! kernels ([`runtime`]), and the experiment harness that regenerates every
-//! figure and table of the paper's evaluation ([`exp`]).
+//! kernels ([`runtime`]), the experiment harness that regenerates every
+//! figure and table of the paper's evaluation ([`exp`]), and a zero-dep
+//! observability layer — metrics registry, Chrome-trace spans, Prometheus
+//! `/metrics` — threaded through search, db, and serving ([`telemetry`]).
 //!
 //! See DESIGN.md for the system inventory and EXPERIMENTS.md for results.
 //!
@@ -40,6 +42,7 @@ pub mod search;
 pub mod serve;
 pub mod sim;
 pub mod space;
+pub mod telemetry;
 pub mod tir;
 pub mod trace;
 pub mod transfer;

@@ -5,6 +5,7 @@
 //! metaschedule tune --workload GMM [--target cpu] [--trials 64] [--threads N] [--db t.jsonl]
 //!                  [--rules default] [--mutators default] [--postprocs default] [--explain-space]
 //!                  [--transfer-from cpu [--transfer-db donor.jsonl]] [--no-transfer]
+//!                  [--profile trace.json]          # Chrome-trace spans of the tune (Perfetto)
 //! metaschedule tune-model --model bert-base [--target cpu] [--trials 32] [--db t.jsonl]
 //! metaschedule exp <fig8|fig9|fig10a|fig10b|table1|all> [--target cpu]
 //!                  [--trials N] [--seed S] [--threads N] [--out results.jsonl] [--db t.jsonl]
@@ -18,7 +19,13 @@
 //!                  [--watch [--poll-ms 500]]   # read-only; re-serve when the db file changes
 //! metaschedule serve --listen 127.0.0.1:8080 --db db-dir [--workers 4] [--max-pending 64]
 //!                  [--max-inflight 1]          # zero-dep HTTP/1.1 front; GET /shutdown to stop
+//!                  [--access-log log.jsonl]    # structured access log; GET /metrics = Prometheus
+//! metaschedule profile trace.json                # validate + summarize a --profile output
 //! metaschedule pjrt-verify                       # artifact correctness gate
+//!
+//! Every command accepts `--verbosity error|warn|info|debug` (or the
+//! `RUST_PALLAS_LOG` env var) to gate stderr diagnostics; stdout result
+//! lines are never gated.
 //!
 //! `--threads` caps the OS threads of the search pipeline (0 = all
 //! cores); it never changes tuning results, only wall-clock.
@@ -71,6 +78,17 @@ use metaschedule::workloads;
 
 fn main() {
     let args = Args::parse(std::env::args().skip(1));
+    // --verbosity wins over RUST_PALLAS_LOG; both gate the leveled
+    // stderr diagnostics (product results on stdout are never gated).
+    if let Some(v) = args.flag("verbosity") {
+        match metaschedule::util::log::parse_level(v) {
+            Some(level) => metaschedule::util::log::set_level(level),
+            None => {
+                metaschedule::log_error!("unknown verbosity {v} (error|warn|info|debug)");
+                std::process::exit(2);
+            }
+        }
+    }
     let cmd = args.positional.first().cloned().unwrap_or_default();
     match cmd.as_str() {
         "list" => list(),
@@ -79,10 +97,11 @@ fn main() {
         "exp" => experiment(&args),
         "db" => db_cmd(&args),
         "serve" => serve_cmd(&args),
+        "profile" => profile_cmd(&args),
         "pjrt-verify" => pjrt_verify(&args),
         _ => {
-            eprintln!(
-                "usage: metaschedule <list|tune|tune-model|exp|db|serve|pjrt-verify> [flags]\n\
+            metaschedule::log_error!(
+                "usage: metaschedule <list|tune|tune-model|exp|db|serve|profile|pjrt-verify> [flags]\n\
                  see rust/src/main.rs header for details"
             );
             std::process::exit(2);
@@ -119,7 +138,7 @@ fn ctx_of(args: &Args, target: &metaschedule::sim::Target) -> TuneContext {
     match TuneContext::from_specs(target.clone(), &rules, &mutators, &postprocs) {
         Ok(ctx) => ctx,
         Err(e) => {
-            eprintln!("invalid tuning-context spec: {e}");
+            metaschedule::log_error!("invalid tuning-context spec: {e}");
             std::process::exit(2);
         }
     }
@@ -128,7 +147,7 @@ fn ctx_of(args: &Args, target: &metaschedule::sim::Target) -> TuneContext {
 fn target_of(args: &Args) -> Target {
     let name = args.flag_or("target", "cpu");
     Target::by_name(&name).unwrap_or_else(|| {
-        eprintln!("unknown target {name} (cpu|gpu|tpu)");
+        metaschedule::log_error!("unknown target {name} (cpu|gpu|tpu)");
         std::process::exit(2);
     })
 }
@@ -142,11 +161,11 @@ fn transfer_source_of(args: &Args, dest: &Target) -> Option<String> {
     }
     let src = args.flag("transfer-from")?;
     let Some(source) = Target::by_name(src) else {
-        eprintln!("unknown transfer source target {src} (cpu|gpu|tpu)");
+        metaschedule::log_error!("unknown transfer source target {src} (cpu|gpu|tpu)");
         std::process::exit(2);
     };
     if source.name == dest.name {
-        eprintln!(
+        metaschedule::log_error!(
             "--transfer-from {src}: source resolves to the destination target {} — \
              a target cannot donate priors to itself",
             dest.name
@@ -176,7 +195,7 @@ fn list() {
 fn tune(args: &Args) {
     let name = args.flag_or("workload", "GMM");
     let Some(w) = workloads::by_name(&name) else {
-        eprintln!("unknown workload {name}; see `metaschedule list`");
+        metaschedule::log_error!("unknown workload {name}; see `metaschedule list`");
         std::process::exit(2);
     };
     let target = target_of(args);
@@ -190,13 +209,29 @@ fn tune(args: &Args) {
     // must not create the file or append a registration line.
     let ctx = ctx_of(args, &target);
     println!("space: rules = {}", ctx.rule_set());
+    // --profile out.jsonl: record Chrome-trace spans of this tune
+    // (observation-only; results are byte-identical with or without it).
+    let profile = args.flag("profile").map(|p| {
+        match metaschedule::telemetry::TraceSink::to_file(std::path::Path::new(p)) {
+            Ok(sink) => {
+                ctx.set_trace_sink(std::sync::Arc::clone(&sink));
+                (p.to_string(), sink)
+            }
+            Err(e) => {
+                metaschedule::log_error!("tune: cannot open profile {p}: {e}");
+                std::process::exit(2);
+            }
+        }
+    });
     // Same for the transfer flags: bad source names fail fast.
     let transfer_src = transfer_source_of(args, &target);
     // A donor archive without a source target is a mistake, not a cold
     // start — fail fast instead of silently ignoring the archive
     // (--no-transfer legitimately neutralizes the whole flag group).
     if args.flag("transfer-db").is_some() && transfer_src.is_none() && !args.has_switch("no-transfer") {
-        eprintln!("tune: --transfer-db requires --transfer-from <target> (the archive alone names no source)");
+        metaschedule::log_error!(
+            "tune: --transfer-db requires --transfer-from <target> (the archive alone names no source)"
+        );
         std::process::exit(2);
     }
     let mut db = exp::open_db(&cfg);
@@ -213,18 +248,18 @@ fn tune(args: &Args) {
         match donors {
             Some(dpath) => {
                 if !std::path::Path::new(dpath).exists() {
-                    eprintln!("tune: no donor database at {dpath}");
+                    metaschedule::log_error!("tune: no donor database at {dpath}");
                     std::process::exit(2);
                 }
                 let (mem, skipped) = match metaschedule::db::load_readonly_any(dpath) {
                     Ok(x) => x,
                     Err(e) => {
-                        eprintln!("tune: donor db: {e}");
+                        metaschedule::log_error!("tune: donor db: {e}");
                         std::process::exit(2);
                     }
                 };
                 if skipped > 0 {
-                    eprintln!("tune: donor db {dpath}: recovered over {skipped} corrupt line(s)");
+                    metaschedule::log_warn!("tune: donor db {dpath}: recovered over {skipped} corrupt line(s)");
                 }
                 TransferPool::collect(&mem, shash, target.name, Some(src.as_str()), &ctx, TransferConfig::default())
             }
@@ -297,6 +332,65 @@ fn tune(args: &Args) {
     if args.has_switch("explain-space") {
         print!("{}", ctx.explain());
     }
+    if let Some((path, sink)) = profile {
+        match sink.finish() {
+            Ok(n) => println!(
+                "profile: wrote {n} trace event(s) to {path} (open in Perfetto or chrome://tracing)"
+            ),
+            Err(e) => {
+                metaschedule::log_error!("tune: profile write to {path} failed: {e}");
+                std::process::exit(1);
+            }
+        }
+    }
+}
+
+/// `profile <trace.jsonl>`: validate a `tune --profile` output file and
+/// summarize it (event count, spans by category, slowest span names).
+fn profile_cmd(args: &Args) {
+    let Some(path) = args.positional.get(1) else {
+        metaschedule::log_error!("usage: metaschedule profile <trace.json> (a `tune --profile` output)");
+        std::process::exit(2);
+    };
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) => {
+            metaschedule::log_error!("profile: read {path}: {e}");
+            std::process::exit(1);
+        }
+    };
+    let n = match metaschedule::telemetry::validate_trace(&text) {
+        Ok(n) => n,
+        Err(e) => {
+            metaschedule::log_error!("profile: {path}: invalid trace: {e}");
+            std::process::exit(1);
+        }
+    };
+    println!("profile: {path}: valid Chrome trace, {n} event(s)");
+    // Aggregate complete spans ("X") by name: count + total duration.
+    use metaschedule::util::json::Json;
+    let mut by_name: std::collections::BTreeMap<String, (usize, f64)> =
+        std::collections::BTreeMap::new();
+    let parsed = Json::parse(text.trim()).expect("validate_trace parsed this");
+    if let Some(events) = parsed.as_arr() {
+        for ev in events {
+            if ev.get("ph").and_then(Json::as_str) != Some("X") {
+                continue;
+            }
+            let name = ev.get("name").and_then(Json::as_str).unwrap_or("?").to_string();
+            let dur = ev.get("dur").and_then(Json::as_f64).unwrap_or(0.0);
+            let e = by_name.entry(name).or_insert((0, 0.0));
+            e.0 += 1;
+            e.1 += dur;
+        }
+    }
+    let mut rows: Vec<(String, usize, f64)> =
+        by_name.into_iter().map(|(n, (c, d))| (n, c, d)).collect();
+    rows.sort_by(|a, b| b.2.total_cmp(&a.2));
+    for (name, count, total_us) in rows.iter().take(12) {
+        println!("  {:<24} x{:<5} {:.1} ms total", name, count, total_us / 1e3);
+    }
+    println!("open in https://ui.perfetto.dev or chrome://tracing");
 }
 
 fn tune_model(args: &Args) {
@@ -305,7 +399,7 @@ fn tune_model(args: &Args) {
     let mut cfg = cfg_of(args);
     cfg.transfer_from = None; // scheduler path; see the note below
     let Some(ops) = graph::by_name(&name) else {
-        eprintln!("unknown model {name}; see `metaschedule list`");
+        metaschedule::log_error!("unknown model {name}; see `metaschedule list`");
         std::process::exit(2);
     };
     // Fail fast (exit 2, not a panic) on a bad spec before any tuning.
@@ -314,7 +408,7 @@ fn tune_model(args: &Args) {
         // The task scheduler tunes many extracted tasks; per-task donor
         // pools are a future extension. Say so instead of silently
         // accepting the flag (cfg.transfer_from is cleared above).
-        eprintln!("tune-model: --transfer-from applies to single-workload `tune` only; ignored here");
+        metaschedule::log_warn!("tune-model: --transfer-from applies to single-workload `tune` only; ignored here");
     }
     println!("== tuning {name} on {} ({} trials/task)", target.name, cfg.trials);
     if let Some(path) = &cfg.db_path {
@@ -348,7 +442,7 @@ fn experiment(args: &Args) {
     // empty pool rather than erroring).
     if let Some(src) = args.flag("transfer-from") {
         if Target::by_name(src).is_none() {
-            eprintln!("unknown transfer source target {src} (cpu|gpu|tpu)");
+            metaschedule::log_error!("unknown transfer source target {src} (cpu|gpu|tpu)");
             std::process::exit(2);
         }
     }
@@ -376,7 +470,7 @@ fn experiment(args: &Args) {
             reports.push(exp::table1::run(&Target::cpu_avx512(), &cfg, None));
         }
         other => {
-            eprintln!("unknown experiment {other}");
+            metaschedule::log_error!("unknown experiment {other}");
             std::process::exit(2);
         }
     }
@@ -384,7 +478,7 @@ fn experiment(args: &Args) {
         r.print();
         if let Some(path) = &out {
             if let Err(e) = r.write(path) {
-                eprintln!("failed writing {path}: {e}");
+                metaschedule::log_error!("failed writing {path}: {e}");
             }
         }
     }
@@ -395,7 +489,7 @@ fn experiment(args: &Args) {
 fn db_cmd(args: &Args) {
     let sub = args.positional.get(1).cloned().unwrap_or_else(|| "stats".into());
     let Some(path) = args.flag("db") else {
-        eprintln!("db: --db <path.jsonl> required");
+        metaschedule::log_error!("db: --db <path.jsonl> required");
         std::process::exit(2);
     };
     if sub == "compact" {
@@ -419,7 +513,7 @@ fn db_cmd(args: &Args) {
         match db::compact_any(path, &policy, args.has_switch("repair"), args.flag_usize("threads", 0)) {
             Ok(report) => println!("{}", report.render(path)),
             Err(e) => {
-                eprintln!("db compact: {e}");
+                metaschedule::log_error!("db compact: {e}");
                 std::process::exit(1);
             }
         }
@@ -429,14 +523,14 @@ fn db_cmd(args: &Args) {
         // Single-file -> sharded conversion; the source is read-only
         // (kept as a backup until the operator deletes it).
         let Some(out) = args.flag("out") else {
-            eprintln!("db migrate: --out <dir> required (the sharded directory to create)");
+            metaschedule::log_error!("db migrate: --out <dir> required (the sharded directory to create)");
             std::process::exit(2);
         };
         let shards = args.flag_usize("shards", db::DEFAULT_SHARDS);
         match db::migrate_from_file(path, out, shards) {
             Ok((sdb, skipped)) => {
                 if skipped > 0 {
-                    eprintln!("db migrate: source carried {skipped} corrupt line(s); not copied");
+                    metaschedule::log_warn!("db migrate: source carried {skipped} corrupt line(s); not copied");
                 }
                 println!(
                     "migrated {path} -> {out}: {} workload(s), {} record(s) across {} shard(s)",
@@ -446,7 +540,7 @@ fn db_cmd(args: &Args) {
                 );
             }
             Err(e) => {
-                eprintln!("db migrate: {e}");
+                metaschedule::log_error!("db migrate: {e}");
                 std::process::exit(1);
             }
         }
@@ -459,7 +553,7 @@ fn db_cmd(args: &Args) {
     let db = match AnyDb::open(path) {
         Ok(db) => db,
         Err(e) => {
-            eprintln!("db: {e}");
+            metaschedule::log_error!("db: {e}");
             std::process::exit(1);
         }
     };
@@ -474,7 +568,7 @@ fn db_cmd(args: &Args) {
             let k = args.flag_usize("k", 5);
             let entries: Vec<_> = db.workload_entries().into_iter().filter(|e| e.name == wname).collect();
             if entries.is_empty() {
-                eprintln!("db: no workload named {wname}; see `metaschedule db stats`");
+                metaschedule::log_error!("db: no workload named {wname}; see `metaschedule db stats`");
                 std::process::exit(1);
             }
             for entry in entries {
@@ -515,7 +609,7 @@ fn db_cmd(args: &Args) {
             }
         }
         other => {
-            eprintln!(
+            metaschedule::log_error!(
                 "usage: metaschedule db <stats|top|compact|migrate|transfer-candidates> --db <path> [--workload W] [-k N] (got {other})"
             );
             std::process::exit(2);
@@ -532,31 +626,31 @@ fn db_cmd(args: &Args) {
 fn transfer_candidates_cmd(args: &Args, path: &str) {
     let wname = args.flag_or("workload", "GMM");
     let Some(w) = workloads::by_name(&wname) else {
-        eprintln!("db: unknown workload {wname}; see `metaschedule list`");
+        metaschedule::log_error!("db: unknown workload {wname}; see `metaschedule list`");
         std::process::exit(1);
     };
     let dest = target_of(args);
     let from = args.flag("from").map(|src| match Target::by_name(src) {
         Some(t) => t.name.to_string(),
         None => {
-            eprintln!("db: unknown source target {src} (cpu|gpu|tpu)");
+            metaschedule::log_error!("db: unknown source target {src} (cpu|gpu|tpu)");
             std::process::exit(2);
         }
     });
     let ctx = ctx_of(args, &dest);
     if !std::path::Path::new(path).exists() {
-        eprintln!("db: no database at {path}");
+        metaschedule::log_error!("db: no database at {path}");
         std::process::exit(1);
     }
     let (db, skipped) = match metaschedule::db::load_readonly_any(path) {
         Ok(x) => x,
         Err(e) => {
-            eprintln!("db: {e}");
+            metaschedule::log_error!("db: {e}");
             std::process::exit(1);
         }
     };
     if skipped > 0 {
-        eprintln!("db: recovered over {skipped} corrupt line(s); `db compact --repair` drops them");
+        metaschedule::log_warn!("db: recovered over {skipped} corrupt line(s); `db compact --repair` drops them");
     }
     let prog = (w.build)();
     let shash = structural_hash(&prog);
@@ -640,12 +734,12 @@ fn transfer_candidates_cmd(args: &Args, path: &str) {
 /// recovered over corrupt lines (any shard, for a sharded db).
 fn report_skipped(db: &AnyDb) {
     if db.skipped_lines() > 0 {
-        eprintln!(
+        metaschedule::log_warn!(
             "db: recovered over {} corrupt line(s); `db compact` will drop them",
             db.skipped_lines()
         );
         for note in db.skip_notes() {
-            eprintln!("db:   {note}");
+            metaschedule::log_warn!("db:   {note}");
         }
     }
 }
@@ -653,7 +747,7 @@ fn report_skipped(db: &AnyDb) {
 /// `serve`: answer workload lookups from an indexed snapshot of the db.
 fn serve_cmd(args: &Args) {
     let Some(path) = args.flag("db") else {
-        eprintln!("serve: --db <path> required (a .jsonl file or a sharded directory)");
+        metaschedule::log_error!("serve: --db <path> required (a .jsonl file or a sharded directory)");
         std::process::exit(2);
     };
     let target = target_of(args);
@@ -669,7 +763,7 @@ fn serve_cmd(args: &Args) {
         let db = match AnyDb::open(path) {
             Ok(db) => db,
             Err(e) => {
-                eprintln!("serve: {e}");
+                metaschedule::log_error!("serve: {e}");
                 std::process::exit(1);
             }
         };
@@ -679,12 +773,13 @@ fn serve_cmd(args: &Args) {
             workers: args.flag_usize("workers", 4),
             max_pending: args.flag_usize("max-pending", 64),
             max_inflight_tunes: args.flag_usize("max-inflight", 1),
+            access_log: args.flag("access-log").map(String::from),
             serve: cfg,
         };
         let server = match HttpServer::bind(http, target.clone()) {
             Ok(s) => s,
             Err(e) => {
-                eprintln!("serve: {e}");
+                metaschedule::log_error!("serve: {e}");
                 std::process::exit(1);
             }
         };
@@ -695,7 +790,9 @@ fn serve_cmd(args: &Args) {
             db.num_shards(),
             target.name
         );
-        println!("   routes: GET /lookup?workload=NAME[&target=T] | POST /batch | GET /stats | GET /healthz | GET /shutdown");
+        println!(
+            "   routes: GET /lookup?workload=NAME[&target=T] | POST /batch | GET /stats | GET /metrics | GET /healthz | GET /shutdown"
+        );
         let r = server.run(db);
         println!(
             "served {} request(s): {} hit(s), {} miss(es), {} tuned, {} tune(s) rejected, {} bad request(s)",
@@ -707,18 +804,23 @@ fn serve_cmd(args: &Args) {
     let mut names: Vec<String> = args.positional.iter().skip(1).cloned().collect();
     names.extend(args.flag_csv("workloads"));
     if names.is_empty() {
-        eprintln!("serve: name at least one workload (positional or --workloads GMM,SFM), or --listen <addr>");
+        metaschedule::log_error!(
+            "serve: name at least one workload (positional or --workloads GMM,SFM), or --listen <addr>"
+        );
         std::process::exit(2);
     }
     fn serve_fail(e: String) -> Vec<ServeOutcome> {
-        eprintln!("serve: {e}");
+        metaschedule::log_error!("serve: {e}");
         std::process::exit(2);
     }
     if args.has_switch("watch") {
         // Watch mode is read-only by construction (reload + re-serve on
         // change; tune-on-miss inside a watcher would tune in a loop).
         if args.flag("miss-trials").is_some() && cfg.miss_trials > 0 {
-            eprintln!("serve: --watch is read-only; --miss-trials {} ignored (misses stay misses)", cfg.miss_trials);
+            metaschedule::log_warn!(
+                "serve: --watch is read-only; --miss-trials {} ignored (misses stay misses)",
+                cfg.miss_trials
+            );
         }
         let poll_ms = args.flag_u64("poll-ms", 500);
         println!(
@@ -742,7 +844,7 @@ fn serve_cmd(args: &Args) {
             },
         );
         if let Err(e) = res {
-            eprintln!("serve: {e}");
+            metaschedule::log_error!("serve: {e}");
             std::process::exit(1);
         }
         return;
@@ -753,12 +855,14 @@ fn serve_cmd(args: &Args) {
         let (cache, skipped) = match ServingCache::load(path, cfg.top_k) {
             Ok(x) => x,
             Err(e) => {
-                eprintln!("serve: {e}");
+                metaschedule::log_error!("serve: {e}");
                 std::process::exit(1);
             }
         };
         if skipped > 0 {
-            eprintln!("serve: recovered over {skipped} corrupt line(s); `db compact --repair` drops them");
+            metaschedule::log_warn!(
+                "serve: recovered over {skipped} corrupt line(s); `db compact --repair` drops them"
+            );
         }
         println!(
             "== serving {} workload(s) on {} from {path} ({} records indexed, read-only)",
@@ -771,7 +875,7 @@ fn serve_cmd(args: &Args) {
         let mut db = match AnyDb::open(path) {
             Ok(db) => db,
             Err(e) => {
-                eprintln!("serve: {e}");
+                metaschedule::log_error!("serve: {e}");
                 std::process::exit(1);
             }
         };
@@ -816,13 +920,13 @@ fn pjrt_verify(args: &Args) {
     let dir = args.flag_or("artifacts", "artifacts");
     let variants = metaschedule::runtime::scan_variants(std::path::Path::new(&dir));
     if variants.is_empty() {
-        eprintln!("no artifacts under {dir}; run `make artifacts` first");
+        metaschedule::log_error!("no artifacts under {dir}; run `make artifacts` first");
         std::process::exit(1);
     }
     let mut runner = match metaschedule::runtime::PjrtRunner::new(&dir) {
         Ok(r) => r,
         Err(e) => {
-            eprintln!("cannot start PJRT runtime: {e}");
+            metaschedule::log_error!("cannot start PJRT runtime: {e}");
             std::process::exit(1);
         }
     };

@@ -23,11 +23,14 @@
 //! in-tree models qualify).
 
 use std::collections::HashSet;
+use std::sync::Arc;
+use std::time::Instant;
 
 use crate::cost_model::CostModel;
 use crate::ctx::TuneContext;
 use crate::db::{Database, InMemoryDb, TuningRecord};
 use crate::schedule::Schedule;
+use crate::telemetry::{self, Counter};
 use crate::transfer::TransferPool;
 use crate::search::parallel::{parallel_map, BoundedQueue, SharedMeasurer};
 use crate::search::Measurer;
@@ -115,6 +118,20 @@ fn stream_id(round: u64, chain: u64, kind: u64) -> u64 {
     round * 65536 + chain * 4 + kind
 }
 
+/// One time-to-quality sample: how good the best schedule was after how
+/// many trials and how much wall-clock. The search records one per
+/// successful measurement; `benches/table1_tuning_time.rs` turns the
+/// sequence into the time-to-quality curve of `BENCH_table1.json`, and
+/// `tune --profile` emits the improving subset as trace instant events.
+#[derive(Debug, Clone)]
+pub struct QualityPoint {
+    pub trials: usize,
+    pub best_latency_s: f64,
+    /// Wall-clock milliseconds since the tune call started. Timing only
+    /// — nothing in the search reads it, so determinism is untouched.
+    pub wall_ms: f64,
+}
+
 /// Outcome of tuning one task.
 #[derive(Debug, Clone)]
 pub struct TuneResult {
@@ -125,6 +142,8 @@ pub struct TuneResult {
     pub trials: usize,
     /// (trial index, best-so-far latency) — the tuning curve.
     pub curve: Vec<(usize, f64)>,
+    /// The curve with wall-clock attached (same indices as `curve`).
+    pub quality: Vec<QualityPoint>,
     /// Database records that warm-started this run (0 = cold start).
     pub warm_records: usize,
     /// Cross-target donor candidates re-measured on this run's target
@@ -142,6 +161,37 @@ pub struct TuneResult {
 struct Member {
     sch: Schedule,
     score: f64,
+}
+
+/// Cached handles into the process-global metrics registry for the
+/// search's cumulative families (`search_*`). Fetched once per tune call
+/// — the registry mutex is never touched inside the loops — and recorded
+/// with relaxed atomic adds, so instrumentation cannot perturb the
+/// determinism contract.
+struct SearchTelemetry {
+    rounds: Arc<Counter>,
+    trials: Arc<Counter>,
+    predict_batches: Arc<Counter>,
+    predict_candidates: Arc<Counter>,
+    measure_batches: Arc<Counter>,
+    transfer_seeded: Arc<Counter>,
+}
+
+impl SearchTelemetry {
+    fn from_global() -> SearchTelemetry {
+        let g = telemetry::global();
+        SearchTelemetry {
+            rounds: g.counter("search_rounds_total", "evolutionary search rounds executed"),
+            trials: g.counter("search_trials_total", "measurement trials spent"),
+            predict_batches: g.counter("search_predict_batches_total", "cost-model predict() batch calls"),
+            predict_candidates: g.counter("search_predict_candidates_total", "candidates scored by the cost model"),
+            measure_batches: g.counter("search_measure_batches_total", "measurement batches dispatched"),
+            transfer_seeded: g.counter(
+                "search_transfer_seeded_total",
+                "cross-target donor schedules re-measured as warm-start seeds",
+            ),
+        }
+    }
 }
 
 /// Evolutionary search driver.
@@ -287,12 +337,19 @@ impl EvolutionarySearch {
         let chains = cfg.chains.max(1);
         let threads = cfg.resolved_threads();
         let chain_pop = (cfg.population / chains).max(1);
+        // Observation only, all of it: the wall clock feeds QualityPoint
+        // records and trace spans, the counters feed /metrics. Nothing
+        // below reads any of them back.
+        let t0 = Instant::now();
+        let tel = SearchTelemetry::from_global();
+        let mut tune_span = ctx.span(format!("tune {}", prog.name), "search");
 
         // Database warm start: prior sim-compatible candidates must not
         // be re-measured (they seed the dedup set), the best recorded
         // traces join the elite pool, and the best record becomes the
         // starting best-so-far — so a warm run can only improve on its
         // history.
+        let mut warm_span = ctx.span("warm-start", "search");
         let target_name = measurer.target_name();
         let wid = db.register_workload(&prog.name, structural_hash(prog), &target_name);
         let all_records = db.records_for(wid);
@@ -361,8 +418,12 @@ impl EvolutionarySearch {
         drop(pt_progs);
         drop(compat_success);
         drop(all_records);
+        warm_span.arg("warm_records", warm_records as f64);
+        warm_span.arg("stale_skipped", stale_skipped as f64);
+        drop(warm_span);
 
         let mut curve = Vec::new();
+        let mut quality: Vec<QualityPoint> = Vec::new();
         let mut trials = 0usize;
         let mut round: u64 = 0;
 
@@ -371,6 +432,7 @@ impl EvolutionarySearch {
         // == (seed, threads=N)` holds for transfer runs too.
         let mut transferred_records = 0usize;
         if let Some(pool) = transfer.filter(|p| !p.is_empty()) {
+            let mut transfer_span = ctx.span("transfer", "search");
             // (a) Feature-space model transfer: donor latencies become
             // discounted training samples.
             pool.pretrain(model, prog);
@@ -384,6 +446,7 @@ impl EvolutionarySearch {
             for (sch, cand_hash) in seeds {
                 let lat = measurer.measure(&sch.prog);
                 trials += 1;
+                tel.trials.inc();
                 measured_hashes.insert(cand_hash);
                 db.commit_record(TuningRecord {
                     workload: wid,
@@ -410,11 +473,28 @@ impl EvolutionarySearch {
                     elites.insert(0, sch.trace.clone());
                     elites.truncate(ELITE_POOL);
                 }
-                curve.push((trials, best.as_ref().unwrap().0));
+                let best_now = best.as_ref().unwrap().0;
+                curve.push((trials, best_now));
+                quality.push(QualityPoint {
+                    trials,
+                    best_latency_s: best_now,
+                    wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+                });
+                if better {
+                    if let Some(sink) = ctx.trace_sink() {
+                        sink.instant(
+                            "best-improved",
+                            "search",
+                            &[("trials", trials as f64), ("best_latency_s", best_now)],
+                        );
+                    }
+                }
             }
             // The destination re-measurements are full-weight samples.
             let prog_refs: Vec<&Program> = progs.iter().collect();
             model.update(&prog_refs, &lats);
+            tel.transfer_seeded.add(transferred_records as u64);
+            transfer_span.arg("transferred_records", transferred_records as f64);
         }
 
         // Round 0's fork-and-sample happens up front; every later round's
@@ -423,13 +503,17 @@ impl EvolutionarySearch {
             Self::prefetch_all(prog, ctx, design_traces, chains, chain_pop, seed, 0, threads);
 
         while trials < cfg.num_trials {
+            let mut round_span = ctx.span(format!("round {round}"), "search");
+            tel.rounds.inc();
             // 2+3. Evolve the chains: initialize from elites + prefetched
             // fork-and-samples, then mutate generations with annealed MH
             // acceptance and batched cost-model scoring. Chains execute
             // concurrently and merge in chain order.
+            let evolve_span = ctx.span("evolve", "search");
             let fresh = std::mem::take(&mut prefetched);
             let model_ref: &dyn CostModel = &*model;
             let elite_snapshot: &[Trace] = &elites;
+            let tel_ref = &tel;
             let evolved: Vec<Vec<Member>> = parallel_map(fresh, threads, |c, fresh_c| {
                 self.evolve_chain(
                     prog,
@@ -437,12 +521,14 @@ impl EvolutionarySearch {
                     elite_snapshot,
                     fresh_c,
                     model_ref,
+                    tel_ref,
                     seed,
                     round,
                     c as u64,
                     chains,
                 )
             });
+            drop(evolve_span);
             let mut population: Vec<Member> = evolved.into_iter().flatten().collect();
             if population.is_empty() {
                 break;
@@ -486,6 +572,8 @@ impl EvolutionarySearch {
             // Prefetch only if another round can actually run (otherwise
             // the samples would be thrown away on loop exit).
             let another_round = !picked.is_empty() && trials + picked.len() < cfg.num_trials;
+            let measure_span = ctx.span("measure+prefetch", "search");
+            tel.measure_batches.inc();
             let (lats_by_slot, next_fresh) = Self::measure_and_prefetch(
                 jobs,
                 measurer,
@@ -499,18 +587,21 @@ impl EvolutionarySearch {
                 threads,
                 another_round,
             );
+            drop(measure_span);
             prefetched = next_fresh;
 
             // 6. Fold results in submission order (serial-identical),
             //    update database / model / elites. Every outcome is
             //    committed — validator rejections persist with empty
             //    latencies so future runs skip them too.
+            let commit_span = ctx.span("commit+update", "search");
             let mut progs = Vec::new();
             let mut lats = Vec::new();
             for (slot, lat) in lats_by_slot.into_iter().enumerate() {
                 let (idx, cand_hash) = picked[slot];
                 let member = &population[idx];
                 trials += 1;
+                tel.trials.inc();
                 db.commit_record(TuningRecord {
                     workload: wid,
                     trace: member.sch.trace.clone(),
@@ -535,10 +626,28 @@ impl EvolutionarySearch {
                     elites.insert(0, member.sch.trace.clone());
                     elites.truncate(ELITE_POOL);
                 }
-                curve.push((trials, best.as_ref().unwrap().0));
+                let best_now = best.as_ref().unwrap().0;
+                curve.push((trials, best_now));
+                quality.push(QualityPoint {
+                    trials,
+                    best_latency_s: best_now,
+                    wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+                });
+                if better {
+                    if let Some(sink) = ctx.trace_sink() {
+                        sink.instant(
+                            "best-improved",
+                            "search",
+                            &[("trials", trials as f64), ("best_latency_s", best_now)],
+                        );
+                    }
+                }
             }
             let prog_refs: Vec<&Program> = progs.iter().collect();
             model.update(&prog_refs, &lats);
+            drop(commit_span);
+            round_span.arg("trials_after", trials as f64);
+            drop(round_span);
             if picked.is_empty() {
                 break; // nothing new to measure; space exhausted
             }
@@ -546,6 +655,9 @@ impl EvolutionarySearch {
         }
 
         let (best_latency_s, best_sch) = best.expect("no valid schedule found");
+        tune_span.arg("trials", trials as f64);
+        tune_span.arg("best_latency_s", best_latency_s);
+        drop(tune_span);
         TuneResult {
             task: prog.name.clone(),
             best_latency_s,
@@ -553,6 +665,7 @@ impl EvolutionarySearch {
             best_prog: best_sch.prog,
             trials,
             curve,
+            quality,
             warm_records,
             transferred_records,
             stale_skipped,
@@ -571,12 +684,14 @@ impl EvolutionarySearch {
         elites: &[Trace],
         fresh: Vec<Schedule>,
         model: &dyn CostModel,
+        tel: &SearchTelemetry,
         seed: u64,
         round: u64,
         chain: u64,
         chains: usize,
     ) -> Vec<Member> {
         let cfg = &self.cfg;
+        let _chain_span = ctx.span(format!("chain {chain}"), "search");
         let chain_pop = (cfg.population / chains.max(1)).max(1);
         let mut rng = Rng::for_stream(seed, stream_id(round, chain, STREAM_EVOLVE));
 
@@ -610,6 +725,8 @@ impl EvolutionarySearch {
             return population;
         }
         Self::score(&mut population, model);
+        tel.predict_batches.inc();
+        tel.predict_candidates.add(population.len() as u64);
 
         // Evolve with annealed MH acceptance. Each generation proposes
         // mutations for the whole chain, scores them as ONE batch through
@@ -628,6 +745,8 @@ impl EvolutionarySearch {
             }
             let cand_progs: Vec<&Program> = proposals.iter().map(|(_, c)| &c.prog).collect();
             let new_scores = model.predict(&cand_progs);
+            tel.predict_batches.inc();
+            tel.predict_candidates.add(cand_progs.len() as u64);
             for ((i, cand), new_score) in proposals.into_iter().zip(new_scores) {
                 let m = &mut population[i];
                 let accept = new_score >= m.score
@@ -804,11 +923,13 @@ impl ReplaySearch {
         measurer: &mut dyn Measurer,
         seed: u64,
     ) -> TuneResult {
+        let t0 = Instant::now();
         let mut rng = Rng::seed_from_u64(seed);
         let designs = ctx.generate(prog, seed);
         let traces: Vec<Trace> = designs.iter().map(|d| d.trace.clone()).collect();
         let mut best: Option<(f64, Schedule)> = None;
         let mut curve = Vec::new();
+        let mut quality = Vec::new();
         let mut trials = 0;
         let mut attempts = 0;
         while trials < self.num_trials && attempts < self.num_trials * 8 {
@@ -824,7 +945,13 @@ impl ReplaySearch {
             if best.as_ref().map(|(b, _)| lat < *b).unwrap_or(true) {
                 best = Some((lat, sch));
             }
-            curve.push((trials, best.as_ref().unwrap().0));
+            let best_now = best.as_ref().unwrap().0;
+            curve.push((trials, best_now));
+            quality.push(QualityPoint {
+                trials,
+                best_latency_s: best_now,
+                wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+            });
         }
         let (best_latency_s, best_sch) = best.expect("no valid schedule found");
         TuneResult {
@@ -834,6 +961,7 @@ impl ReplaySearch {
             best_prog: best_sch.prog,
             trials,
             curve,
+            quality,
             warm_records: 0,
             transferred_records: 0,
             stale_skipped: 0,

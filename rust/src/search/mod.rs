@@ -15,7 +15,7 @@ pub mod task_scheduler;
 
 // Re-exported for benches/property tests that mutate traces standalone.
 pub use crate::ctx::mutate;
-pub use evolutionary::{EvolutionarySearch, ReplaySearch, SearchConfig, TuneResult};
+pub use evolutionary::{EvolutionarySearch, QualityPoint, ReplaySearch, SearchConfig, TuneResult};
 pub use parallel::{BoundedQueue, MeasureRecord, SharedMeasurer};
 pub use task_scheduler::{Allocation, Task, TaskScheduler};
 

@@ -171,9 +171,10 @@ pub fn serve_batch(
                 if !msg.contains("no valid schedule") {
                     std::panic::resume_unwind(payload);
                 }
-                eprintln!(
+                crate::log_warn!(
                     "serve: tune-on-miss found no valid schedule for {} in {} trials",
-                    w.name, cfg.miss_trials
+                    w.name,
+                    cfg.miss_trials
                 );
                 out.push(ServeOutcome {
                     workload: w.name.to_string(),

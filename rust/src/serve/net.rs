@@ -47,14 +47,15 @@
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::Mutex;
-use std::time::Duration;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use crate::db::AnyDb;
 use crate::search::parallel::BoundedQueue;
 use crate::serve::cache::{ServingCache, ShardedSnapshots};
 use crate::serve::front::{serve_batch, ServeConfig};
 use crate::sim::Target;
+use crate::telemetry::{self, Counter, Gauge, Histogram};
 use crate::tir::structural_hash;
 use crate::util::json::Json;
 use crate::workloads;
@@ -74,6 +75,10 @@ pub struct HttpConfig {
     /// Tune-on-miss admission budget: misses beyond this many concurrent
     /// tunes are answered `429` instead of queueing behind a search.
     pub max_inflight_tunes: usize,
+    /// Opt-in structured access log: one JSON line per request
+    /// (`method`, `path`, `status`, `hit`, `micros`) appended to this
+    /// file. `None` (the default) logs nothing.
+    pub access_log: Option<String>,
     /// The serving knobs shared with the CLI front (trial budget, seed,
     /// snapshot top-k).
     pub serve: ServeConfig,
@@ -86,6 +91,7 @@ impl Default for HttpConfig {
             workers: 4,
             max_pending: 64,
             max_inflight_tunes: 1,
+            access_log: None,
             serve: ServeConfig::default(),
         }
     }
@@ -135,6 +141,40 @@ impl Stats {
     }
 }
 
+/// Cached [`telemetry::global`] handles mirroring [`Stats`] for the
+/// `/metrics` endpoint. Cumulative across every server run in the
+/// process (the registry is process-global), unlike `Stats`, which is
+/// this run's report — so tests assert deltas, not absolute values.
+struct ServeTelemetry {
+    requests: Arc<Counter>,
+    hits: Arc<Counter>,
+    misses: Arc<Counter>,
+    tuned: Arc<Counter>,
+    throttled: Arc<Counter>,
+    bad_requests: Arc<Counter>,
+    request_micros: Arc<Histogram>,
+    inflight: Arc<Gauge>,
+}
+
+impl ServeTelemetry {
+    fn from_global() -> ServeTelemetry {
+        let m = telemetry::global();
+        ServeTelemetry {
+            requests: m.counter("serve_requests_total", "HTTP requests that parsed and were routed"),
+            hits: m.counter("serve_hits_total", "lookups answered from a serving snapshot"),
+            misses: m.counter("serve_misses_total", "lookups that missed every snapshot record"),
+            tuned: m.counter("serve_tuned_total", "misses that ran the tune-on-miss fallback"),
+            throttled: m
+                .counter("serve_throttled_total", "misses bounced by admission control (HTTP 429)"),
+            bad_requests: m
+                .counter("serve_bad_requests_total", "connections answered with a 4xx error line"),
+            request_micros: m
+                .histogram("serve_request_micros", "request handling latency in microseconds"),
+            inflight: m.gauge("serve_inflight_tunes", "tune-on-miss searches currently running"),
+        }
+    }
+}
+
 /// A parsed request: method + path + decoded query pairs + body.
 #[derive(Debug, Clone, PartialEq, Eq)]
 struct Request {
@@ -155,17 +195,31 @@ struct Response {
     status: u16,
     content_type: &'static str,
     body: String,
+    /// Snapshot hit/miss verdict for the access log (`None` on routes
+    /// where hit/miss has no meaning — health, stats, batch).
+    hit: Option<bool>,
 }
 
 impl Response {
     /// A one-JSON-line response; the trailing newline is the line
     /// delimiter scripted clients read to.
     fn json(status: u16, j: Json) -> Response {
-        Response { status, content_type: "application/json", body: format!("{}\n", j.to_string()) }
+        Response {
+            status,
+            content_type: "application/json",
+            body: format!("{}\n", j.to_string()),
+            hit: None,
+        }
     }
 
     fn error(status: u16, msg: &str) -> Response {
         Response::json(status, Json::obj(vec![("error", Json::str(msg))]))
+    }
+
+    /// Stamp the hit/miss verdict for the access log.
+    fn with_hit(mut self, hit: bool) -> Response {
+        self.hit = Some(hit);
+        self
     }
 }
 
@@ -310,6 +364,9 @@ struct ServerCtx<'a> {
     shutdown: &'a AtomicBool,
     inflight: &'a AtomicUsize,
     stats: &'a Stats,
+    tel: &'a ServeTelemetry,
+    /// Open access-log file, when `--access-log` asked for one.
+    access_log: Option<&'a Mutex<std::fs::File>>,
 }
 
 /// The zero-dep HTTP server. [`Self::bind`], then [`Self::run`] with the
@@ -349,6 +406,15 @@ impl HttpServer {
         let shutdown = AtomicBool::new(false);
         let inflight = AtomicUsize::new(0);
         let stats = Stats::default();
+        let tel = ServeTelemetry::from_global();
+        let access_log = self.cfg.access_log.as_ref().map(|path| {
+            let f = std::fs::OpenOptions::new()
+                .create(true)
+                .append(true)
+                .open(path)
+                .unwrap_or_else(|e| panic!("open access log {path}: {e}"));
+            Mutex::new(f)
+        });
         let queue: BoundedQueue<TcpStream> = BoundedQueue::new(self.cfg.max_pending.max(1));
         let ctx = ServerCtx {
             cfg: &self.cfg,
@@ -358,6 +424,8 @@ impl HttpServer {
             shutdown: &shutdown,
             inflight: &inflight,
             stats: &stats,
+            tel: &tel,
+            access_log: access_log.as_ref(),
         };
         std::thread::scope(|s| {
             for _ in 0..self.cfg.workers.max(1) {
@@ -399,21 +467,41 @@ impl HttpServer {
 /// becomes an error line on this connection; nothing here can take the
 /// server down.
 fn handle_conn(mut stream: TcpStream, ctx: &ServerCtx) {
+    let t0 = Instant::now();
     let parsed = {
         let mut reader = BufReader::new(&mut stream);
         read_request(&mut reader)
     };
+    let (method, path) = match &parsed {
+        Ok(req) => (req.method.clone(), req.path.clone()),
+        Err(_) => ("-".to_string(), "-".to_string()),
+    };
     let response = match parsed {
         Ok(req) => {
             ctx.stats.requests.fetch_add(1, Ordering::SeqCst);
+            ctx.tel.requests.inc();
             route(ctx, &req)
         }
         Err(e) => Response::error(400, &e),
     };
     if response.status >= 400 && response.status != 429 {
         ctx.stats.bad_requests.fetch_add(1, Ordering::SeqCst);
+        ctx.tel.bad_requests.inc();
     }
     let _ = write_response(&mut stream, &response);
+    let micros = t0.elapsed().as_micros() as u64;
+    ctx.tel.request_micros.observe(micros);
+    if let Some(log) = ctx.access_log {
+        let line = Json::obj(vec![
+            ("method", Json::str(&method)),
+            ("path", Json::str(&path)),
+            ("status", Json::num(response.status as f64)),
+            ("hit", response.hit.map_or(Json::Null, Json::Bool)),
+            ("micros", Json::num(micros as f64)),
+        ]);
+        let mut f = log.lock().unwrap();
+        let _ = writeln!(f, "{}", line.to_string());
+    }
 }
 
 fn route(ctx: &ServerCtx, req: &Request) -> Response {
@@ -436,6 +524,12 @@ fn route(ctx: &ServerCtx, req: &Request) -> Response {
                 ]),
             )
         }
+        ("GET", "/metrics") => Response {
+            status: 200,
+            content_type: "text/plain; version=0.0.4",
+            body: telemetry::global().render(),
+            hit: None,
+        },
         ("GET", "/shutdown") => {
             ctx.shutdown.store(true, Ordering::SeqCst);
             Response::json(
@@ -484,9 +578,11 @@ fn lookup(ctx: &ServerCtx, req: &Request) -> Response {
     let shash = structural_hash(&prog);
     if let Some(hit) = snapshot_hit(&ctx.snapshots.get(shash), name, shash, &target) {
         ctx.stats.hits.fetch_add(1, Ordering::SeqCst);
-        return hit;
+        ctx.tel.hits.inc();
+        return hit.with_hit(true);
     }
     ctx.stats.misses.fetch_add(1, Ordering::SeqCst);
+    ctx.tel.misses.inc();
     if ctx.cfg.serve.miss_trials == 0 {
         return Response::json(
             200,
@@ -496,15 +592,19 @@ fn lookup(ctx: &ServerCtx, req: &Request) -> Response {
                 ("hit", Json::Bool(false)),
                 ("tune", Json::str("disabled")),
             ]),
-        );
+        )
+        .with_hit(false);
     }
     // Admission control: reserve an inflight slot or bounce. The
     // fetch_add/check/fetch_sub dance is race-free because every path
     // out of this function releases exactly the slot it took.
     let slot = ctx.inflight.fetch_add(1, Ordering::SeqCst);
+    ctx.tel.inflight.add(1);
     if slot >= ctx.cfg.max_inflight_tunes {
         ctx.inflight.fetch_sub(1, Ordering::SeqCst);
+        ctx.tel.inflight.add(-1);
         ctx.stats.tune_rejected.fetch_add(1, Ordering::SeqCst);
+        ctx.tel.throttled.inc();
         return Response::json(
             429,
             Json::obj(vec![
@@ -513,7 +613,8 @@ fn lookup(ctx: &ServerCtx, req: &Request) -> Response {
                 ("hit", Json::Bool(false)),
                 ("error", Json::str("tune-on-miss budget exhausted, retry later")),
             ]),
-        );
+        )
+        .with_hit(false);
     }
     let tuned = {
         let mut db = ctx.db.lock().unwrap();
@@ -527,10 +628,12 @@ fn lookup(ctx: &ServerCtx, req: &Request) -> Response {
         result
     };
     ctx.inflight.fetch_sub(1, Ordering::SeqCst);
+    ctx.tel.inflight.add(-1);
     match tuned {
         Err(e) => Response::error(400, &e),
         Ok(outcomes) => {
             ctx.stats.tuned.fetch_add(1, Ordering::SeqCst);
+            ctx.tel.tuned.inc();
             let o = outcomes.into_iter().next();
             Response::json(
                 200,
@@ -546,6 +649,7 @@ fn lookup(ctx: &ServerCtx, req: &Request) -> Response {
                     ("trials", Json::num(o.map_or(0, |o| o.trials) as f64)),
                 ]),
             )
+            .with_hit(false)
         }
     }
 }
@@ -568,6 +672,7 @@ fn batch(ctx: &ServerCtx, req: &Request) -> Response {
                 match cache.lookup(shash, ctx.target.name).and_then(|r| r.best_latency()) {
                     Some(lat) => {
                         ctx.stats.hits.fetch_add(1, Ordering::SeqCst);
+                        ctx.tel.hits.inc();
                         Json::obj(vec![
                             ("workload", Json::str(name)),
                             ("hit", Json::Bool(true)),
@@ -576,6 +681,7 @@ fn batch(ctx: &ServerCtx, req: &Request) -> Response {
                     }
                     None => {
                         ctx.stats.misses.fetch_add(1, Ordering::SeqCst);
+                        ctx.tel.misses.inc();
                         Json::obj(vec![("workload", Json::str(name)), ("hit", Json::Bool(false))])
                     }
                 }
@@ -585,7 +691,7 @@ fn batch(ctx: &ServerCtx, req: &Request) -> Response {
     }
     let mut body = lines.join("\n");
     body.push('\n');
-    Response { status: 200, content_type: "application/x-ndjson", body }
+    Response { status: 200, content_type: "application/x-ndjson", body, hit: None }
 }
 
 /// Blocking one-shot HTTP client for tests and the traffic bench: send

@@ -2,13 +2,18 @@
 //! `tune --explain-space`).
 //!
 //! A [`RuleDiag`] accumulates across every `generate` call made through
-//! one [`crate::space::SpaceGenerator`] — atomics, because the task
-//! scheduler shares one generator across worker threads. The counters are
+//! one [`crate::space::SpaceGenerator`]. The counts are backed by
+//! [`crate::telemetry::Counter`]s registered in the generator's own
+//! [`crate::telemetry::Metrics`] registry (per-generator, *not* the
+//! process-global one: `--explain-space` tests assert exact counts, and
+//! contexts running concurrently — parallel `cargo test`, the task
+//! scheduler — must not bleed into each other). The counters are
 //! diagnostics only: they never feed back into the search, so recording
 //! them cannot perturb the determinism contract.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
+
+use crate::telemetry::{sanitize_name, Counter, Metrics};
 
 /// Distinct error messages retained per rule (the count is always exact).
 const MAX_ERROR_NOTES: usize = 4;
@@ -19,19 +24,33 @@ const MAX_ERROR_NOTES: usize = 4;
 #[derive(Debug)]
 pub struct RuleDiag {
     name: String,
-    applied: AtomicUsize,
-    skipped: AtomicUsize,
-    failed: AtomicUsize,
+    applied: Arc<Counter>,
+    skipped: Arc<Counter>,
+    failed: Arc<Counter>,
     errors: Mutex<Vec<String>>,
 }
 
 impl RuleDiag {
-    pub(crate) fn new(name: &str) -> RuleDiag {
+    /// Register this rule's counters in `metrics` as
+    /// `space_rule_<name>_{applied,skipped,failed}_total` (name
+    /// sanitized; collisions — the same rule twice in one space — get a
+    /// `_2` suffix rather than sharing counts).
+    pub(crate) fn new(name: &str, metrics: &Metrics) -> RuleDiag {
+        let frag = sanitize_name(name);
         RuleDiag {
             name: name.to_string(),
-            applied: AtomicUsize::new(0),
-            skipped: AtomicUsize::new(0),
-            failed: AtomicUsize::new(0),
+            applied: metrics.counter_unique(
+                &format!("space_rule_{frag}_applied_total"),
+                "rule applications that transformed the schedule",
+            ),
+            skipped: metrics.counter_unique(
+                &format!("space_rule_{frag}_skipped_total"),
+                "rule applications whose applicability analysis said no",
+            ),
+            failed: metrics.counter_unique(
+                &format!("space_rule_{frag}_failed_total"),
+                "rule applications that errored structurally",
+            ),
             errors: Mutex::new(Vec::new()),
         }
     }
@@ -41,15 +60,15 @@ impl RuleDiag {
     }
 
     pub fn applied(&self) -> usize {
-        self.applied.load(Ordering::Relaxed)
+        self.applied.get() as usize
     }
 
     pub fn skipped(&self) -> usize {
-        self.skipped.load(Ordering::Relaxed)
+        self.skipped.get() as usize
     }
 
     pub fn failed(&self) -> usize {
-        self.failed.load(Ordering::Relaxed)
+        self.failed.get() as usize
     }
 
     /// The first few *distinct* error messages seen (capped; the
@@ -59,15 +78,15 @@ impl RuleDiag {
     }
 
     pub(crate) fn count_applied(&self) {
-        self.applied.fetch_add(1, Ordering::Relaxed);
+        self.applied.inc();
     }
 
     pub(crate) fn count_skipped(&self) {
-        self.skipped.fetch_add(1, Ordering::Relaxed);
+        self.skipped.inc();
     }
 
     pub(crate) fn count_failed(&self, msg: String) {
-        self.failed.fetch_add(1, Ordering::Relaxed);
+        self.failed.inc();
         let mut errs = self.errors.lock().unwrap();
         if errs.len() < MAX_ERROR_NOTES && !errs.contains(&msg) {
             errs.push(msg);
@@ -81,7 +100,8 @@ mod tests {
 
     #[test]
     fn counters_accumulate_and_errors_dedup() {
-        let d = RuleDiag::new("r");
+        let m = Metrics::new();
+        let d = RuleDiag::new("r", &m);
         d.count_applied();
         d.count_skipped();
         d.count_skipped();
@@ -94,5 +114,20 @@ mod tests {
         assert_eq!(d.skipped(), 2);
         assert_eq!(d.failed(), 11, "count stays exact past the note cap");
         assert_eq!(d.errors(), vec!["same error".to_string(), "other error".to_string()]);
+        // The counts are visible through the registry under sanitized names.
+        assert_eq!(m.counter_value("space_rule_r_applied_total"), Some(1));
+        assert_eq!(m.counter_value("space_rule_r_failed_total"), Some(11));
+    }
+
+    #[test]
+    fn duplicate_rule_names_do_not_share_counters() {
+        let m = Metrics::new();
+        let a = RuleDiag::new("auto-inline", &m);
+        let b = RuleDiag::new("auto-inline", &m);
+        a.count_applied();
+        a.count_applied();
+        b.count_applied();
+        assert_eq!(a.applied(), 2);
+        assert_eq!(b.applied(), 1, "second instance must keep its own counts");
     }
 }

@@ -38,8 +38,11 @@ pub use random_compute_location::RandomComputeLocation;
 pub use thread_bind::ThreadBind;
 pub use use_tensor_core::UseTensorCore;
 
+use std::sync::Arc;
+
 use crate::schedule::{SchResult, Schedule, ScheduleError};
 use crate::sim::Target;
+use crate::telemetry::{self, Counter, Metrics};
 use crate::tir::Program;
 
 /// What one rule application did to one (schedule, block) pair.
@@ -117,14 +120,50 @@ pub fn attempt(sch: &Schedule, f: impl FnOnce(&mut Schedule) -> SchResult<()>) -
 pub struct SpaceGenerator {
     rules: Vec<Box<dyn ScheduleRule>>,
     pub target: Target,
-    /// Per-rule applicability/error counters, parallel to `rules`.
+    /// Per-rule applicability/error counters, parallel to `rules`,
+    /// registered in `metrics`.
     diag: Vec<RuleDiag>,
+    /// Per-generator metrics registry: the rule diag counters plus the
+    /// generation totals below. [`crate::ctx::TuneContext`] adopts this
+    /// registry, so context-level instruments (postprocs, mutators) land
+    /// here too. Per-generator rather than process-global because
+    /// `--explain-space` reports *this* context's exact counts.
+    metrics: Arc<Metrics>,
+    gen_calls: Arc<Counter>,
+    gen_states: Arc<Counter>,
+    /// The same two totals mirrored into the process-global registry, so
+    /// a serving front's `/metrics` shows space-generation work done by
+    /// tune-on-miss without reaching into per-context state.
+    global_gen_calls: Arc<Counter>,
+    global_gen_states: Arc<Counter>,
 }
 
 impl SpaceGenerator {
     pub fn new(rules: Vec<Box<dyn ScheduleRule>>, target: Target) -> SpaceGenerator {
-        let diag = rules.iter().map(|r| RuleDiag::new(r.name())).collect();
-        SpaceGenerator { rules, target, diag }
+        let metrics = Arc::new(Metrics::new());
+        let diag = rules.iter().map(|r| RuleDiag::new(r.name(), &metrics)).collect();
+        const CALLS: (&str, &str) = ("space_generations_total", "design-space generate() calls");
+        const STATES: (&str, &str) = ("space_states_total", "schedules produced by generate()");
+        let gen_calls = metrics.counter(CALLS.0, CALLS.1);
+        let gen_states = metrics.counter(STATES.0, STATES.1);
+        let global = telemetry::global();
+        let global_gen_calls = global.counter(CALLS.0, CALLS.1);
+        let global_gen_states = global.counter(STATES.0, STATES.1);
+        SpaceGenerator {
+            rules,
+            target,
+            diag,
+            metrics,
+            gen_calls,
+            gen_states,
+            global_gen_calls,
+            global_gen_states,
+        }
+    }
+
+    /// The registry holding this generator's diagnostics counters.
+    pub fn metrics(&self) -> &Arc<Metrics> {
+        &self.metrics
     }
 
     /// The composed rules, in application order.
@@ -206,6 +245,10 @@ impl SpaceGenerator {
                 states = next;
             }
         }
+        self.gen_calls.inc();
+        self.global_gen_calls.inc();
+        self.gen_states.add(states.len() as u64);
+        self.global_gen_states.add(states.len() as u64);
         states
     }
 }

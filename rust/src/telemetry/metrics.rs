@@ -1,0 +1,510 @@
+//! Zero-dep metrics: atomic [`Counter`]/[`Gauge`]/[`Histogram`]
+//! instruments plus the [`Metrics`] registry that names them and renders
+//! Prometheus text exposition (format 0.0.4).
+//!
+//! The record path is lock-free: callers register once (a short mutex
+//! hold on the registry's name map), cache the returned `Arc` handle,
+//! and every `inc`/`observe` after that is a relaxed atomic op — cheap
+//! enough to live inside the serving read path and the innermost search
+//! loop. Telemetry is observation-only by construction: instruments hold
+//! no RNG, take no locks on record, and nothing in the system ever reads
+//! a metric to make a decision, so the determinism contract
+//! (`(seed, 1 thread) == (seed, N threads)`, byte-identical db output)
+//! holds with telemetry on or off.
+//!
+//! Two registries exist in practice:
+//!
+//! - the process-global one ([`global`]) — cumulative families scraped
+//!   by `GET /metrics` on the serving front (serve, db, search);
+//! - per-[`crate::ctx::TuneContext`] instances backing the
+//!   `--explain-space` diagnostics, where tests assert *exact* counts
+//!   and cross-context bleed would break them.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Monotonically increasing event count.
+#[derive(Debug, Default)]
+pub struct Counter {
+    v: AtomicU64,
+}
+
+impl Counter {
+    pub fn new() -> Counter {
+        Counter { v: AtomicU64::new(0) }
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.v.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        if n > 0 {
+            self.v.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// A value that can go up and down (e.g. inflight tune-on-miss requests).
+#[derive(Debug, Default)]
+pub struct Gauge {
+    v: AtomicI64,
+}
+
+impl Gauge {
+    pub fn new() -> Gauge {
+        Gauge { v: AtomicI64::new(0) }
+    }
+
+    #[inline]
+    pub fn set(&self, v: i64) {
+        self.v.store(v, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add(&self, delta: i64) {
+        self.v.fetch_add(delta, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// Bucket count of every [`Histogram`]: fixed log-scale bounds
+/// `1, 2, 4, ..., 2^26`, plus a final overflow (`+Inf`) bucket. With
+/// microsecond samples that spans 1µs to ~67s, which covers everything
+/// from a snapshot probe to a full tune-on-miss.
+pub const HISTOGRAM_BUCKETS: usize = 28;
+
+/// Fixed log₂-bucket histogram over non-negative integer samples (the
+/// unit — typically microseconds — is the metric's documented contract,
+/// not the type's). The record path is one relaxed increment plus one
+/// relaxed add: no locks, no floats, no allocation.
+#[derive(Debug)]
+pub struct Histogram {
+    /// `buckets[i]` counts samples with `value <= 2^i` that no smaller
+    /// bucket claimed; the last bucket is the overflow (`+Inf`).
+    buckets: [AtomicU64; HISTOGRAM_BUCKETS],
+    sum: AtomicU64,
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            sum: AtomicU64::new(0),
+        }
+    }
+
+    /// Upper bound of bucket `i`; `None` for the final `+Inf` bucket.
+    pub fn bound(i: usize) -> Option<u64> {
+        (i + 1 < HISTOGRAM_BUCKETS).then(|| 1u64 << i)
+    }
+
+    /// Index of the bucket that owns `v`: the smallest `i` with
+    /// `v <= 2^i`, clamped into the overflow bucket. Branch-light — the
+    /// innermost search loop and the serving read path call this.
+    #[inline]
+    pub fn bucket_index(v: u64) -> usize {
+        if v <= 1 {
+            0
+        } else {
+            (64 - (v - 1).leading_zeros() as usize).min(HISTOGRAM_BUCKETS - 1)
+        }
+    }
+
+    #[inline]
+    pub fn observe(&self, v: u64) {
+        self.buckets[Self::bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Total samples recorded.
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Sum of all recorded samples.
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    /// Per-bucket counts (not cumulative), in bound order.
+    pub fn bucket_counts(&self) -> Vec<u64> {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Upper-bound estimate of the `q`-quantile (0.0..=1.0): the bound of
+    /// the first bucket whose cumulative count reaches `q * count`,
+    /// `u64::MAX` when that bucket is the overflow one, 0 when empty.
+    /// Within a factor of 2 of the true quantile by construction — the
+    /// resolution the log-scale buckets buy.
+    pub fn quantile(&self, q: f64) -> u64 {
+        let counts = self.bucket_counts();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).max(1);
+        let mut cum = 0u64;
+        for (i, c) in counts.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                return Self::bound(i).unwrap_or(u64::MAX);
+            }
+        }
+        u64::MAX
+    }
+}
+
+/// One registered instrument.
+enum Instrument {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Histogram(Arc<Histogram>),
+}
+
+struct Entry {
+    help: String,
+    instrument: Instrument,
+}
+
+/// A named registry of instruments. Registration (get-or-create by name)
+/// takes a short mutex; the returned `Arc` handles record lock-free.
+/// Names must already be valid Prometheus metric names — see
+/// [`sanitize_name`] for turning rule/postproc labels into one.
+pub struct Metrics {
+    entries: Mutex<BTreeMap<String, Entry>>,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics { entries: Mutex::new(BTreeMap::new()) }
+    }
+
+    /// Get-or-register a counter. Panics if `name` is already registered
+    /// as a different instrument kind — that is a programming error, not
+    /// a runtime condition.
+    pub fn counter(&self, name: &str, help: &str) -> Arc<Counter> {
+        debug_assert!(valid_name(name), "invalid metric name {name:?}");
+        let mut entries = self.entries.lock().unwrap();
+        let e = entries.entry(name.to_string()).or_insert_with(|| Entry {
+            help: help.to_string(),
+            instrument: Instrument::Counter(Arc::new(Counter::new())),
+        });
+        match &e.instrument {
+            Instrument::Counter(c) => Arc::clone(c),
+            _ => panic!("metric {name} already registered as a non-counter"),
+        }
+    }
+
+    /// Get-or-register a counter under a name that is guaranteed unique
+    /// in this registry: on collision, `_2`, `_3`, ... is appended.
+    /// Returns the fresh counter (never a shared one) — per-instance
+    /// diagnostics (two rules with the same name in one space) must not
+    /// silently share counts.
+    pub fn counter_unique(&self, name: &str, help: &str) -> Arc<Counter> {
+        let mut entries = self.entries.lock().unwrap();
+        let mut unique = name.to_string();
+        let mut i = 2;
+        while entries.contains_key(&unique) {
+            unique = format!("{name}_{i}");
+            i += 1;
+        }
+        debug_assert!(valid_name(&unique), "invalid metric name {unique:?}");
+        let c = Arc::new(Counter::new());
+        entries.insert(unique, Entry {
+            help: help.to_string(),
+            instrument: Instrument::Counter(Arc::clone(&c)),
+        });
+        c
+    }
+
+    /// Get-or-register a gauge (kind-mismatch panics, as for counters).
+    pub fn gauge(&self, name: &str, help: &str) -> Arc<Gauge> {
+        debug_assert!(valid_name(name), "invalid metric name {name:?}");
+        let mut entries = self.entries.lock().unwrap();
+        let e = entries.entry(name.to_string()).or_insert_with(|| Entry {
+            help: help.to_string(),
+            instrument: Instrument::Gauge(Arc::new(Gauge::new())),
+        });
+        match &e.instrument {
+            Instrument::Gauge(g) => Arc::clone(g),
+            _ => panic!("metric {name} already registered as a non-gauge"),
+        }
+    }
+
+    /// Get-or-register a histogram (kind-mismatch panics, as for counters).
+    pub fn histogram(&self, name: &str, help: &str) -> Arc<Histogram> {
+        debug_assert!(valid_name(name), "invalid metric name {name:?}");
+        let mut entries = self.entries.lock().unwrap();
+        let e = entries.entry(name.to_string()).or_insert_with(|| Entry {
+            help: help.to_string(),
+            instrument: Instrument::Histogram(Arc::new(Histogram::new())),
+        });
+        match &e.instrument {
+            Instrument::Histogram(h) => Arc::clone(h),
+            _ => panic!("metric {name} already registered as a non-histogram"),
+        }
+    }
+
+    /// Current value of a registered counter, for tests and summaries.
+    pub fn counter_value(&self, name: &str) -> Option<u64> {
+        let entries = self.entries.lock().unwrap();
+        match entries.get(name).map(|e| &e.instrument) {
+            Some(Instrument::Counter(c)) => Some(c.get()),
+            _ => None,
+        }
+    }
+
+    /// Registered metric names, sorted.
+    pub fn names(&self) -> Vec<String> {
+        self.entries.lock().unwrap().keys().cloned().collect()
+    }
+
+    /// Render the whole registry in Prometheus text exposition format
+    /// 0.0.4: `# HELP` / `# TYPE` per family, cumulative `_bucket{le=..}`
+    /// series plus `_sum`/`_count` for histograms. Families render in
+    /// name order (BTreeMap), so output is stable for a fixed state.
+    pub fn render(&self) -> String {
+        let entries = self.entries.lock().unwrap();
+        let mut out = String::new();
+        for (name, e) in entries.iter() {
+            if !e.help.is_empty() {
+                out.push_str(&format!("# HELP {name} {}\n", e.help.replace('\n', " ")));
+            }
+            match &e.instrument {
+                Instrument::Counter(c) => {
+                    out.push_str(&format!("# TYPE {name} counter\n{name} {}\n", c.get()));
+                }
+                Instrument::Gauge(g) => {
+                    out.push_str(&format!("# TYPE {name} gauge\n{name} {}\n", g.get()));
+                }
+                Instrument::Histogram(h) => {
+                    out.push_str(&format!("# TYPE {name} histogram\n"));
+                    let counts = h.bucket_counts();
+                    let mut cum = 0u64;
+                    for (i, c) in counts.iter().enumerate() {
+                        cum += c;
+                        match Histogram::bound(i) {
+                            Some(b) => {
+                                out.push_str(&format!("{name}_bucket{{le=\"{b}\"}} {cum}\n"));
+                            }
+                            None => {
+                                out.push_str(&format!("{name}_bucket{{le=\"+Inf\"}} {cum}\n"));
+                            }
+                        }
+                    }
+                    out.push_str(&format!("{name}_sum {}\n", h.sum()));
+                    out.push_str(&format!("{name}_count {}\n", cum));
+                }
+            }
+        }
+        out
+    }
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Metrics::new()
+    }
+}
+
+/// The process-global registry: cumulative serve/db/search families, the
+/// body of `GET /metrics`. Per-context diagnostics live in their own
+/// [`Metrics`] instances instead (exact counts per tuning context).
+pub fn global() -> &'static Arc<Metrics> {
+    static GLOBAL: OnceLock<Arc<Metrics>> = OnceLock::new();
+    GLOBAL.get_or_init(|| Arc::new(Metrics::new()))
+}
+
+/// Whether `name` is a valid Prometheus metric name
+/// (`[a-zA-Z_:][a-zA-Z0-9_:]*`).
+pub fn valid_name(name: &str) -> bool {
+    let mut chars = name.chars();
+    match chars.next() {
+        Some(c) if c.is_ascii_alphabetic() || c == '_' || c == ':' => {}
+        _ => return false,
+    }
+    chars.all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+}
+
+/// Turn an arbitrary label (rule name like `auto-inline`) into a valid
+/// metric-name fragment: ASCII alphanumerics pass, everything else maps
+/// to `_`, and a leading digit gains a `_` prefix.
+pub fn sanitize_name(label: &str) -> String {
+    let mut out = String::with_capacity(label.len() + 1);
+    for c in label.chars() {
+        if c.is_ascii_alphanumeric() {
+            out.push(c);
+        } else {
+            out.push('_');
+        }
+    }
+    if out.chars().next().map(|c| c.is_ascii_digit()).unwrap_or(true) {
+        out.insert(0, '_');
+    }
+    out
+}
+
+/// Parse Prometheus text exposition into `sample name (with label block
+/// verbatim) -> value`, validating the grammar line by line: comment
+/// lines must be `# HELP <name> ...` or `# TYPE <name> <type>`, sample
+/// lines must be `<name>[{labels}] <value>`. This is what the `/metrics`
+/// tests and the CI smoke job check responses against.
+pub fn parse_exposition(text: &str) -> Result<BTreeMap<String, f64>, String> {
+    let mut out = BTreeMap::new();
+    for (no, line) in text.lines().enumerate() {
+        let line = line.trim_end();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('#') {
+            let rest = rest.trim_start();
+            let (kw, tail) = rest.split_once(' ').ok_or(format!("line {}: bare comment {line:?}", no + 1))?;
+            if kw != "HELP" && kw != "TYPE" {
+                return Err(format!("line {}: unknown comment keyword {kw:?}", no + 1));
+            }
+            let name = tail.split_whitespace().next().unwrap_or("");
+            if !valid_name(name) {
+                return Err(format!("line {}: invalid metric name {name:?}", no + 1));
+            }
+            if kw == "TYPE" {
+                let ty = tail.split_whitespace().nth(1).unwrap_or("");
+                if !matches!(ty, "counter" | "gauge" | "histogram" | "summary" | "untyped") {
+                    return Err(format!("line {}: invalid metric type {ty:?}", no + 1));
+                }
+            }
+            continue;
+        }
+        // Sample line: name, optional {label} block, then the value.
+        let (series, value) = match line.find('{') {
+            Some(b) => {
+                let close = line[b..]
+                    .find('}')
+                    .map(|i| b + i)
+                    .ok_or(format!("line {}: unterminated label block", no + 1))?;
+                (&line[..=close], line[close + 1..].trim())
+            }
+            None => {
+                let sp = line
+                    .find(char::is_whitespace)
+                    .ok_or(format!("line {}: sample without value {line:?}", no + 1))?;
+                (&line[..sp], line[sp..].trim())
+            }
+        };
+        let bare = series.split('{').next().unwrap_or("");
+        if !valid_name(bare) {
+            return Err(format!("line {}: invalid sample name {bare:?}", no + 1));
+        }
+        let v: f64 = value
+            .parse()
+            .map_err(|_| format!("line {}: unparseable value {value:?}", no + 1))?;
+        out.insert(series.to_string(), v);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_basics() {
+        let m = Metrics::new();
+        let c = m.counter("requests_total", "requests");
+        c.inc();
+        c.add(4);
+        c.add(0);
+        assert_eq!(c.get(), 5);
+        // Re-registration hands back the same instrument.
+        assert_eq!(m.counter("requests_total", "requests").get(), 5);
+        assert_eq!(m.counter_value("requests_total"), Some(5));
+        let g = m.gauge("inflight", "inflight");
+        g.add(3);
+        g.add(-1);
+        assert_eq!(g.get(), 2);
+        g.set(-7);
+        assert_eq!(g.get(), -7);
+    }
+
+    #[test]
+    fn counter_unique_never_shares() {
+        let m = Metrics::new();
+        let a = m.counter_unique("rule_x_applied_total", "");
+        let b = m.counter_unique("rule_x_applied_total", "");
+        a.inc();
+        assert_eq!(a.get(), 1);
+        assert_eq!(b.get(), 0, "colliding registration must not share a counter");
+        assert!(m.names().contains(&"rule_x_applied_total_2".to_string()));
+    }
+
+    #[test]
+    fn histogram_buckets_own_their_ranges() {
+        assert_eq!(Histogram::bucket_index(0), 0);
+        assert_eq!(Histogram::bucket_index(1), 0);
+        assert_eq!(Histogram::bucket_index(2), 1);
+        assert_eq!(Histogram::bucket_index(3), 2);
+        assert_eq!(Histogram::bucket_index(4), 2);
+        assert_eq!(Histogram::bucket_index(5), 3);
+        assert_eq!(Histogram::bucket_index(u64::MAX), HISTOGRAM_BUCKETS - 1);
+        let h = Histogram::new();
+        h.observe(3);
+        h.observe(100);
+        h.observe(u64::MAX / 2);
+        assert_eq!(h.count(), 3);
+        assert_eq!(h.sum(), 3 + 100 + u64::MAX / 2);
+        assert_eq!(h.quantile(0.0), 4, "smallest sample's bucket bound");
+        assert_eq!(h.quantile(1.0), u64::MAX, "overflow bucket quantile");
+    }
+
+    #[test]
+    fn render_is_valid_exposition_and_parses_back() {
+        let m = Metrics::new();
+        m.counter("serve_hits_total", "lookup hits").add(7);
+        m.gauge("serve_inflight_tunes", "inflight").set(1);
+        let h = m.histogram("serve_request_micros", "request latency");
+        h.observe(5);
+        h.observe(900);
+        let text = m.render();
+        assert!(text.contains("# TYPE serve_hits_total counter"));
+        assert!(text.contains("serve_hits_total 7"));
+        assert!(text.contains("# TYPE serve_request_micros histogram"));
+        assert!(text.contains("serve_request_micros_bucket{le=\"+Inf\"} 2"));
+        let parsed = parse_exposition(&text).expect("rendered exposition must parse");
+        assert_eq!(parsed.get("serve_hits_total"), Some(&7.0));
+        assert_eq!(parsed.get("serve_request_micros_count"), Some(&2.0));
+        assert_eq!(parsed.get("serve_request_micros_sum"), Some(&905.0));
+        // Cumulative buckets are monotone and end at the count.
+        let inf = parsed.get("serve_request_micros_bucket{le=\"+Inf\"}").copied();
+        assert_eq!(inf, Some(2.0));
+    }
+
+    #[test]
+    fn parse_rejects_malformed_exposition() {
+        assert!(parse_exposition("# BOGUS x y\n").is_err());
+        assert!(parse_exposition("# TYPE x flavor\n").is_err());
+        assert!(parse_exposition("9bad_name 1\n").is_err());
+        assert!(parse_exposition("name_without_value\n").is_err());
+        assert!(parse_exposition("name not-a-number\n").is_err());
+        assert!(parse_exposition("name{le=\"1\" 3\n").is_err(), "unterminated label block");
+        assert!(parse_exposition("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn sanitize_produces_valid_fragments() {
+        assert_eq!(sanitize_name("auto-inline"), "auto_inline");
+        assert_eq!(sanitize_name("use-tensor-core/mxu"), "use_tensor_core_mxu");
+        assert_eq!(sanitize_name("2fast"), "_2fast");
+        assert!(valid_name(&sanitize_name("")));
+        assert!(valid_name(&format!("space_rule_{}_applied_total", sanitize_name("verify-integrity"))));
+    }
+}

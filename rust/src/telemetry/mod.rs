@@ -1,0 +1,27 @@
+//! Observability for the tuning system: metrics + trace spans, on std
+//! only.
+//!
+//! Two halves, both observation-only (recording never takes a decision
+//! path, so determinism and byte-identical db output hold with telemetry
+//! on or off):
+//!
+//! - [`metrics`] — named atomic [`Counter`]/[`Gauge`]/[`Histogram`]
+//!   instruments in a [`Metrics`] registry that renders Prometheus text
+//!   exposition. The process-global registry ([`global`]) backs
+//!   `GET /metrics` on the serving front; per-context registries back
+//!   `--explain-space` diagnostics.
+//! - [`trace_event`] — [`Span`]/[`TraceSink`] emitting Chrome
+//!   trace-event JSON through a bounded-queue writer thread, surfaced as
+//!   `tune --profile out.json` (open in Perfetto).
+//!
+//! Metric families and the trace-event schema are documented in
+//! `docs/OBSERVABILITY.md`.
+
+pub mod metrics;
+pub mod trace_event;
+
+pub use metrics::{
+    global, parse_exposition, sanitize_name, valid_name, Counter, Gauge, Histogram, Metrics,
+    HISTOGRAM_BUCKETS,
+};
+pub use trace_event::{maybe_span, validate_trace, Span, TraceSink};

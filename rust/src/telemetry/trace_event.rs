@@ -1,0 +1,373 @@
+//! Structured trace spans in Chrome trace-event format.
+//!
+//! A [`TraceSink`] owns a background writer thread fed through a
+//! [`BoundedQueue`] (the same backpressure channel the measurement
+//! pipeline uses): instrumented threads serialize one JSON event and push
+//! it; the writer drains the queue into a `[...]`-array JSONL file that
+//! Perfetto (<https://ui.perfetto.dev>) and `chrome://tracing` open
+//! directly. `tune --profile out.json` wires a sink into the tuning
+//! context so a whole run — warm-start, transfer seeding, every round's
+//! evolve/measure/commit — shows up on a timeline.
+//!
+//! Observation-only, like the metrics registry: spans read the clock and
+//! push strings, and nothing in the search ever reads them back, so
+//! profiles do not perturb results. Timestamps are microseconds since the
+//! sink was created (Chrome trace `ts` is relative anyway), and thread
+//! lanes use small per-process ordinals handed out on first use rather
+//! than unstable OS thread ids.
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::search::parallel::BoundedQueue;
+use crate::util::json::Json;
+
+/// Queue depth between instrumented threads and the writer. Deep enough
+/// that the writer's I/O never stalls a search round; bounded so a stuck
+/// disk applies backpressure instead of growing without limit.
+const TRACE_QUEUE_CAPACITY: usize = 4096;
+
+/// Small per-process thread ordinal for the trace `tid` field (OS thread
+/// ids have no stable integer form on std). First thread to emit gets
+/// lane 1, and so on; lanes are stable for a thread's lifetime.
+fn trace_tid() -> u64 {
+    static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+    thread_local! {
+        static TID: u64 = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+    }
+    TID.with(|t| *t)
+}
+
+/// A sink for trace events backed by a file and a writer thread.
+/// Cheap to share (`Arc`); emitting is one JSON serialization plus a
+/// queue push. Call [`Self::finish`] to close the array and flush —
+/// a finished file is strict JSON, an abandoned one is still loadable
+/// by Perfetto (it tolerates a missing `]`).
+pub struct TraceSink {
+    queue: Arc<BoundedQueue<String>>,
+    epoch: Instant,
+    events: AtomicU64,
+    dropped: AtomicU64,
+    writer: Mutex<Option<JoinHandle<std::io::Result<u64>>>>,
+}
+
+impl TraceSink {
+    /// Create a sink writing to `path` (truncates). The writer thread
+    /// starts immediately.
+    pub fn to_file(path: &Path) -> std::io::Result<Arc<TraceSink>> {
+        let file = File::create(path)?;
+        let queue = Arc::new(BoundedQueue::new(TRACE_QUEUE_CAPACITY));
+        let writer_queue = Arc::clone(&queue);
+        let handle = std::thread::spawn(move || write_loop(file, &writer_queue));
+        Ok(Arc::new(TraceSink {
+            queue,
+            epoch: Instant::now(),
+            events: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+            writer: Mutex::new(Some(handle)),
+        }))
+    }
+
+    /// Microseconds since the sink was created (the trace timebase).
+    pub fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    /// Begin a duration span; the span emits one complete (`ph:"X"`)
+    /// event when dropped.
+    pub fn span(self: &Arc<Self>, name: impl Into<String>, cat: &'static str) -> Span {
+        Span {
+            sink: Some(Arc::clone(self)),
+            name: name.into(),
+            cat,
+            args: Vec::new(),
+            start_us: self.now_us(),
+        }
+    }
+
+    /// Emit an instant (`ph:"i"`) event with optional numeric arguments —
+    /// e.g. the search's time-to-quality points
+    /// (`trials`, `best_latency_s`, `wall_ms`).
+    pub fn instant(&self, name: &str, cat: &str, args: &[(&str, f64)]) {
+        let mut fields = vec![
+            ("name", Json::str(name)),
+            ("cat", Json::str(cat)),
+            ("ph", Json::str("i")),
+            ("s", Json::str("t")),
+            ("ts", Json::num(self.now_us() as f64)),
+            ("pid", Json::num(1.0)),
+            ("tid", Json::num(trace_tid() as f64)),
+        ];
+        if !args.is_empty() {
+            fields.push((
+                "args",
+                Json::obj(args.iter().map(|(k, v)| (*k, Json::num(*v))).collect()),
+            ));
+        }
+        self.emit(Json::obj(fields).to_string());
+    }
+
+    /// Emit a complete (`ph:"X"`) event covering `[start_us, start_us + dur_us]`.
+    pub fn complete(&self, name: &str, cat: &str, start_us: u64, dur_us: u64, args: &[(String, f64)]) {
+        let mut fields = vec![
+            ("name", Json::str(name)),
+            ("cat", Json::str(cat)),
+            ("ph", Json::str("X")),
+            ("ts", Json::num(start_us as f64)),
+            ("dur", Json::num(dur_us as f64)),
+            ("pid", Json::num(1.0)),
+            ("tid", Json::num(trace_tid() as f64)),
+        ];
+        if !args.is_empty() {
+            fields.push((
+                "args",
+                Json::obj(args.iter().map(|(k, v)| (k.as_str(), Json::num(*v))).collect()),
+            ));
+        }
+        self.emit(Json::obj(fields).to_string());
+    }
+
+    fn emit(&self, line: String) {
+        if self.queue.push(line) {
+            self.events.fetch_add(1, Ordering::Relaxed);
+        } else {
+            // Queue closed (finish() already ran): count, don't block.
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Events accepted so far.
+    pub fn events(&self) -> u64 {
+        self.events.load(Ordering::Relaxed)
+    }
+
+    /// Events dropped because they arrived after [`Self::finish`].
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Close the event stream, wait for the writer to flush, and return
+    /// how many events were written. Idempotent: later calls return
+    /// `Ok(0)` without touching the file.
+    pub fn finish(&self) -> std::io::Result<u64> {
+        self.queue.close();
+        let handle = self.writer.lock().unwrap().take();
+        match handle {
+            Some(h) => h.join().unwrap_or_else(|_| {
+                Err(std::io::Error::other("trace writer thread panicked"))
+            }),
+            None => Ok(0),
+        }
+    }
+}
+
+impl Drop for TraceSink {
+    fn drop(&mut self) {
+        // Best-effort flush if the caller never called finish().
+        self.queue.close();
+        if let Some(h) = self.writer.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// The writer thread: open a JSON array, stream events separated by
+/// `,\n` (separator *before* each subsequent event, so an interrupted
+/// file has no trailing comma), close the array on drain.
+fn write_loop(file: File, queue: &BoundedQueue<String>) -> std::io::Result<u64> {
+    let mut w = BufWriter::new(file);
+    w.write_all(b"[\n")?;
+    let mut written = 0u64;
+    while let Some(line) = queue.pop() {
+        if written > 0 {
+            w.write_all(b",\n")?;
+        }
+        w.write_all(line.as_bytes())?;
+        written += 1;
+    }
+    w.write_all(b"\n]\n")?;
+    w.flush()?;
+    Ok(written)
+}
+
+/// An in-flight duration span. Dropping it emits the complete event; a
+/// disabled span (no sink — profiling off) is two `Option` checks and
+/// otherwise free. Attach numeric arguments with [`Self::arg`].
+pub struct Span {
+    sink: Option<Arc<TraceSink>>,
+    name: String,
+    cat: &'static str,
+    args: Vec<(String, f64)>,
+    start_us: u64,
+}
+
+impl Span {
+    /// A disabled span: records nothing, emits nothing.
+    pub fn disabled() -> Span {
+        Span {
+            sink: None,
+            name: String::new(),
+            cat: "",
+            args: Vec::new(),
+            start_us: 0,
+        }
+    }
+
+    /// Whether this span will emit an event.
+    pub fn is_enabled(&self) -> bool {
+        self.sink.is_some()
+    }
+
+    /// Attach a numeric argument shown in the Perfetto detail pane.
+    /// No-op on a disabled span.
+    pub fn arg(&mut self, key: &str, value: f64) {
+        if self.sink.is_some() {
+            self.args.push((key.to_string(), value));
+        }
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if let Some(sink) = self.sink.take() {
+            let end = sink.now_us();
+            let dur = end.saturating_sub(self.start_us);
+            sink.complete(&self.name, self.cat, self.start_us, dur, &self.args);
+        }
+    }
+}
+
+/// Span on an optional sink: the uniform call site for code that may or
+/// may not be running under `--profile`.
+pub fn maybe_span(sink: Option<&Arc<TraceSink>>, name: impl Into<String>, cat: &'static str) -> Span {
+    match sink {
+        Some(s) => s.span(name, cat),
+        None => Span::disabled(),
+    }
+}
+
+/// Validate a trace file's contents: must parse as a JSON array of event
+/// objects each carrying the required Chrome trace-event keys. Returns
+/// the event count. Used by the `profile` subcommand and the CI smoke.
+pub fn validate_trace(text: &str) -> Result<usize, String> {
+    let v = Json::parse(text).map_err(|e| format!("not valid JSON: {e}"))?;
+    let events = v.as_arr().ok_or("top-level value is not an array")?;
+    for (i, ev) in events.iter().enumerate() {
+        let ph = ev
+            .get("ph")
+            .and_then(|p| p.as_str())
+            .ok_or(format!("event {i}: missing \"ph\""))?;
+        if ev.get("name").and_then(|n| n.as_str()).is_none() {
+            return Err(format!("event {i}: missing \"name\""));
+        }
+        if ev.get("ts").and_then(|t| t.as_f64()).is_none() {
+            return Err(format!("event {i}: missing numeric \"ts\""));
+        }
+        if ph == "X" && ev.get("dur").and_then(|d| d.as_f64()).is_none() {
+            return Err(format!("event {i}: complete event missing \"dur\""));
+        }
+        for key in ["pid", "tid"] {
+            if ev.get(key).and_then(|x| x.as_f64()).is_none() {
+                return Err(format!("event {i}: missing numeric {key:?}"));
+            }
+        }
+    }
+    Ok(events.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_path(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("metaschedule-trace-{}-{name}.json", std::process::id()));
+        p
+    }
+
+    #[test]
+    fn sink_writes_a_valid_trace_array() {
+        let path = tmp_path("basic");
+        let sink = TraceSink::to_file(&path).unwrap();
+        {
+            let mut sp = sink.span("round 0", "search");
+            sp.arg("trials", 64.0);
+        }
+        sink.instant("best-improved", "search", &[("trials", 64.0), ("best_latency_s", 0.5)]);
+        let _empty = sink.span("evolve", "search");
+        drop(_empty);
+        let written = sink.finish().unwrap();
+        assert_eq!(written, 3);
+        assert_eq!(sink.events(), 3);
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(validate_trace(&text).unwrap(), 3);
+        // Spot-check the schema Perfetto relies on.
+        let v = Json::parse(&text).unwrap();
+        let events = v.as_arr().unwrap();
+        assert_eq!(events[0].get("ph").and_then(|p| p.as_str()), Some("X"));
+        assert_eq!(events[1].get("ph").and_then(|p| p.as_str()), Some("i"));
+        assert!(events[0].get("dur").and_then(|d| d.as_f64()).is_some());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn finish_is_idempotent_and_late_events_drop() {
+        let path = tmp_path("idempotent");
+        let sink = TraceSink::to_file(&path).unwrap();
+        sink.instant("one", "t", &[]);
+        assert_eq!(sink.finish().unwrap(), 1);
+        sink.instant("late", "t", &[]);
+        assert_eq!(sink.dropped(), 1);
+        assert_eq!(sink.finish().unwrap(), 0);
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(validate_trace(&text).unwrap(), 1);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn disabled_spans_are_free_and_silent() {
+        let mut sp = Span::disabled();
+        assert!(!sp.is_enabled());
+        sp.arg("ignored", 1.0);
+        drop(sp);
+        let sp2 = maybe_span(None, "x", "y");
+        assert!(!sp2.is_enabled());
+    }
+
+    #[test]
+    fn concurrent_emitters_interleave_safely() {
+        let path = tmp_path("concurrent");
+        let sink = TraceSink::to_file(&path).unwrap();
+        std::thread::scope(|s| {
+            for t in 0..4 {
+                let sink = Arc::clone(&sink);
+                s.spawn(move || {
+                    for i in 0..50 {
+                        sink.instant(&format!("t{t}-{i}"), "stress", &[("i", i as f64)]);
+                    }
+                });
+            }
+        });
+        assert_eq!(sink.finish().unwrap(), 200);
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(validate_trace(&text).unwrap(), 200);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn validate_rejects_malformed_traces() {
+        assert!(validate_trace("not json").is_err());
+        assert!(validate_trace("{}").is_err(), "object is not an event array");
+        assert!(validate_trace("[{\"name\":\"x\"}]").is_err(), "missing ph/ts");
+        assert!(
+            validate_trace("[{\"name\":\"x\",\"ph\":\"X\",\"ts\":0,\"pid\":1,\"tid\":1}]").is_err(),
+            "complete event needs dur"
+        );
+        assert_eq!(validate_trace("[]").unwrap(), 0);
+    }
+}

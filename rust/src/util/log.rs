@@ -1,0 +1,165 @@
+//! Leveled stderr logging for library code.
+//!
+//! The CLI's *results* go to stdout (CI smoke jobs grep them); library
+//! *diagnostics* go through these macros to stderr, gated by a global
+//! level. The level comes from, in priority order: an explicit
+//! [`set_level`] call (the CLI's `--verbosity` flag), else the
+//! `RUST_PALLAS_LOG` environment variable (`error|warn|info|debug`),
+//! else [`Level::Warn`] — so pre-existing warnings keep appearing and
+//! everything chattier is opt-in.
+//!
+//! The enabled-check is one relaxed atomic load; a suppressed
+//! `log_debug!` never formats its arguments.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Log severity, most severe first.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+}
+
+impl Level {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+        }
+    }
+}
+
+/// Parse a level name (case-insensitive; also accepts `0..=3`).
+pub fn parse_level(s: &str) -> Option<Level> {
+    match s.trim().to_ascii_lowercase().as_str() {
+        "error" | "0" => Some(Level::Error),
+        "warn" | "warning" | "1" => Some(Level::Warn),
+        "info" | "2" => Some(Level::Info),
+        "debug" | "3" => Some(Level::Debug),
+        _ => None,
+    }
+}
+
+/// Sentinel meaning "not initialized yet — consult the environment".
+const UNSET: u8 = u8::MAX;
+
+static LEVEL: AtomicU8 = AtomicU8::new(UNSET);
+
+/// Set the global level explicitly (the `--verbosity` flag). Wins over
+/// the environment.
+pub fn set_level(level: Level) {
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+/// Current global level, initializing from `RUST_PALLAS_LOG` on first
+/// use.
+pub fn level() -> Level {
+    let raw = LEVEL.load(Ordering::Relaxed);
+    if raw != UNSET {
+        return match raw {
+            0 => Level::Error,
+            1 => Level::Warn,
+            2 => Level::Info,
+            _ => Level::Debug,
+        };
+    }
+    let from_env = std::env::var("RUST_PALLAS_LOG")
+        .ok()
+        .as_deref()
+        .and_then(parse_level)
+        .unwrap_or(Level::Warn);
+    // Racing first-uses agree (same env), so a plain store is fine.
+    LEVEL.store(from_env as u8, Ordering::Relaxed);
+    from_env
+}
+
+/// Whether a message at `at` would currently be emitted.
+#[inline]
+pub fn enabled(at: Level) -> bool {
+    at <= level()
+}
+
+/// Emit a message at `at` to stderr with a level prefix. Prefer the
+/// `log_*!` macros, which skip argument formatting when suppressed.
+pub fn log(at: Level, args: std::fmt::Arguments<'_>) {
+    if enabled(at) {
+        eprintln!("{}: {args}", at.as_str());
+    }
+}
+
+/// Log at error level (always on unless the impossible happens).
+#[macro_export]
+macro_rules! log_error {
+    ($($arg:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Error, format_args!($($arg)*))
+    };
+}
+
+/// Log at warn level (the default threshold).
+#[macro_export]
+macro_rules! log_warn {
+    ($($arg:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Warn, format_args!($($arg)*))
+    };
+}
+
+/// Log at info level (`--verbosity info` / `RUST_PALLAS_LOG=info`).
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)*) => {
+        if $crate::util::log::enabled($crate::util::log::Level::Info) {
+            $crate::util::log::log($crate::util::log::Level::Info, format_args!($($arg)*))
+        }
+    };
+}
+
+/// Log at debug level (`--verbosity debug` / `RUST_PALLAS_LOG=debug`).
+#[macro_export]
+macro_rules! log_debug {
+    ($($arg:tt)*) => {
+        if $crate::util::log::enabled($crate::util::log::Level::Debug) {
+            $crate::util::log::log($crate::util::log::Level::Debug, format_args!($($arg)*))
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_accepts_names_and_digits() {
+        assert_eq!(parse_level("warn"), Some(Level::Warn));
+        assert_eq!(parse_level("WARNING"), Some(Level::Warn));
+        assert_eq!(parse_level(" debug "), Some(Level::Debug));
+        assert_eq!(parse_level("0"), Some(Level::Error));
+        assert_eq!(parse_level("3"), Some(Level::Debug));
+        assert_eq!(parse_level("verbose"), None);
+    }
+
+    #[test]
+    fn levels_order_most_severe_first() {
+        assert!(Level::Error < Level::Warn);
+        assert!(Level::Warn < Level::Info);
+        assert!(Level::Info < Level::Debug);
+    }
+
+    #[test]
+    fn set_level_gates_enabled() {
+        // Tests share the global; set explicitly rather than relying on
+        // the env default, and leave the default (Warn) behind.
+        set_level(Level::Info);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Info));
+        assert!(!enabled(Level::Debug));
+        set_level(Level::Error);
+        assert!(!enabled(Level::Warn));
+        set_level(Level::Warn);
+        assert!(enabled(Level::Warn));
+    }
+}

@@ -5,5 +5,6 @@ pub mod bench;
 pub mod cli;
 pub mod error;
 pub mod json;
+pub mod log;
 pub mod prop;
 pub mod rng;

@@ -219,6 +219,68 @@ fn task_scheduler_with_shared_db_identical_across_thread_counts() {
 }
 
 #[test]
+fn telemetry_never_changes_results_or_database_bytes() {
+    // Telemetry is observation-only: attaching a trace sink (and the
+    // always-on metrics counters it rides with) must leave the search
+    // outcome and the committed on-disk database byte-identical, at any
+    // thread count.
+    use metaschedule::db::JsonFileDb;
+    use metaschedule::telemetry::{validate_trace, TraceSink};
+
+    let dir = std::env::temp_dir().join(format!("ms-telemetry-determinism-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+
+    let target = Target::cpu_avx512();
+    let prog = workloads::matmul(1, 128, 128, 128);
+    let run = |tag: &str, threads: usize, trace: bool| {
+        let ctx = TuneContext::generic(target.clone());
+        let trace_path = dir.join(format!("{tag}.trace.json"));
+        let sink = if trace {
+            let s = TraceSink::to_file(&trace_path).expect("open trace sink");
+            ctx.set_trace_sink(std::sync::Arc::clone(&s));
+            Some(s)
+        } else {
+            None
+        };
+        let db_path = dir.join(format!("{tag}.db.jsonl"));
+        let mut db = JsonFileDb::open(&db_path).unwrap();
+        let mut model = GbtCostModel::new();
+        let mut measurer = SimMeasurer::new(target.clone());
+        let res = EvolutionarySearch::new(cfg(32, threads)).tune_db(
+            &prog,
+            &ctx,
+            &mut model,
+            &mut measurer,
+            &mut db,
+            23,
+        );
+        if let Some(s) = sink {
+            let events = s.finish().expect("flush trace");
+            assert!(events > 0, "instrumented run emitted trace events");
+            let text = std::fs::read_to_string(&trace_path).unwrap();
+            validate_trace(&text).expect("trace is a valid Chrome trace");
+        }
+        drop(db);
+        (res, std::fs::read(&db_path).unwrap())
+    };
+
+    let (base, base_bytes) = run("t1-off", 1, false);
+    for (tag, threads, trace) in [("t4-off", 4, false), ("t1-on", 1, true), ("t4-on", 4, true)] {
+        let (r, bytes) = run(tag, threads, trace);
+        assert_eq!(base.best_latency_s, r.best_latency_s, "{tag} diverged");
+        assert_eq!(base.curve, r.curve, "{tag} curve diverged");
+        assert_eq!(
+            trace_to_text(&base.best_trace),
+            trace_to_text(&r.best_trace),
+            "{tag} best trace diverged"
+        );
+        assert_eq!(base_bytes, bytes, "{tag} produced different database bytes");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
 fn repeated_runs_are_reproducible() {
     // Same seed, same thread count, run twice: byte-identical output (no
     // hidden global state, no time dependence).

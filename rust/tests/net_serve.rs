@@ -67,6 +67,7 @@ fn read_only_cfg() -> HttpConfig {
         max_pending: 16,
         max_inflight_tunes: 1,
         serve: ServeConfig { miss_trials: 0, ..ServeConfig::default() },
+        access_log: None,
     }
 }
 
@@ -163,6 +164,7 @@ fn admission_control_bounces_tune_on_miss_with_429() {
         max_pending: 8,
         max_inflight_tunes: 0,
         serve: ServeConfig { miss_trials: 4, ..ServeConfig::default() },
+        access_log: None,
     };
     let (addr, handle) = start_server(cfg, db_with_gmm(&dir));
 
@@ -189,6 +191,85 @@ fn admission_control_bounces_tune_on_miss_with_429() {
 }
 
 #[test]
+fn metrics_endpoint_and_access_log_observe_hit_miss_and_throttle() {
+    let (dir, _guard) = tmp_dir("metrics");
+    let log_path = dir.join("access.jsonl");
+    // Tune-on-miss enabled with a zero inflight budget: the SFM lookup
+    // below is a miss that gets throttled with 429, so one run exercises
+    // hit, miss, and throttle counters.
+    let cfg = HttpConfig {
+        addr: "127.0.0.1:0".into(),
+        workers: 2,
+        max_pending: 8,
+        max_inflight_tunes: 0,
+        serve: ServeConfig { miss_trials: 4, ..ServeConfig::default() },
+        access_log: Some(log_path.to_string_lossy().into_owned()),
+    };
+    let (addr, handle) = start_server(cfg, db_with_gmm(&dir));
+
+    // Baseline scrape. The registry is process-global and cumulative, so
+    // other tests in this binary may already have moved the counters:
+    // every assertion below is a >= delta from this snapshot.
+    let raw = http_roundtrip(&addr, &get_request("/metrics")).unwrap();
+    assert!(
+        String::from_utf8_lossy(&raw).contains("text/plain; version=0.0.4"),
+        "exposition content type"
+    );
+    let (status, body) = split_response(&raw).unwrap();
+    assert_eq!(status, 200);
+    let before = metaschedule::telemetry::parse_exposition(body).expect("valid exposition");
+    let base = |m: &std::collections::BTreeMap<String, f64>, k: &str| m.get(k).copied().unwrap_or(0.0);
+
+    let raw = http_roundtrip(&addr, &get_request("/lookup?workload=GMM")).unwrap();
+    assert_eq!(split_response(&raw).unwrap().0, 200);
+    let raw = http_roundtrip(&addr, &get_request("/lookup?workload=SFM")).unwrap();
+    assert_eq!(split_response(&raw).unwrap().0, 429);
+
+    let raw = http_roundtrip(&addr, &get_request("/metrics")).unwrap();
+    let (status, body) = split_response(&raw).unwrap();
+    assert_eq!(status, 200);
+    let after = metaschedule::telemetry::parse_exposition(body).expect("valid exposition");
+    assert!(
+        base(&after, "serve_requests_total") >= base(&before, "serve_requests_total") + 2.0,
+        "requests counted: {after:?}"
+    );
+    assert!(base(&after, "serve_hits_total") >= base(&before, "serve_hits_total") + 1.0);
+    assert!(base(&after, "serve_misses_total") >= base(&before, "serve_misses_total") + 1.0);
+    assert!(base(&after, "serve_throttled_total") >= base(&before, "serve_throttled_total") + 1.0);
+    // The latency histogram and the db families opened by this server's
+    // sharded database are part of the same exposition.
+    assert!(body.contains("serve_request_micros_count"), "latency histogram rendered");
+    assert!(body.contains("db_commits_total"), "db family rendered");
+
+    let raw = http_roundtrip(&addr, &get_request("/shutdown")).unwrap();
+    assert_eq!(split_response(&raw).unwrap().0, 200);
+    let _ = handle.join().unwrap();
+
+    // Structured access log: one JSON object per request, with the
+    // hit/miss outcome stamped on /lookup lines.
+    let log = std::fs::read_to_string(&log_path).expect("access log written");
+    let lines: Vec<Json> = log.lines().map(|l| Json::parse(l).expect("log line is JSON")).collect();
+    assert!(lines.len() >= 5, "metrics x2 + lookups x2 + shutdown logged: {}", lines.len());
+    for j in &lines {
+        assert!(j.get("method").and_then(Json::as_str).is_some());
+        assert!(j.get("path").and_then(Json::as_str).is_some());
+        assert!(j.get("status").and_then(Json::as_f64).is_some());
+        assert!(j.get("micros").and_then(Json::as_f64).is_some());
+    }
+    assert!(
+        lines.iter().any(|j| {
+            j.get("path").and_then(Json::as_str).map_or(false, |p| p.contains("GMM"))
+                && j.get("hit").and_then(Json::as_bool) == Some(true)
+        }),
+        "GMM hit logged with hit=true"
+    );
+    assert!(
+        lines.iter().any(|j| j.get("status").and_then(Json::as_f64) == Some(429.0)),
+        "throttled request logged with its status"
+    );
+}
+
+#[test]
 fn tune_on_miss_commits_and_subsequent_lookups_hit_the_refreshed_shard() {
     let (dir, _guard) = tmp_dir("tune");
     let cfg = HttpConfig {
@@ -197,6 +278,7 @@ fn tune_on_miss_commits_and_subsequent_lookups_hit_the_refreshed_shard() {
         max_pending: 8,
         max_inflight_tunes: 1,
         serve: ServeConfig { miss_trials: 4, threads: 1, ..ServeConfig::default() },
+        access_log: None,
     };
     let (addr, handle) = start_server(cfg, db_with_gmm(&dir));
 

@@ -808,3 +808,103 @@ fn prop_vendor_latency_scale_invariance() {
         },
     );
 }
+
+#[test]
+fn prop_histogram_bucket_index_brackets_every_value() {
+    // Each value lands in the smallest bucket whose upper bound covers
+    // it: v <= bound(i), and the previous bucket would have been too
+    // small. Monotone by construction, so bucket-sorted order agrees
+    // with value-sorted order (what `quantile` relies on).
+    use metaschedule::telemetry::Histogram;
+    check(
+        cfg(200),
+        |rng| rng.next_u64() >> (rng.gen_range(64) as u32),
+        |&v| {
+            let i = Histogram::bucket_index(v);
+            if let Some(b) = Histogram::bound(i) {
+                if v > b {
+                    return false;
+                }
+            }
+            if i > 0 {
+                if let Some(prev) = Histogram::bound(i - 1) {
+                    if v <= prev {
+                        return false;
+                    }
+                }
+            }
+            Histogram::bucket_index(v.saturating_add(1)) >= i
+        },
+    );
+}
+
+#[test]
+fn prop_histogram_conserves_counts_and_bounds_quantiles() {
+    // Recording any sample set: count/sum are conserved exactly, and
+    // every quantile is an upper bound within 2x of the true
+    // nearest-rank quantile (the log-scale bucket resolution).
+    use metaschedule::telemetry::Histogram;
+    check(
+        cfg(60),
+        |rng| {
+            let n = 1 + rng.gen_range(64);
+            (0..n).map(|_| 1 + (rng.next_u64() % (1 << 20))).collect::<Vec<u64>>()
+        },
+        |samples| {
+            let h = Histogram::new();
+            for &s in samples {
+                h.observe(s);
+            }
+            if h.count() != samples.len() as u64 {
+                return false;
+            }
+            if h.sum() != samples.iter().sum::<u64>() {
+                return false;
+            }
+            if h.bucket_counts().iter().sum::<u64>() != samples.len() as u64 {
+                return false;
+            }
+            let mut sorted = samples.clone();
+            sorted.sort_unstable();
+            for q in [0.0, 0.5, 0.9, 0.99, 1.0] {
+                let rank = ((q * sorted.len() as f64).ceil() as usize).max(1);
+                let truth = sorted[rank - 1];
+                let est = h.quantile(q);
+                if est < truth || est >= 2 * truth.max(1) {
+                    return false;
+                }
+            }
+            true
+        },
+    );
+}
+
+#[test]
+fn prop_metrics_render_always_parses_as_exposition() {
+    // Whatever mix of instruments and values a registry holds, its
+    // `/metrics` rendering must satisfy our own exposition parser (the
+    // same check CI runs against the live server).
+    use metaschedule::telemetry::{parse_exposition, Metrics};
+    check(
+        cfg(40),
+        |rng| (0..8).map(|_| (rng.gen_range(3), rng.next_u64() % 1000)).collect::<Vec<(usize, u64)>>(),
+        |plan| {
+            let m = Metrics::new();
+            for (i, &(kind, v)) in plan.iter().enumerate() {
+                match kind {
+                    0 => m.counter(&format!("c{i}_total"), "a counter").add(v),
+                    1 => m.gauge(&format!("g{i}"), "a gauge").set(v as i64 - 500),
+                    _ => m.histogram(&format!("h{i}_micros"), "a histogram").observe(v),
+                }
+            }
+            let parsed = match parse_exposition(&m.render()) {
+                Ok(p) => p,
+                Err(_) => return false,
+            };
+            // Every plain counter value must round-trip exactly.
+            plan.iter().enumerate().all(|(i, &(kind, v))| {
+                kind != 0 || parsed.get(&format!("c{i}_total")).copied() == Some(v as f64)
+            })
+        },
+    );
+}
