@@ -1,9 +1,10 @@
 //! Microbenchmarks of the search hot paths (§Perf in EXPERIMENTS.md):
-//! trace replay, mutation+validation, feature extraction (single and
-//! batched), GBT train/predict, simulator evaluation, and a full
-//! evolutionary-search round at 1 vs N threads (the chain-parallel
-//! pipeline). These are what bound tuning throughput (Table 1), so the
-//! perf pass optimizes against this bench.
+//! trace replay, mutation+validation, feature extraction (single,
+//! batched, and cached by canonical trace), trace interning, GBT
+//! train/predict, simulator evaluation, and a full evolutionary-search
+//! round at 1 vs N threads (the chain-parallel pipeline). These are
+//! what bound tuning throughput (Table 1), so the perf pass optimizes
+//! against this bench.
 //!
 //! ```sh
 //! cargo bench --bench hot_path             # full run
@@ -81,6 +82,25 @@ fn main() {
         let _ = extract_batch(&cand_progs);
     });
     rows.push(vec!["feature extraction (batch of 32)".into(), fmt(&s)]);
+
+    // Interning a full trace into the arena (every population member
+    // pays this once; after warm-up each instruction is a hit).
+    let s = bench("trace_intern", samples, budget_ms, || {
+        let _ = ctx.intern_trace(&sch.trace);
+    });
+    rows.push(vec!["trace intern (warm arena)".into(), fmt(&s)]);
+
+    // The cached counterpart of batch-32 extraction: after the first
+    // miss, every lookup is a hash of the canonical id chain.
+    let interned = ctx.intern_trace(&sch.trace);
+    let cache = ctx.feature_cache().expect("cache enabled by default");
+    let key = ctx.feat_key(metaschedule::tir::structural_hash(&prog), &interned);
+    let s = bench("feature_cache_batch32", samples, budget_ms, || {
+        for _ in 0..32 {
+            let _ = cache.get_or_extract(&key, &sch.prog);
+        }
+    });
+    rows.push(vec!["feature lookup, cached (batch of 32)".into(), fmt(&s)]);
 
     let s = bench("simulate", samples, budget_ms, || {
         let _ = simulate(&sch.prog, &target);

@@ -1,0 +1,162 @@
+//! Per-canonical-trace feature cache: `extract` is a pure function of
+//! the scheduled program, and the program is a pure function of
+//! `(workload base program, trace)` — so once a trace has an interned
+//! canonical id chain ([`crate::trace::InternedTrace`]), its feature
+//! vector can be cached under `(workload hash, id chain)` and reused
+//! every time the search re-scores an unchanged candidate (elite
+//! replays across rounds, re-proposed mutations, re-measured members).
+//!
+//! Invalidation rules: there are none. Both key components are content-
+//! addressed — a different base program hashes differently, a different
+//! trace interns to a different chain — and `extract` has no other
+//! inputs, so an entry can never go stale within a process. Nothing is
+//! persisted; the cache dies with the [`crate::ctx::TuneContext`].
+//!
+//! Correctness contract (pinned by `rust/tests/intern_invariants.rs` and
+//! the determinism suite): a cached vector is element-exact equal to a
+//! fresh `extract`, so cached and uncached searches produce byte-
+//! identical results and database files. Hit/miss counts land both in
+//! the context's local registry (exact `--explain-space` numbers) and
+//! the process-global registry (`/metrics`).
+
+use std::collections::HashMap;
+use std::sync::{Arc, RwLock};
+
+use crate::cost_model::features::extract;
+use crate::telemetry::{self, Counter, Metrics};
+use crate::tir::Program;
+use crate::trace::InternedTrace;
+
+/// Cache key: the workload's base-program structural hash plus the
+/// candidate trace's canonical id chain. The workload hash matters
+/// because one `TuneContext` (and so one cache) is reused across the
+/// task scheduler's workloads — the same trace replayed onto different
+/// base programs yields different features.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct FeatKey {
+    pub workload: u64,
+    pub trace: InternedTrace,
+}
+
+/// The cache itself: a read-mostly map from [`FeatKey`] to the shared
+/// feature vector. Thread-safe; worker chains share it through
+/// `&TuneContext`.
+pub struct FeatureCache {
+    map: RwLock<HashMap<FeatKey, Arc<Vec<f64>>>>,
+    hits: Arc<Counter>,
+    misses: Arc<Counter>,
+    hits_global: Arc<Counter>,
+    misses_global: Arc<Counter>,
+}
+
+const HITS_HELP: &str = "cost-model feature vectors served from the canonical-trace cache";
+const MISSES_HELP: &str = "cost-model feature vectors extracted fresh and inserted into the cache";
+
+impl FeatureCache {
+    /// A cache whose hit/miss counters register in `local` (the owning
+    /// context's registry) and mirror into the process-global registry.
+    pub fn new(local: &Metrics) -> FeatureCache {
+        let g = telemetry::global();
+        FeatureCache {
+            map: RwLock::new(HashMap::new()),
+            hits: local.counter("feature_cache_hits_total", HITS_HELP),
+            misses: local.counter("feature_cache_misses_total", MISSES_HELP),
+            hits_global: g.counter("feature_cache_hits_total", HITS_HELP),
+            misses_global: g.counter("feature_cache_misses_total", MISSES_HELP),
+        }
+    }
+
+    /// The feature vector for `prog` under `key`: served from the cache
+    /// when present, extracted and inserted otherwise. The caller
+    /// guarantees `prog` is the replay of `key` (the search derives both
+    /// from the same population member); since `extract` is pure, a hit
+    /// is element-exact equal to the fresh extraction it replaces.
+    pub fn get_or_extract(&self, key: &FeatKey, prog: &Program) -> Arc<Vec<f64>> {
+        if let Some(hit) = self.map.read().unwrap().get(key) {
+            let out = Arc::clone(hit);
+            self.hits.inc();
+            self.hits_global.inc();
+            return out;
+        }
+        let feats = Arc::new(extract(prog));
+        let mut g = self.map.write().unwrap();
+        // A racing extractor may have inserted meanwhile; keep the first
+        // entry (the values are identical — extract is pure).
+        let entry = g.entry(key.clone()).or_insert_with(|| Arc::clone(&feats));
+        let out = Arc::clone(entry);
+        drop(g);
+        self.misses.inc();
+        self.misses_global.inc();
+        out
+    }
+
+    /// Cached entries.
+    pub fn len(&self) -> usize {
+        self.map.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Hits recorded by this cache (local registry view).
+    pub fn hits(&self) -> u64 {
+        self.hits.get()
+    }
+
+    /// Misses (= extractions) recorded by this cache.
+    pub fn misses(&self) -> u64 {
+        self.misses.get()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tir::structural_hash;
+    use crate::trace::InternArena;
+    use crate::workloads;
+
+    #[test]
+    fn hit_returns_the_exact_extracted_vector() {
+        let metrics = Metrics::new();
+        let cache = FeatureCache::new(&metrics);
+        let arena = InternArena::new();
+        let prog = workloads::matmul(1, 32, 32, 32);
+        let key = FeatKey {
+            workload: structural_hash(&prog),
+            trace: arena.intern(&crate::trace::Trace::default()),
+        };
+        let fresh = extract(&prog);
+        let first = cache.get_or_extract(&key, &prog);
+        let second = cache.get_or_extract(&key, &prog);
+        assert_eq!(*first, fresh);
+        assert_eq!(*second, fresh);
+        assert_eq!(cache.misses(), 1);
+        assert_eq!(cache.hits(), 1);
+        assert_eq!(cache.len(), 1);
+        assert_eq!(metrics.counter_value("feature_cache_hits_total"), Some(1));
+    }
+
+    #[test]
+    fn distinct_workloads_do_not_collide() {
+        // Same (empty) trace, different base programs: separate entries
+        // — the workload hash keeps task-scheduler reuse safe.
+        let metrics = Metrics::new();
+        let cache = FeatureCache::new(&metrics);
+        let arena = InternArena::new();
+        let it = arena.intern(&crate::trace::Trace::default());
+        let a = workloads::matmul(1, 32, 32, 32);
+        let b = workloads::softmax(1, 32, 32);
+        let fa = cache.get_or_extract(
+            &FeatKey { workload: structural_hash(&a), trace: it.clone() },
+            &a,
+        );
+        let fb = cache.get_or_extract(
+            &FeatKey { workload: structural_hash(&b), trace: it },
+            &b,
+        );
+        assert_eq!(cache.len(), 2);
+        assert_ne!(*fa, *fb);
+    }
+}

@@ -3,9 +3,11 @@
 //! latencies, plus a random baseline. Models predict a *score*
 //! (`-ln(latency)`), so higher is better and ordering matches throughput.
 
+pub mod feature_cache;
 pub mod features;
 pub mod gbt;
 
+pub use feature_cache::{FeatKey, FeatureCache};
 pub use features::{extract, extract_batch, FEAT_DIM};
 pub use gbt::Gbt;
 
@@ -37,6 +39,37 @@ pub trait CostModel: Send + Sync {
         if weight > 0.0 {
             self.update(progs, latencies_s);
         }
+    }
+    /// Like [`CostModel::predict`], with a per-program feature-cache key
+    /// (`None` = no key available) so feature-based models can serve
+    /// repeat candidates from the search's cache instead of re-running
+    /// `extract`. Results MUST be element-exact equal to `predict` —
+    /// the cache is an acceleration, never an input. The default ignores
+    /// the cache; models that do not featurize (e.g. [`RandomModel`])
+    /// keep it.
+    fn predict_cached(
+        &self,
+        progs: &[&Program],
+        keys: &[Option<FeatKey>],
+        cache: &FeatureCache,
+    ) -> Vec<f64> {
+        let _ = (keys, cache);
+        self.predict(progs)
+    }
+    /// Like [`CostModel::update`], with feature-cache keys: models that
+    /// featurize training samples internally can reuse (and fill) the
+    /// search's cache — measured candidates were almost always just
+    /// scored, so their vectors are already resident. Same contract as
+    /// `predict_cached`: identical fit to `update`, cache or not.
+    fn update_cached(
+        &mut self,
+        progs: &[&Program],
+        latencies_s: &[f64],
+        keys: &[Option<FeatKey>],
+        cache: &FeatureCache,
+    ) {
+        let _ = (keys, cache);
+        self.update(progs, latencies_s);
     }
     fn name(&self) -> &'static str;
 }
@@ -79,11 +112,33 @@ impl GbtCostModel {
     }
 
     fn push_samples(&mut self, progs: &[&Program], latencies_s: &[f64], weight: f64) {
-        for (p, &l) in progs.iter().zip(latencies_s) {
+        self.push_samples_keyed(progs, latencies_s, weight, None);
+    }
+
+    /// `push_samples` with optional feature-cache keys: a keyed sample
+    /// whose vector is already cached skips `extract` entirely. The
+    /// cached vector is the output of the same pure `extract`, so the
+    /// accumulated training matrix — and every later fit — is element-
+    /// identical with or without the cache.
+    fn push_samples_keyed(
+        &mut self,
+        progs: &[&Program],
+        latencies_s: &[f64],
+        weight: f64,
+        cache: Option<(&[Option<FeatKey>], &FeatureCache)>,
+    ) {
+        for (i, (p, &l)) in progs.iter().zip(latencies_s).enumerate() {
             if !l.is_finite() || l <= 0.0 {
                 continue;
             }
-            self.xs.push(extract(p));
+            let x = match cache {
+                Some((keys, c)) => match keys.get(i).and_then(|k| k.as_ref()) {
+                    Some(key) => c.get_or_extract(key, p).as_ref().clone(),
+                    None => extract(p),
+                },
+                None => extract(p),
+            };
+            self.xs.push(x);
             self.ys.push(latency_to_score(l));
             self.ws.push(weight);
             self.staged += 1;
@@ -114,6 +169,37 @@ impl CostModel for GbtCostModel {
 
     fn update(&mut self, progs: &[&Program], latencies_s: &[f64]) {
         self.push_samples(progs, latencies_s, 1.0);
+    }
+
+    fn predict_cached(
+        &self,
+        progs: &[&Program],
+        keys: &[Option<FeatKey>],
+        cache: &FeatureCache,
+    ) -> Vec<f64> {
+        if !self.model.is_fit() {
+            return vec![0.0; progs.len()];
+        }
+        debug_assert_eq!(progs.len(), keys.len());
+        let rows: Vec<Vec<f64>> = progs
+            .iter()
+            .zip(keys)
+            .map(|(p, k)| match k {
+                Some(key) => cache.get_or_extract(key, p).as_ref().clone(),
+                None => extract(p),
+            })
+            .collect();
+        self.model.predict(&rows)
+    }
+
+    fn update_cached(
+        &mut self,
+        progs: &[&Program],
+        latencies_s: &[f64],
+        keys: &[Option<FeatKey>],
+        cache: &FeatureCache,
+    ) {
+        self.push_samples_keyed(progs, latencies_s, 1.0, Some((keys, cache)));
     }
 
     fn update_prior(&mut self, progs: &[&Program], latencies_s: &[f64], weight: f64) {
@@ -273,6 +359,45 @@ mod tests {
         m3.update_prior(&progs, &shifted, 0.5);
         let after = m3.predict(&[progs[0]])[0];
         assert!(after != before, "prior batch left unfitted on a warm model");
+    }
+
+    #[test]
+    fn cached_paths_are_element_exact() {
+        // predict_cached/update_cached with a shared feature cache must
+        // produce bit-identical scores to the uncached paths — the cache
+        // is an acceleration, never an input.
+        use crate::tir::structural_hash;
+        use crate::trace::{InternArena, Trace};
+
+        let data = variants();
+        let progs: Vec<&Program> = data.iter().map(|(p, _)| p).collect();
+        let lats: Vec<f64> = data.iter().map(|(_, l)| *l).collect();
+        let metrics = crate::telemetry::Metrics::new();
+        let cache = FeatureCache::new(&metrics);
+        let arena = InternArena::new();
+        let keys: Vec<Option<FeatKey>> = progs
+            .iter()
+            .map(|p| {
+                Some(FeatKey {
+                    workload: structural_hash(p),
+                    trace: arena.intern(&Trace::default()),
+                })
+            })
+            .collect();
+        let mut plain = GbtCostModel::new();
+        let mut cached = GbtCostModel::new();
+        plain.update(&progs, &lats);
+        cached.update_cached(&progs, &lats, &keys, &cache);
+        assert!(cache.misses() > 0, "update_cached did not fill the cache");
+        assert_eq!(plain.predict(&progs), cached.predict_cached(&progs, &keys, &cache));
+        // A second cached scoring pass serves from the cache and still
+        // matches exactly.
+        let hits_before = cache.hits();
+        assert_eq!(cached.predict_cached(&progs, &keys, &cache), plain.predict(&progs));
+        assert!(cache.hits() > hits_before, "repeat scoring did not hit the cache");
+        // The default (ignore-the-cache) trait path: RandomModel.
+        let rnd = RandomModel::new(3);
+        assert_eq!(rnd.predict(&progs), rnd.predict_cached(&progs, &keys, &cache));
     }
 
     #[test]

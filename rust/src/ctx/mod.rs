@@ -41,14 +41,16 @@ pub use registry::{
     DEFAULT_RULES_GPU,
 };
 
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 
+use crate::cost_model::{FeatKey, FeatureCache};
 use crate::schedule::Schedule;
 use crate::sim::Target;
 use crate::space::{ScheduleRule, SpaceGenerator};
 use crate::telemetry::{maybe_span, sanitize_name, Counter, Metrics, Span, TraceSink};
 use crate::tir::Program;
-use crate::trace::Trace;
+use crate::trace::{InternArena, InternedTrace, Trace};
 use crate::util::rng::Rng;
 
 /// Pass/reject counters for one postprocessor (diagnostics only),
@@ -96,6 +98,17 @@ pub struct TuneContext {
     /// Optional trace sink (`tune --profile`); search layers open spans
     /// through [`TuneContext::span`], which is free when unset.
     trace_sink: OnceLock<Arc<TraceSink>>,
+    /// Hash-consing arena for this context's traces: canonical id chains
+    /// back the search's dedup set, the memoized sampling indices the
+    /// mutation loop draws from, and the feature-cache keys.
+    intern: InternArena,
+    /// Per-canonical-trace feature vectors (see
+    /// [`crate::cost_model::FeatureCache`]). Observation-equivalent: the
+    /// search behaves byte-identically with it on or off.
+    feature_cache: FeatureCache,
+    /// `tune --no-feature-cache` escape hatch (and the CI byte-diff
+    /// toggle). Disabling only forfeits the speedup.
+    feature_cache_enabled: AtomicBool,
     rule_set: String,
     /// Rule names this context can vouch for when judging donor
     /// provenance: the resolving registry's full name list when the
@@ -131,6 +144,11 @@ impl TuneContext {
         let postproc_stats = postprocs.iter().map(|p| PostprocStat::new(p.name(), &metrics)).collect();
         let mutations_accepted =
             metrics.counter("ctx_mutations_accepted_total", "trace mutations that validated");
+        let intern = InternArena::with_counters(
+            metrics.counter("intern_hits_total", "trace instructions resolved to an existing interned node"),
+            metrics.counter("intern_nodes_total", "distinct trace instructions interned"),
+        );
+        let feature_cache = FeatureCache::new(&metrics);
         // Every builtin name is always vouched for; contexts resolved
         // through `from_specs_in` extend this with their registry's
         // custom names.
@@ -149,6 +167,9 @@ impl TuneContext {
             mutations_accepted,
             metrics,
             trace_sink: OnceLock::new(),
+            intern,
+            feature_cache,
+            feature_cache_enabled: AtomicBool::new(true),
             rule_set,
             known_rules,
         }
@@ -275,6 +296,41 @@ impl TuneContext {
         self.space.generate(prog, seed)
     }
 
+    /// This context's hash-consing arena (see [`crate::trace::intern`]).
+    pub fn arena(&self) -> &InternArena {
+        &self.intern
+    }
+
+    /// Intern a trace into this context's arena: canonical id chain plus
+    /// memoized sampling indices.
+    pub fn intern_trace(&self, trace: &Trace) -> InternedTrace {
+        self.intern.intern(trace)
+    }
+
+    /// The per-canonical-trace feature cache, or `None` when disabled
+    /// (`tune --no-feature-cache`). Callers fall back to the uncached
+    /// cost-model paths on `None` — the results are identical either way.
+    pub fn feature_cache(&self) -> Option<&FeatureCache> {
+        if self.feature_cache_enabled.load(Ordering::Relaxed) {
+            Some(&self.feature_cache)
+        } else {
+            None
+        }
+    }
+
+    /// Toggle the feature cache (the `--no-feature-cache` escape hatch
+    /// and the CI byte-diff smoke). Purely an execution knob: search
+    /// results and database bytes are identical in both states.
+    pub fn set_feature_cache_enabled(&self, enabled: bool) {
+        self.feature_cache_enabled.store(enabled, Ordering::Relaxed);
+    }
+
+    /// The feature-cache key for an interned candidate of the workload
+    /// whose *base* program hashes to `workload`.
+    pub fn feat_key(&self, workload: u64, interned: &InternedTrace) -> FeatKey {
+        FeatKey { workload, trace: interned.clone() }
+    }
+
     /// Mutate one sampling decision of `trace`, validating candidates by
     /// replay plus this context's postprocessor pipeline.
     pub fn mutate(&self, trace: &Trace, prog: &Program, rng: &mut Rng, seed: u64) -> Option<Schedule> {
@@ -283,6 +339,34 @@ impl TuneContext {
             self.mutations_accepted.inc();
         }
         out
+    }
+
+    /// Interned-hot-path variant of [`TuneContext::mutate`]: `interned`
+    /// is `trace`'s id chain in this context's arena. The mutation draws
+    /// from the chain's memoized sampling indices (no per-proposal trace
+    /// rescan) and the accepted child re-interns only its one rewritten
+    /// decision node, sharing the rest with the parent. RNG-for-RNG
+    /// identical to `mutate` — the determinism contract does not notice
+    /// which path the search took.
+    pub fn mutate_interned(
+        &self,
+        interned: &InternedTrace,
+        trace: &Trace,
+        prog: &Program,
+        rng: &mut Rng,
+        seed: u64,
+    ) -> Option<(Schedule, InternedTrace)> {
+        let (sch, idx) = self.mutators.mutate_with_sampling(
+            trace,
+            interned.sampling_indices(),
+            prog,
+            rng,
+            seed,
+            |sch| self.postprocess(sch),
+        )?;
+        self.mutations_accepted.inc();
+        let child = self.intern.intern_mutated(interned, idx, &sch.trace);
+        Some((sch, child))
     }
 
     /// Run the postprocessor pipeline in order; the first rejection wins.
@@ -352,6 +436,17 @@ impl TuneContext {
             out.push_str(&format!("mutator {name} (weight {weight}): {proposed} proposals\n"));
         }
         out.push_str(&format!("mutations accepted: {}\n", self.mutations_accepted.get()));
+        out.push_str(&format!(
+            "intern arena: {} nodes, {} hits\n",
+            self.intern.num_nodes(),
+            self.intern.hits()
+        ));
+        out.push_str(&format!(
+            "feature cache: {} hits, {} misses ({})\n",
+            self.feature_cache.hits(),
+            self.feature_cache.misses(),
+            if self.feature_cache_enabled.load(Ordering::Relaxed) { "enabled" } else { "disabled" }
+        ));
         out
     }
 }
@@ -468,6 +563,13 @@ mod tests {
         assert!(text.contains("mutator tile-transfer"), "{text}");
         assert!(text.contains("rules: auto-inline,"), "{text}");
         assert!(text.contains("mutators: tile-transfer,categorical-redraw,compute-location-move"), "{text}");
+        assert!(text.contains("intern arena: "), "{text}");
+        assert!(text.contains("feature cache: 0 hits, 0 misses (enabled)"), "{text}");
+        ctx.set_feature_cache_enabled(false);
+        assert!(ctx.feature_cache().is_none());
+        assert!(ctx.explain().contains("(disabled)"));
+        ctx.set_feature_cache_enabled(true);
+        assert!(ctx.feature_cache().is_some());
     }
 
     #[test]
@@ -484,6 +586,44 @@ mod tests {
         // No sink attached: spans are disabled and free.
         assert!(ctx.trace_sink().is_none());
         assert!(!ctx.span("x", "test").is_enabled());
+    }
+
+    #[test]
+    fn mutate_interned_matches_mutate_and_shares_nodes() {
+        // Context-level pin of the interned hot path: identical RNG
+        // draws and schedules as `mutate`, and the returned child chain
+        // is exactly what a from-scratch intern of the mutated trace
+        // yields.
+        let ctx = TuneContext::generic(Target::cpu_avx512());
+        let prog = workloads::fused_dense(64, 128, 64);
+        let states = ctx.generate(&prog, 2);
+        let mut rng_a = Rng::seed_from_u64(8);
+        let mut rng_b = Rng::seed_from_u64(8);
+        let mut accepted = 0;
+        for s in &states {
+            let interned = ctx.intern_trace(&s.trace);
+            assert_eq!(interned.sampling_indices(), s.trace.sampling_indices().as_slice());
+            for i in 0..4 {
+                let a = ctx.mutate(&s.trace, &prog, &mut rng_a, i);
+                let b = ctx.mutate_interned(&interned, &s.trace, &prog, &mut rng_b, i);
+                match (a, b) {
+                    (None, None) => {}
+                    (Some(x), Some((y, child))) => {
+                        accepted += 1;
+                        assert_eq!(
+                            crate::tir::structural_hash(&x.prog),
+                            crate::tir::structural_hash(&y.prog)
+                        );
+                        assert_eq!(ctx.arena().materialize(&child), y.trace);
+                        assert_eq!(child, ctx.intern_trace(&y.trace));
+                    }
+                    (x, y) => panic!("paths diverged: {:?} vs {:?}", x.is_some(), y.is_some()),
+                }
+            }
+            assert_eq!(rng_a.next_u64(), rng_b.next_u64(), "RNG state diverged");
+        }
+        assert!(accepted > 0, "no mutation accepted on either path");
+        assert!(ctx.arena().num_nodes() > 0);
     }
 
     #[test]

@@ -66,7 +66,8 @@ impl Mutator for TileTransfer {
     }
 
     fn propose(&self, trace: &Trace, idx: usize, _prog: &Program, rng: &mut Rng) -> Option<Decision> {
-        let Inst::SamplePerfectTile { decision, max_innermost, .. } = &trace.insts[idx] else {
+        let Some(Inst::SamplePerfectTile { decision, max_innermost, .. }) = trace.insts.get(idx)
+        else {
             return None;
         };
         let n = decision.len();
@@ -112,7 +113,8 @@ impl Mutator for CategoricalRedraw {
     }
 
     fn propose(&self, trace: &Trace, idx: usize, _prog: &Program, rng: &mut Rng) -> Option<Decision> {
-        let Inst::SampleCategorical { candidates, probs, decision, .. } = &trace.insts[idx] else {
+        let Some(Inst::SampleCategorical { candidates, probs, decision, .. }) = trace.insts.get(idx)
+        else {
             return None;
         };
         if candidates.len() < 2 {
@@ -142,8 +144,8 @@ impl Mutator for ComputeLocationMove {
     }
 
     fn propose(&self, trace: &Trace, idx: usize, prog: &Program, rng: &mut Rng) -> Option<Decision> {
-        let (block, old) = match &trace.insts[idx] {
-            Inst::SampleComputeLocation { block, decision, .. } => (*block, *decision),
+        let (block, old) = match trace.insts.get(idx) {
+            Some(Inst::SampleComputeLocation { block, decision, .. }) => (*block, *decision),
             _ => return None,
         };
         // Replay everything before idx to recover the program state.
@@ -241,7 +243,19 @@ impl MutatorSet {
     /// runs inside the innermost search loop, where the old free
     /// functions dispatched with a bare `match`.
     pub fn propose_for(&self, trace: &Trace, idx: usize, prog: &Program, rng: &mut Rng) -> Option<Decision> {
-        let inst = &trace.insts[idx];
+        // A proposable index must name a pre-postproc sampling
+        // instruction. Anything else — out of range, non-sampling, or
+        // past the `EnterPostproc` marker — is a skip, never a panic:
+        // stale indices reach here via traces loaded from a database
+        // whose schedule primitives have since changed, and a trace
+        // whose only sampling instructions sit in the postproc tail has
+        // no mutable decision at all.
+        let inst = trace.insts.get(idx)?;
+        if !inst.is_sampling()
+            || trace.insts[..idx].iter().any(|i| matches!(i, Inst::EnterPostproc))
+        {
+            return None;
+        }
         let mut first: Option<usize> = None;
         let mut multiple = false;
         for (i, e) in self.entries.iter().enumerate() {
@@ -292,12 +306,36 @@ impl MutatorSet {
         F: Fn(&Schedule) -> bool,
     {
         let sampling = trace.sampling_indices();
+        self.mutate_with_sampling(trace, &sampling, prog, rng, seed, validate)
+            .map(|(sch, _)| sch)
+    }
+
+    /// Hot-path variant of [`MutatorSet::mutate_with`]: the caller
+    /// supplies the pre-postproc sampling indices — memoized on an
+    /// [`crate::trace::InternedTrace`] in the search — so the proposal
+    /// loop does not rescan the whole trace per candidate per
+    /// generation. Returns the mutated instruction index alongside the
+    /// schedule so the caller can re-intern just that one node.
+    /// RNG-for-RNG identical to `mutate_with` whenever `sampling ==
+    /// trace.sampling_indices()` (pinned by the invariants suite).
+    pub fn mutate_with_sampling<F>(
+        &self,
+        trace: &Trace,
+        sampling: &[usize],
+        prog: &Program,
+        rng: &mut Rng,
+        seed: u64,
+        validate: F,
+    ) -> Option<(Schedule, usize)>
+    where
+        F: Fn(&Schedule) -> bool,
+    {
         if sampling.is_empty() {
             return None;
         }
         // Try a few instruction picks before giving up.
         for _ in 0..4 {
-            let idx = *rng.choose(&sampling);
+            let idx = *rng.choose(sampling);
             let Some(decision) = self.propose_for(trace, idx, prog, rng) else {
                 continue;
             };
@@ -306,7 +344,7 @@ impl MutatorSet {
             // Validation: replay with the override; off-support decisions fail.
             if let Ok(sch) = replay_with_decisions(trace, prog, seed, &overrides) {
                 if validate(&sch) {
-                    return Some(sch);
+                    return Some((sch, idx));
                 }
             }
         }
@@ -361,7 +399,12 @@ mod tests {
     fn tile_transfer_preserves_product() {
         let (prog, s) = tiled_matmul(5);
         let mut rng = Rng::seed_from_u64(1);
-        let idx = s.trace.sampling_indices()[0];
+        let idx = s
+            .trace
+            .sampling_indices()
+            .first()
+            .copied()
+            .expect("tiled fixture records a sampling instruction");
         let old = match &s.trace.insts[idx] {
             Inst::SamplePerfectTile { decision, .. } => decision.clone(),
             _ => panic!(),
@@ -417,6 +460,71 @@ mod tests {
         let t = Trace::default();
         let mut rng = Rng::seed_from_u64(0);
         assert!(mutate(&t, &prog, &mut rng, 0).is_none());
+    }
+
+    #[test]
+    fn postproc_only_sampling_trace_skips_instead_of_panicking() {
+        // Regression: a trace whose only sampling instructions sit after
+        // the `EnterPostproc` marker has no mutable decision. Every
+        // entry point — sampling_indices, mutate, and a hostile direct
+        // propose_for on the postproc (or out-of-range) index — must
+        // skip, not panic.
+        let prog = workloads::matmul(1, 16, 16, 16);
+        let t = Trace {
+            insts: vec![
+                Inst::GetBlock { name: "matmul".into(), out: 0 },
+                Inst::EnterPostproc,
+                Inst::SampleCategorical {
+                    candidates: vec![0, 16, 64],
+                    probs: vec![0.25, 0.5, 0.25],
+                    out: 1,
+                    decision: 1,
+                },
+            ],
+        };
+        assert!(t.sampling_indices().is_empty());
+        let mut rng = Rng::seed_from_u64(21);
+        assert!(mutate(&t, &prog, &mut rng, 0).is_none());
+        let set = MutatorSet::builtin_default();
+        assert!(set.mutate_with(&t, &prog, &mut rng, 0, |_| true).is_none());
+        // Direct dispatch on the post-postproc sampling index: skipped.
+        assert!(set.propose_for(&t, 2, &prog, &mut rng).is_none());
+        // Non-sampling and out-of-range indices: also skipped.
+        assert!(set.propose_for(&t, 0, &prog, &mut rng).is_none());
+        assert!(set.propose_for(&t, 99, &prog, &mut rng).is_none());
+        // The individual mutators are just as defensive about bad indices.
+        assert!(TileTransfer.propose(&t, 99, &prog, &mut rng).is_none());
+        assert!(CategoricalRedraw.propose(&t, 99, &prog, &mut rng).is_none());
+        assert!(ComputeLocationMove.propose(&t, 99, &prog, &mut rng).is_none());
+    }
+
+    #[test]
+    fn mutate_with_sampling_matches_mutate_with_rng_for_rng() {
+        // The memoized-sampling hot path must draw the identical RNG
+        // sequence as the rescanning path: same proposals, same
+        // schedules, same RNG state afterwards.
+        let prog = workloads::fused_dense(64, 128, 64);
+        let ctx = TuneContext::generic(Target::cpu_avx512());
+        let states = ctx.generate(&prog, 6);
+        let set = MutatorSet::builtin_default();
+        for s in &states {
+            let sampling = s.trace.sampling_indices();
+            let mut rng_a = Rng::seed_from_u64(31);
+            let mut rng_b = Rng::seed_from_u64(31);
+            for i in 0..6 {
+                let a = set.mutate_with(&s.trace, &prog, &mut rng_a, i, |_| true);
+                let b = set.mutate_with_sampling(&s.trace, &sampling, &prog, &mut rng_b, i, |_| true);
+                match (a, b) {
+                    (None, None) => {}
+                    (Some(x), Some((y, idx))) => {
+                        assert_eq!(structural_hash(&x.prog), structural_hash(&y.prog));
+                        assert!(sampling.contains(&idx), "mutated index {idx} not a sampling index");
+                    }
+                    (x, y) => panic!("diverged: {:?} vs {:?}", x.is_some(), y.is_some()),
+                }
+            }
+            assert_eq!(rng_a.next_u64(), rng_b.next_u64(), "RNG state diverged");
+        }
     }
 
     #[test]

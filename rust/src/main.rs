@@ -4,6 +4,7 @@
 //! metaschedule list                              # workloads + models
 //! metaschedule tune --workload GMM [--target cpu] [--trials 64] [--threads N] [--db t.jsonl]
 //!                  [--rules default] [--mutators default] [--postprocs default] [--explain-space]
+//!                  [--no-feature-cache]            # extract features fresh (byte-identical results)
 //!                  [--transfer-from cpu [--transfer-db donor.jsonl]] [--no-transfer]
 //!                  [--profile trace.json]          # Chrome-trace spans of the tune (Perfetto)
 //! metaschedule tune-model --model bert-base [--target cpu] [--trials 32] [--db t.jsonl]
@@ -57,8 +58,12 @@
 //! `--rules`/`--mutators`/`--postprocs` compose the search space from
 //! the named rule registry (`default` = the per-target generic set;
 //! `default-tc` adds Use-Tensor-Core). `--explain-space` prints per-rule
-//! applicability/error counters after tuning (see README "Extending the
-//! search space").
+//! applicability/error counters after tuning, plus intern-arena and
+//! feature-cache hit counts (see README "Extending the search space").
+//!
+//! `--no-feature-cache` disables the per-canonical-trace feature cache
+//! (see docs/ARCHITECTURE.md "Trace IR & interning"); cached vectors are
+//! element-exact, so this only trades wall-clock — never results.
 //! ```
 
 use metaschedule::ctx::TuneContext;
@@ -209,6 +214,15 @@ fn tune(args: &Args) {
     // must not create the file or append a registration line.
     let ctx = ctx_of(args, &target);
     println!("space: rules = {}", ctx.rule_set());
+    // --no-feature-cache: score every candidate through a fresh feature
+    // extraction instead of the per-canonical-trace cache. Cached vectors
+    // are element-exact copies of fresh ones, so this only trades speed —
+    // results and db files are byte-identical either way (the CI
+    // intern-smoke job diffs them to prove it).
+    if args.has_switch("no-feature-cache") {
+        ctx.set_feature_cache_enabled(false);
+        println!("feature cache disabled (--no-feature-cache; results are byte-identical)");
+    }
     // --profile out.jsonl: record Chrome-trace spans of this tune
     // (observation-only; results are byte-identical with or without it).
     let profile = args.flag("profile").map(|p| {

@@ -26,7 +26,7 @@ use std::collections::HashSet;
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::cost_model::CostModel;
+use crate::cost_model::{CostModel, FeatKey};
 use crate::ctx::TuneContext;
 use crate::db::{Database, InMemoryDb, TuningRecord};
 use crate::schedule::Schedule;
@@ -36,7 +36,7 @@ use crate::search::parallel::{parallel_map, BoundedQueue, SharedMeasurer};
 use crate::search::Measurer;
 use crate::tir::{structural_hash, Program};
 use crate::trace::replay::replay_fresh;
-use crate::trace::Trace;
+use crate::trace::{InternedTrace, Trace};
 use crate::util::rng::Rng;
 
 /// Evolutionary-search hyperparameters (Appendix A.5 scale, shrunk to
@@ -157,9 +157,12 @@ pub struct TuneResult {
     pub stale_skipped: usize,
 }
 
-/// One population member: a validated schedule plus its model score.
+/// One population member: a validated schedule, its canonical id chain
+/// in the context's intern arena (dedup identity + feature-cache key),
+/// and its model score.
 struct Member {
     sch: Schedule,
+    interned: InternedTrace,
     score: f64,
 }
 
@@ -175,6 +178,7 @@ struct SearchTelemetry {
     predict_candidates: Arc<Counter>,
     measure_batches: Arc<Counter>,
     transfer_seeded: Arc<Counter>,
+    dedup_trace_hits: Arc<Counter>,
 }
 
 impl SearchTelemetry {
@@ -190,7 +194,57 @@ impl SearchTelemetry {
                 "search_transfer_seeded_total",
                 "cross-target donor schedules re-measured as warm-start seeds",
             ),
+            dedup_trace_hits: g.counter(
+                "search_dedup_trace_hits_total",
+                "measurement candidates deduplicated by canonical trace ids (no program rehash)",
+            ),
         }
+    }
+}
+
+/// Score `progs` through the model, routing feature extraction through
+/// the context's per-canonical-trace cache when it is enabled.
+/// `interned` is parallel to `progs`: each entry is the candidate's
+/// canonical id chain, keyed under the workload's base-program hash.
+/// With the cache disabled this is exactly `model.predict` — the
+/// `--no-feature-cache` escape hatch stays byte-identical because
+/// cached vectors are element-exact equal to fresh extractions.
+fn predict_through_cache(
+    model: &dyn CostModel,
+    ctx: &TuneContext,
+    wl_hash: u64,
+    progs: &[&Program],
+    interned: &[&InternedTrace],
+) -> Vec<f64> {
+    match ctx.feature_cache() {
+        Some(cache) => {
+            let keys: Vec<Option<FeatKey>> =
+                interned.iter().map(|it| Some(ctx.feat_key(wl_hash, it))).collect();
+            model.predict_cached(progs, &keys, cache)
+        }
+        None => model.predict(progs),
+    }
+}
+
+/// Update counterpart of [`predict_through_cache`]: training samples on
+/// the commit path populate the cache, which is what guarantees cache
+/// hits by round 1 even on a cold database (round-0 measured elites are
+/// cached at update time and hit when the next round rescores them).
+fn update_through_cache(
+    model: &mut dyn CostModel,
+    ctx: &TuneContext,
+    wl_hash: u64,
+    progs: &[&Program],
+    latencies_s: &[f64],
+    interned: &[InternedTrace],
+) {
+    match ctx.feature_cache() {
+        Some(cache) => {
+            let keys: Vec<Option<FeatKey>> =
+                interned.iter().map(|it| Some(ctx.feat_key(wl_hash, it))).collect();
+            model.update_cached(progs, latencies_s, &keys, cache)
+        }
+        None => model.update(progs, latencies_s),
     }
 }
 
@@ -351,10 +405,21 @@ impl EvolutionarySearch {
         // history.
         let mut warm_span = ctx.span("warm-start", "search");
         let target_name = measurer.target_name();
-        let wid = db.register_workload(&prog.name, structural_hash(prog), &target_name);
+        // Hashed once per tune call: workload registration, feature-cache
+        // keys, and dedup all share it.
+        let wl_hash = structural_hash(prog);
+        let wid = db.register_workload(&prog.name, wl_hash, &target_name);
         let all_records = db.records_for(wid);
         let mut stale_skipped = 0usize;
         let mut measured_hashes: HashSet<u64> = HashSet::new();
+        // Canonical-trace prefilter over `measured_hashes`: every chain
+        // in here replays to a program whose structural hash is already
+        // in the measured set (equal trace => equal replayed program),
+        // so the selection loop can skip a rediscovered candidate
+        // without rehashing its program. Strictly an accelerator —
+        // `measured_hashes` stays the source of truth, and the
+        // unique-cand_hash invariant on the database is untouched.
+        let mut seen_traces: HashSet<InternedTrace> = HashSet::new();
         let mut compat_success: Vec<&TuningRecord> = Vec::new();
         for r in &all_records {
             if r.sim_version != crate::sim::SIM_VERSION {
@@ -399,6 +464,7 @@ impl EvolutionarySearch {
         // re-clone and re-sort the whole record set.
         let mut pt_progs: Vec<Program> = Vec::new();
         let mut pt_lats: Vec<f64> = Vec::new();
+        let mut pt_interned: Vec<InternedTrace> = Vec::new();
         for rec in &compat_success {
             if pt_progs.len() >= PRETRAIN_RECORDS {
                 break;
@@ -406,14 +472,20 @@ impl EvolutionarySearch {
             let Some(lat) = rec.best_latency() else {
                 continue;
             };
+            // Every compatible record's cand_hash is already in
+            // `measured_hashes`, so its canonical chain may seed the
+            // trace-level prefilter whether or not it still replays.
+            let it = ctx.intern_trace(&rec.trace);
             if let Ok(sch) = crate::trace::replay(&rec.trace, prog, 0) {
                 pt_progs.push(sch.prog);
                 pt_lats.push(lat);
+                pt_interned.push(it.clone());
             }
+            seen_traces.insert(it);
         }
         if !pt_progs.is_empty() {
             let refs: Vec<&Program> = pt_progs.iter().collect();
-            model.update(&refs, &pt_lats);
+            update_through_cache(model, ctx, wl_hash, &refs, &pt_lats, &pt_interned);
         }
         drop(pt_progs);
         drop(compat_success);
@@ -443,11 +515,14 @@ impl EvolutionarySearch {
             let seeds = pool.seed_schedules(prog, ctx, &measured_hashes, seed_cap);
             let mut progs = Vec::new();
             let mut lats = Vec::new();
+            let mut seeded_interned: Vec<InternedTrace> = Vec::new();
             for (sch, cand_hash) in seeds {
+                let it = ctx.intern_trace(&sch.trace);
                 let lat = measurer.measure(&sch.prog);
                 trials += 1;
                 tel.trials.inc();
                 measured_hashes.insert(cand_hash);
+                seen_traces.insert(it.clone());
                 db.commit_record(TuningRecord {
                     workload: wid,
                     trace: sch.trace.clone(),
@@ -467,6 +542,7 @@ impl EvolutionarySearch {
                 };
                 progs.push(sch.prog.clone());
                 lats.push(lat);
+                seeded_interned.push(it);
                 let better = best.as_ref().map(|(b, _)| lat < *b).unwrap_or(true);
                 if better {
                     best = Some((lat, sch.clone()));
@@ -492,7 +568,7 @@ impl EvolutionarySearch {
             }
             // The destination re-measurements are full-weight samples.
             let prog_refs: Vec<&Program> = progs.iter().collect();
-            model.update(&prog_refs, &lats);
+            update_through_cache(model, ctx, wl_hash, &prog_refs, &lats, &seeded_interned);
             tel.transfer_seeded.add(transferred_records as u64);
             transfer_span.arg("transferred_records", transferred_records as f64);
         }
@@ -526,6 +602,7 @@ impl EvolutionarySearch {
                     round,
                     c as u64,
                     chains,
+                    wl_hash,
                 )
             });
             drop(evolve_span);
@@ -554,11 +631,24 @@ impl EvolutionarySearch {
                 if picked.iter().any(|&(i, _)| i == idx) {
                     continue;
                 }
-                let h = structural_hash(&population[idx].sch.prog);
+                let member = &population[idx];
+                // Trace-level prefilter: an identical canonical id chain
+                // replays to an identical program, so the structural hash
+                // is already known to be measured — skip without
+                // rehashing the program.
+                if seen_traces.contains(&member.interned) {
+                    tel.dedup_trace_hits.inc();
+                    continue;
+                }
+                let h = structural_hash(&member.sch.prog);
                 if measured_hashes.contains(&h) {
+                    // Remember the chain so equal-trace rediscoveries of
+                    // this candidate skip the rehash too.
+                    seen_traces.insert(member.interned.clone());
                     continue;
                 }
                 measured_hashes.insert(h);
+                seen_traces.insert(member.interned.clone());
                 picked.push((idx, h));
             }
 
@@ -597,6 +687,7 @@ impl EvolutionarySearch {
             let commit_span = ctx.span("commit+update", "search");
             let mut progs = Vec::new();
             let mut lats = Vec::new();
+            let mut trained_interned: Vec<InternedTrace> = Vec::new();
             for (slot, lat) in lats_by_slot.into_iter().enumerate() {
                 let (idx, cand_hash) = picked[slot];
                 let member = &population[idx];
@@ -620,6 +711,7 @@ impl EvolutionarySearch {
                 };
                 progs.push(member.sch.prog.clone());
                 lats.push(lat);
+                trained_interned.push(member.interned.clone());
                 let better = best.as_ref().map(|(b, _)| lat < *b).unwrap_or(true);
                 if better {
                     best = Some((lat, member.sch.clone()));
@@ -644,7 +736,7 @@ impl EvolutionarySearch {
                 }
             }
             let prog_refs: Vec<&Program> = progs.iter().collect();
-            model.update(&prog_refs, &lats);
+            update_through_cache(model, ctx, wl_hash, &prog_refs, &lats, &trained_interned);
             drop(commit_span);
             round_span.arg("trials_after", trials as f64);
             drop(round_span);
@@ -689,6 +781,7 @@ impl EvolutionarySearch {
         round: u64,
         chain: u64,
         chains: usize,
+        wl_hash: u64,
     ) -> Vec<Member> {
         let cfg = &self.cfg;
         let _chain_span = ctx.span(format!("chain {chain}"), "search");
@@ -710,7 +803,8 @@ impl EvolutionarySearch {
             // pipeline this never rejects a successful replay).
             if let Ok(sch) = crate::trace::replay(&elites[ei], prog, rng.next_u64()) {
                 if ctx.postprocess(&sch) {
-                    population.push(Member { sch, score: 0.0 });
+                    let interned = ctx.intern_trace(&sch.trace);
+                    population.push(Member { sch, interned, score: 0.0 });
                 }
             }
             ei += chains.max(1);
@@ -719,12 +813,13 @@ impl EvolutionarySearch {
             if population.len() >= chain_pop {
                 break;
             }
-            population.push(Member { sch, score: 0.0 });
+            let interned = ctx.intern_trace(&sch.trace);
+            population.push(Member { sch, interned, score: 0.0 });
         }
         if population.is_empty() {
             return population;
         }
-        Self::score(&mut population, model);
+        Self::score(&mut population, model, ctx, wl_hash);
         tel.predict_batches.inc();
         tel.predict_candidates.add(population.len() as u64);
 
@@ -733,26 +828,34 @@ impl EvolutionarySearch {
         // the cost model, then accepts/rejects member by member.
         let mut temperature = cfg.init_temperature;
         for _gen in 0..cfg.generations {
-            let mut proposals: Vec<(usize, Schedule)> = Vec::with_capacity(population.len());
+            let mut proposals: Vec<(usize, Schedule, InternedTrace)> =
+                Vec::with_capacity(population.len());
             for (i, m) in population.iter().enumerate() {
                 if !rng.gen_bool(cfg.mutation_prob) {
                     continue;
                 }
                 let mseed = rng.next_u64();
-                if let Some(cand) = ctx.mutate(&m.sch.trace, prog, &mut rng, mseed) {
-                    proposals.push((i, cand));
+                // The memoized sampling-index list and single-node rewrite
+                // are RNG-for-RNG identical to mutating the raw trace.
+                if let Some((cand, cand_interned)) =
+                    ctx.mutate_interned(&m.interned, &m.sch.trace, prog, &mut rng, mseed)
+                {
+                    proposals.push((i, cand, cand_interned));
                 }
             }
-            let cand_progs: Vec<&Program> = proposals.iter().map(|(_, c)| &c.prog).collect();
-            let new_scores = model.predict(&cand_progs);
+            let cand_progs: Vec<&Program> = proposals.iter().map(|(_, c, _)| &c.prog).collect();
+            let cand_interned: Vec<&InternedTrace> =
+                proposals.iter().map(|(_, _, it)| it).collect();
+            let new_scores = predict_through_cache(model, ctx, wl_hash, &cand_progs, &cand_interned);
             tel.predict_batches.inc();
             tel.predict_candidates.add(cand_progs.len() as u64);
-            for ((i, cand), new_score) in proposals.into_iter().zip(new_scores) {
+            for ((i, cand, cand_int), new_score) in proposals.into_iter().zip(new_scores) {
                 let m = &mut population[i];
                 let accept = new_score >= m.score
                     || rng.gen_f64() < ((new_score - m.score) / temperature.max(1e-9)).exp();
                 if accept {
                     m.sch = cand;
+                    m.interned = cand_int;
                     m.score = new_score;
                 }
             }
@@ -900,9 +1003,10 @@ impl EvolutionarySearch {
         (lats, fresh)
     }
 
-    fn score(population: &mut [Member], model: &dyn CostModel) {
+    fn score(population: &mut [Member], model: &dyn CostModel, ctx: &TuneContext, wl_hash: u64) {
         let progs: Vec<&Program> = population.iter().map(|m| &m.sch.prog).collect();
-        let scores = model.predict(&progs);
+        let interned: Vec<&InternedTrace> = population.iter().map(|m| &m.interned).collect();
+        let scores = predict_through_cache(model, ctx, wl_hash, &progs, &interned);
         for (m, s) in population.iter_mut().zip(scores) {
             m.score = s;
         }

@@ -1,0 +1,442 @@
+//! Hash-consed trace IR: intern instructions once, address traces as
+//! chains of canonical node ids (the ROADMAP's arena + global-value-
+//! numbering item).
+//!
+//! The evolutionary hot path compares, dedups, and featurizes thousands
+//! of candidate traces per round. Interning gives every distinct
+//! instruction exactly one numbered node in an [`InternArena`], so that
+//!
+//! - structural equality of traces is id-chain equality — no field-wise
+//!   compare, no re-serialization ([`InternedTrace`] hashes and compares
+//!   by its ids, which is what the search's dedup set keys on);
+//! - a mutated candidate shares every unchanged node with its parent:
+//!   [`InternArena::intern_mutated`] re-interns exactly the one rewritten
+//!   decision node (the mutators rewrite one sampling decision at a
+//!   time) and `Arc`-shares the memoized sampling-index list;
+//! - derived per-trace data memoizes on the chain: sampling indices are
+//!   computed once at intern time ([`InternedTrace::sampling_indices`])
+//!   instead of rescanned per mutation proposal, and the cost model's
+//!   feature cache ([`crate::cost_model::FeatureCache`]) keys on
+//!   `(workload, id chain)`.
+//!
+//! Node-id *values* depend on interning order: single-threaded sessions
+//! assign identical chains across runs, while concurrent interning may
+//! permute ids with thread interleaving. Determinism is preserved
+//! because ids are injective per arena and every consumer depends only
+//! on id *equality*, never on the numeric value — which is also why the
+//! dedup and cache keys are full id chains rather than a folded 64-bit
+//! fingerprint (a fingerprint collision would change behaviour
+//! nondeterministically). On-disk formats are untouched: `cand_hash`
+//! stays the structural hash of the scheduled program (docs/DB_FORMAT.md
+//! pins this).
+//!
+//! Instructions are fingerprinted through their canonical serialization
+//! ([`crate::trace::serde::inst_to_line`]) — the same text the database
+//! round-trips byte-for-byte — with bitwise `f64` comparison resolving
+//! hash-bucket collisions, so even NaN-carrying `SampleCategorical`
+//! probability vectors intern stably.
+
+use std::collections::HashMap;
+use std::sync::{Arc, RwLock};
+
+use crate::telemetry::Counter;
+use crate::trace::{serde, Inst, Trace};
+
+/// A canonical instruction id: index into the owning arena's node table.
+/// Only meaningful within the arena that issued it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct NodeId(pub u32);
+
+/// A trace addressed as a chain of canonical node ids, plus the memoized
+/// pre-postproc sampling-instruction indices. Cloning is two `Arc` bumps;
+/// equality and hashing cover the id chain only (the sampling list is
+/// derived data). Comparisons are only meaningful between traces interned
+/// in the same [`InternArena`].
+#[derive(Debug, Clone)]
+pub struct InternedTrace {
+    ids: Arc<[NodeId]>,
+    sampling: Arc<[usize]>,
+}
+
+impl PartialEq for InternedTrace {
+    fn eq(&self, other: &Self) -> bool {
+        self.ids == other.ids
+    }
+}
+
+impl Eq for InternedTrace {}
+
+impl std::hash::Hash for InternedTrace {
+    fn hash<H: std::hash::Hasher>(&self, state: &mut H) {
+        self.ids.hash(state);
+    }
+}
+
+impl InternedTrace {
+    /// The canonical id chain.
+    pub fn ids(&self) -> &[NodeId] {
+        &self.ids
+    }
+
+    /// Indices of decision-bearing (sampling) instructions before the
+    /// `EnterPostproc` marker — [`Trace::sampling_indices`], computed
+    /// once at intern time instead of rescanned per proposal.
+    pub fn sampling_indices(&self) -> &[usize] {
+        &self.sampling
+    }
+
+    /// Number of instructions.
+    pub fn len(&self) -> usize {
+        self.ids.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ids.is_empty()
+    }
+
+    /// FNV-1a fold over the id chain. Diagnostics only — behaviour never
+    /// branches on it (a collision must not be able to change results).
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = FNV_OFFSET;
+        for id in self.ids.iter() {
+            for b in id.0.to_le_bytes() {
+                h = fnv1a_byte(h, b);
+            }
+        }
+        h
+    }
+}
+
+const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+const FNV_PRIME: u64 = 0x100000001b3;
+
+#[inline]
+fn fnv1a_byte(h: u64, b: u8) -> u64 {
+    (h ^ b as u64).wrapping_mul(FNV_PRIME)
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for &b in bytes {
+        h = fnv1a_byte(h, b);
+    }
+    h
+}
+
+/// Fingerprint an instruction through its canonical text line. Bitwise-
+/// distinct NaN probability payloads all format as `NaN` and share a
+/// bucket; [`inst_bits_eq`] resolves them within the collision chain.
+fn inst_fp(inst: &Inst) -> u64 {
+    fnv1a(serde::inst_to_line(inst).as_bytes())
+}
+
+/// Interning equality: the derived `PartialEq` for every variant except
+/// `SampleCategorical`, whose probability vector compares by `f64` bit
+/// pattern — `NaN == NaN` is false under IEEE comparison, which would
+/// allocate a fresh node on every lookup and leak the arena.
+fn inst_bits_eq(a: &Inst, b: &Inst) -> bool {
+    match (a, b) {
+        (
+            Inst::SampleCategorical { candidates: ca, probs: pa, out: oa, decision: da },
+            Inst::SampleCategorical { candidates: cb, probs: pb, out: ob, decision: db },
+        ) => {
+            ca == cb
+                && oa == ob
+                && da == db
+                && pa.len() == pb.len()
+                && pa.iter().zip(pb).all(|(x, y)| x.to_bits() == y.to_bits())
+        }
+        _ => a == b,
+    }
+}
+
+struct ArenaInner {
+    /// Instruction fingerprint -> node ids with that fingerprint (the
+    /// collision chain is almost always length 1).
+    index: HashMap<u64, Vec<NodeId>>,
+    nodes: Vec<Inst>,
+}
+
+/// The hash-consing arena: every structurally distinct instruction is
+/// stored once and addressed by [`NodeId`]. Shared immutably across the
+/// search's worker chains (`RwLock` inside); lookups of already-interned
+/// instructions — the steady-state hot path — take only the read lock.
+pub struct InternArena {
+    inner: RwLock<ArenaInner>,
+    /// Lookups resolved to an existing node (structural sharing at work).
+    hits: Arc<Counter>,
+    /// Fresh nodes allocated; equals the node count.
+    allocated: Arc<Counter>,
+}
+
+impl InternArena {
+    pub fn new() -> InternArena {
+        InternArena::with_counters(Arc::new(Counter::new()), Arc::new(Counter::new()))
+    }
+
+    /// An arena recording hit/allocation counts into caller-registered
+    /// counters (the `TuneContext` passes handles from its own metrics
+    /// registry so `--explain-space` reports exact per-context counts).
+    pub fn with_counters(hits: Arc<Counter>, allocated: Arc<Counter>) -> InternArena {
+        InternArena {
+            inner: RwLock::new(ArenaInner { index: HashMap::new(), nodes: Vec::new() }),
+            hits,
+            allocated,
+        }
+    }
+
+    /// Number of distinct instructions interned so far.
+    pub fn num_nodes(&self) -> usize {
+        self.inner.read().unwrap().nodes.len()
+    }
+
+    /// Lookups that resolved to an existing node.
+    pub fn hits(&self) -> u64 {
+        self.hits.get()
+    }
+
+    /// Intern one instruction, returning its canonical id.
+    pub fn intern_inst(&self, inst: &Inst) -> NodeId {
+        let fp = inst_fp(inst);
+        {
+            let g = self.inner.read().unwrap();
+            if let Some(id) = Self::lookup(&g, fp, inst) {
+                drop(g);
+                self.hits.inc();
+                return id;
+            }
+        }
+        let mut g = self.inner.write().unwrap();
+        // Re-check under the write lock: a racing interner may have won.
+        if let Some(id) = Self::lookup(&g, fp, inst) {
+            drop(g);
+            self.hits.inc();
+            return id;
+        }
+        assert!(g.nodes.len() < u32::MAX as usize, "intern arena exhausted u32 node ids");
+        let id = NodeId(g.nodes.len() as u32);
+        g.nodes.push(inst.clone());
+        g.index.entry(fp).or_default().push(id);
+        drop(g);
+        self.allocated.inc();
+        id
+    }
+
+    fn lookup(g: &ArenaInner, fp: u64, inst: &Inst) -> Option<NodeId> {
+        g.index
+            .get(&fp)?
+            .iter()
+            .copied()
+            .find(|id| inst_bits_eq(&g.nodes[id.0 as usize], inst))
+    }
+
+    /// Intern a whole trace: canonical id chain plus memoized sampling
+    /// indices, in one pass.
+    pub fn intern(&self, trace: &Trace) -> InternedTrace {
+        let mut ids = Vec::with_capacity(trace.insts.len());
+        let mut sampling = Vec::new();
+        let mut postproc = false;
+        for (i, inst) in trace.insts.iter().enumerate() {
+            if matches!(inst, Inst::EnterPostproc) {
+                postproc = true;
+            }
+            if !postproc && inst.is_sampling() {
+                sampling.push(i);
+            }
+            ids.push(self.intern_inst(inst));
+        }
+        InternedTrace { ids: ids.into(), sampling: sampling.into() }
+    }
+
+    /// Intern a single-decision mutation of `parent`: only the rewritten
+    /// instruction at `idx` is re-interned; the prefix/suffix ids and the
+    /// sampling-index list are shared with the parent. Falls back to a
+    /// full [`InternArena::intern`] if `mutated` is not actually a
+    /// same-shape single-instruction rewrite (defensive — the mutators
+    /// only ever change one decision in place).
+    pub fn intern_mutated(&self, parent: &InternedTrace, idx: usize, mutated: &Trace) -> InternedTrace {
+        if mutated.insts.len() != parent.ids.len() || idx >= mutated.insts.len() {
+            return self.intern(mutated);
+        }
+        let mut ids: Vec<NodeId> = parent.ids.to_vec();
+        ids[idx] = self.intern_inst(&mutated.insts[idx]);
+        let out = InternedTrace { ids: ids.into(), sampling: Arc::clone(&parent.sampling) };
+        #[cfg(debug_assertions)]
+        {
+            let full = self.intern(mutated);
+            debug_assert_eq!(
+                full.ids(),
+                out.ids(),
+                "intern_mutated: mutated trace differs from parent beyond instruction {idx}"
+            );
+            debug_assert_eq!(
+                full.sampling_indices(),
+                out.sampling_indices(),
+                "intern_mutated: decision rewrite changed the sampling-index set"
+            );
+        }
+        out
+    }
+
+    /// Reconstruct the concrete trace behind an id chain. Panics if an id
+    /// came from a different arena and is out of range.
+    pub fn materialize(&self, it: &InternedTrace) -> Trace {
+        let g = self.inner.read().unwrap();
+        Trace { insts: it.ids.iter().map(|id| g.nodes[id.0 as usize].clone()).collect() }
+    }
+
+    /// The instruction behind one node id, if it exists in this arena.
+    pub fn resolve(&self, id: NodeId) -> Option<Inst> {
+        self.inner.read().unwrap().nodes.get(id.0 as usize).cloned()
+    }
+}
+
+impl Default for InternArena {
+    fn default() -> Self {
+        InternArena::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::FactorArg;
+
+    fn sample_trace() -> Trace {
+        Trace {
+            insts: vec![
+                Inst::GetBlock { name: "matmul".into(), out: 0 },
+                Inst::GetLoops { block: 0, outs: vec![1, 2, 3] },
+                Inst::SamplePerfectTile {
+                    loop_rv: 1,
+                    n: 2,
+                    max_innermost: 16,
+                    outs: vec![4, 5],
+                    decision: vec![8, 16],
+                },
+                Inst::Split {
+                    loop_rv: 1,
+                    factors: vec![FactorArg::Rv(4), FactorArg::Rv(5)],
+                    outs: vec![6, 7],
+                },
+                Inst::EnterPostproc,
+                Inst::Parallel { loop_rv: 6 },
+            ],
+        }
+    }
+
+    #[test]
+    fn equal_insts_share_one_node() {
+        let arena = InternArena::new();
+        let a = Inst::GetBlock { name: "x".into(), out: 3 };
+        let b = Inst::GetBlock { name: "x".into(), out: 3 };
+        assert_eq!(arena.intern_inst(&a), arena.intern_inst(&b));
+        assert_eq!(arena.num_nodes(), 1);
+        assert_eq!(arena.hits(), 1);
+        let c = Inst::GetBlock { name: "x".into(), out: 4 };
+        assert_ne!(arena.intern_inst(&a), arena.intern_inst(&c));
+        assert_eq!(arena.num_nodes(), 2);
+    }
+
+    #[test]
+    fn intern_materialize_round_trips() {
+        let arena = InternArena::new();
+        let t = sample_trace();
+        let it = arena.intern(&t);
+        assert_eq!(arena.materialize(&it), t);
+        assert_eq!(it.len(), t.len());
+    }
+
+    #[test]
+    fn sampling_memo_matches_trace_scan() {
+        let arena = InternArena::new();
+        let t = sample_trace();
+        assert_eq!(arena.intern(&t).sampling_indices(), t.sampling_indices().as_slice());
+        // Sampling instruction after the postproc marker: excluded.
+        let mut post = sample_trace();
+        post.insts.push(Inst::SampleCategorical {
+            candidates: vec![0, 1],
+            probs: vec![0.5, 0.5],
+            out: 9,
+            decision: 0,
+        });
+        assert_eq!(arena.intern(&post).sampling_indices(), post.sampling_indices().as_slice());
+    }
+
+    #[test]
+    fn equal_traces_equal_chains_unequal_traces_differ() {
+        let arena = InternArena::new();
+        let a = arena.intern(&sample_trace());
+        let b = arena.intern(&sample_trace());
+        assert_eq!(a, b);
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        let mut other = sample_trace();
+        other.insts[5] = Inst::Vectorize { loop_rv: 6 };
+        let c = arena.intern(&other);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn intern_mutated_shares_prefix_and_suffix() {
+        let arena = InternArena::new();
+        let t = sample_trace();
+        let parent = arena.intern(&t);
+        let mut mutated = t.clone();
+        mutated.insts[2] = Inst::SamplePerfectTile {
+            loop_rv: 1,
+            n: 2,
+            max_innermost: 16,
+            outs: vec![4, 5],
+            decision: vec![16, 8],
+        };
+        let child = arena.intern_mutated(&parent, 2, &mutated);
+        assert_ne!(parent, child);
+        for (i, (p, c)) in parent.ids().iter().zip(child.ids()).enumerate() {
+            if i == 2 {
+                assert_ne!(p, c);
+            } else {
+                assert_eq!(p, c);
+            }
+        }
+        assert_eq!(arena.materialize(&child), mutated);
+        // Same chain as a from-scratch intern of the mutated trace.
+        assert_eq!(child, arena.intern(&mutated));
+    }
+
+    #[test]
+    fn nan_probs_intern_stably() {
+        // IEEE `NaN != NaN` must not defeat hash-consing: the same
+        // NaN-carrying instruction interns to one node, and bitwise-
+        // distinct NaN payloads stay distinct nodes.
+        let arena = InternArena::new();
+        let mk = |bits: u64| Inst::SampleCategorical {
+            candidates: vec![0, 1],
+            probs: vec![f64::from_bits(bits), 1.0],
+            out: 0,
+            decision: 1,
+        };
+        let quiet = f64::NAN.to_bits();
+        let a = arena.intern_inst(&mk(quiet));
+        let b = arena.intern_inst(&mk(quiet));
+        assert_eq!(a, b);
+        let payload = quiet | 1;
+        assert_ne!(a, arena.intern_inst(&mk(payload)));
+        // Negative zero is bitwise distinct from positive zero.
+        let z = Inst::SampleCategorical { candidates: vec![0], probs: vec![0.0], out: 0, decision: 0 };
+        let nz = Inst::SampleCategorical { candidates: vec![0], probs: vec![-0.0], out: 0, decision: 0 };
+        assert_ne!(arena.intern_inst(&z), arena.intern_inst(&nz));
+    }
+
+    #[test]
+    fn fresh_arenas_assign_identical_chains() {
+        // Same intern order, fresh arenas: identical id values — the
+        // cross-session canonical-id property the invariants suite
+        // exercises over real design spaces.
+        let a = InternArena::new();
+        let b = InternArena::new();
+        let traces = [sample_trace(), sample_trace()];
+        for t in &traces {
+            assert_eq!(a.intern(t).ids(), b.intern(t).ids());
+        }
+    }
+}

@@ -5,9 +5,11 @@
 //! be re-executed against the initial program, its sampling decisions can be
 //! overridden/mutated, and it serializes to a line-oriented text format.
 
+pub mod intern;
 pub mod replay;
 pub mod serde;
 
+pub use intern::{InternArena, InternedTrace, NodeId};
 pub use replay::{replay, replay_with_decisions};
 
 /// A `split` factor argument: either a previously-sampled expression RV or

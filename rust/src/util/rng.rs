@@ -109,9 +109,33 @@ impl Rng {
     }
 
     /// Sample an index according to (unnormalized, non-negative) weights.
+    ///
+    /// Degenerate vectors — a NaN/infinite/negative weight, or a total
+    /// that is not finite and positive — fall back to a uniform draw
+    /// instead of panicking or silently biasing toward the last index
+    /// (`SampleCategorical` probabilities come straight from database
+    /// traces, so hostile values do reach this path). Every fallback is
+    /// counted in the process-global `rng_weighted_fallback_total`
+    /// telemetry counter. Valid vectors draw exactly one `gen_f64`, the
+    /// same sequence as always; the degenerate path draws exactly one
+    /// `gen_range`, the same as the old all-zero fallback — so the fix
+    /// is RNG-for-RNG compatible in both arms.
     pub fn sample_weighted(&mut self, weights: &[f64]) -> usize {
-        let total: f64 = weights.iter().sum();
-        if total <= 0.0 {
+        let mut total = 0.0;
+        let mut degenerate = false;
+        for &w in weights {
+            if !w.is_finite() || w < 0.0 {
+                degenerate = true;
+                break;
+            }
+            total += w;
+        }
+        if degenerate || !total.is_finite() || total <= 0.0 {
+            weighted_fallback_counter().inc();
+            crate::log_debug!(
+                "sample_weighted: degenerate weight vector (len {}), falling back to uniform",
+                weights.len()
+            );
             return self.gen_range(weights.len().max(1));
         }
         let mut u = self.gen_f64() * total;
@@ -136,6 +160,21 @@ impl Rng {
             xs.swap(i, j);
         }
     }
+}
+
+/// Process-global count of degenerate weight vectors that fell back to a
+/// uniform draw. The handle is cached (`OnceLock`) so the hot sampling
+/// path never touches the registry mutex; the counter itself is a relaxed
+/// atomic, so counting cannot perturb determinism.
+fn weighted_fallback_counter() -> &'static std::sync::Arc<crate::telemetry::Counter> {
+    static COUNTER: std::sync::OnceLock<std::sync::Arc<crate::telemetry::Counter>> =
+        std::sync::OnceLock::new();
+    COUNTER.get_or_init(|| {
+        crate::telemetry::global().counter(
+            "rng_weighted_fallback_total",
+            "degenerate weight vectors (non-finite or non-positive) sampled uniformly instead",
+        )
+    })
 }
 
 #[cfg(test)]
@@ -217,6 +256,61 @@ mod tests {
         }
         let ratio = counts[1] as f64 / counts[0] as f64;
         assert!((2.5..3.5).contains(&ratio), "ratio={ratio}");
+    }
+
+    #[test]
+    fn degenerate_weights_fall_back_to_uniform() {
+        // NaN, infinite, negative, and all-zero weight vectors must
+        // return a valid uniform index (never panic, never silently
+        // favor the last index) and bump the fallback counter.
+        let before = crate::telemetry::global()
+            .counter_value("rng_weighted_fallback_total")
+            .unwrap_or(0);
+        let mut r = Rng::seed_from_u64(17);
+        let vectors: [&[f64]; 5] = [
+            &[f64::NAN, 1.0, 1.0],
+            &[f64::INFINITY, 1.0],
+            &[-1.0, 0.5, 0.5],
+            &[0.0, 0.0, 0.0],
+            &[1.0, f64::NEG_INFINITY],
+        ];
+        let mut seen = [false; 3];
+        for _ in 0..200 {
+            for v in vectors {
+                let i = r.sample_weighted(v);
+                assert!(i < v.len(), "index {i} out of range for {v:?}");
+                if v.len() == 3 {
+                    seen[i] = true;
+                }
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "uniform fallback never hit some index: {seen:?}");
+        let after = crate::telemetry::global()
+            .counter_value("rng_weighted_fallback_total")
+            .unwrap_or(0);
+        assert!(after >= before + 1000, "fallbacks not counted: {before} -> {after}");
+    }
+
+    #[test]
+    fn valid_weights_draw_the_same_sequence_as_before() {
+        // The degenerate-input fix must not change the draw sequence for
+        // valid vectors: one gen_f64 per call, bit-identical results.
+        let mut a = Rng::seed_from_u64(23);
+        let mut b = Rng::seed_from_u64(23);
+        for _ in 0..500 {
+            let i = a.sample_weighted(&[0.2, 0.3, 0.5]);
+            let mut u = b.gen_f64() * 1.0;
+            let mut expect = 2;
+            for (j, w) in [0.2, 0.3, 0.5].iter().enumerate() {
+                u -= w;
+                if u <= 0.0 {
+                    expect = j;
+                    break;
+                }
+            }
+            assert_eq!(i, expect);
+        }
+        assert_eq!(a.next_u64(), b.next_u64(), "RNG state diverged");
     }
 
     #[test]

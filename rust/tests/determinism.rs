@@ -281,6 +281,67 @@ fn telemetry_never_changes_results_or_database_bytes() {
 }
 
 #[test]
+fn feature_cache_never_changes_results_or_database_bytes() {
+    // The per-canonical-trace feature cache is a pure accelerator:
+    // cached vectors are element-exact copies of fresh extractions, so
+    // toggling the cache (the `--no-feature-cache` escape hatch) must
+    // leave the search outcome and the committed on-disk database
+    // byte-identical, at any thread count. The warm cold-run guarantee
+    // is checked too: with the cache on, round-1 rescoring of round-0
+    // measured elites must actually hit.
+    use metaschedule::db::JsonFileDb;
+
+    let dir = std::env::temp_dir().join(format!("ms-featcache-determinism-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+
+    let target = Target::cpu_avx512();
+    let prog = workloads::matmul(1, 128, 128, 128);
+    let run = |tag: &str, threads: usize, cache_on: bool| {
+        let ctx = TuneContext::generic(target.clone());
+        ctx.set_feature_cache_enabled(cache_on);
+        let db_path = dir.join(format!("{tag}.db.jsonl"));
+        let mut db = JsonFileDb::open(&db_path).unwrap();
+        let mut model = GbtCostModel::new();
+        let mut measurer = SimMeasurer::new(target.clone());
+        let res = EvolutionarySearch::new(cfg(32, threads)).tune_db(
+            &prog,
+            &ctx,
+            &mut model,
+            &mut measurer,
+            &mut db,
+            29,
+        );
+        let hits = ctx.feature_cache().map(|c| c.hits()).unwrap_or(0);
+        if cache_on {
+            assert!(hits > 0, "{tag}: cache enabled but never hit");
+        } else {
+            assert!(ctx.feature_cache().is_none(), "{tag}: cache should be disabled");
+        }
+        drop(db);
+        (res, std::fs::read(&db_path).unwrap())
+    };
+
+    let (base, base_bytes) = run("cache-on-t1", 1, true);
+    for (tag, threads, cache_on) in [
+        ("cache-on-t4", 4, true),
+        ("cache-off-t1", 1, false),
+        ("cache-off-t4", 4, false),
+    ] {
+        let (r, bytes) = run(tag, threads, cache_on);
+        assert_eq!(base.best_latency_s, r.best_latency_s, "{tag} diverged");
+        assert_eq!(base.curve, r.curve, "{tag} curve diverged");
+        assert_eq!(
+            trace_to_text(&base.best_trace),
+            trace_to_text(&r.best_trace),
+            "{tag} best trace diverged"
+        );
+        assert_eq!(base_bytes, bytes, "{tag} produced different database bytes");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
 fn repeated_runs_are_reproducible() {
     // Same seed, same thread count, run twice: byte-identical output (no
     // hidden global state, no time dependence).

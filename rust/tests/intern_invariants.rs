@@ -1,0 +1,227 @@
+//! Invariants of the hash-consed trace IR (`trace::intern`) and the
+//! per-canonical-trace feature cache built on it:
+//!
+//! 1. Interning round-trips every `Inst` variant byte-for-byte through
+//!    the canonical `trace::serde` text form.
+//! 2. Structurally equal traces get identical id chains — including
+//!    across "sessions" (independent arenas), since assignment is a pure
+//!    function of intern order.
+//! 3. The memoized sampling-index list always equals a fresh
+//!    `Trace::sampling_indices` scan (the list the mutators consume).
+//! 4. The single-node rewrite (`intern_mutated`, via
+//!    `TuneContext::mutate_interned`) equals a full re-intern.
+//! 5. The feature cache never changes `extract_batch` output: cached and
+//!    uncached vectors are element-exact equal.
+
+use metaschedule::cost_model::{extract_batch, FeatKey, FeatureCache};
+use metaschedule::ctx::TuneContext;
+use metaschedule::sim::Target;
+use metaschedule::telemetry::Metrics;
+use metaschedule::tir::structural_hash;
+use metaschedule::trace::serde::{inst_to_line, text_to_trace, trace_to_text};
+use metaschedule::trace::{FactorArg, Inst, InternArena, Trace};
+use metaschedule::util::prop::{check, PropConfig};
+use metaschedule::util::rng::Rng;
+use metaschedule::workloads;
+
+fn cfg(cases: usize) -> PropConfig {
+    PropConfig {
+        cases,
+        ..PropConfig::default()
+    }
+}
+
+/// One instance of every `Inst` variant (31 as of this writing — the
+/// count assertion below fails if a new variant is added without
+/// extending this list).
+fn every_variant() -> Vec<Inst> {
+    vec![
+        Inst::GetBlock { name: "matmul".into(), out: 0 },
+        Inst::GetLoops { block: 0, outs: vec![1, 2, 3] },
+        Inst::GetProducers { block: 0, outs: vec![4] },
+        Inst::GetConsumers { block: 0, outs: vec![5] },
+        Inst::SamplePerfectTile {
+            loop_rv: 1,
+            n: 2,
+            max_innermost: 16,
+            outs: vec![6, 7],
+            decision: vec![8, 16],
+        },
+        Inst::SampleCategorical {
+            candidates: vec![0, 16, 64],
+            probs: vec![0.25, 0.5, 0.25],
+            out: 8,
+            decision: 1,
+        },
+        Inst::SampleComputeLocation { block: 0, out: 9, decision: -1 },
+        Inst::Split {
+            loop_rv: 1,
+            factors: vec![FactorArg::Rv(6), FactorArg::Lit(4)],
+            outs: vec![10, 11],
+        },
+        Inst::Fuse { loops: vec![10, 11], out: 12 },
+        Inst::Reorder { loops: vec![12, 2] },
+        Inst::Parallel { loop_rv: 12 },
+        Inst::Vectorize { loop_rv: 2 },
+        Inst::Unroll { loop_rv: 3 },
+        Inst::Bind { loop_rv: 2, thread: "threadIdx.x".into() },
+        Inst::AddUnitLoop { block: 0, out: 13 },
+        Inst::CacheRead { block: 0, read_idx: 0, scope: "shared".into(), out: 14 },
+        Inst::CacheWrite { block: 0, write_idx: 0, scope: "local".into(), out: 15 },
+        Inst::SetScope { block: 0, write_idx: 0, scope: "global".into() },
+        Inst::StorageAlign { block: 0, write_idx: 0, axis: 1, factor: 32 },
+        Inst::ComputeAt { block: 0, loop_rv: 2 },
+        Inst::ReverseComputeAt { block: 0, loop_rv: 2 },
+        Inst::ComputeInline { block: 0 },
+        Inst::ReverseComputeInline { block: 0 },
+        Inst::RFactor { block: 0, loop_rv: 3, out: 16 },
+        Inst::DecomposeReduction { block: 0, loop_rv: 3, out: 17 },
+        Inst::Blockize { loop_rv: 2, out: 18 },
+        Inst::Tensorize { loop_rv: 2, intrin: "wmma-16x16x16".into(), out: 19 },
+        Inst::AnnotateBlock {
+            block: 0,
+            key: "meta-schedule-tiling".into(),
+            value: "SSRSRS".into(),
+        },
+        Inst::AnnotateLoop {
+            loop_rv: 2,
+            key: "auto-unroll-max-step".into(),
+            value: "64".into(),
+        },
+        Inst::UnannotateBlock { block: 0, key: "meta-schedule-tiling".into() },
+        Inst::EnterPostproc,
+    ]
+}
+
+#[test]
+fn interning_round_trips_every_inst_variant_byte_for_byte() {
+    let insts = every_variant();
+    // Completeness guard: one line per distinct opcode.
+    let opcodes: std::collections::HashSet<&str> = insts.iter().map(|i| i.opcode()).collect();
+    assert_eq!(opcodes.len(), 31, "every_variant() must cover all Inst variants");
+
+    let trace = Trace { insts };
+    let arena = InternArena::new();
+    let interned = arena.intern(&trace);
+    let back = arena.materialize(&interned);
+    assert_eq!(back, trace);
+    // Byte-for-byte through the canonical serde text (the same function
+    // interning fingerprints with).
+    for (orig, round) in trace.insts.iter().zip(back.insts.iter()) {
+        assert_eq!(inst_to_line(orig), inst_to_line(round));
+    }
+    // And through the full text format: parse(text(trace)) interns to
+    // the identical chain.
+    let reparsed = text_to_trace(&trace_to_text(&trace)).expect("canonical text parses");
+    assert_eq!(arena.intern(&reparsed), interned);
+}
+
+#[test]
+fn equal_traces_intern_to_identical_chains_across_sessions() {
+    // Two independent arenas fed the same real design spaces in the same
+    // order assign the identical chains — what "canonical across
+    // sessions" means. Inequality must also agree with trace inequality.
+    let ctx = TuneContext::generic(Target::cpu_avx512());
+    check(
+        cfg(12),
+        |rng| rng.next_u64(),
+        |&seed| {
+            let prog = workloads::matmul(1, 64, 64, 64);
+            let designs = ctx.generate(&prog, seed);
+            let a = InternArena::new();
+            let b = InternArena::new();
+            for (i, x) in designs.iter().enumerate() {
+                let ia = a.intern(&x.trace);
+                let ib = b.intern(&x.trace);
+                if ia.ids() != ib.ids() {
+                    return Err("fresh arenas disagree on a chain".into());
+                }
+                for y in designs.iter().skip(i + 1) {
+                    let same_chain = ia == a.intern(&y.trace);
+                    if same_chain != (x.trace == y.trace) {
+                        return Err("chain equality diverges from trace equality".into());
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn sampling_memo_always_matches_a_fresh_scan() {
+    let ctx = TuneContext::generic(Target::cpu_avx512());
+    let arena = InternArena::new();
+    check(
+        cfg(10),
+        |rng| rng.next_u64(),
+        |&seed| {
+            let prog = workloads::fused_dense(64, 128, 64);
+            let mut rng = Rng::seed_from_u64(seed);
+            for s in ctx.generate(&prog, seed) {
+                let it = arena.intern(&s.trace);
+                if it.sampling_indices() != s.trace.sampling_indices().as_slice() {
+                    return Err("memoized sampling indices diverge".into());
+                }
+                // Mutated traces must keep the memo in sync too.
+                if let Some(m) = ctx.mutate(&s.trace, &prog, &mut rng, seed) {
+                    let im = arena.intern(&m.trace);
+                    if im.sampling_indices() != m.trace.sampling_indices().as_slice() {
+                        return Err("memo diverges after mutation".into());
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn single_node_rewrite_equals_full_reintern() {
+    // `mutate_interned` rewrites one decision node in place; the result
+    // must be indistinguishable from interning the mutated trace from
+    // scratch (ids AND materialized instructions), in release builds too.
+    let ctx = TuneContext::generic(Target::cpu_avx512());
+    let prog = workloads::matmul(1, 128, 128, 128);
+    let mut rng = Rng::seed_from_u64(11);
+    let mut rewrites = 0usize;
+    for s in ctx.generate(&prog, 11) {
+        let parent = ctx.intern_trace(&s.trace);
+        for seed in 0..8u64 {
+            if let Some((sch, child)) = ctx.mutate_interned(&parent, &s.trace, &prog, &mut rng, seed)
+            {
+                rewrites += 1;
+                assert_eq!(child, ctx.intern_trace(&sch.trace));
+                assert_eq!(ctx.arena().materialize(&child), sch.trace);
+                assert_eq!(
+                    child.sampling_indices(),
+                    sch.trace.sampling_indices().as_slice()
+                );
+            }
+        }
+    }
+    assert!(rewrites > 0, "design space produced no successful mutations");
+}
+
+#[test]
+fn feature_cache_never_changes_extract_batch_output() {
+    // Cold pass (all misses), warm pass (all hits): both element-exact
+    // equal to the uncached batch extraction the search used to do.
+    let ctx = TuneContext::generic(Target::cpu_avx512());
+    let prog = workloads::fused_dense(64, 128, 64);
+    let wl = structural_hash(&prog);
+    let metrics = Metrics::new();
+    let cache = FeatureCache::new(&metrics);
+    let designs = ctx.generate(&prog, 7);
+    let progs: Vec<&metaschedule::tir::Program> = designs.iter().map(|s| &s.prog).collect();
+    let uncached = extract_batch(&progs);
+    for pass in 0..2 {
+        for (s, want) in designs.iter().zip(uncached.iter()) {
+            let key = FeatKey { workload: wl, trace: ctx.intern_trace(&s.trace) };
+            let got = cache.get_or_extract(&key, &s.prog);
+            assert_eq!(got.as_ref(), want, "pass {pass}: cached vector differs");
+        }
+    }
+    assert_eq!(cache.misses(), designs.len() as u64);
+    assert_eq!(cache.hits(), designs.len() as u64);
+}
