@@ -1,12 +1,20 @@
 //! Figure 9 reproduction: end-to-end deep learning models.
-//! {BERT-base, ResNet-50, MobileNet-v2} x {PyTorch, TVM, MetaSchedule},
-//! CPU and GPU.
+//! {BERT-base, ResNet-50, MobileNet-v2} x {PyTorch, TVM, MetaSchedule,
+//! MetaSchedule-fused}, CPU and GPU.
 //!
 //! ```sh
 //! cargo bench --bench fig9_e2e -- --trials 32
+//! cargo bench --bench fig9_e2e -- --fused-smoke [--model bert-base] [--trials 8]
 //! ```
+//!
+//! `--fused-smoke` is the CI arm: it tunes one model's per-op and
+//! graph-fused task sets under the SAME total trial budget (per-op gets
+//! `trials` per task; the fused arm's fewer tasks split the identical
+//! total), asserts the fused end-to-end latency is no worse, and writes
+//! the comparison to `BENCH_e2e.json`.
 
 use metaschedule::exp::{fig9, ExpConfig};
+use metaschedule::graph;
 use metaschedule::sim::Target;
 use metaschedule::util::cli::Args;
 
@@ -19,10 +27,71 @@ fn main() {
         db_path: args.flag("db").map(String::from),
         ..ExpConfig::default()
     };
+    if args.has_switch("fused-smoke") {
+        fused_smoke(&args, &cfg);
+        return;
+    }
     for target in [Target::cpu_avx512(), Target::gpu()] {
         let report = fig9::run(&target, &cfg, None);
         report.print();
         let _ = report.write("bench_results.jsonl");
     }
     println!("(rows appended to bench_results.jsonl)");
+}
+
+fn fused_smoke(args: &Args, cfg: &ExpConfig) {
+    let model = args.flag_or("model", "bert-base");
+    let target = Target::cpu_avx512();
+    let g = graph::graph_by_name(&model).unwrap_or_else(|| {
+        eprintln!("fused-smoke: unknown model {model}");
+        std::process::exit(2);
+    });
+    let per_op_tasks = graph::extract_tasks(&g.ops());
+    let groups = graph::fuse(&g);
+    let fused_tasks = graph::extract_fused_tasks(&g);
+    println!("{}", graph::summarize(&groups));
+    assert!(
+        fused_tasks.len() < per_op_tasks.len(),
+        "fusion must shrink the task set: {} fused vs {} per-op",
+        fused_tasks.len(),
+        per_op_tasks.len()
+    );
+    // Same TOTAL budget for both arms: per-op spends `trials` per task;
+    // the fused arm splits the identical total over its fewer tasks.
+    let total = cfg.trials * per_op_tasks.len();
+    let arm_cfg = |suffix: &str, trials: usize| ExpConfig {
+        trials,
+        db_path: cfg.db_path.as_ref().map(|p| format!("{p}.{suffix}")),
+        ..cfg.clone()
+    };
+    let per_op = fig9::metaschedule_e2e(&model, &target, &arm_cfg("perop", cfg.trials));
+    let fused = fig9::metaschedule_fused_e2e(
+        &model,
+        &target,
+        &arm_cfg("fused", total / fused_tasks.len()),
+    );
+    println!(
+        "{model} on {}: per-op e2e {:.3} ms ({} tasks) vs fused e2e {:.3} ms ({} tasks), {:.3}x",
+        target.name,
+        per_op * 1e3,
+        per_op_tasks.len(),
+        fused * 1e3,
+        fused_tasks.len(),
+        per_op / fused
+    );
+    let json = format!(
+        "{{\"model\":\"{model}\",\"target\":\"{}\",\"total_trials\":{total},\
+         \"per_op_tasks\":{},\"fused_tasks\":{},\"per_op_e2e_s\":{per_op},\"fused_e2e_s\":{fused}}}\n",
+        target.name,
+        per_op_tasks.len(),
+        fused_tasks.len()
+    );
+    std::fs::write("BENCH_e2e.json", json).expect("write BENCH_e2e.json");
+    println!("(comparison written to BENCH_e2e.json)");
+    // Fusion removes whole-tensor round trips between ops; that structural
+    // advantage must survive search noise (2% headroom for tie cases).
+    assert!(
+        fused <= per_op * 1.02,
+        "fused e2e {fused} must be <= per-op e2e {per_op}"
+    );
 }

@@ -20,8 +20,8 @@ use crate::ctx::mutators::{CategoricalRedraw, ComputeLocationMove, Mutator, Muta
 use crate::ctx::postproc::{Postproc, SimValidity, VerifyIntegrity};
 use crate::sim::{Target, TargetKind};
 use crate::space::{
-    AddRfactor, AutoInline, CrossThreadReduction, MultiLevelTiling, ParallelVectorizeUnroll,
-    RandomComputeLocation, ScheduleRule, ThreadBind, UseTensorCore,
+    AddRfactor, AutoInline, CrossThreadReduction, LayoutRewrite, MultiLevelTiling,
+    ParallelVectorizeUnroll, RandomComputeLocation, ScheduleRule, ThreadBind, UseTensorCore,
 };
 
 /// Per-target default rule lists — the Figure 5 generic composition,
@@ -136,6 +136,7 @@ impl RegistrySet {
         rules.register("thread-bind", |_| Box::new(ThreadBind::new()) as Box<dyn ScheduleRule>);
         rules.register("use-tensor-core", |_| Box::new(UseTensorCore::wmma()) as Box<dyn ScheduleRule>);
         rules.register("use-tensor-core-mxu", |_| Box::new(UseTensorCore::mxu()) as Box<dyn ScheduleRule>);
+        rules.register("layout-rewrite", |_| Box::new(LayoutRewrite::new()) as Box<dyn ScheduleRule>);
 
         let mut mutators: Registry<dyn Mutator> = Registry::new();
         mutators.register("tile-transfer", |_| Box::new(TileTransfer) as Box<dyn Mutator>);

@@ -35,6 +35,10 @@ pub fn compositions() -> Vec<(&'static str, &'static str)> {
             "+use-tensor-core",
             "auto-inline,use-tensor-core,multi-level-tiling,cross-thread-reduction,random-compute-location,thread-bind",
         ),
+        (
+            "+layout-rewrite",
+            "auto-inline,use-tensor-core,layout-rewrite,multi-level-tiling,cross-thread-reduction,random-compute-location,thread-bind",
+        ),
     ]
 }
 
@@ -144,7 +148,7 @@ mod tests {
         let cfg = ExpConfig { trials: 40, seed: 11, ..ExpConfig::default() };
         let r = run_10a(&cfg);
         let ws = r.workloads();
-        assert_eq!(ws.len(), 5);
+        assert_eq!(ws.len(), 6);
         let first = r.latency(&ws[0], "MetaSchedule").unwrap();
         let tiled = r.latency("+multi-level-tiling", "MetaSchedule").unwrap();
         let tc = r.latency("+use-tensor-core", "MetaSchedule").unwrap();
@@ -172,8 +176,20 @@ mod tests {
         // names in the same order (the +use-tensor-core arm is the old
         // `with_tensor_core` insertion point).
         let target = Target::gpu();
-        let (_, last_spec) = compositions().pop().unwrap();
-        let ctx = TuneContext::from_specs(target.clone(), last_spec, "default", "default").unwrap();
+        let (_, tc_spec) = compositions()
+            .into_iter()
+            .find(|(name, _)| *name == "+use-tensor-core")
+            .unwrap();
+        let ctx = TuneContext::from_specs(target.clone(), tc_spec, "default", "default").unwrap();
         assert_eq!(ctx.rule_set(), TuneContext::with_tensor_core(target).rule_set());
+    }
+
+    #[test]
+    fn fig10a_layout_rewrite_arm_resolves_and_extends_tc() {
+        let target = Target::gpu();
+        let (name, spec) = compositions().pop().unwrap();
+        assert_eq!(name, "+layout-rewrite");
+        let ctx = TuneContext::from_specs(target, spec, "default", "default").unwrap();
+        assert!(ctx.rule_set().contains("layout-rewrite"), "{}", ctx.rule_set());
     }
 }

@@ -1,0 +1,234 @@
+//! Operator DAG: the graph-level IR above per-op `Program`s.
+//!
+//! A model is an [`OpGraph`]: nodes wrap a tensor program plus its repeat
+//! count, edges are producer → consumer dataflow, and every node carries a
+//! [`FusionKind`] classified from its TIR block structure (the TVM
+//! four-class scheme). The flat `OpList` the rest of the system consumes
+//! is a lossless projection ([`OpGraph::ops`]); the fusion pass in
+//! [`crate::graph::fusion`] consumes the edges.
+
+use crate::tir::{BlockBody, Program};
+
+/// The TVM operator-fusion classification, derived here from block
+/// structure instead of an operator registry:
+///
+/// | kind              | structural test                                    |
+/// |-------------------|----------------------------------------------------|
+/// | `Opaque`          | any block body is `BlockBody::Opaque`              |
+/// | `ComplexOutFusable` | any block is matmul-like (MAC reduction, ≥2 spatial, ≥1 reduce) |
+/// | `Reduction`       | any block reduces (and none is matmul-like)        |
+/// | `Injective`       | everything else (elementwise / broadcast / copy)   |
+///
+/// Precedence is top-to-bottom: a program with a conv block *and* an
+/// elementwise epilogue is complex-out-fusable, not injective.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FusionKind {
+    /// Elementwise / broadcast / data-movement: fuses with anything
+    /// adjacent of equal repeat count.
+    Injective,
+    /// Contains a reduction (softmax, norm): absorbs injective inputs,
+    /// but its own output does not fuse forward.
+    Reduction,
+    /// Matmul/conv-class anchor: absorbs elementwise epilogues
+    /// (conv+bias+relu), never fuses into another complex op.
+    ComplexOutFusable,
+    /// Unknown internals: a hard fusion boundary on both sides.
+    Opaque,
+}
+
+impl FusionKind {
+    /// Stable lowercase label (metrics suffixes, reports).
+    pub fn label(&self) -> &'static str {
+        match self {
+            FusionKind::Injective => "injective",
+            FusionKind::Reduction => "reduction",
+            FusionKind::ComplexOutFusable => "complex",
+            FusionKind::Opaque => "opaque",
+        }
+    }
+}
+
+/// Classify a program by inspecting its live blocks (see [`FusionKind`]).
+pub fn classify(prog: &Program) -> FusionKind {
+    let blocks = prog.blocks();
+    if blocks
+        .iter()
+        .any(|&b| matches!(prog.block_data(b).body, BlockBody::Opaque { .. }))
+    {
+        return FusionKind::Opaque;
+    }
+    if blocks
+        .iter()
+        .any(|&b| crate::space::analysis::is_matmul_like(prog, b))
+    {
+        return FusionKind::ComplexOutFusable;
+    }
+    if blocks.iter().any(|&b| prog.block_data(b).is_reduction()) {
+        return FusionKind::Reduction;
+    }
+    FusionKind::Injective
+}
+
+/// The parameter buffer a program's dataflow terminates in: written by
+/// some block, read by none. Returns `None` when the program has no such
+/// buffer (or several candidates would be ambiguous — we take the last in
+/// buffer order, matching builder convention of pushing outputs last).
+pub fn output_buffer(prog: &Program) -> Option<usize> {
+    prog.params
+        .iter()
+        .copied()
+        .filter(|&b| !prog.writers_of(b).is_empty() && prog.readers_of(b).is_empty())
+        .last()
+}
+
+/// Parameter buffers a program only reads (its true inputs), in buffer
+/// order.
+pub fn input_buffers(prog: &Program) -> Vec<usize> {
+    prog.params
+        .iter()
+        .copied()
+        .filter(|&b| prog.writers_of(b).is_empty() && !prog.readers_of(b).is_empty())
+        .collect()
+}
+
+/// One operator occurrence in the graph.
+#[derive(Debug, Clone)]
+pub struct OpNode {
+    pub prog: Program,
+    /// Repeat count (e.g. 12 for a per-layer op in BERT-base).
+    pub count: usize,
+    pub kind: FusionKind,
+}
+
+/// A model as an operator DAG. Node indices are stable (insertion order);
+/// edges mean "producer's output tensor feeds consumer".
+#[derive(Debug, Clone, Default)]
+pub struct OpGraph {
+    nodes: Vec<OpNode>,
+    succ: Vec<Vec<usize>>,
+    pred: Vec<Vec<usize>>,
+}
+
+impl OpGraph {
+    pub fn new() -> OpGraph {
+        OpGraph::default()
+    }
+
+    /// Append a node; its [`FusionKind`] is classified on insertion.
+    pub fn add(&mut self, prog: Program, count: usize) -> usize {
+        let kind = classify(&prog);
+        self.nodes.push(OpNode { prog, count, kind });
+        self.succ.push(Vec::new());
+        self.pred.push(Vec::new());
+        self.nodes.len() - 1
+    }
+
+    /// Record a producer → consumer dataflow edge. Duplicate edges are
+    /// collapsed; self-edges are rejected (a DAG node cannot feed itself).
+    pub fn connect(&mut self, producer: usize, consumer: usize) {
+        assert!(producer < self.nodes.len() && consumer < self.nodes.len(), "edge out of range");
+        assert_ne!(producer, consumer, "self-edge");
+        if !self.succ[producer].contains(&consumer) {
+            self.succ[producer].push(consumer);
+            self.pred[consumer].push(producer);
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    pub fn node(&self, i: usize) -> &OpNode {
+        &self.nodes[i]
+    }
+
+    pub fn nodes(&self) -> &[OpNode] {
+        &self.nodes
+    }
+
+    /// Consumers of node `i`, in edge insertion order.
+    pub fn consumers(&self, i: usize) -> &[usize] {
+        &self.succ[i]
+    }
+
+    /// Producers of node `i`, in edge insertion order.
+    pub fn producers(&self, i: usize) -> &[usize] {
+        &self.pred[i]
+    }
+
+    /// Lossless flat projection: every node as a `(program, count)` entry
+    /// in insertion order. This is what every pre-graph caller consumes;
+    /// only the edges are dropped.
+    pub fn ops(&self) -> super::OpList {
+        self.nodes.iter().map(|n| (n.prog.clone(), n.count)).collect()
+    }
+
+    /// Lift a flat op list into an edge-free graph (fusion over it is the
+    /// identity grouping — used for idempotence and by callers that have
+    /// no dataflow information).
+    pub fn from_ops(ops: &super::OpList) -> OpGraph {
+        let mut g = OpGraph::new();
+        for (p, c) in ops {
+            g.add(p.clone(), *c);
+        }
+        g
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads;
+
+    #[test]
+    fn classify_four_classes() {
+        assert_eq!(classify(&workloads::dense(8, 8, 8)), FusionKind::ComplexOutFusable);
+        assert_eq!(
+            classify(&workloads::conv2d(workloads::Conv2dParams::new(1, 8, 8, 3, 4, 3, 1, 1))),
+            FusionKind::ComplexOutFusable
+        );
+        // fused_dense has an elementwise epilogue but the dense anchor wins.
+        assert_eq!(classify(&workloads::fused_dense(8, 8, 8)), FusionKind::ComplexOutFusable);
+        assert_eq!(classify(&workloads::softmax(1, 8, 8)), FusionKind::Reduction);
+        assert_eq!(classify(&workloads::norm(1, 8, 8)), FusionKind::Reduction);
+        assert_eq!(classify(&workloads::add2d(8, 8)), FusionKind::Injective);
+        assert_eq!(classify(&workloads::relu(64)), FusionKind::Injective);
+        // An opaque block forces the opaque class.
+        let mut p = workloads::relu(64);
+        let b = p.find_block("relu").unwrap();
+        p.block_data_mut(b).body = BlockBody::Opaque { flops_per_instance: 1.0 };
+        assert_eq!(classify(&p), FusionKind::Opaque);
+    }
+
+    #[test]
+    fn io_buffer_analysis() {
+        let p = workloads::fused_dense(8, 16, 8);
+        // Out is the terminal param (Y is written AND read internally).
+        let out = output_buffer(&p).unwrap();
+        assert_eq!(p.buffers[out].name, "Out");
+        let ins = input_buffers(&p);
+        let names: Vec<&str> = ins.iter().map(|&b| p.buffers[b].name.as_str()).collect();
+        assert_eq!(names, vec!["X", "W", "Bias"]);
+    }
+
+    #[test]
+    fn graph_edges_and_projection() {
+        let mut g = OpGraph::new();
+        let a = g.add(workloads::dense(8, 8, 8), 2);
+        let b = g.add(workloads::add2d(8, 8), 2);
+        g.connect(a, b);
+        g.connect(a, b); // duplicate collapses
+        assert_eq!(g.consumers(a), &[b]);
+        assert_eq!(g.producers(b), &[a]);
+        let ops = g.ops();
+        assert_eq!(ops.len(), 2);
+        assert_eq!(ops[0].1, 2);
+        let lifted = OpGraph::from_ops(&ops);
+        assert_eq!(lifted.len(), 2);
+        assert!(lifted.consumers(0).is_empty());
+    }
+}

@@ -1,0 +1,490 @@
+//! Deterministic operator fusion over an [`OpGraph`] (the TVM four-class
+//! rules, adapted to linear chains):
+//!
+//! 1. reductions absorb their single-consumer injective *producer*
+//!    chains (add → layernorm);
+//! 2. complex-out-fusable anchors absorb injective *consumer* chains —
+//!    elementwise epilogues (conv → residual-add, dense → bias → relu);
+//! 3. remaining adjacent injective pairs fuse;
+//! 4. opaque nodes never merge on either side.
+//!
+//! A merge additionally requires equal repeat counts and a shape-exact
+//! buffer binding between the adjacent programs, so every fused group is
+//! a linear chain that re-emits as one valid `Program`
+//! ([`fuse_group_program`]). The pass is pure over the graph — same input,
+//! same groups — and idempotent: fusing a graph built from fused outputs
+//! (no edges) yields singleton groups.
+
+use std::collections::HashMap;
+
+use crate::graph::dag::{input_buffers, output_buffer, FusionKind, OpGraph};
+use crate::search::Task;
+use crate::telemetry;
+use crate::tir::{rd, sp, structural_hash, AExpr, Axis, BlockBody, CExpr, IterKind, Program, Region};
+
+/// A fused group: a producer-ordered chain of node indices that tune as
+/// one program, repeated `count` times in the model.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FusedGroup {
+    /// Member node indices in dataflow order (producer first).
+    pub members: Vec<usize>,
+    /// Repeat count (all members of a group have the same count).
+    pub count: usize,
+    /// The group's dominant class (complex > reduction > injective;
+    /// opaque groups are always singletons).
+    pub kind: FusionKind,
+}
+
+impl FusedGroup {
+    /// Original op occurrences this group covers (`count * members`):
+    /// summing over all groups must equal the graph's total op weight.
+    pub fn op_weight(&self) -> usize {
+        self.count * self.members.len()
+    }
+}
+
+/// The consumer input buffer that binds to `producer`'s output: the first
+/// read-only param of `consumer` whose shape equals the producer's
+/// terminal output shape. `None` means the pair cannot fuse.
+fn bind_input(producer: &Program, consumer: &Program) -> Option<usize> {
+    let out = output_buffer(producer)?;
+    let shape = &producer.buffers[out].shape;
+    input_buffers(consumer)
+        .into_iter()
+        .find(|&b| &consumer.buffers[b].shape == shape)
+}
+
+/// Whether ungrouped node `cand` may join a chain ending (or starting) at
+/// `anchor`'s group: equal counts and a valid adjacent binding.
+fn mergeable(g: &OpGraph, producer: usize, consumer: usize) -> bool {
+    g.node(producer).count == g.node(consumer).count
+        && bind_input(&g.node(producer).prog, &g.node(consumer).prog).is_some()
+}
+
+fn group_kind(g: &OpGraph, members: &[usize]) -> FusionKind {
+    if members.len() == 1 {
+        return g.node(members[0]).kind;
+    }
+    if members.iter().any(|&m| g.node(m).kind == FusionKind::ComplexOutFusable) {
+        FusionKind::ComplexOutFusable
+    } else if members.iter().any(|&m| g.node(m).kind == FusionKind::Reduction) {
+        FusionKind::Reduction
+    } else {
+        FusionKind::Injective
+    }
+}
+
+/// Run the fusion pass. Deterministic: nodes are visited in index order
+/// and merges never depend on hash iteration; calling it twice on the
+/// same graph yields identical groups.
+pub fn fuse(g: &OpGraph) -> Vec<FusedGroup> {
+    let n = g.len();
+    let mut chain_of: Vec<usize> = (0..n).collect();
+    let mut chains: Vec<Vec<usize>> = (0..n).map(|i| vec![i]).collect();
+    let ungrouped = |chains: &[Vec<usize>], chain_of: &[usize], i: usize| chains[chain_of[i]].len() == 1;
+
+    // Pass 1: reductions absorb single-consumer injective producer chains.
+    for i in 0..n {
+        if g.node(i).kind != FusionKind::Reduction {
+            continue;
+        }
+        let c = chain_of[i];
+        loop {
+            let head = chains[c][0];
+            let cand = g.producers(head).iter().copied().find(|&p| {
+                ungrouped(&chains, &chain_of, p)
+                    && g.node(p).kind == FusionKind::Injective
+                    && g.consumers(p).len() == 1
+                    && g.consumers(p)[0] == head
+                    && mergeable(g, p, head)
+            });
+            match cand {
+                Some(p) => {
+                    let old = chain_of[p];
+                    chains[old].clear();
+                    chains[c].insert(0, p);
+                    chain_of[p] = c;
+                }
+                None => break,
+            }
+        }
+    }
+
+    // Pass 2: complex-out-fusable anchors absorb injective epilogue
+    // chains. The absorbed consumer may have other producers (a residual
+    // add reads both the conv and the shortcut) — the extra inputs stay
+    // parameters of the fused program — but the anchor's own output must
+    // feed only the absorbed consumer.
+    for i in 0..n {
+        if g.node(i).kind != FusionKind::ComplexOutFusable {
+            continue;
+        }
+        let c = chain_of[i];
+        loop {
+            let tail = *chains[c].last().unwrap();
+            if g.consumers(tail).len() != 1 {
+                break;
+            }
+            let cand = g.consumers(tail)[0];
+            if !ungrouped(&chains, &chain_of, cand)
+                || chain_of[cand] == c
+                || g.node(cand).kind != FusionKind::Injective
+                || !mergeable(g, tail, cand)
+            {
+                break;
+            }
+            let old = chain_of[cand];
+            chains[old].clear();
+            chains[c].push(cand);
+            chain_of[cand] = c;
+        }
+    }
+
+    // Pass 3: remaining injective -> injective chains.
+    for i in 0..n {
+        if g.node(i).kind != FusionKind::Injective || chains[chain_of[i]].is_empty() {
+            continue;
+        }
+        let c = chain_of[i];
+        if *chains[c].last().unwrap() != i || group_kind(g, &chains[c]) != FusionKind::Injective {
+            continue;
+        }
+        loop {
+            let tail = *chains[c].last().unwrap();
+            if g.consumers(tail).len() != 1 {
+                break;
+            }
+            let cand = g.consumers(tail)[0];
+            if !ungrouped(&chains, &chain_of, cand)
+                || chain_of[cand] == c
+                || g.node(cand).kind != FusionKind::Injective
+                || !mergeable(g, tail, cand)
+            {
+                break;
+            }
+            let old = chain_of[cand];
+            chains[old].clear();
+            chains[c].push(cand);
+            chain_of[cand] = c;
+        }
+    }
+
+    // Emit groups ordered by their first member's node index.
+    let mut emitted = vec![false; chains.len()];
+    let mut out = Vec::new();
+    for i in 0..n {
+        let c = chain_of[i];
+        if emitted[c] || chains[c].is_empty() {
+            continue;
+        }
+        emitted[c] = true;
+        let members = chains[c].clone();
+        let kind = group_kind(g, &members);
+        let count = g.node(members[0]).count;
+        out.push(FusedGroup { members, count, kind });
+    }
+    out
+}
+
+/// Deterministic unique-name helper: first use keeps the original name,
+/// later collisions get a `_m<member-index>` suffix.
+fn unique_name(used: &mut HashMap<String, usize>, name: &str, member: usize) -> String {
+    let hits = used.entry(name.to_string()).or_insert(0);
+    *hits += 1;
+    if *hits == 1 {
+        name.to_string()
+    } else {
+        format!("{name}_m{member}")
+    }
+}
+
+/// Re-emit a fused group as one `Program`. Singleton groups return the
+/// member verbatim (so per-op and fused task identities coincide for
+/// unfused ops). Multi-member chains re-emit every member block with
+/// fresh loop nests; each interior producer→consumer tensor becomes an
+/// internal temp, everything else stays a parameter. FLOP count is
+/// conserved by construction (same block domains, same bodies).
+pub fn fuse_group_program(g: &OpGraph, group: &FusedGroup) -> Program {
+    if group.members.len() == 1 {
+        return g.node(group.members[0]).prog.clone();
+    }
+    let mut name = String::from("fused");
+    for &m in &group.members {
+        name.push('_');
+        name.push_str(&g.node(m).prog.name);
+    }
+    let mut fused = Program::new(name);
+    let mut buf_names: HashMap<String, usize> = HashMap::new();
+    let mut block_names: HashMap<String, usize> = HashMap::new();
+    let mut prev_out_new: Option<usize> = None;
+    let last = group.members.len() - 1;
+    for (j, &m) in group.members.iter().enumerate() {
+        let mp = &g.node(m).prog;
+        let bound_in = if j == 0 {
+            None
+        } else {
+            bind_input(&g.node(group.members[j - 1]).prog, mp)
+        };
+        let out_buf = output_buffer(mp)
+            .expect("fusion precondition: every chain member has a terminal output buffer");
+        // Map every member buffer to a buffer of the fused program.
+        let mut bmap: Vec<usize> = Vec::with_capacity(mp.buffers.len());
+        for (ob, buf) in mp.buffers.iter().enumerate() {
+            if Some(ob) == bound_in {
+                bmap.push(prev_out_new.expect("bound input follows a produced output"));
+                continue;
+            }
+            let uniq = unique_name(&mut buf_names, &buf.name, j);
+            let interior_out = ob == out_buf && j < last;
+            let nb = if mp.params.contains(&ob) && !interior_out {
+                fused.param(&uniq, buf.shape.clone(), buf.dtype)
+            } else {
+                fused.temp(&uniq, buf.shape.clone(), buf.dtype)
+            };
+            bmap.push(nb);
+        }
+        prev_out_new = Some(bmap[out_buf]);
+        // Re-emit every block with a fresh canonical loop nest.
+        for b in mp.blocks() {
+            let bd = mp.block_data(b).clone();
+            let axes: Vec<Axis> = bd
+                .iters
+                .iter()
+                .map(|it| match it.kind {
+                    IterKind::Spatial => sp("f", it.extent),
+                    IterKind::Reduce => rd("r", it.extent),
+                })
+                .collect();
+            let bname = unique_name(&mut block_names, &bd.name, j);
+            fused.emit(&bname, &axes, |iv| {
+                let vmap: HashMap<_, _> = bd
+                    .iters
+                    .iter()
+                    .zip(iv.iter())
+                    .map(|(it, &nv)| (it.var, AExpr::Var(nv)))
+                    .collect();
+                let remap_region = |r: &Region| Region {
+                    buffer: bmap[r.buffer],
+                    ranges: r.ranges.iter().map(|(e, ext)| (e.subst(&vmap), *ext)).collect(),
+                };
+                let remap_expr = |e: &CExpr| {
+                    e.map_loads(&mut |bf, idx| {
+                        CExpr::Load(bmap[bf], idx.iter().map(|x| x.subst(&vmap)).collect())
+                    })
+                };
+                let body = match &bd.body {
+                    BlockBody::Assign { expr } => BlockBody::Assign { expr: remap_expr(expr) },
+                    BlockBody::Reduce { init, op, rhs } => BlockBody::Reduce {
+                        init: remap_expr(init),
+                        op: *op,
+                        rhs: remap_expr(rhs),
+                    },
+                    BlockBody::Opaque { flops_per_instance } => {
+                        BlockBody::Opaque { flops_per_instance: *flops_per_instance }
+                    }
+                };
+                (
+                    bd.reads.iter().map(remap_region).collect(),
+                    bd.writes.iter().map(remap_region).collect(),
+                    body,
+                )
+            });
+        }
+    }
+    fused
+}
+
+/// Per-class group tallies, mirrored into the process-global metrics
+/// registry (`graph_fused_groups_total`, `graph_fusion_kind_total_*`).
+fn record_metrics(groups: &[FusedGroup]) {
+    let m = telemetry::global();
+    m.counter("graph_fused_groups_total", "fused groups produced by the graph fusion pass")
+        .add(groups.len() as u64);
+    for kind in [
+        FusionKind::Injective,
+        FusionKind::Reduction,
+        FusionKind::ComplexOutFusable,
+        FusionKind::Opaque,
+    ] {
+        let hits = groups.iter().filter(|gr| gr.kind == kind).count() as u64;
+        m.counter(
+            &format!("graph_fusion_kind_total_{}", kind.label()),
+            "fused groups of this fusion class",
+        )
+        .add(hits);
+    }
+}
+
+/// Human-readable per-class summary line (`tune-model --fused` output,
+/// grepped by the CI fusion-smoke job).
+pub fn summarize(groups: &[FusedGroup]) -> String {
+    let count = |k: FusionKind| groups.iter().filter(|gr| gr.kind == k).count();
+    format!(
+        "fused groups: {} (injective {}, reduction {}, complex {}, opaque {})",
+        groups.len(),
+        count(FusionKind::Injective),
+        count(FusionKind::Reduction),
+        count(FusionKind::ComplexOutFusable),
+        count(FusionKind::Opaque)
+    )
+}
+
+/// Fused task extraction: run the fusion pass, emit each group's fused
+/// program, and dedup structurally — the fused sibling of
+/// [`crate::graph::extract_tasks`]. Task weight sums group repeat counts,
+/// so total weight is conserved against the group list (and group
+/// [`FusedGroup::op_weight`]s conserve the original op occurrences).
+pub fn extract_fused_tasks(g: &OpGraph) -> Vec<Task> {
+    let groups = fuse(g);
+    record_metrics(&groups);
+    let mut index: HashMap<u64, usize> = HashMap::new();
+    let mut tasks: Vec<Task> = Vec::new();
+    for gr in &groups {
+        let prog = fuse_group_program(g, gr);
+        let h = structural_hash(&prog);
+        match index.get(&h) {
+            Some(&i) => tasks[i].weight += gr.count,
+            None => {
+                index.insert(h, tasks.len());
+                tasks.push(Task {
+                    name: super::task_name(&prog.name, h),
+                    prog,
+                    weight: gr.count,
+                });
+            }
+        }
+    }
+    tasks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph;
+    use crate::tir::analysis::program_flops;
+    use crate::workloads;
+
+    /// dense -> add (residual) -> norm: pass 1 gives {add, norm}.
+    fn toy_graph() -> OpGraph {
+        let mut g = OpGraph::new();
+        let d = g.add(workloads::dense(16, 32, 8), 2);
+        let a = g.add(workloads::add2d(16, 32), 2);
+        let nm = g.add(workloads::norm(1, 16, 32), 2);
+        g.connect(d, a);
+        g.connect(a, nm);
+        g
+    }
+
+    #[test]
+    fn reduction_absorbs_injective_producer() {
+        let g = toy_graph();
+        let groups = fuse(&g);
+        assert_eq!(groups.len(), 2);
+        assert_eq!(groups[0].members, vec![0]);
+        assert_eq!(groups[1].members, vec![1, 2]);
+        assert_eq!(groups[1].kind, FusionKind::Reduction);
+        let total: usize = groups.iter().map(|gr| gr.op_weight()).sum();
+        assert_eq!(total, 6); // 3 nodes x count 2
+    }
+
+    #[test]
+    fn fused_program_conserves_flops_and_verifies() {
+        let g = toy_graph();
+        let groups = fuse(&g);
+        let fused = fuse_group_program(&g, &groups[1]);
+        fused.check_integrity().unwrap();
+        let expect = program_flops(&g.node(1).prog) + program_flops(&g.node(2).prog);
+        assert_eq!(program_flops(&fused), expect);
+        // Interior add output became a temp; fused params are the add's
+        // two inputs plus norm's output.
+        assert_eq!(fused.params.len(), 3);
+        // Dataflow: add feeds sq_sum and normalize through the temp.
+        let add = fused.find_block("add").unwrap();
+        assert_eq!(fused.consumers_of(add).len(), 2);
+    }
+
+    #[test]
+    fn complex_absorbs_epilogue_chain() {
+        // dense -> bias-style add -> relu is swallowed by the anchor.
+        let mut g = OpGraph::new();
+        let d = g.add(workloads::dense(8, 8, 8), 1);
+        let a = g.add(workloads::add2d(8, 8), 1);
+        g.connect(d, a);
+        let groups = fuse(&g);
+        assert_eq!(groups.len(), 1);
+        assert_eq!(groups[0].members, vec![0, 1]);
+        assert_eq!(groups[0].kind, FusionKind::ComplexOutFusable);
+        let fused = fuse_group_program(&g, &groups[0]);
+        fused.check_integrity().unwrap();
+        assert_eq!(
+            program_flops(&fused),
+            program_flops(&g.node(0).prog) + program_flops(&g.node(1).prog)
+        );
+    }
+
+    #[test]
+    fn count_mismatch_and_multi_consumer_block_fusion() {
+        // Count mismatch: no merge.
+        let mut g = OpGraph::new();
+        let d = g.add(workloads::dense(8, 8, 8), 2);
+        let a = g.add(workloads::add2d(8, 8), 1);
+        g.connect(d, a);
+        assert_eq!(fuse(&g).len(), 2);
+        // Multi-consumer producer: its output is needed elsewhere.
+        let mut g2 = OpGraph::new();
+        let d2 = g2.add(workloads::dense(8, 8, 8), 1);
+        let a2 = g2.add(workloads::add2d(8, 8), 1);
+        let b2 = g2.add(workloads::add2d(8, 8), 1);
+        g2.connect(d2, a2);
+        g2.connect(d2, b2);
+        assert_eq!(fuse(&g2).len(), 3);
+    }
+
+    #[test]
+    fn opaque_boundaries_never_crossed() {
+        let mut opaque = workloads::add2d(8, 8);
+        let b = opaque.find_block("add").unwrap();
+        opaque.block_data_mut(b).body = BlockBody::Opaque { flops_per_instance: 1.0 };
+        let mut g = OpGraph::new();
+        let d = g.add(workloads::dense(8, 8, 8), 1);
+        let o = g.add(opaque, 1);
+        g.connect(d, o);
+        let groups = fuse(&g);
+        assert_eq!(groups.len(), 2);
+        assert!(groups.iter().all(|gr| gr.members.len() == 1));
+        assert_eq!(groups[1].kind, FusionKind::Opaque);
+    }
+
+    #[test]
+    fn fusion_is_deterministic_and_idempotent() {
+        let g = graph::bert_base_graph();
+        let a = fuse(&g);
+        let b = fuse(&g);
+        assert_eq!(a, b);
+        // Idempotent: re-lifting the fused outputs (no edges — fusion
+        // consumed them) and fusing again changes nothing.
+        let tasks = extract_fused_tasks(&g);
+        let refused: graph::OpList = tasks.iter().map(|t| (t.prog.clone(), t.weight)).collect();
+        let g2 = OpGraph::from_ops(&refused);
+        let again = fuse(&g2);
+        assert!(again.iter().all(|gr| gr.members.len() == 1));
+        assert_eq!(extract_fused_tasks(&g2).len(), tasks.len());
+    }
+
+    #[test]
+    fn injective_chain_fuses() {
+        let mut g = OpGraph::new();
+        let a = g.add(workloads::relu(64), 1);
+        let mut second = workloads::relu(64);
+        second.name = "relu2".into();
+        let b = g.add(second, 1);
+        g.connect(a, b);
+        let groups = fuse(&g);
+        assert_eq!(groups.len(), 1);
+        assert_eq!(groups[0].members, vec![0, 1]);
+        assert_eq!(groups[0].kind, FusionKind::Injective);
+        let fused = fuse_group_program(&g, &groups[0]);
+        fused.check_integrity().unwrap();
+        assert_eq!(program_flops(&fused), 128.0);
+    }
+}

@@ -1,17 +1,36 @@
-//! Graph-level integration: operator lists for whole models, task
-//! extraction with structural deduplication, and end-to-end latency
-//! aggregation (paper §6.2 and Appendix A.6 — frameworks hand us a
-//! computational graph; we extract the unique tensor programs, tune each,
-//! and sum weighted best latencies).
+//! Graph-level integration: operator DAGs for whole models, task
+//! extraction with structural deduplication (per-op and fused), and
+//! end-to-end latency aggregation (paper §6.2 and Appendix A.6 —
+//! frameworks hand us a computational graph; we extract the unique tensor
+//! programs, tune each, and sum weighted best latencies).
+//!
+//! The DAG layer lives in [`dag`] (nodes, edges, `FusionKind`
+//! classification) and the fusion pass in [`fusion`]; the flat `OpList`
+//! remains a lossless projection for every pre-graph caller.
 
+pub mod dag;
+pub mod fusion;
 pub mod models;
 
-pub use models::{bert_base, bert_large, by_name, gpt2, inception_v1, mobilenet_v2, resnet50, OpList, MODEL_NAMES};
+pub use dag::{classify, FusionKind, OpGraph, OpNode};
+pub use fusion::{extract_fused_tasks, fuse, fuse_group_program, summarize, FusedGroup};
+pub use models::{
+    bert_base, bert_base_graph, bert_large, bert_large_graph, by_name, gpt2, gpt2_graph,
+    graph_by_name, inception_v1, inception_v1_graph, mobilenet_v2, mobilenet_v2_graph, resnet50,
+    resnet50_graph, OpList, MODEL_NAMES,
+};
 
 use std::collections::HashMap;
 
 use crate::search::Task;
 use crate::tir::structural_hash;
+
+/// Stable task name: the program name plus a structural-hash suffix, so
+/// the same op gets the same task name (and db workload identity) in
+/// every model, independent of op-list insertion order.
+pub(crate) fn task_name(base: &str, h: u64) -> String {
+    format!("{}_{:08x}", base, (h ^ (h >> 32)) as u32)
+}
 
 /// Deduplicate an operator list into tuning tasks: operators with the same
 /// structural hash share one task whose weight is the summed occurrence
@@ -26,7 +45,7 @@ pub fn extract_tasks(ops: &OpList) -> Vec<Task> {
             None => {
                 index.insert(h, tasks.len());
                 tasks.push(Task {
-                    name: format!("{}_{}", prog.name, tasks.len()),
+                    name: task_name(&prog.name, h),
                     prog: prog.clone(),
                     weight: *count,
                 });
@@ -67,10 +86,49 @@ mod tests {
     }
 
     #[test]
+    fn task_names_are_insertion_order_independent() {
+        // The same op must get the same task name regardless of which
+        // model (or position) it is extracted from.
+        let d = crate::workloads::dense(128, 768, 768);
+        let r = crate::workloads::relu(1 << 12);
+        let fwd = extract_tasks(&vec![(d.clone(), 1), (r.clone(), 1)]);
+        let rev = extract_tasks(&vec![(r, 1), (d, 1)]);
+        assert_eq!(fwd[0].name, rev[1].name);
+        assert_eq!(fwd[1].name, rev[0].name);
+        assert!(fwd[0].name.starts_with("dense_"));
+    }
+
+    #[test]
     fn resnet_tasks_are_manageable() {
         let tasks = extract_tasks(&resnet50());
         assert!(tasks.len() < 30, "{} tasks", tasks.len());
         assert!(tasks.len() > 10);
+    }
+
+    #[test]
+    fn fused_extraction_is_strictly_smaller_and_conserves_weight() {
+        for (graph, ops) in [
+            (resnet50_graph(), resnet50()),
+            (bert_base_graph(), bert_base()),
+        ] {
+            let per_op = extract_tasks(&ops);
+            let fused = extract_fused_tasks(&graph);
+            assert!(
+                fused.len() < per_op.len(),
+                "fused {} !< per-op {}",
+                fused.len(),
+                per_op.len()
+            );
+            // Group op-weights conserve the original op occurrences.
+            let groups = fuse(&graph);
+            let grouped: usize = groups.iter().map(|g| g.op_weight()).sum();
+            let total_ops: usize = ops.iter().map(|(_, c)| c).sum();
+            assert_eq!(grouped, total_ops);
+            // Task weights conserve the group repeat counts.
+            let task_weight: usize = fused.iter().map(|t| t.weight).sum();
+            let group_count: usize = groups.iter().map(|g| g.count).sum();
+            assert_eq!(task_weight, group_count);
+        }
     }
 
     #[test]

@@ -1,10 +1,17 @@
 //! Model zoo: the end-to-end networks of Figures 9/10b and Table 1, built
 //! from the parameterized operator builders at their standard shapes
 //! (batch = 1, as in the paper's evaluation).
+//!
+//! Every model is constructed as an [`OpGraph`] (`*_graph()` builders)
+//! with real producer → consumer edges; the flat `OpList` entry points
+//! are lossless projections of those graphs, so pre-graph callers see
+//! exactly the same operators and counts while the fusion pass gets the
+//! dataflow.
 
+use crate::graph::OpGraph;
 use crate::tir::Program;
 use crate::workloads::{
-    add2d, conv2d, dense, depthwise_conv2d, fused_dense, matmul, norm, softmax,
+    add2d, add4d, conv2d, dense, depthwise_conv2d, fused_dense, matmul, norm, softmax,
     transpose_batch_matmul, Conv2dParams,
 };
 
@@ -15,10 +22,12 @@ fn c2d(h: i64, ci: i64, co: i64, k: i64, s: i64) -> Program {
     conv2d(Conv2dParams::new(1, h, h, ci, co, k, s, k / 2))
 }
 
-/// ResNet-50 (He et al.): stem + 4 bottleneck stages [3,4,6,3] + head.
-pub fn resnet50() -> OpList {
-    let mut ops: OpList = Vec::new();
-    ops.push((c2d(224, 3, 64, 7, 2), 1)); // stem
+/// ResNet-50 (He et al.) as an operator DAG: stem + 4 bottleneck stages
+/// [3,4,6,3] + head. Residual adds are NCHW ([`add4d`]) so they bind to
+/// the conv outputs that feed them.
+pub fn resnet50_graph() -> OpGraph {
+    let mut g = OpGraph::new();
+    let mut prev = g.add(c2d(224, 3, 64, 7, 2), 1); // stem
     let stages: [(i64, usize); 4] = [(64, 3), (128, 4), (256, 6), (512, 3)];
     let mut h = 56i64;
     let mut in_c = 64i64;
@@ -26,30 +35,50 @@ pub fn resnet50() -> OpList {
         let out_c = w * 4;
         let stride = if si == 0 { 1 } else { 2 };
         // First block (with projection shortcut + optional stride).
-        ops.push((c2d(h, in_c, w, 1, 1), 1));
-        ops.push((c2d(h, w, w, 3, stride), 1));
+        let c1 = g.add(c2d(h, in_c, w, 1, 1), 1);
+        g.connect(prev, c1);
+        let c2 = g.add(c2d(h, w, w, 3, stride), 1);
+        g.connect(c1, c2);
         h /= stride;
-        ops.push((c2d(h, w, out_c, 1, 1), 1));
-        ops.push((c2d(h * stride, in_c, out_c, 1, stride), 1)); // projection
-        ops.push((add2d(out_c, h * h), 1));
-        // Remaining identity blocks.
+        let c3 = g.add(c2d(h, w, out_c, 1, 1), 1);
+        g.connect(c2, c3);
+        let proj = g.add(c2d(h * stride, in_c, out_c, 1, stride), 1);
+        g.connect(prev, proj);
+        let add = g.add(add4d(out_c, h), 1);
+        g.connect(c3, add);
+        g.connect(proj, add);
+        prev = add;
+        // Remaining identity blocks (count-collapsed).
         let rest = blocks - 1;
         if rest > 0 {
-            ops.push((c2d(h, out_c, w, 1, 1), rest));
-            ops.push((c2d(h, w, w, 3, 1), rest));
-            ops.push((c2d(h, w, out_c, 1, 1), rest));
-            ops.push((add2d(out_c, h * h), rest));
+            let c1r = g.add(c2d(h, out_c, w, 1, 1), rest);
+            g.connect(prev, c1r);
+            let c2r = g.add(c2d(h, w, w, 3, 1), rest);
+            g.connect(c1r, c2r);
+            let c3r = g.add(c2d(h, w, out_c, 1, 1), rest);
+            g.connect(c2r, c3r);
+            let addr = g.add(add4d(out_c, h), rest);
+            g.connect(c3r, addr);
+            g.connect(prev, addr); // residual shortcut
+            prev = addr;
         }
         in_c = out_c;
     }
-    ops.push((dense(1, 1000, 2048), 1)); // classifier
-    ops
+    let head = g.add(dense(1, 1000, 2048), 1); // classifier
+    g.connect(prev, head);
+    g
 }
 
-/// MobileNet-v2 (Sandler et al.): stem + 17 inverted residual blocks + head.
-pub fn mobilenet_v2() -> OpList {
-    let mut ops: OpList = Vec::new();
-    ops.push((c2d(224, 3, 32, 3, 2), 1)); // stem, 112x112x32
+/// ResNet-50 as a flat operator list (projection of [`resnet50_graph`]).
+pub fn resnet50() -> OpList {
+    resnet50_graph().ops()
+}
+
+/// MobileNet-v2 (Sandler et al.) as an operator DAG: stem + 17 inverted
+/// residual blocks + head.
+pub fn mobilenet_v2_graph() -> OpGraph {
+    let mut g = OpGraph::new();
+    let mut prev = g.add(c2d(224, 3, 32, 3, 2), 1); // stem, 112x112x32
     // (expansion t, out channels c, repeats n, stride s)
     let cfg: [(i64, i64, usize, i64); 7] = [
         (1, 16, 1, 1),
@@ -66,63 +95,120 @@ pub fn mobilenet_v2() -> OpList {
         for i in 0..n {
             let stride = if i == 0 { s } else { 1 };
             let exp = in_c * t;
+            let block_in = prev;
+            let mut last = prev;
             if t > 1 {
-                ops.push((c2d(h, in_c, exp, 1, 1), 1)); // expand
+                let e = g.add(c2d(h, in_c, exp, 1, 1), 1); // expand
+                g.connect(last, e);
+                last = e;
             }
-            ops.push((depthwise_conv2d(1, h, h, exp, 3, stride, 1), 1));
+            let dw = g.add(depthwise_conv2d(1, h, h, exp, 3, stride, 1), 1);
+            g.connect(last, dw);
             let oh = h / stride;
-            ops.push((c2d(oh, exp, c, 1, 1), 1)); // project
+            let pr = g.add(c2d(oh, exp, c, 1, 1), 1); // project
+            g.connect(dw, pr);
+            prev = pr;
             if stride == 1 && in_c == c {
-                ops.push((add2d(c, oh * oh), 1));
+                let add = g.add(add4d(c, oh), 1);
+                g.connect(pr, add);
+                g.connect(block_in, add); // residual shortcut
+                prev = add;
             }
             h = oh;
             in_c = c;
         }
     }
-    ops.push((c2d(7, 320, 1280, 1, 1), 1));
-    ops.push((dense(1, 1000, 1280), 1));
-    ops
+    let tail = g.add(c2d(7, 320, 1280, 1, 1), 1);
+    g.connect(prev, tail);
+    let head = g.add(dense(1, 1000, 1280), 1);
+    g.connect(tail, head);
+    g
 }
 
-/// One transformer encoder layer's operators.
-fn transformer_layer(seq: i64, hidden: i64, heads: i64, ffn: i64) -> OpList {
+/// MobileNet-v2 as a flat operator list.
+pub fn mobilenet_v2() -> OpList {
+    mobilenet_v2_graph().ops()
+}
+
+/// A stack of transformer encoder layers as an operator DAG. The layer is
+/// count-collapsed: each node carries `layers` (× its per-layer
+/// multiplicity) as its repeat count, and edges follow the in-layer
+/// dataflow QKV → scores → softmax → PV → proj → add → norm → FFN →
+/// add → norm.
+fn transformer_graph(seq: i64, hidden: i64, heads: i64, ffn: i64, layers: usize) -> OpGraph {
     let dim = hidden / heads;
-    vec![
-        (dense(seq, hidden, hidden), 3),                      // Q, K, V
-        (transpose_batch_matmul(seq, heads, dim), 1),         // scores
-        (softmax(1, heads * seq, seq), 1),                    // attention probs
-        (matmul(heads, seq, dim, seq), 1),                    // probs @ V
-        (dense(seq, hidden, hidden), 1),                      // output proj
-        (add2d(seq, hidden), 2),                              // residuals
-        (norm(1, seq, hidden), 2),                            // layernorms
-        (fused_dense(seq, ffn, hidden), 1),                   // FFN up + act
-        (dense(seq, hidden, ffn), 1),                         // FFN down
-    ]
-}
-
-fn repeat_layers(layer: OpList, n: usize) -> OpList {
-    layer.into_iter().map(|(p, c)| (p, c * n)).collect()
+    let n = layers;
+    let mut g = OpGraph::new();
+    let qkv = g.add(dense(seq, hidden, hidden), 3 * n); // Q, K, V
+    let tbg = g.add(transpose_batch_matmul(seq, heads, dim), n); // scores
+    let sfm = g.add(softmax(1, heads * seq, seq), n); // attention probs
+    let pv = g.add(matmul(heads, seq, dim, seq), n); // probs @ V
+    let proj = g.add(dense(seq, hidden, hidden), n); // output proj
+    let add1 = g.add(add2d(seq, hidden), n); // attention residual
+    let norm1 = g.add(norm(1, seq, hidden), n);
+    let ffn_up = g.add(fused_dense(seq, ffn, hidden), n); // FFN up + act
+    let ffn_down = g.add(dense(seq, hidden, ffn), n); // FFN down
+    let add2 = g.add(add2d(seq, hidden), n); // FFN residual
+    let norm2 = g.add(norm(1, seq, hidden), n);
+    for (p, c) in [
+        (qkv, tbg),
+        (tbg, sfm),
+        (sfm, pv),
+        (pv, proj),
+        (proj, add1),
+        (add1, norm1),
+        (norm1, ffn_up),
+        (ffn_up, ffn_down),
+        (ffn_down, add2),
+        (add2, norm2),
+    ] {
+        g.connect(p, c);
+    }
+    g
 }
 
 /// BERT-base: 12 layers, hidden 768, 12 heads, FFN 3072, seq 128.
+pub fn bert_base_graph() -> OpGraph {
+    transformer_graph(128, 768, 12, 3072, 12)
+}
+
+/// BERT-base as a flat operator list.
 pub fn bert_base() -> OpList {
-    repeat_layers(transformer_layer(128, 768, 12, 3072), 12)
+    bert_base_graph().ops()
 }
 
 /// BERT-large: 24 layers, hidden 1024, 16 heads, FFN 4096, seq 128
 /// (the Figure 10b workload).
+pub fn bert_large_graph() -> OpGraph {
+    transformer_graph(128, 1024, 16, 4096, 24)
+}
+
+/// BERT-large as a flat operator list.
 pub fn bert_large() -> OpList {
-    repeat_layers(transformer_layer(128, 1024, 16, 4096), 24)
+    bert_large_graph().ops()
 }
 
 /// GPT-2 (117M): 12 layers, hidden 768, 12 heads, FFN 3072, seq 128.
 /// Structurally the BERT-base decoder twin at this granularity.
+pub fn gpt2_graph() -> OpGraph {
+    transformer_graph(128, 768, 12, 3072, 12)
+}
+
+/// GPT-2 as a flat operator list.
 pub fn gpt2() -> OpList {
-    repeat_layers(transformer_layer(128, 768, 12, 3072), 12)
+    gpt2_graph().ops()
 }
 
 /// Inception-v1 (GoogLeNet): stem plus representative inception-branch
-/// convolutions with their occurrence counts across the 9 modules.
+/// convolutions with their occurrence counts across the 9 modules. The
+/// branch structure is not modeled (counts are aggregated across
+/// modules), so the graph is edge-free and fusion treats every op as its
+/// own group.
+pub fn inception_v1_graph() -> OpGraph {
+    OpGraph::from_ops(&inception_v1())
+}
+
+/// Inception-v1 as a flat operator list.
 pub fn inception_v1() -> OpList {
     vec![
         (c2d(224, 3, 64, 7, 2), 1),
@@ -146,15 +232,22 @@ pub fn inception_v1() -> OpList {
     ]
 }
 
-/// Look a model up by name.
+/// Look a model up by name (flat operator-list view).
 pub fn by_name(name: &str) -> Option<OpList> {
-    match name.to_lowercase().as_str() {
-        "resnet50" | "resnet-50" => Some(resnet50()),
-        "mobilenetv2" | "mobilenet-v2" => Some(mobilenet_v2()),
-        "bert-base" | "bert_base" => Some(bert_base()),
-        "bert-large" | "bert_large" => Some(bert_large()),
-        "gpt2" | "gpt-2" => Some(gpt2()),
-        "inception-v1" | "inceptionv1" => Some(inception_v1()),
+    graph_by_name(name).map(|g| g.ops())
+}
+
+/// Look a model up by name as an operator DAG. Uses the same
+/// canonicalization as [`crate::workloads::by_name`] (case-insensitive,
+/// `_` == `-`) so the two resolvers form one namespace.
+pub fn graph_by_name(name: &str) -> Option<OpGraph> {
+    match crate::workloads::canon_name(name).as_str() {
+        "resnet50" | "resnet-50" => Some(resnet50_graph()),
+        "mobilenetv2" | "mobilenet-v2" => Some(mobilenet_v2_graph()),
+        "bert-base" => Some(bert_base_graph()),
+        "bert-large" => Some(bert_large_graph()),
+        "gpt2" | "gpt-2" => Some(gpt2_graph()),
+        "inception-v1" | "inceptionv1" => Some(inception_v1_graph()),
         _ => None,
     }
 }
@@ -221,5 +314,35 @@ mod tests {
                 assert!(*c >= 1);
             }
         }
+    }
+
+    #[test]
+    fn graphs_project_losslessly_and_have_edges() {
+        for name in MODEL_NAMES {
+            let g = graph_by_name(name).unwrap();
+            let ops = by_name(name).unwrap();
+            assert_eq!(g.len(), ops.len(), "{name}");
+            let gw: usize = g.nodes().iter().map(|n| n.count).sum();
+            let ow: usize = ops.iter().map(|(_, c)| c).sum();
+            assert_eq!(gw, ow, "{name}");
+        }
+        // The CNN and transformer graphs carry real dataflow.
+        for name in ["resnet50", "mobilenet-v2", "bert-base"] {
+            let g = graph_by_name(name).unwrap();
+            let edges: usize = (0..g.len()).map(|i| g.consumers(i).len()).sum();
+            assert!(edges >= g.len() - 1, "{name}: {edges} edges");
+        }
+    }
+
+    #[test]
+    fn residual_adds_bind_to_conv_outputs() {
+        // The resnet graph must use NCHW adds so conv -> add fuses.
+        let g = resnet50_graph();
+        let found = g
+            .nodes()
+            .iter()
+            .any(|n| n.prog.name == "add4d" && n.prog.buffers[0].shape.len() == 4);
+        assert!(found);
+        assert!(g.nodes().iter().all(|n| n.prog.name != "add2d" || n.prog.buffers[0].shape.len() == 2));
     }
 }

@@ -8,6 +8,7 @@
 //!                  [--transfer-from cpu [--transfer-db donor.jsonl]] [--no-transfer]
 //!                  [--profile trace.json]          # Chrome-trace spans of the tune (Perfetto)
 //! metaschedule tune-model --model bert-base [--target cpu] [--trials 32] [--db t.jsonl]
+//!                  [--fused]                      # tune the graph-fused task set (fewer, larger tasks)
 //! metaschedule exp <fig8|fig9|fig10a|fig10b|table1|all> [--target cpu]
 //!                  [--trials N] [--seed S] [--threads N] [--out results.jsonl] [--db t.jsonl]
 //! metaschedule db stats --db t.jsonl             # tuning-database summary (file or sharded dir)
@@ -185,15 +186,21 @@ fn list() {
     for w in workloads::suite() {
         println!("  {:<4} {}", w.name, w.description);
     }
-    println!(
-        "  {:<4} {}",
-        "fused-dense",
-        workloads::fused_dense_workload().description
-    );
+    println!("extra workloads:");
+    for w in workloads::extras() {
+        println!("  {:<11} {}", w.name, w.description);
+    }
     println!("end-to-end models:");
     for m in graph::MODEL_NAMES {
-        let tasks = graph::extract_tasks(&graph::by_name(m).unwrap());
-        println!("  {:<14} {} unique tasks", m, tasks.len());
+        let g = graph::graph_by_name(m).unwrap();
+        let per_op = graph::extract_tasks(&g.ops());
+        let fused = graph::extract_fused_tasks(&g);
+        println!(
+            "  {:<14} {} unique tasks ({} graph-fused)",
+            m,
+            per_op.len(),
+            fused.len()
+        );
     }
 }
 
@@ -424,12 +431,32 @@ fn tune_model(args: &Args) {
         // accepting the flag (cfg.transfer_from is cleared above).
         metaschedule::log_warn!("tune-model: --transfer-from applies to single-workload `tune` only; ignored here");
     }
-    println!("== tuning {name} on {} ({} trials/task)", target.name, cfg.trials);
+    let fused = args.has_switch("fused");
+    println!(
+        "== tuning {name} on {} ({} trials/task{})",
+        target.name,
+        cfg.trials,
+        if fused { ", graph-fused" } else { "" }
+    );
     if let Some(path) = &cfg.db_path {
         println!("db: {path} (per-task records shared; killed runs resume from it)");
     }
     let vendor = graph::vendor_e2e(&ops, &target);
-    let ms = exp::fig9::metaschedule_e2e(&name, &target, &cfg);
+    let ms = if fused {
+        // Tune over the fused operator DAG: fewer, larger tasks.
+        let g = graph::graph_by_name(&name).expect("by_name succeeded above");
+        let groups = graph::fuse(&g);
+        let tasks = graph::extract_fused_tasks(&g);
+        println!("{}", graph::summarize(&groups));
+        println!(
+            "tasks: {} fused (vs {} per-op)",
+            tasks.len(),
+            graph::extract_tasks(&ops).len()
+        );
+        exp::fig9::metaschedule_fused_e2e(&name, &target, &cfg)
+    } else {
+        exp::fig9::metaschedule_e2e(&name, &target, &cfg)
+    };
     println!(
         "vendor (PyTorch-class) e2e {:.3} ms; MetaSchedule e2e {:.3} ms ({:.2}x)",
         vendor * 1e3,

@@ -163,7 +163,7 @@ impl Schedule {
 
     /// Build `dst[i...] = src[i...]` over `shape`, returning the block item
     /// (loops not yet attached; see `attach_nest_at_root`).
-    fn build_copy_block(&mut self, name: &str, src: usize, dst: usize, shape: &[i64]) -> usize {
+    pub(crate) fn build_copy_block(&mut self, name: &str, src: usize, dst: usize, shape: &[i64]) -> usize {
         let mut iters = Vec::new();
         let mut loops = Vec::new();
         for (d, &extent) in shape.iter().enumerate() {
@@ -203,7 +203,7 @@ impl Schedule {
     }
 
     /// Attach the (pre-linked) nest containing `block` at root position `pos`.
-    fn attach_nest_at_root(&mut self, block: usize, pos: usize) {
+    pub(crate) fn attach_nest_at_root(&mut self, block: usize, pos: usize) {
         let mut top = block;
         while let Some(p) = self.prog.items[top].parent {
             top = p;

@@ -1,0 +1,262 @@
+//! Layout transformation: `transform-layout` repacks a read buffer into a
+//! permuted layout through an explicit pack block, then rewrites the
+//! consumer to read the packed copy.
+//!
+//! This is the primitive behind the `layout-rewrite` schedule rule: when a
+//! matmul-class block reads a tensor whose innermost-varying dimension is
+//! not last in memory (e.g. `dense`'s `W[j, k]` traversed with `j` as the
+//! innermost spatial loop), repacking so the hot dimension is contiguous
+//! turns strided loads into unit-stride ones.
+
+use crate::schedule::{BlockRv, SchResult, Schedule, ScheduleError};
+use crate::tir::{
+    AExpr, BlockBody, BlockData, Buffer, CExpr, IterKind, IterVar, LoopData, Region,
+};
+use crate::trace::Inst;
+
+impl Schedule {
+    /// Repack the buffer of `block`'s `read_idx`-th read through dimension
+    /// permutation `perm`: the packed buffer's `i`-th dimension is the
+    /// source's `perm[i]`-th. A root-level pack block performs the data
+    /// movement and the consumer's regions and loads are rewritten to the
+    /// packed layout (`idx'[i] = idx[perm[i]]`). Returns the pack block.
+    pub fn transform_layout(
+        &mut self,
+        block: BlockRv,
+        read_idx: usize,
+        perm: &[usize],
+    ) -> SchResult<BlockRv> {
+        let item = self.block(block)?;
+        let bd = self.prog.block_data(item).clone();
+        let region = bd
+            .reads
+            .get(read_idx)
+            .ok_or_else(|| {
+                ScheduleError::InvalidDecision(format!(
+                    "transform-layout index {read_idx} out of {} reads",
+                    bd.reads.len()
+                ))
+            })?
+            .clone();
+        let src = region.buffer;
+        let src_buf = self.prog.buffers[src].clone();
+        let rank = src_buf.shape.len();
+        // perm must be a permutation of 0..rank.
+        let mut seen = vec![false; rank];
+        if perm.len() != rank || perm.iter().any(|&d| d >= rank || std::mem::replace(&mut seen[d], true)) {
+            return Err(ScheduleError::InvalidDecision(format!(
+                "transform-layout perm {perm:?} is not a permutation of 0..{rank}"
+            )));
+        }
+        // Every access to src in this block must be full-rank for the
+        // index rewrite to be meaningful.
+        let mut full_rank = true;
+        let check = |e: &CExpr| {
+            e.map_loads(&mut |b, idx| {
+                if b == src && idx.len() != rank {
+                    full_rank = false;
+                }
+                CExpr::Load(b, idx.to_vec())
+            })
+        };
+        match &bd.body {
+            BlockBody::Assign { expr } => {
+                check(expr);
+            }
+            BlockBody::Reduce { init, rhs, .. } => {
+                check(init);
+                check(rhs);
+            }
+            BlockBody::Opaque { .. } => {
+                return Err(ScheduleError::Unsupported(
+                    "transform-layout on an opaque block".into(),
+                ))
+            }
+        }
+        if !full_rank || bd.reads.iter().any(|r| r.buffer == src && r.ranges.len() != rank) {
+            return Err(ScheduleError::Unsupported(
+                "transform-layout: source accessed below full rank".into(),
+            ));
+        }
+        let packed_shape: Vec<i64> = perm.iter().map(|&d| src_buf.shape[d]).collect();
+        let packed = self.prog.add_buffer(Buffer {
+            name: format!("{}_layout", src_buf.name),
+            shape: packed_shape.clone(),
+            dtype: src_buf.dtype,
+            scope: src_buf.scope,
+            align: src_buf.align,
+            inlined: false,
+        });
+        // Pack block: iterate the packed dims; src dim `perm[i]` is indexed
+        // by packed iter `i`.
+        let pack = self.build_pack_block(
+            &format!("{}_pack", src_buf.name),
+            src,
+            packed,
+            &packed_shape,
+            perm,
+        );
+        let consumer_root = self.prog.root_of(item);
+        let pos = self
+            .prog
+            .roots
+            .iter()
+            .position(|&r| r == consumer_root)
+            .unwrap_or(0);
+        self.attach_nest_at_root(pack, pos);
+        // Rewrite the consumer to the packed layout.
+        {
+            let bd_mut = self.prog.block_data_mut(item);
+            for r in bd_mut.reads.iter_mut() {
+                if r.buffer == src {
+                    r.ranges = perm.iter().map(|&d| r.ranges[d].clone()).collect();
+                    r.buffer = packed;
+                }
+            }
+            let redirect = |e: &CExpr| {
+                e.map_loads(&mut |b, idx| {
+                    if b == src {
+                        CExpr::Load(packed, perm.iter().map(|&d| idx[d].clone()).collect())
+                    } else {
+                        CExpr::Load(b, idx.to_vec())
+                    }
+                })
+            };
+            bd_mut.body = match &bd_mut.body {
+                BlockBody::Assign { expr } => BlockBody::Assign {
+                    expr: redirect(expr),
+                },
+                BlockBody::Reduce { init, op, rhs } => BlockBody::Reduce {
+                    init: redirect(init),
+                    op: *op,
+                    rhs: redirect(rhs),
+                },
+                BlockBody::Opaque { flops_per_instance } => BlockBody::Opaque {
+                    flops_per_instance: *flops_per_instance,
+                },
+            };
+        }
+        let rv = self.push_block(pack);
+        self.record(Inst::TransformLayout {
+            block: block.0,
+            read_idx,
+            perm: perm.to_vec(),
+            out: rv.0,
+        });
+        Ok(rv)
+    }
+
+    /// Build `dst[a0..] = src[b]` with `b[perm[i]] = a_i`, loops not yet
+    /// attached (the permuted sibling of `build_copy_block`).
+    fn build_pack_block(
+        &mut self,
+        name: &str,
+        src: usize,
+        dst: usize,
+        dst_shape: &[i64],
+        perm: &[usize],
+    ) -> usize {
+        let mut iters = Vec::new();
+        let mut loops = Vec::new();
+        for (d, &extent) in dst_shape.iter().enumerate() {
+            let lv = self.prog.fresh_var(&format!("p{d}_"));
+            let bv = self.prog.fresh_var(&format!("pp{d}_"));
+            loops.push(self.prog.alloc_loop(LoopData::new(lv, extent)));
+            iters.push(IterVar {
+                var: bv,
+                extent,
+                kind: IterKind::Spatial,
+                binding: AExpr::Var(lv),
+            });
+        }
+        let dst_idx: Vec<AExpr> = iters.iter().map(|iv| AExpr::Var(iv.var)).collect();
+        // src dim perm[i] <- packed iter i.
+        let mut src_idx = vec![AExpr::Const(0); dst_shape.len()];
+        for (i, &d) in perm.iter().enumerate() {
+            src_idx[d] = dst_idx[i].clone();
+        }
+        let mut blk = BlockData::new(name);
+        blk.reads = vec![Region::point(src, src_idx.clone())];
+        blk.writes = vec![Region::point(dst, dst_idx)];
+        blk.body = BlockBody::Assign {
+            expr: CExpr::Load(src, src_idx),
+        };
+        blk.iters = iters;
+        let blk = self.prog.alloc_block(blk);
+        let mut parent: Option<usize> = None;
+        for &l in &loops {
+            if let Some(p) = parent {
+                self.prog.items[l].parent = Some(p);
+                self.prog.items[p].children.push(l);
+            }
+            parent = Some(l);
+        }
+        if let Some(p) = parent {
+            self.prog.items[blk].parent = Some(p);
+            self.prog.items[p].children.push(blk);
+        }
+        blk
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::Schedule;
+    use crate::tir::analysis::program_flops;
+    use crate::workloads;
+
+    #[test]
+    fn transform_layout_repacks_dense_weights() {
+        // dense reads W[j, k]; innermost spatial j strides by k. Repacking
+        // with perm [1, 0] gives W_layout[k, j] with j contiguous.
+        let mut s = Schedule::new(workloads::dense(16, 8, 32), 0);
+        let b = s.get_block("dense").unwrap();
+        let pack = s.transform_layout(b, 1, &[1, 0]).unwrap();
+        s.prog.check_integrity().unwrap();
+        let packed = s
+            .prog
+            .buffers
+            .iter()
+            .find(|bf| bf.name == "W_layout")
+            .unwrap();
+        assert_eq!(packed.shape, vec![32, 8]); // transposed [8, 32]
+        let pack_item = s.block(pack).unwrap();
+        assert_eq!(s.prog.block_data(pack_item).name, "W_pack");
+        // Consumer now loads W_layout[k, j].
+        let d = s.prog.find_block("dense").unwrap();
+        let packed_id = s
+            .prog
+            .buffers
+            .iter()
+            .position(|bf| bf.name == "W_layout")
+            .unwrap();
+        assert_eq!(s.prog.block_data(d).reads[1].buffer, packed_id);
+        // Pack nest precedes the consumer nest at root.
+        assert_eq!(s.prog.root_of(pack_item), s.prog.roots[0]);
+        // The pack adds data movement, not FLOPs beyond the copy.
+        assert!(program_flops(&s.prog) >= 2.0 * 16.0 * 8.0 * 32.0);
+    }
+
+    #[test]
+    fn transform_layout_rejects_bad_perms() {
+        let mut s = Schedule::new(workloads::dense(8, 8, 8), 0);
+        let b = s.get_block("dense").unwrap();
+        assert!(s.transform_layout(b, 1, &[0, 0]).is_err());
+        assert!(s.transform_layout(b, 1, &[0]).is_err());
+        assert!(s.transform_layout(b, 1, &[0, 2]).is_err());
+        assert!(s.transform_layout(b, 9, &[1, 0]).is_err());
+    }
+
+    #[test]
+    fn transform_layout_replays_from_trace() {
+        let mut s = Schedule::new(workloads::dense(16, 8, 32), 0);
+        let b = s.get_block("dense").unwrap();
+        s.transform_layout(b, 1, &[1, 0]).unwrap();
+        let replayed = crate::trace::replay(&s.trace, &workloads::dense(16, 8, 32), 0).unwrap();
+        assert_eq!(
+            crate::tir::structural_hash(&replayed.prog),
+            crate::tir::structural_hash(&s.prog)
+        );
+    }
+}

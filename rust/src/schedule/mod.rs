@@ -11,6 +11,7 @@
 
 pub mod blockize;
 pub mod cache;
+pub mod layout;
 pub mod location;
 pub mod loops;
 pub mod reduction;

@@ -1,0 +1,158 @@
+//! Layout-Rewrite: propose data-layout transforms on matmul-class anchor
+//! blocks (the graph-fusion subsystem's schedule-space counterpart; TVM's
+//! `RewriteLayout` / Ansor's layout rewrite).
+//!
+//! Applicability analysis: a read of a matmul-like block is
+//! *layout-hostile* when every index is a plain block iter var and the
+//! block's innermost spatial iter indexes a non-innermost buffer
+//! dimension — the innermost loop then strides through memory (e.g.
+//! `dense`'s `W[j, k]` with `j` innermost-spatial strides by `k`). The
+//! rule repacks that buffer with `transform-layout` so the hot dimension
+//! lands last, and forks the space (rewritten + original) so the search
+//! decides whether the pack pays for itself.
+
+use crate::schedule::Schedule;
+use crate::sim::Target;
+use crate::space::{analysis::is_matmul_like, attempt, RuleOutcome, ScheduleRule};
+use crate::tir::{AExpr, IterKind, Program};
+
+#[derive(Default)]
+pub struct LayoutRewrite;
+
+impl LayoutRewrite {
+    pub fn new() -> LayoutRewrite {
+        LayoutRewrite
+    }
+
+    /// The first layout-hostile read of `block`, as `(read_idx, perm)`:
+    /// `perm` moves the dimension indexed by the innermost spatial iter
+    /// to the last position, preserving the order of the rest.
+    fn hostile_read(prog: &Program, block: crate::tir::ItemId) -> Option<(usize, Vec<usize>)> {
+        let bd = prog.block_data(block);
+        let innermost = bd
+            .iters
+            .iter()
+            .filter(|iv| iv.kind == IterKind::Spatial && iv.extent > 1)
+            .map(|iv| iv.var)
+            .last()?;
+        for (ri, r) in bd.reads.iter().enumerate() {
+            let vars: Option<Vec<_>> = r
+                .ranges
+                .iter()
+                .map(|(e, _)| match e {
+                    AExpr::Var(v) => Some(*v),
+                    _ => None,
+                })
+                .collect();
+            let Some(vars) = vars else { continue };
+            let rank = vars.len();
+            if rank < 2 {
+                continue;
+            }
+            if let Some(p) = vars.iter().position(|&v| v == innermost) {
+                if p + 1 != rank {
+                    let mut perm: Vec<usize> = (0..rank).filter(|&d| d != p).collect();
+                    perm.push(p);
+                    return Some((ri, perm));
+                }
+            }
+        }
+        None
+    }
+}
+
+impl ScheduleRule for LayoutRewrite {
+    fn name(&self) -> &str {
+        "layout-rewrite"
+    }
+
+    fn describe(&self) -> String {
+        "repack layout-hostile reads of matmul-like blocks so the innermost spatial dim is contiguous, forking rewritten + original".into()
+    }
+
+    fn apply(&self, sch: Schedule, block_name: &str, _target: &Target) -> RuleOutcome {
+        let hostile = sch
+            .prog
+            .find_block(block_name)
+            .filter(|&b| is_matmul_like(&sch.prog, b))
+            .and_then(|b| Self::hostile_read(&sch.prog, b));
+        let Some((read_idx, perm)) = hostile else {
+            return RuleOutcome::Skip(sch);
+        };
+        match attempt(&sch, |s| {
+            let b = s.get_block(block_name)?;
+            s.transform_layout(b, read_idx, &perm).map(|_| ())
+        }) {
+            Ok(out) => RuleOutcome::Applied(vec![out, sch]),
+            Err(e) => RuleOutcome::Fail(sch, e),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::Target;
+    use crate::workloads;
+
+    #[test]
+    fn rewrites_dense_weight_read() {
+        let t = Target::cpu_avx512();
+        let r = LayoutRewrite::new();
+        let prog = workloads::dense(64, 64, 128);
+        let variants = r.apply(Schedule::new(prog, 0), "dense", &t).into_variants();
+        assert_eq!(variants.len(), 2);
+        let rewritten = &variants[0];
+        rewritten.prog.check_integrity().unwrap();
+        assert!(rewritten
+            .prog
+            .buffers
+            .iter()
+            .any(|b| b.name == "W_layout" && b.shape == vec![128, 64]));
+        // The fork keeps the original untouched.
+        assert!(variants[1].trace.is_empty());
+    }
+
+    #[test]
+    fn attention_scores_k_read_is_hostile() {
+        let t = Target::cpu_avx512();
+        let r = LayoutRewrite::new();
+        let prog = workloads::attention(32, 4, 16);
+        let variants = r.apply(Schedule::new(prog, 0), "scores", &t).into_variants();
+        assert_eq!(variants.len(), 2);
+        // K[j,h,d] with innermost spatial j -> K_layout[h,d,j].
+        assert!(variants[0]
+            .prog
+            .buffers
+            .iter()
+            .any(|b| b.name == "K_layout" && b.shape == vec![4, 16, 32]));
+    }
+
+    #[test]
+    fn gmm_and_injective_blocks_skip() {
+        let t = Target::cpu_avx512();
+        let r = LayoutRewrite::new();
+        // GMM's B[b,k,j] already has j innermost: nothing to rewrite.
+        let prog = workloads::matmul(1, 64, 64, 64);
+        let v = r.apply(Schedule::new(prog, 0), "matmul", &t).into_variants();
+        assert_eq!(v.len(), 1);
+        assert!(v[0].trace.is_empty());
+        // Non-matmul blocks skip outright.
+        let prog = workloads::relu(64);
+        let v = r.apply(Schedule::new(prog, 0), "relu", &t).into_variants();
+        assert_eq!(v.len(), 1);
+    }
+
+    #[test]
+    fn rewritten_variant_replays() {
+        let t = Target::cpu_avx512();
+        let r = LayoutRewrite::new();
+        let prog = workloads::dense(64, 64, 128);
+        let v = r.apply(Schedule::new(prog.clone(), 0), "dense", &t).into_variants();
+        let replayed = crate::trace::replay(&v[0].trace, &prog, 0).unwrap();
+        assert_eq!(
+            crate::tir::structural_hash(&replayed.prog),
+            crate::tir::structural_hash(&v[0].prog)
+        );
+    }
+}

@@ -22,6 +22,7 @@ pub mod add_rfactor;
 pub mod auto_inline;
 pub mod cross_thread_reduction;
 pub mod diag;
+pub mod layout_rewrite;
 pub mod multi_level_tiling;
 pub mod parallel_vectorize_unroll;
 pub mod random_compute_location;
@@ -32,6 +33,7 @@ pub use add_rfactor::AddRfactor;
 pub use auto_inline::AutoInline;
 pub use cross_thread_reduction::CrossThreadReduction;
 pub use diag::RuleDiag;
+pub use layout_rewrite::LayoutRewrite;
 pub use multi_level_tiling::MultiLevelTiling;
 pub use parallel_vectorize_unroll::ParallelVectorizeUnroll;
 pub use random_compute_location::RandomComputeLocation;

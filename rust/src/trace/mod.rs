@@ -64,6 +64,7 @@ pub enum Inst {
     CacheWrite { block: usize, write_idx: usize, scope: String, out: usize },
     SetScope { block: usize, write_idx: usize, scope: String },
     StorageAlign { block: usize, write_idx: usize, axis: usize, factor: i64 },
+    TransformLayout { block: usize, read_idx: usize, perm: Vec<usize>, out: usize },
     // -- compute location --------------------------------------------------------
     ComputeAt { block: usize, loop_rv: usize },
     ReverseComputeAt { block: usize, loop_rv: usize },
@@ -117,6 +118,7 @@ impl Inst {
             Inst::CacheWrite { .. } => "cache-write",
             Inst::SetScope { .. } => "set-scope",
             Inst::StorageAlign { .. } => "storage-align",
+            Inst::TransformLayout { .. } => "transform-layout",
             Inst::ComputeAt { .. } => "compute-at",
             Inst::ReverseComputeAt { .. } => "reverse-compute-at",
             Inst::ComputeInline { .. } => "compute-inline",

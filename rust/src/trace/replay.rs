@@ -198,6 +198,15 @@ fn apply(
             axis,
             factor,
         } => sch.storage_align(BlockRv(*block), *write_idx, *axis, *factor),
+        Inst::TransformLayout {
+            block,
+            read_idx,
+            perm,
+            out,
+        } => {
+            let rv = sch.transform_layout(BlockRv(*block), *read_idx, perm)?;
+            expect_outs(&[rv.0], &[*out])
+        }
         Inst::ComputeAt { block, loop_rv } => sch.compute_at(BlockRv(*block), LoopRv(*loop_rv)),
         Inst::ReverseComputeAt { block, loop_rv } => {
             sch.reverse_compute_at(BlockRv(*block), LoopRv(*loop_rv))

@@ -186,6 +186,15 @@ pub fn inst_to_line(inst: &Inst) -> String {
             axis,
             factor,
         } => format!("storage-align block={block} idx={write_idx} axis={axis} factor={factor}"),
+        Inst::TransformLayout {
+            block,
+            read_idx,
+            perm,
+            out,
+        } => format!(
+            "transform-layout block={block} idx={read_idx} perm={} out={out}",
+            usizes(perm)
+        ),
         Inst::ComputeAt { block, loop_rv } => format!("compute-at block={block} loop={loop_rv}"),
         Inst::ReverseComputeAt { block, loop_rv } => {
             format!("reverse-compute-at block={block} loop={loop_rv}")
@@ -391,6 +400,12 @@ pub fn line_to_inst(line: &str) -> Result<Inst, String> {
             axis: p_usize(p, "axis")?,
             factor: p_i64(p, "factor")?,
         },
+        "transform-layout" => Inst::TransformLayout {
+            block: p_usize(p, "block")?,
+            read_idx: p_usize(p, "idx")?,
+            perm: p_usizes(p, "perm")?,
+            out: p_usize(p, "out")?,
+        },
         "compute-at" => Inst::ComputeAt {
             block: p_usize(p, "block")?,
             loop_rv: p_usize(p, "loop")?,
@@ -508,6 +523,12 @@ mod tests {
             Inst::ComputeAt {
                 block: 12,
                 loop_rv: 2,
+            },
+            Inst::TransformLayout {
+                block: 0,
+                read_idx: 1,
+                perm: vec![1, 0],
+                out: 14,
             },
             Inst::Tensorize {
                 loop_rv: 2,

@@ -161,6 +161,36 @@ pub fn add2d(m: i64, n: i64) -> Program {
     p
 }
 
+/// Elementwise add of two NCHW feature maps (CNN residual connections;
+/// shape-compatible with `conv2d` output so the fusion pass can bind
+/// them).
+pub fn add4d(c: i64, h: i64) -> Program {
+    let mut p = Program::new("add4d");
+    let shape = vec![1, c, h, h];
+    let a = p.param("A", shape.clone(), DType::F32);
+    let b = p.param("B", shape.clone(), DType::F32);
+    let out = p.param("C", shape, DType::F32);
+    p.emit(
+        "add",
+        &[sp("n", 1), sp("c", c), sp("y", h), sp("x", h)],
+        |iv| {
+            let idx: Vec<AExpr> = iv.iter().map(|&v| AExpr::Var(v)).collect();
+            (
+                vec![Region::point(a, idx.clone()), Region::point(b, idx.clone())],
+                vec![Region::point(out, idx.clone())],
+                BlockBody::Assign {
+                    expr: CExpr::bin(
+                        BinOp::Add,
+                        CExpr::load(a, idx.clone()),
+                        CExpr::load(b, idx),
+                    ),
+                },
+            )
+        },
+    );
+    p
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -198,5 +228,13 @@ mod tests {
         let b = p.find_block("add").unwrap();
         assert_eq!(p.block_data(b).reads.len(), 2);
         assert_eq!(program_flops(&p), 256.0);
+    }
+
+    #[test]
+    fn add4d_matches_conv_output_shape() {
+        let p = add4d(64, 56);
+        p.check_integrity().unwrap();
+        assert_eq!(p.buffers[0].shape, vec![1, 64, 56, 56]);
+        assert_eq!(program_flops(&p), 64.0 * 56.0 * 56.0);
     }
 }

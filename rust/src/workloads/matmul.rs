@@ -153,6 +153,133 @@ pub fn fused_dense(m: i64, n: i64, k: i64) -> Program {
     p
 }
 
+/// Full scaled-dot-product attention as one fused subgraph:
+/// `S = Q K^T; P = softmax(S); O = P V` (QK^T -> softmax -> V). This is
+/// the attention workload the fusion pass would otherwise assemble from
+/// TBG + SFM + GMM; having it as a single program exercises the
+/// multi-reduction fused space directly and backs the dynamic-shape
+/// sequence buckets (`att-seq64/128/256`).
+pub fn attention(seq: i64, head: i64, dim: i64) -> Program {
+    let mut p = Program::new("attention");
+    let q = p.param("Q", vec![seq, head, dim], DType::F32);
+    let kbuf = p.param("K", vec![seq, head, dim], DType::F32);
+    let v = p.param("V", vec![seq, head, dim], DType::F32);
+    let s = p.temp("S", vec![head, seq, seq], DType::F32);
+    let mx = p.temp("Max", vec![head, seq], DType::F32);
+    let ex = p.temp("Exp", vec![head, seq, seq], DType::F32);
+    let sm = p.temp("Sum", vec![head, seq], DType::F32);
+    let pr = p.temp("P", vec![head, seq, seq], DType::F32);
+    let out = p.param("O", vec![seq, head, dim], DType::F32);
+    p.emit(
+        "scores",
+        &[sp("h", head), sp("i", seq), sp("j", seq), rd("d", dim)],
+        |iv| {
+            let (vh, vi, vj, vd) = (iv[0], iv[1], iv[2], iv[3]);
+            (
+                vec![
+                    Region::point(q, vec![AExpr::Var(vi), AExpr::Var(vh), AExpr::Var(vd)]),
+                    Region::point(kbuf, vec![AExpr::Var(vj), AExpr::Var(vh), AExpr::Var(vd)]),
+                ],
+                vec![Region::point(s, vec![AExpr::Var(vh), AExpr::Var(vi), AExpr::Var(vj)])],
+                BlockBody::Reduce {
+                    init: CExpr::ConstF(0.0),
+                    op: BinOp::Add,
+                    rhs: CExpr::bin(
+                        BinOp::Mul,
+                        CExpr::load(q, vec![AExpr::Var(vi), AExpr::Var(vh), AExpr::Var(vd)]),
+                        CExpr::load(kbuf, vec![AExpr::Var(vj), AExpr::Var(vh), AExpr::Var(vd)]),
+                    ),
+                },
+            )
+        },
+    );
+    p.emit("row_max", &[sp("h", head), sp("i", seq), rd("j", seq)], |iv| {
+        let (vh, vi, vj) = (iv[0], iv[1], iv[2]);
+        (
+            vec![Region::point(s, vec![AExpr::Var(vh), AExpr::Var(vi), AExpr::Var(vj)])],
+            vec![Region::point(mx, vec![AExpr::Var(vh), AExpr::Var(vi)])],
+            BlockBody::Reduce {
+                init: CExpr::ConstF(f64::NEG_INFINITY),
+                op: BinOp::Max,
+                rhs: CExpr::load(s, vec![AExpr::Var(vh), AExpr::Var(vi), AExpr::Var(vj)]),
+            },
+        )
+    });
+    p.emit("exp", &[sp("h", head), sp("i", seq), sp("j", seq)], |iv| {
+        let (vh, vi, vj) = (iv[0], iv[1], iv[2]);
+        (
+            vec![
+                Region::point(s, vec![AExpr::Var(vh), AExpr::Var(vi), AExpr::Var(vj)]),
+                Region::point(mx, vec![AExpr::Var(vh), AExpr::Var(vi)]),
+            ],
+            vec![Region::point(ex, vec![AExpr::Var(vh), AExpr::Var(vi), AExpr::Var(vj)])],
+            BlockBody::Assign {
+                expr: CExpr::un(
+                    UnOp::Exp,
+                    CExpr::bin(
+                        BinOp::Sub,
+                        CExpr::load(s, vec![AExpr::Var(vh), AExpr::Var(vi), AExpr::Var(vj)]),
+                        CExpr::load(mx, vec![AExpr::Var(vh), AExpr::Var(vi)]),
+                    ),
+                ),
+            },
+        )
+    });
+    p.emit("row_sum", &[sp("h", head), sp("i", seq), rd("j", seq)], |iv| {
+        let (vh, vi, vj) = (iv[0], iv[1], iv[2]);
+        (
+            vec![Region::point(ex, vec![AExpr::Var(vh), AExpr::Var(vi), AExpr::Var(vj)])],
+            vec![Region::point(sm, vec![AExpr::Var(vh), AExpr::Var(vi)])],
+            BlockBody::Reduce {
+                init: CExpr::ConstF(0.0),
+                op: BinOp::Add,
+                rhs: CExpr::load(ex, vec![AExpr::Var(vh), AExpr::Var(vi), AExpr::Var(vj)]),
+            },
+        )
+    });
+    p.emit("divide", &[sp("h", head), sp("i", seq), sp("j", seq)], |iv| {
+        let (vh, vi, vj) = (iv[0], iv[1], iv[2]);
+        (
+            vec![
+                Region::point(ex, vec![AExpr::Var(vh), AExpr::Var(vi), AExpr::Var(vj)]),
+                Region::point(sm, vec![AExpr::Var(vh), AExpr::Var(vi)]),
+            ],
+            vec![Region::point(pr, vec![AExpr::Var(vh), AExpr::Var(vi), AExpr::Var(vj)])],
+            BlockBody::Assign {
+                expr: CExpr::bin(
+                    BinOp::Div,
+                    CExpr::load(ex, vec![AExpr::Var(vh), AExpr::Var(vi), AExpr::Var(vj)]),
+                    CExpr::load(sm, vec![AExpr::Var(vh), AExpr::Var(vi)]),
+                ),
+            },
+        )
+    });
+    p.emit(
+        "pv",
+        &[sp("i", seq), sp("h", head), sp("d", dim), rd("j", seq)],
+        |iv| {
+            let (vi, vh, vd, vj) = (iv[0], iv[1], iv[2], iv[3]);
+            (
+                vec![
+                    Region::point(pr, vec![AExpr::Var(vh), AExpr::Var(vi), AExpr::Var(vj)]),
+                    Region::point(v, vec![AExpr::Var(vj), AExpr::Var(vh), AExpr::Var(vd)]),
+                ],
+                vec![Region::point(out, vec![AExpr::Var(vi), AExpr::Var(vh), AExpr::Var(vd)])],
+                BlockBody::Reduce {
+                    init: CExpr::ConstF(0.0),
+                    op: BinOp::Add,
+                    rhs: CExpr::bin(
+                        BinOp::Mul,
+                        CExpr::load(pr, vec![AExpr::Var(vh), AExpr::Var(vi), AExpr::Var(vj)]),
+                        CExpr::load(v, vec![AExpr::Var(vj), AExpr::Var(vh), AExpr::Var(vd)]),
+                    ),
+                },
+            )
+        },
+    );
+    p
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -194,5 +321,19 @@ mod tests {
     fn dense_weight_layout_is_nk() {
         let p = dense(64, 256, 512);
         assert_eq!(p.buffers[1].shape, vec![256, 512]);
+    }
+
+    #[test]
+    fn attention_dataflow_and_flops() {
+        let p = attention(128, 12, 64);
+        p.check_integrity().unwrap();
+        assert_eq!(p.blocks().len(), 6);
+        let sc = p.find_block("scores").unwrap();
+        // scores feed both row_max and exp.
+        assert_eq!(p.consumers_of(sc).len(), 2);
+        // The two matmuls dominate: 2 * 2 * h * s^2 * d plus O(h*s^2) softmax.
+        let mm = 2.0 * 2.0 * 12.0 * 128.0 * 128.0 * 64.0;
+        let f = program_flops(&p);
+        assert!(f > mm && f < mm * 1.1, "{f} vs {mm}");
     }
 }

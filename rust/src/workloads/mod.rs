@@ -10,8 +10,8 @@ pub mod elementwise;
 pub mod matmul;
 
 pub use conv::{conv1d, conv2d, conv2d_bn_relu, conv3d, conv_out, depthwise_conv2d, transposed_conv2d, Conv2dParams};
-pub use elementwise::{add2d, norm, relu, softmax};
-pub use matmul::{dense, fused_dense, matmul, transpose_batch_matmul};
+pub use elementwise::{add2d, add4d, norm, relu, softmax};
+pub use matmul::{attention, dense, fused_dense, matmul, transpose_batch_matmul};
 
 use crate::tir::Program;
 
@@ -77,6 +77,15 @@ fn build_sfm() -> Program {
 fn build_fused_dense() -> Program {
     fused_dense(128, 3072, 768)
 }
+fn build_att_seq64() -> Program {
+    attention(64, 12, 64)
+}
+fn build_att_seq128() -> Program {
+    attention(128, 12, 64)
+}
+fn build_att_seq256() -> Program {
+    attention(256, 12, 64)
+}
 
 /// The 12 operator/subgraph workloads of Figure 8, in paper order.
 pub fn suite() -> Vec<Workload> {
@@ -105,13 +114,38 @@ pub fn fused_dense_workload() -> Workload {
     }
 }
 
-/// Look a suite workload up by (case-insensitive) name.
+/// Named workloads beyond the 12-entry Figure 8 suite: the Figure 10a
+/// fused-dense subgraph, and the attention subgraph (QK^T -> softmax -> V,
+/// BERT-base heads) with its dynamic-shape sequence-length buckets — a
+/// dynamic-seq model tunes each bucket once and dispatches at runtime.
+pub fn extras() -> Vec<Workload> {
+    vec![
+        fused_dense_workload(),
+        Workload { name: "ATT", description: "attention: QK^T+softmax+V, s128 h12 d64", build: build_att_seq128 },
+        Workload { name: "ATT-seq64", description: "attention bucket: s64 h12 d64", build: build_att_seq64 },
+        Workload { name: "ATT-seq128", description: "attention bucket: s128 h12 d64", build: build_att_seq128 },
+        Workload { name: "ATT-seq256", description: "attention bucket: s256 h12 d64", build: build_att_seq256 },
+    ]
+}
+
+/// Every addressable workload: the suite plus [`extras`].
+pub fn all() -> Vec<Workload> {
+    let mut v = suite();
+    v.extend(extras());
+    v
+}
+
+/// Canonical form for name lookups: case-insensitive, `_` == `-`. Shared
+/// by [`by_name`] and [`crate::graph::graph_by_name`] so the two
+/// namespaces resolve identically (and can be checked for collisions).
+pub fn canon_name(name: &str) -> String {
+    name.to_lowercase().replace('_', "-")
+}
+
+/// Look any workload (suite or extra) up by canonicalized name.
 pub fn by_name(name: &str) -> Option<Workload> {
-    let upper = name.to_uppercase();
-    if upper == "FUSED-DENSE" || upper == "FUSED_DENSE" {
-        return Some(fused_dense_workload());
-    }
-    suite().into_iter().find(|w| w.name == upper)
+    let c = canon_name(name);
+    all().into_iter().find(|w| canon_name(w.name) == c)
 }
 
 #[cfg(test)]
@@ -145,7 +179,45 @@ mod tests {
         assert!(by_name("gmm").is_some());
         assert!(by_name("GMM").is_some());
         assert!(by_name("fused-dense").is_some());
+        assert!(by_name("FUSED_DENSE").is_some());
+        assert!(by_name("att").is_some());
+        assert!(by_name("att_seq256").is_some());
         assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn extras_build_and_buckets_scale() {
+        for w in extras() {
+            let p = (w.build)();
+            p.check_integrity().unwrap();
+            assert!(program_flops(&p) > 0.0, "{}", w.name);
+        }
+        // Bucketed attention FLOPs grow with sequence length.
+        let f = |n: &str| program_flops(&(by_name(n).unwrap().build)());
+        assert!(f("ATT-seq64") < f("ATT-seq128"));
+        assert!(f("ATT-seq128") < f("ATT-seq256"));
+        assert_eq!(f("ATT"), f("ATT-seq128"));
+    }
+
+    #[test]
+    fn workload_and_model_namespaces_are_disjoint() {
+        // One resolver convention across both namespaces: every workload
+        // name must stay distinct from every model-zoo name under the
+        // shared canonicalization, so a CLI name is never ambiguous.
+        for m in crate::graph::MODEL_NAMES {
+            assert!(by_name(m).is_none(), "{m} is both a model and a workload");
+            assert!(crate::graph::graph_by_name(m).is_some(), "{m}");
+        }
+        for w in all() {
+            assert!(
+                crate::graph::graph_by_name(w.name).is_none(),
+                "{} is both a workload and a model",
+                w.name
+            );
+            // Each resolves under case / separator variants.
+            assert!(by_name(&w.name.to_uppercase()).is_some());
+            assert!(by_name(&canon_name(w.name).replace('-', "_")).is_some());
+        }
     }
 
     #[test]

@@ -342,6 +342,44 @@ fn feature_cache_never_changes_results_or_database_bytes() {
 }
 
 #[test]
+fn fused_workload_search_identical_across_thread_counts() {
+    // The determinism contract extends to graph-fused programs: tune a
+    // real multi-member fused task from the BERT-base DAG (a dense
+    // anchor with its absorbed epilogue chain) at 1 and 4 threads and
+    // require byte-identical outcomes.
+    let target = Target::cpu_avx512();
+    let g = metaschedule::graph::bert_base_graph();
+    let task = metaschedule::graph::extract_fused_tasks(&g)
+        .into_iter()
+        .find(|t| t.prog.name.starts_with("fused_"))
+        .expect("bert-base fuses at least one multi-member group");
+    let ctx = TuneContext::generic(target.clone());
+    let run = |threads: usize| {
+        let mut model = GbtCostModel::new();
+        let mut measurer = SimMeasurer::new(target.clone());
+        EvolutionarySearch::new(cfg(32, threads)).tune(
+            &task.prog,
+            &ctx,
+            &mut model,
+            &mut measurer,
+            19,
+        )
+    };
+    let serial = run(1);
+    let parallel = run(4);
+    assert_eq!(serial.best_latency_s, parallel.best_latency_s);
+    assert_eq!(
+        structural_hash(&serial.best_prog),
+        structural_hash(&parallel.best_prog)
+    );
+    assert_eq!(
+        trace_to_text(&serial.best_trace),
+        trace_to_text(&parallel.best_trace)
+    );
+    assert_eq!(serial.curve, parallel.curve);
+}
+
+#[test]
 fn repeated_runs_are_reproducible() {
     // Same seed, same thread count, run twice: byte-identical output (no
     // hidden global state, no time dependence).

@@ -1,0 +1,124 @@
+//! Graph-fusion integration tests: the fusion pass and its emitted fused
+//! programs, exercised over the whole model zoo.
+//!
+//! Invariants pinned here:
+//! - fusing never creates or destroys work (FLOPs and op-weight conserve)
+//! - every fused program is a valid schedulable program the simulator
+//!   accepts (over every model in the zoo)
+//! - the pass is deterministic and idempotent
+//! - opaque ops are hard fusion boundaries
+//! - fused extraction yields strictly fewer tasks than per-op extraction
+//!   on the models the paper evaluates end-to-end
+
+use metaschedule::graph::{
+    self, extract_fused_tasks, extract_tasks, fuse, fuse_group_program, FusionKind, OpGraph,
+};
+use metaschedule::sim::{simulate, Target};
+use metaschedule::tir::analysis::program_flops;
+use metaschedule::tir::BlockBody;
+use metaschedule::workloads;
+
+#[test]
+fn fused_programs_conserve_flops() {
+    for name in graph::MODEL_NAMES {
+        let g = graph::graph_by_name(name).unwrap();
+        for group in fuse(&g) {
+            let fused = fuse_group_program(&g, &group);
+            fused.check_integrity().unwrap();
+            let member_flops: f64 = group
+                .members
+                .iter()
+                .map(|&i| program_flops(&g.node(i).prog))
+                .sum();
+            let fused_flops = program_flops(&fused);
+            assert!(
+                (fused_flops - member_flops).abs() <= member_flops * 1e-9,
+                "{name}: fused {fused_flops} vs members {member_flops}"
+            );
+        }
+    }
+}
+
+#[test]
+fn simulator_accepts_every_fused_task_in_the_zoo() {
+    let cpu = Target::cpu_avx512();
+    for name in graph::MODEL_NAMES {
+        let g = graph::graph_by_name(name).unwrap();
+        for task in extract_fused_tasks(&g) {
+            let r = simulate(&task.prog, &cpu)
+                .unwrap_or_else(|e| panic!("{name}/{}: {e:?}", task.name));
+            assert!(r.total_s > 0.0, "{name}/{}: zero latency", task.name);
+        }
+    }
+}
+
+#[test]
+fn fusion_is_deterministic_and_idempotent_across_the_zoo() {
+    for name in graph::MODEL_NAMES {
+        let g = graph::graph_by_name(name).unwrap();
+        let a = fuse(&g);
+        let b = fuse(&g);
+        assert_eq!(a.len(), b.len(), "{name}");
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.members, y.members, "{name}");
+            assert_eq!(x.count, y.count, "{name}");
+            assert_eq!(x.kind, y.kind, "{name}");
+        }
+        // Idempotence: re-fusing the already-fused programs (as an
+        // edge-free graph — fusion consumed the dataflow) only yields
+        // singletons, so the task set is a fixed point.
+        let tasks = extract_fused_tasks(&g);
+        let refused: Vec<(metaschedule::tir::Program, usize)> =
+            tasks.iter().map(|t| (t.prog.clone(), t.weight)).collect();
+        let g2 = OpGraph::from_ops(&refused);
+        let again = fuse(&g2);
+        assert!(again.iter().all(|gr| gr.members.len() == 1), "{name}");
+        assert_eq!(extract_fused_tasks(&g2).len(), tasks.len(), "{name}");
+    }
+}
+
+#[test]
+fn fused_extraction_is_smaller_and_conserves_weight() {
+    for name in ["resnet50", "bert-base"] {
+        let g = graph::graph_by_name(name).unwrap();
+        let per_op = extract_tasks(&g.ops());
+        let fused = extract_fused_tasks(&g);
+        assert!(
+            fused.len() < per_op.len(),
+            "{name}: {} fused vs {} per-op",
+            fused.len(),
+            per_op.len()
+        );
+        let groups = fuse(&g);
+        let op_weight: usize = g.nodes().iter().map(|n| n.count).sum();
+        let group_weight: usize = groups.iter().map(|gr| gr.op_weight()).sum();
+        assert_eq!(op_weight, group_weight, "{name}");
+        let task_weight: usize = fused.iter().map(|t| t.weight).sum();
+        let group_count: usize = groups.iter().map(|gr| gr.count).sum();
+        assert_eq!(task_weight, group_count, "{name}");
+    }
+}
+
+#[test]
+fn opaque_ops_are_never_fused_across() {
+    // dense -> add2d fuses when dense is transparent; an opaque dense is
+    // a hard boundary even with the same dataflow edge.
+    let mut g = OpGraph::new();
+    let mut dense = workloads::dense(16, 16, 16);
+    let add = workloads::add2d(16, 16);
+    let d = g.add(dense.clone(), 1);
+    let a = g.add(add.clone(), 1);
+    g.connect(d, a);
+    assert!(fuse(&g).iter().any(|gr| gr.members.len() == 2));
+
+    let blocks = dense.blocks();
+    let b = *blocks.last().unwrap();
+    dense.block_data_mut(b).body = BlockBody::Opaque { flops_per_instance: 1.0 };
+    let mut g = OpGraph::new();
+    let d = g.add(dense, 1);
+    let a = g.add(add, 1);
+    g.connect(d, a);
+    let groups = fuse(&g);
+    assert!(groups.iter().all(|gr| gr.members.len() == 1));
+    assert_eq!(groups[0].kind, FusionKind::Opaque);
+}

@@ -270,6 +270,38 @@ fn metrics_endpoint_and_access_log_observe_hit_miss_and_throttle() {
 }
 
 #[test]
+fn metrics_endpoint_exposes_graph_fusion_families() {
+    let (dir, _guard) = tmp_dir("fusion-metrics");
+    // Graph fusion records into the process-global registry that the
+    // /metrics endpoint serves — fuse a model in-process, then scrape.
+    let g = metaschedule::graph::bert_base_graph();
+    let groups = metaschedule::graph::fuse(&g);
+    assert!(!groups.is_empty());
+    let _ = metaschedule::graph::extract_fused_tasks(&g);
+
+    let (addr, handle) = start_server(read_only_cfg(), db_with_gmm(&dir));
+    let raw = http_roundtrip(&addr, &get_request("/metrics")).unwrap();
+    let (status, body) = split_response(&raw).unwrap();
+    assert_eq!(status, 200);
+    let m = metaschedule::telemetry::parse_exposition(body).expect("valid exposition");
+    assert!(
+        m.get("graph_fused_groups_total").copied().unwrap_or(0.0) >= groups.len() as f64,
+        "fused-group counter visible: {m:?}"
+    );
+    // All four per-class families render, even at zero.
+    for kind in ["injective", "reduction", "complex", "opaque"] {
+        assert!(
+            body.contains(&format!("graph_fusion_kind_total_{kind}")),
+            "{kind} family rendered"
+        );
+    }
+
+    let raw = http_roundtrip(&addr, &get_request("/shutdown")).unwrap();
+    assert_eq!(split_response(&raw).unwrap().0, 200);
+    let _ = handle.join().unwrap();
+}
+
+#[test]
 fn tune_on_miss_commits_and_subsequent_lookups_hit_the_refreshed_shard() {
     let (dir, _guard) = tmp_dir("tune");
     let cfg = HttpConfig {
