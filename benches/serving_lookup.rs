@@ -39,6 +39,7 @@ fn synthetic_db(workloads: usize, records: usize) -> (InMemoryDb, Vec<(u64, &'st
                 cand_hash: rng.next_u64(),
                 sim_version: "simtest".into(),
                 rule_set: String::new(),
+                objective: String::new(),
             });
         }
     }

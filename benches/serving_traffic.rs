@@ -66,6 +66,7 @@ fn synthetic_sharded_db(
                 cand_hash: rng.next_u64(),
                 sim_version: "simtest".into(),
                 rule_set: String::new(),
+                objective: String::new(),
             });
         }
     }

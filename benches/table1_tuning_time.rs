@@ -4,12 +4,22 @@
 //! milliseconds, from [`metaschedule::search::QualityPoint`]) written to
 //! `BENCH_table1.json` for CI artifact upload.
 //!
+//! `--sched-trials N` (default 0 = skip) additionally runs the task
+//! scheduler per model under each allocation/objective arm (greedy+mse
+//! vs gradient+rank) at N trials/task, records the scheduler-level
+//! time-to-quality curves under the `policy_curves` JSON key, and prints
+//! the win count the CI sched-smoke job greps for.
+//!
 //! ```sh
-//! cargo bench --bench table1_tuning_time -- --trials 16
+//! cargo bench --bench table1_tuning_time -- --trials 16 --sched-trials 48
 //! ```
 
+use metaschedule::cost_model::Objective;
+use metaschedule::ctx::TuneContext;
+use metaschedule::db::InMemoryDb;
 use metaschedule::exp::{self, table1, ExpConfig};
 use metaschedule::graph::{self, extract_tasks};
+use metaschedule::search::{Allocation, SearchConfig, SimMeasurer, TaskScheduler};
 use metaschedule::sim::Target;
 use metaschedule::util::cli::Args;
 use metaschedule::util::json::Json;
@@ -63,12 +73,86 @@ fn main() {
         ]));
     }
 
+    // Per-policy scheduler curves: greedy+mse (the compat default) vs
+    // gradient+rank at an identical total budget per model. The budget
+    // must exceed the warmup share (round_trials per task) or no
+    // allocation rounds run and the arms tie trivially — hence a
+    // separate, larger `--sched-trials` knob.
+    let sched_trials = args.flag_usize("sched-trials", 0);
+    let mut policy_curves = Vec::new();
+    if sched_trials > 0 {
+        let arms = [
+            ("greedy", Allocation::Greedy, Objective::Regression),
+            ("gradient", Allocation::Gradient, Objective::PairwiseRank),
+        ];
+        let mut wins = 0usize;
+        for m in table1::TABLE1_MODELS {
+            let ops = graph::by_name(m).expect("unknown model");
+            let tasks = extract_tasks(&ops);
+            let ctx = TuneContext::generic(target.clone());
+            let total = sched_trials * tasks.len();
+            let mut e2e = Vec::new();
+            for (label, alloc, objective) in arms {
+                let mut ts = TaskScheduler::new(SearchConfig {
+                    threads: cfg.threads,
+                    ..SearchConfig::default()
+                });
+                ts.allocation = alloc;
+                ts.objective = objective;
+                let mut meas = SimMeasurer::new(target.clone());
+                let mut db = InMemoryDb::new();
+                let (results, rep) =
+                    ts.tune_tasks_report(&tasks, &ctx, &mut meas, &mut db, total, cfg.seed);
+                let lat = TaskScheduler::e2e_latency(&tasks, &results);
+                println!(
+                    "sched[{label}+{}] {m}: e2e {:.2} us in {} trials over {} round(s){}",
+                    rep.objective,
+                    lat * 1e6,
+                    rep.spent,
+                    rep.rounds,
+                    if rep.early_stop { ", early stop" } else { "" }
+                );
+                e2e.push(lat);
+                policy_curves.push(Json::obj(vec![
+                    ("model", Json::str(m)),
+                    ("policy", Json::str(rep.policy)),
+                    ("objective", Json::str(rep.objective)),
+                    ("e2e_latency_s", Json::num(lat)),
+                    ("spent", Json::num(rep.spent as f64)),
+                    ("rounds", Json::num(rep.rounds as f64)),
+                    (
+                        "points",
+                        Json::arr(rep.curve.iter().map(|q| {
+                            Json::obj(vec![
+                                ("trials", Json::num(q.trials as f64)),
+                                ("best_latency_s", Json::num(q.best_latency_s)),
+                                ("wall_ms", Json::num(q.wall_ms)),
+                            ])
+                        })),
+                    ),
+                ]));
+            }
+            if e2e[1] <= e2e[0] {
+                wins += 1;
+            }
+        }
+        // The CI sched-smoke job greps this line for `on [1-9]` — the
+        // gradient+rank arm must reach parity-or-better end-to-end
+        // latency on at least one model at the equal budget.
+        println!(
+            "sched-smoke: gradient+rank <= greedy+mse on {wins}/{} models at {sched_trials} trials/task",
+            table1::TABLE1_MODELS.len()
+        );
+    }
+
     let json = Json::obj(vec![
         ("bench", Json::str("table1_tuning_time")),
         ("trials", Json::num(cfg.trials as f64)),
         ("seed", Json::num(cfg.seed as f64)),
+        ("sched_trials", Json::num(sched_trials as f64)),
         ("report", report.to_json()),
         ("time_to_quality", Json::arr(curves.into_iter())),
+        ("policy_curves", Json::arr(policy_curves.into_iter())),
     ]);
     let out = "BENCH_table1.json";
     std::fs::write(out, format!("{}\n", json.to_string())).expect("write BENCH_table1.json");

@@ -1,7 +1,58 @@
 //! Gradient-boosted regression trees, from scratch (the image vendors no
 //! ML crates). Squared loss, greedy depth-limited trees over quantile
 //! candidate thresholds — the same model class as the tree-boosting cost
-//! models of [10, 43].
+//! models of [10, 43]. A pairwise ranking objective ([`Gbt::fit_ranked`])
+//! sits on top of the same weighted-tree machinery: search only needs
+//! candidate *order*, so the loss compares sampled pairs instead of
+//! fitting absolute scores.
+
+use crate::util::rng::Rng;
+
+/// Training objective for the boosted ensemble.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Objective {
+    /// Squared-error regression on absolute scores — the historical path;
+    /// bit-identical to pre-objective code and the compat default.
+    Regression,
+    /// Pairwise logistic ranking loss (LambdaRank-style) over sampled
+    /// same-workload pairs: predictions only promise *order* consistency
+    /// with the labels, which is all the evolutionary search consumes.
+    PairwiseRank,
+}
+
+impl Default for Objective {
+    fn default() -> Objective {
+        Objective::Regression
+    }
+}
+
+impl Objective {
+    /// Parse a CLI spelling (`mse` / `rank`). Returns `None` on unknown
+    /// names so callers can print their own usage error.
+    pub fn parse(s: &str) -> Option<Objective> {
+        match s.to_ascii_lowercase().as_str() {
+            "mse" | "regression" | "reg" => Some(Objective::Regression),
+            "rank" | "pairwise" | "pairwise-rank" => Some(Objective::PairwiseRank),
+            _ => None,
+        }
+    }
+
+    /// Canonical short label (`mse` / `rank`) used by CLI output and
+    /// record provenance.
+    pub fn label(self) -> &'static str {
+        match self {
+            Objective::Regression => "mse",
+            Objective::PairwiseRank => "rank",
+        }
+    }
+}
+
+/// Dedicated RNG stream for rank-loss pair sampling, disjoint from the
+/// search's per-worker streams.
+const RANK_PAIR_STREAM: u64 = 0x9e37_79b9_7f4a_7c15;
+
+/// Sampled pairs per training sample in [`Gbt::fit_ranked`].
+const PAIRS_PER_SAMPLE: usize = 8;
 
 /// One node of a regression tree (flattened arena).
 #[derive(Debug, Clone)]
@@ -278,6 +329,78 @@ impl Gbt {
         }
     }
 
+    /// Fit with the pairwise ranking objective. Labels are scores
+    /// (higher = better); the fit only consumes their *order*.
+    ///
+    /// Pairs `(i, j)` are drawn uniformly with a fixed-stream RNG and
+    /// filtered (self-pairs, label ties) *after* the draw, so the RNG
+    /// consumption depends only on `n` and `seed` — never on label
+    /// values. Together with orientation-by-comparison this makes the
+    /// fit bit-identical under any strictly monotone relabeling, the
+    /// property the objective-layer tests pin. Each boosting round
+    /// accumulates lambda gradients `w / (1 + exp(s_hi − s_lo))` per
+    /// sample and fits a tree to the weighted mean gradient via the same
+    /// [`Tree::fit_w`] the transfer discount uses: a pair's weight is
+    /// `min(w_hi, w_lo)`, so discounted transfer priors enter as
+    /// discounted pairs.
+    ///
+    /// Degenerate inputs (fewer than two samples, or no untied pairs)
+    /// fall back to [`Gbt::fit_weighted`].
+    pub fn fit_ranked(&mut self, xs: &[Vec<f64>], ys: &[f64], ws: &[f64], seed: u64) {
+        assert_eq!(xs.len(), ys.len());
+        assert_eq!(xs.len(), ws.len());
+        let n = xs.len();
+        if n < 2 {
+            return self.fit_weighted(xs, ys, ws);
+        }
+        let mut rng = Rng::for_stream(seed, RANK_PAIR_STREAM);
+        let n_draws = n.saturating_mul(PAIRS_PER_SAMPLE);
+        let mut pairs: Vec<(usize, usize, f64)> = Vec::with_capacity(n_draws);
+        for _ in 0..n_draws {
+            let i = rng.gen_range(n);
+            let j = rng.gen_range(n);
+            if i == j || ys[i] == ys[j] || ws[i] <= 0.0 || ws[j] <= 0.0 {
+                continue;
+            }
+            let (hi, lo) = if ys[i] > ys[j] { (i, j) } else { (j, i) };
+            pairs.push((hi, lo, ws[hi].min(ws[lo])));
+        }
+        if pairs.is_empty() {
+            return self.fit_weighted(xs, ys, ws);
+        }
+        self.trees.clear();
+        self.base = 0.0;
+        // Per-sample weight = total pair mass touching the sample; fixed
+        // across boosting rounds so the split search stays stable.
+        let mut wsum = vec![0.0f64; n];
+        for &(hi, lo, w) in &pairs {
+            wsum[hi] += w;
+            wsum[lo] += w;
+        }
+        let idx: Vec<usize> = (0..n).collect();
+        let mut pred = vec![0.0f64; n];
+        for _ in 0..self.n_trees {
+            let mut grad = vec![0.0f64; n];
+            for &(hi, lo, w) in &pairs {
+                // Negative gradient of ln(1 + e^{-(s_hi − s_lo)}):
+                // push the better sample up, the worse one down.
+                let d = 1.0 / (1.0 + (pred[hi] - pred[lo]).exp());
+                grad[hi] += w * d;
+                grad[lo] -= w * d;
+            }
+            let target: Vec<f64> = grad
+                .iter()
+                .zip(&wsum)
+                .map(|(g, &w)| if w > 0.0 { g / w } else { 0.0 })
+                .collect();
+            let tree = Tree::fit_w(xs, &target, &wsum, &idx, self.depth, self.min_leaf);
+            for (p, x) in pred.iter_mut().zip(xs.iter()) {
+                *p += self.learning_rate * tree.predict(x);
+            }
+            self.trees.push(tree);
+        }
+    }
+
     pub fn predict_one(&self, x: &[f64]) -> f64 {
         self.base
             + self
@@ -411,6 +534,109 @@ mod tests {
             yt.iter().map(|y| (y - mean).powi(2)).sum::<f64>() / yt.len() as f64
         };
         assert!(mse < var * 0.3, "mse {mse} vs var {var}");
+    }
+
+    #[test]
+    fn objective_parse_and_label_round_trip() {
+        assert_eq!(Objective::parse("mse"), Some(Objective::Regression));
+        assert_eq!(Objective::parse("MSE"), Some(Objective::Regression));
+        assert_eq!(Objective::parse("regression"), Some(Objective::Regression));
+        assert_eq!(Objective::parse("rank"), Some(Objective::PairwiseRank));
+        assert_eq!(Objective::parse("pairwise-rank"), Some(Objective::PairwiseRank));
+        assert_eq!(Objective::parse("nope"), None);
+        assert_eq!(Objective::Regression.label(), "mse");
+        assert_eq!(Objective::PairwiseRank.label(), "rank");
+        assert_eq!(Objective::default(), Objective::Regression);
+    }
+
+    #[test]
+    fn ranked_fit_orders_training_data() {
+        let (xs, ys) = synth(200, 21);
+        let ws = vec![1.0; ys.len()];
+        let mut m = Gbt::new(50, 4, 0.15);
+        m.fit_ranked(&xs, &ys, &ws, 5);
+        let pred = m.predict(&xs);
+        let mut conc = 0;
+        let mut total = 0;
+        for i in 0..ys.len() {
+            for j in (i + 1)..ys.len() {
+                if (ys[i] - ys[j]).abs() < 1e-9 {
+                    continue;
+                }
+                total += 1;
+                if (ys[i] > ys[j]) == (pred[i] > pred[j]) {
+                    conc += 1;
+                }
+            }
+        }
+        let tau = conc as f64 / total as f64;
+        assert!(tau > 0.85, "training concordance {tau}");
+    }
+
+    #[test]
+    fn ranked_fit_is_invariant_under_monotone_relabeling() {
+        // Scaling by a power of two is a bit-exact strictly monotone
+        // bijection on the label range here, so order AND float ties are
+        // preserved exactly — the rank fit must not notice.
+        let (xs, ys) = synth(150, 23);
+        let ws = vec![1.0; ys.len()];
+        let scaled: Vec<f64> = ys.iter().map(|y| y * 4.0).collect();
+        let mut a = Gbt::new(40, 4, 0.2);
+        a.fit_ranked(&xs, &ys, &ws, 9);
+        let mut b = Gbt::new(40, 4, 0.2);
+        b.fit_ranked(&xs, &scaled, &ws, 9);
+        let (xt, _) = synth(40, 24);
+        for x in &xt {
+            assert_eq!(
+                a.predict_one(x),
+                b.predict_one(x),
+                "rank objective must only see label order"
+            );
+        }
+        // Regression, by contrast, chases absolute values: the same
+        // relabeling must move its predictions.
+        let mut ra = Gbt::new(40, 4, 0.2);
+        ra.fit(&xs, &ys);
+        let mut rb = Gbt::new(40, 4, 0.2);
+        rb.fit(&xs, &scaled);
+        assert!(
+            xt.iter().any(|x| ra.predict_one(x) != rb.predict_one(x)),
+            "regression should be label-scale sensitive"
+        );
+    }
+
+    #[test]
+    fn ranked_fit_discounts_low_weight_pairs() {
+        // Native samples say feature 0 ranks ascending; heavily
+        // discounted priors say the opposite. The rank fit must follow
+        // the natives.
+        let xs: Vec<Vec<f64>> = (0..32).map(|i| vec![(i % 8) as f64]).collect();
+        let native: Vec<f64> = xs.iter().map(|x| x[0]).collect();
+        let prior: Vec<f64> = xs.iter().map(|x| -x[0]).collect();
+        let all_x: Vec<Vec<f64>> = xs.iter().chain(xs.iter()).cloned().collect();
+        let all_y: Vec<f64> = native.iter().chain(prior.iter()).copied().collect();
+        let mut ws = vec![1.0; native.len()];
+        ws.extend(vec![0.05; prior.len()]);
+        let mut m = Gbt::new(30, 3, 0.3);
+        m.fit_ranked(&all_x, &all_y, &ws, 13);
+        assert!(
+            m.predict_one(&[7.0]) > m.predict_one(&[0.0]),
+            "native ordering must win over discounted priors"
+        );
+    }
+
+    #[test]
+    fn ranked_fit_degenerate_inputs_fall_back() {
+        // Single sample: delegates to the weighted fit.
+        let mut m = Gbt::new(10, 3, 0.3);
+        m.fit_ranked(&[vec![1.0]], &[5.0], &[1.0], 1);
+        assert!((m.predict_one(&[1.0]) - 5.0).abs() < 1e-9);
+        // All-tied labels: no usable pairs, same fallback.
+        let xs = vec![vec![1.0], vec![2.0], vec![3.0]];
+        let ys = vec![7.0, 7.0, 7.0];
+        let mut t = Gbt::new(10, 3, 0.3);
+        t.fit_ranked(&xs, &ys, &[1.0, 1.0, 1.0], 2);
+        assert!((t.predict_one(&[2.5]) - 7.0).abs() < 1e-9);
     }
 
     #[test]

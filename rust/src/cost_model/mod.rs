@@ -9,10 +9,11 @@ pub mod gbt;
 
 pub use feature_cache::{FeatKey, FeatureCache};
 pub use features::{extract, extract_batch, FEAT_DIM};
-pub use gbt::Gbt;
+pub use gbt::{Gbt, Objective};
 
 use crate::tir::Program;
 use crate::util::rng::Rng;
+use std::sync::Arc;
 
 /// Convert a measured latency to the regression target.
 pub fn latency_to_score(latency_s: f64) -> f64 {
@@ -72,6 +73,42 @@ pub trait CostModel: Send + Sync {
         self.update(progs, latencies_s);
     }
     fn name(&self) -> &'static str;
+    /// Provenance label of a *non-default* training objective (e.g.
+    /// `"rank"`), stamped onto committed tuning records. The empty
+    /// string means "the historical default" and keeps record bytes
+    /// identical to pre-objective databases — models without an
+    /// objective knob inherit that.
+    fn objective_label(&self) -> &'static str {
+        ""
+    }
+}
+
+/// Cached handles for the `cost_model_*` metric family. Fetched once per
+/// model construction; observation-only (never changes fits or scores).
+struct CostModelTelemetry {
+    retrains: Arc<crate::telemetry::Counter>,
+    samples: Arc<crate::telemetry::Counter>,
+    prior_samples: Arc<crate::telemetry::Counter>,
+}
+
+impl CostModelTelemetry {
+    fn from_global() -> CostModelTelemetry {
+        let m = crate::telemetry::global();
+        CostModelTelemetry {
+            retrains: m.counter(
+                "cost_model_retrains_total",
+                "GBT cost-model refits over the accumulated sample set",
+            ),
+            samples: m.counter(
+                "cost_model_samples_total",
+                "native measured samples accepted into cost-model training sets",
+            ),
+            prior_samples: m.counter(
+                "cost_model_prior_samples_total",
+                "discounted transfer-prior samples accepted into cost-model training sets",
+            ),
+        }
+    }
 }
 
 /// Tree-boosting cost model (default, as in the paper). Samples carry a
@@ -87,7 +124,15 @@ pub struct GbtCostModel {
     /// Retrain after this many new samples accumulate.
     pub retrain_every: usize,
     staged: usize,
+    /// Training objective; [`Objective::Regression`] is the bit-identical
+    /// historical path.
+    objective: Objective,
+    tel: CostModelTelemetry,
 }
+
+/// Fixed seed for rank-loss pair sampling: per-retrain pair sets must not
+/// depend on thread count or call interleaving, only on the sample set.
+const RANK_FIT_SEED: u64 = 0x5eed_c0de;
 
 impl GbtCostModel {
     pub fn new() -> GbtCostModel {
@@ -98,7 +143,20 @@ impl GbtCostModel {
             ws: Vec::new(),
             retrain_every: 32,
             staged: 0,
+            objective: Objective::Regression,
+            tel: CostModelTelemetry::from_global(),
         }
+    }
+
+    /// A model trained under the given objective (`new()` = regression).
+    pub fn with_objective(objective: Objective) -> GbtCostModel {
+        let mut m = GbtCostModel::new();
+        m.objective = objective;
+        m
+    }
+
+    pub fn objective(&self) -> Objective {
+        self.objective
     }
 
     pub fn n_samples(&self) -> usize {
@@ -107,8 +165,14 @@ impl GbtCostModel {
 
     /// Force a retrain on all accumulated data.
     pub fn retrain(&mut self) {
-        self.model.fit_weighted(&self.xs, &self.ys, &self.ws);
+        match self.objective {
+            Objective::Regression => self.model.fit_weighted(&self.xs, &self.ys, &self.ws),
+            Objective::PairwiseRank => {
+                self.model.fit_ranked(&self.xs, &self.ys, &self.ws, RANK_FIT_SEED)
+            }
+        }
         self.staged = 0;
+        self.tel.retrains.inc();
     }
 
     fn push_samples(&mut self, progs: &[&Program], latencies_s: &[f64], weight: f64) {
@@ -142,6 +206,11 @@ impl GbtCostModel {
             self.ys.push(latency_to_score(l));
             self.ws.push(weight);
             self.staged += 1;
+            if weight >= 1.0 {
+                self.tel.samples.inc();
+            } else {
+                self.tel.prior_samples.inc();
+            }
         }
         if self.staged >= self.retrain_every || !self.model.is_fit() {
             self.retrain();
@@ -220,7 +289,19 @@ impl CostModel for GbtCostModel {
     }
 
     fn name(&self) -> &'static str {
-        "gbt"
+        match self.objective {
+            Objective::Regression => "gbt",
+            Objective::PairwiseRank => "gbt-rank",
+        }
+    }
+
+    fn objective_label(&self) -> &'static str {
+        match self.objective {
+            // Empty for the compat default: record bytes stay identical
+            // to pre-objective databases.
+            Objective::Regression => "",
+            Objective::PairwiseRank => "rank",
+        }
     }
 }
 
@@ -398,6 +479,56 @@ mod tests {
         // The default (ignore-the-cache) trait path: RandomModel.
         let rnd = RandomModel::new(3);
         assert_eq!(rnd.predict(&progs), rnd.predict_cached(&progs, &keys, &cache));
+    }
+
+    #[test]
+    fn default_objective_is_bit_identical_to_historical_path() {
+        // `with_objective(Regression)` and plain `new()` must produce the
+        // exact same fits — the objective knob cannot perturb the compat
+        // default's float sequence.
+        let data = variants();
+        let progs: Vec<&Program> = data.iter().map(|(p, _)| p).collect();
+        let lats: Vec<f64> = data.iter().map(|(_, l)| *l).collect();
+        let mut plain = GbtCostModel::new();
+        let mut explicit = GbtCostModel::with_objective(Objective::Regression);
+        plain.retrain_every = 1;
+        explicit.retrain_every = 1;
+        for _ in 0..3 {
+            plain.update(&progs, &lats);
+            explicit.update(&progs, &lats);
+        }
+        assert_eq!(plain.predict(&progs), explicit.predict(&progs));
+        assert_eq!(plain.name(), "gbt");
+        assert_eq!(plain.objective_label(), "");
+        assert_eq!(explicit.objective(), Objective::Regression);
+    }
+
+    #[test]
+    fn rank_objective_orders_schedule_variants() {
+        let data = variants();
+        let progs: Vec<&Program> = data.iter().map(|(p, _)| p).collect();
+        let lats: Vec<f64> = data.iter().map(|(_, l)| *l).collect();
+        let mut m = GbtCostModel::with_objective(Objective::PairwiseRank);
+        m.retrain_every = 1;
+        for _ in 0..3 {
+            m.update(&progs, &lats);
+        }
+        assert_eq!(m.name(), "gbt-rank");
+        assert_eq!(m.objective_label(), "rank");
+        let pred = m.predict(&progs);
+        let best_true = lats
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        let best_pred = pred
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        assert_eq!(best_true, best_pred, "rank objective must rank the fastest variant first");
     }
 
     #[test]

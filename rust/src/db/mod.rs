@@ -50,6 +50,7 @@
 //!     cand_hash: 1,
 //!     sim_version: "sim".into(),
 //!     rule_set: String::new(),
+//!     objective: String::new(),
 //! });
 //! assert_eq!(db.best_latency(wid), Some(1.0e-5));
 //! assert!(db.has_candidate(wid, 1), "failed or not, a commit dedups");
@@ -346,6 +347,7 @@ mod tests {
                 cand_hash: structural_hash(&sch.prog),
                 sim_version: crate::sim::SIM_VERSION.to_string(),
                 rule_set: String::new(),
+                objective: String::new(),
             });
             committed += 1;
         }
@@ -415,6 +417,7 @@ mod tests {
             cand_hash: cand,
             sim_version: "simtest".into(),
             rule_set: String::new(),
+            objective: String::new(),
         };
         db.commit_record(mk(cpu, 2.0, 1));
         db.commit_record(mk(cpu, 1.0, 2));
@@ -448,6 +451,7 @@ mod tests {
             cand_hash: round,
             sim_version: "simtest".into(),
             rule_set: String::new(),
+            objective: String::new(),
         };
         db.commit_record(mk(vec![3.0], 0));
         db.commit_record(mk(vec![], 1)); // failed

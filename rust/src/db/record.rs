@@ -44,6 +44,12 @@ pub struct TuningRecord {
     /// from ([`crate::ctx::TuneContext::rule_set`]). Empty for
     /// pre-provenance records.
     pub rule_set: String,
+    /// Cost-model objective label the producing search ran under (e.g.
+    /// `"rank"`). Empty means the historical default (squared-error
+    /// regression); the field is then omitted from the JSONL line, so
+    /// default-configuration databases stay byte-identical to
+    /// pre-objective ones.
+    pub objective: String,
 }
 
 impl TuningRecord {
@@ -64,7 +70,7 @@ impl TuningRecord {
     /// failed candidate, which is the honest interpretation).
     pub fn to_json(&self) -> Json {
         let finite = self.latencies.iter().filter(|l| l.is_finite());
-        Json::obj(vec![
+        let mut fields = vec![
             ("kind", Json::str("record")),
             ("workload", Json::num(self.workload as f64)),
             ("trace", Json::str(trace_to_text(&self.trace))),
@@ -75,7 +81,14 @@ impl TuningRecord {
             ("cand", Json::str(format!("{:016x}", self.cand_hash))),
             ("sim", Json::str(self.sim_version.clone())),
             ("rules", Json::str(self.rule_set.clone())),
-        ])
+        ];
+        // Omitted (not written as "") for the default objective: the
+        // absent field is what keeps default-config databases
+        // byte-identical to pre-objective ones.
+        if !self.objective.is_empty() {
+            fields.push(("obj", Json::str(self.objective.clone())));
+        }
+        Json::obj(fields)
     }
 
     /// Parse back from a JSONL object.
@@ -114,6 +127,11 @@ impl TuningRecord {
             .and_then(Json::as_str)
             .unwrap_or("")
             .to_string();
+        let objective = j
+            .get("obj")
+            .and_then(Json::as_str)
+            .unwrap_or("")
+            .to_string();
         Ok(TuningRecord {
             workload,
             trace,
@@ -124,6 +142,7 @@ impl TuningRecord {
             cand_hash,
             sim_version,
             rule_set,
+            objective,
         })
     }
 }
@@ -171,6 +190,7 @@ mod tests {
             cand_hash: 0xdead_beef_cafe_f00d,
             sim_version: crate::sim::SIM_VERSION.to_string(),
             rule_set: "auto-inline,multi-level-tiling".to_string(),
+            objective: String::new(),
         }
     }
 
@@ -226,9 +246,27 @@ mod tests {
         let back = TuningRecord::from_json(&j).unwrap();
         assert_eq!(back.sim_version, "v0");
         assert_eq!(back.rule_set, "");
+        assert_eq!(back.objective, "");
         // And re-serializing writes the defaults explicitly.
         let line = back.to_json().to_string();
         assert!(line.contains("\"sim\""), "{line}");
+    }
+
+    #[test]
+    fn objective_stamp_round_trips_and_default_is_omitted() {
+        // Default (mse) records must serialize WITHOUT an "obj" field —
+        // byte-compat with pre-objective databases.
+        let r = sample_record();
+        assert_eq!(r.objective, "");
+        let line = r.to_json().to_string();
+        assert!(!line.contains("\"obj\""), "default objective leaked into JSONL: {line}");
+        // A non-default objective round-trips.
+        let mut ranked = sample_record();
+        ranked.objective = "rank".to_string();
+        let rline = ranked.to_json().to_string();
+        assert!(rline.contains("\"obj\""), "{rline}");
+        let back = TuningRecord::from_json(&Json::parse(&rline).unwrap()).unwrap();
+        assert_eq!(back, ranked);
     }
 
     #[test]

@@ -853,6 +853,7 @@ mod tests {
             cand_hash: cand,
             sim_version: "simtest".into(),
             rule_set: String::new(),
+            objective: String::new(),
         }
     }
 

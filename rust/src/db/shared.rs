@@ -105,6 +105,7 @@ mod tests {
                             cand_hash: offset + i,
                             sim_version: "simtest".into(),
                             rule_set: String::new(),
+                            objective: String::new(),
                         });
                     }
                 });

@@ -112,6 +112,7 @@ mod tests {
             cand_hash: 0,
             sim_version: "simtest".into(),
             rule_set: String::new(),
+            objective: String::new(),
         };
         db.commit_record(mk(a, Some(2e-6)));
         db.commit_record(mk(a, None));

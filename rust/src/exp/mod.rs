@@ -15,10 +15,10 @@ pub mod fig8;
 pub mod fig9;
 pub mod table1;
 
-use crate::cost_model::GbtCostModel;
+use crate::cost_model::{GbtCostModel, Objective};
 use crate::ctx::TuneContext;
 use crate::db::{Database, InMemoryDb};
-use crate::search::{EvolutionarySearch, SearchConfig, SimMeasurer, TuneResult};
+use crate::search::{Allocation, EvolutionarySearch, SearchConfig, SimMeasurer, TuneResult};
 use crate::sim::Target;
 use crate::tir::{structural_hash, Program};
 use crate::transfer::{TransferConfig, TransferPool};
@@ -53,6 +53,13 @@ pub struct ExpConfig {
     /// `--no-transfer` forces) reproduces the cold-start behaviour
     /// byte for byte.
     pub transfer_from: Option<String>,
+    /// `--alloc` budget-allocation policy for multi-task scheduler runs
+    /// (`tune-model`, fig9/table1). [`Allocation::Greedy`] is the
+    /// byte-compat default; single-task tunes ignore it.
+    pub alloc: Allocation,
+    /// `--objective` cost-model training objective.
+    /// [`Objective::Regression`] (`mse`) is the byte-compat default.
+    pub objective: Objective,
 }
 
 impl Default for ExpConfig {
@@ -66,6 +73,8 @@ impl Default for ExpConfig {
             mutators: None,
             postprocs: None,
             transfer_from: None,
+            alloc: Allocation::Greedy,
+            objective: Objective::Regression,
         }
     }
 }
@@ -164,7 +173,7 @@ pub fn tune_with_ctx_db_pool(
         threads: cfg.threads,
         ..SearchConfig::default()
     });
-    let mut model = GbtCostModel::new();
+    let mut model = GbtCostModel::with_objective(cfg.objective);
     let mut measurer = SimMeasurer::new(ctx.target().clone());
     search.tune_db_transfer(prog, ctx, &mut model, &mut measurer, db, pool, cfg.seed)
 }

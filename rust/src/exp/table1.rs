@@ -72,8 +72,24 @@ pub fn run(target: &Target, cfg: &ExpConfig, models: Option<&[&str]>) -> Report 
         let _ = ts.tune_tasks(&tasks, &ctx, &mut meas, cfg.trials * tasks.len(), cfg.seed);
         let ms_s = t1.elapsed().as_secs_f64() / meas.count().max(1) as f64 * nominal;
 
+        // Same scheduler under gradient allocation + rank objective:
+        // shows what the pluggable policies cost/save in tuning time at
+        // the identical total budget (quality is compared in the
+        // sched-smoke bench, not here).
+        let t2 = Instant::now();
+        let mut gmeas = SimMeasurer::new(target.clone());
+        let mut gts = TaskScheduler::new(SearchConfig {
+            threads: cfg.threads,
+            ..SearchConfig::default()
+        });
+        gts.allocation = crate::search::Allocation::Gradient;
+        gts.objective = crate::cost_model::Objective::PairwiseRank;
+        let _ = gts.tune_tasks(&tasks, &ctx, &mut gmeas, cfg.trials * tasks.len(), cfg.seed);
+        let grad_s = t2.elapsed().as_secs_f64() / gmeas.count().max(1) as f64 * nominal;
+
         report.push(m, "TVM-Ansor", ansor_s);
         report.push(m, "MetaSchedule", ms_s);
+        report.push(m, "MetaSchedule-grad-rank", grad_s);
     }
     let faster = report
         .workloads()
@@ -100,5 +116,6 @@ mod tests {
         let r = run(&Target::cpu_avx512(), &cfg, Some(&["mobilenet-v2"]));
         assert!(r.latency("mobilenet-v2", "TVM-Ansor").unwrap() > 0.0);
         assert!(r.latency("mobilenet-v2", "MetaSchedule").unwrap() > 0.0);
+        assert!(r.latency("mobilenet-v2", "MetaSchedule-grad-rank").unwrap() > 0.0);
     }
 }

@@ -9,6 +9,8 @@
 //!                  [--profile trace.json]          # Chrome-trace spans of the tune (Perfetto)
 //! metaschedule tune-model --model bert-base [--target cpu] [--trials 32] [--db t.jsonl]
 //!                  [--fused]                      # tune the graph-fused task set (fewer, larger tasks)
+//!                  [--alloc round-robin|greedy|gradient]  # task-scheduler budget allocation policy
+//!                  [--objective mse|rank]         # cost-model training objective
 //! metaschedule exp <fig8|fig9|fig10a|fig10b|table1|all> [--target cpu]
 //!                  [--trials N] [--seed S] [--threads N] [--out results.jsonl] [--db t.jsonl]
 //! metaschedule db stats --db t.jsonl             # tuning-database summary (file or sharded dir)
@@ -65,6 +67,14 @@
 //! `--no-feature-cache` disables the per-canonical-trace feature cache
 //! (see docs/ARCHITECTURE.md "Trace IR & interning"); cached vectors are
 //! element-exact, so this only trades wall-clock — never results.
+//!
+//! `--alloc` selects the task scheduler's budget-allocation policy
+//! (`greedy` is the historical default; `gradient` is the Ansor-style
+//! improvement-slope policy; `round-robin` cycles), and `--objective`
+//! the cost model's training objective (`mse` = historical squared-error
+//! regression, `rank` = pairwise rank loss). The defaults reproduce the
+//! pre-flag behaviour byte-for-byte, including database files (see
+//! docs/ARCHITECTURE.md "Task scheduler & allocation policies").
 //! ```
 
 use metaschedule::ctx::TuneContext;
@@ -124,6 +134,8 @@ fn cfg_of(args: &Args) -> ExpConfig {
         rules: args.flag("rules").map(String::from),
         mutators: args.flag("mutators").map(String::from),
         postprocs: args.flag("postprocs").map(String::from),
+        alloc: alloc_of(args),
+        objective: objective_of(args),
         // --no-transfer is the escape hatch: it wins over --transfer-from
         // so a scripted flag can be neutralized without editing the rest
         // of the command line.
@@ -133,6 +145,26 @@ fn cfg_of(args: &Args) -> ExpConfig {
             args.flag("transfer-from").map(String::from)
         },
     }
+}
+
+/// Parse `--alloc` (default `greedy`, the historical behaviour), exiting
+/// with a usage error on an unknown policy name.
+fn alloc_of(args: &Args) -> metaschedule::search::Allocation {
+    let spec = args.flag_or("alloc", "greedy");
+    metaschedule::search::Allocation::parse(&spec).unwrap_or_else(|| {
+        metaschedule::log_error!("unknown allocation policy {spec} (round-robin|greedy|gradient)");
+        std::process::exit(2);
+    })
+}
+
+/// Parse `--objective` (default `mse`, the historical behaviour), exiting
+/// with a usage error on an unknown objective name.
+fn objective_of(args: &Args) -> metaschedule::cost_model::Objective {
+    let spec = args.flag_or("objective", "mse");
+    metaschedule::cost_model::Objective::parse(&spec).unwrap_or_else(|| {
+        metaschedule::log_error!("unknown cost-model objective {spec} (mse|rank)");
+        std::process::exit(2);
+    })
 }
 
 /// Build the tuning context from the `--rules`/`--mutators`/`--postprocs`
@@ -438,11 +470,16 @@ fn tune_model(args: &Args) {
         cfg.trials,
         if fused { ", graph-fused" } else { "" }
     );
+    println!(
+        "scheduler: alloc {} | objective {}",
+        cfg.alloc.label(),
+        cfg.objective.label()
+    );
     if let Some(path) = &cfg.db_path {
         println!("db: {path} (per-task records shared; killed runs resume from it)");
     }
     let vendor = graph::vendor_e2e(&ops, &target);
-    let ms = if fused {
+    let (ms, alloc_report) = if fused {
         // Tune over the fused operator DAG: fewer, larger tasks.
         let g = graph::graph_by_name(&name).expect("by_name succeeded above");
         let groups = graph::fuse(&g);
@@ -453,10 +490,31 @@ fn tune_model(args: &Args) {
             tasks.len(),
             graph::extract_tasks(&ops).len()
         );
-        exp::fig9::metaschedule_fused_e2e(&name, &target, &cfg)
+        exp::fig9::metaschedule_fused_e2e_report(&name, &target, &cfg)
     } else {
-        exp::fig9::metaschedule_e2e(&name, &target, &cfg)
+        exp::fig9::metaschedule_e2e_report(&name, &target, &cfg)
     };
+    // Per-task budget shares: where the scheduler actually spent the
+    // trials (the CI sched-smoke job greps these lines to prove the
+    // gradient policy allocates non-uniformly).
+    for share in &alloc_report.per_task {
+        println!(
+            "alloc[{}] task {}: {} trials over {} round(s), best {:.2} us (weight {}){}",
+            alloc_report.policy,
+            share.name,
+            share.trials,
+            share.rounds,
+            share.best_latency_s * 1e6,
+            share.weight,
+            if share.saturated { ", saturated" } else { "" }
+        );
+    }
+    if alloc_report.early_stop {
+        println!(
+            "alloc[{}]: early stop with {} of {} trials spent (all tasks saturated)",
+            alloc_report.policy, alloc_report.spent, alloc_report.total_trials
+        );
+    }
     println!(
         "vendor (PyTorch-class) e2e {:.3} ms; MetaSchedule e2e {:.3} ms ({:.2}x)",
         vendor * 1e3,

@@ -1,0 +1,592 @@
+//! Pluggable budget-allocation policies for the task scheduler.
+//!
+//! The scheduler's allocation loop is a thin driver: it asks an
+//! [`AllocationPolicy`] to pick the next task, runs one search round
+//! there, and records the outcome in a [`TaskLedger`] — the single
+//! source of truth for per-task spend, best-latency history, and
+//! saturation. Policies are data, mirroring the rule-registry pattern:
+//!
+//! * [`Allocation::RoundRobin`] — cycle tasks in order (the ablation
+//!   baseline).
+//! * [`Allocation::Greedy`] — the historical default: next round to the
+//!   task with the largest *weighted best latency* (occurrences ×
+//!   latency, the [43]-style criterion), now with priority decay on
+//!   non-improving rounds and saturation on dried-up searches so a
+//!   plateaued heavy task can no longer absorb the whole tail budget.
+//! * [`Allocation::Gradient`] — Ansor-style marginal expected gain: the
+//!   recent improvement slope (latency won per trial) × task weight,
+//!   plus an exploration bonus for under-sampled tasks.
+//!
+//! Every policy is a pure function of the ledger, so scheduling stays
+//! deterministic and thread-count-invariant: the ledger is built from
+//! per-round results that are themselves `(seed, threads)`-invariant.
+
+use crate::search::evolutionary::QualityPoint;
+
+/// Consecutive zero-measurement rounds before a task is marked
+/// saturated (its search keeps deduplicating everything it proposes).
+const SATURATION_DRY_ROUNDS: usize = 2;
+
+/// Priority multiplier applied by [`Allocation::Greedy`] after a round
+/// that measured candidates but failed to improve the task's best.
+const GREEDY_DECAY: f64 = 0.5;
+
+/// How many trailing history points the gradient policy's improvement
+/// slope looks at (a window, so long-stale progress stops counting).
+const GRADIENT_WINDOW: usize = 3;
+
+/// Per-task bookkeeping row of the [`TaskLedger`].
+#[derive(Debug, Clone)]
+pub struct TaskEntry {
+    pub name: String,
+    /// Occurrence count of the subgraph in the model.
+    pub weight: usize,
+    /// Trials charged to this task against the global budget.
+    pub spent: usize,
+    /// Scheduling rounds this task has received (warmup included).
+    pub rounds: usize,
+    /// `(cumulative task trials, best-so-far latency)` after each round,
+    /// oldest first. Best-so-far is monotone non-increasing.
+    pub history: Vec<(usize, f64)>,
+    /// Consecutive rounds with zero new measurements.
+    pub dry_rounds: usize,
+    /// Greedy priority decay: 1.0 = fresh, halved per non-improving
+    /// round, reset on improvement.
+    pub decay: f64,
+    /// The task's search has dried up; policies must stop picking it.
+    pub saturated: bool,
+}
+
+impl TaskEntry {
+    /// Best latency observed so far, if any round measured something.
+    pub fn best_latency(&self) -> Option<f64> {
+        self.history.last().map(|&(_, l)| l).filter(|l| l.is_finite())
+    }
+
+    /// Improvement slope over the trailing window: latency won per trial
+    /// (>= 0). Zero until two history points exist or progress stalls.
+    pub fn gain_slope(&self) -> f64 {
+        let n = self.history.len();
+        if n < 2 {
+            return 0.0;
+        }
+        let lo = n.saturating_sub(GRADIENT_WINDOW + 1);
+        let (t0, l0) = self.history[lo];
+        let (t1, l1) = self.history[n - 1];
+        if t1 <= t0 || !l0.is_finite() || !l1.is_finite() {
+            return 0.0;
+        }
+        ((l0 - l1) / (t1 - t0) as f64).max(0.0)
+    }
+}
+
+/// Scheduler-wide trial accounting: the single source of truth the
+/// allocation loop and every policy read. Charging follows the
+/// historical convention (a round burns `used.max(1)` budget units so a
+/// dry round cannot spin for free), and the ledger asserts the
+/// satellite contract `spent <= total_trials + round_trials` whenever
+/// the budget is at least one trial per task.
+#[derive(Debug, Clone)]
+pub struct TaskLedger {
+    pub entries: Vec<TaskEntry>,
+    pub total_trials: usize,
+    pub round_trials: usize,
+    pub spent: usize,
+    /// Global round counter. Starts at `entries.len()` (warmup rounds
+    /// are rounds `0..n`), matching the historical round-seed sequence
+    /// `seed + round * 7919`.
+    pub next_round: usize,
+}
+
+impl TaskLedger {
+    pub fn new(tasks: &[(String, usize)], total_trials: usize, round_trials: usize) -> TaskLedger {
+        let entries = tasks
+            .iter()
+            .map(|(name, weight)| TaskEntry {
+                name: name.clone(),
+                weight: *weight,
+                spent: 0,
+                rounds: 0,
+                history: Vec::new(),
+                dry_rounds: 0,
+                decay: 1.0,
+                saturated: false,
+            })
+            .collect();
+        TaskLedger { entries, total_trials, round_trials, spent: 0, next_round: tasks.len() }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.total_trials.saturating_sub(self.spent)
+    }
+
+    pub fn all_saturated(&self) -> bool {
+        self.entries.iter().all(|e| e.saturated)
+    }
+
+    /// Weighted end-to-end latency estimate from the current bests.
+    /// Tasks with no measurement yet contribute nothing.
+    pub fn e2e_latency(&self) -> f64 {
+        self.entries
+            .iter()
+            .filter_map(|e| e.best_latency().map(|l| l * e.weight as f64))
+            .sum()
+    }
+
+    /// Record a warmup round: charge the trials, seed the history.
+    /// Warmup never decays or saturates — it is the first observation.
+    pub fn charge_warmup(&mut self, ti: usize, used: usize, best_latency_s: f64) {
+        self.charge(ti, used, best_latency_s);
+        let e = &mut self.entries[ti];
+        e.dry_rounds = 0;
+        e.decay = 1.0;
+        e.saturated = false;
+    }
+
+    /// Record an allocation round and update the decay/saturation state:
+    /// an improving round resets the task's priority, a measured but
+    /// non-improving round decays it, and `SATURATION_DRY_ROUNDS`
+    /// consecutive zero-measurement rounds retire the task.
+    pub fn charge_round(&mut self, ti: usize, used: usize, best_latency_s: f64) {
+        let improved = match self.entries[ti].best_latency() {
+            Some(old) => best_latency_s.is_finite() && best_latency_s < old,
+            None => best_latency_s.is_finite(),
+        };
+        self.charge(ti, used, best_latency_s);
+        let e = &mut self.entries[ti];
+        if used == 0 {
+            e.dry_rounds += 1;
+            if e.dry_rounds >= SATURATION_DRY_ROUNDS {
+                e.saturated = true;
+            }
+        } else {
+            e.dry_rounds = 0;
+        }
+        if improved {
+            e.decay = 1.0;
+        } else {
+            e.decay *= GREEDY_DECAY;
+        }
+    }
+
+    fn charge(&mut self, ti: usize, used: usize, best_latency_s: f64) {
+        let charged = used.max(1);
+        self.spent += charged;
+        let e = &mut self.entries[ti];
+        e.spent += charged;
+        e.rounds += 1;
+        let best = match e.best_latency() {
+            Some(old) if old <= best_latency_s || !best_latency_s.is_finite() => old,
+            _ => best_latency_s,
+        };
+        e.history.push((e.spent, best));
+        // Satellite contract: the loop's grant capping keeps total spend
+        // within one round of the budget. (A budget under one trial per
+        // task inherently overshoots — every task still warms up once.)
+        if self.total_trials >= self.entries.len() {
+            assert!(
+                self.spent <= self.total_trials + self.round_trials,
+                "ledger overspent: {} of {} (+{} round slack)",
+                self.spent,
+                self.total_trials,
+                self.round_trials
+            );
+        }
+    }
+}
+
+/// A budget-allocation policy: given the ledger, pick the next task to
+/// grant a round to, or `None` to stop early (every task saturated).
+/// Policies must be deterministic functions of the ledger.
+pub trait AllocationPolicy {
+    fn pick(&mut self, ledger: &TaskLedger) -> Option<usize>;
+    fn name(&self) -> &'static str;
+}
+
+/// Cycle through non-saturated tasks in task order.
+pub struct RoundRobin;
+
+impl AllocationPolicy for RoundRobin {
+    fn pick(&mut self, ledger: &TaskLedger) -> Option<usize> {
+        let n = ledger.entries.len();
+        (0..n)
+            .map(|k| (ledger.next_round + k) % n)
+            .find(|&ti| !ledger.entries[ti].saturated)
+    }
+
+    fn name(&self) -> &'static str {
+        "round-robin"
+    }
+}
+
+/// The historical criterion: largest `weight × best latency`, damped by
+/// the per-task decay. Never-measured tasks rank first. Ties keep the
+/// historical last-max resolution (highest index wins).
+pub struct Greedy;
+
+fn pick_max_by_score(ledger: &TaskLedger, score: impl Fn(&TaskEntry) -> f64) -> Option<usize> {
+    ledger
+        .entries
+        .iter()
+        .enumerate()
+        .filter(|(_, e)| !e.saturated)
+        .max_by(|(_, a), (_, b)| score(a).partial_cmp(&score(b)).unwrap())
+        .map(|(ti, _)| ti)
+}
+
+impl AllocationPolicy for Greedy {
+    fn pick(&mut self, ledger: &TaskLedger) -> Option<usize> {
+        pick_max_by_score(ledger, |e| match e.best_latency() {
+            Some(l) => l * e.weight as f64 * e.decay,
+            None => f64::INFINITY,
+        })
+    }
+
+    fn name(&self) -> &'static str {
+        "greedy"
+    }
+}
+
+/// Ansor-style marginal expected gain: the task whose recent rounds won
+/// the most weighted latency per trial, with an exploration bonus for
+/// under-sampled tasks. Falls back to the greedy weighted-latency score
+/// when no task shows recent improvement (all slopes zero), so the tail
+/// budget still goes where the end-to-end time lives.
+pub struct GradientGain {
+    /// Exploration bonus scale; 0 disables the bonus.
+    pub explore: f64,
+}
+
+impl Default for GradientGain {
+    fn default() -> GradientGain {
+        GradientGain { explore: 0.25 }
+    }
+}
+
+impl AllocationPolicy for GradientGain {
+    fn pick(&mut self, ledger: &TaskLedger) -> Option<usize> {
+        let score = |e: &TaskEntry| match e.best_latency() {
+            None => f64::INFINITY,
+            Some(best) => {
+                let gain = e.gain_slope() * e.weight as f64;
+                // Bonus dimension matches the slope (latency per trial):
+                // a cheap, barely-sampled task stays worth probing.
+                let bonus = self.explore * e.weight as f64 * best / (e.spent + 1) as f64;
+                gain + bonus
+            }
+        };
+        let best_ti = pick_max_by_score(ledger, score)?;
+        if score(&ledger.entries[best_ti]) > 0.0 {
+            return Some(best_ti);
+        }
+        // Every live task scored zero (no recent improvement, no
+        // exploration bonus): fall back to the greedy criterion.
+        pick_max_by_score(ledger, |e| match e.best_latency() {
+            Some(l) => l * e.weight as f64 * e.decay,
+            None => f64::INFINITY,
+        })
+    }
+
+    fn name(&self) -> &'static str {
+        "gradient"
+    }
+}
+
+/// Budget-allocation strategy across tasks (the CLI-facing kind).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Allocation {
+    RoundRobin,
+    /// Weighted-best-latency greedy — the compat default.
+    Greedy,
+    /// Ansor-style marginal-gain allocation.
+    Gradient,
+}
+
+impl Default for Allocation {
+    fn default() -> Allocation {
+        Allocation::Greedy
+    }
+}
+
+impl Allocation {
+    /// Parse a CLI spelling. Returns `None` on unknown names.
+    pub fn parse(s: &str) -> Option<Allocation> {
+        match s.to_ascii_lowercase().as_str() {
+            "round-robin" | "roundrobin" | "rr" => Some(Allocation::RoundRobin),
+            "greedy" => Some(Allocation::Greedy),
+            "gradient" | "grad" => Some(Allocation::Gradient),
+            _ => None,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Allocation::RoundRobin => "round-robin",
+            Allocation::Greedy => "greedy",
+            Allocation::Gradient => "gradient",
+        }
+    }
+
+    /// Instantiate the policy this kind names.
+    pub fn policy(self) -> Box<dyn AllocationPolicy> {
+        match self {
+            Allocation::RoundRobin => Box::new(RoundRobin),
+            Allocation::Greedy => Box::new(Greedy),
+            Allocation::Gradient => Box::new(GradientGain::default()),
+        }
+    }
+}
+
+/// One task's share of the budget, for reports and CLI output.
+#[derive(Debug, Clone)]
+pub struct TaskShare {
+    pub name: String,
+    pub weight: usize,
+    pub trials: usize,
+    pub rounds: usize,
+    pub best_latency_s: f64,
+    pub saturated: bool,
+}
+
+/// How a scheduler run spent its budget: per-task shares plus the
+/// scheduler-level time-to-quality curve (cumulative trials vs weighted
+/// end-to-end latency).
+#[derive(Debug, Clone)]
+pub struct AllocationReport {
+    pub policy: &'static str,
+    /// Objective label of the per-task cost models (`mse` / `rank`).
+    pub objective: &'static str,
+    pub total_trials: usize,
+    pub spent: usize,
+    /// Allocation rounds granted after warmup.
+    pub rounds: usize,
+    /// The loop stopped before the budget ran out (all tasks saturated).
+    pub early_stop: bool,
+    pub per_task: Vec<TaskShare>,
+    pub curve: Vec<QualityPoint>,
+}
+
+impl AllocationReport {
+    pub fn from_ledger(
+        policy: &'static str,
+        objective: &'static str,
+        ledger: &TaskLedger,
+        curve: Vec<QualityPoint>,
+        early_stop: bool,
+    ) -> AllocationReport {
+        AllocationReport {
+            policy,
+            objective,
+            total_trials: ledger.total_trials,
+            spent: ledger.spent,
+            rounds: ledger.next_round - ledger.entries.len(),
+            early_stop,
+            per_task: ledger
+                .entries
+                .iter()
+                .map(|e| TaskShare {
+                    name: e.name.clone(),
+                    weight: e.weight,
+                    trials: e.spent,
+                    rounds: e.rounds,
+                    best_latency_s: e.best_latency().unwrap_or(f64::INFINITY),
+                    saturated: e.saturated,
+                })
+                .collect(),
+            curve,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ledger2() -> TaskLedger {
+        TaskLedger::new(
+            &[("heavy".to_string(), 10), ("light".to_string(), 1)],
+            1024,
+            16,
+        )
+    }
+
+    fn warm(ledger: &mut TaskLedger, bests: &[f64]) {
+        for (ti, &b) in bests.iter().enumerate() {
+            ledger.charge_warmup(ti, 16, b);
+        }
+    }
+
+    #[test]
+    fn parse_and_labels() {
+        assert_eq!(Allocation::parse("greedy"), Some(Allocation::Greedy));
+        assert_eq!(Allocation::parse("ROUND-ROBIN"), Some(Allocation::RoundRobin));
+        assert_eq!(Allocation::parse("rr"), Some(Allocation::RoundRobin));
+        assert_eq!(Allocation::parse("gradient"), Some(Allocation::Gradient));
+        assert_eq!(Allocation::parse("nope"), None);
+        assert_eq!(Allocation::default(), Allocation::Greedy);
+        for a in [Allocation::RoundRobin, Allocation::Greedy, Allocation::Gradient] {
+            assert_eq!(a.policy().name(), a.label());
+        }
+    }
+
+    #[test]
+    fn greedy_picks_largest_weighted_latency() {
+        let mut ledger = ledger2();
+        warm(&mut ledger, &[1e-3, 5e-3]);
+        // 10 * 1e-3 = 1e-2 > 1 * 5e-3.
+        assert_eq!(Greedy.pick(&ledger), Some(0));
+        // Never-measured tasks outrank everything.
+        let mut l3 = TaskLedger::new(
+            &[("a".into(), 1), ("b".into(), 1)],
+            1024,
+            16,
+        );
+        l3.charge_warmup(0, 16, 1.0);
+        assert_eq!(Greedy.pick(&l3), Some(1));
+    }
+
+    #[test]
+    fn greedy_decay_prevents_starvation() {
+        // Satellite regression: a non-improving heavy task must not
+        // absorb more than half of the post-warmup rounds.
+        let mut ledger = ledger2();
+        warm(&mut ledger, &[1e-3, 5e-4]);
+        let mut policy = Greedy;
+        let rounds = 24;
+        let mut heavy_picks = 0;
+        let mut light_best = 5e-4;
+        for _ in 0..rounds {
+            let ti = policy.pick(&ledger).expect("nothing saturated here");
+            if ti == 0 {
+                heavy_picks += 1;
+                // The heavy task has plateaued: measured but no gain.
+                ledger.charge_round(0, 16, 1e-3);
+            } else {
+                // The light task keeps improving a little every round.
+                light_best *= 0.99;
+                ledger.charge_round(1, 16, light_best);
+            }
+            ledger.next_round += 1;
+        }
+        assert!(
+            heavy_picks * 2 <= rounds,
+            "plateaued heavy task took {heavy_picks} of {rounds} rounds"
+        );
+        assert!(heavy_picks >= 1, "decay must not blacklist the heavy task outright");
+    }
+
+    #[test]
+    fn dry_rounds_saturate_and_stop_the_loop() {
+        let mut ledger = ledger2();
+        warm(&mut ledger, &[1e-3, 5e-3]);
+        // Both searches dry up: zero measurements, repeatedly.
+        for _ in 0..SATURATION_DRY_ROUNDS {
+            ledger.charge_round(0, 0, 1e-3);
+            ledger.charge_round(1, 0, 5e-3);
+        }
+        assert!(ledger.all_saturated());
+        assert_eq!(Greedy.pick(&ledger), None);
+        assert_eq!(RoundRobin.pick(&ledger), None);
+        assert_eq!(GradientGain::default().pick(&ledger), None);
+        // An improving round would have reset the dry counter instead.
+        let mut l2 = ledger2();
+        warm(&mut l2, &[1e-3, 5e-3]);
+        l2.charge_round(0, 0, 1e-3);
+        l2.charge_round(0, 8, 9e-4);
+        assert!(!l2.entries[0].saturated);
+        assert_eq!(l2.entries[0].dry_rounds, 0);
+    }
+
+    #[test]
+    fn round_robin_cycles_and_skips_saturated() {
+        let mut ledger = TaskLedger::new(
+            &[("a".into(), 1), ("b".into(), 1), ("c".into(), 1)],
+            1024,
+            16,
+        );
+        warm(&mut ledger, &[1.0, 1.0, 1.0]);
+        let mut rr = RoundRobin;
+        // next_round starts at 3 => 3 % 3 == 0.
+        assert_eq!(rr.pick(&ledger), Some(0));
+        ledger.next_round += 1;
+        assert_eq!(rr.pick(&ledger), Some(1));
+        // Saturate task 2: the wheel skips it.
+        ledger.entries[2].saturated = true;
+        ledger.next_round += 1; // would be task 2's turn
+        assert_eq!(rr.pick(&ledger), Some(0));
+    }
+
+    #[test]
+    fn gradient_prefers_steeper_weighted_slope() {
+        let mut ledger = ledger2();
+        warm(&mut ledger, &[1e-3, 1e-3]);
+        // Heavy task improves 1e-4 over 16 trials; light improves 5e-4.
+        ledger.charge_round(0, 16, 9e-4);
+        ledger.charge_round(1, 16, 5e-4);
+        // Weighted slopes: 10 * (1e-4/16) ≈ 6.3e-5 vs 1 * (5e-4/16) ≈ 3.1e-5.
+        assert_eq!(GradientGain { explore: 0.0 }.pick(&ledger), Some(0));
+        // Stall the heavy task long enough for its window to forget the
+        // old gain; the still-improving light task takes over.
+        for _ in 0..(GRADIENT_WINDOW + 1) {
+            ledger.charge_round(0, 16, 9e-4);
+        }
+        ledger.charge_round(1, 16, 4.5e-4);
+        assert_eq!(GradientGain { explore: 0.0 }.pick(&ledger), Some(1));
+    }
+
+    #[test]
+    fn gradient_zero_slope_falls_back_to_greedy() {
+        let mut ledger = ledger2();
+        warm(&mut ledger, &[1e-3, 5e-3]);
+        // No allocation rounds yet: every slope is zero. With the bonus
+        // disabled the policy must fall back to weighted-latency greedy.
+        assert_eq!(GradientGain { explore: 0.0 }.pick(&ledger), Greedy.pick(&ledger));
+        // The exploration bonus instead probes the under-sampled task.
+        let mut l2 = ledger2();
+        l2.charge_warmup(0, 64, 1e-3);
+        l2.charge_warmup(1, 4, 1e-3);
+        let pick = GradientGain { explore: 0.5 }.pick(&l2);
+        assert_eq!(pick, Some(1), "bonus must favour the barely-sampled task");
+    }
+
+    #[test]
+    fn ledger_charges_like_the_historical_loop() {
+        let mut ledger = ledger2();
+        // A dry round still burns one budget unit (no free spinning).
+        ledger.charge_warmup(0, 0, f64::INFINITY);
+        assert_eq!(ledger.spent, 1);
+        assert_eq!(ledger.entries[0].best_latency(), None);
+        ledger.charge_warmup(1, 16, 2e-3);
+        assert_eq!(ledger.spent, 17);
+        // Best-so-far is monotone: a worse later round cannot regress it.
+        ledger.charge_round(1, 16, 9e-3);
+        assert_eq!(ledger.entries[1].best_latency(), Some(2e-3));
+        assert_eq!(ledger.entries[1].spent, 32);
+        assert!((ledger.e2e_latency() - 2e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "ledger overspent")]
+    fn ledger_asserts_budget_contract() {
+        let mut ledger = TaskLedger::new(&[("a".into(), 1)], 8, 4);
+        // Charging far past total + round_trials must trip the assert.
+        ledger.charge_warmup(0, 8, 1e-3);
+        ledger.charge_round(0, 8, 1e-3);
+    }
+
+    #[test]
+    fn report_summarizes_ledger() {
+        let mut ledger = ledger2();
+        warm(&mut ledger, &[1e-3, 5e-3]);
+        ledger.charge_round(0, 16, 8e-4);
+        ledger.next_round += 1;
+        let report = AllocationReport::from_ledger("greedy", "mse", &ledger, Vec::new(), false);
+        assert_eq!(report.policy, "greedy");
+        assert_eq!(report.rounds, 1);
+        assert_eq!(report.spent, 48);
+        assert_eq!(report.per_task.len(), 2);
+        assert_eq!(report.per_task[0].trials, 32);
+        assert!((report.per_task[0].best_latency_s - 8e-4).abs() < 1e-12);
+        assert!(!report.early_stop);
+    }
+}

@@ -405,6 +405,9 @@ impl EvolutionarySearch {
         // history.
         let mut warm_span = ctx.span("warm-start", "search");
         let target_name = measurer.target_name();
+        // Provenance stamp for every record this run commits: empty for
+        // the default regression objective (field omitted on disk).
+        let objective_stamp = model.objective_label().to_string();
         // Hashed once per tune call: workload registration, feature-cache
         // keys, and dedup all share it.
         let wl_hash = structural_hash(prog);
@@ -533,6 +536,7 @@ impl EvolutionarySearch {
                     cand_hash,
                     sim_version: crate::sim::SIM_VERSION.to_string(),
                     rule_set: ctx.rule_set().to_string(),
+                    objective: objective_stamp.clone(),
                 });
                 transferred_records += 1;
                 // Invalid on this target: recorded (so nothing retries
@@ -703,6 +707,7 @@ impl EvolutionarySearch {
                     cand_hash,
                     sim_version: crate::sim::SIM_VERSION.to_string(),
                     rule_set: ctx.rule_set().to_string(),
+                    objective: objective_stamp.clone(),
                 });
                 // Invalid on hardware (e.g. scratchpad overflow) -> skipped,
                 // exactly like the paper's validator rejections.

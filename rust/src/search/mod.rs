@@ -9,15 +9,20 @@
 //! this layer; that compile-time inversion is what makes custom rules
 //! first-class (see `rust/tests/space_registry.rs`).
 
+pub mod allocation;
 pub mod evolutionary;
 pub mod parallel;
 pub mod task_scheduler;
 
 // Re-exported for benches/property tests that mutate traces standalone.
 pub use crate::ctx::mutate;
+pub use allocation::{
+    Allocation, AllocationPolicy, AllocationReport, GradientGain, Greedy, RoundRobin, TaskLedger,
+    TaskShare,
+};
 pub use evolutionary::{EvolutionarySearch, QualityPoint, ReplaySearch, SearchConfig, TuneResult};
 pub use parallel::{BoundedQueue, MeasureRecord, SharedMeasurer};
-pub use task_scheduler::{Allocation, Task, TaskScheduler};
+pub use task_scheduler::{Task, TaskScheduler};
 
 use crate::sim::{simulate, Target};
 use crate::tir::Program;

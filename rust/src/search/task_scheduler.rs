@@ -1,25 +1,29 @@
 //! Task scheduler: allocates the measurement budget across the subgraph
-//! tasks extracted from an end-to-end model. Round-robin warmup followed by
-//! gradient-style allocation — each round goes to the task whose weighted
-//! best latency (occurrences x latency) dominates the end-to-end time, the
-//! same greedy criterion used by task schedulers in [43]-style systems.
+//! tasks extracted from an end-to-end model. Round-robin warmup followed
+//! by policy-driven allocation rounds: the loop itself is a thin driver
+//! that asks an [`AllocationPolicy`] to pick the next task from the
+//! [`TaskLedger`] (per-task spend, best-latency history, saturation) and
+//! runs one search round there. Policies — round-robin, the historical
+//! weighted-best-latency greedy, Ansor-style gradient gain — live in
+//! [`crate::search::allocation`].
 //!
 //! The warmup phase is embarrassingly parallel (every task runs exactly
 //! one round with its own cost model and design space), so it executes
 //! across worker threads against a [`SharedMeasurer`]; results merge in
-//! task order, keeping the schedule deterministic. Gradient rounds are
-//! inherently sequential — each allocation decision depends on all
-//! results so far — and stay on the coordinator, but the searches they
-//! launch still parallelize internally (chain parallelism + the
-//! measurement pipeline).
+//! task order, keeping the schedule deterministic. Allocation rounds are
+//! inherently sequential — each decision depends on all results so far —
+//! and stay on the coordinator, but the searches they launch still
+//! parallelize internally (chain parallelism + the measurement pipeline).
 
-use crate::cost_model::GbtCostModel;
+use crate::cost_model::{GbtCostModel, Objective};
 use crate::ctx::TuneContext;
 use crate::db::{Database, InMemoryDb, SharedDb};
-use crate::search::evolutionary::{EvolutionarySearch, SearchConfig, TuneResult};
+use crate::search::allocation::{Allocation, AllocationPolicy, AllocationReport, TaskLedger};
+use crate::search::evolutionary::{EvolutionarySearch, QualityPoint, SearchConfig, TuneResult};
 use crate::search::parallel::{parallel_map, SharedMeasurer};
 use crate::search::Measurer;
 use crate::tir::{structural_hash, Program};
+use std::sync::Arc;
 
 /// One tuning task: a deduplicated subgraph with its occurrence count.
 #[derive(Debug, Clone)]
@@ -30,17 +34,49 @@ pub struct Task {
     pub weight: usize,
 }
 
-/// Budget-allocation strategy across tasks.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum Allocation {
-    RoundRobin,
-    /// Greedy: next round to the task with the largest weighted latency.
-    Gradient,
+/// Cached handles for the `sched_*` metric family. Observation-only:
+/// nothing in the scheduling decisions reads a counter.
+struct SchedTelemetry {
+    warmup_rounds: Arc<crate::telemetry::Counter>,
+    rounds: Arc<crate::telemetry::Counter>,
+    trials: Arc<crate::telemetry::Counter>,
+    saturated: Arc<crate::telemetry::Counter>,
+    early_stops: Arc<crate::telemetry::Counter>,
+}
+
+impl SchedTelemetry {
+    fn from_global() -> SchedTelemetry {
+        let m = crate::telemetry::global();
+        SchedTelemetry {
+            warmup_rounds: m.counter(
+                "sched_warmup_rounds_total",
+                "per-task warmup rounds run by the task scheduler",
+            ),
+            rounds: m.counter(
+                "sched_rounds_total",
+                "post-warmup allocation rounds granted by the task scheduler",
+            ),
+            trials: m.counter(
+                "sched_trials_total",
+                "trials charged against scheduler budgets (warmup + allocation)",
+            ),
+            saturated: m.counter(
+                "sched_saturated_total",
+                "tasks retired as saturated (search dried up) during scheduling",
+            ),
+            early_stops: m.counter(
+                "sched_early_stops_total",
+                "scheduler runs that stopped before budget exhaustion (all tasks saturated)",
+            ),
+        }
+    }
 }
 
 pub struct TaskScheduler {
     pub cfg: SearchConfig,
     pub allocation: Allocation,
+    /// Training objective for the per-task cost models.
+    pub objective: Objective,
     /// Trials given to a task per scheduling round.
     pub round_trials: usize,
 }
@@ -49,7 +85,8 @@ impl TaskScheduler {
     pub fn new(cfg: SearchConfig) -> TaskScheduler {
         TaskScheduler {
             cfg,
-            allocation: Allocation::Gradient,
+            allocation: Allocation::Greedy,
+            objective: Objective::Regression,
             round_trials: 32,
         }
     }
@@ -97,7 +134,26 @@ impl TaskScheduler {
         total_trials: usize,
         seed: u64,
     ) -> Vec<TuneResult> {
+        self.tune_tasks_report(tasks, ctx, measurer, db, total_trials, seed).0
+    }
+
+    /// Like [`Self::tune_tasks_with_db`], additionally returning the
+    /// [`AllocationReport`]: per-task budget shares and the scheduler-
+    /// level time-to-quality curve. The report is observation-only — the
+    /// tuning results and database bytes are identical with or without
+    /// reading it.
+    pub fn tune_tasks_report(
+        &self,
+        tasks: &[Task],
+        ctx: &TuneContext,
+        measurer: &mut dyn Measurer,
+        db: &mut dyn Database,
+        total_trials: usize,
+        seed: u64,
+    ) -> (Vec<TuneResult>, AllocationReport) {
         assert!(!tasks.is_empty());
+        let started = std::time::Instant::now();
+        let tel = SchedTelemetry::from_global();
         let threads = self.cfg.resolved_threads();
         // Register every workload up front, in task order, so ids (and
         // any new JSONL registry lines) are deterministic, and snapshot
@@ -109,7 +165,10 @@ impl TaskScheduler {
             .collect();
         let has_history: Vec<bool> = wids.iter().map(|&w| db.best_latency(w).is_some()).collect();
         let shared_db = SharedDb::new(db);
-        let mut models: Vec<GbtCostModel> = tasks.iter().map(|_| GbtCostModel::new()).collect();
+        let mut models: Vec<GbtCostModel> = tasks
+            .iter()
+            .map(|_| GbtCostModel::with_objective(self.objective))
+            .collect();
         // Design spaces generated ONCE per task; later rounds re-execute
         // the recorded traces (§4 execution tracing) instead of re-running
         // the space construction.
@@ -159,37 +218,45 @@ impl TaskScheduler {
                 );
                 (r, model)
             });
+        // The ledger is the single source of truth for budget accounting:
+        // warmup charges follow the historical `trials.max(1)` convention
+        // and the allocation loop's grant capping keeps total spend
+        // within one round of the budget (asserted inside the ledger).
+        let task_meta: Vec<(String, usize)> =
+            tasks.iter().map(|t| (t.name.clone(), t.weight)).collect();
+        let mut ledger = TaskLedger::new(&task_meta, total_trials, self.round_trials);
         let mut results: Vec<Option<TuneResult>> = Vec::with_capacity(tasks.len());
-        for (r, model) in warmed {
+        for (ti, (r, model)) in warmed.into_iter().enumerate() {
+            ledger.charge_warmup(ti, r.trials, r.best_latency_s);
+            tel.warmup_rounds.inc();
+            tel.trials.add(r.trials as u64);
             models.push(model);
             results.push(Some(r));
         }
-        let mut spent: usize = results
-            .iter()
-            .map(|r| r.as_ref().map(|r| r.trials.max(1)).unwrap_or(0))
-            .sum();
+        let mut curve: Vec<QualityPoint> = vec![QualityPoint {
+            trials: ledger.spent,
+            best_latency_s: ledger.e2e_latency(),
+            wall_ms: started.elapsed().as_secs_f64() * 1e3,
+        }];
 
-        // Allocation rounds: sequential greedy (or round-robin) refinement
-        // until the budget is exhausted.
-        let mut round = tasks.len();
-        while spent < total_trials {
-            let ti = if self.allocation == Allocation::RoundRobin {
-                round % tasks.len()
-            } else {
-                // Greedy: largest weighted best-latency.
-                (0..tasks.len())
-                    .max_by(|&a, &b| {
-                        let w = |i: usize| {
-                            results[i]
-                                .as_ref()
-                                .map(|r| r.best_latency_s * tasks[i].weight as f64)
-                                .unwrap_or(f64::INFINITY)
-                        };
-                        w(a).partial_cmp(&w(b)).unwrap()
-                    })
-                    .unwrap()
+        // Allocation rounds: the policy picks, the loop runs one search
+        // round there, the ledger records the outcome. Sequential by
+        // design — each decision depends on all results so far.
+        let mut policy: Box<dyn AllocationPolicy> = self.allocation.policy();
+        let mut early_stop = false;
+        while ledger.spent < total_trials {
+            let ti = match policy.pick(&ledger) {
+                Some(ti) => ti,
+                None => {
+                    // Every task saturated: spending the rest of the
+                    // budget would only re-measure dead ends.
+                    early_stop = true;
+                    tel.early_stops.inc();
+                    break;
+                }
             };
-            let trials = self.round_trials.min(total_trials - spent);
+            let round = ledger.next_round;
+            let trials = self.round_trials.min(total_trials - ledger.spent);
             let search = EvolutionarySearch::new(self.round_cfg(trials, self.cfg.threads));
             // Warm-start with the task's best trace so later rounds refine
             // rather than restart from scratch (the database adds its own
@@ -211,7 +278,9 @@ impl TaskScheduler {
                 None,
                 seed.wrapping_add(round as u64 * 7919),
             );
-            spent += r.trials.max(1);
+            ledger.charge_round(ti, r.trials, r.best_latency_s);
+            tel.rounds.inc();
+            tel.trials.add(r.trials as u64);
             // Keep the better of old/new results.
             let better = results[ti]
                 .as_ref()
@@ -220,13 +289,27 @@ impl TaskScheduler {
             if better {
                 results[ti] = Some(r);
             }
-            round += 1;
+            ledger.next_round += 1;
+            curve.push(QualityPoint {
+                trials: ledger.spent,
+                best_latency_s: ledger.e2e_latency(),
+                wall_ms: started.elapsed().as_secs_f64() * 1e3,
+            });
         }
-        results
+        tel.saturated.add(ledger.entries.iter().filter(|e| e.saturated).count() as u64);
+        let report = AllocationReport::from_ledger(
+            policy.name(),
+            self.objective.label(),
+            &ledger,
+            curve,
+            early_stop,
+        );
+        let results = results
             .into_iter()
             .enumerate()
             .map(|(i, r)| r.unwrap_or_else(|| panic!("task {i} never tuned")))
-            .collect()
+            .collect();
+        (results, report)
     }
 
     /// End-to-end latency estimate: weighted sum of per-task best latency.
@@ -287,17 +370,58 @@ mod tests {
     }
 
     #[test]
-    fn gradient_allocation_prefers_heavy_task() {
-        // With gradient allocation the heavy task (weight x latency larger)
-        // should receive at least as many trials as the light one.
+    fn greedy_allocation_prefers_heavy_task() {
+        // With the default greedy allocation the heavy task (weight x
+        // latency larger) should receive at least as many trials as the
+        // light one.
         let target = Target::cpu_avx512();
         let ctx = TuneContext::generic(target.clone());
         let mut measurer = SimMeasurer::new(target);
         let mut ts = TaskScheduler::new(quick_cfg());
+        assert_eq!(ts.allocation, Allocation::Greedy);
+        assert_eq!(ts.objective, Objective::Regression);
         ts.round_trials = 16;
         let tasks = tiny_tasks();
         let results = ts.tune_tasks(&tasks, &ctx, &mut measurer, 96, 1);
         assert!(results[0].trials >= results[1].trials);
+    }
+
+    #[test]
+    fn gradient_rank_configuration_tunes_all_tasks() {
+        // The new policy/objective pair must run end-to-end: every task
+        // tuned, budget respected within one round, report consistent.
+        let target = Target::cpu_avx512();
+        let ctx = TuneContext::generic(target.clone());
+        let mut measurer = SimMeasurer::new(target);
+        let mut ts = TaskScheduler::new(quick_cfg());
+        ts.allocation = Allocation::Gradient;
+        ts.objective = Objective::PairwiseRank;
+        ts.round_trials = 16;
+        let tasks = tiny_tasks();
+        let mut db = crate::db::InMemoryDb::new();
+        let (results, report) =
+            ts.tune_tasks_report(&tasks, &ctx, &mut measurer, &mut db, 96, 5);
+        assert_eq!(results.len(), 2);
+        for r in &results {
+            assert!(r.best_latency_s.is_finite() && r.best_latency_s > 0.0);
+        }
+        assert_eq!(report.policy, "gradient");
+        assert_eq!(report.objective, "rank");
+        assert_eq!(report.total_trials, 96);
+        assert!(report.spent <= 96 + ts.round_trials);
+        assert_eq!(report.per_task.len(), 2);
+        assert_eq!(
+            report.per_task.iter().map(|s| s.trials).sum::<usize>(),
+            report.spent,
+            "per-task shares must add up to the global spend"
+        );
+        // The curve tracks warmup plus each allocation round and its
+        // end-to-end estimate never worsens (bests are monotone).
+        assert_eq!(report.curve.len(), 1 + report.rounds);
+        for w in report.curve.windows(2) {
+            assert!(w[1].best_latency_s <= w[0].best_latency_s + 1e-12);
+            assert!(w[1].trials >= w[0].trials);
+        }
     }
 
     #[test]

@@ -56,6 +56,7 @@ impl ServedWorkload {
 ///     cand_hash: 7,
 ///     sim_version: "sim".into(),
 ///     rule_set: String::new(),
+///     objective: String::new(),
 /// });
 ///
 /// let cache = ServingCache::build(&db, ServingCache::DEFAULT_TOP_K);
@@ -306,6 +307,7 @@ mod tests {
             cand_hash: cand,
             sim_version: "simtest".into(),
             rule_set: String::new(),
+            objective: String::new(),
         }
     }
 
@@ -435,6 +437,7 @@ mod tests {
                 cand_hash: structural_hash(&sch.prog),
                 sim_version: crate::sim::SIM_VERSION.to_string(),
                 rule_set: String::new(),
+                objective: String::new(),
             });
             committed += 1;
         }

@@ -349,6 +349,7 @@ mod tests {
             cand_hash: 1,
             sim_version: "simtest".into(),
             rule_set: String::new(),
+            objective: String::new(),
         });
         assert!(w.changed(), "a write to shard 7 must invalidate the watcher");
         assert!(!w.changed(), "change must latch");

@@ -270,6 +270,7 @@ mod tests {
             cand_hash: cand,
             sim_version: sim.into(),
             rule_set: rules.into(),
+            objective: String::new(),
         }
     }
 

@@ -219,6 +219,122 @@ fn task_scheduler_with_shared_db_identical_across_thread_counts() {
 }
 
 #[test]
+fn default_scheduler_database_bytes_identical_to_explicit_greedy_mse() {
+    // The pluggable allocation/objective refactor must be invisible at
+    // the defaults: a scheduler left at its defaults and one explicitly
+    // configured `greedy` + `mse` write byte-identical database files
+    // (the CLI's `--alloc greedy --objective mse` resolves to exactly
+    // this configuration).
+    use metaschedule::cost_model::Objective;
+    use metaschedule::db::JsonFileDb;
+    use metaschedule::search::Allocation;
+
+    let dir = std::env::temp_dir().join(format!("ms-alloc-default-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+
+    let target = Target::cpu_avx512();
+    let ctx = TuneContext::generic(target.clone());
+    let tasks = vec![
+        metaschedule::search::Task {
+            name: "gmm".into(),
+            prog: workloads::matmul(1, 128, 128, 128),
+            weight: 3,
+        },
+        metaschedule::search::Task {
+            name: "sfm".into(),
+            prog: workloads::softmax(1, 128, 128),
+            weight: 1,
+        },
+    ];
+    let run = |tag: &str, explicit: bool| {
+        let mut measurer = SimMeasurer::new(target.clone());
+        let mut ts = TaskScheduler::new(cfg(0, 1));
+        if explicit {
+            ts.allocation = Allocation::Greedy;
+            ts.objective = Objective::Regression;
+        }
+        let db_path = dir.join(format!("{tag}.db.jsonl"));
+        let mut db = JsonFileDb::open(&db_path).unwrap();
+        // Budget larger than the warmup share so allocation rounds run —
+        // the comparison must cover the policy loop, not just warmup.
+        let results = ts.tune_tasks_with_db(&tasks, &ctx, &mut measurer, &mut db, 128, 11);
+        drop(db);
+        (results, std::fs::read(&db_path).unwrap())
+    };
+    let (default_res, default_bytes) = run("default", false);
+    let (explicit_res, explicit_bytes) = run("explicit", true);
+    for (a, b) in default_res.iter().zip(&explicit_res) {
+        assert_eq!(a.best_latency_s, b.best_latency_s, "task {} diverged", a.task);
+        assert_eq!(a.trials, b.trials);
+    }
+    assert_eq!(
+        default_bytes, explicit_bytes,
+        "explicit greedy+mse wrote different database bytes than the default"
+    );
+    // Defaults never stamp an objective: the optional `obj` field is the
+    // one place the new provenance could leak into default-config files.
+    let text = String::from_utf8(default_bytes).unwrap();
+    assert!(!text.contains("\"obj\""), "default config stamped an objective: {text}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn gradient_rank_scheduler_identical_across_thread_counts() {
+    // The new policy/objective pair inherits the full determinism
+    // contract: thread count changes wall-clock only — results and
+    // database bytes stay identical.
+    use metaschedule::cost_model::Objective;
+    use metaschedule::db::JsonFileDb;
+    use metaschedule::search::Allocation;
+
+    let dir = std::env::temp_dir().join(format!("ms-gradrank-determinism-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+
+    let target = Target::cpu_avx512();
+    let ctx = TuneContext::generic(target.clone());
+    let tasks = vec![
+        metaschedule::search::Task {
+            name: "gmm".into(),
+            prog: workloads::matmul(1, 128, 128, 128),
+            weight: 3,
+        },
+        metaschedule::search::Task {
+            name: "sfm".into(),
+            prog: workloads::softmax(1, 128, 128),
+            weight: 1,
+        },
+    ];
+    let run = |tag: &str, threads: usize| {
+        let mut measurer = SimMeasurer::new(target.clone());
+        let mut ts = TaskScheduler::new(cfg(0, threads));
+        ts.allocation = Allocation::Gradient;
+        ts.objective = Objective::PairwiseRank;
+        let db_path = dir.join(format!("{tag}.db.jsonl"));
+        let mut db = JsonFileDb::open(&db_path).unwrap();
+        let results = ts.tune_tasks_with_db(&tasks, &ctx, &mut measurer, &mut db, 128, 17);
+        drop(db);
+        (results, std::fs::read(&db_path).unwrap())
+    };
+    let (serial, serial_bytes) = run("t1", 1);
+    let (parallel, parallel_bytes) = run("t4", 4);
+    for (a, b) in serial.iter().zip(&parallel) {
+        assert_eq!(a.best_latency_s, b.best_latency_s, "task {} diverged", a.task);
+        assert_eq!(a.trials, b.trials);
+        assert_eq!(structural_hash(&a.best_prog), structural_hash(&b.best_prog));
+    }
+    assert_eq!(
+        serial_bytes, parallel_bytes,
+        "gradient+rank wrote different database bytes across thread counts"
+    );
+    // Rank-objective records carry their provenance stamp.
+    let text = String::from_utf8(serial_bytes).unwrap();
+    assert!(text.contains("\"obj\":\"rank\""), "rank records missed the objective stamp");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
 fn telemetry_never_changes_results_or_database_bytes() {
     // Telemetry is observation-only: attaching a trace sink (and the
     // always-on metrics counters it rides with) must leave the search

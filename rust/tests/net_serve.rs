@@ -46,6 +46,7 @@ fn db_with_gmm(dir: &PathBuf) -> AnyDb {
         cand_hash: 7,
         sim_version: "simtest".into(),
         rule_set: String::new(),
+        objective: String::new(),
     });
     drop(db);
     AnyDb::open(dir).unwrap()

@@ -399,6 +399,7 @@ fn check_compaction_case(n_workloads: usize, recs: &[RandRecord], top_k: usize) 
             cand_hash: *cand,
             sim_version: "simtest".into(),
             rule_set: String::new(),
+            objective: String::new(),
         });
     }
     // Reference answers from the uncompacted database.
@@ -502,6 +503,7 @@ fn prop_stale_rules_compaction_partitions_exactly() {
                 cand_hash: *cand,
                 sim_version: "simtest".into(),
                 rule_set: LABELS[*label].to_string(),
+                objective: String::new(),
             };
             let records: Vec<TuningRecord> = recs.iter().map(mk).collect();
             let stale_policy = CompactionPolicy {
@@ -603,6 +605,7 @@ fn shard_rec(workload: usize, i: usize, lat: Option<f64>) -> TuningRecord {
         cand_hash: ((workload as u64) << 32) | i as u64,
         sim_version: "simtest".into(),
         rule_set: String::new(),
+        objective: String::new(),
     }
 }
 
@@ -875,6 +878,113 @@ fn prop_histogram_conserves_counts_and_bounds_quantiles() {
                 }
             }
             true
+        },
+    );
+}
+
+/// Structured synthetic ranking data: the score is a smooth function of
+/// two features (so the order is learnable), drawn on a grid (so exact
+/// label ties occur and exercise the pair filter).
+fn rank_case(seed: u64, n: usize) -> (Vec<Vec<f64>>, Vec<f64>) {
+    let mut rng = Rng::seed_from_u64(seed);
+    let mut xs = Vec::with_capacity(n);
+    let mut ys = Vec::with_capacity(n);
+    for _ in 0..n {
+        let a = rng.gen_range(100) as f64 / 10.0;
+        let b = rng.gen_range(100) as f64 / 10.0;
+        xs.push(vec![a, b]);
+        ys.push(3.0 * a - b + 0.05 * a * b);
+    }
+    (xs, ys)
+}
+
+#[test]
+fn prop_rank_objective_is_order_consistent_with_labels() {
+    // The PairwiseRank objective's whole contract: for any seed, the
+    // fitted model's predictions agree with the label order on a clear
+    // majority of untied training pairs (the cost model only ever ranks
+    // candidates — calibrated magnitudes are Regression's job).
+    use metaschedule::cost_model::Gbt;
+    check(
+        cfg(12),
+        |rng| rng.next_u64(),
+        |&seed| {
+            let (xs, ys) = rank_case(seed, 60);
+            let ws = vec![1.0; xs.len()];
+            let mut model = Gbt::new(40, 3, 0.1);
+            model.fit_ranked(&xs, &ys, &ws, seed);
+            let preds = model.predict(&xs);
+            let mut agree = 0usize;
+            let mut total = 0usize;
+            for i in 0..xs.len() {
+                for j in (i + 1)..xs.len() {
+                    if ys[i] == ys[j] {
+                        continue;
+                    }
+                    total += 1;
+                    if (preds[i] - preds[j]) * (ys[i] - ys[j]) > 0.0 {
+                        agree += 1;
+                    }
+                }
+            }
+            if total == 0 {
+                return Err("degenerate case: every label tied".to_string());
+            }
+            let c = agree as f64 / total as f64;
+            if c < 0.75 {
+                return Err(format!("training concordance {c:.3} below 0.75"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_rank_fit_invariant_under_monotone_relabeling_where_regression_is_not() {
+    // Scaling labels by 2^k is a bit-exact strictly monotone bijection
+    // on finite doubles (pure exponent shift: no rounding, no new ties),
+    // so the label ORDER — the only thing the rank objective may consume
+    // — is unchanged, and the ranked fit must be bit-identical. The
+    // regression objective tracks label MAGNITUDE and must differ.
+    use metaschedule::cost_model::Gbt;
+    check(
+        cfg(10),
+        |rng| (rng.next_u64(), rng.gen_range(9)),
+        |&(seed, kidx)| {
+            let scale = (2.0f64).powi(kidx as i32 - 3); // 2^-3 .. 2^5
+            let (xs, ys) = rank_case(seed, 48);
+            let ys_scaled: Vec<f64> = ys.iter().map(|y| y * scale).collect();
+            let ws = vec![1.0; xs.len()];
+            let ranked = |labels: &[f64]| {
+                let mut m = Gbt::new(30, 3, 0.1);
+                m.fit_ranked(&xs, labels, &ws, seed);
+                m
+            };
+            let a = ranked(&ys);
+            let b = ranked(&ys_scaled);
+            for x in &xs {
+                let (pa, pb) = (a.predict_one(x), b.predict_one(x));
+                if pa != pb {
+                    return Err(format!(
+                        "ranked fit not invariant under x{scale} relabeling: {pa} != {pb}"
+                    ));
+                }
+            }
+            if scale != 1.0 {
+                let regression = |labels: &[f64]| {
+                    let mut m = Gbt::new(30, 3, 0.1);
+                    m.fit(&xs, labels);
+                    m
+                };
+                let ra = regression(&ys);
+                let rb = regression(&ys_scaled);
+                if xs.iter().all(|x| ra.predict_one(x) == rb.predict_one(x)) {
+                    return Err(format!(
+                        "regression fit unexpectedly invariant under x{scale} relabeling"
+                    ));
+                }
+            }
+            Ok(())
         },
     );
 }

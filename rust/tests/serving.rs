@@ -212,6 +212,7 @@ fn rec(workload: usize, cand: u64, lat: f64) -> TuningRecord {
         cand_hash: cand,
         sim_version: "simtest".into(),
         rule_set: String::new(),
+        objective: String::new(),
     }
 }
 

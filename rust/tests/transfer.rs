@@ -229,6 +229,7 @@ fn crafted_donor(records: Vec<(f64, String, String)>) -> InMemoryDb {
             cand_hash: i as u64 + 1,
             sim_version: sim,
             rule_set: rules,
+            objective: String::new(),
         });
     }
     db
